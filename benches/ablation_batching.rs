@@ -1,0 +1,95 @@
+//! Ablation: dynamic-batching policy (max_wait × max_batch) vs decision
+//! latency and throughput on the real coordinator — the design-choice study
+//! behind the batcher defaults (DESIGN.md §Perf).
+//!
+//! Also ablates the wire representation: float vs uint8 features (the
+//! paper transmits uint8; this quantifies the action-fidelity cost).
+
+use std::time::Duration;
+
+use miniconv::coordinator::{
+    merged_latencies, run_fleet, serve, BatchPolicy, ClientConfig, Route, ServerConfig,
+};
+use miniconv::net::{dequantize_features, quantize_features};
+use miniconv::runtime::{default_artifact_dir, Runtime, Value};
+use miniconv::util::tables::Table;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("ablation_batching: no artifacts — run `make artifacts`");
+        return;
+    }
+
+    // ---- batching policy sweep -----------------------------------------
+    let mut t = Table::new(
+        "ablation — batching policy (8 split clients, closed loop, 30 decisions each)",
+        &["max_wait (ms)", "max_batch", "median (ms)", "p95 (ms)", "mean batch", "dec/s"],
+    );
+    for (wait_ms, max_batch) in [(0u64, 1usize), (1, 8), (3, 8), (3, 32), (10, 32)] {
+        let server = serve(ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            ..ServerConfig::default()
+        })
+        .expect("server");
+        let cfg = ClientConfig { mode: Route::Split, decisions: 30, ..ClientConfig::default() };
+        let reports = run_fleet(server.addr, 8, &cfg).expect("fleet");
+        let mut lat = merged_latencies(&reports);
+        let hz: f64 = reports.iter().map(|r| r.achieved_hz()).sum();
+        let m = server.metrics.snapshot();
+        t.row(&[
+            wait_ms.to_string(),
+            max_batch.to_string(),
+            format!("{:.1}", lat.median() * 1e3),
+            format!("{:.1}", lat.p95() * 1e3),
+            format!("{:.2}", m.split.mean_batch()),
+            format!("{hz:.0}"),
+        ]);
+        server.shutdown();
+    }
+    t.print();
+
+    // ---- wire-quantisation ablation -------------------------------------
+    let rt = Runtime::new(&dir).expect("runtime");
+    let x = rt.manifest.serve_x;
+    let s = x.div_ceil(8);
+    let enc = rt.load(&rt.manifest.serve_encoder("miniconv4")).unwrap();
+    let head = rt.load(&rt.manifest.serve_head("miniconv4", 1)).unwrap();
+    let enc_p = rt.manifest.load_params("serve_enc_miniconv4").unwrap();
+    let head_p = rt.manifest.load_params("serve_head_miniconv4").unwrap();
+    let enc_pv = Value::f32(&[enc_p.len()], enc_p);
+    let head_pv = Value::f32(&[head_p.len()], head_p);
+
+    let mut max_rel = 0.0f64;
+    let mut rng = miniconv::util::rng::Rng::new(5);
+    for _ in 0..20 {
+        let obs: Vec<f32> = (0..9 * x * x).map(|_| rng.uniform() as f32).collect();
+        let feat = enc
+            .run(&[&enc_pv, &Value::f32(&[1, 9, x, x], obs)])
+            .unwrap()[0]
+            .as_f32()
+            .unwrap()
+            .to_vec();
+        let a_float = head
+            .run(&[&head_pv, &Value::f32(&[1, 4, s, s], feat.clone())])
+            .unwrap()[0]
+            .as_f32()
+            .unwrap()[0];
+        let (scale, q) = quantize_features(&feat);
+        let a_u8 = head
+            .run(&[&head_pv, &Value::f32(&[1, 4, s, s], dequantize_features(scale, &q))])
+            .unwrap()[0]
+            .as_f32()
+            .unwrap()[0];
+        let rel = ((a_float - a_u8).abs() / (a_float.abs() + 1e-3)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    println!(
+        "\nwire-quantisation ablation: max relative action deviation over 20 \
+         random observations (float vs uint8 features): {:.3}%",
+        max_rel * 100.0
+    );
+}

@@ -1,0 +1,36 @@
+//! §4.2 break-even analysis: B = 32X²(1 − K/(4·2²ⁿ))/j, swept over input
+//! size and representation width, with the measured Pi Zero 2 W encode
+//! time j — and a cross-check that the analytic crossover agrees with the
+//! simulated Table-5 latencies.
+
+use miniconv::analysis::breakeven_bandwidth_bps;
+use miniconv::experiments::serving::device_j;
+use miniconv::experiments::{table5_latency_sim, ServerCostModel};
+use miniconv::util::tables::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "break-even bandwidth B = 32X²(1 − K/(4·2²ⁿ))/j (j measured on sim Pi Zero 2 W)",
+        &["X", "K", "j (ms)", "break-even (Mb/s)"],
+    );
+    for x in [200usize, 400, 800] {
+        let j = device_j(x, 200);
+        for k in [4usize, 16] {
+            t.row(&[
+                x.to_string(),
+                k.to_string(),
+                format!("{:.0}", j * 1e3),
+                format!("{:.1}", breakeven_bandwidth_bps(x, 3, k, j) / 1e6),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper anchor: X=400, K=4, j≈0.1 s → ≈50.4 Mb/s");
+
+    // consistency: simulate latencies just below/above the X=400 crossover
+    let j = device_j(400, 200);
+    let be = breakeven_bandwidth_bps(400, 3, 4, j) / 1e6;
+    let t5 = table5_latency_sim(&[be * 0.7, be * 1.4], 300, &ServerCostModel::default());
+    println!("\ncrossover cross-check (sim at 0.7x and 1.4x of B={be:.1} Mb/s):");
+    t5.print();
+}

@@ -1,0 +1,16 @@
+//! Figure 2 — per-frame processing time across devices as the input image
+//! size varies (mean of 100 consecutive inferences ± sd), on the calibrated
+//! device simulators over the real MiniConv-4 shader plan.
+
+use miniconv::device::all_devices;
+use miniconv::experiments::fig2_framesize;
+
+fn main() {
+    let sizes = [100usize, 200, 300, 400, 500, 750, 1000, 1500, 2000, 3000];
+    let t = fig2_framesize(&all_devices(), &sizes, 100);
+    t.print();
+    println!("\ncsv:\n{}", t.to_csv());
+    // paper anchors, checked on every bench run:
+    // pi-zero-2w crosses 5 fps near X=500; jetson is fastest everywhere
+    println!("anchor: pi-zero-2w j(400) should be ~100ms; 5fps bound near X=500+");
+}

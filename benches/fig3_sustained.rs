@@ -1,0 +1,14 @@
+//! Figure 3 — sustained inference performance over 5,000 consecutive
+//! frames: (a) Jetson Nano at 3000² with/without the 5 W power cap;
+//! (b) Pi Zero 2 W at 400², GPU (OpenGL) vs CPU (PyTorch) execution.
+
+use miniconv::experiments::fig3_sustained;
+
+fn main() {
+    let (traces, table) = fig3_sustained(5000);
+    table.print();
+    for tr in &traces {
+        println!("\n{} — frame-time csv (downsampled):", tr.label);
+        print!("{}", tr.recorder.downsample(40).to_csv());
+    }
+}

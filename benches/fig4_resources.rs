@@ -1,0 +1,19 @@
+//! Figure 4 — resource usage during sustained inference: Pi Zero 2 W CPU
+//! temperature and RAM (CPU vs GPU execution; 512 MB budget), Jetson Nano
+//! power and memory pressure (5 W cap vs no limit, 5,000×3000² frames).
+
+use miniconv::experiments::fig4_resources;
+
+fn main() {
+    let (traces, table) = fig4_resources(5000);
+    table.print();
+    for tr in &traces {
+        println!(
+            "\n{}: temp {} | watts {} | ram {}",
+            tr.label,
+            tr.recorder.sparkline("temp_c", 50),
+            tr.recorder.sparkline("watts", 50),
+            tr.recorder.sparkline("ram_mb", 50),
+        );
+    }
+}

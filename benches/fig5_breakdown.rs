@@ -1,0 +1,12 @@
+//! Figure 5 — breakdown of the steps contributing to decision latency,
+//! server-only vs split-policy, at several link bandwidths (X=400, K=4,
+//! n=3, Pi Zero 2 W encode time).
+
+use miniconv::experiments::{fig5_breakdown, ServerCostModel};
+
+fn main() {
+    let model = ServerCostModel::default();
+    for mbps in [10.0, 50.0, 100.0] {
+        fig5_breakdown(400, mbps * 1e6, &model).print();
+    }
+}

@@ -1,0 +1,31 @@
+//! Tables 2–4 (smoke scale) — the learning-table machinery end to end:
+//! train every encoder on Pendulum for a few episodes through the real
+//! update artifacts and print the paper-format Best/Final/Mean table.
+//!
+//! Paper-scale runs: `miniconv exp learning --task <t> --scale paper`.
+
+use miniconv::experiments::{learning_table, LearningScale};
+use miniconv::runtime::{default_artifact_dir, Runtime};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("learning_smoke: no artifacts — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let (t, rows) = learning_table(
+        &rt,
+        "pendulum",
+        &["miniconv4", "miniconv16", "fullcnn"],
+        LearningScale::Smoke,
+        0,
+    )
+    .expect("learning table");
+    t.print();
+    for r in &rows {
+        assert!(r.updates > 0, "{}: no updates ran", r.arch);
+        assert!(r.best.is_finite());
+    }
+    println!("\n(smoke scale: {} episodes/encoder; Tables 2-4 shapes need --scale tiny/paper)", rows[0].episodes);
+}

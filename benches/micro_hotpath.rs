@@ -1,0 +1,131 @@
+//! Hot-path micro-benchmarks (the criterion substitute): per-component
+//! timings of everything on the serving request path, used by the §Perf
+//! iteration log in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use miniconv::envs::{CropMode, Env, Pendulum, PixelPipeline};
+use miniconv::net::framing::{Msg, Payload, Request};
+use miniconv::net::quantize_features;
+use miniconv::runtime::{default_artifact_dir, Runtime, Value};
+use miniconv::shader::{pipeline_from_manifest, TextureFormat};
+use miniconv::util::rng::Rng;
+use miniconv::util::tables::Table;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
+    // warmup
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    (name.to_string(), per)
+}
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("micro_hotpath: no artifacts — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let x = rt.manifest.serve_x;
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // -- environment + observation pipeline ------------------------------
+    let mut env = Pendulum::new();
+    let mut rng = Rng::new(0);
+    env.reset(&mut rng);
+    let mut pipe = PixelPipeline::new(100, x, CropMode::Center);
+    pipe.observe(&env, &mut rng);
+    rows.push(bench("env.step + render + crop + stack", 200, || {
+        env.step(&[0.1]);
+        pipe.observe(&env, &mut rng);
+    }));
+    rows.push(bench("pipeline.obs (normalize 9x84x84)", 200, || {
+        std::hint::black_box(pipe.obs());
+    }));
+
+    // -- shader-interpreter encode (the client device path) --------------
+    let (serve_meta, _) = &rt.manifest.encoders["miniconv4"];
+    let shader = pipeline_from_manifest(
+        &rt.manifest, "miniconv4", serve_meta, x, "serve_enc_miniconv4", TextureFormat::Float,
+    )
+    .expect("shader");
+    let obs_chw = pipe.obs_chw();
+    rows.push(bench("shader interp encode (miniconv4, 84²)", 50, || {
+        std::hint::black_box(shader.run(&obs_chw).unwrap());
+    }));
+
+    // -- XLA encoder + heads ----------------------------------------------
+    let enc = rt.load(&rt.manifest.serve_encoder("miniconv4")).unwrap();
+    let enc_p = rt.manifest.load_params("serve_enc_miniconv4").unwrap();
+    let enc_pv = Value::f32(&[enc_p.len()], enc_p);
+    let obs_v = Value::f32(&[1, 9, x, x], pipe.obs());
+    rows.push(bench("XLA encoder b1 (miniconv4)", 100, || {
+        std::hint::black_box(enc.run(&[&enc_pv, &obs_v]).unwrap());
+    }));
+
+    let s = x.div_ceil(8);
+    let head_p = rt.manifest.load_params("serve_head_miniconv4").unwrap();
+    let head_pv = Value::f32(&[head_p.len()], head_p);
+    let head_dp = rt.to_device(&head_pv).unwrap();
+    for b in [1usize, 8, 32] {
+        let head = rt.load(&rt.manifest.serve_head("miniconv4", b)).unwrap();
+        let feat = Value::f32(&[b, 4, s, s], vec![0.3; b * 4 * s * s]);
+        rows.push(bench(&format!("head b{b} (host params)"), 100, || {
+            std::hint::black_box(head.run(&[&head_pv, &feat]).unwrap());
+        }));
+        let featd = rt.to_device(&feat).unwrap();
+        rows.push(bench(&format!("head b{b} (device-resident)"), 100, || {
+            std::hint::black_box(head.run_device(&[&head_dp, &featd]).unwrap());
+        }));
+    }
+
+    let full_p = rt.manifest.load_params("serve_full_fullcnn").unwrap();
+    let full_pv = Value::f32(&[full_p.len()], full_p);
+    let full_dp = rt.to_device(&full_pv).unwrap();
+    for b in [1usize, 8] {
+        let full = rt.load(&rt.manifest.serve_full(b)).unwrap();
+        let obs_b = Value::f32(&[b, 9, x, x], vec![0.3; b * 9 * x * x]);
+        let obs_d = rt.to_device(&obs_b).unwrap();
+        rows.push(bench(&format!("full-CNN b{b} (host params)"), 30, || {
+            std::hint::black_box(full.run(&[&full_pv, &obs_b]).unwrap());
+        }));
+        rows.push(bench(&format!("full-CNN b{b} (device-resident)"), 30, || {
+            std::hint::black_box(full.run_device(&[&full_dp, &obs_d]).unwrap());
+        }));
+    }
+
+    // -- wire path ---------------------------------------------------------
+    let feat_flat: Vec<f32> = (0..4 * s * s).map(|i| (i % 17) as f32 * 0.1).collect();
+    rows.push(bench("quantize features to u8", 1000, || {
+        std::hint::black_box(quantize_features(&feat_flat));
+    }));
+    let (scale, q) = quantize_features(&feat_flat);
+    let msg = Msg::Request(Request {
+        client: 0,
+        id: 0,
+        payload: Payload::Features { c: 4, h: s as u16, w: s as u16, scale, data: q },
+    });
+    rows.push(bench("frame encode (features)", 1000, || {
+        std::hint::black_box(msg.encode());
+    }));
+    let raw = Msg::Request(Request {
+        client: 0,
+        id: 0,
+        payload: Payload::RawRgba { x: x as u16, data: pipe.rgba_bytes() },
+    });
+    rows.push(bench("frame encode (raw 84² RGBA)", 500, || {
+        std::hint::black_box(raw.encode());
+    }));
+
+    let mut t = Table::new("hot-path micro-benchmarks", &["component", "per-op"]);
+    for (name, per) in &rows {
+        t.row(&[name.clone(), miniconv::util::tables::fmt_ns(per * 1e9)]);
+    }
+    t.print();
+}

@@ -1,0 +1,30 @@
+//! Table 1 — algorithms used for each visual control task, plus an
+//! artifact-presence audit (every trainstate's update/act artifacts must
+//! exist and parse).
+
+use miniconv::experiments::table1_algorithms;
+use miniconv::runtime::{default_artifact_dir, Runtime};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("table1: no artifacts at {} — run `make artifacts`", dir.display());
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    table1_algorithms(&rt).print();
+
+    // audit: every artifact file referenced by the manifest exists on disk
+    let mut missing = 0;
+    for a in rt.manifest.artifacts.values() {
+        if !rt.manifest.dir.join(&a.file).exists() {
+            println!("MISSING: {}", a.file);
+            missing += 1;
+        }
+    }
+    println!(
+        "\nartifact audit: {} artifacts, {} missing",
+        rt.manifest.artifacts.len(),
+        missing
+    );
+}

@@ -1,0 +1,60 @@
+//! Table 5 — end-to-end decision latency under bandwidth shaping.
+//!
+//! Two modes, both printed:
+//!   * paper scale (sim): X=400, analytic link + Pi Zero 2 W device sim +
+//!     calibrated GPU-server cost model; 1,000 decisions per setting.
+//!   * task scale (real): X=84, the actual coordinator over loopback TCP
+//!     with token-bucket-shaped uplinks, real artifacts, real shader
+//!     encoding; bandwidths scaled to where the 84² wire sizes separate.
+
+use std::time::Duration;
+
+use miniconv::coordinator::{run_client, BatchPolicy, ClientConfig, Route, ServerConfig};
+use miniconv::experiments::{table5_latency_sim, ServerCostModel};
+use miniconv::util::tables::Table;
+
+fn main() {
+    // --- paper scale (simulated) ---------------------------------------
+    table5_latency_sim(&[10.0, 25.0, 50.0, 100.0], 1000, &ServerCostModel::default()).print();
+    println!("paper: 540/240/140/90 vs 145/140/138/137 ms — crossover near 50 Mb/s\n");
+
+    // --- task scale (real coordinator) ----------------------------------
+    let dir = miniconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping real-mode rows: no artifacts)");
+        return;
+    }
+    let server = miniconv::coordinator::serve(ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        ..ServerConfig::default()
+    })
+    .expect("server");
+
+    let mut t = Table::new(
+        "Table 5 (real mode) — X=84 over loopback TCP with shaped uplink (median of 40 decisions)",
+        &["bandwidth", "server-only (ms)", "split-policy (ms)", "winner"],
+    );
+    for mbps in [0.5f64, 1.0, 2.0, 5.0, 25.0] {
+        let mut med = [0.0f64; 2];
+        for (i, mode) in [Route::Full, Route::Split].into_iter().enumerate() {
+            let cfg = ClientConfig {
+                mode,
+                decisions: 40,
+                shape_bps: Some(mbps * 1e6),
+                device: Some(miniconv::device::pi_zero_2w()),
+                ..ClientConfig::default()
+            };
+            let report = run_client(server.addr, 90 + i as u32, &cfg).expect("client");
+            let mut lat = report.latencies;
+            med[i] = lat.median() * 1e3;
+        }
+        t.row(&[
+            format!("{mbps} Mb/s"),
+            format!("{:.0}", med[0]),
+            format!("{:.0}", med[1]),
+            (if med[1] < med[0] { "split" } else { "server-only" }).into(),
+        ]);
+    }
+    t.print();
+    server.shutdown();
+}

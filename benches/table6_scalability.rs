@@ -1,0 +1,61 @@
+//! Table 6 — server scalability at a fixed decision rate: maximum
+//! concurrent clients at 10 Hz under a p95 < 100 ms budget.
+//!
+//! Sim mode reproduces the paper's GPU-server numbers; real mode ramps
+//! actual client fleets against the coordinator (set MINICONV_T6_REAL=1 —
+//! it is minutes-long and CPU-bound).
+
+use std::time::Duration;
+
+use miniconv::coordinator::{
+    merged_latencies, run_fleet, BatchPolicy, ClientConfig, Route, ServerConfig,
+};
+use miniconv::experiments::table6_scalability_sim;
+use miniconv::util::tables::Table;
+
+fn main() {
+    let (t, so, sp) = table6_scalability_sim(10.0, 0.1);
+    t.print();
+    println!("paper: 12 vs 36 clients (ratio 3.0); here {so} vs {sp} (ratio {:.1})\n", sp as f64 / so as f64);
+
+    if std::env::var("MINICONV_T6_REAL").ok().as_deref() != Some("1") {
+        println!("(real-mode ramp skipped; set MINICONV_T6_REAL=1 to run it)");
+        return;
+    }
+    let dir = miniconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(no artifacts)");
+        return;
+    }
+    let server = miniconv::coordinator::serve(ServerConfig {
+        policy: BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(4) },
+        ..ServerConfig::default()
+    })
+    .expect("server");
+
+    let mut t = Table::new(
+        "Table 6 (real mode) — p95 decision latency vs fleet size, X=84, 10 Hz clients",
+        &["clients", "pipeline", "p95 (ms)", "under 100ms?"],
+    );
+    for mode in [Route::Full, Route::Split] {
+        for n in [2usize, 4, 8, 16] {
+            let cfg = ClientConfig {
+                mode,
+                decisions: 40,
+                rate_hz: Some(10.0),
+                ..ClientConfig::default()
+            };
+            let reports = run_fleet(server.addr, n, &cfg).expect("fleet");
+            let mut lat = merged_latencies(&reports);
+            let p95 = lat.p95() * 1e3;
+            t.row(&[
+                n.to_string(),
+                (if mode == Route::Split { "split" } else { "server-only" }).into(),
+                format!("{p95:.1}"),
+                (p95 < 100.0).to_string(),
+            ]);
+        }
+    }
+    t.print();
+    server.shutdown();
+}

@@ -1,0 +1,21 @@
+//! Edge-device sweep: per-frame encode time across the three simulated
+//! boards and input sizes (Figure 2's workload), plus a sustained-load
+//! mini-run showing the Jetson's thermal throttling and the Pi Zero's
+//! GL-vs-CPU gap (Figures 3/4 at reduced length).
+//!
+//! Run: `cargo run --release --example edge_sweep`
+
+use miniconv::device::all_devices;
+use miniconv::experiments::{fig2_framesize, fig3_sustained};
+
+fn main() {
+    let sizes = [100usize, 200, 400, 500, 1000, 2000, 3000];
+    println!("sweeping MiniConv-4 encode time across devices…");
+    fig2_framesize(&all_devices(), &sizes, 100).print();
+
+    println!("\nsustained load (1,500 frames; paper runs 5,000 — see `miniconv exp fig3`):");
+    let (_, t) = fig3_sustained(1500);
+    t.print();
+
+    println!("\nedge_sweep OK");
+}

@@ -1,0 +1,99 @@
+//! Quickstart: the whole split-policy pipeline in one process.
+//!
+//!   1. render a real Pendulum observation (100² → centre-crop 84²);
+//!   2. run the MiniConv-4 encoder two ways — through the AOT Pallas/XLA
+//!      artifact *and* through the OpenGL shader interpreter — and check
+//!      they agree;
+//!   3. quantise the features to the uint8 wire format;
+//!   4. run the server-side head to get an action, and compare against the
+//!      monolithic server-only policy path.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use miniconv::envs::{CropMode, Env, Pendulum, PixelPipeline};
+use miniconv::net::{dequantize_features, quantize_features};
+use miniconv::runtime::{default_artifact_dir, Runtime, Value};
+use miniconv::shader::{pipeline_from_manifest, TextureFormat};
+use miniconv::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&default_artifact_dir())?;
+    let x = rt.manifest.serve_x;
+    println!("== MiniConv quickstart (X={x}) ==");
+
+    // 1. a real rendered observation
+    let mut env = Pendulum::new();
+    let mut rng = Rng::new(42);
+    env.reset(&mut rng);
+    let mut pipe = PixelPipeline::new(100, x, CropMode::Center);
+    pipe.observe(&env, &mut rng);
+    for _ in 0..3 {
+        env.step(&[0.5]);
+        pipe.observe(&env, &mut rng);
+    }
+    let obs = pipe.obs();
+    println!("observation: 9x{x}x{x} = {} floats", obs.len());
+
+    // 2a. device encoder via the AOT artifact (Pallas kernels under XLA)
+    let enc = rt.load(&rt.manifest.serve_encoder("miniconv4"))?;
+    let enc_params = rt.manifest.load_params("serve_enc_miniconv4")?;
+    let feat_xla = enc.run(&[
+        &Value::f32(&[enc_params.len()], enc_params),
+        &Value::f32(&[1, 9, x, x], obs.clone()),
+    ])?;
+    let feat_xla = feat_xla[0].as_f32()?.to_vec();
+    let s = x.div_ceil(8);
+    println!("features: 4x{s}x{s} = {} floats (XLA artifact)", feat_xla.len());
+
+    // 2b. the same encoder through the GL shader interpreter
+    let (serve_meta, _) = &rt.manifest.encoders["miniconv4"];
+    let shader = pipeline_from_manifest(
+        &rt.manifest,
+        "miniconv4",
+        serve_meta,
+        x,
+        "serve_enc_miniconv4",
+        TextureFormat::Float,
+    )?;
+    let feat_gl = shader.run(&pipe.obs_chw())?;
+    let mut max_diff = 0.0f32;
+    for (i, &v) in feat_xla.iter().enumerate() {
+        let (c, rem) = (i / (s * s), i % (s * s));
+        let d = (v - feat_gl.at(c, rem / s, rem % s)).abs();
+        max_diff = max_diff.max(d);
+    }
+    println!("shader-vs-XLA max |diff| = {max_diff:.2e}  (must be < 1e-3)");
+    assert!(max_diff < 1e-3);
+
+    // 3. wire format: uint8 features (the paper's transmitted buffer)
+    let (scale, q) = quantize_features(&feat_xla);
+    println!(
+        "wire: {} bytes (vs {} bytes raw RGBA) — {:.0}x smaller",
+        q.len(),
+        4 * x * x,
+        (4 * x * x) as f64 / q.len() as f64
+    );
+    let feat_deq = dequantize_features(scale, &q);
+
+    // 4. server head over the (dequantised) features
+    let head = rt.load(&rt.manifest.serve_head("miniconv4", 1))?;
+    let head_params = rt.manifest.load_params("serve_head_miniconv4")?;
+    let act = head.run(&[
+        &Value::f32(&[head_params.len()], head_params),
+        &Value::f32(&[1, 4, s, s], feat_deq),
+    ])?;
+    println!("action (split pipeline)      : {:?}", act[0].as_f32()?);
+
+    // server-only baseline for comparison
+    let full = rt.load(&rt.manifest.serve_full(1))?;
+    let full_params = rt.manifest.load_params("serve_full_fullcnn")?;
+    let act_full = full.run(&[
+        &Value::f32(&[full_params.len()], full_params),
+        &Value::f32(&[1, 9, x, x], obs),
+    ])?;
+    println!("action (server-only baseline): {:?}", act_full[0].as_f32()?);
+    println!("quickstart OK");
+    Ok(())
+}

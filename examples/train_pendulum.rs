@@ -1,0 +1,58 @@
+//! Train DDPG-from-pixels on Pendulum with the MiniConv-4 encoder, entirely
+//! through the AOT train-step artifact (no Python at runtime), and log the
+//! learning curve — the scaled-down counterpart of the paper's Table 4 row.
+//!
+//! Run: `make artifacts && cargo run --release --example train_pendulum -- [episodes]`
+
+use anyhow::Result;
+
+use miniconv::rl::{TrainConfig, Trainer};
+use miniconv::runtime::{default_artifact_dir, Runtime};
+
+fn main() -> Result<()> {
+    let episodes: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let rt = Runtime::new(&default_artifact_dir())?;
+    let cfg = TrainConfig {
+        episodes,
+        warmup_steps: 300,
+        train_freq: 8,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    println!("training pendulum_miniconv4 for {episodes} episodes (DDPG, 9x36x36 pixels)…");
+    let mut trainer = Trainer::new(&rt, "pendulum_miniconv4", cfg)?;
+
+    let t0 = std::time::Instant::now();
+    trainer.train()?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("\nepisode returns:");
+    for (i, r) in trainer.report.stats.returns().iter().enumerate() {
+        let bar_len = ((r + 1700.0) / 1700.0 * 40.0).clamp(0.0, 40.0) as usize;
+        println!("  ep {:>3} {:>8.1} |{}", i + 1, r, "#".repeat(bar_len));
+    }
+    let s = &trainer.report.stats;
+    println!(
+        "\nBest {:.0}  Final {:.0}  Mean {:.0}  ({} env steps, {} updates, {:.1}s wall, {:.1} updates/s)",
+        s.best(),
+        s.final_100(),
+        s.mean(),
+        trainer.report.env_steps,
+        trainer.report.updates,
+        dt,
+        trainer.report.updates as f64 / dt
+    );
+    if let Some((name, losses)) = trainer.report.metrics.first() {
+        let head: f64 = losses.iter().take(10).map(|&x| x as f64).sum::<f64>() / 10f64.min(losses.len() as f64);
+        let tail: f64 = losses.iter().rev().take(10).map(|&x| x as f64).sum::<f64>()
+            / 10f64.min(losses.len() as f64);
+        println!("{name}: first10 {head:.3} -> last10 {tail:.3}");
+    }
+    let eval = trainer.evaluate(2)?;
+    println!("deterministic eval (2 episodes): {eval:.1}");
+    println!("train_pendulum OK");
+    Ok(())
+}

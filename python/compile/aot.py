@@ -1,0 +1,423 @@
+"""AOT entry point: lower every model/train-step variant to HLO text and
+emit ``artifacts/manifest.json`` + initial-parameter ``.bin`` files.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact families
+  serving (x = 84, paper's render-100 -> crop-84 pipeline):
+    enc_<arch>_x84_b1          device-side encoder -> transmitted features
+    head_<arch>_x84_b{1..32}   server-side head over features (batch ladder)
+    full_fullcnn_x84_b{1..32}  server-only baseline policy over raw obs
+  training (x = 36 "tiny" scale, DESIGN.md §2), per (task, encoder):
+    <algo>_act[_det]_<task>_<arch>_b1
+    <algo>_update_<task>_<arch>_b64
+
+Usage: python -m compile.aot [--out-dir DIR] [--only REGEX] [--list]
+"""
+
+import argparse
+import json
+import math
+import os
+import re
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import rl
+from .specs import (
+    BATCH_LADDER,
+    ENCODERS,
+    OBS_CHANNELS,
+    SERVE_CROP,
+    TASKS,
+    TINY_CROP,
+    TRAIN_BATCH,
+)
+
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _spec_json(name, arr_spec):
+    return {
+        "name": name,
+        "dtype": {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[
+            jnp.dtype(arr_spec.dtype)
+        ],
+        "shape": list(arr_spec.shape),
+    }
+
+
+class Builder:
+    def __init__(self, out_dir, only=None, list_only=False):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.list_only = list_only
+        self.manifest = {
+            "version": 1,
+            "seed": SEED,
+            "serve_x": SERVE_CROP,
+            "tiny_x": TINY_CROP,
+            "obs_channels": OBS_CHANNELS,
+            "encoders": {},
+            "artifacts": [],
+            "params": [],
+            "trainstates": [],
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name):
+        return self.only is None or self.only.search(name)
+
+    def artifact(self, name, fn, inputs, outputs, tags):
+        """Lower fn at the given input specs and record it."""
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_json(n, s) for n, s in inputs],
+            "outputs": [_spec_json(n, s) for n, s in outputs],
+            "tags": tags,
+        }
+        self.manifest["artifacts"].append(entry)
+        if self.list_only or not self.want(name):
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [{time.time() - t0:6.1f}s] {name}  ({len(text) / 1e6:.1f} MB)")
+
+    def params_bin(self, name, arr):
+        arr = np.asarray(arr, dtype="<f4")
+        entry = {"name": name, "file": f"{name}.bin", "len": int(arr.size)}
+        self.manifest["params"].append(entry)
+        if not self.list_only:
+            arr.tofile(os.path.join(self.out_dir, entry["file"]))
+        return entry
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path}: {len(self.manifest['artifacts'])} artifacts, "
+              f"{len(self.manifest['params'])} param files, "
+              f"{len(self.manifest['trainstates'])} trainstates")
+
+
+# ---------------------------------------------------------------------------
+# Encoder metadata (consumed by the Rust shader planner / param store)
+# ---------------------------------------------------------------------------
+
+
+def encoder_meta(spec, x):
+    tmpl = M.enc_template(spec, x)
+    c, h, w = spec.feat_shape(x)
+    return {
+        "kind": spec.kind,
+        "shader_deployable": spec.shader_deployable,
+        "layers": [
+            {"cout": l.cout, "k": l.k, "stride": l.stride, "padding": l.padding}
+            for l in spec.layers
+        ],
+        "dense": spec.dense,
+        "n_stride2": spec.n_stride2(),
+        "param_layout": [{"name": n, "shape": list(s)} for n, s in tmpl],
+        "feat_shape": [c, h, w],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serving artifacts
+# ---------------------------------------------------------------------------
+
+
+def build_serving(b: Builder):
+    x = SERVE_CROP
+    task = TASKS["pendulum"]  # the serving workload (paper's latency testbed)
+    key = jax.random.PRNGKey(SEED)
+    obs_shape = (OBS_CHANNELS, x, x)
+
+    for arch in ("miniconv4", "miniconv16"):
+        spec = ENCODERS[arch]
+        et, ht = M.policy_templates(spec, x, task, "actor")
+        key, sub = jax.random.split(key)
+        flat = M.init_policy(sub, spec, x, task, "actor")
+        enc_flat, head_flat = M.split_flat(flat, et, ht)
+        b.params_bin(f"serve_enc_{arch}", enc_flat)
+        b.params_bin(f"serve_head_{arch}", head_flat)
+
+        c, h, w = spec.feat_shape(x)
+
+        def enc_fn(p, obs, spec=spec):
+            return (M.enc_apply(spec, p, obs),)
+
+        b.artifact(
+            f"enc_{arch}_x{x}_b1",
+            enc_fn,
+            [("params", sds((M.template_size(et),))), ("obs", sds((1, *obs_shape)))],
+            [("feat", sds((1, c, h, w)))],
+            {"kind": "encoder", "arch": arch, "x": x, "batch": 1},
+        )
+
+        def head_fn(p, feat, spec=spec, ht=ht):
+            return (M.actor_head_apply(task, M.unpack(p, ht), feat),)
+
+        for bb in BATCH_LADDER:
+            b.artifact(
+                f"head_{arch}_x{x}_b{bb}",
+                head_fn,
+                [
+                    ("params", sds((M.template_size(ht),))),
+                    ("feat", sds((bb, c, h, w))),
+                ],
+                [("act", sds((bb, task.action_dim)))],
+                {"kind": "head", "arch": arch, "x": x, "batch": bb},
+            )
+
+    # Server-only baseline: the whole Full-CNN policy over raw observations.
+    spec = ENCODERS["fullcnn"]
+    key, sub = jax.random.split(key)
+    flat = M.init_policy(sub, spec, x, task, "actor")
+    b.params_bin("serve_full_fullcnn", flat)
+
+    def full_fn(p, obs):
+        return (M.actor_apply(spec, task, x, p, obs),)
+
+    for bb in BATCH_LADDER:
+        b.artifact(
+            f"full_fullcnn_x{x}_b{bb}",
+            full_fn,
+            [
+                ("params", sds((flat.shape[0],))),
+                ("obs", sds((bb, *obs_shape))),
+            ],
+            [("act", sds((bb, task.action_dim)))],
+            {"kind": "full", "arch": "fullcnn", "x": x, "batch": bb},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Training artifacts + initial train states
+# ---------------------------------------------------------------------------
+
+
+def _state_entry(b, run, name, arr=None, dtype="f32", shape=None):
+    if arr is not None:
+        p = b.params_bin(f"{run}_{name}", arr)
+        return {"name": name, "dtype": "f32", "shape": [p["len"]], "file": p["file"]}
+    return {"name": name, "dtype": dtype, "shape": shape or []}
+
+
+def build_training_combo(b: Builder, task_name: str, arch: str):
+    task = TASKS[task_name]
+    spec = ENCODERS[arch]
+    x = TINY_CROP
+    bt = TRAIN_BATCH
+    run = f"{task_name}_{arch}"
+    key = jax.random.PRNGKey(SEED + hash(run) % 1000)
+    obs_b1 = sds((1, OBS_CHANNELS, x, x))
+    obs_bt = sds((bt, OBS_CHANNELS, x, x))
+    adim = task.action_dim
+    algo = task.algo
+
+    state, batch_names, metrics = [], [], []
+
+    if algo == "ddpg":
+        key, k1, k2 = jax.random.split(key, 3)
+        actor = M.init_policy(k1, spec, x, task, "actor")
+        critic = M.init_policy(k2, spec, x, task, "critic")
+        na, nc = actor.shape[0], critic.shape[0]
+        zeros = lambda n: jnp.zeros((n,), jnp.float32)
+        state = [
+            _state_entry(b, run, "actor", actor),
+            _state_entry(b, run, "critic", critic),
+            _state_entry(b, run, "actor_t", actor),
+            _state_entry(b, run, "critic_t", critic),
+            _state_entry(b, run, "m_a", zeros(na)),
+            _state_entry(b, run, "v_a", zeros(na)),
+            _state_entry(b, run, "m_c", zeros(nc)),
+            _state_entry(b, run, "v_c", zeros(nc)),
+            _state_entry(b, run, "step", dtype="i32", shape=[]),
+        ]
+        batch = [
+            ("obs", obs_bt), ("act", sds((bt, adim))), ("rew", sds((bt,))),
+            ("nobs", obs_bt), ("done", sds((bt,))),
+        ]
+        metrics = rl.DDPG_METRICS
+        update_fn = rl.ddpg_update(spec, task, x)
+        act_arts = {
+            "act": (rl.ddpg_act(spec, task, x),
+                    [("actor", sds((na,))), ("obs", obs_b1)],
+                    [("act", sds((1, adim)))]),
+            "act_det": (rl.ddpg_act(spec, task, x),
+                        [("actor", sds((na,))), ("obs", obs_b1)],
+                        [("act", sds((1, adim)))]),
+        }
+    elif algo == "sac":
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        actor = M.init_policy(k1, spec, x, task, "sac_actor")
+        critics = jnp.concatenate(
+            [
+                M.init_policy(k2, spec, x, task, "critic"),
+                M.init_policy(k3, spec, x, task, "critic"),
+            ]
+        )
+        na, nc = actor.shape[0], critics.shape[0]
+        zeros = lambda n: jnp.zeros((n,), jnp.float32)
+        state = [
+            _state_entry(b, run, "actor", actor),
+            _state_entry(b, run, "critics", critics),
+            _state_entry(b, run, "critics_t", critics),
+            _state_entry(b, run, "log_alpha", jnp.zeros((1,), jnp.float32)),
+            _state_entry(b, run, "m_a", zeros(na)),
+            _state_entry(b, run, "v_a", zeros(na)),
+            _state_entry(b, run, "m_c", zeros(nc)),
+            _state_entry(b, run, "v_c", zeros(nc)),
+            _state_entry(b, run, "m_al", zeros(1)),
+            _state_entry(b, run, "v_al", zeros(1)),
+            _state_entry(b, run, "step", dtype="i32", shape=[]),
+        ]
+        batch = [
+            ("obs", obs_bt), ("act", sds((bt, adim))), ("rew", sds((bt,))),
+            ("nobs", obs_bt), ("done", sds((bt,))),
+            ("noise_next", sds((bt, adim))), ("noise_cur", sds((bt, adim))),
+        ]
+        metrics = rl.SAC_METRICS
+        update_fn = rl.sac_update(spec, task, x)
+        act_arts = {
+            "act": (rl.sac_act(spec, task, x),
+                    [("actor", sds((na,))), ("obs", obs_b1),
+                     ("noise", sds((1, adim)))],
+                    [("act", sds((1, adim)))]),
+            "act_det": (rl.sac_act_det(spec, task, x),
+                        [("actor", sds((na,))), ("obs", obs_b1)],
+                        [("act", sds((1, adim)))]),
+        }
+    elif algo == "ppo":
+        key, k1 = jax.random.split(key)
+        params = M.init_policy(k1, spec, x, task, "ppo")
+        npar = params.shape[0]
+        zeros = lambda n: jnp.zeros((n,), jnp.float32)
+        state = [
+            _state_entry(b, run, "params", params),
+            _state_entry(b, run, "m", zeros(npar)),
+            _state_entry(b, run, "v", zeros(npar)),
+            _state_entry(b, run, "step", dtype="i32", shape=[]),
+        ]
+        batch = [
+            ("obs", obs_bt), ("act", sds((bt, adim))), ("old_logp", sds((bt,))),
+            ("adv", sds((bt,))), ("ret", sds((bt,))),
+        ]
+        metrics = rl.PPO_METRICS
+        update_fn = rl.ppo_update(spec, task, x)
+        act_arts = {
+            "act": (rl.ppo_act(spec, task, x),
+                    [("params", sds((npar,))), ("obs", obs_b1),
+                     ("noise", sds((1, adim)))],
+                    [("act", sds((1, adim))), ("logp", sds((1,))),
+                     ("value", sds((1,)))]),
+            "act_det": (rl.ppo_act_det(spec, task, x),
+                        [("params", sds((npar,))), ("obs", obs_b1)],
+                        [("act", sds((1, adim))), ("value", sds((1,)))]),
+        }
+    else:
+        raise ValueError(algo)
+
+    batch_names = [n for n, _ in batch]
+    update_name = f"{algo}_update_{run}_b{bt}"
+    state_specs = [
+        (s["name"], sds(tuple(s["shape"]),
+                        jnp.int32 if s["dtype"] == "i32" else jnp.float32))
+        for s in state
+    ]
+    out_specs = state_specs + [(m, sds(())) for m in metrics]
+    b.artifact(
+        update_name,
+        update_fn,
+        state_specs + batch,
+        out_specs,
+        {"kind": "update", "algo": algo, "task": task_name, "arch": arch, "batch": bt},
+    )
+
+    art_names = {"update": update_name}
+    for role, (fn, ins, outs) in act_arts.items():
+        name = f"{algo}_{role}_{run}_b1"
+        b.artifact(name, fn, ins, outs,
+                   {"kind": role, "algo": algo, "task": task_name, "arch": arch,
+                    "batch": 1})
+        art_names[role] = name
+
+    b.manifest["trainstates"].append(
+        {
+            "name": run,
+            "task": task_name,
+            "algo": algo,
+            "encoder": arch,
+            "x": x,
+            "batch": bt,
+            "action_dim": adim,
+            "max_action": task.max_action,
+            "gamma": task.gamma,
+            "episodes": task.episodes,
+            "state": state,
+            "batch_inputs": batch_names,
+            "metrics": metrics,
+            "artifacts": art_names,
+        }
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--list", action="store_true", help="list artifacts, build nothing")
+    ap.add_argument("--skip-training", action="store_true")
+    ap.add_argument("--skip-serving", action="store_true")
+    args = ap.parse_args()
+
+    b = Builder(args.out_dir, only=args.only, list_only=args.list)
+    for name, spec in ENCODERS.items():
+        b.manifest["encoders"][name] = {
+            "serve": encoder_meta(spec, SERVE_CROP),
+            "tiny": encoder_meta(spec, TINY_CROP),
+        }
+
+    if not args.skip_serving:
+        print("— serving artifacts —")
+        build_serving(b)
+    if not args.skip_training:
+        print("— training artifacts —")
+        for task_name in TASKS:
+            for arch in ENCODERS:
+                build_training_combo(b, task_name, arch)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""L1: Pallas convolution / pooling / dense kernels, structured as shader passes.
+
+The paper implements its MiniConv encoders as OpenGL *fragment-shader passes*:
+each pass writes one RGBA texture (4 output channels), samples from at most
+8 bound input textures (each holding 4 packed channels), and stays within a
+64-texture-sample budget per shader invocation.
+
+The TPU/Pallas translation (DESIGN.md §3) keeps that structure:
+
+  * output channels are produced in blocks of 4  -> the pallas grid's
+    ``ob`` dimension is exactly the paper's "pass index";
+  * input channels are packed in blocks of 4     -> one "bound texture" per
+    input block, and the per-pass working set (<= 8 blocks x H x W tile)
+    is what must fit in VMEM;
+  * kernel taps are fully unrolled python loops  -> the static sampling
+    pattern of a fragment shader, with the per-tap contraction expressed as
+    an einsum so the MXU (not the VPU) performs the MACs on real TPUs.
+
+Gradients: ``pallas_call`` has no automatic VJP, so ``conv2d`` and ``dense``
+carry custom VJPs whose backward passes are built from the *same* pallas
+primitives (transposed/dilated convolutions and matmuls) — i.e. backprop is
+shader-structured too, matching how the paper trains the encoder end-to-end
+before exporting only the forward passes to GLSL.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is the correctness (and AOT
+lowering) vehicle. Real-TPU efficiency is estimated analytically in
+DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The CPU plugin can only run interpret-mode pallas; see module docstring.
+INTERPRET = True
+
+# Shader-model constants mirrored from the paper (Pi Zero 2 W deployment).
+CHANNELS_PER_TEXTURE = 4  # RGBA packing
+MAX_BOUND_TEXTURES = 8  # max input textures a fragment shader may sample
+MAX_SAMPLES_PER_PASS = 64  # per-shader texture-sampling budget
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pass_samples(cin: int, kh: int, kw: int) -> int:
+    """Texture samples one shader pass performs per output pixel."""
+    return kh * kw * _ceil_div(cin, CHANNELS_PER_TEXTURE)
+
+
+def pass_textures(cin: int) -> int:
+    """Input textures a pass must bind (4 channels packed per texture)."""
+    return _ceil_div(cin, CHANNELS_PER_TEXTURE)
+
+
+def fits_shader_budget(cin: int, kh: int, kw: int) -> bool:
+    """True when a conv layer's per-pass cost compiles to a legal shader."""
+    return (
+        pass_textures(cin) <= MAX_BOUND_TEXTURES
+        and pass_samples(cin, kh, kw) <= MAX_SAMPLES_PER_PASS
+    )
+
+
+def _pad_axis_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    target = _ceil_div(size, multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Core valid convolution (pallas) + custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _conv_pass_kernel(x_ref, w_ref, o_ref, *, stride, kh, kw, ho, wo):
+    """One shader pass: 4 output channels over the full spatial block.
+
+    The kernel gathers the kh·kw tap patches (the shader's static sampling
+    pattern), stacks them, and performs a SINGLE im2col-style contraction —
+    one big MXU matmul per pass instead of k² small ones. This keeps the
+    lowered HLO compact (critical for AOT compile time; EXPERIMENTS.md
+    §Perf) and is the efficient real-TPU mapping.
+
+    x_ref: [B, Cin, H, W] (all bound "textures" for this pass)
+    w_ref: [4, Cin, kh, kw] (this pass's filter taps)
+    o_ref: [B, 4, Ho, Wo]
+    """
+    x = x_ref[...]  # [B, Cin, H, W] — the VMEM-resident working set
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    x,
+                    (0, 0, i, j),
+                    (
+                        x.shape[0],
+                        x.shape[1],
+                        i + (ho - 1) * stride + 1,
+                        j + (wo - 1) * stride + 1,
+                    ),
+                    (1, 1, stride, stride),
+                )  # [B, Cin, Ho, Wo]
+            )
+    stacked = jnp.stack(patches, axis=1)  # [B, kh*kw, Cin, Ho, Wo]
+    taps = w_ref[...].transpose(2, 3, 0, 1).reshape(kh * kw, CHANNELS_PER_TEXTURE, -1)
+    # One contraction over (tap, cin): the MXU matmul of this pass.
+    o_ref[...] = jnp.einsum(
+        "toc,btchw->bohw", taps, stacked, preferred_element_type=jnp.float32
+    )
+
+
+def _conv_valid_raw(x, w, stride: int):
+    """Valid conv via shader passes. x: [B,C,H,W], w: [O,C,kh,kw] -> [B,O,Ho,Wo]."""
+    bsz, cin, h, wdt = x.shape
+    cout, cin_w, kh, kw = w.shape
+    assert cin == cin_w, f"channel mismatch {cin} vs {cin_w}"
+    ho = (h - kh) // stride + 1
+    wo = (wdt - kw) // stride + 1
+    assert ho > 0 and wo > 0, f"conv output empty: {x.shape} w={w.shape} s={stride}"
+
+    # RGBA-style packing: pad channel dims to multiples of 4.
+    x = _pad_axis_to(x, 1, CHANNELS_PER_TEXTURE)
+    w = _pad_axis_to(_pad_axis_to(w, 1, CHANNELS_PER_TEXTURE), 0, CHANNELS_PER_TEXTURE)
+    cin_p = x.shape[1]
+    cout_p = w.shape[0]
+    n_passes = cout_p // CHANNELS_PER_TEXTURE
+
+    out = pl.pallas_call(
+        partial(_conv_pass_kernel, stride=stride, kh=kh, kw=kw, ho=ho, wo=wo),
+        grid=(n_passes,),
+        in_specs=[
+            pl.BlockSpec((bsz, cin_p, x.shape[2], x.shape[3]), lambda ob: (0, 0, 0, 0)),
+            pl.BlockSpec((CHANNELS_PER_TEXTURE, cin_p, kh, kw), lambda ob: (ob, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bsz, CHANNELS_PER_TEXTURE, ho, wo), lambda ob: (0, ob, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, cout_p, ho, wo), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+    return out[:, :cout]
+
+
+def _dilate_hw(g, stride: int, extra_h: int, extra_w: int):
+    """Insert stride-1 zeros between spatial elements, plus trailing zeros."""
+    if stride == 1 and extra_h == 0 and extra_w == 0:
+        return g
+    b, c, h, w = g.shape
+    hd = (h - 1) * stride + 1 + extra_h
+    wd = (w - 1) * stride + 1 + extra_w
+    out = jnp.zeros((b, c, hd, wd), g.dtype)
+    return out.at[
+        :, :, 0 : (h - 1) * stride + 1 : stride, 0 : (w - 1) * stride + 1 : stride
+    ].set(g)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def conv_valid(stride: int, x, w):
+    return _conv_valid_raw(x, w, stride)
+
+
+def _conv_valid_fwd(stride, x, w):
+    return _conv_valid_raw(x, w, stride), (x, w)
+
+
+def _conv_valid_bwd(stride, res, g):
+    x, w = res
+    _, _, h, wdt = x.shape
+    cout, cin, kh, kw = w.shape
+    rh = (h - kh) % stride
+    rw = (wdt - kw) % stride
+
+    # dL/dx: full correlation of the (dilated) cotangent with the flipped,
+    # transposed kernel — itself a stride-1 shader-pass conv.
+    gd = _dilate_hw(g, stride, rh, rw)  # [B, O, H-kh+1, W-kw+1]
+    gd_pad = jnp.pad(gd, ((0, 0), (0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1)))
+    w_flip = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)  # [C, O, kh, kw]
+    dx = _conv_valid_raw(gd_pad, w_flip, 1)
+
+    # dL/dw: correlate inputs with the dilated cotangent, batch as channels.
+    xt = x.transpose(1, 0, 2, 3)  # [C, B, H, W]
+    gt = _dilate_hw(g, stride, 0, 0).transpose(1, 0, 2, 3)  # [O, B, Hd, Wd]
+    dw_full = _conv_valid_raw(xt, gt, 1)  # [C, O, kh+rh, kw+rw]
+    dw = dw_full[:, :, :kh, :kw].transpose(1, 0, 2, 3)
+    return dx, dw
+
+
+conv_valid.defvjp(_conv_valid_fwd, _conv_valid_bwd)
+
+
+def conv2d(x, w, b, *, stride: int = 1, padding: str = "valid"):
+    """Shader-pass-structured, differentiable 2-D convolution.
+
+    x: [B, Cin, H, W] float32; w: [Cout, Cin, kh, kw]; b: [Cout].
+    padding: 'valid' or 'same' (same => output is ceil(H/stride)).
+    Returns [B, Cout, Ho, Wo].
+    """
+    _, _, h, wdt = x.shape
+    _, _, kh, kw = w.shape
+    if padding == "same":
+        ho = _ceil_div(h, stride)
+        wo = _ceil_div(wdt, stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - wdt, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+            ),
+        )
+    elif padding != "valid":
+        raise ValueError(f"unknown padding {padding!r}")
+    out = conv_valid(stride, x, w)
+    return out + b[None, :, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Max pooling (forward-only: used by the shader library, not inside any
+# trained network, so no VJP is required — asserted in tests).
+# ---------------------------------------------------------------------------
+
+
+def _maxpool_pass_kernel(x_ref, o_ref, *, k, stride, ho, wo):
+    """One pooling pass over a 4-channel block. x_ref: [B,4,H,W]."""
+    x = x_ref[...]
+    acc = jnp.full((x.shape[0], CHANNELS_PER_TEXTURE, ho, wo), -jnp.inf, jnp.float32)
+    for i in range(k):
+        for j in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, 0, i, j),
+                (
+                    x.shape[0],
+                    x.shape[1],
+                    i + (ho - 1) * stride + 1,
+                    j + (wo - 1) * stride + 1,
+                ),
+                (1, 1, stride, stride),
+            )
+            acc = jnp.maximum(acc, patch)
+    o_ref[...] = acc
+
+
+def maxpool2d(x, *, k: int = 2, stride: int | None = None):
+    """Shader-pass max pooling. x: [B, C, H, W] -> [B, C, Ho, Wo] (valid)."""
+    stride = stride or k
+    bsz, c, h, wdt = x.shape
+    ho = (h - k) // stride + 1
+    wo = (wdt - k) // stride + 1
+    x = _pad_axis_to(x, 1, CHANNELS_PER_TEXTURE)
+    c_p = x.shape[1]
+
+    out = pl.pallas_call(
+        partial(_maxpool_pass_kernel, k=k, stride=stride, ho=ho, wo=wo),
+        grid=(c_p // CHANNELS_PER_TEXTURE,),
+        in_specs=[
+            pl.BlockSpec((bsz, CHANNELS_PER_TEXTURE, h, wdt), lambda cb: (0, cb, 0, 0))
+        ],
+        out_specs=pl.BlockSpec(
+            (bsz, CHANNELS_PER_TEXTURE, ho, wo), lambda cb: (0, cb, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, c_p, ho, wo), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+    return out[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# Dense layers: output dimension tiled so each program's weight block is a
+# bounded VMEM slab (the MXU-facing analogue of the per-pass budget).
+# ---------------------------------------------------------------------------
+
+DENSE_TILE = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # x_ref: [B, In]; w_ref: [In, T]; o_ref: [B, T]
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _matmul_raw(x, w):
+    bsz, din = x.shape
+    din_w, dout = w.shape
+    assert din == din_w, f"matmul dim mismatch {din} vs {din_w}"
+    w = _pad_axis_to(w, 1, DENSE_TILE)
+    dout_p = w.shape[1]
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(dout_p // DENSE_TILE,),
+        in_specs=[
+            pl.BlockSpec((bsz, din), lambda t: (0, 0)),
+            pl.BlockSpec((din, DENSE_TILE), lambda t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((bsz, DENSE_TILE), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dout_p), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+    return out[:, :dout]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    return _matmul_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return _matmul_raw(g, w.T), _matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(x, w, b):
+    """Pallas dense layer. x: [B, In], w: [In, Out], b: [Out] -> [B, Out]."""
+    return matmul(x, w) + b[None, :]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle implementations for the Pallas kernels.
+
+Every kernel in ``conv.py`` must match these references to float32
+tolerance; ``python/tests/test_kernel.py`` sweeps shapes with hypothesis.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1, padding: str = "valid"):
+    """Reference conv via lax.conv_general_dilated. Shapes as conv.conv2d."""
+    if padding == "same":
+        pad = "SAME"
+    elif padding == "valid":
+        pad = "VALID"
+    else:
+        raise ValueError(padding)
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def maxpool2d_ref(x, *, k: int = 2, stride: int | None = None):
+    stride = stride or k
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, k, k),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def dense_ref(x, w, b):
+    return x @ w + b[None, :]

@@ -1,0 +1,313 @@
+"""L2: JAX model definitions — encoders, heads, flat-parameter plumbing.
+
+Everything here is *build-time only*: functions are jitted, lowered to HLO
+text by aot.py and executed from Rust. To keep the Rust side shape-generic,
+every network's parameters travel as a **single flat float32 vector**; the
+(name, shape) template lives here and offsets are static at trace time.
+
+Split-policy partitioning (paper §3): a policy is composed of
+  * ``enc``  — the on-device part (MiniConv conv stack), whose output is the
+               transmitted K-channel feature tensor;
+  * ``head`` — the server-side part (flatten -> 256-d projection -> algorithm
+               MLPs).
+For the Full-CNN baseline there is no split: the whole stack is server-side.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as K
+from .specs import FEATURES_DIM, OBS_CHANNELS, EncoderSpec, TaskSpec
+
+# ---------------------------------------------------------------------------
+# Parameter templates: ordered list of (name, shape). Flattened in order.
+# ---------------------------------------------------------------------------
+
+
+def template_size(template) -> int:
+    return sum(math.prod(s) for _, s in template)
+
+
+def pack(params) -> jnp.ndarray:
+    """Concatenate a list of arrays into one flat f32 vector."""
+    return jnp.concatenate([p.reshape(-1).astype(jnp.float32) for p in params])
+
+
+def unpack(flat, template):
+    """Split a flat vector back into arrays per the template (static offsets)."""
+    out = []
+    off = 0
+    for _, shape in template:
+        n = math.prod(shape)
+        out.append(flat[off : off + n].reshape(shape))
+        off += n
+    assert off == flat.shape[0], f"template/flat mismatch: {off} vs {flat.shape[0]}"
+    return out
+
+
+def _orthogonal(key, shape, scale):
+    """Orthogonal init (SB3 default for PPO; well-behaved everywhere)."""
+    n_rows = shape[0]
+    n_cols = math.prod(shape[1:])
+    mat = jax.random.normal(key, (max(n_rows, n_cols), min(n_rows, n_cols)))
+    q, r = jnp.linalg.qr(mat)
+    q = q * jnp.sign(jnp.diag(r))[None, :]
+    if n_rows < n_cols:
+        q = q.T
+    return (scale * q[:n_rows, :n_cols]).reshape(shape).astype(jnp.float32)
+
+
+def init_params(key, template, out_scale: float = 0.01):
+    """Initialise a template. Names ending in ``_out`` get a small gain."""
+    params = []
+    for name, shape in template:
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith("log_std"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            scale = out_scale if "_out" in name else math.sqrt(2.0)
+            params.append(_orthogonal(sub, shape, scale))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Encoder (on-device part for MiniConv; full conv stack for Full-CNN)
+# ---------------------------------------------------------------------------
+
+
+def enc_template(spec: EncoderSpec, x: int):
+    t = []
+    cin = OBS_CHANNELS
+    for i, l in enumerate(spec.layers):
+        t.append((f"conv{i}.w", (l.cout, cin, l.k, l.k)))
+        t.append((f"conv{i}.b", (l.cout,)))
+        cin = l.cout
+    if spec.dense is not None:
+        c, h, w = spec.feat_shape(x)
+        t.append(("dense.w", (c * h * w, spec.dense)))
+        t.append(("dense.b", (spec.dense,)))
+    return t
+
+
+def enc_apply(spec: EncoderSpec, flat, obs):
+    """obs: [B, 9, X, X] float32 in [0,1] -> transmitted features.
+
+    MiniConv: [B, K, ceil(X/8), ceil(X/8)] conv map (what goes on the wire).
+    Full-CNN: [B, 512] dense features (never transmitted; server-side).
+    """
+    tmpl = enc_template(spec, obs.shape[-1])
+    p = unpack(flat, tmpl)
+    x = obs
+    i = 0
+    for l in spec.layers:
+        w, b = p[i], p[i + 1]
+        i += 2
+        x = jax.nn.relu(K.conv2d(x, w, b, stride=l.stride, padding=l.padding))
+    if spec.dense is not None:
+        w, b = p[i], p[i + 1]
+        x = jax.nn.relu(K.dense(x.reshape(x.shape[0], -1), w, b))
+    return x
+
+
+def enc_out_dim(spec: EncoderSpec, x: int) -> int:
+    if spec.dense is not None:
+        return spec.dense
+    c, h, w = spec.feat_shape(x)
+    return c * h * w
+
+
+# ---------------------------------------------------------------------------
+# Server-side heads. All heads start with a 256-d projection of the
+# (flattened) encoder output, then run algorithm-specific MLPs.
+# ---------------------------------------------------------------------------
+
+
+def proj_template(spec: EncoderSpec, x: int):
+    return [
+        ("proj.w", (enc_out_dim(spec, x), FEATURES_DIM)),
+        ("proj.b", (FEATURES_DIM,)),
+    ]
+
+
+def proj_apply(flat_slice, feat):
+    w, b = flat_slice
+    return jax.nn.relu(K.dense(feat.reshape(feat.shape[0], -1), w, b))
+
+
+def _mlp_template(prefix, dims):
+    t = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        tag = "_out" if i == len(dims) - 2 else ""
+        t.append((f"{prefix}.l{i}{tag}.w", (din, dout)))
+        t.append((f"{prefix}.l{i}{tag}.b", (dout,)))
+    return t
+
+
+def _mlp_apply(params, x, *, final_act=None):
+    n = len(params) // 2
+    for i in range(n):
+        w, b = params[2 * i], params[2 * i + 1]
+        x = K.dense(x, w, b)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    if final_act is not None:
+        x = final_act(x)
+    return x
+
+
+# --- deterministic actor (DDPG) -------------------------------------------
+
+
+def actor_head_template(spec: EncoderSpec, x: int, task: TaskSpec):
+    return proj_template(spec, x) + _mlp_template(
+        "actor", [FEATURES_DIM, 256, 256, task.action_dim]
+    )
+
+
+def actor_head_apply(task: TaskSpec, params, feat):
+    h = proj_apply(params[:2], feat)
+    a = _mlp_apply(params[2:], h, final_act=jnp.tanh)
+    return a * task.max_action
+
+
+# --- gaussian actor (SAC) ---------------------------------------------------
+
+LOG_STD_MIN, LOG_STD_MAX = -20.0, 2.0
+
+
+def sac_actor_head_template(spec: EncoderSpec, x: int, task: TaskSpec):
+    return (
+        proj_template(spec, x)
+        + _mlp_template("trunk", [FEATURES_DIM, 256, 256])
+        + [
+            ("mu_out.w", (256, task.action_dim)),
+            ("mu_out.b", (task.action_dim,)),
+            ("logstd_out.w", (256, task.action_dim)),
+            ("logstd_out.b", (task.action_dim,)),
+        ]
+    )
+
+
+def sac_actor_dist(task: TaskSpec, params, feat):
+    h = proj_apply(params[:2], feat)
+    h = _mlp_apply(params[2:6], h, final_act=jax.nn.relu)
+    mu = K.dense(h, params[6], params[7])
+    log_std = jnp.clip(K.dense(h, params[8], params[9]), LOG_STD_MIN, LOG_STD_MAX)
+    return mu, log_std
+
+
+def squash(task: TaskSpec, mu, log_std, noise):
+    """Reparameterised tanh-gaussian sample + log-prob (SB3 SquashedDiagGaussian)."""
+    std = jnp.exp(log_std)
+    pre = mu + std * noise
+    act = jnp.tanh(pre)
+    logp = -0.5 * (noise**2 + 2 * log_std + math.log(2 * math.pi)).sum(-1)
+    # tanh correction
+    logp -= jnp.log(jnp.clip(1 - act**2, 1e-6, None)).sum(-1)
+    return act * task.max_action, logp
+
+
+# --- PPO actor-critic -------------------------------------------------------
+
+
+def ppo_head_template(spec: EncoderSpec, x: int, task: TaskSpec):
+    return (
+        proj_template(spec, x)
+        + _mlp_template("pi", [FEATURES_DIM, task.action_dim])
+        + _mlp_template("vf", [FEATURES_DIM, 1])
+        + [("log_std", (task.action_dim,))]
+    )
+
+
+def ppo_head_apply(task: TaskSpec, params, feat):
+    h = proj_apply(params[:2], feat)
+    mu = _mlp_apply(params[2:4], h)
+    value = _mlp_apply(params[4:6], h)[:, 0]
+    log_std = params[6]
+    return mu, log_std, value
+
+
+def gaussian_logp(mu, log_std, act):
+    std = jnp.exp(log_std)
+    return -0.5 * (((act - mu) / std) ** 2 + 2 * log_std + math.log(2 * math.pi)).sum(
+        -1
+    )
+
+
+# --- Q critic (DDPG/SAC) ----------------------------------------------------
+
+
+def critic_head_template(spec: EncoderSpec, x: int, task: TaskSpec):
+    return proj_template(spec, x) + _mlp_template(
+        "qf", [FEATURES_DIM + task.action_dim, 256, 256, 1]
+    )
+
+
+def critic_head_apply(params, feat, act):
+    h = proj_apply(params[:2], feat)
+    q = _mlp_apply(params[2:], jnp.concatenate([h, act], axis=-1))
+    return q[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Full policies = encoder + head over a flat (enc ++ head) vector.
+# ---------------------------------------------------------------------------
+
+
+def policy_templates(spec: EncoderSpec, x: int, task: TaskSpec, role: str):
+    """(enc_template, head_template) for a role in {actor, sac_actor, ppo, critic}."""
+    heads = {
+        "actor": actor_head_template,
+        "sac_actor": sac_actor_head_template,
+        "ppo": ppo_head_template,
+        "critic": critic_head_template,
+    }
+    return enc_template(spec, x), heads[role](spec, x, task)
+
+
+def split_flat(flat, enc_tmpl, head_tmpl):
+    ne = template_size(enc_tmpl)
+    nh = template_size(head_tmpl)
+    assert flat.shape[0] == ne + nh
+    return flat[:ne], flat[ne:]
+
+
+def actor_apply(spec, task, x, flat, obs):
+    """Deterministic actor (DDPG) over flat enc++head params."""
+    et, ht = policy_templates(spec, x, task, "actor")
+    ef, hf = split_flat(flat, et, ht)
+    feat = enc_apply(spec, ef, obs)
+    return actor_head_apply(task, unpack(hf, ht), feat)
+
+
+def sac_actor_apply(spec, task, x, flat, obs):
+    et, ht = policy_templates(spec, x, task, "sac_actor")
+    ef, hf = split_flat(flat, et, ht)
+    feat = enc_apply(spec, ef, obs)
+    return sac_actor_dist(task, unpack(hf, ht), feat)
+
+
+def ppo_apply(spec, task, x, flat, obs):
+    et, ht = policy_templates(spec, x, task, "ppo")
+    ef, hf = split_flat(flat, et, ht)
+    feat = enc_apply(spec, ef, obs)
+    return ppo_head_apply(task, unpack(hf, ht), feat)
+
+
+def critic_apply(spec, task, x, flat, obs, act):
+    et, ht = policy_templates(spec, x, task, "critic")
+    ef, hf = split_flat(flat, et, ht)
+    feat = enc_apply(spec, ef, obs)
+    return critic_head_apply(unpack(hf, ht), feat, act)
+
+
+def init_policy(key, spec, x, task, role, out_scale=0.01):
+    et, ht = policy_templates(spec, x, task, role)
+    k1, k2 = jax.random.split(key)
+    return pack(init_params(k1, et) + init_params(k2, ht, out_scale=out_scale))

@@ -1,0 +1,37 @@
+"""Adam optimiser over flat parameter vectors, written in plain jnp.
+
+optax is unavailable in the build image, so the SB3-default optimiser is
+reimplemented here. Operating on flat vectors keeps the AOT interface with
+the Rust trainer to three tensors (params, m, v) + an int32 step counter.
+"""
+
+import jax.numpy as jnp
+
+
+def adam_init(n: int):
+    return jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32)
+
+
+def adam_update(grad, params, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step. ``step`` is the 1-based int32 step counter.
+
+    Returns (params', m', v').
+    """
+    t = step.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * grad
+    v = b2 * v + (1 - b2) * grad * grad
+    mhat = m / (1 - b1**t)
+    vhat = v / (1 - b2**t)
+    return params - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def clip_global_norm(grad, max_norm: float):
+    """SB3 PPO's max_grad_norm clipping over the flat gradient."""
+    norm = jnp.sqrt(jnp.sum(grad * grad))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return grad * scale, norm
+
+
+def polyak(target, online, tau: float):
+    """Soft target update used by DDPG/SAC (SB3 tau=0.005)."""
+    return (1.0 - tau) * target + tau * online

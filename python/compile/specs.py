@@ -1,0 +1,126 @@
+"""Shared architecture / task specifications for the MiniConv stack.
+
+These constants are the single source of truth consumed by model.py, rl.py,
+aot.py and (via artifacts/manifest.json) by the Rust coordinator. They mirror
+the paper's setup (§3, §4.1):
+
+  * observations are 3 stacked RGB frames -> 9 input channels, CHW float32
+    in [0, 1] (SB3 ``normalize_images=True``);
+  * MiniConv-K = three 3x3 stride-2 'same' conv + ReLU blocks, K output
+    channels each => n = 3 stride-two layers, transmitted feature map
+    K x ceil(X/8) x ceil(X/8);
+  * Full-CNN = the SB3 NatureCNN baseline (8x8 s4 -> 4x4 s2 -> 3x3 s1,
+    valid padding, + dense 512);
+  * the server-side head projects flattened features to a 256-d vector and
+    runs the algorithm-specific MLPs (DESIGN.md records this as the SB3
+    ``features_dim`` analogue).
+
+Scale note (DESIGN.md §2): training runs use a reduced "tiny" observation
+(render 44 -> crop 36) so CPU-hosted runs finish; serving experiments use the
+paper's render-100 -> crop-84 pipeline.
+"""
+
+from dataclasses import dataclass, field
+
+OBS_CHANNELS = 9  # 3 stacked RGB frames
+FRAME_STACK = 3
+FEATURES_DIM = 256  # server-side projection width (SB3 features_dim analogue)
+
+# Serving-scale observation (paper: render 100x100, centre-crop 84x84).
+SERVE_RENDER = 100
+SERVE_CROP = 84
+# Tiny training-scale observation (substitution documented in DESIGN.md §2).
+TINY_RENDER = 44
+TINY_CROP = 36
+
+BATCH_LADDER = [1, 2, 4, 8, 16, 32]
+TRAIN_BATCH = 64
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    cout: int
+    k: int
+    stride: int
+    padding: str  # 'same' | 'valid'
+
+
+@dataclass(frozen=True)
+class EncoderSpec:
+    name: str  # manifest tag: miniconv4 | miniconv16 | fullcnn
+    kind: str  # 'miniconv' | 'fullcnn'
+    layers: tuple
+    dense: int | None  # trailing dense width (NatureCNN's 512), None for miniconv
+    shader_deployable: bool
+
+    def n_stride2(self) -> int:
+        return sum(1 for l in self.layers if l.stride == 2)
+
+    def feat_shape(self, x: int):
+        """Spatial conv-output shape for square input x (channels, h, w)."""
+        h = w = x
+        c = OBS_CHANNELS
+        for l in self.layers:
+            if l.padding == "same":
+                h = -(-h // l.stride)
+                w = -(-w // l.stride)
+            else:
+                h = (h - l.k) // l.stride + 1
+                w = (w - l.k) // l.stride + 1
+            c = l.cout
+        return (c, h, w)
+
+
+def miniconv_spec(k: int) -> EncoderSpec:
+    return EncoderSpec(
+        name=f"miniconv{k}",
+        kind="miniconv",
+        layers=(
+            ConvLayer(k, 3, 2, "same"),
+            ConvLayer(k, 3, 2, "same"),
+            ConvLayer(k, 3, 2, "same"),
+        ),
+        dense=None,
+        shader_deployable=True,
+    )
+
+
+FULLCNN = EncoderSpec(
+    name="fullcnn",
+    kind="fullcnn",
+    layers=(
+        ConvLayer(32, 8, 4, "valid"),
+        ConvLayer(64, 4, 2, "valid"),
+        ConvLayer(64, 3, 1, "valid"),
+    ),
+    dense=512,
+    shader_deployable=False,
+)
+
+MINICONV4 = miniconv_spec(4)
+MINICONV16 = miniconv_spec(16)
+ENCODERS = {e.name: e for e in (MINICONV4, MINICONV16, FULLCNN)}
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    algo: str  # ppo | sac | ddpg
+    action_dim: int
+    max_action: float
+    episodes: int  # paper-scale episode budget (Tables 2-4)
+    gamma: float = 0.99
+
+
+TASKS = {
+    "walker": TaskSpec("walker", "ppo", 6, 1.0, 2000),
+    "hopper": TaskSpec("hopper", "sac", 3, 1.0, 2000),
+    "pendulum": TaskSpec("pendulum", "ddpg", 1, 2.0, 1000),
+}
+
+# SB3-default hyperparameters used by rl.py (paper §4.1: defaults unless stated).
+HYPERS = {
+    "ddpg": dict(lr=1e-3, tau=0.005, gamma=0.99),
+    "sac": dict(lr=3e-4, tau=0.005, gamma=0.99),
+    "ppo": dict(lr=3e-4, clip=0.2, vf_coef=0.5, ent_coef=0.0, max_grad_norm=0.5),
+}

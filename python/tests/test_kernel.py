@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/paddings; every case asserts allclose.
+This is the core correctness signal for the compute layer — the same
+kernels are lowered into every serving/training artifact.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as K
+from compile.kernels import ref as R
+
+RNG = np.random.default_rng(1234)
+
+
+def t(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# conv2d forward
+# ---------------------------------------------------------------------------
+
+
+conv_cases = st.tuples(
+    st.integers(1, 3),  # batch
+    st.integers(1, 10),  # cin
+    st.integers(7, 24),  # h
+    st.integers(7, 24),  # w
+    st.integers(1, 9),  # cout
+    st.sampled_from([1, 3, 5]),  # kernel
+    st.sampled_from([1, 2, 3]),  # stride
+    st.sampled_from(["same", "valid"]),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_cases)
+def test_conv2d_matches_ref(case):
+    b, cin, h, w, cout, k, s, pad = case
+    if pad == "valid" and (h < k or w < k):
+        return
+    x, wgt, bias = t(b, cin, h, w), t(cout, cin, k, k), t(cout)
+    got = K.conv2d(x, wgt, bias, stride=s, padding=pad)
+    want = R.conv2d_ref(x, wgt, bias, stride=s, padding=pad)
+    assert got.shape == want.shape
+    assert_close(got, want)
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [
+        # the exact layer shapes used by the paper's encoders
+        (1, 9, 84, 84, 4, 3, 2, "same"),  # MiniConv-4 layer 1, serve scale
+        (1, 4, 42, 42, 4, 3, 2, "same"),  # MiniConv-4 layer 2
+        (1, 16, 21, 21, 16, 3, 2, "same"),  # MiniConv-16 layer 3
+        (2, 9, 36, 36, 32, 8, 4, "valid"),  # NatureCNN conv1, tiny scale
+        (2, 32, 8, 8, 64, 4, 2, "valid"),  # NatureCNN conv2
+        (2, 64, 3, 3, 64, 3, 1, "valid"),  # NatureCNN conv3
+    ],
+)
+def test_conv2d_paper_shapes(shape):
+    b, cin, h, w, cout, k, s, pad = shape
+    x, wgt, bias = t(b, cin, h, w), t(cout, cin, k, k), t(cout)
+    assert_close(
+        K.conv2d(x, wgt, bias, stride=s, padding=pad),
+        R.conv2d_ref(x, wgt, bias, stride=s, padding=pad),
+    )
+
+
+def test_conv2d_same_output_is_ceil():
+    x, wgt, bias = t(1, 9, 85, 85), t(4, 9, 3, 3), t(4)
+    out = K.conv2d(x, wgt, bias, stride=2, padding="same")
+    assert out.shape == (1, 4, 43, 43)  # ceil(85/2)
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(AssertionError):
+        K.conv2d(t(1, 3, 8, 8), t(4, 5, 3, 3), t(4))
+
+
+# ---------------------------------------------------------------------------
+# conv2d gradients (custom VJP vs autodiff of the reference)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,pad,h", [(1, "valid", 10), (2, "same", 17), (2, "valid", 12), (4, "valid", 36), (3, "same", 14)])
+def test_conv2d_grads_match_ref(s, pad, h):
+    cin, cout, k = 9, 8, 3 if s != 4 else 8
+    x, wgt, bias = t(2, cin, h, h), t(cout, cin, k, k), t(cout)
+
+    def lp(x, w, b):
+        return jnp.sum(K.conv2d(x, w, b, stride=s, padding=pad) ** 2)
+
+    def lr(x, w, b):
+        return jnp.sum(R.conv2d_ref(x, w, b, stride=s, padding=pad) ** 2)
+
+    gp = jax.grad(lp, argnums=(0, 1, 2))(x, wgt, bias)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(x, wgt, bias)
+    for a, b_ in zip(gp, gr):
+        assert_close(a, b_, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 2),
+    st.integers(1, 6),
+    st.integers(8, 16),
+    st.integers(1, 6),
+    st.sampled_from([1, 2]),
+)
+def test_conv2d_grad_sweep(b, cin, h, cout, s):
+    x, wgt, bias = t(b, cin, h, h), t(cout, cin, 3, 3), t(cout)
+
+    def lp(args):
+        return jnp.sum(jnp.sin(K.conv2d(args[0], args[1], args[2], stride=s, padding="same")))
+
+    def lr(args):
+        return jnp.sum(jnp.sin(R.conv2d_ref(args[0], args[1], args[2], stride=s, padding="same")))
+
+    gp = jax.grad(lp)((x, wgt, bias))
+    gr = jax.grad(lr)((x, wgt, bias))
+    for a, b_ in zip(gp, gr):
+        assert_close(a, b_, rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# maxpool
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 3),
+    st.integers(1, 9),
+    st.integers(6, 20),
+    st.sampled_from([2, 3]),
+    st.sampled_from([None, 1, 2]),
+)
+def test_maxpool_matches_ref(b, c, h, k, s):
+    x = t(b, c, h, h)
+    got = K.maxpool2d(x, k=k, stride=s)
+    want = R.maxpool2d_ref(x, k=k, stride=s)
+    assert got.shape == want.shape
+    assert_close(got, want, rtol=0, atol=0)
+
+
+def test_maxpool_padding_channels_not_leaked():
+    # channel-padding inside the kernel must never leak the -inf/0 pad values
+    x = -jnp.ones((1, 5, 6, 6), jnp.float32)  # all negative, 5 -> pads to 8
+    out = K.maxpool2d(x, k=2)
+    assert np.all(np.asarray(out) == -1.0)
+
+
+# ---------------------------------------------------------------------------
+# dense / matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 300), st.integers(1, 300))
+def test_dense_matches_ref(b, din, dout):
+    x, w, bias = t(b, din), t(din, dout), t(dout)
+    assert_close(K.dense(x, w, bias), R.dense_ref(x, w, bias), rtol=1e-3, atol=1e-3)
+
+
+def test_dense_grads():
+    x, w, bias = t(4, 37), t(37, 130), t(130)
+    gp = jax.grad(lambda x, w, b: jnp.sum(K.dense(x, w, b) ** 2), argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(lambda x, w, b: jnp.sum(R.dense_ref(x, w, b) ** 2), argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gp, gr):
+        assert_close(a, b_, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# shader budget model
+# ---------------------------------------------------------------------------
+
+
+def test_shader_budget_miniconv_legal():
+    # MiniConv layers must be deployable: <= 8 textures, <= 64 samples
+    assert K.fits_shader_budget(9, 3, 3)  # layer 1: 3 textures, 27 samples
+    assert K.fits_shader_budget(4, 3, 3)
+    assert K.fits_shader_budget(16, 3, 3)  # 4 textures, 36 samples
+
+
+def test_shader_budget_naturecnn_illegal():
+    # NatureCNN conv1 (8x8 over 9 channels) blows the 64-sample budget:
+    # that is *why* the paper's baseline cannot ship as shaders.
+    assert not K.fits_shader_budget(9, 8, 8)
+
+
+def test_pass_arithmetic():
+    assert K.pass_textures(9) == 3
+    assert K.pass_samples(9, 3, 3) == 27
+    assert K.pass_textures(32) == 8
+    assert K.pass_samples(64, 3, 3) == 16 * 9

@@ -1,0 +1,204 @@
+"""L2 model tests: parameter plumbing, encoder shapes, head behaviours."""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.specs import (
+    ENCODERS,
+    FEATURES_DIM,
+    MINICONV4,
+    MINICONV16,
+    FULLCNN,
+    OBS_CHANNELS,
+    TASKS,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand_obs(b, x):
+    return jax.random.uniform(KEY, (b, OBS_CHANNELS, x, x), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip():
+    tmpl = [("a.w", (3, 4)), ("a.b", (4,)), ("z_out.w", (4, 2))]
+    params = M.init_params(KEY, tmpl)
+    flat = M.pack(params)
+    assert flat.shape == (M.template_size(tmpl),)
+    back = M.unpack(flat, tmpl)
+    for p, q in zip(params, back):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_unpack_rejects_wrong_length():
+    # too short -> reshape TypeError; too long -> our assertion
+    with pytest.raises((AssertionError, TypeError)):
+        M.unpack(jnp.zeros(11), [("w", (3, 4))])
+    with pytest.raises(AssertionError):
+        M.unpack(jnp.zeros(13), [("w", (3, 4))])
+
+
+def test_orthogonal_init_is_orthogonal():
+    w = M._orthogonal(KEY, (64, 64), 1.0)
+    eye = np.asarray(w @ w.T)
+    np.testing.assert_allclose(eye, np.eye(64), atol=1e-4)
+
+
+def test_init_bias_zero_logstd_zero():
+    tmpl = [("l.w", (8, 8)), ("l.b", (8,)), ("log_std", (3,))]
+    p = M.init_params(KEY, tmpl)
+    assert np.all(np.asarray(p[1]) == 0)
+    assert np.all(np.asarray(p[2]) == 0)
+
+
+# ---------------------------------------------------------------------------
+# encoders
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("x", [36, 84])
+@pytest.mark.parametrize("spec", [MINICONV4, MINICONV16])
+def test_miniconv_feature_shape(spec, x):
+    tmpl = M.enc_template(spec, x)
+    flat = M.pack(M.init_params(KEY, tmpl))
+    feat = M.enc_apply(spec, flat, rand_obs(2, x))
+    s = math.ceil(x / 8)  # n = 3 stride-2 layers
+    k = spec.layers[-1].cout
+    assert feat.shape == (2, k, s, s)
+    # transmitted bytes: K * (X/2^n)^2  — the paper's communication model
+    assert feat.shape[1] * feat.shape[2] * feat.shape[3] == k * s * s
+
+
+def test_fullcnn_feature_shape():
+    tmpl = M.enc_template(FULLCNN, 36)
+    flat = M.pack(M.init_params(KEY, tmpl))
+    feat = M.enc_apply(FULLCNN, flat, rand_obs(1, 36))
+    assert feat.shape == (1, 512)
+
+
+def test_miniconv_n_stride2_is_3():
+    assert MINICONV4.n_stride2() == 3
+    assert MINICONV16.n_stride2() == 3
+
+
+def test_encoder_outputs_nonnegative():
+    # all encoders end in ReLU => transmitted features are >= 0, which is
+    # what makes the uint8 wire quantisation well-posed
+    for spec in (MINICONV4, MINICONV16):
+        tmpl = M.enc_template(spec, 36)
+        flat = M.pack(M.init_params(KEY, tmpl))
+        feat = M.enc_apply(spec, flat, rand_obs(1, 36))
+        assert float(feat.min()) >= 0.0
+
+
+def test_enc_param_count_tiny():
+    # MiniConv-4: (9*4*9+4) + (4*4*9+4) + (4*4*9+4) = 328 + 148 + 148
+    assert M.template_size(M.enc_template(MINICONV4, 36)) == 328 + 148 + 148
+
+
+# ---------------------------------------------------------------------------
+# heads / policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["miniconv4", "miniconv16", "fullcnn"])
+def test_ddpg_actor_bounded(arch):
+    task = TASKS["pendulum"]
+    spec = ENCODERS[arch]
+    flat = M.init_policy(KEY, spec, 36, task, "actor")
+    act = M.actor_apply(spec, task, 36, flat, rand_obs(3, 36))
+    assert act.shape == (3, task.action_dim)
+    assert float(jnp.abs(act).max()) <= task.max_action + 1e-6
+
+
+def test_sac_actor_dist_shapes_and_bounds():
+    task = TASKS["hopper"]
+    flat = M.init_policy(KEY, MINICONV4, 36, task, "sac_actor")
+    mu, log_std = M.sac_actor_apply(MINICONV4, task, 36, flat, rand_obs(2, 36))
+    assert mu.shape == (2, 3) and log_std.shape == (2, 3)
+    assert float(log_std.min()) >= M.LOG_STD_MIN
+    assert float(log_std.max()) <= M.LOG_STD_MAX
+    noise = jax.random.normal(KEY, (2, 3))
+    act, logp = M.squash(task, mu, log_std, noise)
+    assert act.shape == (2, 3) and logp.shape == (2,)
+    assert float(jnp.abs(act).max()) <= task.max_action
+
+
+def test_squash_logp_matches_change_of_variables():
+    # for zero noise, act = tanh(mu): logp = N(mu|mu,std) - log(1-tanh^2)
+    task = TASKS["hopper"]
+    mu = jnp.array([[0.3, -0.2, 0.1]])
+    log_std = jnp.zeros((1, 3))
+    act, logp = M.squash(task, mu, log_std, jnp.zeros((1, 3)))
+    base = -0.5 * 3 * math.log(2 * math.pi)
+    corr = float(jnp.log(1 - jnp.tanh(mu) ** 2).sum())
+    np.testing.assert_allclose(float(logp[0]), base - corr, rtol=1e-5)
+
+
+def test_ppo_apply_shapes():
+    task = TASKS["walker"]
+    flat = M.init_policy(KEY, MINICONV16, 36, task, "ppo")
+    mu, log_std, value = M.ppo_apply(MINICONV16, task, 36, flat, rand_obs(4, 36))
+    assert mu.shape == (4, 6) and log_std.shape == (6,) and value.shape == (4,)
+
+
+def test_gaussian_logp_matches_scipy_formula():
+    mu = jnp.array([[0.0, 1.0]])
+    log_std = jnp.array([[0.0, 0.5]])
+    act = jnp.array([[0.5, 0.5]])
+    got = float(M.gaussian_logp(mu, log_std, act)[0])
+    want = sum(
+        -0.5 * ((a - m) / math.exp(s)) ** 2 - s - 0.5 * math.log(2 * math.pi)
+        for a, m, s in [(0.5, 0.0, 0.0), (0.5, 1.0, 0.5)]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_critic_scalar_output():
+    task = TASKS["pendulum"]
+    flat = M.init_policy(KEY, MINICONV4, 36, task, "critic")
+    q = M.critic_apply(
+        MINICONV4, task, 36, flat, rand_obs(5, 36), jnp.zeros((5, 1))
+    )
+    assert q.shape == (5,)
+
+
+def test_split_flat_partition():
+    task = TASKS["pendulum"]
+    et, ht = M.policy_templates(MINICONV4, 84, task, "actor")
+    flat = M.init_policy(KEY, MINICONV4, 84, task, "actor")
+    ef, hf = M.split_flat(flat, et, ht)
+    assert ef.shape[0] == M.template_size(et)
+    assert hf.shape[0] == M.template_size(ht)
+    # device/server partition must be lossless
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate([ef, hf])), np.asarray(flat)
+    )
+
+
+def test_split_policy_equals_full_policy():
+    """enc -> head composition must equal the monolithic actor — the core
+    split-policy invariant (paper §3)."""
+    task = TASKS["pendulum"]
+    x = 36
+    et, ht = M.policy_templates(MINICONV4, x, task, "actor")
+    flat = M.init_policy(KEY, MINICONV4, x, task, "actor")
+    ef, hf = M.split_flat(flat, et, ht)
+    obs = rand_obs(2, x)
+    # monolithic
+    a_full = M.actor_apply(MINICONV4, task, x, flat, obs)
+    # split: device encode, then server head
+    feat = M.enc_apply(MINICONV4, ef, obs)
+    a_split = M.actor_head_apply(task, M.unpack(hf, ht), feat)
+    np.testing.assert_allclose(np.asarray(a_full), np.asarray(a_split), rtol=1e-5, atol=1e-6)

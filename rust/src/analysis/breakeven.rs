@@ -1,0 +1,88 @@
+//! The paper's break-even bandwidth model (§4.2).
+//!
+//! With link bandwidth B (bits/s), input side X, n stride-two layers (so the
+//! feature map is (X/2ⁿ)², uint8), K transmitted channels, and on-device
+//! encode time j, split-policy beats server-only when
+//!
+//! ```text
+//! B < 32·X²·(1 − K/(4·2^{2n})) / j
+//! ```
+//!
+//! Derivation: raw RGBA is 4X² bytes = 32X² bits; features are K(X/2ⁿ)²
+//! bytes = 8K X²/4ⁿ bits; split wins when the transmission-time saving
+//! exceeds the extra on-device compute j.
+
+/// Break-even bandwidth in bits/s. Above this, server-only is faster.
+pub fn breakeven_bandwidth_bps(x: usize, n: u32, k: usize, j: f64) -> f64 {
+    assert!(j > 0.0, "on-device time must be positive");
+    let x2 = (x * x) as f64;
+    32.0 * x2 * (1.0 - k as f64 / (4.0 * 4f64.powi(n as i32))) / j
+}
+
+/// Does split-policy yield lower decision latency at bandwidth `b_bps`?
+pub fn split_wins(b_bps: f64, x: usize, n: u32, k: usize, j: f64) -> bool {
+    b_bps < breakeven_bandwidth_bps(x, n, k, j)
+}
+
+/// Raw-observation bits per frame (uncompressed RGBA, the paper's model).
+pub fn raw_bits(x: usize) -> f64 {
+    32.0 * (x * x) as f64
+}
+
+/// Transmitted-feature bits per frame (uint8 features).
+pub fn feature_bits(x: usize, n: u32, k: usize) -> f64 {
+    let s = (x as f64 / 2f64.powi(n as i32)).ceil();
+    8.0 * k as f64 * s * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_50_4_mbps() {
+        // §4.2: X=400, n=3, j≈0.1s, K=4 -> ≈ 50.4 Mb/s
+        let b = breakeven_bandwidth_bps(400, 3, 4, 0.1);
+        assert!((b / 1e6 - 50.4).abs() < 0.1, "{} Mb/s", b / 1e6);
+    }
+
+    #[test]
+    fn split_wins_below_crossover_only() {
+        assert!(split_wins(10e6, 400, 3, 4, 0.1));
+        assert!(split_wins(25e6, 400, 3, 4, 0.1));
+        assert!(!split_wins(100e6, 400, 3, 4, 0.1));
+    }
+
+    #[test]
+    fn faster_device_raises_breakeven() {
+        let slow = breakeven_bandwidth_bps(400, 3, 4, 0.2);
+        let fast = breakeven_bandwidth_bps(400, 3, 4, 0.05);
+        assert!(fast > slow * 3.9);
+    }
+
+    #[test]
+    fn bigger_features_lower_breakeven() {
+        let k4 = breakeven_bandwidth_bps(400, 3, 4, 0.1);
+        let k16 = breakeven_bandwidth_bps(400, 3, 16, 0.1);
+        assert!(k16 < k4);
+        // K = 4·4^n would mean no compression at all: break-even hits zero
+        let none = breakeven_bandwidth_bps(400, 3, 256, 0.1);
+        assert!(none.abs() < 1e-6);
+    }
+
+    #[test]
+    fn bits_model() {
+        assert_eq!(raw_bits(400), 32.0 * 160_000.0);
+        // X=400, n=3 -> 50x50 features
+        assert_eq!(feature_bits(400, 3, 4), 8.0 * 4.0 * 2500.0);
+        // compression ratio 4X^2 / K(X/8)^2 = 256/K/... = 64 for K=4
+        let ratio = raw_bits(400) / feature_bits(400, 3, 4);
+        assert!((ratio - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_j_rejected() {
+        breakeven_bandwidth_bps(400, 3, 4, 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Decision-latency decomposition (paper Fig. 5): the components of one
+//! decision for the server-only vs split-policy pipelines, over a link
+//! model + device encode time + server compute times.
+
+use crate::net::shaped::LinkModel;
+
+use super::breakeven::{feature_bits, raw_bits};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineKind {
+    ServerOnly,
+    Split,
+}
+
+/// Per-component times (seconds) of one decision.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionBreakdown {
+    pub kind: PipelineKind,
+    /// on-device encode (split only; 0 for server-only)
+    pub device_encode: f64,
+    /// observation/feature upload
+    pub uplink: f64,
+    /// server-side model execution
+    pub server_compute: f64,
+    /// action download
+    pub downlink: f64,
+}
+
+impl DecisionBreakdown {
+    pub fn total(&self) -> f64 {
+        self.device_encode + self.uplink + self.server_compute + self.downlink
+    }
+
+    /// Server-only pipeline: full RGBA frame up, full policy on server.
+    pub fn server_only(
+        link: &LinkModel,
+        x: usize,
+        server_full_compute: f64,
+        action_bytes: usize,
+    ) -> DecisionBreakdown {
+        DecisionBreakdown {
+            kind: PipelineKind::ServerOnly,
+            device_encode: 0.0,
+            uplink: link.transfer_time((raw_bits(x) / 8.0) as usize),
+            server_compute: server_full_compute,
+            downlink: link.transfer_time(action_bytes),
+        }
+    }
+
+    /// Split pipeline: device encodes (time j), uint8 features up, head-only
+    /// compute on server.
+    #[allow(clippy::too_many_arguments)]
+    pub fn split(
+        link: &LinkModel,
+        x: usize,
+        n: u32,
+        k: usize,
+        j: f64,
+        server_head_compute: f64,
+        action_bytes: usize,
+    ) -> DecisionBreakdown {
+        DecisionBreakdown {
+            kind: PipelineKind::Split,
+            device_encode: j,
+            uplink: link.transfer_time((feature_bits(x, n, k) / 8.0) as usize),
+            server_compute: server_head_compute,
+            downlink: link.transfer_time(action_bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link(mbps: f64) -> LinkModel {
+        LinkModel::new(mbps * 1e6, 0.005)
+    }
+
+    #[test]
+    fn total_is_sum() {
+        let b = DecisionBreakdown {
+            kind: PipelineKind::Split,
+            device_encode: 0.1,
+            uplink: 0.02,
+            server_compute: 0.005,
+            downlink: 0.003,
+        };
+        assert!((b.total() - 0.128).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_shape_low_bandwidth_split_wins() {
+        // X=400, n=3, K=4, j=0.1, server full 35ms / head 3ms (GPU server)
+        let l = link(10.0);
+        let so = DecisionBreakdown::server_only(&l, 400, 0.035, 16);
+        let sp = DecisionBreakdown::split(&l, 400, 3, 4, 0.1, 0.003, 16);
+        assert!(sp.total() < so.total());
+        // server-only is dominated by the uplink at 10 Mb/s
+        assert!(so.uplink > 0.8 * so.total());
+        // paper's magnitudes: ~540ms vs ~145ms
+        assert!((0.45..0.65).contains(&so.total()), "{}", so.total());
+        assert!((0.11..0.18).contains(&sp.total()), "{}", sp.total());
+    }
+
+    #[test]
+    fn paper_shape_high_bandwidth_server_only_wins() {
+        let l = link(100.0);
+        let so = DecisionBreakdown::server_only(&l, 400, 0.035, 16);
+        let sp = DecisionBreakdown::split(&l, 400, 3, 4, 0.1, 0.003, 16);
+        assert!(so.total() < sp.total());
+        // split is dominated by on-device compute now
+        assert!(sp.device_encode > 0.6 * sp.total());
+    }
+
+    #[test]
+    fn crossover_near_50mbps() {
+        let diff_at = |mbps: f64| {
+            let l = link(mbps);
+            let so = DecisionBreakdown::server_only(&l, 400, 0.035, 16);
+            let sp = DecisionBreakdown::split(&l, 400, 3, 4, 0.1, 0.003, 16);
+            so.total() - sp.total()
+        };
+        assert!(diff_at(35.0) > 0.0);
+        assert!(diff_at(75.0) < 0.0);
+    }
+}

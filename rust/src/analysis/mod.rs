@@ -1,0 +1,8 @@
+//! Analytic models from the paper's §4.2: the communication/computation
+//! break-even bandwidth and the decision-latency decomposition (Fig. 5).
+
+pub mod breakeven;
+pub mod latency;
+
+pub use breakeven::{breakeven_bandwidth_bps, split_wins};
+pub use latency::{DecisionBreakdown, PipelineKind};

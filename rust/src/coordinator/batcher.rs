@@ -1,0 +1,278 @@
+//! Dynamic batcher: accumulate same-route requests up to a maximum batch
+//! size or a waiting-time budget, whichever comes first — the standard
+//! serving trade-off between batching efficiency and queueing latency.
+//!
+//! The collector is pure logic over an abstract clock so the policy is unit
+//! testable; the server thread feeds it from an mpsc channel.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::router::Route;
+
+/// A queued unit of work, generic in the payload the executor needs.
+#[derive(Debug)]
+pub struct Item<T> {
+    pub route: Route,
+    pub enqueued: Instant,
+    pub work: T,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// execute as soon as this many same-route items are waiting
+    pub max_batch: usize,
+    /// ... or when the oldest item has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(3) }
+    }
+}
+
+/// Per-route FIFO queues + batch-forming policy.
+#[derive(Debug)]
+pub struct BatchCollector<T> {
+    policy: BatchPolicy,
+    queues: [VecDeque<Item<T>>; 2],
+    /// total items dropped due to the depth bound
+    pub dropped: u64,
+    /// per-route admission bound (back-pressure)
+    pub max_depth: usize,
+}
+
+fn slot(route: Route) -> usize {
+    match route {
+        Route::Full => 0,
+        Route::Split => 1,
+    }
+}
+
+impl<T> BatchCollector<T> {
+    pub fn new(policy: BatchPolicy, max_depth: usize) -> Self {
+        BatchCollector {
+            policy,
+            queues: [VecDeque::new(), VecDeque::new()],
+            dropped: 0,
+            max_depth,
+        }
+    }
+
+    /// Enqueue; returns false (and counts a drop) if the route is saturated.
+    pub fn push(&mut self, route: Route, work: T, now: Instant) -> bool {
+        let q = &mut self.queues[slot(route)];
+        if q.len() >= self.max_depth {
+            self.dropped += 1;
+            return false;
+        }
+        q.push_back(Item { route, enqueued: now, work });
+        true
+    }
+
+    pub fn depth(&self, route: Route) -> usize {
+        self.queues[slot(route)].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Would a batch be ready at `now`? Returns the route to serve.
+    /// Ready when a route has >= max_batch items, or its oldest item has
+    /// waited >= max_wait. Ties go to the route with the older head
+    /// (FIFO fairness across routes).
+    pub fn ready(&self, now: Instant) -> Option<Route> {
+        let mut best: Option<(Route, Instant)> = None;
+        for route in [Route::Full, Route::Split] {
+            let q = &self.queues[slot(route)];
+            if let Some(head) = q.front() {
+                let full = q.len() >= self.policy.max_batch;
+                let waited = now.duration_since(head.enqueued) >= self.policy.max_wait;
+                if full || waited {
+                    match best {
+                        Some((_, t)) if t <= head.enqueued => {}
+                        _ => best = Some((route, head.enqueued)),
+                    }
+                }
+            }
+        }
+        best.map(|(r, _)| r)
+    }
+
+    /// If nothing is ready, how long until the oldest item's wait budget
+    /// expires (None if all queues are empty) — the executor's sleep hint.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|head| {
+                self.policy
+                    .max_wait
+                    .saturating_sub(now.duration_since(head.enqueued))
+            })
+            .min()
+    }
+
+    /// Take up to max_batch items from a route's queue.
+    pub fn take(&mut self, route: Route) -> Vec<Item<T>> {
+        let q = &mut self.queues[slot(route)];
+        let n = q.len().min(self.policy.max_batch);
+        q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn batch_fires_on_size() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
+            100,
+        );
+        let now = t0();
+        for i in 0..3 {
+            c.push(Route::Split, i, now);
+            assert_eq!(c.ready(now), None, "fired early at {i}");
+        }
+        c.push(Route::Split, 3, now);
+        assert_eq!(c.ready(now), Some(Route::Split));
+        let batch = c.take(Route::Split);
+        assert_eq!(batch.len(), 4);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn batch_fires_on_wait() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) },
+            100,
+        );
+        let now = t0();
+        c.push(Route::Full, 0, now);
+        assert_eq!(c.ready(now), None);
+        let later = now + Duration::from_millis(6);
+        assert_eq!(c.ready(later), Some(Route::Full));
+    }
+
+    #[test]
+    fn fifo_across_routes_on_tie() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            100,
+        );
+        let now = t0();
+        c.push(Route::Split, 0, now);
+        c.push(Route::Full, 1, now + Duration::from_millis(1));
+        assert_eq!(c.ready(now + Duration::from_millis(2)), Some(Route::Split));
+        c.take(Route::Split);
+        assert_eq!(c.ready(now + Duration::from_millis(2)), Some(Route::Full));
+    }
+
+    #[test]
+    fn backpressure_drops_above_depth() {
+        let mut c = BatchCollector::new(BatchPolicy::default(), 2);
+        let now = t0();
+        assert!(c.push(Route::Split, 0, now));
+        assert!(c.push(Route::Split, 1, now));
+        assert!(!c.push(Route::Split, 2, now));
+        assert_eq!(c.dropped, 1);
+        assert_eq!(c.depth(Route::Split), 2);
+        // other route unaffected
+        assert!(c.push(Route::Full, 3, now));
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(10) },
+            100,
+        );
+        let now = t0();
+        assert_eq!(c.next_deadline(now), None);
+        c.push(Route::Split, 0, now);
+        let d = c.next_deadline(now + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn take_caps_at_max_batch() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 3, max_wait: Duration::ZERO },
+            100,
+        );
+        let now = t0();
+        for i in 0..7 {
+            c.push(Route::Full, i, now);
+        }
+        assert_eq!(c.take(Route::Full).len(), 3);
+        assert_eq!(c.depth(Route::Full), 4);
+    }
+
+    #[test]
+    fn prop_no_item_lost_or_duplicated() {
+        check(100, |g| {
+            let max_batch = g.usize(1, 8);
+            let n = g.usize(1, 50);
+            let mut c: BatchCollector<usize> = BatchCollector::new(
+                BatchPolicy { max_batch, max_wait: Duration::ZERO },
+                1000,
+            );
+            let now = t0();
+            for i in 0..n {
+                let route = if g.bool() { Route::Split } else { Route::Full };
+                c.push(route, i, now);
+            }
+            let mut seen = Vec::new();
+            let later = now + Duration::from_millis(1);
+            while let Some(r) = c.ready(later) {
+                for item in c.take(r) {
+                    seen.push(item.work);
+                }
+            }
+            seen.sort_unstable();
+            prop_assert(
+                seen == (0..n).collect::<Vec<_>>(),
+                format!("lost/dup items: {seen:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_batches_respect_max_and_fifo() {
+        check(100, |g| {
+            let max_batch = g.usize(1, 16);
+            let n = g.usize(1, 60);
+            let mut c: BatchCollector<usize> = BatchCollector::new(
+                BatchPolicy { max_batch, max_wait: Duration::ZERO },
+                1000,
+            );
+            let now = t0();
+            for i in 0..n {
+                c.push(Route::Split, i, now);
+            }
+            let later = now + Duration::from_millis(1);
+            let mut prev = None;
+            while c.ready(later).is_some() {
+                let b = c.take(Route::Split);
+                prop_assert(b.len() <= max_batch, "batch too large")?;
+                for item in &b {
+                    if let Some(p) = prev {
+                        prop_assert(item.work > p, "FIFO violated")?;
+                    }
+                    prev = Some(item.work);
+                }
+            }
+            Ok(())
+        });
+    }
+}

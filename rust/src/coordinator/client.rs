@@ -1,0 +1,259 @@
+//! Client fleet: simulated edge devices driving the coordinator.
+//!
+//! Each client runs the real Pendulum environment with the paper's
+//! render-100 → crop-84 pipeline and, in split mode, executes the real
+//! MiniConv encoder through the **shader interpreter** (the deployment
+//! path: fragment-shader passes, not XLA). The simulated device model
+//! supplies the on-device encode time j; the client sleeps out the
+//! remainder so wall-clock decision latency reflects the modelled device.
+//!
+//! Decision latency (paper §4.3) = observation available → action received.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
+use crate::envs::{CropMode, Env, Pendulum, PixelPipeline};
+use crate::net::framing::{Hello, Msg, Payload, Request};
+use crate::net::shaped::ShapedWriter;
+use crate::net::tcp::{read_msg, write_msg};
+use crate::runtime::Manifest;
+use crate::shader::{pipeline_from_manifest, ShaderPipeline, TextureFormat};
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+use super::router::Route;
+
+#[derive(Clone)]
+pub struct ClientConfig {
+    pub mode: Route,
+    pub arch: String,
+    pub decisions: usize,
+    /// fixed decision rate (Hz); None = closed loop (next decision as soon
+    /// as the previous action arrives)
+    pub rate_hz: Option<f64>,
+    /// upstream bandwidth shaping in bits/s; None = unshaped
+    pub shape_bps: Option<f64>,
+    /// simulated device for on-device encode time; None = no extra delay
+    pub device: Option<DeviceSpec>,
+    pub artifact_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            mode: Route::Split,
+            arch: "miniconv4".into(),
+            decisions: 100,
+            rate_hz: None,
+            shape_bps: None,
+            device: None,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ClientReport {
+    /// decision latencies, seconds
+    pub latencies: Samples,
+    /// on-device encode times (split mode), seconds
+    pub encode_times: Samples,
+    pub decisions: usize,
+    pub errors: usize,
+    /// wall time of the whole run, seconds
+    pub elapsed: f64,
+    /// total request bytes put on the wire
+    pub bytes_sent: u64,
+}
+
+impl ClientReport {
+    pub fn achieved_hz(&self) -> f64 {
+        if self.elapsed > 0.0 {
+            self.decisions as f64 / self.elapsed
+        } else {
+            0.0
+        }
+    }
+}
+
+enum Sender_ {
+    Plain(TcpStream),
+    Shaped(ShapedWriter<TcpStream>),
+}
+
+impl Sender_ {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        match self {
+            Sender_::Plain(s) => write_msg(s, msg),
+            Sender_::Shaped(s) => write_msg(s, msg),
+        }
+    }
+}
+
+/// Run one client against the server at `addr`.
+pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig) -> Result<ClientReport> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut recv = stream.try_clone()?;
+    let mut send = match cfg.shape_bps {
+        Some(bps) => Sender_::Shaped(ShapedWriter::new(stream, bps)),
+        None => Sender_::Plain(stream),
+    };
+
+    // split mode: the real shader-interpreter encoder over manifest params
+    let manifest = Manifest::load(&cfg.artifact_dir)?;
+    let serve_x = manifest.serve_x;
+    let (shader, feat_k, cost): (Option<ShaderPipeline>, usize, Option<FrameCost>) =
+        if cfg.mode == Route::Split {
+            let (serve_meta, _) = manifest
+                .encoders
+                .get(&cfg.arch)
+                .ok_or_else(|| anyhow::anyhow!("unknown arch {}", cfg.arch))?;
+            let pipe = pipeline_from_manifest(
+                &manifest,
+                &cfg.arch,
+                serve_meta,
+                serve_x,
+                &format!("serve_enc_{}", cfg.arch),
+                TextureFormat::Float,
+            )?;
+            let cost = FrameCost::from_plan(&pipe.plan);
+            (Some(pipe), serve_meta.feat_shape[0], Some(cost))
+        } else {
+            (None, 0, None)
+        };
+    let mut device = cfg.device.clone().map(|spec| Device::new(spec, cfg.seed));
+
+    send.send(&Msg::Hello(Hello { client: client_id, split: cfg.mode == Route::Split }))?;
+
+    let mut env = Pendulum::new();
+    let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E37).wrapping_add(client_id as u64));
+    env.reset(&mut rng);
+    let mut pipeline = PixelPipeline::new(100, serve_x, CropMode::Center);
+    pipeline.observe(&env, &mut rng);
+
+    let mut report = ClientReport::default();
+    let t_run = Instant::now();
+    let tick = cfg.rate_hz.map(|hz| Duration::from_secs_f64(1.0 / hz));
+    let mut next_tick = Instant::now();
+
+    for i in 0..cfg.decisions {
+        if let Some(t) = tick {
+            let now = Instant::now();
+            if next_tick > now {
+                std::thread::sleep(next_tick - now);
+            }
+            next_tick += t;
+        }
+
+        // observation is now available: the decision clock starts
+        let t0 = Instant::now();
+        let payload = match (&shader, &mut device) {
+            (Some(pipe), dev) => {
+                // on-device encode (real shader-interpreter execution)
+                let enc_t0 = Instant::now();
+                let feat = pipe.run(&pipeline.obs_chw())?;
+                let real_encode = enc_t0.elapsed().as_secs_f64();
+                // pad out to the simulated device's encode time
+                let sim_j = dev
+                    .as_mut()
+                    .map(|d| d.encode_frame(cost.as_ref().unwrap(), ExecPath::Gpu).duration)
+                    .unwrap_or(real_encode);
+                if sim_j > real_encode {
+                    std::thread::sleep(Duration::from_secs_f64(sim_j - real_encode));
+                }
+                report.encode_times.push(real_encode.max(sim_j));
+                // transmit only the K-channel feature map, quantised to u8
+                let (c, h, w) = (feat_k, feat.h, feat.w);
+                let mut flat = Vec::with_capacity(c * h * w);
+                for ch in 0..c {
+                    for y in 0..h {
+                        for x in 0..w {
+                            flat.push(feat.at(ch, y, x));
+                        }
+                    }
+                }
+                let (scale, q) = crate::net::quantize_features(&flat);
+                Payload::Features { c: c as u16, h: h as u16, w: w as u16, scale, data: q }
+            }
+            (None, _) => Payload::RawRgba { x: serve_x as u16, data: pipeline.rgba_bytes() },
+        };
+        report.bytes_sent += payload.wire_bytes() as u64;
+        send.send(&Msg::Request(Request { client: client_id, id: i as u64, payload }))?;
+
+        // await our action
+        let action = loop {
+            match read_msg(&mut recv)? {
+                Some(Msg::Response(r)) if r.id == i as u64 => break r.action,
+                Some(Msg::Response(_)) => continue, // stale
+                Some(_) => continue,
+                None => anyhow::bail!("server closed connection"),
+            }
+        };
+        if action.is_empty() {
+            // explicit server rejection (back-pressure): count and move on
+            report.errors += 1;
+        } else {
+            report.latencies.push(t0.elapsed().as_secs_f64());
+            report.decisions += 1;
+        }
+
+        // act in the environment and produce the next observation (zero
+        // action on rejection — the env still advances in real time)
+        let a: Vec<f64> = if action.is_empty() {
+            vec![0.0; env.action_dim()]
+        } else {
+            action.iter().map(|&v| v as f64).collect()
+        };
+        let out = env.step(&a);
+        if out.done() {
+            env.reset(&mut rng);
+            pipeline.clear();
+        }
+        pipeline.observe(&env, &mut rng);
+    }
+    report.elapsed = t_run.elapsed().as_secs_f64();
+    if let Sender_::Plain(ref mut s) = send {
+        let _ = s.flush();
+    }
+    Ok(report)
+}
+
+/// Run `n` clients concurrently; returns per-client reports.
+pub fn run_fleet(
+    addr: std::net::SocketAddr,
+    n: usize,
+    cfg: &ClientConfig,
+) -> Result<Vec<ClientReport>> {
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64 * 1000 + 1);
+        let h = std::thread::Builder::new()
+            .name(format!("mc-client-{i}"))
+            .spawn(move || run_client(addr, i as u32, &c))?;
+        handles.push(h);
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| anyhow::anyhow!("client panicked"))?)
+        .collect()
+}
+
+/// Merge per-client latency samples into one distribution (seconds).
+pub fn merged_latencies(reports: &[ClientReport]) -> Samples {
+    let mut all = Samples::new();
+    for r in reports {
+        for &v in r.latencies.values() {
+            all.push(v);
+        }
+    }
+    all
+}

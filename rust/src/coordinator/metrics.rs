@@ -1,0 +1,184 @@
+//! Serving metrics: per-route latency histograms and counters, shared
+//! between the executor thread and reporters via a mutex (updates are
+//! O(1) bucket increments; contention is negligible at our request rates).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::stats::LatencyHist;
+
+use super::router::Route;
+
+#[derive(Debug, Default, Clone)]
+pub struct RouteMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub padded_slots: u64,
+    /// server-side time: dequeue -> response written
+    pub service: LatencyHist,
+    /// queue wait: enqueue -> dequeue
+    pub queue_wait: LatencyHist,
+    /// pure model execution time
+    pub execute: LatencyHist,
+}
+
+impl RouteMetrics {
+    fn new() -> Self {
+        RouteMetrics {
+            service: LatencyHist::new(),
+            queue_wait: LatencyHist::new(),
+            execute: LatencyHist::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_ratio(&self) -> f64 {
+        let total = self.batched_items + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct MetricsInner {
+    pub full: RouteMetrics,
+    pub split: RouteMetrics,
+    pub dropped: u64,
+}
+
+impl MetricsInner {
+    pub fn route(&mut self, r: Route) -> &mut RouteMetrics {
+        match r {
+            Route::Full => &mut self.full,
+            Route::Split => &mut self.split,
+        }
+    }
+
+    pub fn route_ref(&self, r: Route) -> &RouteMetrics {
+        match r {
+            Route::Full => &self.full,
+            Route::Split => &self.split,
+        }
+    }
+}
+
+/// Shared handle.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics(Arc<Mutex<MetricsInner>>);
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics(Arc::new(Mutex::new(MetricsInner {
+            full: RouteMetrics::new(),
+            split: RouteMetrics::new(),
+            dropped: 0,
+        })))
+    }
+
+    pub fn record_batch(
+        &self,
+        route: Route,
+        n_items: usize,
+        padded: usize,
+        queue_waits: &[Duration],
+        execute: Duration,
+        service: &[Duration],
+    ) {
+        let mut m = self.0.lock().unwrap();
+        let rm = m.route(route);
+        rm.requests += n_items as u64;
+        rm.batches += 1;
+        rm.batched_items += n_items as u64;
+        rm.padded_slots += padded as u64;
+        rm.execute.record(execute);
+        for d in queue_waits {
+            rm.queue_wait.record(*d);
+        }
+        for d in service {
+            rm.service.record(*d);
+        }
+    }
+
+    pub fn add_dropped(&self, n: u64) {
+        self.0.lock().unwrap().dropped += n;
+    }
+
+    pub fn snapshot(&self) -> MetricsInner {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_recording_accumulates() {
+        let m = Metrics::new();
+        m.record_batch(
+            Route::Split,
+            3,
+            1,
+            &[Duration::from_millis(1); 3],
+            Duration::from_millis(2),
+            &[Duration::from_millis(5); 3],
+        );
+        m.record_batch(
+            Route::Split,
+            5,
+            3,
+            &[Duration::from_millis(1); 5],
+            Duration::from_millis(2),
+            &[Duration::from_millis(9); 5],
+        );
+        let s = m.snapshot();
+        assert_eq!(s.split.requests, 8);
+        assert_eq!(s.split.batches, 2);
+        assert!((s.split.mean_batch() - 4.0).abs() < 1e-9);
+        assert!((s.split.padding_ratio() - 4.0 / 12.0).abs() < 1e-9);
+        assert_eq!(s.split.service.count(), 8);
+        assert_eq!(s.full.requests, 0);
+    }
+
+    #[test]
+    fn p95_reflects_slow_tail() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            let ms = if i < 95 { 10 } else { 200 };
+            m.record_batch(
+                Route::Full,
+                1,
+                0,
+                &[Duration::from_millis(1)],
+                Duration::from_millis(1),
+                &[Duration::from_millis(ms)],
+            );
+        }
+        let s = m.snapshot();
+        let p95 = s.full.service.quantile_ns(0.95) / 1e6;
+        assert!(p95 > 9.0, "p95={p95}ms");
+        let p99 = s.full.service.quantile_ns(0.99) / 1e6;
+        assert!(p99 > 150.0, "p99={p99}ms");
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m2.add_dropped(3);
+        assert_eq!(m.snapshot().dropped, 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! The split-policy serving coordinator — the paper's systems contribution
+//! realised as an L3 Rust service: request [`router`], dynamic [`batcher`],
+//! per-client [`session`] state, serving [`metrics`], the TCP [`server`],
+//! and a simulated-device [`client`] fleet for load experiments.
+
+pub mod batcher;
+pub mod client;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use batcher::{BatchCollector, BatchPolicy};
+pub use client::{merged_latencies, run_client, run_fleet, ClientConfig, ClientReport};
+pub use metrics::Metrics;
+pub use router::{chunk_batches, pick_batch, Route};
+pub use server::{serve, ServerConfig, ServerHandle};
+pub use session::SessionManager;

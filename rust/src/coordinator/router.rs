@@ -1,0 +1,118 @@
+//! Request routing: map an incoming request to the executable family that
+//! serves it, and pick a batch size from the compiled ladder.
+//!
+//! Two routes exist (paper §4.3/4.4):
+//!   * `Full`  — server-only pipeline: raw RGBA observation in, the whole
+//!     Full-CNN policy runs server-side;
+//!   * `Split` — split-policy pipeline: the device already ran the MiniConv
+//!     encoder; only the head (projection + actor MLP) runs server-side.
+
+use crate::net::framing::Payload;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Route {
+    /// server-only: full policy over raw observations
+    Full,
+    /// split: head over transmitted features
+    Split,
+}
+
+impl Route {
+    pub fn of(payload: &Payload) -> Route {
+        match payload {
+            Payload::RawRgba { .. } => Route::Full,
+            Payload::Features { .. } => Route::Split,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Route::Full => "server-only",
+            Route::Split => "split",
+        }
+    }
+}
+
+/// Pick the smallest ladder entry >= n, or the largest available (callers
+/// then split the batch). Ladder must be sorted ascending.
+pub fn pick_batch(n: usize, ladder: &[usize]) -> usize {
+    assert!(!ladder.is_empty(), "empty batch ladder");
+    for &b in ladder {
+        if b >= n {
+            return b;
+        }
+    }
+    *ladder.last().unwrap()
+}
+
+/// Split `n` items into chunks shaped by the ladder (greedy largest-first),
+/// e.g. n=37, ladder `[1,2,4,8,16,32]` -> `[32, 4, 1]`.
+pub fn chunk_batches(mut n: usize, ladder: &[usize]) -> Vec<usize> {
+    assert!(!ladder.is_empty());
+    let mut out = Vec::new();
+    while n > 0 {
+        let max = *ladder.last().unwrap();
+        if n >= max {
+            out.push(max);
+            n -= max;
+        } else {
+            let b = pick_batch(n, ladder);
+            out.push(b);
+            n = n.saturating_sub(b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LADDER: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+    #[test]
+    fn route_of_payload() {
+        assert_eq!(
+            Route::of(&Payload::RawRgba { x: 84, data: vec![] }),
+            Route::Full
+        );
+        assert_eq!(
+            Route::of(&Payload::Features { c: 4, h: 11, w: 11, scale: 1.0, data: vec![] }),
+            Route::Split
+        );
+        assert_eq!(Route::Full.name(), "server-only");
+    }
+
+    #[test]
+    fn pick_smallest_covering() {
+        assert_eq!(pick_batch(1, LADDER), 1);
+        assert_eq!(pick_batch(3, LADDER), 4);
+        assert_eq!(pick_batch(8, LADDER), 8);
+        assert_eq!(pick_batch(9, LADDER), 16);
+        assert_eq!(pick_batch(33, LADDER), 32); // capped at max
+    }
+
+    #[test]
+    fn chunking_covers_all_items() {
+        for n in 1..=100 {
+            let chunks = chunk_batches(n, LADDER);
+            let total: usize = chunks.iter().sum();
+            assert!(total >= n, "n={n} chunks={chunks:?}");
+            // padding waste is bounded by the ladder geometry (< 2x)
+            assert!(total < 2 * n.max(1), "wasteful: n={n} chunks={chunks:?}");
+        }
+    }
+
+    #[test]
+    fn chunking_prefers_large_batches() {
+        assert_eq!(chunk_batches(37, LADDER), vec![32, 8]);
+        assert_eq!(chunk_batches(64, LADDER), vec![32, 32]);
+        assert_eq!(chunk_batches(5, LADDER), vec![8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch ladder")]
+    fn empty_ladder_panics() {
+        pick_batch(1, &[]);
+    }
+}

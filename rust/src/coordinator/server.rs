@@ -1,0 +1,366 @@
+//! The serving coordinator: a threaded TCP server that routes split-policy
+//! and server-only requests through a dynamic batcher into the PJRT
+//! executables.
+//!
+//! Thread layout (the xla Runtime is thread-confined, DESIGN.md §1):
+//!   * accept thread — owns the listener, spawns one reader per connection;
+//!   * reader threads — decode frames, enqueue work (with a shared writer
+//!     handle for the reply);
+//!   * executor thread — owns the Runtime, the BatchCollector, the
+//!     SessionManager, and device-resident parameters; forms batches, runs
+//!     the right executable from the batch ladder, writes responses.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use log::{debug, warn};
+
+use crate::net::framing::{Msg, Payload, Response};
+use crate::net::tcp::{read_msg, write_msg};
+use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
+
+use super::batcher::{BatchCollector, BatchPolicy};
+use super::metrics::Metrics;
+use super::router::{pick_batch, Route};
+use super::session::SessionManager;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// bind address; use port 0 for an ephemeral port
+    pub addr: String,
+    /// split-route encoder architecture (miniconv4 | miniconv16)
+    pub arch: String,
+    pub policy: BatchPolicy,
+    /// per-route queue bound (back-pressure)
+    pub max_depth: usize,
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            arch: "miniconv4".into(),
+            policy: BatchPolicy::default(),
+            max_depth: 512,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+        }
+    }
+}
+
+/// A unit of work as it moves from reader to executor.
+struct Work {
+    client: u32,
+    id: u64,
+    payload: Payload,
+    received: Instant,
+    reply: Arc<Mutex<TcpStream>>,
+}
+
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    pub metrics: Metrics,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the coordinator; returns once the socket is bound and the executor
+/// has compiled its batch-1 executables (so first-request latency is sane).
+pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let metrics = Metrics::new();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = std::sync::mpsc::channel::<Work>();
+
+    // executor thread (owns the PJRT runtime)
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+    let exec_metrics = metrics.clone();
+    let exec_shutdown = shutdown.clone();
+    let exec_cfg = cfg.clone();
+    let executor = std::thread::Builder::new()
+        .name("mc-executor".into())
+        .spawn(move || executor_main(exec_cfg, rx, exec_metrics, exec_shutdown, ready_tx))
+        .context("spawn executor")?;
+    ready_rx
+        .recv()
+        .context("executor died during startup")??;
+
+    // accept thread
+    let acc_shutdown = shutdown.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("mc-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if acc_shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let tx = tx.clone();
+                        let shutdown = acc_shutdown.clone();
+                        std::thread::Builder::new()
+                            .name("mc-reader".into())
+                            .spawn(move || reader_main(s, tx, shutdown))
+                            .ok();
+                    }
+                    Err(e) => {
+                        warn!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        })
+        .context("spawn acceptor")?;
+
+    Ok(ServerHandle { addr, metrics, shutdown, threads: vec![executor, acceptor] })
+}
+
+fn reader_main(stream: TcpStream, tx: Sender<Work>, shutdown: Arc<AtomicBool>) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            warn!("clone stream: {e}");
+            return;
+        }
+    };
+    let mut reader = stream;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match read_msg(&mut reader) {
+            Ok(Some(Msg::Request(r))) => {
+                let work = Work {
+                    client: r.client,
+                    id: r.id,
+                    payload: r.payload,
+                    received: Instant::now(),
+                    reply: writer.clone(),
+                };
+                if tx.send(work).is_err() {
+                    break; // executor gone
+                }
+            }
+            Ok(Some(Msg::Hello(_))) => {} // connection preamble; nothing to do
+            Ok(Some(Msg::Response(_))) => {
+                warn!("client sent a response; ignoring");
+            }
+            Ok(None) => break, // clean EOF
+            Err(e) => {
+                debug!("reader: {e}");
+                break;
+            }
+        }
+    }
+}
+
+/// Everything the executor needs for one route.
+struct RouteExec {
+    /// batch size -> compiled executable
+    exes: HashMap<usize, Rc<Exe>>,
+    ladder: Vec<usize>,
+    params: DeviceTensor,
+    prefix: String,
+}
+
+fn executor_main(
+    cfg: ServerConfig,
+    rx: Receiver<Work>,
+    metrics: Metrics,
+    shutdown: Arc<AtomicBool>,
+    ready: Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(Runtime, RouteExec, RouteExec)> {
+        let rt = Runtime::new(&cfg.artifact_dir)?;
+        let serve_x = rt.manifest.serve_x;
+        let head_prefix = format!("head_{}_x{serve_x}", cfg.arch);
+        let full_prefix = format!("full_fullcnn_x{serve_x}");
+        let head_params = Value::f32(
+            &[rt.manifest.load_params(&format!("serve_head_{}", cfg.arch))?.len()],
+            rt.manifest.load_params(&format!("serve_head_{}", cfg.arch))?,
+        );
+        let full_params = Value::f32(
+            &[rt.manifest.load_params("serve_full_fullcnn")?.len()],
+            rt.manifest.load_params("serve_full_fullcnn")?,
+        );
+        let mut split = RouteExec {
+            exes: HashMap::new(),
+            ladder: rt.manifest.batch_ladder(&head_prefix),
+            params: rt.to_device(&head_params)?,
+            prefix: head_prefix,
+        };
+        let mut full = RouteExec {
+            exes: HashMap::new(),
+            ladder: rt.manifest.batch_ladder(&full_prefix),
+            params: rt.to_device(&full_params)?,
+            prefix: full_prefix,
+        };
+        anyhow::ensure!(!split.ladder.is_empty(), "no head artifacts for {}", cfg.arch);
+        anyhow::ensure!(!full.ladder.is_empty(), "no full artifacts");
+        // precompile batch-1 so the first request isn't a compile stall
+        let b1s = rt.load(&format!("{}_b1", split.prefix))?;
+        let b1f = rt.load(&format!("{}_b1", full.prefix))?;
+        split.exes.insert(1, b1s);
+        full.exes.insert(1, b1f);
+        Ok((rt, split, full))
+    })();
+
+    let (rt, mut split, mut full) = match setup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut collector: BatchCollector<Work> = BatchCollector::new(cfg.policy, cfg.max_depth);
+    let mut sessions = SessionManager::new();
+    let mut dropped_reported = 0u64;
+
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // pull work: block briefly when idle, otherwise honour the batch
+        // deadline
+        let timeout = collector
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(w) => {
+                let now = Instant::now();
+                let admit = |w: Work, collector: &mut BatchCollector<Work>| {
+                    let route = Route::of(&w.payload);
+                    let (client, id, reply) = (w.client, w.id, w.reply.clone());
+                    if !collector.push(route, w, now) {
+                        // back-pressure: reject explicitly (empty action)
+                        // so the client never blocks on a dropped request
+                        let mut wtr = reply.lock().unwrap();
+                        let _ = write_msg(
+                            &mut *wtr,
+                            &Msg::Response(Response { client, id, action: vec![] }),
+                        );
+                    }
+                };
+                admit(w, &mut collector);
+                // opportunistically drain whatever else is queued
+                while let Ok(w) = rx.try_recv() {
+                    admit(w, &mut collector);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if collector.dropped > dropped_reported {
+            metrics.add_dropped(collector.dropped - dropped_reported);
+            dropped_reported = collector.dropped;
+        }
+
+        while let Some(route) = collector.ready(Instant::now()) {
+            let items = collector.take(route);
+            let exec = match route {
+                Route::Split => &mut split,
+                Route::Full => &mut full,
+            };
+            if let Err(e) = run_batch(&rt, exec, route, items, &mut sessions, &metrics) {
+                warn!("batch failed: {e:#}");
+            }
+        }
+    }
+}
+
+fn run_batch(
+    rt: &Runtime,
+    exec: &mut RouteExec,
+    route: Route,
+    items: Vec<super::batcher::Item<Work>>,
+    sessions: &mut SessionManager,
+    metrics: &Metrics,
+) -> Result<()> {
+    let n = items.len();
+    let b = pick_batch(n, &exec.ladder);
+    let dequeue = Instant::now();
+    let queue_waits: Vec<Duration> =
+        items.iter().map(|i| dequeue.duration_since(i.work.received)).collect();
+
+    // compile-on-first-use per ladder entry
+    if !exec.exes.contains_key(&b) {
+        let exe = rt.load(&format!("{}_b{b}", exec.prefix))?;
+        exec.exes.insert(b, exe);
+    }
+    let exe = exec.exes[&b].clone();
+
+    // assemble the batched input tensor
+    let in_spec = &exe.spec.inputs[1];
+    let per_item: usize = in_spec.shape[1..].iter().product();
+    let mut data = vec![0.0f32; in_spec.elems()];
+    for (i, item) in items.iter().enumerate() {
+        let dst = &mut data[i * per_item..(i + 1) * per_item];
+        match &item.work.payload {
+            Payload::RawRgba { x, data: rgba } => {
+                let obs = sessions.ingest_rgba(item.work.client, *x as usize, rgba)?;
+                anyhow::ensure!(obs.len() == per_item, "obs len {} != {per_item}", obs.len());
+                dst.copy_from_slice(&obs);
+            }
+            Payload::Features { scale, data: q, .. } => {
+                anyhow::ensure!(q.len() == per_item, "feat len {} != {per_item}", q.len());
+                for (o, &byte) in dst.iter_mut().zip(q.iter()) {
+                    *o = byte as f32 / 255.0 * scale;
+                }
+            }
+        }
+    }
+
+    // execute with device-resident params (host batch staged per call)
+    let t_exec = Instant::now();
+    let batch_val = Value::f32(&in_spec.shape, data);
+    let batch_dev = rt.to_device(&batch_val)?;
+    let out = exe.run_device(&[&exec.params, &batch_dev])?;
+    let exec_time = t_exec.elapsed();
+
+    let actions = out[0].as_f32()?;
+    let adim = exe.spec.outputs[0].shape[1];
+
+    // record metrics BEFORE writing responses: a client that just received
+    // its action must observe its request in the metrics snapshot
+    let services: Vec<Duration> = items.iter().map(|i| i.work.received.elapsed()).collect();
+    metrics.record_batch(route, n, b - n, &queue_waits, exec_time, &services);
+
+    // respond
+    for (i, item) in items.iter().enumerate() {
+        let resp = Msg::Response(Response {
+            client: item.work.client,
+            id: item.work.id,
+            action: actions[i * adim..(i + 1) * adim].to_vec(),
+        });
+        let mut w = item.work.reply.lock().unwrap();
+        if let Err(e) = write_msg(&mut *w, &resp) {
+            debug!("reply to client {}: {e}", item.work.client);
+        }
+        let _ = w.flush();
+    }
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! Per-client server-side session state.
+//!
+//! The server-only pipeline receives one RGBA frame per decision, but the
+//! policy consumes a 3-frame stack; the session manager keeps each client's
+//! frame history and materialises the 9-channel observation (repeating the
+//! first frame after connect, matching the training-time FrameStack reset
+//! semantics).
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+/// One client's stacking state: up to 3 most-recent frames as normalised
+/// 3-channel planes.
+#[derive(Debug, Default)]
+struct ClientState {
+    /// each entry: 3*x*x floats (CHW)
+    frames: Vec<Vec<f32>>,
+    x: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct SessionManager {
+    clients: HashMap<u32, ClientState>,
+}
+
+impl SessionManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn disconnect(&mut self, client: u32) {
+        self.clients.remove(&client);
+    }
+
+    /// Ingest an RGBA frame (4·x² bytes) and return the stacked 9×x×x
+    /// observation (oldest→newest).
+    pub fn ingest_rgba(&mut self, client: u32, x: usize, rgba: &[u8]) -> Result<Vec<f32>> {
+        ensure!(rgba.len() == 4 * x * x, "rgba size {} != {}", rgba.len(), 4 * x * x);
+        let st = self.clients.entry(client).or_default();
+        if st.x != x {
+            // resolution change (or first frame): reset the stack
+            st.frames.clear();
+            st.x = x;
+        }
+        // RGBA HWC u8 -> RGB CHW f32/255 (alpha dropped)
+        let mut plane = vec![0.0f32; 3 * x * x];
+        for y in 0..x {
+            for xx in 0..x {
+                let i = (y * x + xx) * 4;
+                for c in 0..3 {
+                    plane[c * x * x + y * x + xx] = rgba[i + c] as f32 / 255.0;
+                }
+            }
+        }
+        if st.frames.is_empty() {
+            st.frames = vec![plane.clone(), plane.clone(), plane];
+        } else {
+            st.frames.push(plane);
+            if st.frames.len() > 3 {
+                st.frames.remove(0);
+            }
+        }
+        let mut obs = Vec::with_capacity(9 * x * x);
+        for f in &st.frames {
+            obs.extend_from_slice(f);
+        }
+        Ok(obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(x: usize, v: u8) -> Vec<u8> {
+        let mut f = vec![v; 4 * x * x];
+        // opaque alpha
+        for a in f.iter_mut().skip(3).step_by(4) {
+            *a = 255;
+        }
+        f
+    }
+
+    #[test]
+    fn first_frame_repeats_three_times() {
+        let mut s = SessionManager::new();
+        let obs = s.ingest_rgba(1, 4, &frame(4, 100)).unwrap();
+        assert_eq!(obs.len(), 9 * 16);
+        let n = 3 * 16;
+        assert_eq!(&obs[0..n], &obs[n..2 * n]);
+        assert_eq!(&obs[n..2 * n], &obs[2 * n..3 * n]);
+        assert!((obs[0] - 100.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stack_slides() {
+        let mut s = SessionManager::new();
+        s.ingest_rgba(1, 4, &frame(4, 10)).unwrap();
+        s.ingest_rgba(1, 4, &frame(4, 20)).unwrap();
+        let obs = s.ingest_rgba(1, 4, &frame(4, 30)).unwrap();
+        let n = 3 * 16;
+        assert!((obs[0] - 10.0 / 255.0).abs() < 1e-6); // oldest first
+        assert!((obs[n] - 20.0 / 255.0).abs() < 1e-6);
+        assert!((obs[2 * n] - 30.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clients_are_isolated() {
+        let mut s = SessionManager::new();
+        s.ingest_rgba(1, 4, &frame(4, 10)).unwrap();
+        let obs2 = s.ingest_rgba(2, 4, &frame(4, 99)).unwrap();
+        assert!((obs2[0] - 99.0 / 255.0).abs() < 1e-6);
+        assert_eq!(s.n_clients(), 2);
+        s.disconnect(1);
+        assert_eq!(s.n_clients(), 1);
+    }
+
+    #[test]
+    fn alpha_is_dropped() {
+        let mut s = SessionManager::new();
+        let mut f = frame(2, 0);
+        f[3] = 77; // alpha byte should not appear anywhere
+        let obs = s.ingest_rgba(1, 2, &f).unwrap();
+        assert!(obs.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let mut s = SessionManager::new();
+        assert!(s.ingest_rgba(1, 4, &[0; 10]).is_err());
+    }
+
+    #[test]
+    fn resolution_change_resets_stack() {
+        let mut s = SessionManager::new();
+        s.ingest_rgba(1, 4, &frame(4, 10)).unwrap();
+        let obs = s.ingest_rgba(1, 2, &frame(2, 50)).unwrap();
+        assert_eq!(obs.len(), 9 * 4);
+        let n = 3 * 4;
+        assert_eq!(&obs[0..n], &obs[n..2 * n]); // fresh stack
+    }
+}

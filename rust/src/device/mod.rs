@@ -1,0 +1,12 @@
+//! Simulated edge devices (Jetson Nano, Pi 4B, Pi Zero 2 W): per-frame
+//! execution model over the shader plan, thermal RC dynamics, DVFS
+//! throttling, power caps, and RAM accounting. Substitutes for the paper's
+//! physical testbed (DESIGN.md §2); calibration anchors in [`presets`].
+
+pub mod model;
+pub mod presets;
+pub mod thermal;
+
+pub use model::{Device, DeviceSpec, ExecPath, FrameCost, FrameStats};
+pub use presets::{all as all_devices, by_name, jetson_nano, pi_4b, pi_zero_2w};
+pub use thermal::ThermalModel;

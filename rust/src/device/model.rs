@@ -1,0 +1,339 @@
+//! Edge-device execution model: per-frame inference time, power, thermal
+//! state, and RAM, for the GPU (OpenGL shader) and CPU (PyTorch) paths.
+//!
+//! Substitution note (DESIGN.md §2): this model stands in for the physical
+//! Jetson Nano / Pi 4B / Pi Zero 2 W testbed. It is calibrated so the
+//! paper's *shape* claims hold: the Pi Zero 2 W crosses 0.2 s/frame (5 fps)
+//! near X=500; the Jetson is far faster across the range but throttles
+//! under sustained load, with the 5 W cap lowering the plateau; the CPU
+//! path is slower and jitterier than GL on the Pi Zero.
+//!
+//! The GPU cost driver is the shader plan itself: time ≈ upload +
+//! Σ_passes (overhead + pixels·samples / sample_rate) — i.e. exactly the
+//! quantity the pass planner computes, so planner improvements show up in
+//! the simulated devices.
+
+use crate::shader::PassPlan;
+use crate::util::rng::Rng;
+
+use super::thermal::ThermalModel;
+
+/// Which execution path runs the encoder on-device (paper Q7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    /// OpenGL fragment shaders
+    Gpu,
+    /// CPU PyTorch-style inference
+    Cpu,
+}
+
+/// Static description of a device model.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// GL texture-sample throughput at full clock, samples/s
+    pub gpu_samples_per_sec: f64,
+    /// fixed cost per shader pass (draw call, FBO bind), s
+    pub pass_overhead: f64,
+    /// host->GPU upload bandwidth, bytes/s
+    pub upload_bytes_per_sec: f64,
+    /// fixed per-frame cost (readback, sync), s
+    pub frame_overhead: f64,
+    /// effective CPU conv throughput (PyTorch path), MAC/s
+    pub cpu_macs_per_sec: f64,
+    /// relative jitter of the CPU path (python allocator, GC, scheduling)
+    pub cpu_jitter: f64,
+    /// relative jitter of the GL path
+    pub gpu_jitter: f64,
+    /// clock multiplier when thermally throttled
+    pub throttle_frac: f64,
+    /// idle power, W
+    pub idle_watts: f64,
+    /// peak dynamic power at full utilisation, W
+    pub dyn_watts: f64,
+    /// optional firmware power cap, W (Jetson 5W mode)
+    pub power_cap: Option<f64>,
+    pub thermal: ThermalModel,
+    /// total RAM, MB
+    pub ram_total_mb: f64,
+    /// OS + runtime baseline, MB
+    pub ram_baseline_mb: f64,
+    /// extra RSS of the CPU-path framework (PyTorch), MB
+    pub cpu_framework_mb: f64,
+}
+
+/// Workload cost of one frame, derived from the shader plan.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameCost {
+    pub samples: u64,
+    pub macs: u64,
+    pub upload_bytes: u64,
+    pub n_passes: usize,
+    pub texture_bytes: u64,
+}
+
+impl FrameCost {
+    /// Cost of executing `plan` on one X·X RGBA frame.
+    pub fn from_plan(plan: &PassPlan) -> FrameCost {
+        let samples = plan.total_samples();
+        FrameCost {
+            samples,
+            // one texture sample feeds a mat4·vec4 = 16 MACs
+            macs: samples * 16,
+            upload_bytes: (plan.input_x * plan.input_x * 4) as u64,
+            n_passes: plan.passes.len(),
+            texture_bytes: plan.bytes_written(),
+        }
+    }
+}
+
+/// Telemetry for one executed frame.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameStats {
+    /// wall-clock duration of this frame, s
+    pub duration: f64,
+    /// die temperature at frame end, °C
+    pub temp: f64,
+    /// average power over the frame, W
+    pub watts: f64,
+    /// RSS in MB
+    pub ram_mb: f64,
+    /// effective clock fraction applied (1.0 = full)
+    pub clock_frac: f64,
+    /// simulated time at frame end, s
+    pub t_end: f64,
+}
+
+/// A live device: spec + mutable thermal/clock state + virtual clock.
+pub struct Device {
+    pub spec: DeviceSpec,
+    rng: Rng,
+    now: f64,
+}
+
+impl Device {
+    pub fn new(spec: DeviceSpec, seed: u64) -> Device {
+        Device { spec, rng: Rng::new(seed), now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn temp(&self) -> f64 {
+        self.spec.thermal.temp()
+    }
+
+    pub fn reset(&mut self) {
+        self.spec.thermal.reset();
+        self.now = 0.0;
+    }
+
+    /// The governor's clock fraction given thermal state and power cap.
+    fn clock_frac(&self) -> f64 {
+        let mut f: f64 = 1.0;
+        if self.spec.thermal.throttled() {
+            f = f.min(self.spec.throttle_frac);
+        }
+        if let Some(cap) = self.spec.power_cap {
+            // dynamic power ~ frac^2 (v·f scaling): fit under the cap
+            let budget = (cap - self.spec.idle_watts).max(0.05);
+            let frac = (budget / self.spec.dyn_watts).sqrt().min(1.0);
+            f = f.min(frac);
+        }
+        f
+    }
+
+    /// Execute one encoder frame; advances device time and thermal state.
+    pub fn encode_frame(&mut self, cost: &FrameCost, path: ExecPath) -> FrameStats {
+        let clock = self.clock_frac();
+        let (mut duration, util, jitter, ram) = match path {
+            ExecPath::Gpu => {
+                let compute = cost.samples as f64 / (self.spec.gpu_samples_per_sec * clock);
+                let upload = cost.upload_bytes as f64 / self.spec.upload_bytes_per_sec;
+                let overhead =
+                    self.spec.frame_overhead + cost.n_passes as f64 * self.spec.pass_overhead;
+                let ram = self.spec.ram_baseline_mb
+                    + (cost.texture_bytes + cost.upload_bytes) as f64 / 1e6;
+                (compute + upload + overhead, 0.95, self.spec.gpu_jitter, ram)
+            }
+            ExecPath::Cpu => {
+                let compute = cost.macs as f64 / (self.spec.cpu_macs_per_sec * clock);
+                let ram = self.spec.ram_baseline_mb
+                    + self.spec.cpu_framework_mb
+                    + 2.0 * (cost.upload_bytes as f64) / 1e6;
+                (compute + self.spec.frame_overhead, 1.0, self.spec.cpu_jitter, ram)
+            }
+        };
+        // multiplicative jitter + occasional scheduling spike (CPU path)
+        let mut noise = 1.0 + jitter * self.rng.normal();
+        if path == ExecPath::Cpu && self.rng.uniform() < 0.02 {
+            noise += 0.6 * self.rng.uniform(); // GC / scheduler spike
+        }
+        duration *= noise.max(0.5);
+
+        // power: idle + dynamic·util·clock²
+        let watts = self.spec.idle_watts + self.spec.dyn_watts * util * clock * clock;
+        self.spec.thermal.step(watts, duration);
+        self.now += duration;
+
+        FrameStats {
+            duration,
+            temp: self.spec.thermal.temp(),
+            watts,
+            ram_mb: ram,
+            clock_frac: clock,
+            t_end: self.now,
+        }
+    }
+
+    /// Let the device idle (cool) for `dt` seconds.
+    pub fn idle(&mut self, dt: f64) {
+        self.spec.thermal.step(self.spec.idle_watts, dt);
+        self.now += dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shader::ir::{EncoderIr, Op};
+    use crate::shader::plan;
+
+    fn mini_ir() -> EncoderIr {
+        EncoderIr {
+            name: "m".into(),
+            input_channels: 9,
+            ops: (0..3)
+                .flat_map(|_| {
+                    vec![Op::Conv { cout: 4, k: 3, stride: 2, same: true }, Op::Relu]
+                })
+                .collect(),
+        }
+    }
+
+    fn toy_spec() -> DeviceSpec {
+        DeviceSpec {
+            name: "toy",
+            gpu_samples_per_sec: 10e6,
+            pass_overhead: 1e-4,
+            upload_bytes_per_sec: 100e6,
+            frame_overhead: 1e-3,
+            cpu_macs_per_sec: 50e6,
+            cpu_jitter: 0.08,
+            gpu_jitter: 0.02,
+            throttle_frac: 0.5,
+            idle_watts: 0.4,
+            dyn_watts: 2.0,
+            power_cap: None,
+            thermal: ThermalModel::new(25.0, 12.0, 60.0, 75.0, 65.0),
+            ram_total_mb: 512.0,
+            ram_baseline_mb: 80.0,
+            cpu_framework_mb: 180.0,
+        }
+    }
+
+    #[test]
+    fn frame_cost_from_plan() {
+        let p = plan(&mini_ir(), 84).unwrap();
+        let c = FrameCost::from_plan(&p);
+        assert_eq!(c.samples, p.total_samples());
+        assert_eq!(c.macs, c.samples * 16);
+        assert_eq!(c.upload_bytes, 84 * 84 * 4);
+        assert_eq!(c.n_passes, 3);
+    }
+
+    #[test]
+    fn gpu_time_scales_with_input_size() {
+        let mut d = Device::new(toy_spec(), 1);
+        let c100 = FrameCost::from_plan(&plan(&mini_ir(), 100).unwrap());
+        let c400 = FrameCost::from_plan(&plan(&mini_ir(), 400).unwrap());
+        let mut t100 = 0.0;
+        let mut t400 = 0.0;
+        for _ in 0..50 {
+            t100 += d.encode_frame(&c100, ExecPath::Gpu).duration;
+            t400 += d.encode_frame(&c400, ExecPath::Gpu).duration;
+        }
+        // 16x pixels => roughly an order of magnitude slower
+        assert!(t400 / t100 > 6.0, "ratio {}", t400 / t100);
+    }
+
+    #[test]
+    fn cpu_path_slower_and_jitterier_than_gpu() {
+        let mut d = Device::new(toy_spec(), 2);
+        let c = FrameCost::from_plan(&plan(&mini_ir(), 400).unwrap());
+        let mut gpu = crate::util::stats::Running::new();
+        let mut cpu = crate::util::stats::Running::new();
+        for _ in 0..300 {
+            gpu.push(d.encode_frame(&c, ExecPath::Gpu).duration);
+            cpu.push(d.encode_frame(&c, ExecPath::Cpu).duration);
+        }
+        assert!(cpu.mean() > 1.5 * gpu.mean(), "cpu {} vs gpu {}", cpu.mean(), gpu.mean());
+        assert!(
+            cpu.std() / cpu.mean() > gpu.std() / gpu.mean(),
+            "cpu cv {} vs gpu cv {}",
+            cpu.std() / cpu.mean(),
+            gpu.std() / gpu.mean()
+        );
+        // CPU path carries the framework RSS
+        let ram_cpu = d.encode_frame(&c, ExecPath::Cpu).ram_mb;
+        let ram_gpu = d.encode_frame(&c, ExecPath::Gpu).ram_mb;
+        assert!(ram_cpu > ram_gpu + 100.0);
+    }
+
+    #[test]
+    fn sustained_load_throttles_and_slows() {
+        let mut spec = toy_spec();
+        spec.dyn_watts = 6.0; // hot part
+        let mut d = Device::new(spec, 3);
+        let c = FrameCost::from_plan(&plan(&mini_ir(), 800).unwrap());
+        let first = d.encode_frame(&c, ExecPath::Gpu);
+        let mut last = first;
+        for _ in 0..4000 {
+            last = d.encode_frame(&c, ExecPath::Gpu);
+            if last.clock_frac < 1.0 {
+                break;
+            }
+        }
+        assert!(last.clock_frac < 1.0, "never throttled (T={})", d.temp());
+        assert!(last.duration > 1.5 * first.duration);
+    }
+
+    #[test]
+    fn power_cap_limits_clock_and_power() {
+        let mut spec = toy_spec();
+        spec.power_cap = Some(1.4); // 0.4 idle + 1.0 budget of 2.0 => frac ~0.707
+        let mut d = Device::new(spec, 4);
+        let c = FrameCost::from_plan(&plan(&mini_ir(), 400).unwrap());
+        let s = d.encode_frame(&c, ExecPath::Gpu);
+        assert!((s.clock_frac - 0.7071).abs() < 0.01, "{}", s.clock_frac);
+        assert!(s.watts <= 1.45);
+    }
+
+    #[test]
+    fn idle_cools() {
+        let mut spec = toy_spec();
+        spec.dyn_watts = 6.0;
+        let mut d = Device::new(spec, 5);
+        let c = FrameCost::from_plan(&plan(&mini_ir(), 800).unwrap());
+        for _ in 0..500 {
+            d.encode_frame(&c, ExecPath::Gpu);
+        }
+        let hot = d.temp();
+        d.idle(600.0);
+        assert!(d.temp() < hot - 10.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = FrameCost::from_plan(&plan(&mini_ir(), 200).unwrap());
+        let mut a = Device::new(toy_spec(), 7);
+        let mut b = Device::new(toy_spec(), 7);
+        for _ in 0..20 {
+            assert_eq!(
+                a.encode_frame(&c, ExecPath::Gpu).duration,
+                b.encode_frame(&c, ExecPath::Gpu).duration
+            );
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Calibrated device models for the paper's three-board testbed.
+//!
+//! Calibration targets (the paper's quantitative anchors, §4.2):
+//!   * Pi Zero 2 W, MiniConv-4 @ X=400 on GL: j ≈ 0.1 s/frame, giving the
+//!     paper's ≈50.4 Mb/s break-even bandwidth;
+//!   * Pi Zero 2 W needs X ≲ 500 for ~5 fps;
+//!   * Jetson Nano is substantially faster across the range (Fig. 2c) but
+//!     shows a marked per-frame time increase after an initial period of
+//!     sustained 3000² inference; the 5 W power mode changes that behaviour
+//!     (slower from the start, thermally stable) — Fig. 3a / 4b;
+//!   * CPU (PyTorch) execution on the Pi Zero is slower and less stable
+//!     than GL (Fig. 3b), and costs the framework's RSS (512 MB budget).
+
+use super::model::DeviceSpec;
+use super::thermal::ThermalModel;
+
+/// Raspberry Pi Zero 2 W (quad-A53, VideoCore IV GL ES).
+pub fn pi_zero_2w() -> DeviceSpec {
+    DeviceSpec {
+        name: "pi-zero-2w",
+        gpu_samples_per_sec: 12.0e6,
+        pass_overhead: 0.3e-3,
+        upload_bytes_per_sec: 250e6,
+        frame_overhead: 1.5e-3,
+        cpu_macs_per_sec: 80e6,
+        cpu_jitter: 0.10,
+        gpu_jitter: 0.025,
+        throttle_frac: 0.6,
+        idle_watts: 0.6,
+        dyn_watts: 1.6,
+        power_cap: None,
+        thermal: ThermalModel::new(25.0, 18.0, 120.0, 80.0, 70.0),
+        ram_total_mb: 512.0,
+        ram_baseline_mb: 118.0,
+        cpu_framework_mb: 185.0,
+    }
+}
+
+/// Raspberry Pi 4B (quad-A72, VideoCore VI).
+pub fn pi_4b() -> DeviceSpec {
+    DeviceSpec {
+        name: "pi-4b",
+        gpu_samples_per_sec: 55.0e6,
+        pass_overhead: 0.2e-3,
+        upload_bytes_per_sec: 800e6,
+        frame_overhead: 1.0e-3,
+        cpu_macs_per_sec: 450e6,
+        cpu_jitter: 0.07,
+        gpu_jitter: 0.02,
+        throttle_frac: 0.7,
+        idle_watts: 2.4,
+        dyn_watts: 3.4,
+        power_cap: None,
+        thermal: ThermalModel::new(25.0, 8.0, 90.0, 80.0, 72.0),
+        ram_total_mb: 2048.0,
+        ram_baseline_mb: 280.0,
+        cpu_framework_mb: 210.0,
+    }
+}
+
+/// NVIDIA Jetson Nano (128-core Maxwell). `power_cap_watts` = Some(5.0)
+/// models the 5 W nvpmodel mode; None is the unconstrained (MAXN) mode.
+pub fn jetson_nano(power_cap_watts: Option<f64>) -> DeviceSpec {
+    DeviceSpec {
+        name: "jetson-nano",
+        gpu_samples_per_sec: 300.0e6,
+        pass_overhead: 0.15e-3,
+        upload_bytes_per_sec: 2.0e9,
+        frame_overhead: 0.8e-3,
+        cpu_macs_per_sec: 1.5e9,
+        cpu_jitter: 0.05,
+        gpu_jitter: 0.02,
+        throttle_frac: 0.55,
+        idle_watts: 1.5,
+        dyn_watts: 8.0,
+        power_cap: power_cap_watts,
+        thermal: ThermalModel::new(25.0, 6.0, 90.0, 70.0, 64.0),
+        ram_total_mb: 4096.0,
+        ram_baseline_mb: 620.0,
+        cpu_framework_mb: 480.0,
+    }
+}
+
+/// All Figure-2 devices in paper order.
+pub fn all() -> Vec<DeviceSpec> {
+    vec![pi_zero_2w(), pi_4b(), jetson_nano(None)]
+}
+
+pub fn by_name(name: &str) -> anyhow::Result<DeviceSpec> {
+    match name {
+        "pi-zero-2w" => Ok(pi_zero_2w()),
+        "pi-4b" => Ok(pi_4b()),
+        "jetson-nano" => Ok(jetson_nano(None)),
+        "jetson-nano-5w" => Ok(jetson_nano(Some(5.0))),
+        other => anyhow::bail!("unknown device {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::model::{Device, ExecPath, FrameCost};
+    use crate::shader::ir::{EncoderIr, Op};
+    use crate::shader::plan;
+
+    fn miniconv4_cost(x: usize) -> FrameCost {
+        let ir = EncoderIr {
+            name: "m".into(),
+            input_channels: 9,
+            ops: (0..3)
+                .flat_map(|_| {
+                    vec![Op::Conv { cout: 4, k: 3, stride: 2, same: true }, Op::Relu]
+                })
+                .collect(),
+        };
+        FrameCost::from_plan(&plan(&ir, x).unwrap())
+    }
+
+    fn mean_frame(spec: DeviceSpec, x: usize, path: ExecPath, n: usize) -> f64 {
+        let mut d = Device::new(spec, 42);
+        let c = miniconv4_cost(x);
+        (0..n).map(|_| d.encode_frame(&c, path).duration).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn pizero_j_near_100ms_at_x400() {
+        // the paper's break-even anchor: j ~ 0.1s at X=400 (K=4, n=3)
+        let j = mean_frame(pi_zero_2w(), 400, ExecPath::Gpu, 100);
+        assert!((0.08..0.13).contains(&j), "j={j}");
+    }
+
+    #[test]
+    fn pizero_5fps_bound_near_x500() {
+        let t450 = mean_frame(pi_zero_2w(), 450, ExecPath::Gpu, 50);
+        let t650 = mean_frame(pi_zero_2w(), 650, ExecPath::Gpu, 50);
+        assert!(t450 < 0.2, "t450={t450}");
+        assert!(t650 > 0.2, "t650={t650}");
+    }
+
+    #[test]
+    fn device_ordering_matches_fig2() {
+        // jetson << pi4 << pi zero at every size
+        for x in [100usize, 400, 1000] {
+            let z = mean_frame(pi_zero_2w(), x, ExecPath::Gpu, 30);
+            let p4 = mean_frame(pi_4b(), x, ExecPath::Gpu, 30);
+            let j = mean_frame(jetson_nano(None), x, ExecPath::Gpu, 30);
+            assert!(j < p4 && p4 < z, "x={x}: jetson {j}, pi4 {p4}, zero {z}");
+        }
+    }
+
+    #[test]
+    fn jetson_throttles_under_sustained_3000sq() {
+        let mut d = Device::new(jetson_nano(None), 1);
+        let c = miniconv4_cost(3000);
+        let first = d.encode_frame(&c, ExecPath::Gpu).duration;
+        let mut throttled_at = None;
+        for i in 0..5000 {
+            let s = d.encode_frame(&c, ExecPath::Gpu);
+            if s.clock_frac < 1.0 {
+                throttled_at = Some((i, s.duration));
+                break;
+            }
+        }
+        let (i, dur) = throttled_at.expect("jetson never throttled in 5000 frames");
+        assert!(i > 50, "throttled immediately (frame {i})");
+        assert!(dur > 1.4 * first, "throttle not visible in frame time");
+    }
+
+    #[test]
+    fn jetson_5w_cap_is_slower_but_stable() {
+        let mut capped = Device::new(jetson_nano(Some(5.0)), 2);
+        let mut free = Device::new(jetson_nano(None), 2);
+        let c = miniconv4_cost(3000);
+        let t_capped_first = capped.encode_frame(&c, ExecPath::Gpu).duration;
+        let t_free_first = free.encode_frame(&c, ExecPath::Gpu).duration;
+        assert!(
+            t_capped_first > 1.3 * t_free_first,
+            "cap not slower from the start: {t_capped_first} vs {t_free_first}"
+        );
+        // capped mode never trips thermal throttle over the full run
+        for _ in 0..5000 {
+            let s = capped.encode_frame(&c, ExecPath::Gpu);
+            assert!(s.watts <= 5.05, "cap exceeded: {}", s.watts);
+            assert!(!capped.spec.thermal.throttled(), "capped run throttled");
+        }
+    }
+
+    #[test]
+    fn pizero_cpu_ram_fits_in_512_but_tight() {
+        let mut d = Device::new(pi_zero_2w(), 3);
+        let c = miniconv4_cost(400);
+        let gpu = d.encode_frame(&c, ExecPath::Gpu);
+        let cpu = d.encode_frame(&c, ExecPath::Cpu);
+        assert!(gpu.ram_mb < cpu.ram_mb);
+        assert!(cpu.ram_mb < 512.0, "cpu path OOM: {}", cpu.ram_mb);
+        assert!(cpu.ram_mb > 250.0, "cpu framework RSS unrealistically low");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["pi-zero-2w", "pi-4b", "jetson-nano", "jetson-nano-5w"] {
+            assert!(by_name(n).is_ok());
+        }
+        assert!(by_name("gpu9000").is_err());
+        assert_eq!(all().len(), 3);
+    }
+}

@@ -1,0 +1,122 @@
+//! First-order thermal RC model: the die heats with dissipated power and
+//! cools toward ambient with time constant `tau`. Drives the throttling
+//! behaviour in the sustained-load experiments (paper Fig. 3/4).
+
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    /// ambient temperature, °C
+    pub ambient: f64,
+    /// steady-state °C above ambient per watt
+    pub c_per_watt: f64,
+    /// time constant, seconds
+    pub tau: f64,
+    /// throttle trip point, °C
+    pub throttle_temp: f64,
+    /// hysteresis: resume full clock below this, °C
+    pub resume_temp: f64,
+    temp: f64,
+    throttled: bool,
+}
+
+impl ThermalModel {
+    pub fn new(ambient: f64, c_per_watt: f64, tau: f64, throttle: f64, resume: f64) -> Self {
+        ThermalModel {
+            ambient,
+            c_per_watt,
+            tau,
+            throttle_temp: throttle,
+            resume_temp: resume,
+            temp: ambient,
+            throttled: false,
+        }
+    }
+
+    pub fn temp(&self) -> f64 {
+        self.temp
+    }
+
+    pub fn reset(&mut self) {
+        self.temp = self.ambient;
+        self.throttled = false;
+    }
+
+    /// Integrate over `dt` seconds at dissipated power `watts`.
+    pub fn step(&mut self, watts: f64, dt: f64) {
+        let target = self.ambient + self.c_per_watt * watts;
+        let a = (-dt / self.tau).exp();
+        self.temp = target + (self.temp - target) * a;
+        if self.temp >= self.throttle_temp {
+            self.throttled = true;
+        } else if self.temp <= self.resume_temp {
+            self.throttled = false;
+        }
+    }
+
+    /// Clock multiplier the governor should apply (1.0 or the throttled
+    /// fraction); hysteresis between trip and resume points.
+    pub fn throttled(&self) -> bool {
+        self.throttled
+    }
+
+    /// Steady-state temperature at a given power (for calibration tests).
+    pub fn steady_state(&self, watts: f64) -> f64 {
+        self.ambient + self.c_per_watt * watts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ThermalModel {
+        ThermalModel::new(25.0, 10.0, 60.0, 70.0, 60.0)
+    }
+
+    #[test]
+    fn heats_toward_steady_state() {
+        let mut m = model();
+        for _ in 0..600 {
+            m.step(3.0, 1.0); // 3W for 10 minutes
+        }
+        assert!((m.temp() - 55.0).abs() < 0.5, "{}", m.temp());
+        assert!(!m.throttled());
+    }
+
+    #[test]
+    fn exponential_approach_halfway_at_tau_ln2() {
+        let mut m = model();
+        let t_half = 60.0 * std::f64::consts::LN_2;
+        m.step(3.0, t_half);
+        // halfway between 25 and 55
+        assert!((m.temp() - 40.0).abs() < 0.5, "{}", m.temp());
+    }
+
+    #[test]
+    fn throttles_above_trip_with_hysteresis() {
+        let mut m = model();
+        for _ in 0..2000 {
+            m.step(6.0, 1.0); // steady 85C > 70C trip
+            if m.throttled() {
+                break;
+            }
+        }
+        assert!(m.throttled());
+        // cool: stays throttled until below resume point
+        while m.temp() > 61.0 {
+            m.step(0.0, 1.0);
+            if m.temp() > m.resume_temp {
+                assert!(m.throttled());
+            }
+        }
+        m.step(0.0, 30.0);
+        assert!(!m.throttled());
+    }
+
+    #[test]
+    fn cools_to_ambient() {
+        let mut m = model();
+        m.step(10.0, 300.0);
+        m.step(0.0, 3000.0);
+        assert!((m.temp() - 25.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,102 @@
+//! Visual control environments: the paper's three tasks with the same
+//! observation pathway (RGB render → crop → 3-frame stack → normalise)
+//! and reward/termination structure as their Gym counterparts.
+//!
+//! MuJoCo is not available (and not buildable here); [`physics`] provides a
+//! planar rigid-body substrate and [`locomotion`] the Hopper/Walker2d
+//! analogues — the substitution is documented in DESIGN.md §2. Pendulum
+//! uses the exact classic-control dynamics.
+
+pub mod locomotion;
+pub mod pendulum;
+pub mod physics;
+pub mod raster;
+pub mod wrappers;
+
+pub use locomotion::{Locomotion, Morphology};
+pub use pendulum::Pendulum;
+pub use wrappers::{CropMode, PixelPipeline};
+
+use crate::tensor::FrameRgb;
+use crate::util::rng::Rng;
+
+/// Result of one environment step (Gymnasium semantics: `terminated` ends
+/// the MDP, `truncated` only ends the episode).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOut {
+    pub reward: f64,
+    pub terminated: bool,
+    pub truncated: bool,
+}
+
+impl StepOut {
+    pub fn done(&self) -> bool {
+        self.terminated || self.truncated
+    }
+}
+
+/// A visual control task.
+pub trait Env {
+    fn name(&self) -> &'static str;
+    fn action_dim(&self) -> usize;
+    /// symmetric action bound: actions live in [-max_action, max_action]
+    fn max_action(&self) -> f64;
+    fn max_episode_steps(&self) -> usize;
+    fn reset(&mut self, rng: &mut Rng);
+    fn step(&mut self, action: &[f64]) -> StepOut;
+    /// Draw the current state into `frame` (frame must be square).
+    fn render(&self, frame: &mut FrameRgb);
+    /// Low-dimensional ground-truth state (debugging / tests only — the
+    /// learning pipeline never sees this).
+    fn state(&self) -> Vec<f64>;
+}
+
+/// Construct a task by manifest name.
+pub fn make(task: &str) -> anyhow::Result<Box<dyn Env>> {
+    match task {
+        "pendulum" => Ok(Box::new(Pendulum::new())),
+        "hopper" => Ok(Box::new(Locomotion::hopper())),
+        "walker" => Ok(Box::new(Locomotion::walker())),
+        other => anyhow::bail!("unknown task {other:?} (pendulum|hopper|walker)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_constructs_all_tasks() {
+        for (name, adim) in [("pendulum", 1), ("hopper", 3), ("walker", 6)] {
+            let env = make(name).unwrap();
+            assert_eq!(env.name(), name);
+            assert_eq!(env.action_dim(), adim);
+        }
+        assert!(make("nope").is_err());
+    }
+
+    #[test]
+    fn step_out_done() {
+        assert!(StepOut { reward: 0.0, terminated: true, truncated: false }.done());
+        assert!(StepOut { reward: 0.0, terminated: false, truncated: true }.done());
+        assert!(!StepOut { reward: 0.0, terminated: false, truncated: false }.done());
+    }
+
+    #[test]
+    fn all_envs_render_without_panic_and_differ_over_time() {
+        let mut rng = Rng::new(0);
+        for name in ["pendulum", "hopper", "walker"] {
+            let mut env = make(name).unwrap();
+            env.reset(&mut rng);
+            let mut f0 = FrameRgb::new(100, 100);
+            env.render(&mut f0);
+            for _ in 0..10 {
+                let a = vec![0.7; env.action_dim()];
+                env.step(&a);
+            }
+            let mut f1 = FrameRgb::new(100, 100);
+            env.render(&mut f1);
+            assert_ne!(f0.data, f1.data, "{name} render static over 10 steps");
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Pendulum-v1 with exact classic-control dynamics (Gymnasium source):
+//! θ'' from gravity + torque, reward = -(θ_norm² + 0.1·θ'² + 0.001·u²),
+//! 200-step episodes, action = torque in [-2, 2].
+//!
+//! Rendering mirrors the Gym look: beige background, brown rod rotating
+//! about a fixed axle, red hub — a static camera (paper §4.1).
+
+use super::raster::{capsule, circle, Camera};
+use super::{Env, StepOut};
+use crate::tensor::FrameRgb;
+use crate::util::rng::Rng;
+
+const MAX_SPEED: f64 = 8.0;
+const MAX_TORQUE: f64 = 2.0;
+const DT: f64 = 0.05;
+const G: f64 = 10.0;
+const M: f64 = 1.0;
+const L: f64 = 1.0;
+
+#[derive(Debug, Clone)]
+pub struct Pendulum {
+    pub theta: f64,
+    pub theta_dot: f64,
+    steps: usize,
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pendulum {
+    pub fn new() -> Pendulum {
+        Pendulum { theta: std::f64::consts::PI, theta_dot: 0.0, steps: 0 }
+    }
+
+    fn angle_normalize(x: f64) -> f64 {
+        let two_pi = 2.0 * std::f64::consts::PI;
+        ((x + std::f64::consts::PI).rem_euclid(two_pi)) - std::f64::consts::PI
+    }
+}
+
+impl Env for Pendulum {
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn action_dim(&self) -> usize {
+        1
+    }
+
+    fn max_action(&self) -> f64 {
+        MAX_TORQUE
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Rng) {
+        // gym: theta ~ U(-pi, pi), thetadot ~ U(-1, 1)
+        self.theta = rng.range(-std::f64::consts::PI, std::f64::consts::PI);
+        self.theta_dot = rng.range(-1.0, 1.0);
+        self.steps = 0;
+    }
+
+    fn step(&mut self, action: &[f64]) -> StepOut {
+        let u = action[0].clamp(-MAX_TORQUE, MAX_TORQUE);
+        let th = Self::angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+
+        let newthdot = (self.theta_dot
+            + (3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u) * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += newthdot * DT;
+        self.theta_dot = newthdot;
+        self.steps += 1;
+
+        StepOut {
+            reward: -cost,
+            // pendulum never terminates; only truncates at the step limit
+            terminated: false,
+            truncated: self.steps >= self.max_episode_steps(),
+        }
+    }
+
+    fn render(&self, frame: &mut FrameRgb) {
+        let cam = Camera { center: [0.0, 0.0], extent: 3.0, frame: frame.h };
+        frame.fill([245, 245, 220]); // gym's beige
+        // rod: theta = 0 is upright in gym rendering
+        let tip = [L * self.theta.sin(), L * self.theta.cos()];
+        capsule(frame, &cam, [0.0, 0.0], tip, 0.1, [204, 77, 77]);
+        circle(frame, &cam, [0.0, 0.0], 0.06, [0, 0, 0]);
+        // velocity cue: small marker orthogonal to the rod, offset by
+        // theta_dot (pixels must expose velocity for frame-stack encoders)
+        let v = (self.theta_dot / MAX_SPEED).clamp(-1.0, 1.0);
+        let marker = [
+            tip[0] + 0.3 * v * self.theta.cos(),
+            tip[1] - 0.3 * v * self.theta.sin(),
+        ];
+        circle(frame, &cam, marker, 0.05, [30, 30, 200]);
+    }
+
+    fn state(&self) -> Vec<f64> {
+        vec![self.theta.cos(), self.theta.sin(), self.theta_dot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_maximal_at_upright_rest() {
+        let mut p = Pendulum::new();
+        p.theta = 0.0;
+        p.theta_dot = 0.0;
+        let r = p.step(&[0.0]).reward;
+        assert!(r.abs() < 1e-9, "upright reward {r}");
+    }
+
+    #[test]
+    fn reward_worst_when_hanging() {
+        let mut p = Pendulum::new();
+        p.theta = std::f64::consts::PI;
+        p.theta_dot = 0.0;
+        let r = p.step(&[0.0]).reward;
+        assert!(r < -9.0, "{r}"); // -pi^2 ~ -9.87
+    }
+
+    #[test]
+    fn torque_accelerates() {
+        let mut p = Pendulum::new();
+        p.theta = 0.0;
+        p.theta_dot = 0.0;
+        p.step(&[2.0]);
+        assert!(p.theta_dot > 0.0);
+    }
+
+    #[test]
+    fn torque_clamped() {
+        let mut a = Pendulum::new();
+        let mut b = Pendulum::new();
+        a.theta = 0.5;
+        b.theta = 0.5;
+        a.step(&[100.0]);
+        b.step(&[2.0]);
+        assert!((a.theta - b.theta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speed_clamped() {
+        let mut p = Pendulum::new();
+        p.theta = std::f64::consts::FRAC_PI_2;
+        for _ in 0..100 {
+            p.step(&[2.0]);
+        }
+        assert!(p.theta_dot.abs() <= MAX_SPEED);
+    }
+
+    #[test]
+    fn truncates_at_200() {
+        let mut p = Pendulum::new();
+        let mut rng = Rng::new(0);
+        p.reset(&mut rng);
+        for i in 1..=200 {
+            let out = p.step(&[0.0]);
+            assert_eq!(out.truncated, i == 200);
+            assert!(!out.terminated);
+        }
+    }
+
+    #[test]
+    fn reset_randomises_within_bounds() {
+        let mut p = Pendulum::new();
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            p.reset(&mut rng);
+            assert!(p.theta.abs() <= std::f64::consts::PI);
+            assert!(p.theta_dot.abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn render_shows_rod_angle() {
+        let mut p = Pendulum::new();
+        p.theta = 0.0;
+        let mut up = FrameRgb::new(100, 100);
+        p.render(&mut up);
+        p.theta = std::f64::consts::PI;
+        let mut down = FrameRgb::new(100, 100);
+        p.render(&mut down);
+        assert_ne!(up.data, down.data);
+        // rod color appears above centre when upright
+        let found_up = (0..45).any(|y| (40..60).any(|x| up.get(y, x) == [204, 77, 77]));
+        assert!(found_up);
+    }
+
+    #[test]
+    fn render_exposes_velocity() {
+        // same pose, different velocity must give different pixels
+        let mut a = Pendulum::new();
+        let mut b = Pendulum::new();
+        a.theta = 1.0;
+        b.theta = 1.0;
+        a.theta_dot = 0.0;
+        b.theta_dot = 5.0;
+        let mut fa = FrameRgb::new(100, 100);
+        let mut fb = FrameRgb::new(100, 100);
+        a.render(&mut fa);
+        b.render(&mut fb);
+        assert_ne!(fa.data, fb.data);
+    }
+
+    #[test]
+    fn angle_normalize() {
+        // 3π normalises to ±π (the two are equivalent angles)
+        assert!((Pendulum::angle_normalize(3.0 * std::f64::consts::PI).abs() - std::f64::consts::PI).abs() < 1e-9);
+        assert!(Pendulum::angle_normalize(0.5).abs() - 0.5 < 1e-9);
+    }
+}

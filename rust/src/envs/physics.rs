@@ -1,0 +1,462 @@
+//! Planar rigid-body physics: the substrate standing in for MuJoCo
+//! (DESIGN.md §2). Bodies are capsules; revolute joints with motor torques
+//! connect them; contact with the ground plane (y = 0) and joint constraints
+//! are solved with sequential impulses (Baumgarte-stabilised), semi-implicit
+//! Euler integration.
+//!
+//! This is not MuJoCo-accurate — it is a *pixel-observable articulated
+//! dynamics* generator with the same reward/termination structure as the
+//! Gym locomotion tasks, which is what the paper's learning experiments
+//! exercise.
+
+pub const GRAVITY: f64 = -9.81;
+
+#[derive(Debug, Clone)]
+pub struct Body {
+    // pose
+    pub pos: [f64; 2],
+    pub angle: f64,
+    // velocity
+    pub vel: [f64; 2],
+    pub angvel: f64,
+    // mass properties (inv_mass = 0 => static)
+    pub inv_mass: f64,
+    pub inv_inertia: f64,
+    /// capsule half-length along the body's local x axis, and radius
+    pub half_len: f64,
+    pub radius: f64,
+    /// render colour
+    pub color: [u8; 3],
+}
+
+impl Body {
+    /// Dynamic capsule of the given mass, axis along local x.
+    pub fn capsule(mass: f64, half_len: f64, radius: f64, color: [u8; 3]) -> Body {
+        // inertia of a rod of length 2*half_len (capsule ends folded in)
+        let inertia = mass * (2.0 * half_len).powi(2) / 12.0 + mass * radius * radius / 2.0;
+        Body {
+            pos: [0.0, 0.0],
+            angle: 0.0,
+            vel: [0.0, 0.0],
+            angvel: 0.0,
+            inv_mass: 1.0 / mass,
+            inv_inertia: 1.0 / inertia,
+            half_len,
+            radius,
+            color,
+        }
+    }
+
+    /// World position of a point given in body-local coordinates.
+    pub fn world_point(&self, local: [f64; 2]) -> [f64; 2] {
+        let (s, c) = self.angle.sin_cos();
+        [
+            self.pos[0] + c * local[0] - s * local[1],
+            self.pos[1] + s * local[0] + c * local[1],
+        ]
+    }
+
+    /// Velocity of a world-space point rigidly attached to this body.
+    pub fn point_velocity(&self, world: [f64; 2]) -> [f64; 2] {
+        let r = [world[0] - self.pos[0], world[1] - self.pos[1]];
+        [self.vel[0] - self.angvel * r[1], self.vel[1] + self.angvel * r[0]]
+    }
+
+    fn apply_impulse(&mut self, p: [f64; 2], at: [f64; 2]) {
+        let r = [at[0] - self.pos[0], at[1] - self.pos[1]];
+        self.vel[0] += p[0] * self.inv_mass;
+        self.vel[1] += p[1] * self.inv_mass;
+        self.angvel += (r[0] * p[1] - r[1] * p[0]) * self.inv_inertia;
+    }
+
+    /// The two capsule endpoints in world space.
+    pub fn endpoints(&self) -> ([f64; 2], [f64; 2]) {
+        (
+            self.world_point([-self.half_len, 0.0]),
+            self.world_point([self.half_len, 0.0]),
+        )
+    }
+}
+
+/// Revolute joint pinning `anchor_a` (local to body a) to `anchor_b`
+/// (local to body b), with optional angle limits and a motor torque input.
+#[derive(Debug, Clone)]
+pub struct Joint {
+    pub body_a: usize,
+    pub body_b: usize,
+    pub anchor_a: [f64; 2],
+    pub anchor_b: [f64; 2],
+    /// relative-angle limits around `rest` (angle_b - angle_a - rest), radians
+    pub limit: Option<(f64, f64)>,
+    /// the rest relative angle the limits are measured from
+    pub rest: f64,
+    /// torque applied this step (+ on b, - on a), set from the action
+    pub torque: f64,
+    pub max_torque: f64,
+}
+
+impl Joint {
+    pub fn new(body_a: usize, body_b: usize, anchor_a: [f64; 2], anchor_b: [f64; 2]) -> Joint {
+        Joint {
+            body_a,
+            body_b,
+            anchor_a,
+            anchor_b,
+            limit: None,
+            rest: 0.0,
+            torque: 0.0,
+            max_torque: 50.0,
+        }
+    }
+
+    /// Measure the current relative angle as the rest pose for limits.
+    pub fn set_rest_from(&mut self, bodies: &[Body]) {
+        self.rest = bodies[self.body_b].angle - bodies[self.body_a].angle;
+    }
+
+    pub fn with_limit(mut self, lo: f64, hi: f64) -> Joint {
+        self.limit = Some((lo, hi));
+        self
+    }
+
+    pub fn with_max_torque(mut self, t: f64) -> Joint {
+        self.max_torque = t;
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct World {
+    pub bodies: Vec<Body>,
+    pub joints: Vec<Joint>,
+    pub dt: f64,
+    pub solver_iters: usize,
+    pub friction: f64,
+    /// velocity damping per step (numerical stability)
+    pub damping: f64,
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl World {
+    pub fn new() -> World {
+        World {
+            bodies: Vec::new(),
+            joints: Vec::new(),
+            dt: 0.002,
+            solver_iters: 12,
+            friction: 0.9,
+            damping: 0.9995,
+        }
+    }
+
+    pub fn add_body(&mut self, b: Body) -> usize {
+        self.bodies.push(b);
+        self.bodies.len() - 1
+    }
+
+    pub fn add_joint(&mut self, j: Joint) -> usize {
+        self.joints.push(j);
+        self.joints.len() - 1
+    }
+
+    /// One physics step: integrate forces, solve contacts + joints, integrate
+    /// velocities.
+    pub fn step(&mut self) {
+        let dt = self.dt;
+
+        // gravity + motor torques
+        for b in self.bodies.iter_mut() {
+            if b.inv_mass > 0.0 {
+                b.vel[1] += GRAVITY * dt;
+                b.vel[0] *= self.damping;
+                b.vel[1] *= self.damping;
+                b.angvel *= self.damping;
+            }
+        }
+        for j in &self.joints {
+            let t = j.torque.clamp(-j.max_torque, j.max_torque);
+            let (ia, ib) = (j.body_a, j.body_b);
+            self.bodies[ia].angvel -= t * self.bodies[ia].inv_inertia * dt;
+            self.bodies[ib].angvel += t * self.bodies[ib].inv_inertia * dt;
+        }
+
+        // contact set: capsule endpoints (+ midpoint) vs ground plane y=0
+        struct Contact {
+            body: usize,
+            local: [f64; 2],
+            depth: f64,
+        }
+        let mut contacts = Vec::new();
+        for (bi, b) in self.bodies.iter().enumerate() {
+            if b.inv_mass == 0.0 {
+                continue;
+            }
+            for local in [[-b.half_len, 0.0], [0.0, 0.0], [b.half_len, 0.0]] {
+                let wp = b.world_point(local);
+                let depth = b.radius - wp[1];
+                if depth > 0.0 {
+                    contacts.push(Contact { body: bi, local, depth });
+                }
+            }
+        }
+
+        // sequential impulse iterations
+        for _ in 0..self.solver_iters {
+            // joint position/velocity constraints
+            for j in &self.joints {
+                let (ia, ib) = (j.body_a, j.body_b);
+                let pa = self.bodies[ia].world_point(j.anchor_a);
+                let pb = self.bodies[ib].world_point(j.anchor_b);
+                let va = self.bodies[ia].point_velocity(pa);
+                let vb = self.bodies[ib].point_velocity(pb);
+                // Baumgarte bias pulls anchors together
+                let beta = 0.1 / dt;
+                let c = [pb[0] - pa[0], pb[1] - pa[1]];
+                let rel = [vb[0] - va[0] + beta * c[0], vb[1] - va[1] + beta * c[1]];
+                // exact 2x2 effective mass matrix of the point constraint
+                let ra = [pa[0] - self.bodies[ia].pos[0], pa[1] - self.bodies[ia].pos[1]];
+                let rb = [pb[0] - self.bodies[ib].pos[0], pb[1] - self.bodies[ib].pos[1]];
+                let (mia, iia) = (self.bodies[ia].inv_mass, self.bodies[ia].inv_inertia);
+                let (mib, iib) = (self.bodies[ib].inv_mass, self.bodies[ib].inv_inertia);
+                let m_sum = mia + mib;
+                if m_sum == 0.0 {
+                    continue;
+                }
+                let k11 = m_sum + iia * ra[1] * ra[1] + iib * rb[1] * rb[1];
+                let k12 = -iia * ra[0] * ra[1] - iib * rb[0] * rb[1];
+                let k22 = m_sum + iia * ra[0] * ra[0] + iib * rb[0] * rb[0];
+                let det = k11 * k22 - k12 * k12;
+                if det.abs() < 1e-12 {
+                    continue;
+                }
+                // p = -K^{-1} rel
+                let p = [
+                    -(k22 * rel[0] - k12 * rel[1]) / det,
+                    -(k11 * rel[1] - k12 * rel[0]) / det,
+                ];
+                let (ba, bb) = split_two(&mut self.bodies, ia, ib);
+                ba.apply_impulse([-p[0], -p[1]], pa);
+                bb.apply_impulse(p, pb);
+
+                // angle limits
+                if let Some((lo, hi)) = j.limit {
+                    let rel_angle = self.bodies[ib].angle - self.bodies[ia].angle - j.rest;
+                    let relw = self.bodies[ib].angvel - self.bodies[ia].angvel;
+                    let (viol, sign) = if rel_angle < lo {
+                        (lo - rel_angle, 1.0)
+                    } else if rel_angle > hi {
+                        (rel_angle - hi, -1.0)
+                    } else {
+                        (0.0, 0.0)
+                    };
+                    if viol > 0.0 {
+                        let bias = 0.2 * viol / dt;
+                        let want = sign * bias - relw;
+                        let ki = self.bodies[ia].inv_inertia + self.bodies[ib].inv_inertia;
+                        if ki > 0.0 && want * sign > 0.0 {
+                            let imp = want / ki;
+                            self.bodies[ia].angvel -= imp * self.bodies[ia].inv_inertia;
+                            self.bodies[ib].angvel += imp * self.bodies[ib].inv_inertia;
+                        }
+                    }
+                }
+            }
+
+            // ground contacts
+            for c in &contacts {
+                let b = &self.bodies[c.body];
+                let wp = b.world_point(c.local);
+                let v = b.point_velocity(wp);
+                let beta = 0.2 / dt;
+                let slop = 0.005;
+                let bias = beta * (c.depth - slop).max(0.0);
+                let vn = v[1];
+                let want = bias - vn;
+                if want <= 0.0 {
+                    continue;
+                }
+                let r = [wp[0] - b.pos[0], wp[1] - b.pos[1]];
+                let kn = b.inv_mass + b.inv_inertia * r[0] * r[0];
+                let pn = want / kn;
+                // friction clamped by Coulomb cone
+                let kt = b.inv_mass + b.inv_inertia * r[1] * r[1];
+                let pt = (-v[0] / kt).clamp(-self.friction * pn, self.friction * pn);
+                self.bodies[c.body].apply_impulse([pt, pn], wp);
+            }
+        }
+
+        // integrate positions
+        for b in self.bodies.iter_mut() {
+            if b.inv_mass > 0.0 {
+                b.pos[0] += b.vel[0] * dt;
+                b.pos[1] += b.vel[1] * dt;
+                b.angle += b.angvel * dt;
+            }
+        }
+    }
+
+    /// Kinetic energy (for sanity tests).
+    pub fn kinetic_energy(&self) -> f64 {
+        self.bodies
+            .iter()
+            .filter(|b| b.inv_mass > 0.0)
+            .map(|b| {
+                0.5 * (b.vel[0].powi(2) + b.vel[1].powi(2)) / b.inv_mass
+                    + 0.5 * b.angvel.powi(2) / b.inv_inertia
+            })
+            .sum()
+    }
+}
+
+fn split_two(bodies: &mut [Body], i: usize, j: usize) -> (&mut Body, &mut Body) {
+    assert!(i != j);
+    if i < j {
+        let (a, b) = bodies.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = bodies.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_fall_matches_kinematics() {
+        let mut w = World::new();
+        let b = w.add_body(Body::capsule(1.0, 0.1, 0.05, [0; 3]));
+        w.bodies[b].pos = [0.0, 10.0];
+        let steps = 200; // 0.4 seconds
+        for _ in 0..steps {
+            w.step();
+        }
+        let t = w.dt * steps as f64;
+        // semi-implicit Euler with light damping: close to 0.5 g t^2
+        let expect = 10.0 + 0.5 * GRAVITY * t * t;
+        assert!(
+            (w.bodies[b].pos[1] - expect).abs() < 0.05,
+            "y={} expect~{expect}",
+            w.bodies[b].pos[1]
+        );
+    }
+
+    #[test]
+    fn ground_contact_stops_fall() {
+        let mut w = World::new();
+        let b = w.add_body(Body::capsule(1.0, 0.2, 0.05, [0; 3]));
+        w.bodies[b].pos = [0.0, 0.5];
+        for _ in 0..3000 {
+            w.step();
+        }
+        let y = w.bodies[b].pos[1];
+        // resting on the plane at ~radius height
+        assert!((y - 0.05).abs() < 0.02, "rest height {y}");
+        assert!(w.bodies[b].vel[1].abs() < 0.05);
+    }
+
+    #[test]
+    fn friction_stops_sliding() {
+        let mut w = World::new();
+        let b = w.add_body(Body::capsule(1.0, 0.2, 0.05, [0; 3]));
+        w.bodies[b].pos = [0.0, 0.05];
+        w.bodies[b].vel = [2.0, 0.0];
+        for _ in 0..4000 {
+            w.step();
+        }
+        assert!(w.bodies[b].vel[0].abs() < 0.05, "vx={}", w.bodies[b].vel[0]);
+    }
+
+    #[test]
+    fn revolute_joint_holds_anchors_together() {
+        let mut w = World::new();
+        // static anchor body + swinging pendulum link
+        let a = w.add_body(Body { inv_mass: 0.0, inv_inertia: 0.0, ..Body::capsule(1.0, 0.05, 0.02, [0; 3]) });
+        w.bodies[a].pos = [0.0, 2.0];
+        let b = w.add_body(Body::capsule(1.0, 0.3, 0.03, [0; 3]));
+        w.bodies[b].pos = [0.3, 2.0];
+        w.add_joint(Joint::new(a, b, [0.0, 0.0], [-0.3, 0.0]));
+        for _ in 0..2000 {
+            w.step();
+            let pa = w.bodies[a].world_point([0.0, 0.0]);
+            let pb = w.bodies[b].world_point([-0.3, 0.0]);
+            let gap = ((pa[0] - pb[0]).powi(2) + (pa[1] - pb[1]).powi(2)).sqrt();
+            assert!(gap < 0.05, "joint gap {gap}");
+        }
+        // pendulum has swung (gravity did work)
+        assert!(w.bodies[b].pos[1] < 2.0);
+    }
+
+    #[test]
+    fn motor_torque_spins_body() {
+        let mut w = World::new();
+        let a = w.add_body(Body { inv_mass: 0.0, inv_inertia: 0.0, ..Body::capsule(1.0, 0.05, 0.02, [0; 3]) });
+        w.bodies[a].pos = [0.0, 5.0];
+        let b = w.add_body(Body::capsule(1.0, 0.2, 0.03, [0; 3]));
+        w.bodies[b].pos = [0.2, 5.0];
+        let j = w.add_joint(Joint::new(a, b, [0.0, 0.0], [-0.2, 0.0]).with_max_torque(10.0));
+        w.joints[j].torque = 5.0;
+        for _ in 0..200 {
+            w.step();
+        }
+        assert!(w.bodies[b].angvel > 0.5, "angvel {}", w.bodies[b].angvel);
+    }
+
+    #[test]
+    fn torque_clamped_to_max() {
+        let mut w = World::new();
+        let a = w.add_body(Body { inv_mass: 0.0, inv_inertia: 0.0, ..Body::capsule(1.0, 0.05, 0.02, [0; 3]) });
+        let b = w.add_body(Body::capsule(1.0, 0.2, 0.03, [0; 3]));
+        let j = w.add_joint(Joint::new(a, b, [0.0, 0.0], [-0.2, 0.0]).with_max_torque(1.0));
+        w.joints[j].torque = 100.0;
+        w.bodies[a].pos = [0.0, 5.0];
+        w.bodies[b].pos = [0.2, 5.0];
+        let mut w2 = w.clone();
+        w2.joints[j].torque = 1.0;
+        for _ in 0..50 {
+            w.step();
+            w2.step();
+        }
+        assert!((w.bodies[b].angvel - w2.bodies[b].angvel).abs() < 1e-9);
+    }
+
+    #[test]
+    fn world_point_rotation() {
+        let mut b = Body::capsule(1.0, 1.0, 0.1, [0; 3]);
+        b.pos = [1.0, 2.0];
+        b.angle = std::f64::consts::FRAC_PI_2;
+        let p = b.world_point([1.0, 0.0]);
+        assert!((p[0] - 1.0).abs() < 1e-9);
+        assert!((p[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_does_not_explode() {
+        // articulated chain under gravity stays bounded (solver stability)
+        let mut w = World::new();
+        let a = w.add_body(Body { inv_mass: 0.0, inv_inertia: 0.0, ..Body::capsule(1.0, 0.05, 0.02, [0; 3]) });
+        w.bodies[a].pos = [0.0, 3.0];
+        let mut prev = a;
+        let mut px = 0.0;
+        for _ in 0..3 {
+            let b = w.add_body(Body::capsule(0.5, 0.2, 0.03, [0; 3]));
+            px += 0.4;
+            w.bodies[b].pos = [px, 3.0];
+            w.add_joint(Joint::new(prev, b, [if prev == a { 0.0 } else { 0.2 }, 0.0], [-0.2, 0.0]));
+            prev = b;
+        }
+        for _ in 0..5000 {
+            w.step();
+        }
+        assert!(w.kinetic_energy() < 100.0, "ke={}", w.kinetic_energy());
+        for b in &w.bodies {
+            assert!(b.pos[1].is_finite() && b.pos[1] > -1.0);
+        }
+    }
+}

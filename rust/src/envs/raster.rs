@@ -1,0 +1,197 @@
+//! Software rasterizer: draws environment states into RGB frames, standing
+//! in for the MuJoCo / classic-control renderers (paper §4.1: 100x100 RGB,
+//! tracking camera for locomotion, static camera for Pendulum).
+//!
+//! Primitives are drawn by signed-distance tests over their bounding boxes —
+//! at 100x100 this is plenty fast and pixel-exact to test.
+
+use crate::tensor::FrameRgb;
+
+/// World->pixel camera transform for a square frame.
+#[derive(Debug, Clone, Copy)]
+pub struct Camera {
+    /// world coords of the frame centre
+    pub center: [f64; 2],
+    /// world height covered by the frame
+    pub extent: f64,
+    pub frame: usize,
+}
+
+impl Camera {
+    pub fn to_px(&self, wp: [f64; 2]) -> [f64; 2] {
+        let scale = self.frame as f64 / self.extent;
+        [
+            (wp[0] - self.center[0]) * scale + self.frame as f64 / 2.0,
+            // world y up, pixel y down
+            (self.center[1] - wp[1]) * scale + self.frame as f64 / 2.0,
+        ]
+    }
+
+    pub fn px_per_world(&self) -> f64 {
+        self.frame as f64 / self.extent
+    }
+}
+
+/// Filled circle at world position.
+pub fn circle(f: &mut FrameRgb, cam: &Camera, center: [f64; 2], radius: f64, color: [u8; 3]) {
+    let c = cam.to_px(center);
+    let r = radius * cam.px_per_world();
+    let (x0, x1) = clampi(c[0] - r - 1.0, c[0] + r + 1.0, f.w);
+    let (y0, y1) = clampi(c[1] - r - 1.0, c[1] + r + 1.0, f.h);
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let dx = x as f64 + 0.5 - c[0];
+            let dy = y as f64 + 0.5 - c[1];
+            if dx * dx + dy * dy <= r * r {
+                f.put(y, x, color);
+            }
+        }
+    }
+}
+
+/// Filled capsule (thick line segment) between two world points.
+pub fn capsule(
+    f: &mut FrameRgb,
+    cam: &Camera,
+    a: [f64; 2],
+    b: [f64; 2],
+    radius: f64,
+    color: [u8; 3],
+) {
+    let pa = cam.to_px(a);
+    let pb = cam.to_px(b);
+    let r = radius * cam.px_per_world();
+    let (x0, x1) = clampi(pa[0].min(pb[0]) - r - 1.0, pa[0].max(pb[0]) + r + 1.0, f.w);
+    let (y0, y1) = clampi(pa[1].min(pb[1]) - r - 1.0, pa[1].max(pb[1]) + r + 1.0, f.h);
+    let ab = [pb[0] - pa[0], pb[1] - pa[1]];
+    let len2 = ab[0] * ab[0] + ab[1] * ab[1];
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let p = [x as f64 + 0.5, y as f64 + 0.5];
+            let ap = [p[0] - pa[0], p[1] - pa[1]];
+            let t = if len2 > 0.0 {
+                ((ap[0] * ab[0] + ap[1] * ab[1]) / len2).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let dx = ap[0] - t * ab[0];
+            let dy = ap[1] - t * ab[1];
+            if dx * dx + dy * dy <= r * r {
+                f.put(y, x, color);
+            }
+        }
+    }
+}
+
+/// Horizontal half-plane fill below a world height (the ground).
+pub fn ground(f: &mut FrameRgb, cam: &Camera, world_y: f64, color: [u8; 3]) {
+    let y_px = cam.to_px([cam.center[0], world_y])[1].max(0.0) as usize;
+    for y in y_px.min(f.h)..f.h {
+        for x in 0..f.w {
+            f.put(y, x, color);
+        }
+    }
+}
+
+/// Checkered ground strip: gives the tracking camera visible motion
+/// parallax (crucial — otherwise forward velocity is unobservable from
+/// pixels, like MuJoCo's checker texture).
+pub fn checker_ground(
+    f: &mut FrameRgb,
+    cam: &Camera,
+    world_y: f64,
+    tile: f64,
+    c1: [u8; 3],
+    c2: [u8; 3],
+) {
+    let y_px = cam.to_px([cam.center[0], world_y])[1].max(0.0) as usize;
+    let scale = cam.px_per_world();
+    for y in y_px.min(f.h)..f.h {
+        for x in 0..f.w {
+            // world x of this pixel column
+            let wx = (x as f64 + 0.5 - f.w as f64 / 2.0) / scale + cam.center[0];
+            let k = (wx / tile).floor() as i64;
+            f.put(y, x, if k.rem_euclid(2) == 0 { c1 } else { c2 });
+        }
+    }
+}
+
+fn clampi(lo: f64, hi: f64, max: usize) -> (usize, usize) {
+    (
+        lo.max(0.0) as usize,
+        (hi.ceil().max(0.0) as usize).min(max),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cam(frame: usize) -> Camera {
+        Camera { center: [0.0, 0.0], extent: 10.0, frame }
+    }
+
+    #[test]
+    fn camera_maps_center_to_middle() {
+        let c = cam(100);
+        assert_eq!(c.to_px([0.0, 0.0]), [50.0, 50.0]);
+        // +y world is up => smaller pixel y
+        let p = c.to_px([0.0, 1.0]);
+        assert!(p[1] < 50.0);
+    }
+
+    #[test]
+    fn circle_fills_expected_pixels() {
+        let mut f = FrameRgb::new(100, 100);
+        circle(&mut f, &cam(100), [0.0, 0.0], 1.0, [255, 0, 0]);
+        assert_eq!(f.get(50, 50), [255, 0, 0]); // centre
+        assert_eq!(f.get(50, 58), [255, 0, 0]); // within r=10px
+        assert_eq!(f.get(50, 62), [0, 0, 0]); // outside
+        assert_eq!(f.get(5, 5), [0, 0, 0]);
+    }
+
+    #[test]
+    fn capsule_covers_segment() {
+        let mut f = FrameRgb::new(100, 100);
+        capsule(&mut f, &cam(100), [-2.0, 0.0], [2.0, 0.0], 0.3, [0, 255, 0]);
+        for x in [35usize, 50, 65] {
+            assert_eq!(f.get(50, x), [0, 255, 0]);
+        }
+        assert_eq!(f.get(30, 50), [0, 0, 0]);
+    }
+
+    #[test]
+    fn capsule_degenerate_is_circle() {
+        let mut f = FrameRgb::new(100, 100);
+        capsule(&mut f, &cam(100), [0.0, 0.0], [0.0, 0.0], 0.5, [9, 9, 9]);
+        assert_eq!(f.get(50, 50), [9, 9, 9]);
+    }
+
+    #[test]
+    fn ground_fills_bottom() {
+        let mut f = FrameRgb::new(100, 100);
+        ground(&mut f, &cam(100), -1.0, [10, 20, 30]);
+        assert_eq!(f.get(99, 0), [10, 20, 30]);
+        assert_eq!(f.get(0, 0), [0, 0, 0]);
+    }
+
+    #[test]
+    fn checker_alternates_with_camera_motion() {
+        let mut f1 = FrameRgb::new(100, 100);
+        let mut f2 = FrameRgb::new(100, 100);
+        let c1 = Camera { center: [0.0, 0.0], extent: 10.0, frame: 100 };
+        let c2 = Camera { center: [1.0, 0.0], extent: 10.0, frame: 100 };
+        checker_ground(&mut f1, &c1, 0.0, 1.0, [255; 3], [0; 3]);
+        checker_ground(&mut f2, &c2, 0.0, 1.0, [255; 3], [0; 3]);
+        // translation moves the pattern: frames differ (motion parallax)
+        assert_ne!(f1.data, f2.data);
+    }
+
+    #[test]
+    fn primitives_clip_at_frame_edges() {
+        let mut f = FrameRgb::new(50, 50);
+        // circle mostly off-screen: must not panic
+        circle(&mut f, &cam(50), [6.0, 0.0], 2.0, [1, 1, 1]);
+        capsule(&mut f, &cam(50), [-20.0, 0.0], [20.0, 0.0], 0.2, [2, 2, 2]);
+    }
+}

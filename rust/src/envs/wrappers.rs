@@ -1,0 +1,197 @@
+//! Observation pipeline (paper §4.1, applied uniformly across tasks):
+//! render W×W RGB → crop to X×X (random during training, centre during
+//! evaluation/serving) → stack 3 consecutive frames → float32 CHW in `[0,1]`.
+//!
+//! The result is the 9×X×X tensor every artifact consumes; `rgba_bytes`
+//! exposes the same frame at the OpenGL upload boundary (opaque alpha) for
+//! the serving wire format.
+
+use super::Env;
+use crate::tensor::{Chw, FrameRgb};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CropMode {
+    /// random crop (training-time augmentation)
+    Random,
+    /// deterministic centre crop (evaluation / deployment)
+    Center,
+}
+
+pub struct PixelPipeline {
+    pub render: usize,
+    pub crop: usize,
+    pub mode: CropMode,
+    frames: std::collections::VecDeque<FrameRgb>,
+    scratch: FrameRgb,
+}
+
+impl PixelPipeline {
+    pub fn new(render: usize, crop: usize, mode: CropMode) -> PixelPipeline {
+        assert!(crop <= render, "crop {crop} > render {render}");
+        PixelPipeline {
+            render,
+            crop,
+            mode,
+            frames: std::collections::VecDeque::with_capacity(3),
+            scratch: FrameRgb::new(render, render),
+        }
+    }
+
+    fn crop_frame(&self, frame: &FrameRgb, rng: &mut Rng) -> FrameRgb {
+        let margin = self.render - self.crop;
+        let (top, left) = match self.mode {
+            CropMode::Center => (margin / 2, margin / 2),
+            CropMode::Random => (
+                if margin > 0 { rng.below(margin + 1) } else { 0 },
+                if margin > 0 { rng.below(margin + 1) } else { 0 },
+            ),
+        };
+        frame.crop(top, left, self.crop)
+    }
+
+    /// Render the env and push the frame; call after reset and every step.
+    pub fn observe(&mut self, env: &dyn Env, rng: &mut Rng) {
+        env.render(&mut self.scratch);
+        let cropped = self.crop_frame(&self.scratch, rng);
+        if self.frames.is_empty() {
+            // frame-stack semantics: reset repeats the first frame 3x
+            for _ in 0..3 {
+                self.frames.push_back(cropped.clone());
+            }
+        } else {
+            self.frames.push_back(cropped);
+            while self.frames.len() > 3 {
+                self.frames.pop_front();
+            }
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.frames.clear();
+    }
+
+    /// The stacked observation: 9×X×X float32 in `[0,1]`, frame order
+    /// oldest→newest (FrameStack + VecTransposeImage + normalisation).
+    pub fn obs(&self) -> Vec<f32> {
+        assert_eq!(self.frames.len(), 3, "observe() not called after reset");
+        let x = self.crop;
+        let mut out = Vec::with_capacity(9 * x * x);
+        for f in &self.frames {
+            let chw = f.to_chw_norm();
+            out.extend_from_slice(&chw.data);
+        }
+        out
+    }
+
+    /// Same data as a Chw tensor (for the shader interpreter).
+    pub fn obs_chw(&self) -> Chw {
+        Chw::from_vec(9, self.crop, self.crop, self.obs())
+    }
+
+    /// Newest frame as RGBA bytes (4·X² — the server-only wire format).
+    pub fn rgba_bytes(&self) -> Vec<u8> {
+        self.frames.back().expect("no frame").to_rgba_bytes()
+    }
+
+    pub fn obs_len(&self) -> usize {
+        9 * self.crop * self.crop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::pendulum::Pendulum;
+    use crate::envs::Env;
+
+    fn pipe(mode: CropMode) -> (Pendulum, PixelPipeline, Rng) {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        let p = PixelPipeline::new(44, 36, mode);
+        (env, p, rng)
+    }
+
+    #[test]
+    fn obs_shape_and_range() {
+        let (env, mut p, mut rng) = pipe(CropMode::Center);
+        p.observe(&env, &mut rng);
+        let obs = p.obs();
+        assert_eq!(obs.len(), 9 * 36 * 36);
+        assert!(obs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn reset_stacks_first_frame_three_times() {
+        let (env, mut p, mut rng) = pipe(CropMode::Center);
+        p.observe(&env, &mut rng);
+        let obs = p.obs();
+        let n = 3 * 36 * 36;
+        assert_eq!(&obs[0..n], &obs[n..2 * n]);
+        assert_eq!(&obs[n..2 * n], &obs[2 * n..3 * n]);
+    }
+
+    #[test]
+    fn stack_slides_with_new_frames() {
+        let (mut env, mut p, mut rng) = pipe(CropMode::Center);
+        p.observe(&env, &mut rng);
+        for _ in 0..3 {
+            env.step(&[2.0]);
+            p.observe(&env, &mut rng);
+        }
+        let obs = p.obs();
+        let n = 3 * 36 * 36;
+        // after 3 steps all three frames differ
+        assert_ne!(&obs[0..n], &obs[n..2 * n]);
+        assert_ne!(&obs[n..2 * n], &obs[2 * n..3 * n]);
+    }
+
+    #[test]
+    fn center_crop_deterministic_random_crop_varies() {
+        let (env, mut pc, mut rng) = pipe(CropMode::Center);
+        pc.observe(&env, &mut rng);
+        let a = pc.obs();
+        pc.clear();
+        pc.observe(&env, &mut rng);
+        assert_eq!(a, pc.obs());
+
+        // random crops from distinct rng states eventually differ
+        let mut pr = PixelPipeline::new(44, 36, CropMode::Random);
+        let mut rng1 = Rng::new(1);
+        let mut rng2 = Rng::new(2);
+        pr.observe(&env, &mut rng1);
+        let o1 = pr.obs();
+        pr.clear();
+        pr.observe(&env, &mut rng2);
+        let o2 = pr.obs();
+        assert_ne!(o1, o2, "random crops identical across seeds");
+    }
+
+    #[test]
+    fn rgba_is_4x_pixels() {
+        let (env, mut p, mut rng) = pipe(CropMode::Center);
+        p.observe(&env, &mut rng);
+        let rgba = p.rgba_bytes();
+        assert_eq!(rgba.len(), 4 * 36 * 36);
+        // opaque alpha
+        assert!(rgba.iter().skip(3).step_by(4).all(|&a| a == 255));
+    }
+
+    #[test]
+    #[should_panic(expected = "observe")]
+    fn obs_before_observe_panics() {
+        let p = PixelPipeline::new(44, 36, CropMode::Center);
+        let _ = p.obs();
+    }
+
+    #[test]
+    fn serve_scale_dimensions() {
+        // paper: render 100, crop 84
+        let (env, _, mut rng) = pipe(CropMode::Center);
+        let mut p = PixelPipeline::new(100, 84, CropMode::Center);
+        p.observe(&env, &mut rng);
+        assert_eq!(p.obs().len(), 9 * 84 * 84);
+        assert_eq!(p.rgba_bytes().len(), 4 * 84 * 84);
+    }
+}

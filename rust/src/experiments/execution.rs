@@ -1,0 +1,213 @@
+//! On-device execution experiments: Figure 2 (per-frame time vs input
+//! size), Figure 3 (sustained 5,000-frame runs), Figure 4 (resource
+//! traces). All run on the calibrated device simulators over the real
+//! MiniConv-4 shader plan (DESIGN.md §2 substitution).
+
+use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
+use crate::shader::ir::{EncoderIr, Op};
+use crate::shader::plan;
+use crate::telemetry::Recorder;
+use crate::util::stats::Running;
+use crate::util::tables::Table;
+
+/// The deployed encoder: MiniConv-4 (3x 3x3-s2 conv+ReLU over 9 channels).
+pub fn miniconv4_ir() -> EncoderIr {
+    EncoderIr {
+        name: "miniconv4".into(),
+        input_channels: 9,
+        ops: (0..3)
+            .flat_map(|_| vec![Op::Conv { cout: 4, k: 3, stride: 2, same: true }, Op::Relu])
+            .collect(),
+    }
+}
+
+pub fn frame_cost(x: usize) -> FrameCost {
+    FrameCost::from_plan(&plan(&miniconv4_ir(), x).expect("miniconv4 plan"))
+}
+
+/// Figure 2: per-frame processing time (mean ± std of `reps` consecutive
+/// inferences) across devices as input size varies.
+pub fn fig2_framesize(devices: &[DeviceSpec], sizes: &[usize], reps: usize) -> Table {
+    let mut t = Table::new(
+        "Figure 2 — per-frame processing time vs input size (mean±sd of consecutive inferences)",
+        &["device", "X", "mean (ms)", "sd (ms)", "fps"],
+    );
+    for spec in devices {
+        for &x in sizes {
+            let cost = frame_cost(x);
+            let mut d = Device::new(spec.clone(), 42);
+            let mut stats = Running::new();
+            for _ in 0..reps {
+                stats.push(d.encode_frame(&cost, ExecPath::Gpu).duration);
+            }
+            t.row(&[
+                spec.name.to_string(),
+                x.to_string(),
+                format!("{:.1}", stats.mean() * 1e3),
+                format!("{:.2}", stats.std() * 1e3),
+                format!("{:.1}", 1.0 / stats.mean()),
+            ]);
+        }
+    }
+    t
+}
+
+/// One sustained run's trace + summary.
+pub struct SustainedTrace {
+    pub label: String,
+    pub recorder: Recorder,
+    pub head_mean_ms: f64,
+    pub tail_mean_ms: f64,
+}
+
+/// Run `frames` consecutive inferences and record per-frame telemetry.
+pub fn sustained_run(
+    label: &str,
+    spec: DeviceSpec,
+    x: usize,
+    frames: usize,
+    path: ExecPath,
+    seed: u64,
+) -> SustainedTrace {
+    let cost = frame_cost(x);
+    let mut d = Device::new(spec, seed);
+    let mut rec = Recorder::new();
+    for i in 0..frames {
+        let s = d.encode_frame(&cost, path);
+        rec.record(
+            i as f64,
+            &[
+                ("frame_ms", s.duration * 1e3),
+                ("temp_c", s.temp),
+                ("watts", s.watts),
+                ("ram_mb", s.ram_mb),
+                ("clock", s.clock_frac),
+            ],
+        );
+    }
+    let head = rec.head_mean("frame_ms", 200).unwrap_or(0.0);
+    let tail = rec.tail_mean("frame_ms", 200).unwrap_or(0.0);
+    SustainedTrace {
+        label: label.to_string(),
+        recorder: rec,
+        head_mean_ms: head,
+        tail_mean_ms: tail,
+    }
+}
+
+/// Figure 3: sustained inference over `frames` consecutive frames.
+/// (a) Jetson at 3000², power caps; (b) Pi Zero 2 W at 400², GL vs CPU.
+pub fn fig3_sustained(frames: usize) -> (Vec<SustainedTrace>, Table) {
+    let traces = vec![
+        sustained_run(
+            "jetson-nano (no limit, 3000²)",
+            crate::device::jetson_nano(None),
+            3000,
+            frames,
+            ExecPath::Gpu,
+            1,
+        ),
+        sustained_run(
+            "jetson-nano (5W cap, 3000²)",
+            crate::device::jetson_nano(Some(5.0)),
+            3000,
+            frames,
+            ExecPath::Gpu,
+            1,
+        ),
+        sustained_run(
+            "pi-zero-2w GPU/OpenGL (400²)",
+            crate::device::pi_zero_2w(),
+            400,
+            frames,
+            ExecPath::Gpu,
+            2,
+        ),
+        sustained_run(
+            "pi-zero-2w CPU/PyTorch (400²)",
+            crate::device::pi_zero_2w(),
+            400,
+            frames,
+            ExecPath::Cpu,
+            2,
+        ),
+    ];
+    let mut t = Table::new(
+        "Figure 3 — sustained inference (first-200 vs last-200 frame mean)",
+        &["condition", "head mean (ms)", "tail mean (ms)", "drift", "frame-time trace"],
+    );
+    for tr in &traces {
+        t.row(&[
+            tr.label.clone(),
+            format!("{:.1}", tr.head_mean_ms),
+            format!("{:.1}", tr.tail_mean_ms),
+            format!("{:.2}x", tr.tail_mean_ms / tr.head_mean_ms.max(1e-9)),
+            tr.recorder.sparkline("frame_ms", 40),
+        ]);
+    }
+    (traces, t)
+}
+
+/// Figure 4: resource usage during sustained inference — Pi Zero temp/RAM
+/// (CPU vs GPU), Jetson power/memory (5W vs none, 3000²).
+pub fn fig4_resources(frames: usize) -> (Vec<SustainedTrace>, Table) {
+    let traces = vec![
+        sustained_run("pi-zero-2w GPU", crate::device::pi_zero_2w(), 400, frames, ExecPath::Gpu, 3),
+        sustained_run("pi-zero-2w CPU", crate::device::pi_zero_2w(), 400, frames, ExecPath::Cpu, 3),
+        sustained_run("jetson (no limit)", crate::device::jetson_nano(None), 3000, frames, ExecPath::Gpu, 4),
+        sustained_run("jetson (5W)", crate::device::jetson_nano(Some(5.0)), 3000, frames, ExecPath::Gpu, 4),
+    ];
+    let mut t = Table::new(
+        "Figure 4 — resource usage during sustained inference",
+        &["condition", "final temp (°C)", "mean W", "RAM (MB)", "temp trace"],
+    );
+    for tr in &traces {
+        let temp = tr.recorder.tail_mean("temp_c", 50).unwrap_or(0.0);
+        let watts = tr.recorder.tail_mean("watts", frames).unwrap_or(0.0);
+        let ram = tr.recorder.tail_mean("ram_mb", 50).unwrap_or(0.0);
+        t.row(&[
+            tr.label.clone(),
+            format!("{temp:.1}"),
+            format!("{watts:.2}"),
+            format!("{ram:.0}"),
+            tr.recorder.sparkline("temp_c", 40),
+        ]);
+    }
+    (traces, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{all_devices, pi_zero_2w};
+
+    #[test]
+    fn fig2_has_row_per_device_size() {
+        let t = fig2_framesize(&all_devices(), &[100, 200], 10);
+        assert_eq!(t.n_rows(), 6);
+    }
+
+    #[test]
+    fn sustained_trace_records_all_series() {
+        let tr = sustained_run("x", pi_zero_2w(), 200, 50, ExecPath::Gpu, 0);
+        assert_eq!(tr.recorder.len(), 50);
+        for k in ["frame_ms", "temp_c", "watts", "ram_mb", "clock"] {
+            assert!(tr.recorder.get(k).is_some(), "{k} missing");
+        }
+        assert!(tr.head_mean_ms > 0.0);
+    }
+
+    #[test]
+    fn fig3_shapes_hold_at_reduced_length() {
+        let (traces, t) = fig3_sustained(1200);
+        assert_eq!(t.n_rows(), 4);
+        // jetson uncapped drifts up; capped starts slower
+        let jet_free = &traces[0];
+        let jet_cap = &traces[1];
+        assert!(jet_cap.head_mean_ms > 1.2 * jet_free.head_mean_ms);
+        // pi zero: cpu slower than gpu
+        let gpu = &traces[2];
+        let cpu = &traces[3];
+        assert!(cpu.head_mean_ms > 1.5 * gpu.head_mean_ms);
+    }
+}

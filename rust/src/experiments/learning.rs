@@ -1,0 +1,205 @@
+//! Learning experiments: Table 1 (algorithm per task) and Tables 2–4
+//! (episodic-return statistics per encoder), driven through the generic
+//! trainer over the AOT artifacts.
+//!
+//! Scale note (DESIGN.md §2): paper-scale is 1,000–2,000 episodes of pixel
+//! RL — far beyond this CPU testbed for a default run. `LearningScale`
+//! selects the budget; Smoke/Tiny preserve the within-task comparison
+//! machinery (same encoders, same pipeline) at reduced episode counts and
+//! are what CI exercises. Paper scale is available behind the same flag.
+
+use anyhow::Result;
+
+use crate::rl::{TrainConfig, Trainer};
+use crate::runtime::Runtime;
+use crate::util::tables::Table;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearningScale {
+    /// a handful of episodes — pipeline proof, minutes of CPU
+    Smoke,
+    /// enough to see a learning trend on pendulum
+    Tiny,
+    /// the paper's episode budgets (Tables 2-4) — hours/days of CPU
+    Paper,
+}
+
+impl LearningScale {
+    pub fn parse(s: &str) -> Result<LearningScale> {
+        match s {
+            "smoke" => Ok(LearningScale::Smoke),
+            "tiny" => Ok(LearningScale::Tiny),
+            "paper" => Ok(LearningScale::Paper),
+            other => anyhow::bail!("unknown scale {other:?} (smoke|tiny|paper)"),
+        }
+    }
+
+    pub fn episodes(&self, task: &str, paper_episodes: usize) -> usize {
+        match self {
+            LearningScale::Smoke => 3,
+            LearningScale::Tiny => {
+                if task == "pendulum" {
+                    40
+                } else {
+                    20
+                }
+            }
+            LearningScale::Paper => paper_episodes,
+        }
+    }
+
+    pub fn config(&self, task: &str, paper_episodes: usize, seed: u64) -> TrainConfig {
+        let episodes = self.episodes(task, paper_episodes);
+        match self {
+            LearningScale::Smoke => TrainConfig {
+                episodes,
+                warmup_steps: 100,
+                train_freq: 16,
+                rollout_steps: 64,
+                ppo_epochs: 2,
+                seed,
+                log_every: 1,
+                ..TrainConfig::default()
+            },
+            LearningScale::Tiny => TrainConfig {
+                episodes,
+                warmup_steps: 400,
+                train_freq: 4,
+                rollout_steps: 256,
+                ppo_epochs: 6,
+                seed,
+                log_every: 5,
+                ..TrainConfig::default()
+            },
+            LearningScale::Paper => TrainConfig {
+                episodes,
+                warmup_steps: 1000,
+                train_freq: 2,
+                rollout_steps: 2048,
+                ppo_epochs: 10,
+                replay_capacity: 50_000,
+                seed,
+                log_every: 10,
+                ..TrainConfig::default()
+            },
+        }
+    }
+}
+
+/// Table 1: algorithm used for each visual control task.
+pub fn table1_algorithms(rt: &Runtime) -> Table {
+    let mut t = Table::new(
+        "Table 1 — algorithms used for each visual control task",
+        &["task", "algorithm", "action dim", "episodes (paper)", "artifacts present"],
+    );
+    let mut seen = std::collections::BTreeSet::new();
+    for ts in rt.manifest.trainstates.values() {
+        if !seen.insert(ts.task.clone()) {
+            continue;
+        }
+        let present = ts
+            .artifacts
+            .values()
+            .all(|a| rt.manifest.artifact(a).is_ok());
+        t.row(&[
+            ts.task.clone(),
+            ts.algo.to_uppercase(),
+            ts.action_dim.to_string(),
+            ts.episodes.to_string(),
+            present.to_string(),
+        ]);
+    }
+    t
+}
+
+/// One row of a learning table (Tables 2–4).
+pub struct LearningRow {
+    pub arch: String,
+    pub best: f64,
+    pub final_100: f64,
+    pub mean: f64,
+    pub episodes: usize,
+    pub updates: usize,
+}
+
+/// Train every encoder variant on `task` at the given scale and emit the
+/// paper's Best/Final/Mean table (single fixed-seed run, as in the paper).
+pub fn learning_table(
+    rt: &Runtime,
+    task: &str,
+    archs: &[&str],
+    scale: LearningScale,
+    seed: u64,
+) -> Result<(Table, Vec<LearningRow>)> {
+    let mut rows = Vec::new();
+    for arch in archs {
+        let run = format!("{task}_{arch}");
+        let spec = rt
+            .manifest
+            .trainstates
+            .get(&run)
+            .ok_or_else(|| anyhow::anyhow!("no trainstate {run}"))?;
+        let cfg = scale.config(task, spec.episodes, seed);
+        let mut trainer = Trainer::new(rt, &run, cfg)?;
+        trainer.train()?;
+        rows.push(LearningRow {
+            arch: arch.to_string(),
+            best: trainer.report.stats.best(),
+            final_100: trainer.report.stats.final_100(),
+            mean: trainer.report.stats.mean(),
+            episodes: trainer.report.stats.episodes(),
+            updates: trainer.report.updates,
+        });
+    }
+    let algo = rt.manifest.trainstates[&format!("{task}_{}", archs[0])]
+        .algo
+        .to_uppercase();
+    let mut t = Table::new(
+        &format!("{task} ({algo}): episodic return statistics (single fixed-seed run)"),
+        &["architecture", "best", "final", "mean", "episodes", "updates"],
+    );
+    for r in &rows {
+        t.row(&[
+            pretty_arch(&r.arch),
+            format!("{:.0}", r.best),
+            format!("{:.0}", r.final_100),
+            format!("{:.0}", r.mean),
+            r.episodes.to_string(),
+            r.updates.to_string(),
+        ]);
+    }
+    Ok((t, rows))
+}
+
+fn pretty_arch(a: &str) -> String {
+    match a {
+        "miniconv4" => "MiniConv encoder (K=4)".into(),
+        "miniconv16" => "MiniConv encoder (K=16)".into(),
+        "fullcnn" => "Full-CNN".into(),
+        other => other.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parsing() {
+        assert_eq!(LearningScale::parse("tiny").unwrap(), LearningScale::Tiny);
+        assert!(LearningScale::parse("huge").is_err());
+    }
+
+    #[test]
+    fn episode_budgets() {
+        assert_eq!(LearningScale::Smoke.episodes("pendulum", 1000), 3);
+        assert_eq!(LearningScale::Tiny.episodes("pendulum", 1000), 40);
+        assert_eq!(LearningScale::Paper.episodes("walker", 2000), 2000);
+    }
+
+    #[test]
+    fn pretty_arch_names_match_paper() {
+        assert_eq!(pretty_arch("miniconv4"), "MiniConv encoder (K=4)");
+        assert_eq!(pretty_arch("fullcnn"), "Full-CNN");
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment harnesses: one function per paper table/figure, shared by the
+//! CLI (`miniconv exp …`) and the bench binaries (`cargo bench`). Each
+//! returns printable tables (and CSV recorders for the figure traces), so
+//! results are diffable against EXPERIMENTS.md.
+
+pub mod execution;
+pub mod learning;
+pub mod serving;
+
+pub use execution::{fig2_framesize, fig3_sustained, fig4_resources, SustainedTrace};
+pub use learning::{learning_table, table1_algorithms, LearningScale};
+pub use serving::{fig5_breakdown, table5_latency_sim, table6_scalability_sim, ServerCostModel};

@@ -1,0 +1,300 @@
+//! Serving experiments: Figure 5 (decision-latency breakdown), Table 5
+//! (end-to-end decision latency under bandwidth shaping) and Table 6
+//! (server scalability), in two modes:
+//!
+//!   * **sim** — paper-scale (X=400) over the analytic link model, the
+//!     Pi Zero 2 W device simulator, and a GPU-server cost model calibrated
+//!     to the paper's residuals (see [`ServerCostModel`]); deterministic.
+//!   * **real** — task-scale (X=84) over the actual coordinator, loopback
+//!     TCP, and PJRT executables (driven from benches/examples).
+
+use crate::analysis::latency::DecisionBreakdown;
+use crate::device::{Device, ExecPath};
+use crate::net::shaped::LinkModel;
+use crate::util::rng::Rng;
+use crate::util::simclock::EventQueue;
+use crate::util::stats::Samples;
+use crate::util::tables::Table;
+
+use super::execution::frame_cost;
+
+/// Server-side compute model for the paper's GPU server. Calibrated from
+/// the paper's Table 5 residuals: at 100 Mb/s server-only = 90 ms with a
+/// 51.2 ms uplink, leaving ~38 ms of RTT+compute; the split pipeline's
+/// non-device residual is ~36 ms — i.e. a ~30 ms network/framework floor
+/// plus single-digit-ms model times.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerCostModel {
+    /// one-way link latency (includes framework overhead), s
+    pub one_way_latency: f64,
+    /// Full-CNN policy execution per request, s
+    pub full_compute: f64,
+    /// head-only execution per request, s
+    pub head_compute: f64,
+    pub action_bytes: usize,
+}
+
+impl Default for ServerCostModel {
+    fn default() -> Self {
+        ServerCostModel {
+            one_way_latency: 0.015,
+            full_compute: 0.008,
+            head_compute: 0.005,
+            action_bytes: 64,
+        }
+    }
+}
+
+/// Median on-device encode time at size `x` on the Pi Zero 2 W (GL path).
+pub fn device_j(x: usize, reps: usize) -> f64 {
+    let mut d = Device::new(crate::device::pi_zero_2w(), 7);
+    let cost = frame_cost(x);
+    let mut s = Samples::new();
+    for _ in 0..reps {
+        s.push(d.encode_frame(&cost, ExecPath::Gpu).duration);
+    }
+    s.median()
+}
+
+/// Figure 5: component breakdown of one decision for both pipelines.
+pub fn fig5_breakdown(x: usize, bandwidth_bps: f64, model: &ServerCostModel) -> Table {
+    let link = LinkModel::new(bandwidth_bps, model.one_way_latency);
+    let j = device_j(x, 200);
+    let so = DecisionBreakdown::server_only(&link, x, model.full_compute, model.action_bytes);
+    let sp = DecisionBreakdown::split(&link, x, 3, 4, j, model.head_compute, model.action_bytes);
+    let mut t = Table::new(
+        &format!(
+            "Figure 5 — decision-latency components (X={x}, {:.0} Mb/s)",
+            bandwidth_bps / 1e6
+        ),
+        &["component", "server-only (ms)", "split-policy (ms)"],
+    );
+    let ms = |v: f64| format!("{:.1}", v * 1e3);
+    t.row(&["on-device encode".into(), ms(so.device_encode), ms(sp.device_encode)]);
+    t.row(&["observation/feature uplink".into(), ms(so.uplink), ms(sp.uplink)]);
+    t.row(&["server compute".into(), ms(so.server_compute), ms(sp.server_compute)]);
+    t.row(&["action downlink".into(), ms(so.downlink), ms(sp.downlink)]);
+    t.row(&["TOTAL".into(), ms(so.total()), ms(sp.total())]);
+    t
+}
+
+/// Table 5 (sim mode): median end-to-end decision latency under bandwidth
+/// shaping at paper scale (X=400, n=3, K=4, Pi Zero 2 W device).
+pub fn table5_latency_sim(
+    bandwidths_mbps: &[f64],
+    decisions: usize,
+    model: &ServerCostModel,
+) -> Table {
+    let x = 400;
+    let cost = frame_cost(x);
+    let mut t = Table::new(
+        "Table 5 — end-to-end decision latency under bandwidth shaping (median, X=400)",
+        &["bandwidth", "server-only (ms)", "split-policy (ms)", "winner"],
+    );
+    for &mbps in bandwidths_mbps {
+        let link = LinkModel::new(mbps * 1e6, model.one_way_latency);
+        let mut so = Samples::new();
+        let mut sp = Samples::new();
+        // fresh devices per condition; per-decision j varies with jitter
+        let mut dev = Device::new(crate::device::pi_zero_2w(), 11);
+        for _ in 0..decisions {
+            so.push(
+                DecisionBreakdown::server_only(&link, x, model.full_compute, model.action_bytes)
+                    .total(),
+            );
+            let j = dev.encode_frame(&cost, ExecPath::Gpu).duration;
+            sp.push(
+                DecisionBreakdown::split(&link, x, 3, 4, j, model.head_compute, model.action_bytes)
+                    .total(),
+            );
+        }
+        let (mso, msp) = (so.median() * 1e3, sp.median() * 1e3);
+        t.row(&[
+            format!("{mbps:.0} Mb/s"),
+            format!("{mso:.0}"),
+            format!("{msp:.0}"),
+            (if msp < mso { "split" } else { "server-only" }).into(),
+        ]);
+    }
+    t
+}
+
+/// Discrete-event simulation of the multi-client server (Table 6): `n`
+/// clients at `rate_hz`, batched service with per-batch fixed cost +
+/// per-item cost. Returns the p95 decision latency in seconds.
+///
+/// Service-cost calibration mirrors the paper's GPU server: full-CNN
+/// requests cost ~7 ms/item after a 2 ms batch overhead (≈ 12 clients at
+/// 10 Hz under 100 ms p95); head-only requests cost ~2.2 ms/item (≈ 36).
+pub fn simulate_scalability(
+    n_clients: usize,
+    rate_hz: f64,
+    duration_s: f64,
+    batch_overhead: f64,
+    per_item: f64,
+    uplink_per_req: f64,
+    max_batch: usize,
+    seed: u64,
+) -> f64 {
+    #[derive(Debug)]
+    enum Ev {
+        Arrival { client: usize },
+        ServerDone,
+    }
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut rng = Rng::new(seed);
+    // staggered client phases
+    for c in 0..n_clients {
+        q.push(rng.uniform() / rate_hz, Ev::Arrival { client: c });
+    }
+    let mut waiting: Vec<(f64, usize)> = Vec::new(); // (arrival time, client)
+    let mut busy_until = 0.0f64;
+    let mut server_busy = false;
+    let mut latencies = Samples::new();
+
+    while let Some((t, ev)) = q.pop() {
+        if t > duration_s {
+            break;
+        }
+        match ev {
+            Ev::Arrival { client } => {
+                waiting.push((t + uplink_per_req, client));
+                q.push(t + 1.0 / rate_hz, Ev::Arrival { client });
+                if !server_busy {
+                    server_busy = true;
+                    q.push(t.max(busy_until), Ev::ServerDone);
+                }
+            }
+            Ev::ServerDone => {
+                // take a batch of everything whose uplink has landed
+                let mut ready: Vec<(f64, usize)> = Vec::new();
+                waiting.retain(|&(arr, c)| {
+                    if arr <= t && ready.len() < max_batch {
+                        ready.push((arr, c));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if ready.is_empty() {
+                    if waiting.is_empty() {
+                        server_busy = false;
+                    } else {
+                        // wait for the next uplink to land
+                        let next = waiting.iter().map(|&(a, _)| a).fold(f64::MAX, f64::min);
+                        q.push(next.max(t), Ev::ServerDone);
+                    }
+                    continue;
+                }
+                let service = batch_overhead + per_item * ready.len() as f64;
+                let done = t + service;
+                busy_until = done;
+                for (arr, _) in &ready {
+                    // decision latency: request issued (arr - uplink) -> done
+                    latencies.push(done - (arr - uplink_per_req));
+                }
+                q.push(done, Ev::ServerDone);
+            }
+        }
+    }
+    if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.p95()
+    }
+}
+
+/// Table 6 (sim mode): maximum concurrent clients at `rate_hz` under a p95
+/// decision-latency budget.
+pub fn table6_scalability_sim(rate_hz: f64, p95_budget_s: f64) -> (Table, usize, usize) {
+    let find_max = |batch_overhead: f64, per_item: f64, uplink: f64| -> usize {
+        let mut best = 0;
+        for n in 1..200 {
+            let p95 = simulate_scalability(n, rate_hz, 30.0, batch_overhead, per_item, uplink, 32, 5);
+            if p95 <= p95_budget_s && p95 > 0.0 {
+                best = n;
+            } else if n > best + 4 {
+                break;
+            }
+        }
+        best
+    };
+    // server-only: full-CNN per item; split: head-only per item.
+    let server_only = find_max(0.002, 0.0075, 0.013);
+    let split = find_max(0.002, 0.0026, 0.002);
+    let mut t = Table::new(
+        "Table 6 — server scalability at a fixed decision rate",
+        &["constraint", "server-only", "split-policy"],
+    );
+    t.row(&[
+        format!("{rate_hz:.0}Hz per client, p95 < {:.0}ms", p95_budget_s * 1e3),
+        format!("{server_only} clients"),
+        format!("{split} clients"),
+    ]);
+    (t, server_only, split)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::breakeven::{feature_bits, raw_bits};
+
+    #[test]
+    fn device_j_near_paper_anchor() {
+        let j = device_j(400, 100);
+        assert!((0.08..0.13).contains(&j), "j={j}");
+    }
+
+    #[test]
+    fn table5_sim_matches_paper_shape() {
+        let t = table5_latency_sim(&[10.0, 25.0, 50.0, 100.0], 100, &ServerCostModel::default());
+        let csv = t.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        // 10 & 25 Mb/s -> split wins; 100 -> server-only wins
+        assert!(rows[0].ends_with("split"), "{}", rows[0]);
+        assert!(rows[1].ends_with("split"), "{}", rows[1]);
+        assert!(rows[3].ends_with("server-only"), "{}", rows[3]);
+        // magnitudes: server-only @10 in the 500s of ms; split ~140
+        let so10: f64 = rows[0].split(',').nth(1).unwrap().parse().unwrap();
+        let sp10: f64 = rows[0].split(',').nth(2).unwrap().parse().unwrap();
+        assert!((450.0..650.0).contains(&so10), "{so10}");
+        assert!((100.0..200.0).contains(&sp10), "{sp10}");
+    }
+
+    #[test]
+    fn scalability_sim_split_serves_about_3x() {
+        let (_t, so, sp) = table6_scalability_sim(10.0, 0.1);
+        assert!((8..=18).contains(&so), "server-only {so}");
+        assert!((25..=50).contains(&sp), "split {sp}");
+        let ratio = sp as f64 / so as f64;
+        assert!((2.0..4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn p95_grows_with_load() {
+        let light = simulate_scalability(2, 10.0, 20.0, 0.002, 0.007, 0.013, 32, 1);
+        let heavy = simulate_scalability(40, 10.0, 20.0, 0.002, 0.007, 0.013, 32, 1);
+        assert!(heavy > 2.0 * light, "light {light} heavy {heavy}");
+    }
+
+    #[test]
+    fn fig5_total_row_consistent() {
+        let t = fig5_breakdown(400, 10e6, &ServerCostModel::default());
+        let csv = t.to_csv();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').skip(1).map(|v| v.parse().unwrap()).collect())
+            .collect();
+        for col in 0..2 {
+            let sum: f64 = rows[..4].iter().map(|r| r[col]).sum();
+            assert!((sum - rows[4][col]).abs() < 0.2, "col {col}: {sum} vs {}", rows[4][col]);
+        }
+    }
+
+    #[test]
+    fn bits_helpers_consistent_with_wire() {
+        assert_eq!(raw_bits(84) as usize, 84 * 84 * 32);
+        assert_eq!(feature_bits(84, 3, 4) as usize, 4 * 11 * 11 * 8);
+    }
+}

@@ -1,0 +1,28 @@
+//! # MiniConv: tiny, on-device decision makers
+//!
+//! Reproduction of *"Tiny, On-Device Decision Makers with the MiniConv
+//! Library"* (Purves, 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time Python)** — MiniConv/Full-CNN encoders and
+//!   PPO/SAC/DDPG train steps written in JAX over shader-pass-structured
+//!   Pallas kernels, AOT-lowered to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — everything at runtime: the PJRT [`runtime`],
+//!   the split-policy serving [`coordinator`], the OpenGL [`shader`]
+//!   toolchain, simulated edge [`device`]s, the shaped [`net`] stack,
+//!   pixel-observation [`envs`], and the generic [`rl`] trainer.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod util;
+pub mod tensor;
+pub mod runtime;
+pub mod shader;
+pub mod envs;
+pub mod device;
+pub mod net;
+pub mod coordinator;
+pub mod rl;
+pub mod analysis;
+pub mod telemetry;
+pub mod experiments;

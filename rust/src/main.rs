@@ -1,0 +1,362 @@
+//! `miniconv` — CLI launcher for the split-policy serving stack.
+//!
+//! Subcommands:
+//!   info                     manifest/artifact summary
+//!   serve                    run the coordinator (Ctrl-C to stop)
+//!   fleet                    drive a client fleet against a server
+//!   train                    train one (task, encoder) run
+//!   exp <experiment>         regenerate a paper table/figure
+//!   shader                   emit the GLSL shader sources for an encoder
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use miniconv::coordinator::{
+    merged_latencies, run_fleet, serve, BatchPolicy, ClientConfig, Route, ServerConfig,
+};
+use miniconv::experiments as exp;
+use miniconv::experiments::learning::LearningScale;
+use miniconv::rl::Trainer;
+use miniconv::runtime::{default_artifact_dir, Runtime};
+use miniconv::util::argparse::Parser;
+use miniconv::util::tables::Table;
+
+fn main() {
+    init_logging();
+    let args: Vec<String> = std::env::args().collect();
+    let cmd = args.get(1).cloned().unwrap_or_default();
+    let rest: Vec<String> = std::iter::once(format!("miniconv {cmd}"))
+        .chain(args.iter().skip(2).cloned())
+        .collect();
+    let result = match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "serve" => cmd_serve(rest),
+        "fleet" => cmd_fleet(rest),
+        "train" => cmd_train(rest),
+        "exp" => cmd_exp(rest),
+        "shader" => cmd_shader(rest),
+        _ => {
+            eprintln!(
+                "usage: miniconv <info|serve|fleet|train|exp|shader> [options]\n\
+                 run `miniconv <cmd> --help` for details"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn init_logging() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: Stderr = Stderr;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Info);
+}
+
+fn runtime() -> Result<Runtime> {
+    Runtime::new(&default_artifact_dir())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let _ = Parser::new("print manifest / artifact summary").parse_from(argv);
+    let rt = runtime()?;
+    let m = &rt.manifest;
+    println!("artifact dir : {}", m.dir.display());
+    println!("serve X      : {} (obs {}x{}x{})", m.serve_x, m.obs_channels, m.serve_x, m.serve_x);
+    println!("tiny X       : {}", m.tiny_x);
+    println!("artifacts    : {}", m.artifacts.len());
+    println!("param files  : {}", m.params.len());
+    println!("trainstates  : {}", m.trainstates.len());
+    let mut t = Table::new("encoders", &["name", "kind", "shader", "feat (serve)", "params"]);
+    for (name, (serve, _)) in &m.encoders {
+        t.row(&[
+            name.clone(),
+            serve.kind.clone(),
+            serve.shader_deployable.to_string(),
+            format!("{:?}", serve.feat_shape),
+            serve.param_count().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Parser::new("run the split-policy coordinator")
+        .opt("addr", "127.0.0.1:7700", "bind address")
+        .opt("arch", "miniconv4", "split-route encoder")
+        .opt("max-batch", "32", "dynamic batch cap")
+        .opt("max-wait-ms", "3", "batching wait budget (ms)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let handle = serve(ServerConfig {
+        addr: a.str("addr"),
+        arch: a.str("arch"),
+        policy: BatchPolicy {
+            max_batch: a.usize("max-batch"),
+            max_wait: Duration::from_millis(a.u64("max-wait-ms")),
+        },
+        ..ServerConfig::default()
+    })?;
+    println!("coordinator listening on {} (Ctrl-C to stop)", handle.addr);
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        let m = handle.metrics.snapshot();
+        println!(
+            "split: {} reqs (mean batch {:.1}, p95 {:.1}ms) | server-only: {} reqs (p95 {:.1}ms) | dropped {}",
+            m.split.requests,
+            m.split.mean_batch(),
+            m.split.service.quantile_ns(0.95) / 1e6,
+            m.full.requests,
+            m.full.service.quantile_ns(0.95) / 1e6,
+            m.dropped
+        );
+    }
+}
+
+fn cmd_fleet(argv: Vec<String>) -> Result<()> {
+    let a = Parser::new("drive a client fleet against a coordinator")
+        .opt("addr", "127.0.0.1:7700", "server address")
+        .opt("n", "4", "number of clients")
+        .opt("mode", "split", "split | server-only")
+        .opt("decisions", "100", "decisions per client")
+        .opt("rate", "0", "fixed decision rate Hz (0 = closed loop)")
+        .opt("bw", "0", "uplink shaping, Mb/s (0 = unshaped)")
+        .opt("device", "none", "device sim for encode time (pi-zero-2w|pi-4b|jetson-nano|none)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let addr: std::net::SocketAddr = a.str("addr").parse()?;
+    let mode = match a.str("mode").as_str() {
+        "split" => Route::Split,
+        "server-only" | "full" => Route::Full,
+        other => anyhow::bail!("bad mode {other}"),
+    };
+    let rate = a.f64("rate");
+    let bw = a.f64("bw");
+    let cfg = ClientConfig {
+        mode,
+        decisions: a.usize("decisions"),
+        rate_hz: (rate > 0.0).then_some(rate),
+        shape_bps: (bw > 0.0).then_some(bw * 1e6),
+        device: match a.str("device").as_str() {
+            "none" => None,
+            name => Some(miniconv::device::by_name(name)?),
+        },
+        ..ClientConfig::default()
+    };
+    let reports = run_fleet(addr, a.usize("n"), &cfg)?;
+    let mut all = merged_latencies(&reports);
+    let mut t = Table::new(
+        "fleet results",
+        &["clients", "decisions", "median (ms)", "p95 (ms)", "throughput (dec/s)"],
+    );
+    let total: usize = reports.iter().map(|r| r.decisions).sum();
+    let hz: f64 = reports.iter().map(|r| r.achieved_hz()).sum();
+    t.row(&[
+        reports.len().to_string(),
+        total.to_string(),
+        format!("{:.1}", all.median() * 1e3),
+        format!("{:.1}", all.p95() * 1e3),
+        format!("{hz:.1}"),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = Parser::new("train one (task, encoder) run via the AOT artifacts")
+        .opt("run", "pendulum_miniconv4", "trainstate name (task_arch)")
+        .opt("scale", "smoke", "smoke | tiny | paper")
+        .opt("seed", "0", "rng seed")
+        .opt("eval-episodes", "2", "deterministic eval episodes after training")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rt = runtime()?;
+    let run = a.str("run");
+    let spec = rt
+        .manifest
+        .trainstates
+        .get(&run)
+        .ok_or_else(|| anyhow::anyhow!("unknown run {run}"))?;
+    let scale = LearningScale::parse(&a.str("scale"))?;
+    let cfg = scale.config(&spec.task, spec.episodes, a.u64("seed"));
+    println!("training {run}: {} episodes ({:?} scale)", cfg.episodes, scale);
+    let mut trainer = Trainer::new(&rt, &run, cfg)?;
+    trainer.train()?;
+    let s = &trainer.report.stats;
+    let mut t = Table::new("result", &["best", "final", "mean", "episodes", "env steps", "updates"]);
+    t.row(&[
+        format!("{:.0}", s.best()),
+        format!("{:.0}", s.final_100()),
+        format!("{:.0}", s.mean()),
+        s.episodes().to_string(),
+        trainer.report.env_steps.to_string(),
+        trainer.report.updates.to_string(),
+    ]);
+    t.print();
+    let eval_eps = a.usize("eval-episodes");
+    if eval_eps > 0 {
+        println!("eval ({} episodes, deterministic): {:.1}", eval_eps, trainer.evaluate(eval_eps)?);
+    }
+    Ok(())
+}
+
+fn cmd_exp(argv: Vec<String>) -> Result<()> {
+    let which = argv.get(1).cloned().unwrap_or_default();
+    let rest: Vec<String> = std::iter::once(format!("miniconv exp {which}"))
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+    match which.as_str() {
+        "learning" => {
+            let a = Parser::new("Tables 2-4: learning stats per encoder")
+                .opt("task", "pendulum", "pendulum | hopper | walker")
+                .opt("scale", "smoke", "smoke | tiny | paper")
+                .opt("seed", "0", "seed")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let rt = runtime()?;
+            let scale = LearningScale::parse(&a.str("scale"))?;
+            let (t, _) = exp::learning_table(
+                &rt,
+                &a.str("task"),
+                &["miniconv4", "miniconv16", "fullcnn"],
+                scale,
+                a.u64("seed"),
+            )?;
+            t.print();
+        }
+        "table1" => {
+            let rt = runtime()?;
+            exp::table1_algorithms(&rt).print();
+        }
+        "fig2" => {
+            let a = Parser::new("Figure 2: frame time vs input size")
+                .opt("reps", "100", "inferences per point")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            exp::fig2_framesize(
+                &miniconv::device::all_devices(),
+                &[100, 200, 300, 400, 500, 750, 1000, 1500, 2000, 3000],
+                a.usize("reps"),
+            )
+            .print();
+        }
+        "fig3" => {
+            let a = Parser::new("Figure 3: sustained inference")
+                .opt("frames", "5000", "consecutive frames")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let (_, t) = exp::fig3_sustained(a.usize("frames"));
+            t.print();
+        }
+        "fig4" => {
+            let a = Parser::new("Figure 4: resource usage")
+                .opt("frames", "5000", "consecutive frames")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let (_, t) = exp::fig4_resources(a.usize("frames"));
+            t.print();
+        }
+        "fig5" => {
+            let a = Parser::new("Figure 5: decision-latency breakdown")
+                .opt("bw", "10", "bandwidth Mb/s")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            exp::fig5_breakdown(400, a.f64("bw") * 1e6, &exp::ServerCostModel::default()).print();
+        }
+        "table5" => {
+            let a = Parser::new("Table 5: decision latency under shaping (sim, X=400)")
+                .opt("decisions", "1000", "decisions per setting")
+                .parse_from(rest)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            exp::table5_latency_sim(
+                &[10.0, 25.0, 50.0, 100.0],
+                a.usize("decisions"),
+                &exp::ServerCostModel::default(),
+            )
+            .print();
+        }
+        "table6" => {
+            let (t, _, _) = exp::table6_scalability_sim(10.0, 0.1);
+            t.print();
+        }
+        "breakeven" => {
+            let mut t = Table::new(
+                "break-even bandwidth B = 32X²(1 - K/(4·2²ⁿ))/j",
+                &["X", "K", "n", "j (ms)", "break-even (Mb/s)"],
+            );
+            let j = exp::serving::device_j(400, 200);
+            for (x, k) in [(400usize, 4usize), (400, 16), (84, 4), (84, 16)] {
+                let b = miniconv::analysis::breakeven_bandwidth_bps(x, 3, k, j);
+                t.row(&[
+                    x.to_string(),
+                    k.to_string(),
+                    "3".into(),
+                    format!("{:.0}", j * 1e3),
+                    format!("{:.1}", b / 1e6),
+                ]);
+            }
+            t.print();
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (learning|table1|fig2|fig3|fig4|fig5|table5|table6|breakeven)"
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_shader(argv: Vec<String>) -> Result<()> {
+    let a = Parser::new("emit GLSL fragment shaders for a MiniConv encoder")
+        .opt("arch", "miniconv4", "miniconv4 | miniconv16")
+        .opt("x", "84", "input size")
+        .opt("out", "", "output directory (default: print to stdout)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rt = runtime()?;
+    let arch = a.str("arch");
+    let (serve_meta, _) = rt
+        .manifest
+        .encoders
+        .get(&arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {arch}"))?;
+    let ir = miniconv::shader::EncoderIr::from_meta(&arch, rt.manifest.obs_channels, serve_meta);
+    let plan = miniconv::shader::plan(&ir, a.usize("x"))?;
+    let shaders = miniconv::shader::gen_all(&plan);
+    println!(
+        "// {} @ X={}: {} passes, {} texture samples/frame, peak {} textures",
+        arch,
+        a.usize("x"),
+        plan.passes.len(),
+        plan.total_samples(),
+        plan.peak_textures()
+    );
+    let out = a.str("out");
+    if out.is_empty() {
+        for s in &shaders {
+            println!("// ---- {} ----\n{}", s.name, s.fragment);
+        }
+    } else {
+        std::fs::create_dir_all(&out)?;
+        std::fs::write(format!("{out}/vertex.glsl"), miniconv::shader::VERTEX_SHADER)?;
+        for s in &shaders {
+            std::fs::write(format!("{out}/{}.frag", s.name), &s.fragment)?;
+        }
+        println!("wrote {} shaders to {out}/", shaders.len() + 1);
+    }
+    Ok(())
+}

@@ -1,0 +1,320 @@
+//! Wire protocol for the split-policy client/server loop.
+//!
+//! Both observation formats are **uncompressed uint8 buffers**, exactly as
+//! the paper specifies (§4.2): a server-only request carries the full RGBA
+//! frame (4·X² bytes); a split request carries the K-channel feature map
+//! (K·(X/2ⁿ)² bytes) quantised to u8 with a per-message scale (features are
+//! post-ReLU, so [0, scale] covers them).
+//!
+//! Frame layout: `[u32 len][u8 msg_type][payload…]`, little-endian.
+
+use anyhow::{bail, ensure, Result};
+
+pub const MSG_REQUEST_RAW: u8 = 1;
+pub const MSG_REQUEST_FEAT: u8 = 2;
+pub const MSG_RESPONSE: u8 = 3;
+pub const MSG_HELLO: u8 = 4;
+
+/// Maximum accepted frame body (64 MB — a 4000² RGBA frame is 64 MB).
+pub const MAX_FRAME: usize = 64 << 20;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Full RGBA observation, x·x·4 bytes (server-only pipeline).
+    RawRgba { x: u16, data: Vec<u8> },
+    /// Quantised feature map (split pipeline).
+    Features { c: u16, h: u16, w: u16, scale: f32, data: Vec<u8> },
+}
+
+impl Payload {
+    /// Bytes this payload puts on the wire (body only) — the quantity the
+    /// paper's bandwidth model counts.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::RawRgba { data, .. } => data.len(),
+            Payload::Features { data, .. } => data.len(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub client: u32,
+    pub id: u64,
+    pub payload: Payload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub client: u32,
+    pub id: u64,
+    pub action: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub client: u32,
+    /// "server-only" | "split"
+    pub split: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello(Hello),
+    Request(Request),
+    Response(Response),
+}
+
+fn put_u16(v: &mut Vec<u8>, x: u16) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_f32(v: &mut Vec<u8>, x: f32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.b.len(), "truncated message");
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.b.len()
+    }
+}
+
+impl Msg {
+    /// Encode as a length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        let ty = match self {
+            Msg::Hello(h) => {
+                put_u32(&mut body, h.client);
+                body.push(h.split as u8);
+                MSG_HELLO
+            }
+            Msg::Request(r) => match &r.payload {
+                Payload::RawRgba { x, data } => {
+                    put_u32(&mut body, r.client);
+                    put_u64(&mut body, r.id);
+                    put_u16(&mut body, *x);
+                    body.extend_from_slice(data);
+                    MSG_REQUEST_RAW
+                }
+                Payload::Features { c, h, w, scale, data } => {
+                    put_u32(&mut body, r.client);
+                    put_u64(&mut body, r.id);
+                    put_u16(&mut body, *c);
+                    put_u16(&mut body, *h);
+                    put_u16(&mut body, *w);
+                    put_f32(&mut body, *scale);
+                    body.extend_from_slice(data);
+                    MSG_REQUEST_FEAT
+                }
+            },
+            Msg::Response(r) => {
+                put_u32(&mut body, r.client);
+                put_u64(&mut body, r.id);
+                put_u16(&mut body, r.action.len() as u16);
+                for a in &r.action {
+                    put_f32(&mut body, *a);
+                }
+                MSG_RESPONSE
+            }
+        };
+        let mut out = Vec::with_capacity(5 + body.len());
+        put_u32(&mut out, (body.len() + 1) as u32);
+        out.push(ty);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame body (`ty` byte + payload, no length prefix).
+    pub fn decode(frame: &[u8]) -> Result<Msg> {
+        ensure!(!frame.is_empty(), "empty frame");
+        let ty = frame[0];
+        let mut r = Reader { b: &frame[1..], pos: 0 };
+        let msg = match ty {
+            MSG_HELLO => {
+                let client = r.u32()?;
+                let split = r.take(1)?[0] != 0;
+                Msg::Hello(Hello { client, split })
+            }
+            MSG_REQUEST_RAW => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let x = r.u16()?;
+                let need = x as usize * x as usize * 4;
+                let data = r.take(need)?.to_vec();
+                Msg::Request(Request { client, id, payload: Payload::RawRgba { x, data } })
+            }
+            MSG_REQUEST_FEAT => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let c = r.u16()?;
+                let h = r.u16()?;
+                let w = r.u16()?;
+                let scale = r.f32()?;
+                let need = c as usize * h as usize * w as usize;
+                let data = r.take(need)?.to_vec();
+                Msg::Request(Request {
+                    client,
+                    id,
+                    payload: Payload::Features { c, h, w, scale, data },
+                })
+            }
+            MSG_RESPONSE => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let n = r.u16()? as usize;
+                let mut action = Vec::with_capacity(n);
+                for _ in 0..n {
+                    action.push(r.f32()?);
+                }
+                Msg::Response(Response { client, id, action })
+            }
+            other => bail!("unknown message type {other}"),
+        };
+        ensure!(r.done(), "trailing bytes in frame");
+        Ok(msg)
+    }
+}
+
+/// Quantise a float feature map (post-ReLU, >= 0) to u8 with its max as
+/// scale — the uint8 feature buffer the paper transmits.
+pub fn quantize_features(feat: &[f32]) -> (f32, Vec<u8>) {
+    let scale = feat.iter().fold(0.0f32, |a, &b| a.max(b)).max(1e-6);
+    let data = feat
+        .iter()
+        .map(|&v| ((v / scale).clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    (scale, data)
+}
+
+/// Dequantise back to floats.
+pub fn dequantize_features(scale: f32, data: &[u8]) -> Vec<f32> {
+    data.iter().map(|&b| b as f32 / 255.0 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_request_roundtrip_and_size() {
+        let x = 84u16;
+        let data = vec![7u8; 84 * 84 * 4];
+        let msg = Msg::Request(Request {
+            client: 3,
+            id: 42,
+            payload: Payload::RawRgba { x, data: data.clone() },
+        });
+        let enc = msg.encode();
+        // wire size = 4 len + 1 type + 4 client + 8 id + 2 x + body
+        assert_eq!(enc.len(), 4 + 1 + 4 + 8 + 2 + 84 * 84 * 4);
+        let dec = Msg::decode(&enc[4..]).unwrap();
+        assert_eq!(dec, msg);
+        if let Msg::Request(r) = dec {
+            // the paper's 4X^2 model
+            assert_eq!(r.payload.wire_bytes(), 4 * 84 * 84);
+        }
+    }
+
+    #[test]
+    fn feature_request_roundtrip_and_size() {
+        let (c, h, w) = (4u16, 11u16, 11u16);
+        let data = vec![1u8; 4 * 11 * 11];
+        let msg = Msg::Request(Request {
+            client: 0,
+            id: 7,
+            payload: Payload::Features { c, h, w, scale: 3.25, data },
+        });
+        let enc = msg.encode();
+        let dec = Msg::decode(&enc[4..]).unwrap();
+        assert_eq!(dec, msg);
+        if let Msg::Request(r) = dec {
+            // the paper's K(X/2^n)^2 model
+            assert_eq!(r.payload.wire_bytes(), 4 * 11 * 11);
+        }
+    }
+
+    #[test]
+    fn response_and_hello_roundtrip() {
+        for msg in [
+            Msg::Response(Response { client: 1, id: 9, action: vec![0.5, -1.25] }),
+            Msg::Hello(Hello { client: 12, split: true }),
+            Msg::Hello(Hello { client: 12, split: false }),
+        ] {
+            let enc = msg.encode();
+            assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[99, 0, 0]).is_err());
+        // truncated raw request
+        let msg = Msg::Request(Request {
+            client: 0,
+            id: 1,
+            payload: Payload::RawRgba { x: 10, data: vec![0; 400] },
+        });
+        let enc = msg.encode();
+        assert!(Msg::decode(&enc[4..enc.len() - 5]).is_err());
+        // trailing bytes
+        let mut extended = enc[4..].to_vec();
+        extended.push(0);
+        assert!(Msg::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn quantization_roundtrip_error_bounded() {
+        let feat: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37) % 5.0).collect();
+        let (scale, q) = quantize_features(&feat);
+        let back = dequantize_features(scale, &q);
+        for (a, b) in feat.iter().zip(&back) {
+            assert!((a - b).abs() <= scale / 255.0 * 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantization_of_zeros() {
+        let (scale, q) = quantize_features(&[0.0; 8]);
+        assert!(scale > 0.0);
+        assert!(q.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn split_vs_raw_wire_ratio_matches_paper_model() {
+        // X=84, n=3, K=4: raw/feat = 4X^2 / K(X/8)^2
+        let raw = 4 * 84 * 84;
+        let feat = 4 * 11 * 11;
+        let ratio = raw as f64 / feat as f64;
+        assert!((ratio - 58.3).abs() < 1.0, "{ratio}");
+    }
+}

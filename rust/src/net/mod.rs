@@ -1,0 +1,12 @@
+//! Network stack: wire [`framing`] for the split-policy protocol (uint8
+//! observation/feature buffers, per the paper §4.2), bandwidth [`shaped`]
+//! links (token-bucket pacing over real sockets + analytic model), and the
+//! length-prefixed [`tcp`] transport.
+
+pub mod framing;
+pub mod shaped;
+pub mod tcp;
+
+pub use framing::{dequantize_features, quantize_features, Hello, Msg, Payload, Request, Response};
+pub use shaped::{LinkModel, ShapedWriter, TokenBucket};
+pub use tcp::{read_msg, write_msg};

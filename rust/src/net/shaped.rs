@@ -1,0 +1,197 @@
+//! Bandwidth shaping: a token-bucket pacer that makes a real byte stream
+//! behave like a B-bits-per-second link (the `tc netem`-style shaping the
+//! paper applies in §4.3), plus an analytic link model used by the
+//! deterministic experiments.
+
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+/// Token bucket over wall-clock time. `rate_bps` is in *bits* per second
+/// (matching the paper's Mb/s figures); burst is the bucket depth in bytes.
+#[derive(Debug)]
+pub struct TokenBucket {
+    rate_bytes_per_sec: f64,
+    burst_bytes: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_bps: f64, burst_bytes: usize) -> TokenBucket {
+        TokenBucket {
+            rate_bytes_per_sec: rate_bps / 8.0,
+            burst_bytes: burst_bytes as f64,
+            tokens: burst_bytes as f64,
+            last: Instant::now(),
+        }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate_bytes_per_sec).min(self.burst_bytes);
+        self.last = now;
+    }
+
+    /// How long to wait before `n` bytes may be sent (0 if sendable now).
+    pub fn delay_for(&mut self, n: usize, now: Instant) -> Duration {
+        self.refill(now);
+        if self.tokens >= n as f64 {
+            Duration::ZERO
+        } else {
+            let deficit = n as f64 - self.tokens;
+            Duration::from_secs_f64(deficit / self.rate_bytes_per_sec)
+        }
+    }
+
+    /// Consume `n` bytes' worth of tokens (may go negative => back-pressure).
+    pub fn consume(&mut self, n: usize) {
+        self.tokens -= n as f64;
+    }
+}
+
+/// A writer that paces bytes through a token bucket (sleeping as needed),
+/// then forwards to the inner writer. Chunks large writes so pacing is
+/// smooth rather than bursty.
+pub struct ShapedWriter<W: Write> {
+    inner: W,
+    bucket: TokenBucket,
+    chunk: usize,
+}
+
+impl<W: Write> ShapedWriter<W> {
+    pub fn new(inner: W, rate_bps: f64) -> ShapedWriter<W> {
+        // bucket depth ~ 20ms of the link rate: small enough for smooth
+        // pacing, big enough to not throttle tiny frames artificially
+        let burst = ((rate_bps / 8.0) * 0.02).max(1500.0) as usize;
+        ShapedWriter { inner, bucket: TokenBucket::new(rate_bps, burst), chunk: 1500 }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for ShapedWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.chunk);
+        loop {
+            let d = self.bucket.delay_for(n, Instant::now());
+            if d.is_zero() {
+                break;
+            }
+            std::thread::sleep(d);
+        }
+        self.bucket.consume(n);
+        self.inner.write_all(&buf[..n])?;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Pass-through reader (reads are paced by the sender's shaping).
+pub struct PlainReader<R: Read>(pub R);
+
+impl<R: Read> Read for PlainReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.0.read(buf)
+    }
+}
+
+/// Analytic link model: serialisation + propagation delay for `bytes` over
+/// a `rate_bps` link with one-way `latency` — the deterministic counterpart
+/// used by the break-even analysis and the sim-mode experiments.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    pub rate_bps: f64,
+    pub one_way_latency: f64,
+}
+
+impl LinkModel {
+    pub fn new(rate_bps: f64, one_way_latency: f64) -> LinkModel {
+        LinkModel { rate_bps, one_way_latency }
+    }
+
+    /// Time for `bytes` to fully arrive at the receiver.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.one_way_latency + (bytes * 8) as f64 / self.rate_bps
+    }
+
+    /// Full request/response decision-loop network time: request bytes up,
+    /// response bytes down.
+    pub fn round_trip(&self, up_bytes: usize, down_bytes: usize) -> f64 {
+        self.transfer_time(up_bytes) + self.transfer_time(down_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_arithmetic() {
+        // 1 MB at 10 Mb/s = 0.8 s (+ latency)
+        let l = LinkModel::new(10e6, 0.005);
+        let t = l.transfer_time(1_000_000);
+        assert!((t - 0.805).abs() < 1e-9, "{t}");
+        let rt = l.round_trip(1_000_000, 100);
+        assert!((rt - (0.805 + 0.005 + 800.0 / 10e6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_anchor_raw_frame_at_10mbps() {
+        // X=400 RGBA = 640 kB = 5.12 Mb -> 512 ms at 10 Mb/s: the dominant
+        // term in the paper's 540 ms server-only latency
+        let l = LinkModel::new(10e6, 0.0);
+        let t = l.transfer_time(4 * 400 * 400);
+        assert!((t - 0.512).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn bucket_delays_when_empty() {
+        let mut b = TokenBucket::new(8000.0, 100); // 1000 B/s, 100 B burst
+        let t0 = Instant::now();
+        assert_eq!(b.delay_for(100, t0), Duration::ZERO);
+        b.consume(100);
+        let d = b.delay_for(100, t0);
+        // need 100 bytes at 1000 B/s = 100 ms
+        assert!((d.as_secs_f64() - 0.1).abs() < 0.01, "{d:?}");
+    }
+
+    #[test]
+    fn bucket_refills_over_time() {
+        let mut b = TokenBucket::new(8000.0, 1000);
+        let t0 = Instant::now();
+        b.refill(t0);
+        b.consume(1000);
+        let later = t0 + Duration::from_millis(500); // +500 B
+        let d = b.delay_for(400, later);
+        assert_eq!(d, Duration::ZERO);
+        let d2 = b.delay_for(600, later);
+        assert!(d2 > Duration::ZERO);
+    }
+
+    #[test]
+    fn shaped_writer_achieves_target_rate() {
+        // 800 kb/s = 100 kB/s; sending 30 kB should take ~0.3s (minus burst)
+        let buf: Vec<u8> = vec![0; 30_000];
+        let mut w = ShapedWriter::new(Vec::new(), 800_000.0);
+        let t0 = Instant::now();
+        w.write_all(&buf).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        // burst gives ~2 kB head start; expect 0.25..0.40 s
+        assert!((0.2..0.45).contains(&dt), "took {dt}s");
+        assert_eq!(w.into_inner().len(), 30_000);
+    }
+
+    #[test]
+    fn shaped_writer_fast_link_is_fast() {
+        let buf = vec![0u8; 30_000];
+        let mut w = ShapedWriter::new(Vec::new(), 1e9);
+        let t0 = Instant::now();
+        w.write_all(&buf).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.05);
+    }
+}

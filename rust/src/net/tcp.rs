@@ -1,0 +1,105 @@
+//! Length-prefixed message transport over any Read/Write pair (used with
+//! loopback TCP in the serving experiments; composes with
+//! [`super::shaped::ShapedWriter`] for bandwidth-shaped links).
+
+use std::io::{Read, Write};
+
+use anyhow::{ensure, Context, Result};
+
+use super::framing::{Msg, MAX_FRAME};
+
+/// Write one message (blocking).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let frame = msg.encode();
+    w.write_all(&frame).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one message (blocking). Returns Ok(None) on clean EOF at a frame
+/// boundary.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(len > 0 && len <= MAX_FRAME, "bad frame length {len}");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Ok(Some(Msg::decode(&body)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::{Hello, Payload, Request, Response};
+
+    #[test]
+    fn roundtrip_over_a_buffer() {
+        let msgs = vec![
+            Msg::Hello(Hello { client: 1, split: true }),
+            Msg::Request(Request {
+                client: 1,
+                id: 1,
+                payload: Payload::Features {
+                    c: 4,
+                    h: 11,
+                    w: 11,
+                    scale: 2.0,
+                    data: vec![9; 484],
+                },
+            }),
+            Msg::Response(Response { client: 1, id: 1, action: vec![0.25] }),
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_msg(&mut wire, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut cursor).unwrap().unwrap(), m);
+        }
+        assert!(read_msg(&mut cursor).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn rejects_oversized_frame() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.push(1);
+        let mut cursor = std::io::Cursor::new(wire);
+        assert!(read_msg(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_body_is_error_not_none() {
+        let msg = Msg::Response(Response { client: 0, id: 0, action: vec![1.0] });
+        let mut wire = msg.encode();
+        wire.truncate(wire.len() - 2);
+        let mut cursor = std::io::Cursor::new(wire);
+        assert!(read_msg(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn tcp_loopback_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let msg = read_msg(&mut s).unwrap().unwrap();
+            write_msg(&mut s, &msg).unwrap(); // echo
+        });
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
+        let msg = Msg::Request(Request {
+            client: 5,
+            id: 77,
+            payload: Payload::RawRgba { x: 10, data: vec![3; 400] },
+        });
+        write_msg(&mut c, &msg).unwrap();
+        assert_eq!(read_msg(&mut c).unwrap().unwrap(), msg);
+        server.join().unwrap();
+    }
+}

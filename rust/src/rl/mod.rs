@@ -1,0 +1,13 @@
+//! RL substrate: episodic [`stats`] (Best/Mean/Final-100, Tables 2-4),
+//! off-policy [`replay`], on-policy [`rollout`] with GAE(λ), and the
+//! generic artifact-driven [`trainer`].
+
+pub mod replay;
+pub mod rollout;
+pub mod stats;
+pub mod trainer;
+
+pub use replay::Replay;
+pub use rollout::Rollout;
+pub use stats::EpisodeStats;
+pub use trainer::{TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,193 @@
+//! On-policy rollout buffer for PPO: stores one rollout segment and
+//! computes GAE(λ) advantages / returns exactly as SB3 does.
+
+#[derive(Debug)]
+pub struct Rollout {
+    pub obs_len: usize,
+    pub act_len: usize,
+    pub capacity: usize,
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub rew: Vec<f32>,
+    /// episode ended *at* this step (terminated or truncated)
+    pub done: Vec<f32>,
+    /// terminated (MDP end; bootstrap suppressed) vs truncated
+    pub terminated: Vec<f32>,
+    len: usize,
+}
+
+impl Rollout {
+    pub fn new(capacity: usize, obs_len: usize, act_len: usize) -> Rollout {
+        Rollout {
+            obs_len,
+            act_len,
+            capacity,
+            obs: Vec::with_capacity(capacity * obs_len),
+            act: Vec::with_capacity(capacity * act_len),
+            logp: Vec::with_capacity(capacity),
+            value: Vec::with_capacity(capacity),
+            rew: Vec::with_capacity(capacity),
+            done: Vec::with_capacity(capacity),
+            terminated: Vec::with_capacity(capacity),
+            len: 0,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.obs.clear();
+        self.act.clear();
+        self.logp.clear();
+        self.value.clear();
+        self.rew.clear();
+        self.done.clear();
+        self.terminated.clear();
+        self.len = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn full(&self) -> bool {
+        self.len >= self.capacity
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        obs: &[f32],
+        act: &[f32],
+        logp: f32,
+        value: f32,
+        rew: f32,
+        done: bool,
+        terminated: bool,
+    ) {
+        assert!(!self.full(), "rollout full");
+        assert_eq!(obs.len(), self.obs_len);
+        assert_eq!(act.len(), self.act_len);
+        self.obs.extend_from_slice(obs);
+        self.act.extend_from_slice(act);
+        self.logp.push(logp);
+        self.value.push(value);
+        self.rew.push(rew);
+        self.done.push(if done { 1.0 } else { 0.0 });
+        self.terminated.push(if terminated { 1.0 } else { 0.0 });
+        self.len += 1;
+    }
+
+    /// GAE(λ): returns (advantages, returns). `last_value` bootstraps the
+    /// final step if the segment ended mid-episode (or was truncated —
+    /// truncation bootstraps, termination does not).
+    pub fn gae(&self, gamma: f64, lam: f64, last_value: f32) -> (Vec<f32>, Vec<f32>) {
+        let n = self.len;
+        let mut adv = vec![0.0f32; n];
+        let mut last_gae = 0.0f64;
+        for t in (0..n).rev() {
+            let (next_value, next_nonterminal) = if t == n - 1 {
+                (
+                    last_value as f64,
+                    if self.terminated[t] > 0.5 { 0.0 } else { 1.0 },
+                )
+            } else {
+                (
+                    self.value[t + 1] as f64,
+                    if self.terminated[t] > 0.5 { 0.0 } else { 1.0 },
+                )
+            };
+            // a done (truncation or termination) also cuts the GAE chain
+            let chain = if self.done[t] > 0.5 { 0.0 } else { 1.0 };
+            let delta =
+                self.rew[t] as f64 + gamma * next_value * next_nonterminal - self.value[t] as f64;
+            last_gae = delta + gamma * lam * chain * last_gae;
+            adv[t] = last_gae as f32;
+            if self.done[t] > 0.5 {
+                last_gae = 0.0;
+            }
+        }
+        let ret: Vec<f32> = adv.iter().zip(&self.value).map(|(a, v)| a + v).collect();
+        (adv, ret)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_step(r: &mut Rollout, rew: f32, value: f32, done: bool, term: bool) {
+        r.push(&[0.0], &[0.0], 0.0, value, rew, done, term);
+    }
+
+    #[test]
+    fn gae_single_step_episode() {
+        let mut r = Rollout::new(4, 1, 1);
+        push_step(&mut r, 1.0, 0.5, true, true);
+        let (adv, ret) = r.gae(0.99, 0.95, 99.0); // last_value ignored (terminated)
+        assert!((adv[0] - (1.0 - 0.5)).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_bootstraps_on_truncation_but_not_termination() {
+        // identical rollouts except the final flag
+        let make = |terminated| {
+            let mut r = Rollout::new(1, 1, 1);
+            push_step(&mut r, 0.0, 0.0, true, terminated);
+            r.gae(0.99, 0.95, 1.0).0[0]
+        };
+        let trunc_adv = make(false);
+        let term_adv = make(true);
+        assert!((term_adv - 0.0).abs() < 1e-6);
+        assert!((trunc_adv - 0.99).abs() < 1e-6); // bootstrapped
+    }
+
+    #[test]
+    fn gae_matches_hand_computation() {
+        // 2 steps, no dones: delta1 = r1 + g*v2 - v1, delta0 = r0 + g*v1 - v0
+        let mut r = Rollout::new(2, 1, 1);
+        push_step(&mut r, 1.0, 2.0, false, false);
+        push_step(&mut r, 1.0, 3.0, false, false);
+        let (adv, _) = r.gae(0.9, 0.5, 4.0);
+        let d1 = 1.0 + 0.9 * 4.0 - 3.0; // 1.6
+        let d0 = 1.0 + 0.9 * 3.0 - 2.0; // 1.7
+        assert!((adv[1] as f64 - d1).abs() < 1e-6);
+        assert!((adv[0] as f64 - (d0 + 0.9 * 0.5 * d1)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gae_resets_across_episode_boundary() {
+        let mut r = Rollout::new(3, 1, 1);
+        push_step(&mut r, 5.0, 0.0, true, true); // episode 1 ends
+        push_step(&mut r, 1.0, 0.0, false, false); // episode 2
+        push_step(&mut r, 1.0, 0.0, false, false);
+        let (adv, _) = r.gae(1.0, 1.0, 0.0);
+        // step 0's advantage must not include episode 2's rewards
+        assert!((adv[0] - 5.0).abs() < 1e-6, "{adv:?}");
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut r = Rollout::new(1, 1, 1);
+        push_step(&mut r, 0.0, 0.0, false, false);
+        assert!(r.full());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            push_step(&mut r, 0.0, 0.0, false, false)
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut r = Rollout::new(2, 1, 1);
+        push_step(&mut r, 0.0, 0.0, false, false);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.obs.len(), 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Episodic return tracking with the paper's summary statistics:
+//! **Best** (max episodic return), **Mean** (average over training), and
+//! **Final** (mean over the final 100 episodes) — Tables 2–4.
+
+#[derive(Debug, Clone, Default)]
+pub struct EpisodeStats {
+    returns: Vec<f64>,
+}
+
+impl EpisodeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, episodic_return: f64) {
+        self.returns.push(episodic_return);
+    }
+
+    pub fn episodes(&self) -> usize {
+        self.returns.len()
+    }
+
+    pub fn best(&self) -> f64 {
+        self.returns.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.returns.is_empty() {
+            return 0.0;
+        }
+        self.returns.iter().sum::<f64>() / self.returns.len() as f64
+    }
+
+    /// Mean over the final `n` episodes (the paper uses n = 100).
+    pub fn final_n(&self, n: usize) -> f64 {
+        if self.returns.is_empty() {
+            return 0.0;
+        }
+        let tail = &self.returns[self.returns.len().saturating_sub(n)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn final_100(&self) -> f64 {
+        self.final_n(100)
+    }
+
+    pub fn returns(&self) -> &[f64] {
+        &self.returns
+    }
+
+    /// Mean over a window, for learning curves.
+    pub fn smoothed(&self, window: usize) -> Vec<f64> {
+        if window == 0 || self.returns.is_empty() {
+            return Vec::new();
+        }
+        (0..self.returns.len())
+            .map(|i| {
+                let lo = i.saturating_sub(window - 1);
+                let w = &self.returns[lo..=i];
+                w.iter().sum::<f64>() / w.len() as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_statistics() {
+        let mut s = EpisodeStats::new();
+        for r in [1.0, 5.0, 3.0] {
+            s.push(r);
+        }
+        assert_eq!(s.best(), 5.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.final_n(2), 4.0);
+        assert_eq!(s.episodes(), 3);
+    }
+
+    #[test]
+    fn final_100_with_fewer_episodes_uses_all() {
+        let mut s = EpisodeStats::new();
+        s.push(2.0);
+        s.push(4.0);
+        assert_eq!(s.final_100(), 3.0);
+    }
+
+    #[test]
+    fn final_100_uses_exactly_last_100() {
+        let mut s = EpisodeStats::new();
+        for _ in 0..100 {
+            s.push(0.0);
+        }
+        for _ in 0..100 {
+            s.push(10.0);
+        }
+        assert_eq!(s.final_100(), 10.0);
+        assert_eq!(s.mean(), 5.0);
+    }
+
+    #[test]
+    fn smoothing() {
+        let mut s = EpisodeStats::new();
+        for r in [0.0, 2.0, 4.0] {
+            s.push(r);
+        }
+        assert_eq!(s.smoothed(2), vec![0.0, 1.0, 3.0]);
+        assert!(s.smoothed(0).is_empty());
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = EpisodeStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.final_100(), 0.0);
+    }
+}

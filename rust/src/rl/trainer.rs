@@ -1,0 +1,441 @@
+//! Generic trainer: drives the AOT-compiled update/act artifacts for any
+//! (task, encoder, algorithm) combination described by the manifest's
+//! train-state spec. The Rust side never hard-codes network shapes — it
+//! threads flat state tensors through the artifact in manifest order.
+//!
+//! Loops follow SB3 semantics: off-policy (DDPG/SAC) with warmup, replay,
+//! and `train_freq`; on-policy (PPO) with rollout segments, GAE(λ=0.95),
+//! and shuffled fixed-size minibatch epochs. The `done` flag stored for
+//! bootstrapping is *termination only* (truncation bootstraps).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+use log::info;
+
+use crate::envs::{make, CropMode, Env, PixelPipeline};
+use crate::runtime::{DType, Exe, Runtime, TrainStateSpec, Value};
+use crate::util::rng::Rng;
+
+use super::replay::Replay;
+use super::rollout::Rollout;
+use super::stats::EpisodeStats;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub episodes: usize,
+    /// uniform-random action steps before learning starts (off-policy)
+    pub warmup_steps: usize,
+    /// env steps per gradient step (off-policy)
+    pub train_freq: usize,
+    /// DDPG exploration noise (fraction of max_action)
+    pub action_noise: f64,
+    /// PPO rollout segment length (multiple of the artifact batch)
+    pub rollout_steps: usize,
+    pub ppo_epochs: usize,
+    pub gae_lambda: f64,
+    pub replay_capacity: usize,
+    pub seed: u64,
+    /// print a progress line every n episodes (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            episodes: 30,
+            warmup_steps: 500,
+            train_freq: 4,
+            action_noise: 0.1,
+            rollout_steps: 256,
+            ppo_epochs: 10,
+            gae_lambda: 0.95,
+            replay_capacity: 10_000,
+            seed: 0,
+            log_every: 0,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TrainReport {
+    pub stats: EpisodeStats,
+    /// per-update metric curves, keyed by manifest metric name
+    pub metrics: Vec<(String, Vec<f32>)>,
+    pub env_steps: usize,
+    pub updates: usize,
+}
+
+pub struct Trainer<'a> {
+    /// kept for lifetime anchoring: executables borrow the runtime's client
+    #[allow(dead_code)]
+    rt: &'a Runtime,
+    pub spec: TrainStateSpec,
+    state: Vec<Value>,
+    update_exe: Rc<Exe>,
+    act_exe: Rc<Exe>,
+    act_det_exe: Rc<Exe>,
+    env: Box<dyn Env>,
+    pipeline: PixelPipeline,
+    rng: Rng,
+    cfg: TrainConfig,
+    pub report: TrainReport,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, run: &str, cfg: TrainConfig) -> Result<Trainer<'a>> {
+        let spec = rt
+            .manifest
+            .trainstates
+            .get(run)
+            .ok_or_else(|| anyhow!("unknown trainstate {run:?}"))?
+            .clone();
+        let state = load_state(rt, &spec)?;
+        let update_exe = rt
+            .load(&spec.artifacts["update"])
+            .context("compiling update artifact")?;
+        let act_exe = rt.load(&spec.artifacts["act"])?;
+        let act_det_exe = rt.load(&spec.artifacts["act_det"])?;
+        let env = make(&spec.task)?;
+        // tiny pipeline: render = crop + 8 (aot's TINY_RENDER convention)
+        let pipeline = PixelPipeline::new(spec.x + 8, spec.x, CropMode::Random);
+        let rng = Rng::new(cfg.seed);
+        let metrics = spec.metrics.iter().map(|m| (m.clone(), Vec::new())).collect();
+        Ok(Trainer {
+            rt,
+            spec,
+            state,
+            update_exe,
+            act_exe,
+            act_det_exe,
+            env,
+            pipeline,
+            rng,
+            cfg,
+            report: TrainReport { metrics, ..Default::default() },
+        })
+    }
+
+    fn state_value(&self, name: &str) -> &Value {
+        let idx = self.spec.state.iter().position(|s| s.name == name).unwrap();
+        &self.state[idx]
+    }
+
+    fn obs_value(&self, obs: &[f32], batch: usize) -> Value {
+        Value::f32(&[batch, 9, self.spec.x, self.spec.x], obs.to_vec())
+    }
+
+    /// Stochastic policy action for rollouts.
+    fn act(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32, f32)> {
+        let adim = self.spec.action_dim;
+        let obs_v = self.obs_value(obs, 1);
+        match self.spec.algo.as_str() {
+            "ddpg" => {
+                let actor = self.state_value("actor").clone();
+                let out = self.act_exe.run(&[&actor, &obs_v])?;
+                let mut a = out[0].as_f32()?.to_vec();
+                let lim = self.spec.max_action as f32;
+                for x in a.iter_mut() {
+                    *x = (*x + (self.cfg.action_noise * self.spec.max_action) as f32
+                        * self.rng.normal_f32())
+                    .clamp(-lim, lim);
+                }
+                Ok((a, 0.0, 0.0))
+            }
+            "sac" => {
+                let actor = self.state_value("actor").clone();
+                let mut noise = vec![0.0f32; adim];
+                self.rng.fill_normal(&mut noise);
+                let noise_v = Value::f32(&[1, adim], noise);
+                let out = self.act_exe.run(&[&actor, &obs_v, &noise_v])?;
+                Ok((out[0].as_f32()?.to_vec(), 0.0, 0.0))
+            }
+            "ppo" => {
+                let params = self.state_value("params").clone();
+                let mut noise = vec![0.0f32; adim];
+                self.rng.fill_normal(&mut noise);
+                let noise_v = Value::f32(&[1, adim], noise);
+                let out = self.act_exe.run(&[&params, &obs_v, &noise_v])?;
+                Ok((
+                    out[0].as_f32()?.to_vec(),
+                    out[1].as_f32()?[0],
+                    out[2].as_f32()?[0],
+                ))
+            }
+            other => anyhow::bail!("unknown algo {other}"),
+        }
+    }
+
+    /// Deterministic action (+ value for PPO) for evaluation/bootstrap.
+    pub fn act_det(&self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let obs_v = self.obs_value(obs, 1);
+        let p = match self.spec.algo.as_str() {
+            "ppo" => self.state_value("params").clone(),
+            _ => self.state_value("actor").clone(),
+        };
+        let out = self.act_det_exe.run(&[&p, &obs_v])?;
+        let value = if out.len() > 1 { out[1].as_f32()?[0] } else { 0.0 };
+        Ok((out[0].as_f32()?.to_vec(), value))
+    }
+
+    /// One gradient step: feed state + batch, absorb new state, log metrics.
+    fn update(&mut self, batch: Vec<Value>) -> Result<()> {
+        let mut inputs: Vec<&Value> = self.state.iter().collect();
+        let batch_refs: Vec<&Value> = batch.iter().collect();
+        inputs.extend(batch_refs);
+        let out = self.update_exe.run(&inputs)?;
+        let n_state = self.state.len();
+        for (i, v) in out.iter().take(n_state).enumerate() {
+            self.state[i] = v.clone();
+        }
+        for (i, m) in out[n_state..].iter().enumerate() {
+            let val = m.scalar()?;
+            anyhow::ensure!(val.is_finite(), "metric {} diverged (NaN/inf)", self.spec.metrics[i]);
+            self.report.metrics[i].1.push(val);
+        }
+        self.report.updates += 1;
+        Ok(())
+    }
+
+    /// Off-policy training (DDPG / SAC).
+    fn train_off_policy(&mut self) -> Result<()> {
+        let obs_len = 9 * self.spec.x * self.spec.x;
+        let adim = self.spec.action_dim;
+        let b = self.spec.batch;
+        let mut replay = Replay::new(self.cfg.replay_capacity, obs_len, adim);
+        let mut total_steps = 0usize;
+
+        // reusable batch staging buffers (no per-update allocation)
+        let mut b_obs = vec![0.0f32; b * obs_len];
+        let mut b_act = vec![0.0f32; b * adim];
+        let mut b_rew = vec![0.0f32; b];
+        let mut b_nobs = vec![0.0f32; b * obs_len];
+        let mut b_done = vec![0.0f32; b];
+
+        for ep in 0..self.cfg.episodes {
+            let mut env_rng = self.rng.fork(ep as u64);
+            self.env.reset(&mut env_rng);
+            self.pipeline.clear();
+            self.pipeline.observe(self.env.as_ref(), &mut self.rng);
+            let mut ep_return = 0.0;
+            loop {
+                let obs = self.pipeline.obs();
+                let action = if total_steps < self.cfg.warmup_steps {
+                    let lim = self.spec.max_action;
+                    (0..adim).map(|_| self.rng.range(-lim, lim) as f32).collect()
+                } else {
+                    self.act(&obs)?.0
+                };
+                let a64: Vec<f64> = action.iter().map(|&v| v as f64).collect();
+                let out = self.env.step(&a64);
+                ep_return += out.reward;
+                self.pipeline.observe(self.env.as_ref(), &mut self.rng);
+                let nobs = self.pipeline.obs();
+                replay.push(&obs, &action, out.reward as f32, &nobs, out.terminated);
+                total_steps += 1;
+
+                if total_steps >= self.cfg.warmup_steps
+                    && total_steps % self.cfg.train_freq == 0
+                    && replay.sample(
+                        &mut self.rng,
+                        b,
+                        &mut b_obs,
+                        &mut b_act,
+                        &mut b_rew,
+                        &mut b_nobs,
+                        &mut b_done,
+                    )
+                {
+                    let mut batch = vec![
+                        Value::f32(&[b, 9, self.spec.x, self.spec.x], b_obs.clone()),
+                        Value::f32(&[b, adim], b_act.clone()),
+                        Value::f32(&[b], b_rew.clone()),
+                        Value::f32(&[b, 9, self.spec.x, self.spec.x], b_nobs.clone()),
+                        Value::f32(&[b], b_done.clone()),
+                    ];
+                    if self.spec.algo == "sac" {
+                        for _ in 0..2 {
+                            let mut noise = vec![0.0f32; b * adim];
+                            self.rng.fill_normal(&mut noise);
+                            batch.push(Value::f32(&[b, adim], noise));
+                        }
+                    }
+                    self.update(batch)?;
+                }
+                if out.done() {
+                    break;
+                }
+            }
+            self.report.stats.push(ep_return);
+            self.report.env_steps = total_steps;
+            if self.cfg.log_every > 0 && (ep + 1) % self.cfg.log_every == 0 {
+                info!(
+                    "[{}] ep {:>4}  return {:>9.1}  (mean100 {:>9.1})  steps {}  updates {}",
+                    self.spec.name,
+                    ep + 1,
+                    self.report.stats.returns().last().unwrap(),
+                    self.report.stats.final_100(),
+                    total_steps,
+                    self.report.updates
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// On-policy training (PPO).
+    fn train_ppo(&mut self) -> Result<()> {
+        let obs_len = 9 * self.spec.x * self.spec.x;
+        let adim = self.spec.action_dim;
+        let mb = self.spec.batch;
+        anyhow::ensure!(
+            self.cfg.rollout_steps % mb == 0,
+            "rollout_steps {} must be a multiple of the artifact batch {mb}",
+            self.cfg.rollout_steps
+        );
+        let mut rollout = Rollout::new(self.cfg.rollout_steps, obs_len, adim);
+        let mut total_steps = 0usize;
+        let mut ep_return = 0.0;
+        let mut episodes_done = 0usize;
+
+        let mut env_rng = self.rng.fork(9999);
+        self.env.reset(&mut env_rng);
+        self.pipeline.clear();
+        self.pipeline.observe(self.env.as_ref(), &mut self.rng);
+
+        while episodes_done < self.cfg.episodes {
+            // ---- collect a segment -------------------------------------
+            // (always fill the segment, even past the episode budget —
+            // minibatches need rollout_steps items)
+            rollout.clear();
+            while !rollout.full() {
+                let obs = self.pipeline.obs();
+                let (action, logp, value) = self.act(&obs)?;
+                let lim = self.spec.max_action;
+                let a64: Vec<f64> =
+                    action.iter().map(|&v| (v as f64).clamp(-lim, lim)).collect();
+                let out = self.env.step(&a64);
+                ep_return += out.reward;
+                total_steps += 1;
+                rollout.push(
+                    &obs,
+                    &action,
+                    logp,
+                    value,
+                    out.reward as f32,
+                    out.done(),
+                    out.terminated,
+                );
+                self.pipeline.observe(self.env.as_ref(), &mut self.rng);
+                if out.done() {
+                    self.report.stats.push(ep_return);
+                    episodes_done += 1;
+                    ep_return = 0.0;
+                    if self.cfg.log_every > 0 && episodes_done % self.cfg.log_every == 0 {
+                        info!(
+                            "[{}] ep {:>4}  return {:>9.1}  steps {}",
+                            self.spec.name,
+                            episodes_done,
+                            self.report.stats.returns().last().unwrap(),
+                            total_steps
+                        );
+                    }
+                    let mut env_rng = self.rng.fork(total_steps as u64);
+                    self.env.reset(&mut env_rng);
+                    self.pipeline.clear();
+                    self.pipeline.observe(self.env.as_ref(), &mut self.rng);
+                }
+            }
+            if rollout.is_empty() {
+                break;
+            }
+
+            // ---- GAE + minibatch epochs --------------------------------
+            let (_, last_value) = self.act_det(&self.pipeline.obs())?;
+            let (adv, ret) = rollout.gae(self.spec.gamma, self.cfg.gae_lambda, last_value);
+            let n = rollout.len();
+            let n_mb = n / mb;
+            for _epoch in 0..self.cfg.ppo_epochs {
+                let perm = self.rng.permutation(n);
+                for m in 0..n_mb {
+                    let idx = &perm[m * mb..(m + 1) * mb];
+                    let mut o = Vec::with_capacity(mb * obs_len);
+                    let mut a = Vec::with_capacity(mb * adim);
+                    let mut lp = Vec::with_capacity(mb);
+                    let mut ad = Vec::with_capacity(mb);
+                    let mut rt_ = Vec::with_capacity(mb);
+                    for &i in idx {
+                        o.extend_from_slice(&rollout.obs[i * obs_len..(i + 1) * obs_len]);
+                        a.extend_from_slice(&rollout.act[i * adim..(i + 1) * adim]);
+                        lp.push(rollout.logp[i]);
+                        ad.push(adv[i]);
+                        rt_.push(ret[i]);
+                    }
+                    let batch = vec![
+                        Value::f32(&[mb, 9, self.spec.x, self.spec.x], o),
+                        Value::f32(&[mb, adim], a),
+                        Value::f32(&[mb], lp),
+                        Value::f32(&[mb], ad),
+                        Value::f32(&[mb], rt_),
+                    ];
+                    self.update(batch)?;
+                }
+            }
+            self.report.env_steps = total_steps;
+        }
+        Ok(())
+    }
+
+    pub fn train(&mut self) -> Result<()> {
+        match self.spec.algo.as_str() {
+            "ddpg" | "sac" => self.train_off_policy(),
+            "ppo" => self.train_ppo(),
+            other => anyhow::bail!("unknown algo {other}"),
+        }
+    }
+
+    /// Evaluate the current policy deterministically (centre crop).
+    pub fn evaluate(&mut self, episodes: usize) -> Result<f64> {
+        let mut pipeline = PixelPipeline::new(self.spec.x + 8, self.spec.x, CropMode::Center);
+        let mut total = 0.0;
+        let mut rng = Rng::new(self.cfg.seed ^ 0xEA11);
+        for ep in 0..episodes {
+            let mut env_rng = Rng::new(1000 + ep as u64);
+            self.env.reset(&mut env_rng);
+            pipeline.clear();
+            pipeline.observe(self.env.as_ref(), &mut rng);
+            loop {
+                let (a, _) = self.act_det(&pipeline.obs())?;
+                let lim = self.spec.max_action;
+                let a64: Vec<f64> = a.iter().map(|&v| (v as f64).clamp(-lim, lim)).collect();
+                let out = self.env.step(&a64);
+                total += out.reward;
+                pipeline.observe(self.env.as_ref(), &mut rng);
+                if out.done() {
+                    break;
+                }
+            }
+        }
+        Ok(total / episodes as f64)
+    }
+}
+
+/// Materialise the initial train state from the manifest.
+fn load_state(rt: &Runtime, spec: &TrainStateSpec) -> Result<Vec<Value>> {
+    spec.state
+        .iter()
+        .map(|s| {
+            Ok(match s.dtype {
+                DType::F32 => {
+                    let data = if s.file.is_some() {
+                        rt.manifest.load_params(&format!("{}_{}", spec.name, s.name))?
+                    } else {
+                        vec![0.0; s.shape.iter().product()]
+                    };
+                    Value::f32(&s.shape, data)
+                }
+                DType::I32 => Value::scalar_i32(0),
+            })
+        })
+        .collect()
+}

@@ -1,0 +1,268 @@
+//! PJRT execution: load HLO-text artifacts, compile once per variant, run.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` -> `compile` ->
+//! `execute`. All artifacts are lowered with `return_tuple=True`, so every
+//! execution output is a single tuple literal that we decompose per the
+//! manifest's output specs.
+//!
+//! Threading: the xla crate's client is `Rc`-based (not `Send`), so a
+//! `Runtime` is confined to the thread that created it. The coordinator
+//! gives each execution context (server batcher, device fleet, trainer)
+//! its own `Runtime`; cross-thread work arrives via channels.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// A host-side tensor value crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Value::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Value {
+        Value::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32 { .. } => DType::F32,
+            Value::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("value is not i32"),
+        }
+    }
+
+    /// Scalar f32 convenience (metrics).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(d.len() == 1, "not a scalar: {:?}", self.shape());
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { shape, data } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims).map_err(wrap_xla)?
+                }
+            }
+            Value::I32 { shape, data } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims).map_err(wrap_xla)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A device-resident tensor (e.g. model parameters staged once and reused
+/// across requests — the serving hot path never re-uploads params).
+pub struct DeviceTensor {
+    pub(crate) buf: xla::PjRtBuffer,
+    shape: Vec<usize>,
+}
+
+impl DeviceTensor {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Exe {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Exe {
+    fn check_inputs(&self, inputs: &[&Value]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, artifact takes {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                v.shape() == spec.shape.as_slice() && v.dtype() == spec.dtype,
+                "{}: input {:?} expects {:?} {:?}, got {:?} {:?}",
+                self.spec.name,
+                spec.name,
+                spec.dtype,
+                spec.shape,
+                v.dtype(),
+                v.shape()
+            );
+        }
+        Ok(())
+    }
+
+    fn decode_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Value>> {
+        let first = bufs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.spec.name))?;
+        let tuple = first.to_literal_sync().map_err(wrap_xla)?;
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: {} outputs returned, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                let v = match spec.dtype {
+                    DType::F32 => Value::F32 {
+                        shape: spec.shape.clone(),
+                        data: lit.to_vec::<f32>().map_err(wrap_xla)?,
+                    },
+                    DType::I32 => Value::I32 {
+                        shape: spec.shape.clone(),
+                        data: lit.to_vec::<i32>().map_err(wrap_xla)?,
+                    },
+                };
+                anyhow::ensure!(
+                    v.shape().iter().product::<usize>()
+                        == match &v {
+                            Value::F32 { data, .. } => data.len(),
+                            Value::I32 { data, .. } => data.len(),
+                        },
+                    "{}: output {} element count mismatch",
+                    self.spec.name,
+                    spec.name
+                );
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Execute with host values (validates against the manifest signature).
+    pub fn run(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let out = self.exe.execute::<xla::Literal>(&literals).map_err(wrap_xla)?;
+        self.decode_outputs(out)
+    }
+
+    /// Execute with device-resident buffers (hot path: params staged once).
+    pub fn run_device(&self, inputs: &[&DeviceTensor]) -> Result<Vec<Value>> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|t| &t.buf).collect();
+        let out = self.exe.execute_b(&bufs).map_err(wrap_xla)?;
+        self.decode_outputs(out)
+    }
+}
+
+/// Thread-confined runtime: PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Exe>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Exe>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+        let exe = Rc::new(Exe { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Stage a host value onto the device (used for long-lived params).
+    pub fn to_device(&self, v: &Value) -> Result<DeviceTensor> {
+        let buf = match v {
+            Value::F32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(wrap_xla)?,
+            Value::I32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .map_err(wrap_xla)?,
+        };
+        Ok(DeviceTensor { buf, shape: v.shape().to_vec() })
+    }
+
+    /// Number of artifacts compiled so far (for tests / perf logs).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

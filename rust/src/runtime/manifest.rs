@@ -1,0 +1,472 @@
+//! Typed view over `artifacts/manifest.json` (produced by python/compile/aot.py).
+//!
+//! The manifest is the only contract between the build-time Python layer and
+//! the runtime Rust layer: artifact names, input/output signatures, encoder
+//! architecture metadata (for the shader planner), initial parameter files,
+//! and complete train-state descriptions for the generic trainer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str().unwrap_or_default())?,
+            shape: j
+                .req("shape")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad shape"))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub tags: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// The batch size tag (present on serving artifacts).
+    pub fn batch(&self) -> Option<usize> {
+        self.tags.get("batch").and_then(|s| s.parse().ok())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ConvLayerMeta {
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub same: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamLayout {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct EncoderMeta {
+    pub kind: String,
+    pub shader_deployable: bool,
+    pub layers: Vec<ConvLayerMeta>,
+    pub dense: Option<usize>,
+    pub n_stride2: usize,
+    pub param_layout: Vec<ParamLayout>,
+    pub feat_shape: [usize; 3],
+}
+
+impl EncoderMeta {
+    fn parse(j: &Json) -> Result<Self> {
+        let layers = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers not an array"))?
+            .iter()
+            .map(|l| {
+                Ok(ConvLayerMeta {
+                    cout: l.req("cout")?.as_usize().ok_or_else(|| anyhow!("cout"))?,
+                    k: l.req("k")?.as_usize().ok_or_else(|| anyhow!("k"))?,
+                    stride: l.req("stride")?.as_usize().ok_or_else(|| anyhow!("stride"))?,
+                    same: l.req("padding")?.as_str() == Some("same"),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let param_layout = j
+            .req("param_layout")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_layout"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamLayout {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("shape"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fs = j
+            .req("feat_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("feat_shape"))?;
+        anyhow::ensure!(fs.len() == 3, "feat_shape must be [c,h,w]");
+        Ok(EncoderMeta {
+            kind: j.req("kind")?.as_str().unwrap_or_default().to_string(),
+            shader_deployable: j.req("shader_deployable")?.as_bool().unwrap_or(false),
+            layers,
+            dense: j.get("dense").and_then(|d| d.as_usize()),
+            n_stride2: j.req("n_stride2")?.as_usize().unwrap_or(0),
+            param_layout,
+            feat_shape: [fs[0], fs[1], fs[2]],
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_layout
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StateTensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// parameter file to initialise from (absent => zero/scalar init)
+    pub file: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainStateSpec {
+    pub name: String,
+    pub task: String,
+    pub algo: String,
+    pub encoder: String,
+    pub x: usize,
+    pub batch: usize,
+    pub action_dim: usize,
+    pub max_action: f64,
+    pub gamma: f64,
+    pub episodes: usize,
+    pub state: Vec<StateTensor>,
+    pub batch_inputs: Vec<String>,
+    pub metrics: Vec<String>,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub serve_x: usize,
+    pub tiny_x: usize,
+    pub obs_channels: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, (String, usize)>, // name -> (file, len)
+    pub encoders: BTreeMap<String, (EncoderMeta, EncoderMeta)>, // (serve, tiny)
+    pub trainstates: BTreeMap<String, TrainStateSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first?)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let name = a.req("name")?.as_str().unwrap_or_default().to_string();
+            let tags = a
+                .get("tags")
+                .and_then(|t| t.as_obj())
+                .map(|kv| {
+                    kv.iter()
+                        .map(|(k, v)| {
+                            let vs = match v {
+                                Json::Str(s) => s.clone(),
+                                other => other.to_string(),
+                            };
+                            (k.clone(), vs)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                    inputs: a
+                        .req("inputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<_>>()?,
+                    tags,
+                },
+            );
+        }
+
+        let mut params = BTreeMap::new();
+        for p in j.req("params")?.as_arr().unwrap_or(&[]) {
+            params.insert(
+                p.req("name")?.as_str().unwrap_or_default().to_string(),
+                (
+                    p.req("file")?.as_str().unwrap_or_default().to_string(),
+                    p.req("len")?.as_usize().unwrap_or(0),
+                ),
+            );
+        }
+
+        let mut encoders = BTreeMap::new();
+        if let Some(encs) = j.get("encoders").and_then(|e| e.as_obj()) {
+            for (name, meta) in encs {
+                encoders.insert(
+                    name.clone(),
+                    (
+                        EncoderMeta::parse(meta.req("serve")?)?,
+                        EncoderMeta::parse(meta.req("tiny")?)?,
+                    ),
+                );
+            }
+        }
+
+        let mut trainstates = BTreeMap::new();
+        for t in j.req("trainstates")?.as_arr().unwrap_or(&[]) {
+            let name = t.req("name")?.as_str().unwrap_or_default().to_string();
+            let state = t
+                .req("state")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| {
+                    Ok(StateTensor {
+                        name: s.req("name")?.as_str().unwrap_or_default().to_string(),
+                        dtype: DType::parse(s.req("dtype")?.as_str().unwrap_or_default())?,
+                        shape: s
+                            .req("shape")?
+                            .as_usize_vec()
+                            .ok_or_else(|| anyhow!("shape"))?,
+                        file: s.get("file").and_then(|f| f.as_str()).map(String::from),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            trainstates.insert(
+                name.clone(),
+                TrainStateSpec {
+                    name,
+                    task: t.req("task")?.as_str().unwrap_or_default().to_string(),
+                    algo: t.req("algo")?.as_str().unwrap_or_default().to_string(),
+                    encoder: t.req("encoder")?.as_str().unwrap_or_default().to_string(),
+                    x: t.req("x")?.as_usize().unwrap_or(0),
+                    batch: t.req("batch")?.as_usize().unwrap_or(0),
+                    action_dim: t.req("action_dim")?.as_usize().unwrap_or(0),
+                    max_action: t.req("max_action")?.as_f64().unwrap_or(1.0),
+                    gamma: t.req("gamma")?.as_f64().unwrap_or(0.99),
+                    episodes: t.req("episodes")?.as_usize().unwrap_or(0),
+                    state,
+                    batch_inputs: t
+                        .req("batch_inputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    metrics: t
+                        .req("metrics")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect(),
+                    artifacts: t
+                        .req("artifacts")?
+                        .as_obj()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+                        .collect(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            serve_x: j.req("serve_x")?.as_usize().unwrap_or(84),
+            tiny_x: j.req("tiny_x")?.as_usize().unwrap_or(36),
+            obs_channels: j.req("obs_channels")?.as_usize().unwrap_or(9),
+            artifacts,
+            params,
+            encoders,
+            trainstates,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Load an initial-parameter vector by manifest name.
+    pub fn load_params(&self, name: &str) -> Result<Vec<f32>> {
+        let (file, len) = self
+            .params
+            .get(name)
+            .ok_or_else(|| anyhow!("params {name:?} not in manifest"))?;
+        let data = crate::util::read_f32_bin(&self.dir.join(file))?;
+        anyhow::ensure!(
+            data.len() == *len,
+            "params {name}: file has {} floats, manifest says {len}",
+            data.len()
+        );
+        Ok(data)
+    }
+
+    /// Serving artifact lookup helpers. `arch` is miniconv4|miniconv16.
+    pub fn serve_encoder(&self, arch: &str) -> String {
+        format!("enc_{arch}_x{}_b1", self.serve_x)
+    }
+
+    pub fn serve_head(&self, arch: &str, batch: usize) -> String {
+        format!("head_{arch}_x{}_b{batch}", self.serve_x)
+    }
+
+    pub fn serve_full(&self, batch: usize) -> String {
+        format!("full_fullcnn_x{}_b{batch}", self.serve_x)
+    }
+
+    /// The batch ladder available for a head/full family (ascending).
+    pub fn batch_ladder(&self, prefix: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.name.starts_with(prefix))
+            .filter_map(|a| a.batch())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "seed": 0, "serve_x": 84, "tiny_x": 36, "obs_channels": 9,
+      "encoders": {
+        "miniconv4": {
+          "serve": {"kind": "miniconv", "shader_deployable": true,
+            "layers": [{"cout": 4, "k": 3, "stride": 2, "padding": "same"}],
+            "dense": null, "n_stride2": 3,
+            "param_layout": [{"name": "conv0.w", "shape": [4, 9, 3, 3]},
+                              {"name": "conv0.b", "shape": [4]}],
+            "feat_shape": [4, 11, 11]},
+          "tiny": {"kind": "miniconv", "shader_deployable": true,
+            "layers": [], "dense": null, "n_stride2": 3,
+            "param_layout": [], "feat_shape": [4, 5, 5]}
+        }
+      },
+      "artifacts": [
+        {"name": "head_miniconv4_x84_b4", "file": "h.hlo.txt",
+         "inputs": [{"name": "params", "dtype": "f32", "shape": [100]},
+                     {"name": "feat", "dtype": "f32", "shape": [4, 4, 11, 11]}],
+         "outputs": [{"name": "act", "dtype": "f32", "shape": [4, 1]}],
+         "tags": {"kind": "head", "batch": 4}}
+      ],
+      "params": [{"name": "p", "file": "p.bin", "len": 3}],
+      "trainstates": [
+        {"name": "pendulum_miniconv4", "task": "pendulum", "algo": "ddpg",
+         "encoder": "miniconv4", "x": 36, "batch": 64, "action_dim": 1,
+         "max_action": 2.0, "gamma": 0.99, "episodes": 1000,
+         "state": [{"name": "actor", "dtype": "f32", "shape": [10], "file": "a.bin"},
+                    {"name": "step", "dtype": "i32", "shape": []}],
+         "batch_inputs": ["obs", "act"],
+         "metrics": ["critic_loss"],
+         "artifacts": {"update": "u", "act": "a"}}
+      ]
+    }"#;
+
+    fn write_mini() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mc_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+        crate::util::write_f32_bin(&dir.join("p.bin"), &[1.0, 2.0, 3.0]).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::load(&write_mini()).unwrap();
+        assert_eq!(m.serve_x, 84);
+        let a = m.artifact("head_miniconv4_x84_b4").unwrap();
+        assert_eq!(a.inputs[1].shape, vec![4, 4, 11, 11]);
+        assert_eq!(a.batch(), Some(4));
+        assert_eq!(a.inputs[1].elems(), 4 * 4 * 11 * 11);
+        let (serve, _tiny) = &m.encoders["miniconv4"];
+        assert!(serve.shader_deployable);
+        assert_eq!(serve.feat_shape, [4, 11, 11]);
+        assert_eq!(serve.param_count(), 4 * 9 * 3 * 3 + 4);
+        let ts = &m.trainstates["pendulum_miniconv4"];
+        assert_eq!(ts.algo, "ddpg");
+        assert_eq!(ts.state[1].dtype, DType::I32);
+        assert!(ts.state[1].file.is_none());
+    }
+
+    #[test]
+    fn loads_param_bins_with_length_check() {
+        let m = Manifest::load(&write_mini()).unwrap();
+        assert_eq!(m.load_params("p").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(m.load_params("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::load(&write_mini()).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn serve_name_helpers() {
+        let m = Manifest::load(&write_mini()).unwrap();
+        assert_eq!(m.serve_encoder("miniconv4"), "enc_miniconv4_x84_b1");
+        assert_eq!(m.serve_head("miniconv4", 8), "head_miniconv4_x84_b8");
+        assert_eq!(m.serve_full(32), "full_fullcnn_x84_b32");
+        assert_eq!(m.batch_ladder("head_miniconv4"), vec![4]);
+    }
+}

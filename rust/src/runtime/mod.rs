@@ -1,0 +1,23 @@
+//! Runtime layer: the bridge from AOT artifacts (HLO text + parameter bins,
+//! produced once by `make artifacts`) to live PJRT executables.
+//!
+//! * [`manifest`] — typed view over `artifacts/manifest.json`.
+//! * [`executor`] — PJRT client wrapper, executable cache, host/device values.
+//!
+//! Python never runs at serving time; after `make artifacts` the Rust binary
+//! is self-contained.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{DeviceTensor, Exe, Runtime, Value};
+pub use manifest::{ArtifactSpec, DType, EncoderMeta, Manifest, TensorSpec, TrainStateSpec};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$MINICONV_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("MINICONV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,234 @@
+//! GLSL ES 1.00 fragment-shader code generation.
+//!
+//! Emits one fragment shader per planned pass, in the dialect supported by
+//! the embedded GPUs the paper targets (VideoCore IV/VI, Maxwell): no
+//! dynamic loops over samplers, explicit unrolled taps, `mat4` weight
+//! uniforms (4 input channels -> 4 output channels per matrix), and
+//! border-zero sampling implemented via a coverage test (matching the
+//! zero-padding of 'same' convolution).
+//!
+//! The generated source is both an artifact users can ship (see
+//! examples/shader_export.rs) and the program text our software
+//! interpreter executes structurally.
+
+use super::planner::{Pass, PassKind, PassPlan, Texture};
+
+/// A generated shader program for one pass.
+#[derive(Debug, Clone)]
+pub struct ShaderSource {
+    pub name: String,
+    pub fragment: String,
+    /// uniform names for the weight matrices, tap-major
+    pub n_weight_mats: usize,
+    pub n_samplers: usize,
+}
+
+/// The standard fullscreen-quad vertex shader shared by every pass.
+pub const VERTEX_SHADER: &str = "\
+attribute vec2 a_pos;
+varying vec2 v_uv;
+void main() {
+    v_uv = a_pos * 0.5 + 0.5;
+    gl_Position = vec4(a_pos, 0.0, 1.0);
+}
+";
+
+/// Generate the fragment shader for one pass of the plan.
+pub fn gen_pass(plan: &PassPlan, pass: &Pass, textures: &[Texture]) -> ShaderSource {
+    match pass.kind {
+        PassKind::Conv { k, stride, same, relu } => {
+            gen_conv(plan, pass, textures, k, stride, same, relu)
+        }
+        PassKind::MaxPool { k, stride } => gen_pool(pass, textures, k, stride),
+    }
+}
+
+fn header(n_samplers: usize) -> String {
+    let mut s = String::from("precision highp float;\nvarying vec2 v_uv;\n");
+    for i in 0..n_samplers {
+        s.push_str(&format!("uniform sampler2D u_tex{i};\n"));
+    }
+    s
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_conv(
+    _plan: &PassPlan,
+    pass: &Pass,
+    textures: &[Texture],
+    k: usize,
+    stride: usize,
+    same: bool,
+    relu: bool,
+) -> ShaderSource {
+    let n_in = pass.in_textures.len();
+    let n_mats = k * k * n_in;
+    let in_h = textures[pass.in_textures[0]].h;
+    let in_w = textures[pass.in_textures[0]].w;
+    // 'same' zero padding offset (matches kernels/conv.py)
+    let pad = if same {
+        (((pass.out_h - 1) * stride + k).saturating_sub(in_h) / 2) as i64
+    } else {
+        0
+    };
+
+    let mut f = header(n_in);
+    f.push_str(&format!("uniform mat4 u_w[{n_mats}];\nuniform vec4 u_bias;\n"));
+    f.push_str(&format!(
+        "const vec2 IN_SIZE = vec2({in_w}.0, {in_h}.0);\nconst vec2 OUT_SIZE = vec2({}.0, {}.0);\n",
+        pass.out_w, pass.out_h
+    ));
+    f.push_str(
+        "vec4 fetch(sampler2D t, vec2 px) {\n\
+         \x20   // border-zero: outside the texture reads as 0 (zero padding)\n\
+         \x20   if (px.x < 0.0 || px.y < 0.0 || px.x >= IN_SIZE.x || px.y >= IN_SIZE.y)\n\
+         \x20       return vec4(0.0);\n\
+         \x20   return texture2D(t, (px + 0.5) / IN_SIZE);\n\
+         }\n",
+    );
+    f.push_str("void main() {\n");
+    f.push_str("    vec2 opx = floor(v_uv * OUT_SIZE);\n");
+    f.push_str(&format!(
+        "    vec2 ipx = opx * {stride}.0 - {pad}.0;\n"
+    ));
+    f.push_str("    vec4 acc = u_bias;\n");
+    // fully unrolled taps: the paper's static sampling pattern
+    let mut m = 0;
+    for ky in 0..k {
+        for kx in 0..k {
+            for t in 0..n_in {
+                f.push_str(&format!(
+                    "    acc += u_w[{m}] * fetch(u_tex{t}, ipx + vec2({kx}.0, {ky}.0));\n"
+                ));
+                m += 1;
+            }
+        }
+    }
+    if relu {
+        f.push_str("    acc = max(acc, vec4(0.0));\n");
+    }
+    f.push_str("    gl_FragColor = acc;\n}\n");
+
+    ShaderSource {
+        name: format!("conv_l{}_b{}", pass.layer, pass.out_block),
+        fragment: f,
+        n_weight_mats: n_mats,
+        n_samplers: n_in,
+    }
+}
+
+fn gen_pool(pass: &Pass, textures: &[Texture], k: usize, stride: usize) -> ShaderSource {
+    let in_h = textures[pass.in_textures[0]].h;
+    let in_w = textures[pass.in_textures[0]].w;
+    let mut f = header(1);
+    f.push_str(&format!(
+        "const vec2 IN_SIZE = vec2({in_w}.0, {in_h}.0);\nconst vec2 OUT_SIZE = vec2({}.0, {}.0);\n",
+        pass.out_w, pass.out_h
+    ));
+    f.push_str("void main() {\n");
+    f.push_str("    vec2 opx = floor(v_uv * OUT_SIZE);\n");
+    f.push_str(&format!("    vec2 ipx = opx * {stride}.0;\n"));
+    f.push_str("    vec4 acc = vec4(-1.0e30);\n");
+    for ky in 0..k {
+        for kx in 0..k {
+            f.push_str(&format!(
+                "    acc = max(acc, texture2D(u_tex0, (ipx + vec2({kx}.5, {ky}.5)) / IN_SIZE));\n"
+            ));
+        }
+    }
+    f.push_str("    gl_FragColor = acc;\n}\n");
+    ShaderSource {
+        name: format!("pool_l{}_b{}", pass.layer, pass.out_block),
+        fragment: f,
+        n_weight_mats: 0,
+        n_samplers: 1,
+    }
+}
+
+/// Generate all shaders for a plan (pass order).
+pub fn gen_all(plan: &PassPlan) -> Vec<ShaderSource> {
+    plan.passes
+        .iter()
+        .map(|p| gen_pass(plan, p, &plan.textures))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shader::ir::{EncoderIr, Op};
+    use crate::shader::planner::plan;
+
+    fn mini() -> PassPlan {
+        let ir = EncoderIr {
+            name: "m".into(),
+            input_channels: 9,
+            ops: vec![
+                Op::Conv { cout: 4, k: 3, stride: 2, same: true },
+                Op::Relu,
+            ],
+        };
+        plan(&ir, 84).unwrap()
+    }
+
+    #[test]
+    fn conv_shader_structure() {
+        let p = mini();
+        let s = gen_pass(&p, &p.passes[0], &p.textures);
+        // 3 input textures, 3x3 taps -> 27 weight matrices and 27 fetches
+        assert_eq!(s.n_weight_mats, 27);
+        assert_eq!(s.n_samplers, 3);
+        assert_eq!(s.fragment.matches("fetch(u_tex").count(), 27);
+        assert!(s.fragment.contains("uniform mat4 u_w[27];"));
+        assert!(s.fragment.contains("uniform sampler2D u_tex2;"));
+        assert!(!s.fragment.contains("u_tex3"));
+        // relu fused
+        assert!(s.fragment.contains("max(acc, vec4(0.0))"));
+        // GLSL ES 1.00: no for-loops over samplers, no #version 300
+        assert!(!s.fragment.contains("for ("));
+        assert!(!s.fragment.contains("#version"));
+    }
+
+    #[test]
+    fn sample_count_matches_planner_budget() {
+        // the emitted fetch count must equal the planner's per-pixel samples
+        let p = mini();
+        let s = gen_pass(&p, &p.passes[0], &p.textures);
+        assert_eq!(
+            s.fragment.matches("fetch(u_tex").count(),
+            p.passes[0].samples
+        );
+    }
+
+    #[test]
+    fn pool_shader_structure() {
+        let ir = EncoderIr {
+            name: "p".into(),
+            input_channels: 4,
+            ops: vec![Op::MaxPool { k: 2, stride: 2 }],
+        };
+        let p = plan(&ir, 8).unwrap();
+        let s = gen_pass(&p, &p.passes[0], &p.textures);
+        assert_eq!(s.fragment.matches("texture2D(u_tex0").count(), 4);
+        assert!(s.fragment.contains("max(acc,"));
+    }
+
+    #[test]
+    fn vertex_shader_is_fullscreen_quad() {
+        assert!(VERTEX_SHADER.contains("gl_Position"));
+        assert!(VERTEX_SHADER.contains("v_uv"));
+    }
+
+    #[test]
+    fn gen_all_covers_every_pass() {
+        let p = mini();
+        assert_eq!(gen_all(&p).len(), p.passes.len());
+    }
+
+    #[test]
+    fn border_zero_documented_in_source() {
+        let p = mini();
+        let s = gen_pass(&p, &p.passes[0], &p.textures);
+        assert!(s.fragment.contains("border-zero"));
+    }
+}

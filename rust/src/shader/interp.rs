@@ -1,0 +1,492 @@
+//! Software fragment-shader interpreter: executes a [`PassPlan`] the way an
+//! embedded GL stack would — texture by texture, pass by pass — so the
+//! deployment path can be validated numerically without a GPU.
+//!
+//! Two texture formats are modelled:
+//!   * `Float` — RGBA32F textures (OES_texture_float), bit-exact conv math;
+//!   * `Rgba8 { scales }` — the ubiquitous RGBA8 path: every pass's output
+//!     is quantised to 8 bits with a per-layer scale, exactly what happens
+//!     on GPUs without float render targets (e.g. the Pi Zero 2 W's
+//!     VideoCore). `calibrate()` picks the scales from a sample input.
+//!
+//! Validation: `validate.rs` checks Float mode against the reference conv
+//! stack (and hence, transitively, against the Pallas/XLA artifacts).
+
+use anyhow::{anyhow, Result};
+
+use super::ir::ConvWeights;
+use super::planner::{Pass, PassKind, PassPlan, CHANNELS_PER_TEXTURE};
+use crate::tensor::Chw;
+
+/// Texture storage format for intermediate activations.
+#[derive(Debug, Clone)]
+pub enum TextureFormat {
+    Float,
+    /// 8-bit textures: values stored as round(clamp(v/scale,0,1)*255).
+    /// One scale per *layer* (all blocks of a layer share one scale).
+    Rgba8 { scales: Vec<f32> },
+}
+
+/// One RGBA texture's storage.
+#[derive(Debug, Clone)]
+enum TexData {
+    Float(Vec<[f32; 4]>),
+    Rgba8 { data: Vec<[u8; 4]>, scale: f32 },
+}
+
+struct Tex {
+    h: usize,
+    w: usize,
+    data: TexData,
+}
+
+impl Tex {
+    #[inline]
+    fn fetch(&self, y: isize, x: isize) -> [f32; 4] {
+        // border-zero, matching the generated shader's coverage test
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            return [0.0; 4];
+        }
+        let i = y as usize * self.w + x as usize;
+        match &self.data {
+            TexData::Float(v) => v[i],
+            TexData::Rgba8 { data, scale } => {
+                let px = data[i];
+                [
+                    px[0] as f32 / 255.0 * scale,
+                    px[1] as f32 / 255.0 * scale,
+                    px[2] as f32 / 255.0 * scale,
+                    px[3] as f32 / 255.0 * scale,
+                ]
+            }
+        }
+    }
+}
+
+fn quantize(v: f32, scale: f32) -> u8 {
+    ((v / scale).clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+fn store(h: usize, w: usize, vals: Vec<[f32; 4]>, fmt: Option<f32>) -> Tex {
+    match fmt {
+        None => Tex { h, w, data: TexData::Float(vals) },
+        Some(scale) => Tex {
+            h,
+            w,
+            data: TexData::Rgba8 {
+                data: vals
+                    .iter()
+                    .map(|px| {
+                        [
+                            quantize(px[0], scale),
+                            quantize(px[1], scale),
+                            quantize(px[2], scale),
+                            quantize(px[3], scale),
+                        ]
+                    })
+                    .collect(),
+                scale,
+            },
+        },
+    }
+}
+
+/// The GL pipeline state for one encoder: plan + per-layer weights.
+pub struct ShaderPipeline {
+    pub plan: PassPlan,
+    weights: Vec<ConvWeights>,
+    pub format: TextureFormat,
+}
+
+impl ShaderPipeline {
+    pub fn new(plan: PassPlan, weights: Vec<ConvWeights>, format: TextureFormat) -> Result<Self> {
+        // one ConvWeights per conv layer in the plan
+        let conv_layers: Vec<usize> = plan
+            .passes
+            .iter()
+            .filter(|p| matches!(p.kind, PassKind::Conv { .. }))
+            .map(|p| p.layer)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        anyhow::ensure!(
+            conv_layers.len() == weights.len(),
+            "plan has {} conv layers, {} weight sets given",
+            conv_layers.len(),
+            weights.len()
+        );
+        Ok(ShaderPipeline { plan, weights, format })
+    }
+
+    fn layer_scale(&self, layer: usize) -> Option<f32> {
+        match &self.format {
+            TextureFormat::Float => None,
+            TextureFormat::Rgba8 { scales } => Some(scales[layer]),
+        }
+    }
+
+    /// Upload the input frame (CHW float in `[0,1]`) as packed RGBA textures.
+    /// Input quantisation is exact for u8-sourced frames (x*255 is integral),
+    /// mirroring the real pipeline where the camera frame *is* an RGBA8
+    /// texture.
+    fn upload(&self, input: &Chw) -> Vec<Tex> {
+        let n_blocks = input.c.div_ceil(CHANNELS_PER_TEXTURE);
+        let scale0 = self.layer_scale(0);
+        (0..n_blocks)
+            .map(|b| {
+                let mut vals = vec![[0.0f32; 4]; input.h * input.w];
+                for ch in 0..CHANNELS_PER_TEXTURE {
+                    let c = b * CHANNELS_PER_TEXTURE + ch;
+                    if c >= input.c {
+                        break;
+                    }
+                    for y in 0..input.h {
+                        for x in 0..input.w {
+                            vals[y * input.w + x][ch] = input.at(c, y, x);
+                        }
+                    }
+                }
+                store(input.h, input.w, vals, scale0)
+            })
+            .collect()
+    }
+
+    /// Weights for one pass as tap-major mat4 blocks (what the GLSL uniform
+    /// array holds): W[tap][in_block] is a 4x4 matrix out<-in.
+    fn pass_mats(&self, pass: &Pass, k: usize) -> (Vec<[[f32; 4]; 4]>, [f32; 4]) {
+        let conv_idx = self
+            .plan
+            .passes
+            .iter()
+            .filter(|p| matches!(p.kind, PassKind::Conv { .. }))
+            .map(|p| p.layer)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .position(|l| l == pass.layer)
+            .expect("conv layer index");
+        let w = &self.weights[conv_idx];
+        let n_in = pass.in_textures.len();
+        let mut mats = Vec::with_capacity(k * k * n_in);
+        for ky in 0..k {
+            for kx in 0..k {
+                for ib in 0..n_in {
+                    let mut m = [[0.0f32; 4]; 4]; // m[out][in]
+                    for o in 0..4 {
+                        let oc = pass.out_block * 4 + o;
+                        if oc >= w.cout {
+                            continue;
+                        }
+                        for i in 0..4 {
+                            let ic = ib * 4 + i;
+                            if ic >= w.cin {
+                                continue;
+                            }
+                            m[o][i] = w.w[((oc * w.cin + ic) * k + ky) * k + kx];
+                        }
+                    }
+                    mats.push(m);
+                }
+            }
+        }
+        let mut bias = [0.0f32; 4];
+        for o in 0..4 {
+            let oc = pass.out_block * 4 + o;
+            if oc < w.cout {
+                bias[o] = w.b[oc];
+            }
+        }
+        (mats, bias)
+    }
+
+    fn run_pass(&self, pass: &Pass, textures: &[Option<Tex>]) -> Tex {
+        let scale = self.layer_scale(pass.layer);
+        match pass.kind {
+            PassKind::Conv { k, stride, same, relu } => {
+                let ins: Vec<&Tex> = pass
+                    .in_textures
+                    .iter()
+                    .map(|&t| textures[t].as_ref().expect("input texture live"))
+                    .collect();
+                let (mats, bias) = self.pass_mats(pass, k);
+                let in_h = ins[0].h;
+                let pad = if same {
+                    (((pass.out_h - 1) * stride + k).saturating_sub(in_h) / 2) as isize
+                } else {
+                    0
+                };
+                let mut vals = vec![[0.0f32; 4]; pass.out_h * pass.out_w];
+                for oy in 0..pass.out_h {
+                    for ox in 0..pass.out_w {
+                        let mut acc = bias;
+                        let mut m = 0;
+                        let iy0 = (oy * stride) as isize - pad;
+                        let ix0 = (ox * stride) as isize - pad;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                for tex in &ins {
+                                    let px = tex.fetch(iy0 + ky as isize, ix0 + kx as isize);
+                                    let w = &mats[m];
+                                    for o in 0..4 {
+                                        acc[o] += w[o][0] * px[0]
+                                            + w[o][1] * px[1]
+                                            + w[o][2] * px[2]
+                                            + w[o][3] * px[3];
+                                    }
+                                    m += 1;
+                                }
+                            }
+                        }
+                        if relu {
+                            for a in acc.iter_mut() {
+                                *a = a.max(0.0);
+                            }
+                        }
+                        vals[oy * pass.out_w + ox] = acc;
+                    }
+                }
+                store(pass.out_h, pass.out_w, vals, scale)
+            }
+            PassKind::MaxPool { k, stride } => {
+                let tex = textures[pass.in_textures[0]].as_ref().expect("input");
+                let mut vals = vec![[0.0f32; 4]; pass.out_h * pass.out_w];
+                for oy in 0..pass.out_h {
+                    for ox in 0..pass.out_w {
+                        let mut acc = [f32::NEG_INFINITY; 4];
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let px = tex.fetch(
+                                    (oy * stride + ky) as isize,
+                                    (ox * stride + kx) as isize,
+                                );
+                                for o in 0..4 {
+                                    acc[o] = acc[o].max(px[o]);
+                                }
+                            }
+                        }
+                        vals[oy * pass.out_w + ox] = acc;
+                    }
+                }
+                store(pass.out_h, pass.out_w, vals, scale)
+            }
+        }
+    }
+
+    /// Execute the full pipeline on one frame. Returns the feature map
+    /// (C,H,W) assembled from the output textures.
+    pub fn run(&self, input: &Chw) -> Result<Chw> {
+        anyhow::ensure!(
+            input.h == self.plan.input_x && input.w == self.plan.input_x,
+            "input is {}x{}, plan built for {}",
+            input.h,
+            input.w,
+            self.plan.input_x
+        );
+        let mut textures: Vec<Option<Tex>> = vec![None; self.plan.textures.len()]
+            .into_iter()
+            .map(|_: Option<()>| None)
+            .collect();
+        for (slot, tex) in self
+            .plan
+            .input_textures
+            .iter()
+            .zip(self.upload(input))
+        {
+            textures[*slot] = Some(tex);
+        }
+        for pass in &self.plan.passes {
+            let out = self.run_pass(pass, &textures);
+            textures[pass.out_texture] = Some(out);
+        }
+        // assemble output feature map
+        let out_texs: Vec<&Tex> = self
+            .plan
+            .output_textures
+            .iter()
+            .map(|&t| textures[t].as_ref().ok_or_else(|| anyhow!("missing output texture")))
+            .collect::<Result<_>>()?;
+        let (h, w) = (out_texs[0].h, out_texs[0].w);
+        let c = out_texs.len() * CHANNELS_PER_TEXTURE;
+        let mut out = Chw::zeros(c, h, w);
+        for (b, tex) in out_texs.iter().enumerate() {
+            for y in 0..h {
+                for x in 0..w {
+                    let px = tex.fetch(y as isize, x as isize);
+                    for o in 0..4 {
+                        out.set(b * 4 + o, y, x, px[o]);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Choose per-layer RGBA8 scales from a calibration frame: run in float
+    /// mode and take each layer's max activation (headroom x1.05).
+    pub fn calibrate(plan: &PassPlan, weights: &[ConvWeights], frame: &Chw) -> Result<Vec<f32>> {
+        let float_pipe =
+            ShaderPipeline::new(plan.clone(), weights.to_vec(), TextureFormat::Float)?;
+        let n_layers = plan.passes.iter().map(|p| p.layer).max().unwrap_or(0) + 1;
+        let mut scales = vec![1.0f32; n_layers];
+
+        // run and track per-layer maxima
+        let mut textures: Vec<Option<Tex>> = (0..plan.textures.len()).map(|_| None).collect();
+        for (slot, tex) in plan.input_textures.iter().zip(float_pipe.upload(frame)) {
+            textures[*slot] = Some(tex);
+        }
+        for pass in &plan.passes {
+            let out = float_pipe.run_pass(pass, &textures);
+            if let TexData::Float(vals) = &out.data {
+                let mx = vals
+                    .iter()
+                    .flat_map(|p| p.iter())
+                    .fold(0.0f32, |a, &b| a.max(b));
+                scales[pass.layer] = scales[pass.layer].max(mx * 1.05);
+            }
+            textures[pass.out_texture] = Some(out);
+        }
+        Ok(scales)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shader::ir::{unpack_conv_weights, EncoderIr, Op};
+    use crate::shader::planner::plan;
+    use crate::tensor::{conv2d_ref, relu as relu_ref};
+    use crate::util::rng::Rng;
+
+    fn mini_ir(k_out: usize) -> EncoderIr {
+        EncoderIr {
+            name: "m".into(),
+            input_channels: 9,
+            ops: (0..3)
+                .flat_map(|_| {
+                    vec![Op::Conv { cout: k_out, k: 3, stride: 2, same: true }, Op::Relu]
+                })
+                .collect(),
+        }
+    }
+
+    fn rand_params(ir: &EncoderIr, rng: &mut Rng) -> Vec<f32> {
+        (0..ir.param_count()).map(|_| rng.normal_f32() * 0.3).collect()
+    }
+
+    fn rand_frame(c: usize, x: usize, rng: &mut Rng) -> Chw {
+        // u8-quantised values in `[0,1]`, like a real rendered frame
+        let mut f = Chw::zeros(c, x, x);
+        for v in f.data.iter_mut() {
+            *v = (rng.uniform() * 255.0).round() as f32 / 255.0;
+        }
+        f
+    }
+
+    /// Reference: run the conv stack with the plain Chw conv.
+    fn reference(ir: &EncoderIr, flat: &[f32], frame: &Chw) -> Chw {
+        let ws = unpack_conv_weights(ir, flat).unwrap();
+        let mut x = frame.clone();
+        for w in &ws {
+            let mut out = conv2d_ref(&x, &w.w, &w.b, w.cout, w.k, 2, true);
+            relu_ref(&mut out);
+            x = out;
+        }
+        x
+    }
+
+    #[test]
+    fn float_mode_matches_reference_conv() {
+        let mut rng = Rng::new(1);
+        for k_out in [4usize, 16] {
+            let ir = mini_ir(k_out);
+            let flat = rand_params(&ir, &mut rng);
+            let frame = rand_frame(9, 24, &mut rng);
+            let p = plan(&ir, 24).unwrap();
+            let ws = unpack_conv_weights(&ir, &flat).unwrap();
+            let pipe = ShaderPipeline::new(p, ws, TextureFormat::Float).unwrap();
+            let got = pipe.run(&frame).unwrap();
+            let want = reference(&ir, &flat, &frame);
+            // interpreter output is channel-padded to blocks of 4
+            assert!(got.c >= want.c);
+            let mut max_diff = 0.0f32;
+            for c in 0..want.c {
+                for y in 0..want.h {
+                    for x in 0..want.w {
+                        max_diff = max_diff.max((got.at(c, y, x) - want.at(c, y, x)).abs());
+                    }
+                }
+            }
+            assert!(max_diff < 1e-4, "K={k_out}: max diff {max_diff}");
+            // padding channels are exactly zero
+            for c in want.c..got.c {
+                for y in 0..got.h {
+                    for x in 0..got.w {
+                        assert_eq!(got.at(c, y, x), 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rgba8_mode_quantisation_error_bounded() {
+        let mut rng = Rng::new(2);
+        let ir = mini_ir(4);
+        let flat = rand_params(&ir, &mut rng);
+        let frame = rand_frame(9, 24, &mut rng);
+        let p = plan(&ir, 24).unwrap();
+        let ws = unpack_conv_weights(&ir, &flat).unwrap();
+
+        let scales = ShaderPipeline::calibrate(&p, &ws, &frame).unwrap();
+        assert!(scales.iter().all(|&s| s >= 1.0));
+
+        let pipe8 = ShaderPipeline::new(
+            p.clone(),
+            ws.clone(),
+            TextureFormat::Rgba8 { scales: scales.clone() },
+        )
+        .unwrap();
+        let pipef = ShaderPipeline::new(p, ws, TextureFormat::Float).unwrap();
+        let got8 = pipe8.run(&frame).unwrap();
+        let gotf = pipef.run(&frame).unwrap();
+        // 3 layers of 8-bit quantisation: error stays well under 5% of scale
+        let tol = scales.last().unwrap() * 0.05;
+        let diff = got8.max_abs_diff(&gotf);
+        assert!(diff < tol, "diff {diff} vs tol {tol}");
+        // but it is *not* bit-exact (quantisation is real)
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn input_size_checked() {
+        let ir = mini_ir(4);
+        let flat = vec![0.0; ir.param_count()];
+        let p = plan(&ir, 24).unwrap();
+        let ws = unpack_conv_weights(&ir, &flat).unwrap();
+        let pipe = ShaderPipeline::new(p, ws, TextureFormat::Float).unwrap();
+        assert!(pipe.run(&Chw::zeros(9, 16, 16)).is_err());
+    }
+
+    #[test]
+    fn weight_count_checked() {
+        let ir = mini_ir(4);
+        let p = plan(&ir, 24).unwrap();
+        assert!(ShaderPipeline::new(p, vec![], TextureFormat::Float).is_err());
+    }
+
+    #[test]
+    fn maxpool_pass_executes() {
+        let ir = EncoderIr {
+            name: "p".into(),
+            input_channels: 4,
+            ops: vec![Op::MaxPool { k: 2, stride: 2 }],
+        };
+        let p = plan(&ir, 4).unwrap();
+        let pipe = ShaderPipeline::new(p, vec![], TextureFormat::Float).unwrap();
+        let mut frame = Chw::zeros(4, 4, 4);
+        frame.set(0, 1, 1, 0.9);
+        frame.set(0, 2, 2, 0.4);
+        let out = pipe.run(&frame).unwrap();
+        assert_eq!(out.at(0, 0, 0), 0.9);
+        assert_eq!(out.at(0, 1, 1), 0.4);
+    }
+}

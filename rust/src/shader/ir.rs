@@ -1,0 +1,210 @@
+//! MiniConv intermediate representation: the encoder as a sequence of ops
+//! that the pass planner maps onto OpenGL fragment-shader passes.
+//!
+//! The IR is deliberately small — the paper's point is that *this* op set
+//! (small convs, ReLU, pooling) is exactly what compiles cleanly to
+//! embedded-GL fragment shaders.
+
+use crate::runtime::EncoderMeta;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// 2-D convolution; `same` pads with zeros so out = ceil(in/stride).
+    Conv { cout: usize, k: usize, stride: usize, same: bool },
+    /// ReLU applied to the previous op's output (fused into its pass).
+    Relu,
+    /// Max pooling (valid padding).
+    MaxPool { k: usize, stride: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct EncoderIr {
+    pub name: String,
+    pub input_channels: usize,
+    pub ops: Vec<Op>,
+}
+
+impl EncoderIr {
+    /// Build the IR for a manifest encoder (conv layers each followed by
+    /// ReLU, mirroring model.py's `enc_apply`).
+    pub fn from_meta(name: &str, input_channels: usize, meta: &EncoderMeta) -> EncoderIr {
+        let mut ops = Vec::new();
+        for l in &meta.layers {
+            ops.push(Op::Conv { cout: l.cout, k: l.k, stride: l.stride, same: l.same });
+            ops.push(Op::Relu);
+        }
+        EncoderIr { name: name.to_string(), input_channels, ops }
+    }
+
+    /// Channel count after every op.
+    pub fn channel_trace(&self) -> Vec<usize> {
+        let mut c = self.input_channels;
+        let mut out = vec![c];
+        for op in &self.ops {
+            if let Op::Conv { cout, .. } = op {
+                c = *cout;
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Output (c, h, w) for a square input of side `x`.
+    pub fn out_shape(&self, x: usize) -> (usize, usize, usize) {
+        let mut c = self.input_channels;
+        let mut h = x;
+        let mut w = x;
+        for op in &self.ops {
+            match op {
+                Op::Conv { cout, k, stride, same } => {
+                    c = *cout;
+                    if *same {
+                        h = h.div_ceil(*stride);
+                        w = w.div_ceil(*stride);
+                    } else {
+                        h = (h - k) / stride + 1;
+                        w = (w - k) / stride + 1;
+                    }
+                }
+                Op::MaxPool { k, stride } => {
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                Op::Relu => {}
+            }
+        }
+        (c, h, w)
+    }
+
+    /// Number of stride-2 layers `n` in the paper's bandwidth model
+    /// (transmitted feature map is (X/2^n)^2).
+    pub fn n_stride2(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, Op::Conv { stride: 2, .. } | Op::MaxPool { stride: 2, .. }))
+            .count()
+    }
+
+    /// Total weight+bias parameter count of all conv layers.
+    pub fn param_count(&self) -> usize {
+        let mut cin = self.input_channels;
+        let mut total = 0;
+        for op in &self.ops {
+            if let Op::Conv { cout, k, .. } = op {
+                total += cout * cin * k * k + cout;
+                cin = *cout;
+            }
+        }
+        total
+    }
+}
+
+/// Per-layer conv weights in OIHW layout + bias, unpacked from the flat
+/// parameter vector the artifacts use (layout from the manifest).
+#[derive(Debug, Clone)]
+pub struct ConvWeights {
+    pub cout: usize,
+    pub cin: usize,
+    pub k: usize,
+    pub w: Vec<f32>, // cout*cin*k*k
+    pub b: Vec<f32>, // cout
+}
+
+/// Split a flat encoder parameter vector into per-layer conv weights.
+pub fn unpack_conv_weights(ir: &EncoderIr, flat: &[f32]) -> anyhow::Result<Vec<ConvWeights>> {
+    let mut out = Vec::new();
+    let mut cin = ir.input_channels;
+    let mut off = 0;
+    for op in &ir.ops {
+        if let Op::Conv { cout, k, .. } = op {
+            let nw = cout * cin * k * k;
+            anyhow::ensure!(off + nw + cout <= flat.len(), "flat params too short");
+            out.push(ConvWeights {
+                cout: *cout,
+                cin,
+                k: *k,
+                w: flat[off..off + nw].to_vec(),
+                b: flat[off + nw..off + nw + cout].to_vec(),
+            });
+            off += nw + cout;
+            cin = *cout;
+        }
+    }
+    anyhow::ensure!(
+        off == flat.len(),
+        "flat params: {} consumed, {} provided (dense tail is not shader-deployable)",
+        off,
+        flat.len()
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn miniconv4() -> EncoderIr {
+        EncoderIr {
+            name: "miniconv4".into(),
+            input_channels: 9,
+            ops: vec![
+                Op::Conv { cout: 4, k: 3, stride: 2, same: true },
+                Op::Relu,
+                Op::Conv { cout: 4, k: 3, stride: 2, same: true },
+                Op::Relu,
+                Op::Conv { cout: 4, k: 3, stride: 2, same: true },
+                Op::Relu,
+            ],
+        }
+    }
+
+    #[test]
+    fn out_shape_is_ceil_x_over_8() {
+        let ir = miniconv4();
+        assert_eq!(ir.out_shape(84), (4, 11, 11));
+        assert_eq!(ir.out_shape(400), (4, 50, 50));
+        assert_eq!(ir.out_shape(36), (4, 5, 5));
+    }
+
+    #[test]
+    fn n_stride2() {
+        assert_eq!(miniconv4().n_stride2(), 3);
+    }
+
+    #[test]
+    fn param_count_matches_model() {
+        // (9*4*9+4) + (4*4*9+4)*2 — see python test_enc_param_count_tiny
+        assert_eq!(miniconv4().param_count(), 328 + 148 + 148);
+    }
+
+    #[test]
+    fn channel_trace() {
+        let tr = miniconv4().channel_trace();
+        assert_eq!(tr, vec![9, 4, 4, 4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn unpack_weights_layout() {
+        let ir = miniconv4();
+        let flat: Vec<f32> = (0..ir.param_count()).map(|i| i as f32).collect();
+        let ws = unpack_conv_weights(&ir, &flat).unwrap();
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[0].cin, 9);
+        assert_eq!(ws[0].w[0], 0.0);
+        assert_eq!(ws[0].b[0], (4 * 9 * 9) as f32); // bias follows weights
+        assert_eq!(ws[1].cin, 4);
+        // wrong length rejected
+        assert!(unpack_conv_weights(&ir, &flat[..10]).is_err());
+    }
+
+    #[test]
+    fn maxpool_shape() {
+        let ir = EncoderIr {
+            name: "p".into(),
+            input_channels: 4,
+            ops: vec![Op::MaxPool { k: 2, stride: 2 }],
+        };
+        assert_eq!(ir.out_shape(8), (4, 4, 4));
+        assert_eq!(ir.n_stride2(), 1);
+    }
+}

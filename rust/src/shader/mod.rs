@@ -1,0 +1,44 @@
+//! The MiniConv shader toolchain — the paper's deployment contribution.
+//!
+//! Pipeline: [`ir::EncoderIr`] (from the artifact manifest) →
+//! [`planner::plan`] (fragment-shader passes under embedded-GL limits) →
+//! [`glsl::gen_all`] (GLSL ES 1.00 sources) and/or [`interp::ShaderPipeline`]
+//! (software execution, float or RGBA8-quantised textures).
+//!
+//! The planner enforces the constraints the paper documents for the
+//! Pi Zero 2 W: 4 output channels per pass (RGBA), ≤ 8 bound textures,
+//! ≤ 64 texture samples per shader.
+
+pub mod glsl;
+pub mod interp;
+pub mod ir;
+pub mod planner;
+
+pub use glsl::{gen_all, ShaderSource, VERTEX_SHADER};
+pub use interp::{ShaderPipeline, TextureFormat};
+pub use ir::{unpack_conv_weights, ConvWeights, EncoderIr, Op};
+pub use planner::{plan, Pass, PassKind, PassPlan, PlanError};
+
+use crate::runtime::{EncoderMeta, Manifest};
+use anyhow::Result;
+
+/// Build a ready-to-run shader pipeline for a manifest encoder at input
+/// size `x`, loading its trained/initial conv weights from `params_name`.
+pub fn pipeline_from_manifest(
+    manifest: &Manifest,
+    arch: &str,
+    meta: &EncoderMeta,
+    x: usize,
+    params_name: &str,
+    format: TextureFormat,
+) -> Result<ShaderPipeline> {
+    anyhow::ensure!(
+        meta.shader_deployable,
+        "{arch} is not shader-deployable (the planner would reject it)"
+    );
+    let ir = EncoderIr::from_meta(arch, manifest.obs_channels, meta);
+    let plan = plan(&ir, x)?;
+    let flat = manifest.load_params(params_name)?;
+    let weights = unpack_conv_weights(&ir, &flat)?;
+    ShaderPipeline::new(plan, weights, format)
+}

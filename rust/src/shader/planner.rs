@@ -1,0 +1,358 @@
+//! Pass planner: map an [`EncoderIr`] onto OpenGL fragment-shader passes
+//! under the embedded-GL constraints the paper documents for the
+//! Pi Zero 2 W deployment (§3):
+//!
+//!   * each pass writes one RGBA texture => 4 output channels per pass;
+//!   * a fragment shader samples from at most **8 bound textures**;
+//!   * each shader invocation has a **64-texture-sample budget**.
+//!
+//! Channels are packed 4-per-texture (RGBA). A conv layer with `cout`
+//! output channels over `cin` input channels becomes
+//! `ceil(cout/4)` passes, each binding `ceil(cin/4)` textures and
+//! performing `k^2 * ceil(cin/4)` samples per output pixel.
+
+use thiserror::Error;
+
+use super::ir::{EncoderIr, Op};
+
+pub const CHANNELS_PER_TEXTURE: usize = 4;
+pub const MAX_BOUND_TEXTURES: usize = 8;
+pub const MAX_SAMPLES_PER_PASS: usize = 64;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("layer {layer}: pass needs {textures} bound textures, limit is {limit}")]
+    TooManyTextures { layer: usize, textures: usize, limit: usize },
+    #[error("layer {layer}: pass needs {samples} texture samples, budget is {budget}")]
+    SampleBudget { layer: usize, samples: usize, budget: usize },
+    #[error("layer {layer}: unsupported op for shader deployment: {what}")]
+    Unsupported { layer: usize, what: String },
+}
+
+/// A logical texture: 4 packed channels of one layer's activation map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Texture {
+    pub id: usize,
+    /// layer the texture belongs to (0 = network input)
+    pub layer: usize,
+    /// channel block index within the layer (channels block*4 .. block*4+4)
+    pub block: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PassKind {
+    Conv { k: usize, stride: usize, same: bool, relu: bool },
+    MaxPool { k: usize, stride: usize },
+}
+
+/// One fragment-shader pass: reads `in_textures`, writes `out_texture`.
+#[derive(Debug, Clone)]
+pub struct Pass {
+    pub layer: usize,
+    /// output channel block (out channels block*4 .. block*4+4)
+    pub out_block: usize,
+    pub kind: PassKind,
+    pub in_textures: Vec<usize>,
+    pub out_texture: usize,
+    /// texture samples per output pixel
+    pub samples: usize,
+    /// output resolution
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PassPlan {
+    pub input_x: usize,
+    pub textures: Vec<Texture>,
+    pub passes: Vec<Pass>,
+    /// ids of the network-input textures (layer 0)
+    pub input_textures: Vec<usize>,
+    /// ids of the final-layer textures (the transmitted feature blocks)
+    pub output_textures: Vec<usize>,
+}
+
+impl PassPlan {
+    /// Total texture samples for one frame = Σ passes (out_h*out_w*samples).
+    /// This is the planner-level cost the device model consumes (Fig. 2).
+    pub fn total_samples(&self) -> u64 {
+        self.passes
+            .iter()
+            .map(|p| (p.out_h * p.out_w * p.samples) as u64)
+            .sum()
+    }
+
+    /// Total bytes written to textures per frame (RGBA8 assumption).
+    pub fn bytes_written(&self) -> u64 {
+        self.passes
+            .iter()
+            .map(|p| (p.out_h * p.out_w * CHANNELS_PER_TEXTURE) as u64)
+            .sum()
+    }
+
+    /// Peak number of live textures (resident texture memory pressure).
+    pub fn peak_textures(&self) -> usize {
+        // textures of two consecutive layers are live at once
+        let mut per_layer = std::collections::BTreeMap::new();
+        for t in &self.textures {
+            *per_layer.entry(t.layer).or_insert(0usize) += 1;
+        }
+        let counts: Vec<usize> = per_layer.values().copied().collect();
+        counts
+            .windows(2)
+            .map(|w| w[0] + w[1])
+            .max()
+            .unwrap_or_else(|| counts.first().copied().unwrap_or(0))
+    }
+}
+
+/// Plan the shader passes for `ir` at input resolution `x`, enforcing the
+/// embedded-GL constraints.
+pub fn plan(ir: &EncoderIr, x: usize) -> Result<PassPlan, PlanError> {
+    let mut textures = Vec::new();
+    let mut passes = Vec::new();
+
+    let blocks = |c: usize| c.div_ceil(CHANNELS_PER_TEXTURE);
+
+    // layer-0 textures: the packed input frame
+    let mut cur: Vec<usize> = (0..blocks(ir.input_channels))
+        .map(|b| {
+            let id = textures.len();
+            textures.push(Texture { id, layer: 0, block: b, h: x, w: x });
+            id
+        })
+        .collect();
+    let input_textures = cur.clone();
+    let mut cur_h = x;
+    let mut cur_w = x;
+    let mut layer_idx = 0usize;
+    let mut pending_relu = false;
+
+    // Look ahead: ReLU fuses into the preceding conv's pass.
+    let mut ops = ir.ops.iter().peekable();
+    while let Some(op) = ops.next() {
+        match op {
+            Op::Relu => {
+                // standalone ReLU (not fused): only legal right after conv,
+                // which we fuse eagerly below, so a bare Relu here is a
+                // leading ReLU — unsupported.
+                if !pending_relu {
+                    return Err(PlanError::Unsupported {
+                        layer: layer_idx,
+                        what: "ReLU without preceding conv".into(),
+                    });
+                }
+                pending_relu = false;
+            }
+            Op::Conv { cout, k, stride, same } => {
+                layer_idx += 1;
+                let relu = matches!(ops.peek(), Some(Op::Relu));
+                pending_relu = relu;
+                let in_blocks = cur.len();
+                if in_blocks > MAX_BOUND_TEXTURES {
+                    return Err(PlanError::TooManyTextures {
+                        layer: layer_idx,
+                        textures: in_blocks,
+                        limit: MAX_BOUND_TEXTURES,
+                    });
+                }
+                let samples = k * k * in_blocks;
+                if samples > MAX_SAMPLES_PER_PASS {
+                    return Err(PlanError::SampleBudget {
+                        layer: layer_idx,
+                        samples,
+                        budget: MAX_SAMPLES_PER_PASS,
+                    });
+                }
+                let (oh, ow) = if *same {
+                    (cur_h.div_ceil(*stride), cur_w.div_ceil(*stride))
+                } else {
+                    ((cur_h - k) / stride + 1, (cur_w - k) / stride + 1)
+                };
+                let mut next = Vec::new();
+                for ob in 0..blocks(*cout) {
+                    let out_id = textures.len();
+                    textures.push(Texture { id: out_id, layer: layer_idx, block: ob, h: oh, w: ow });
+                    passes.push(Pass {
+                        layer: layer_idx,
+                        out_block: ob,
+                        kind: PassKind::Conv { k: *k, stride: *stride, same: *same, relu },
+                        in_textures: cur.clone(),
+                        out_texture: out_id,
+                        samples,
+                        out_h: oh,
+                        out_w: ow,
+                    });
+                    next.push(out_id);
+                }
+                cur = next;
+                cur_h = oh;
+                cur_w = ow;
+            }
+            Op::MaxPool { k, stride } => {
+                layer_idx += 1;
+                let samples = k * k; // pooling reads one texture
+                if samples > MAX_SAMPLES_PER_PASS {
+                    return Err(PlanError::SampleBudget {
+                        layer: layer_idx,
+                        samples,
+                        budget: MAX_SAMPLES_PER_PASS,
+                    });
+                }
+                let oh = (cur_h - k) / stride + 1;
+                let ow = (cur_w - k) / stride + 1;
+                let mut next = Vec::new();
+                for (ob, &tex) in cur.iter().enumerate() {
+                    let out_id = textures.len();
+                    textures.push(Texture { id: out_id, layer: layer_idx, block: ob, h: oh, w: ow });
+                    passes.push(Pass {
+                        layer: layer_idx,
+                        out_block: ob,
+                        kind: PassKind::MaxPool { k: *k, stride: *stride },
+                        in_textures: vec![tex],
+                        out_texture: out_id,
+                        samples,
+                        out_h: oh,
+                        out_w: ow,
+                    });
+                    next.push(out_id);
+                }
+                cur = next;
+                cur_h = oh;
+                cur_w = ow;
+            }
+        }
+    }
+
+    Ok(PassPlan {
+        input_x: x,
+        output_textures: cur,
+        textures,
+        passes,
+        input_textures,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shader::ir::{EncoderIr, Op};
+
+    fn miniconv(k_out: usize) -> EncoderIr {
+        EncoderIr {
+            name: format!("miniconv{k_out}"),
+            input_channels: 9,
+            ops: (0..3)
+                .flat_map(|_| {
+                    vec![
+                        Op::Conv { cout: k_out, k: 3, stride: 2, same: true },
+                        Op::Relu,
+                    ]
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn miniconv4_plan_structure() {
+        let p = plan(&miniconv(4), 84).unwrap();
+        // layer 1: 1 pass (4 out ch), layers 2-3: 1 pass each
+        assert_eq!(p.passes.len(), 3);
+        // layer 1 binds ceil(9/4)=3 textures, 27 samples
+        assert_eq!(p.passes[0].in_textures.len(), 3);
+        assert_eq!(p.passes[0].samples, 27);
+        // later layers bind 1 texture, 9 samples
+        assert_eq!(p.passes[1].samples, 9);
+        // output: one 4-channel block at 11x11
+        assert_eq!(p.output_textures.len(), 1);
+        let out = &p.textures[p.output_textures[0]];
+        assert_eq!((out.h, out.w), (11, 11));
+        // relu fused on every pass
+        for pass in &p.passes {
+            assert!(matches!(pass.kind, PassKind::Conv { relu: true, .. }));
+        }
+    }
+
+    #[test]
+    fn miniconv16_pass_counts() {
+        let p = plan(&miniconv(16), 84).unwrap();
+        // layer1: 4 passes; layers 2,3: 4 passes each (16 out = 4 blocks)
+        assert_eq!(p.passes.len(), 12);
+        // layer 2 binds 4 input textures (16 in ch), 36 samples <= 64
+        let l2 = p.passes.iter().find(|q| q.layer == 2).unwrap();
+        assert_eq!(l2.in_textures.len(), 4);
+        assert_eq!(l2.samples, 36);
+    }
+
+    #[test]
+    fn naturecnn_first_layer_rejected() {
+        // 8x8 conv over 9 channels: 64 * 3 = 192 samples > 64 budget
+        let ir = EncoderIr {
+            name: "fullcnn".into(),
+            input_channels: 9,
+            ops: vec![Op::Conv { cout: 32, k: 8, stride: 4, same: false }],
+        };
+        match plan(&ir, 84) {
+            Err(PlanError::SampleBudget { samples, .. }) => assert_eq!(samples, 192),
+            other => panic!("expected SampleBudget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn texture_limit_enforced() {
+        // 64 input channels = 16 textures > 8
+        let ir = EncoderIr {
+            name: "wide".into(),
+            input_channels: 64,
+            ops: vec![Op::Conv { cout: 4, k: 1, stride: 1, same: true }],
+        };
+        assert!(matches!(
+            plan(&ir, 32),
+            Err(PlanError::TooManyTextures { textures: 16, .. })
+        ));
+    }
+
+    #[test]
+    fn cost_model_scales_quadratically() {
+        let p100 = plan(&miniconv(4), 100).unwrap();
+        let p200 = plan(&miniconv(4), 200).unwrap();
+        let r = p200.total_samples() as f64 / p100.total_samples() as f64;
+        assert!((r - 4.0).abs() < 0.2, "expected ~4x, got {r}");
+    }
+
+    #[test]
+    fn total_samples_hand_check() {
+        // miniconv4 @ 84: L1 42*42*27 + L2 21*21*9 + L3 11*11*9
+        let p = plan(&miniconv(4), 84).unwrap();
+        let expect = 42 * 42 * 27 + 21 * 21 * 9 + 11 * 11 * 9;
+        assert_eq!(p.total_samples(), expect as u64);
+    }
+
+    #[test]
+    fn maxpool_plans_per_block() {
+        let ir = EncoderIr {
+            name: "p".into(),
+            input_channels: 8,
+            ops: vec![Op::MaxPool { k: 2, stride: 2 }],
+        };
+        let p = plan(&ir, 16).unwrap();
+        assert_eq!(p.passes.len(), 2); // 8 channels = 2 blocks
+        assert!(matches!(p.passes[0].kind, PassKind::MaxPool { .. }));
+        assert_eq!(p.passes[0].samples, 4);
+    }
+
+    #[test]
+    fn leading_relu_unsupported() {
+        let ir = EncoderIr { name: "r".into(), input_channels: 4, ops: vec![Op::Relu] };
+        assert!(matches!(plan(&ir, 8), Err(PlanError::Unsupported { .. })));
+    }
+
+    #[test]
+    fn peak_textures_counts_live_layers() {
+        let p = plan(&miniconv(16), 84).unwrap();
+        // consecutive 16-channel layers: 4 + 4 textures live together = 8
+        assert_eq!(p.peak_textures(), 8);
+    }
+}

@@ -1,0 +1,170 @@
+//! Telemetry: time-series recording for the sustained-load experiments
+//! (Figs. 3/4 — per-frame time, temperature, power, RAM traces) and CSV
+//! export so results are plottable outside the harness.
+
+use std::collections::BTreeMap;
+
+/// A named set of aligned time series.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    /// x axis (frame index or seconds)
+    pub xs: Vec<f64>,
+    pub series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Record one sample row. All series must be present in every row.
+    pub fn record(&mut self, x: f64, values: &[(&str, f64)]) {
+        self.xs.push(x);
+        for (k, v) in values {
+            self.series.entry(k.to_string()).or_default().push(*v);
+        }
+        debug_assert!(
+            self.series.values().all(|s| s.len() == self.xs.len()),
+            "ragged series"
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f64]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    /// Mean of a series over a trailing window (e.g. plateau detection).
+    pub fn tail_mean(&self, name: &str, window: usize) -> Option<f64> {
+        let s = self.series.get(name)?;
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(window)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Mean of a leading window (e.g. pre-throttle behaviour).
+    pub fn head_mean(&self, name: &str, window: usize) -> Option<f64> {
+        let s = self.series.get(name)?;
+        if s.is_empty() {
+            return None;
+        }
+        let head = &s[..window.min(s.len())];
+        Some(head.iter().sum::<f64>() / head.len() as f64)
+    }
+
+    /// Downsample to at most `n` points (stride sampling) for printing.
+    pub fn downsample(&self, n: usize) -> Recorder {
+        if self.xs.len() <= n || n == 0 {
+            return self.clone();
+        }
+        let stride = self.xs.len().div_ceil(n);
+        let mut out = Recorder::new();
+        for i in (0..self.xs.len()).step_by(stride) {
+            let row: Vec<(&str, f64)> =
+                self.series.iter().map(|(k, v)| (k.as_str(), v[i])).collect();
+            out.record(self.xs[i], &row);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("x");
+        for k in self.series.keys() {
+            out.push(',');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for i in 0..self.xs.len() {
+            out.push_str(&format!("{}", self.xs[i]));
+            for v in self.series.values() {
+                out.push_str(&format!(",{}", v[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// A compact sparkline-ish text rendering of one series.
+    pub fn sparkline(&self, name: &str, width: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let Some(s) = self.series.get(name) else {
+            return String::new();
+        };
+        if s.is_empty() {
+            return String::new();
+        }
+        let stride = (s.len().div_ceil(width)).max(1);
+        let pts: Vec<f64> = s.chunks(stride).map(|c| c.iter().sum::<f64>() / c.len() as f64).collect();
+        let lo = pts.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = pts.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        pts.iter()
+            .map(|&v| {
+                let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+                GLYPHS[((t * 7.0).round() as usize).min(7)]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> Recorder {
+        let mut r = Recorder::new();
+        for i in 0..10 {
+            r.record(i as f64, &[("t", i as f64 * 2.0), ("w", 1.0)]);
+        }
+        r
+    }
+
+    #[test]
+    fn record_and_get() {
+        let r = rec();
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.get("t").unwrap()[3], 6.0);
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn tail_and_head_means() {
+        let r = rec();
+        assert_eq!(r.tail_mean("t", 2).unwrap(), 17.0); // (16+18)/2
+        assert_eq!(r.head_mean("t", 2).unwrap(), 1.0); // (0+2)/2
+        assert_eq!(r.tail_mean("t", 100).unwrap(), 9.0);
+    }
+
+    #[test]
+    fn downsample_preserves_columns() {
+        let r = rec().downsample(3);
+        assert!(r.len() <= 3 + 1);
+        assert_eq!(r.series.len(), 2);
+    }
+
+    #[test]
+    fn csv_layout() {
+        let mut r = Recorder::new();
+        r.record(0.0, &[("a", 1.0), ("b", 2.0)]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("x,a,b\n"));
+        assert!(csv.contains("0,1,2"));
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let r = rec();
+        let s = r.sparkline("t", 10);
+        assert_eq!(s.chars().count(), 10);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+}

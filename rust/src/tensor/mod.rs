@@ -1,0 +1,275 @@
+//! Minimal CHW tensor types shared by the environments (frames), the shader
+//! interpreter (textures), and validation code (reference convolution).
+//!
+//! This is intentionally not a general ndarray: fixed layouts (CHW for
+//! float planes, HWC-interleaved u8 for rendered frames) keep the hot-path
+//! conversions explicit and allocation-free where it matters.
+
+/// A C,H,W float32 tensor (channel-major planes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chw {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Chw {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Chw { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), c * h * w, "shape/data mismatch");
+        Chw { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Zero-padded read (used by 'same' convolution).
+    #[inline]
+    pub fn at_padded(&self, c: usize, y: isize, x: isize) -> f32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0.0
+        } else {
+            self.at(c, y as usize, x as usize)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn max_abs_diff(&self, other: &Chw) -> f32 {
+        assert_eq!((self.c, self.h, self.w), (other.c, other.h, other.w));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// An H,W,RGB interleaved u8 frame as produced by the rasterizer (and, in
+/// the paper, by the environment's renderer / device camera).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameRgb {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<u8>, // h*w*3
+}
+
+impl FrameRgb {
+    pub fn new(h: usize, w: usize) -> Self {
+        FrameRgb { h, w, data: vec![0; h * w * 3] }
+    }
+
+    #[inline]
+    pub fn put(&mut self, y: usize, x: usize, rgb: [u8; 3]) {
+        let i = (y * self.w + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize) -> [u8; 3] {
+        let i = (y * self.w + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    pub fn fill(&mut self, rgb: [u8; 3]) {
+        for px in self.data.chunks_exact_mut(3) {
+            px.copy_from_slice(&rgb);
+        }
+    }
+
+    /// Crop a square region (paper: 100x100 render -> 84x84 crop).
+    pub fn crop(&self, top: usize, left: usize, size: usize) -> FrameRgb {
+        assert!(top + size <= self.h && left + size <= self.w, "crop out of bounds");
+        let mut out = FrameRgb::new(size, size);
+        for y in 0..size {
+            let src = ((top + y) * self.w + left) * 3;
+            let dst = y * size * 3;
+            out.data[dst..dst + size * 3].copy_from_slice(&self.data[src..src + size * 3]);
+        }
+        out
+    }
+
+    /// Append an opaque alpha channel: RGBA bytes (the paper's OpenGL
+    /// upload boundary; also the server-only wire format).
+    pub fn to_rgba_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.h * self.w * 4);
+        for px in self.data.chunks_exact(3) {
+            out.extend_from_slice(px);
+            out.push(255);
+        }
+        out
+    }
+
+    /// Normalised float planes: u8 HWC -> f32 CHW in `[0,1]` (SB3
+    /// normalize_images + VecTransposeImage).
+    pub fn to_chw_norm(&self) -> Chw {
+        let mut out = Chw::zeros(3, self.h, self.w);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let [r, g, b] = self.get(y, x);
+                out.set(0, y, x, r as f32 / 255.0);
+                out.set(1, y, x, g as f32 / 255.0);
+                out.set(2, y, x, b as f32 / 255.0);
+            }
+        }
+        out
+    }
+}
+
+/// Reference valid/same convolution on Chw tensors — the oracle the shader
+/// interpreter is validated against (mirrors python kernels/ref.py).
+pub fn conv2d_ref(
+    x: &Chw,
+    w: &[f32], // [cout, cin, k, k]
+    b: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+    same: bool,
+) -> Chw {
+    let cin = x.c;
+    assert_eq!(w.len(), cout * cin * k * k, "weight size");
+    assert_eq!(b.len(), cout, "bias size");
+    let (ho, wo, pad) = if same {
+        let ho = x.h.div_ceil(stride);
+        let wo = x.w.div_ceil(stride);
+        let pad_h = ((ho - 1) * stride + k).saturating_sub(x.h);
+        (ho, wo, (pad_h / 2) as isize)
+    } else {
+        ((x.h - k) / stride + 1, (x.w - k) / stride + 1, 0)
+    };
+    let mut out = Chw::zeros(cout, ho, wo);
+    for oc in 0..cout {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = b[oc];
+                for ic in 0..cin {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad;
+                            let ix = (ox * stride + kx) as isize - pad;
+                            let xv = x.at_padded(ic, iy, ix);
+                            let wv = w[((oc * cin + ic) * k + ky) * k + kx];
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                out.set(oc, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut Chw) {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chw_indexing() {
+        let mut t = Chw::zeros(2, 3, 4);
+        t.set(1, 2, 3, 7.0);
+        assert_eq!(t.at(1, 2, 3), 7.0);
+        assert_eq!(t.at(0, 0, 0), 0.0);
+        assert_eq!(t.data[23], 7.0); // last element
+    }
+
+    #[test]
+    fn padded_reads() {
+        let t = Chw::from_vec(1, 1, 1, vec![5.0]);
+        assert_eq!(t.at_padded(0, 0, 0), 5.0);
+        assert_eq!(t.at_padded(0, -1, 0), 0.0);
+        assert_eq!(t.at_padded(0, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn frame_crop() {
+        let mut f = FrameRgb::new(4, 4);
+        f.put(1, 1, [9, 9, 9]);
+        let c = f.crop(1, 1, 2);
+        assert_eq!(c.get(0, 0), [9, 9, 9]);
+        assert_eq!(c.get(1, 1), [0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn crop_bounds_checked() {
+        FrameRgb::new(4, 4).crop(3, 3, 2);
+    }
+
+    #[test]
+    fn rgba_has_opaque_alpha() {
+        let mut f = FrameRgb::new(1, 2);
+        f.put(0, 0, [1, 2, 3]);
+        f.put(0, 1, [4, 5, 6]);
+        assert_eq!(f.to_rgba_bytes(), vec![1, 2, 3, 255, 4, 5, 6, 255]);
+    }
+
+    #[test]
+    fn chw_normalisation() {
+        let mut f = FrameRgb::new(1, 1);
+        f.put(0, 0, [255, 0, 51]);
+        let t = f.to_chw_norm();
+        assert!((t.at(0, 0, 0) - 1.0).abs() < 1e-6);
+        assert_eq!(t.at(1, 0, 0), 0.0);
+        assert!((t.at(2, 0, 0) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 identity conv reproduces the input
+        let x = Chw::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let out = conv2d_ref(&x, &[1.0], &[0.0], 1, 1, 1, false);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn conv_same_stride2_shape() {
+        let x = Chw::zeros(9, 17, 17);
+        let w = vec![0.0; 4 * 9 * 9];
+        let out = conv2d_ref(&x, &w, &[0.0; 4], 4, 3, 2, true);
+        assert_eq!((out.c, out.h, out.w), (4, 9, 9)); // ceil(17/2)
+    }
+
+    #[test]
+    fn conv_valid_matches_hand_calc() {
+        // x = [[1,2],[3,4]], k = [[1,0],[0,1]] valid stride 1 => [1+4] = [5]
+        let x = Chw::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let out = conv2d_ref(&x, &w, &[0.5], 1, 2, 1, false);
+        assert_eq!(out.data, vec![5.5]);
+    }
+
+    #[test]
+    fn relu_inplace() {
+        let mut t = Chw::from_vec(1, 1, 3, vec![-1.0, 0.0, 2.0]);
+        relu(&mut t);
+        assert_eq!(t.data, vec![0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,245 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Each binary declares its options up front so
+//! `--help` is accurate.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub program: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+pub struct Parser {
+    about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(about: &'static str) -> Self {
+        Parser { about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {} [options]\n\nOptions:\n", self.about, program);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<26} {}{def}\n", spec.help));
+        }
+        s.push_str("  --help                   show this help\n");
+        s
+    }
+
+    /// Parse from an iterator (first element = program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, it: I) -> Result<Args, ArgError> {
+        let mut it = it.into_iter();
+        let program = it.next().unwrap_or_else(|| "prog".into());
+        let mut args = Args {
+            program,
+            specs: self.specs.clone(),
+            ..Default::default()
+        };
+        let known = |n: &str| self.specs.iter().find(|s| s.name == n);
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(ArgError::Help);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&name).ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| ArgError::MissingValue(name.clone()))?,
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args(); print usage and exit on --help or error.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args()) {
+            Ok(a) => a,
+            Err(ArgError::Help) => {
+                let prog = std::env::args().next().unwrap_or_else(|| "prog".into());
+                println!("{}", self.usage(&prog));
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                let prog = std::env::args().next().unwrap_or_else(|| "prog".into());
+                eprintln!("{}", self.usage(&prog));
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    fn default_for(&self, name: &str) -> Option<&'static str> {
+        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default)
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.values
+            .get(name)
+            .cloned()
+            .or_else(|| self.default_for(name).map(|s| s.to_string()))
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, ArgError> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| ArgError::MissingValue(name.into()))?;
+        v.parse::<T>()
+            .map_err(|_| ArgError::Invalid(name.into(), v))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("test")
+            .opt("task", "pendulum", "task name")
+            .opt("episodes", "10", "episode count")
+            .opt_req("addr", "server address")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(words: &[&str]) -> Result<Args, ArgError> {
+        let mut v = vec!["prog".to_string()];
+        v.extend(words.iter().map(|s| s.to_string()));
+        parser().parse_from(v)
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["--addr", "x"]).unwrap();
+        assert_eq!(a.str("task"), "pendulum");
+        assert_eq!(a.usize("episodes"), 10);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = parse(&["--task", "walker", "--verbose", "--episodes=25", "--addr", "y"]).unwrap();
+        assert_eq!(a.str("task"), "walker");
+        assert_eq!(a.usize("episodes"), 25);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["--addr", "x", "pos1", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(matches!(parse(&["--nope"]), Err(ArgError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(parse(&["--task"]), Err(ArgError::MissingValue(_))));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(parse(&["--help"]), Err(ArgError::Help)));
+    }
+
+    #[test]
+    fn bad_number_reports() {
+        let a = parse(&["--episodes", "abc", "--addr", "x"]).unwrap();
+        assert!(a.parse_as::<usize>("episodes").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = parser().usage("prog");
+        assert!(u.contains("--task"));
+        assert!(u.contains("default: pendulum"));
+    }
+}

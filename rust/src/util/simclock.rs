@@ -1,0 +1,154 @@
+//! Simulated time. The device simulators (thermal models, DVFS) and the
+//! deterministic network model advance a virtual clock instead of sleeping,
+//! which makes the 5,000-frame sustained-load experiments (Fig. 3/4)
+//! reproducible and fast regardless of host speed.
+
+/// A monotonically-advancing virtual clock, in seconds.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "time cannot go backwards (dt={dt})");
+        self.now += dt;
+    }
+
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= self.now, "advance_to into the past ({t} < {})", self.now);
+        self.now = t;
+    }
+}
+
+/// A simple event queue over simulated time, used by the sim-time network
+/// link to model in-flight packets.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    // (time, seq, payload); seq breaks ties FIFO
+    heap: std::collections::BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap: reverse on (time, seq)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue { heap: std::collections::BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, time: f64, payload: T) {
+        self.heap.push(Entry { time, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = SimClock::new();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+        c.advance_to(3.0);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn clock_rejects_negative() {
+        SimClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b");
+        assert_eq!(q.pop().unwrap().1, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn events_fifo_on_tie() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert!(q.peek_time().is_none());
+        q.push(5.0, ());
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Streaming statistics: running mean/std, exact quantiles over bounded
+//! samples, and an HDR-style latency histogram for the serving metrics
+//! (p50/p95/p99 decision latency, Table 5 / Table 6).
+
+/// Running mean / variance (Welford). O(1) memory.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact-quantile reservoir for moderate sample counts (we keep every
+/// sample; experiments record at most a few hundred thousand points).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Quantile by linear interpolation; q in `[0,1]`.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty(), "quantile of empty sample set");
+        self.ensure_sorted();
+        let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Log-bucketed latency histogram: thread-cheap recording with bounded
+/// memory, ~2% relative error per bucket. Units are nanoseconds.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    /// `buckets[i]` counts values in `[lo_i, lo_i * GROWTH)`
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+const HIST_BUCKETS: usize = 640;
+const HIST_MIN_NS: f64 = 100.0; // 100ns floor
+const HIST_GROWTH: f64 = 1.04;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { buckets: vec![0; HIST_BUCKETS], count: 0, sum: 0.0 }
+    }
+
+    fn index(ns: f64) -> usize {
+        if ns <= HIST_MIN_NS {
+            return 0;
+        }
+        let i = (ns / HIST_MIN_NS).ln() / HIST_GROWTH.ln();
+        (i as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        HIST_MIN_NS * HIST_GROWTH.powi(i as i32) * (1.0 + HIST_GROWTH) / 2.0
+    }
+
+    pub fn record_ns(&mut self, ns: f64) {
+        self.buckets[Self::index(ns)] += 1;
+        self.count += 1;
+        self.sum += ns;
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(HIST_BUCKETS - 1)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((r.var() - var).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 10.0);
+        assert_eq!(r.count(), 5);
+    }
+
+    #[test]
+    fn quantiles_exact_on_small_sets() {
+        let mut s = Samples::new();
+        for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 5.0);
+        assert!((s.quantile(0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p95_of_uniform_sequence() {
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            s.push(i as f64);
+        }
+        assert!((s.p95() - 949.05).abs() < 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn quantile_empty_panics() {
+        Samples::new().quantile(0.5);
+    }
+
+    #[test]
+    fn hist_quantile_relative_error_bounded() {
+        let mut h = LatencyHist::new();
+        // fill with a known distribution: 1..=10ms uniformly
+        for i in 1..=10_000u64 {
+            h.record_ns((i as f64) * 1_000.0); // 1us .. 10ms
+        }
+        let p50 = h.quantile_ns(0.5);
+        let expect = 5_000_000.0 * 0.001; // 5000us -> ns = 5_000_000
+        let got = p50;
+        let rel = (got - 5_000_000.0f64).abs() / 5_000_000.0;
+        assert!(rel < 0.05, "p50={got} rel={rel} (expect near {expect})");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_ns(1e6);
+        b.record_ns(2e6);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn hist_mean() {
+        let mut h = LatencyHist::new();
+        h.record_ns(1000.0);
+        h.record_ns(3000.0);
+        assert!((h.mean_ns() - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,259 @@
+//! Cross-module property tests (the proptest-substitute harness from
+//! util::proptest): invariants that hold for arbitrary inputs across the
+//! coordinator, analysis, replay, JSON, and device layers.
+
+use miniconv::analysis::breakeven::{breakeven_bandwidth_bps, feature_bits, raw_bits};
+use miniconv::analysis::latency::DecisionBreakdown;
+use miniconv::coordinator::{chunk_batches, pick_batch};
+use miniconv::net::framing::{Msg, Payload, Request, Response};
+use miniconv::net::shaped::LinkModel;
+use miniconv::net::{dequantize_features, quantize_features};
+use miniconv::rl::{Replay, Rollout};
+use miniconv::util::json::Json;
+use miniconv::util::proptest::{check, prop_assert};
+use miniconv::util::rng::Rng;
+
+#[test]
+fn prop_breakeven_is_the_true_crossover() {
+    // Split wins strictly below the analytic break-even and loses above it
+    // when server compute and latency are zero (the paper's idealisation).
+    check(200, |g| {
+        let x = g.usize(32, 1024);
+        let k = *g.choice(&[4usize, 16]);
+        let j = g.f64(0.005, 0.5);
+        let be = breakeven_bandwidth_bps(x, 3, k, j);
+        if be <= 0.0 {
+            return Ok(());
+        }
+        for (factor, split_should_win) in [(0.8, true), (1.25, false)] {
+            let link = LinkModel::new(be * factor, 0.0);
+            let so = DecisionBreakdown::server_only(&link, x, 0.0, 0);
+            let sp = DecisionBreakdown::split(&link, x, 3, k, j, 0.0, 0);
+            // analytic bits model uses ceil'd feature sides; allow epsilon
+            let wins = sp.total() < so.total() + 1e-9;
+            if wins != split_should_win {
+                // tolerance: ceil() in feature size perturbs the crossover
+                let rel = (sp.total() - so.total()).abs() / so.total().max(1e-9);
+                prop_assert(rel < 0.08, format!("x={x} k={k} j={j} f={factor} rel={rel}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_bytes_match_paper_model() {
+    check(100, |g| {
+        let x = g.usize(8, 512);
+        let raw = Payload::RawRgba { x: x as u16, data: vec![0; 4 * x * x] };
+        prop_assert(
+            raw.wire_bytes() * 8 == raw_bits(x) as usize,
+            "raw bits mismatch",
+        )?;
+        let s = x.div_ceil(8);
+        let k = *g.choice(&[4usize, 16]);
+        let feat = Payload::Features {
+            c: k as u16,
+            h: s as u16,
+            w: s as u16,
+            scale: 1.0,
+            data: vec![0; k * s * s],
+        };
+        prop_assert(
+            feat.wire_bytes() * 8 == feature_bits(x, 3, k) as usize,
+            "feature bits mismatch",
+        )
+    });
+}
+
+#[test]
+fn prop_framing_roundtrips_arbitrary_messages() {
+    check(300, |g| {
+        let msg = match g.usize(0, 2) {
+            0 => {
+                let x = g.usize(1, 64);
+                let mut data = vec![0u8; 4 * x * x];
+                for b in data.iter_mut() {
+                    *b = g.usize(0, 255) as u8;
+                }
+                Msg::Request(Request {
+                    client: g.u64(0, u32::MAX as u64) as u32,
+                    id: g.u64(0, u64::MAX - 1),
+                    payload: Payload::RawRgba { x: x as u16, data },
+                })
+            }
+            1 => {
+                let (c, h, w) = (g.usize(1, 8), g.usize(1, 16), g.usize(1, 16));
+                Msg::Request(Request {
+                    client: 7,
+                    id: g.u64(0, 1 << 40),
+                    payload: Payload::Features {
+                        c: c as u16,
+                        h: h as u16,
+                        w: w as u16,
+                        scale: g.f64(1e-6, 100.0) as f32,
+                        data: vec![9; c * h * w],
+                    },
+                })
+            }
+            _ => {
+                let n = g.usize(0, 16);
+                Msg::Response(Response {
+                    client: 1,
+                    id: 2,
+                    action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
+                })
+            }
+        };
+        let enc = msg.encode();
+        let dec = Msg::decode(&enc[4..]).map_err(|e| e.to_string())?;
+        prop_assert(dec == msg, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_half_step() {
+    check(200, |g| {
+        let n = g.usize(1, 256);
+        let scale_hint = g.f64(0.01, 50.0);
+        let feat: Vec<f32> = (0..n).map(|_| g.f64(0.0, scale_hint) as f32).collect();
+        let (scale, q) = quantize_features(&feat);
+        let back = dequantize_features(scale, &q);
+        for (a, b) in feat.iter().zip(&back) {
+            prop_assert(
+                (a - b).abs() <= scale / 255.0 * 0.5 + 1e-6,
+                format!("{a} vs {b} (scale {scale})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_ladder_covers_and_bounds_waste() {
+    check(300, |g| {
+        // arbitrary ascending ladders that include 1
+        let mut ladder = vec![1usize];
+        let mut v = 1;
+        for _ in 0..g.usize(0, 6) {
+            v *= g.usize(2, 3);
+            ladder.push(v);
+        }
+        let n = g.usize(1, 200);
+        let b = pick_batch(n, &ladder);
+        prop_assert(b >= n.min(*ladder.last().unwrap()), "pick too small")?;
+        let chunks = chunk_batches(n, &ladder);
+        let total: usize = chunks.iter().sum();
+        prop_assert(total >= n, "chunks don't cover")?;
+        prop_assert(total <= 3 * n, format!("waste too high: {n} -> {chunks:?}"))
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_arbitrary_trees() {
+    fn gen_value(g: &mut miniconv::util::proptest::Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", g.usize(0, 999))),
+            4 => Json::Arr((0..g.usize(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(300, |g| {
+        let v = gen_value(g, 3);
+        let compact = v.to_string();
+        let pretty = v.to_string_pretty();
+        let a = Json::parse(&compact).map_err(|e| e.to_string())?;
+        let b = Json::parse(&pretty).map_err(|e| e.to_string())?;
+        prop_assert(a == v && b == v, "json roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_replay_never_yields_unpushed_data() {
+    check(100, |g| {
+        let obs_len = g.usize(1, 16);
+        let cap = g.usize(2, 32);
+        let mut r = Replay::new(cap, obs_len, 1);
+        let n_push = g.usize(2, 64);
+        for i in 0..n_push {
+            let v = (i % 200) as f32 / 255.0;
+            r.push(&vec![v; obs_len], &[i as f32], i as f32, &vec![v; obs_len], false);
+        }
+        let mut rng = Rng::new(g.u64(0, 1 << 40));
+        let batch = 2;
+        let mut obs = vec![0.0; batch * obs_len];
+        let (mut act, mut rew, mut nobs, mut done) =
+            (vec![0.0; batch], vec![0.0; batch], vec![0.0; batch * obs_len], vec![0.0; batch]);
+        if r.sample(&mut rng, batch, &mut obs, &mut act, &mut rew, &mut nobs, &mut done) {
+            for &a in &act {
+                let idx = a as usize;
+                prop_assert(idx < n_push, format!("phantom transition {idx}"))?;
+                // ring semantics: only the last `cap` transitions survive
+                prop_assert(
+                    idx + cap >= n_push,
+                    format!("stale transition {idx} (cap {cap}, pushed {n_push})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gae_zero_lambda_is_td_error() {
+    check(100, |g| {
+        let n = g.usize(1, 20);
+        let gamma = g.f64(0.5, 0.999);
+        let mut r = Rollout::new(n, 1, 1);
+        let mut rewards = Vec::new();
+        let mut values = Vec::new();
+        for _ in 0..n {
+            let rew = g.f64(-1.0, 1.0) as f32;
+            let val = g.f64(-1.0, 1.0) as f32;
+            rewards.push(rew);
+            values.push(val);
+            r.push(&[0.0], &[0.0], 0.0, val, rew, false, false);
+        }
+        let last_v = g.f64(-1.0, 1.0) as f32;
+        let (adv, _) = r.gae(gamma, 0.0, last_v);
+        for t in 0..n {
+            let next_v = if t == n - 1 { last_v } else { values[t + 1] };
+            let delta = rewards[t] as f64 + gamma * next_v as f64 - values[t] as f64;
+            prop_assert(
+                (adv[t] as f64 - delta).abs() < 1e-4,
+                format!("t={t}: {} vs {delta}", adv[t]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_device_monotonic_in_input_size() {
+    use miniconv::device::{Device, ExecPath};
+    use miniconv::experiments::execution::frame_cost;
+    check(40, |g| {
+        let x1 = g.usize(64, 512);
+        let x2 = x1 * 2;
+        let spec = match g.usize(0, 2) {
+            0 => miniconv::device::pi_zero_2w(),
+            1 => miniconv::device::pi_4b(),
+            _ => miniconv::device::jetson_nano(None),
+        };
+        let mut d = Device::new(spec, g.u64(0, 1000));
+        let mean = |d: &mut Device, x: usize| {
+            let c = frame_cost(x);
+            (0..20).map(|_| d.encode_frame(&c, ExecPath::Gpu).duration).sum::<f64>() / 20.0
+        };
+        let t1 = mean(&mut d, x1);
+        let t2 = mean(&mut d, x2);
+        prop_assert(t2 > t1 * 1.5, format!("x={x1}->{x2}: {t1} -> {t2}"))
+    });
+}

@@ -1,0 +1,182 @@
+//! Integration: the Rust runtime loads real AOT artifacts, executes them on
+//! the PJRT CPU client, and the split pipeline (enc -> head) matches the
+//! monolithic policy — the core split-policy invariant, now across the
+//! python/rust boundary.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use miniconv::runtime::{Runtime, Value};
+
+fn runtime() -> Option<Runtime> {
+    let dir = miniconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn ramp(n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|i| ((i % 97) as f32 / 97.0) * scale).collect()
+}
+
+#[test]
+fn encoder_executes_and_reports_feature_shape() {
+    let Some(rt) = runtime() else { return };
+    let name = rt.manifest.serve_encoder("miniconv4");
+    let exe = rt.load(&name).expect("compile");
+    let p_len = exe.spec.inputs[0].elems();
+    let params = rt.manifest.load_params("serve_enc_miniconv4").unwrap();
+    assert_eq!(params.len(), p_len);
+
+    let x = rt.manifest.serve_x;
+    let obs = Value::f32(&[1, 9, x, x], ramp(9 * x * x, 1.0));
+    let out = exe
+        .run(&[&Value::f32(&[p_len], params), &obs])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let s = x.div_ceil(8);
+    assert_eq!(out[0].shape(), &[1, 4, s, s]);
+    // post-ReLU features are non-negative (what makes u8 wire quantisation work)
+    assert!(out[0].as_f32().unwrap().iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn split_pipeline_matches_between_batch_sizes() {
+    // head_b1(feat) must equal row 0 of head_b4([feat; pad]) — the batcher
+    // relies on padded batches being consistent.
+    let Some(rt) = runtime() else { return };
+    let head1 = rt.load(&rt.manifest.serve_head("miniconv4", 1)).unwrap();
+    let head4 = rt.load(&rt.manifest.serve_head("miniconv4", 4)).unwrap();
+    let p_len = head1.spec.inputs[0].elems();
+    let params = Value::f32(&[p_len], rt.manifest.load_params("serve_head_miniconv4").unwrap());
+
+    let feat_shape = &head1.spec.inputs[1].shape;
+    let n_feat: usize = feat_shape[1..].iter().product();
+    let feat = ramp(n_feat, 0.5);
+
+    let out1 = head1
+        .run(&[&params, &Value::f32(feat_shape, feat.clone())])
+        .unwrap();
+    let mut batched = feat.clone();
+    batched.extend(vec![0.0; n_feat * 3]);
+    let mut shape4 = feat_shape.clone();
+    shape4[0] = 4;
+    let out4 = head4.run(&[&params, &Value::f32(&shape4, batched)]).unwrap();
+
+    let a1 = out1[0].as_f32().unwrap();
+    let a4 = out4[0].as_f32().unwrap();
+    let adim = a1.len();
+    for i in 0..adim {
+        assert!(
+            (a1[i] - a4[i]).abs() < 1e-5,
+            "batch-1 vs batch-4 row0 mismatch: {} vs {}",
+            a1[i],
+            a4[i]
+        );
+    }
+}
+
+#[test]
+fn full_policy_bounded_actions() {
+    let Some(rt) = runtime() else { return };
+    let full = rt.load(&rt.manifest.serve_full(2)).unwrap();
+    let p_len = full.spec.inputs[0].elems();
+    let params = Value::f32(&[p_len], rt.manifest.load_params("serve_full_fullcnn").unwrap());
+    let x = rt.manifest.serve_x;
+    let obs = Value::f32(&[2, 9, x, x], ramp(2 * 9 * x * x, 1.0));
+    let out = full.run(&[&params, &obs]).unwrap();
+    // pendulum serving actor: |a| <= max_action = 2.0
+    for &a in out[0].as_f32().unwrap() {
+        assert!(a.abs() <= 2.0 + 1e-5, "action {a} out of bounds");
+    }
+}
+
+#[test]
+fn device_resident_params_match_host_path() {
+    let Some(rt) = runtime() else { return };
+    let name = rt.manifest.serve_head("miniconv4", 1);
+    let exe = rt.load(&name).unwrap();
+    let p_len = exe.spec.inputs[0].elems();
+    let params = Value::f32(&[p_len], rt.manifest.load_params("serve_head_miniconv4").unwrap());
+    let feat_shape = exe.spec.inputs[1].shape.clone();
+    let feat = Value::f32(&feat_shape, ramp(feat_shape.iter().product(), 0.3));
+
+    let host = exe.run(&[&params, &feat]).unwrap();
+    let dp = rt.to_device(&params).unwrap();
+    let df = rt.to_device(&feat).unwrap();
+    let dev = exe.run_device(&[&dp, &df]).unwrap();
+    let (h, d) = (host[0].as_f32().unwrap(), dev[0].as_f32().unwrap());
+    for (a, b) in h.iter().zip(d) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let name = rt.manifest.serve_head("miniconv4", 1);
+    let a = rt.load(&name).unwrap();
+    let n = rt.compiled_count();
+    let b = rt.load(&name).unwrap();
+    assert_eq!(rt.compiled_count(), n);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn input_validation_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load(&rt.manifest.serve_head("miniconv4", 1)).unwrap();
+    let bad = Value::f32(&[3], vec![0.0; 3]);
+    let err = exe.run(&[&bad, &bad]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    let one = Value::f32(&[1], vec![0.0]);
+    assert!(exe.run(&[&one]).is_err()); // arity
+}
+
+#[test]
+fn ddpg_update_step_runs_and_increments_step() {
+    // Execute a real training artifact once with zero batches: verifies the
+    // full 14-input/11-output signature decoding.
+    let Some(rt) = runtime() else { return };
+    let ts = rt.manifest.trainstates.get("pendulum_miniconv4").unwrap().clone();
+    let exe = rt.load(&ts.artifacts["update"]).unwrap();
+
+    let mut inputs: Vec<Value> = Vec::new();
+    for s in &ts.state {
+        match s.dtype {
+            miniconv::runtime::DType::F32 => {
+                let data = match &s.file {
+                    Some(_) => rt
+                        .manifest
+                        .load_params(&format!("{}_{}", ts.name, s.name))
+                        .unwrap(),
+                    None => vec![0.0; s.shape.iter().product()],
+                };
+                inputs.push(Value::f32(&s.shape, data));
+            }
+            miniconv::runtime::DType::I32 => inputs.push(Value::scalar_i32(0)),
+        }
+    }
+    let b = ts.batch;
+    let x = ts.x;
+    for name in &ts.batch_inputs {
+        let v = match name.as_str() {
+            "obs" | "nobs" => Value::f32(&[b, 9, x, x], ramp(b * 9 * x * x, 1.0)),
+            "act" => Value::f32(&[b, ts.action_dim], vec![0.1; b * ts.action_dim]),
+            "rew" | "done" => Value::f32(&[b], vec![0.0; b]),
+            other => panic!("unexpected batch input {other}"),
+        };
+        inputs.push(v);
+    }
+    let refs: Vec<&Value> = inputs.iter().collect();
+    let out = exe.run(&refs).expect("update step");
+    assert_eq!(out.len(), ts.state.len() + ts.metrics.len());
+    // step incremented to 1
+    let step_idx = ts.state.iter().position(|s| s.name == "step").unwrap();
+    assert_eq!(out[step_idx].as_i32().unwrap()[0], 1);
+    // metrics are finite scalars
+    for m in &out[ts.state.len()..] {
+        assert!(m.scalar().unwrap().is_finite());
+    }
+}

@@ -1,0 +1,153 @@
+//! End-to-end serving integration: real coordinator over loopback TCP,
+//! real artifacts, real shader-interpreter encoding on split clients.
+//! Requires `make artifacts` (skipped otherwise).
+
+use std::time::Duration;
+
+use miniconv::coordinator::{
+    merged_latencies, run_client, run_fleet, BatchPolicy, ClientConfig, Route, ServerConfig,
+};
+
+fn have_artifacts() -> bool {
+    miniconv::runtime::default_artifact_dir().join("manifest.json").exists()
+}
+
+fn start_server() -> miniconv::coordinator::ServerHandle {
+    miniconv::coordinator::serve(ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        ..ServerConfig::default()
+    })
+    .expect("server")
+}
+
+#[test]
+fn split_client_completes_decisions() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let server = start_server();
+    let cfg = ClientConfig { mode: Route::Split, decisions: 20, ..ClientConfig::default() };
+    let report = run_client(server.addr, 0, &cfg).expect("client run");
+    assert_eq!(report.decisions, 20);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.latencies.len(), 20);
+    // real split decisions on loopback take millis, not seconds
+    let mut lats = report.latencies;
+    assert!(lats.median() < 0.5, "median {}s", lats.median());
+    // encode times were recorded
+    assert_eq!(report.encode_times.len(), 20);
+    // wire bytes: K(X/8)^2 = 4*11*11 per decision
+    assert_eq!(report.bytes_sent, 20 * 4 * 11 * 11);
+
+    let m = server.metrics.snapshot();
+    assert_eq!(m.split.requests, 20);
+    assert_eq!(m.full.requests, 0);
+    server.shutdown();
+}
+
+#[test]
+fn server_only_client_streams_raw_frames() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let server = start_server();
+    let cfg = ClientConfig { mode: Route::Full, decisions: 10, ..ClientConfig::default() };
+    let report = run_client(server.addr, 1, &cfg).expect("client run");
+    assert_eq!(report.decisions, 10);
+    // raw wire bytes: 4 * 84^2 per decision (the paper's 4X^2)
+    assert_eq!(report.bytes_sent, 10 * 4 * 84 * 84);
+    let m = server.metrics.snapshot();
+    assert_eq!(m.full.requests, 10);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_fleet_batches_and_all_complete() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let server = start_server();
+    // 4 split clients, closed loop
+    let split_cfg = ClientConfig { mode: Route::Split, decisions: 15, ..ClientConfig::default() };
+    let reports = run_fleet(server.addr, 4, &split_cfg).expect("fleet");
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        assert_eq!(r.decisions, 15);
+    }
+    let all = merged_latencies(&reports);
+    assert_eq!(all.len(), 60);
+
+    let m = server.metrics.snapshot();
+    assert_eq!(m.split.requests, 60);
+    // with 4 concurrent clients the batcher should form some multi-item
+    // batches (mean batch > 1) — the whole point of dynamic batching
+    assert!(m.split.batches < 60, "no batching happened");
+    server.shutdown();
+}
+
+#[test]
+fn shaped_split_latency_beats_raw_at_low_bandwidth() {
+    // The paper's core claim (Table 5) at a bandwidth where the 84-scale
+    // wire sizes separate: raw = 28 kB/frame vs features = 484 B/frame.
+    // At 2 Mb/s raw transmission alone is ~113 ms; split is ~2 ms.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let server = start_server();
+    let bw = 2e6; // 2 Mb/s
+    let split = run_client(
+        server.addr,
+        10,
+        &ClientConfig {
+            mode: Route::Split,
+            decisions: 12,
+            shape_bps: Some(bw),
+            ..ClientConfig::default()
+        },
+    )
+    .expect("split client");
+    let raw = run_client(
+        server.addr,
+        11,
+        &ClientConfig {
+            mode: Route::Full,
+            decisions: 12,
+            shape_bps: Some(bw),
+            ..ClientConfig::default()
+        },
+    )
+    .expect("raw client");
+    let mut s = split.latencies;
+    let mut r = raw.latencies;
+    assert!(
+        s.median() * 3.0 < r.median(),
+        "split {}s vs raw {}s at 2 Mb/s",
+        s.median(),
+        r.median()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn fixed_rate_client_honours_rate() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let server = start_server();
+    let cfg = ClientConfig {
+        mode: Route::Split,
+        decisions: 20,
+        rate_hz: Some(20.0),
+        ..ClientConfig::default()
+    };
+    let report = run_client(server.addr, 2, &cfg).expect("client");
+    // 20 decisions at 20 Hz ≈ 1s; allow generous slack for CI noise
+    assert!(report.elapsed > 0.8, "ran too fast: {}s", report.elapsed);
+    assert!(report.achieved_hz() < 25.0);
+    server.shutdown();
+}

@@ -1,0 +1,127 @@
+//! Deployment-path parity: the GLSL shader interpreter must agree with the
+//! AOT Pallas/XLA encoder artifacts on real rendered observations — the
+//! guarantee that what ships to the device computes what was trained.
+//! Requires `make artifacts`.
+
+use miniconv::envs::{CropMode, Env, Pendulum, PixelPipeline};
+use miniconv::runtime::{default_artifact_dir, Runtime, Value};
+use miniconv::shader::{pipeline_from_manifest, plan, EncoderIr, ShaderPipeline, TextureFormat};
+use miniconv::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn real_obs(rt: &Runtime, steps: usize) -> (Vec<f32>, miniconv::tensor::Chw) {
+    let x = rt.manifest.serve_x;
+    let mut env = Pendulum::new();
+    let mut rng = Rng::new(123);
+    env.reset(&mut rng);
+    let mut pipe = PixelPipeline::new(100, x, CropMode::Center);
+    pipe.observe(&env, &mut rng);
+    for _ in 0..steps {
+        env.step(&[1.0]);
+        pipe.observe(&env, &mut rng);
+    }
+    (pipe.obs(), pipe.obs_chw())
+}
+
+fn parity_for(rt: &Runtime, arch: &str, k: usize) {
+    let x = rt.manifest.serve_x;
+    let (obs, obs_chw) = real_obs(rt, 3);
+
+    let enc = rt.load(&rt.manifest.serve_encoder(arch)).unwrap();
+    let p = rt.manifest.load_params(&format!("serve_enc_{arch}")).unwrap();
+    let out = enc
+        .run(&[&Value::f32(&[p.len()], p), &Value::f32(&[1, 9, x, x], obs)])
+        .unwrap();
+    let feat_xla = out[0].as_f32().unwrap();
+
+    let (serve_meta, _) = &rt.manifest.encoders[arch];
+    let shader = pipeline_from_manifest(
+        &rt.manifest,
+        arch,
+        serve_meta,
+        x,
+        &format!("serve_enc_{arch}"),
+        TextureFormat::Float,
+    )
+    .unwrap();
+    let feat_gl = shader.run(&obs_chw).unwrap();
+
+    let s = x.div_ceil(8);
+    let mut max_diff = 0.0f32;
+    for c in 0..k {
+        for yy in 0..s {
+            for xx in 0..s {
+                let v_xla = feat_xla[(c * s + yy) * s + xx];
+                let d = (v_xla - feat_gl.at(c, yy, xx)).abs();
+                max_diff = max_diff.max(d);
+            }
+        }
+    }
+    assert!(max_diff < 1e-3, "{arch}: shader vs XLA diff {max_diff}");
+}
+
+#[test]
+fn miniconv4_shader_matches_artifact() {
+    let Some(rt) = runtime() else { return };
+    parity_for(&rt, "miniconv4", 4);
+}
+
+#[test]
+fn miniconv16_shader_matches_artifact() {
+    let Some(rt) = runtime() else { return };
+    parity_for(&rt, "miniconv16", 16);
+}
+
+#[test]
+fn rgba8_textures_bounded_error_at_serve_scale() {
+    // The real Pi Zero 2 W renders to RGBA8 textures; quantisation error
+    // through 3 passes must stay small relative to the feature scale.
+    let Some(rt) = runtime() else { return };
+    let x = rt.manifest.serve_x;
+    let (_, obs_chw) = real_obs(&rt, 2);
+    let (serve_meta, _) = &rt.manifest.encoders["miniconv4"];
+    let flat = rt.manifest.load_params("serve_enc_miniconv4").unwrap();
+    let ir = EncoderIr::from_meta("miniconv4", 9, serve_meta);
+    let pl = plan(&ir, x).unwrap();
+    let ws = miniconv::shader::unpack_conv_weights(&ir, &flat).unwrap();
+
+    let scales = ShaderPipeline::calibrate(&pl, &ws, &obs_chw).unwrap();
+    let f_pipe = ShaderPipeline::new(pl.clone(), ws.clone(), TextureFormat::Float).unwrap();
+    let q_pipe =
+        ShaderPipeline::new(pl, ws, TextureFormat::Rgba8 { scales: scales.clone() }).unwrap();
+    let f = f_pipe.run(&obs_chw).unwrap();
+    let q = q_pipe.run(&obs_chw).unwrap();
+    let diff = f.max_abs_diff(&q);
+    let tol = scales.last().unwrap() * 0.05;
+    assert!(diff < tol, "rgba8 error {diff} vs tol {tol}");
+    assert!(diff > 0.0, "quantisation should not be bit-exact");
+}
+
+#[test]
+fn glsl_sources_generated_for_every_pass() {
+    let Some(rt) = runtime() else { return };
+    for arch in ["miniconv4", "miniconv16"] {
+        let (serve_meta, _) = &rt.manifest.encoders[arch];
+        let ir = EncoderIr::from_meta(arch, 9, serve_meta);
+        let p = plan(&ir, rt.manifest.serve_x).unwrap();
+        let shaders = miniconv::shader::gen_all(&p);
+        assert_eq!(shaders.len(), p.passes.len());
+        for (s, pass) in shaders.iter().zip(&p.passes) {
+            // emitted sample count equals the planner's per-pixel budget
+            assert_eq!(
+                s.fragment.matches("fetch(u_tex").count(),
+                pass.samples,
+                "{arch}/{}",
+                s.name
+            );
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Training-loop integration: the generic trainer drives real update/act
+//! artifacts for all three (algorithm, task) pairs at tiny budgets and
+//! produces finite losses and episodic returns. Requires `make artifacts`.
+
+use miniconv::rl::{TrainConfig, Trainer};
+use miniconv::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = miniconv::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn ddpg_pendulum_trains_and_loss_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig {
+        episodes: 2,
+        warmup_steps: 64,
+        train_freq: 16,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(&rt, "pendulum_miniconv4", cfg).expect("trainer");
+    t.train().expect("train");
+    assert_eq!(t.report.stats.episodes(), 2);
+    assert!(t.report.updates > 5, "too few updates: {}", t.report.updates);
+    // pendulum returns are in [-17*200, 0]
+    for &r in t.report.stats.returns() {
+        assert!((-4000.0..=0.0).contains(&r), "return {r}");
+    }
+    let (name, closses) = &t.report.metrics[0];
+    assert_eq!(name, "critic_loss");
+    assert!(closses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn sac_hopper_trains() {
+    let Some(rt) = runtime() else { return };
+    // hopper episodes terminate early under random actions (~30-80 steps);
+    // the replay needs >= 64 transitions (one artifact batch) before the
+    // first gradient step, so give the run a few episodes
+    let cfg = TrainConfig {
+        episodes: 5,
+        warmup_steps: 30,
+        train_freq: 8,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(&rt, "hopper_miniconv4", cfg).expect("trainer");
+    t.train().expect("train");
+    assert_eq!(t.report.stats.episodes(), 5);
+    assert!(t.report.updates >= 1);
+    // alpha metric stays positive
+    let alpha_idx = t.report.metrics.iter().position(|(n, _)| n == "alpha").unwrap();
+    assert!(t.report.metrics[alpha_idx].1.iter().all(|&a| a > 0.0));
+}
+
+#[test]
+fn ppo_walker_trains_one_segment() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig {
+        episodes: 1,
+        rollout_steps: 64,
+        ppo_epochs: 1,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(&rt, "walker_fullcnn", cfg).expect("trainer");
+    t.train().expect("train");
+    assert!(t.report.stats.episodes() >= 1);
+    assert!(t.report.updates >= 1);
+    // first-epoch KL should be near zero (on-policy batch)
+    let kl_idx = t.report.metrics.iter().position(|(n, _)| n == "approx_kl").unwrap();
+    let first_kl = t.report.metrics[kl_idx].1[0];
+    assert!(first_kl.abs() < 0.05, "first-minibatch KL {first_kl}");
+}
+
+#[test]
+fn evaluation_runs_deterministically() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig { episodes: 0, ..TrainConfig::default() };
+    let mut t = Trainer::new(&rt, "pendulum_miniconv16", cfg).expect("trainer");
+    let a = t.evaluate(1).expect("eval");
+    let b = t.evaluate(1).expect("eval");
+    assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    assert!(a <= 0.0 && a > -4000.0);
+}
+
+#[test]
+fn unknown_trainstate_is_error() {
+    let Some(rt) = runtime() else { return };
+    assert!(Trainer::new(&rt, "nope", TrainConfig::default()).is_err());
+}
