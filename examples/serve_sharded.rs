@@ -1,0 +1,106 @@
+//! Sharded serving demo: four coordinator shards behind the consistent-hash
+//! gateway, driven by the simulated-device client fleet, then a live
+//! connection-draining exercise.
+//!
+//! With AOT artifacts present the shards run the real PJRT backend and the
+//! fleet serves both pipelines; without them the Sim backend stands in so
+//! the whole fleet path (gateway, hashing, draining, merged metrics) still
+//! runs end to end.
+//!
+//! Run: `cargo run --release --example serve_sharded`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use miniconv::coordinator::{
+    run_fleet, Backend, BatchPolicy, ClientConfig, Route, ServerConfig, SimSpec,
+};
+use miniconv::fleet::{launch_local, FleetConfig, ShardId};
+
+fn main() -> Result<()> {
+    let have_artifacts = miniconv::runtime::default_artifact_dir()
+        .join("manifest.json")
+        .exists();
+    let backend = if have_artifacts {
+        println!("artifacts found: shards run the real PJRT backend");
+        Backend::Pjrt
+    } else {
+        println!("no artifacts: shards run the Sim backend (1 ms + 0.3 ms/item)");
+        Backend::Sim(SimSpec {
+            fixed: Duration::from_millis(1),
+            per_item: Duration::from_micros(300),
+            action_dim: 1,
+        })
+    };
+
+    println!("launching 4 shards + gateway…");
+    let fleet = launch_local(FleetConfig {
+        shards: 4,
+        server: ServerConfig {
+            policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
+            backend,
+            ..ServerConfig::default()
+        },
+        ..FleetConfig::default()
+    })?;
+    println!("gateway on {} fronting {} shards", fleet.addr(), fleet.n_shards());
+
+    let cfg = ClientConfig {
+        mode: Route::Full,
+        decisions: 30,
+        obs_x: if have_artifacts { None } else { Some(24) },
+        ..ClientConfig::default()
+    };
+    let n_clients = 16;
+    let t0 = Instant::now();
+    let reports = run_fleet(fleet.addr(), n_clients, &cfg)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let decisions: usize = reports.iter().map(|r| r.decisions).sum();
+    println!(
+        "\n{n_clients} clients × {} decisions in {elapsed:.2}s ({:.0} dec/s aggregate)",
+        cfg.decisions,
+        decisions as f64 / elapsed
+    );
+
+    fleet.snapshot().table(elapsed).print();
+
+    let stats = fleet.gateway.stats();
+    let mut placement: Vec<(ShardId, usize)> = fleet
+        .shard_ids()
+        .into_iter()
+        .map(|id| (id, stats.assignments.values().filter(|&&s| s == id).count()))
+        .collect();
+    placement.sort();
+    print!("session placement:");
+    for (id, n) in &placement {
+        print!("  {id}={n}");
+    }
+    println!("  (reassigned: {})", stats.reassigned);
+
+    // connection draining: take the busiest shard out of rotation
+    let (victim, _) = *placement.iter().max_by_key(|(_, n)| *n).expect("no shards");
+    println!("\ndraining {victim} and running 8 fresh sessions…");
+    fleet.gateway.drain(victim);
+    let fresh: Vec<u32> = (1000..1008).collect();
+    for &id in &fresh {
+        miniconv::coordinator::run_client(fleet.addr(), id, &cfg)?;
+    }
+    let stats = fleet.gateway.stats();
+    let leaked = fresh
+        .iter()
+        .filter(|&&id| stats.assignments.get(&id) == Some(&victim))
+        .count();
+    println!(
+        "fresh sessions on the draining shard: {leaked} (want 0); drained: {}",
+        fleet.gateway.drained(victim)
+    );
+
+    for (id, state, conns) in fleet.gateway.shard_states() {
+        println!("  {id}: {} ({conns} live connections)", state.name());
+    }
+
+    fleet.shutdown();
+    println!("\nfleet stopped cleanly");
+    Ok(())
+}

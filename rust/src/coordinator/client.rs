@@ -42,6 +42,11 @@ pub struct ClientConfig {
     pub device: Option<DeviceSpec>,
     pub artifact_dir: PathBuf,
     pub seed: u64,
+    /// server-only mode: pin the observation side length instead of reading
+    /// it from the artifact manifest, letting fleets run artifact-free
+    /// against Sim-backend coordinators (ignored in split mode, which needs
+    /// the manifest for the shader pipeline anyway)
+    pub obs_x: Option<usize>,
 }
 
 impl Default for ClientConfig {
@@ -55,6 +60,7 @@ impl Default for ClientConfig {
             device: None,
             artifact_dir: crate::runtime::default_artifact_dir(),
             seed: 0,
+            obs_x: None,
         }
     }
 }
@@ -107,11 +113,13 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         None => Sender_::Plain(stream),
     };
 
-    // split mode: the real shader-interpreter encoder over manifest params
-    let manifest = Manifest::load(&cfg.artifact_dir)?;
-    let serve_x = manifest.serve_x;
-    let (shader, feat_k, cost): (Option<ShaderPipeline>, usize, Option<FrameCost>) =
+    // split mode: the real shader-interpreter encoder over manifest params.
+    // server-only mode with a pinned obs_x never touches the manifest, so
+    // Sim-backend fleets run artifact-free.
+    let (shader, feat_k, cost, serve_x): (Option<ShaderPipeline>, usize, Option<FrameCost>, usize) =
         if cfg.mode == Route::Split {
+            let manifest = Manifest::load(&cfg.artifact_dir)?;
+            let serve_x = manifest.serve_x;
             let (serve_meta, _) = manifest
                 .encoders
                 .get(&cfg.arch)
@@ -125,13 +133,21 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
                 TextureFormat::Float,
             )?;
             let cost = FrameCost::from_plan(&pipe.plan);
-            (Some(pipe), serve_meta.feat_shape[0], Some(cost))
+            (Some(pipe), serve_meta.feat_shape[0], Some(cost), serve_x)
         } else {
-            (None, 0, None)
+            let serve_x = match cfg.obs_x {
+                Some(x) => x,
+                None => Manifest::load(&cfg.artifact_dir)?.serve_x,
+            };
+            (None, 0, None, serve_x)
         };
     let mut device = cfg.device.clone().map(|spec| Device::new(spec, cfg.seed));
 
-    send.send(&Msg::Hello(Hello { client: client_id, split: cfg.mode == Route::Split }))?;
+    send.send(&Msg::Hello(Hello {
+        client: client_id,
+        split: cfg.mode == Route::Split,
+        shard: None,
+    }))?;
 
     let mut env = Pendulum::new();
     let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E37).wrapping_add(client_id as u64));

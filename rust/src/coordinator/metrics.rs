@@ -50,6 +50,20 @@ impl RouteMetrics {
             self.padded_slots as f64 / total as f64
         }
     }
+
+    /// Fold another server's counters and histograms into this one. Used by
+    /// the fleet aggregator: histograms merge bucket-wise, so fleet-level
+    /// percentiles come from one combined distribution — never from
+    /// averaging per-shard percentiles.
+    pub fn merge(&mut self, other: &RouteMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batched_items += other.batched_items;
+        self.padded_slots += other.padded_slots;
+        self.service.merge(&other.service);
+        self.queue_wait.merge(&other.queue_wait);
+        self.execute.merge(&other.execute);
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -72,6 +86,13 @@ impl MetricsInner {
             Route::Full => &self.full,
             Route::Split => &self.split,
         }
+    }
+
+    /// Fold another server's snapshot into this one (both routes + drops).
+    pub fn merge(&mut self, other: &MetricsInner) {
+        self.full.merge(&other.full);
+        self.split.merge(&other.split);
+        self.dropped += other.dropped;
     }
 }
 
@@ -180,5 +201,58 @@ mod tests {
         let m2 = m.clone();
         m2.add_dropped(3);
         assert_eq!(m.snapshot().dropped, 3);
+    }
+
+    /// Record the same batches on (a) two shard-local Metrics that are then
+    /// merged and (b) one combined Metrics; every counter and histogram
+    /// quantile must agree exactly.
+    #[test]
+    fn merge_equals_single_combined_recorder() {
+        let shard_a = Metrics::new();
+        let shard_b = Metrics::new();
+        let combined = Metrics::new();
+        let record = |m: &Metrics, route, n: usize, ms: u64| {
+            m.record_batch(
+                route,
+                n,
+                0,
+                &vec![Duration::from_millis(1); n],
+                Duration::from_millis(2),
+                &vec![Duration::from_millis(ms); n],
+            );
+        };
+        // shard A fast, shard B slow — the regime where averaging per-shard
+        // percentiles would lie
+        for _ in 0..50 {
+            record(&shard_a, Route::Split, 2, 5);
+            record(&combined, Route::Split, 2, 5);
+        }
+        for _ in 0..10 {
+            record(&shard_b, Route::Split, 1, 400);
+            record(&combined, Route::Split, 1, 400);
+        }
+        record(&shard_b, Route::Full, 3, 7);
+        record(&combined, Route::Full, 3, 7);
+        shard_b.add_dropped(2);
+        combined.add_dropped(2);
+
+        let mut merged = shard_a.snapshot();
+        merged.merge(&shard_b.snapshot());
+        let want = combined.snapshot();
+
+        assert_eq!(merged.split.requests, want.split.requests);
+        assert_eq!(merged.split.batches, want.split.batches);
+        assert_eq!(merged.full.requests, want.full.requests);
+        assert_eq!(merged.dropped, want.dropped);
+        assert_eq!(merged.split.service.count(), want.split.service.count());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(
+                merged.split.service.quantile_ns(q),
+                want.split.service.quantile_ns(q),
+                "quantile {q} diverged after merge"
+            );
+        }
+        // and the merged p99 sees shard B's slow tail
+        assert!(merged.split.service.quantile_ns(0.99) > 300e6);
     }
 }

@@ -14,5 +14,5 @@ pub use batcher::{BatchCollector, BatchPolicy};
 pub use client::{merged_latencies, run_client, run_fleet, ClientConfig, ClientReport};
 pub use metrics::Metrics;
 pub use router::{chunk_batches, pick_batch, Route};
-pub use server::{serve, ServerConfig, ServerHandle};
+pub use server::{serve, Backend, ServerConfig, ServerHandle, SimSpec};
 pub use session::SessionManager;

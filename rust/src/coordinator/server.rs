@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 use log::{debug, warn};
 
-use crate::net::framing::{Msg, Payload, Response};
+use crate::net::framing::{Hello, Msg, Payload, Response};
 use crate::net::tcp::{read_msg, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
 
@@ -42,6 +42,11 @@ pub struct ServerConfig {
     /// per-route queue bound (back-pressure)
     pub max_depth: usize,
     pub artifact_dir: PathBuf,
+    /// identity stamped into hello acks when this server runs as a fleet
+    /// shard (None for a standalone coordinator)
+    pub shard_id: Option<u16>,
+    /// inference engine behind the batcher
+    pub backend: Backend,
 }
 
 impl Default for ServerConfig {
@@ -52,6 +57,40 @@ impl Default for ServerConfig {
             policy: BatchPolicy::default(),
             max_depth: 512,
             artifact_dir: crate::runtime::default_artifact_dir(),
+            shard_id: None,
+            backend: Backend::Pjrt,
+        }
+    }
+}
+
+/// Which engine executes batches.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// real AOT artifacts through the PJRT runtime (requires `make artifacts`)
+    Pjrt,
+    /// simulated accelerator: real batching/session/metrics machinery, but
+    /// each batch costs `fixed + per_item * n` of executor wall time and
+    /// returns zero actions — serving-path experiments without artifacts
+    Sim(SimSpec),
+}
+
+/// Cost model for the [`Backend::Sim`] accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct SimSpec {
+    /// per-batch launch overhead
+    pub fixed: Duration,
+    /// marginal cost per batched item
+    pub per_item: Duration,
+    /// action vector width returned to clients
+    pub action_dim: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            fixed: Duration::from_micros(500),
+            per_item: Duration::from_micros(150),
+            action_dim: 1,
         }
     }
 }
@@ -107,6 +146,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
 
     // accept thread
     let acc_shutdown = shutdown.clone();
+    let shard_id = cfg.shard_id;
     let acceptor = std::thread::Builder::new()
         .name("mc-accept".into())
         .spawn(move || {
@@ -120,7 +160,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                         let shutdown = acc_shutdown.clone();
                         std::thread::Builder::new()
                             .name("mc-reader".into())
-                            .spawn(move || reader_main(s, tx, shutdown))
+                            .spawn(move || reader_main(s, tx, shutdown, shard_id))
                             .ok();
                     }
                     Err(e) => {
@@ -135,7 +175,12 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     Ok(ServerHandle { addr, metrics, shutdown, threads: vec![executor, acceptor] })
 }
 
-fn reader_main(stream: TcpStream, tx: Sender<Work>, shutdown: Arc<AtomicBool>) {
+fn reader_main(
+    stream: TcpStream,
+    tx: Sender<Work>,
+    shutdown: Arc<AtomicBool>,
+    shard_id: Option<u16>,
+) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(e) => {
@@ -161,7 +206,15 @@ fn reader_main(stream: TcpStream, tx: Sender<Work>, shutdown: Arc<AtomicBool>) {
                     break; // executor gone
                 }
             }
-            Ok(Some(Msg::Hello(_))) => {} // connection preamble; nothing to do
+            Ok(Some(Msg::Hello(h))) => {
+                // ack the preamble so gateways and health probes get a round
+                // trip; the ack carries our shard identity
+                let ack = Msg::Hello(Hello { client: h.client, split: h.split, shard: shard_id });
+                let mut w = writer.lock().unwrap();
+                if write_msg(&mut *w, &ack).is_err() {
+                    break;
+                }
+            }
             Ok(Some(Msg::Response(_))) => {
                 warn!("client sent a response; ignoring");
             }
@@ -184,6 +237,82 @@ struct RouteExec {
 }
 
 fn executor_main(
+    cfg: ServerConfig,
+    rx: Receiver<Work>,
+    metrics: Metrics,
+    shutdown: Arc<AtomicBool>,
+    ready: Sender<Result<()>>,
+) {
+    match cfg.backend.clone() {
+        Backend::Pjrt => executor_pjrt(cfg, rx, metrics, shutdown, ready),
+        Backend::Sim(spec) => executor_sim(spec, cfg, rx, metrics, shutdown, ready),
+    }
+}
+
+/// The batching loop shared by every backend: pull work, honour the batch
+/// deadline, report drops, hand ready batches to `run`.
+fn executor_loop<F>(
+    policy: BatchPolicy,
+    max_depth: usize,
+    rx: Receiver<Work>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+    mut run: F,
+) where
+    F: FnMut(Route, Vec<super::batcher::Item<Work>>) -> Result<()>,
+{
+    let mut collector: BatchCollector<Work> = BatchCollector::new(policy, max_depth);
+    let mut dropped_reported = 0u64;
+
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // pull work: block briefly when idle, otherwise honour the batch
+        // deadline
+        let timeout = collector
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(w) => {
+                let now = Instant::now();
+                let admit = |w: Work, collector: &mut BatchCollector<Work>| {
+                    let route = Route::of(&w.payload);
+                    let (client, id, reply) = (w.client, w.id, w.reply.clone());
+                    if !collector.push(route, w, now) {
+                        // back-pressure: reject explicitly (empty action)
+                        // so the client never blocks on a dropped request
+                        let mut wtr = reply.lock().unwrap();
+                        let _ = write_msg(
+                            &mut *wtr,
+                            &Msg::Response(Response { client, id, action: vec![] }),
+                        );
+                    }
+                };
+                admit(w, &mut collector);
+                // opportunistically drain whatever else is queued
+                while let Ok(w) = rx.try_recv() {
+                    admit(w, &mut collector);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if collector.dropped > dropped_reported {
+            metrics.add_dropped(collector.dropped - dropped_reported);
+            dropped_reported = collector.dropped;
+        }
+
+        while let Some(route) = collector.ready(Instant::now()) {
+            let items = collector.take(route);
+            if let Err(e) = run(route, items) {
+                warn!("batch failed: {e:#}");
+            }
+        }
+    }
+}
+
+fn executor_pjrt(
     cfg: ServerConfig,
     rx: Receiver<Work>,
     metrics: Metrics,
@@ -236,60 +365,75 @@ fn executor_main(
         }
     };
 
-    let mut collector: BatchCollector<Work> = BatchCollector::new(cfg.policy, cfg.max_depth);
     let mut sessions = SessionManager::new();
-    let mut dropped_reported = 0u64;
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
+        let exec = match route {
+            Route::Split => &mut split,
+            Route::Full => &mut full,
+        };
+        run_batch(&rt, exec, route, items, &mut sessions, &metrics)
+    });
+}
 
-    loop {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        // pull work: block briefly when idle, otherwise honour the batch
-        // deadline
-        let timeout = collector
-            .next_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(w) => {
-                let now = Instant::now();
-                let admit = |w: Work, collector: &mut BatchCollector<Work>| {
-                    let route = Route::of(&w.payload);
-                    let (client, id, reply) = (w.client, w.id, w.reply.clone());
-                    if !collector.push(route, w, now) {
-                        // back-pressure: reject explicitly (empty action)
-                        // so the client never blocks on a dropped request
-                        let mut wtr = reply.lock().unwrap();
-                        let _ = write_msg(
-                            &mut *wtr,
-                            &Msg::Response(Response { client, id, action: vec![] }),
-                        );
-                    }
-                };
-                admit(w, &mut collector);
-                // opportunistically drain whatever else is queued
-                while let Ok(w) = rx.try_recv() {
-                    admit(w, &mut collector);
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-        if collector.dropped > dropped_reported {
-            metrics.add_dropped(collector.dropped - dropped_reported);
-            dropped_reported = collector.dropped;
-        }
+fn executor_sim(
+    spec: SimSpec,
+    cfg: ServerConfig,
+    rx: Receiver<Work>,
+    metrics: Metrics,
+    shutdown: Arc<AtomicBool>,
+    ready: Sender<Result<()>>,
+) {
+    // no artifacts to stage: ready immediately
+    let _ = ready.send(Ok(()));
+    let mut sessions = SessionManager::new();
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
+        run_batch_sim(&spec, route, items, &mut sessions, &metrics)
+    });
+}
 
-        while let Some(route) = collector.ready(Instant::now()) {
-            let items = collector.take(route);
-            let exec = match route {
-                Route::Split => &mut split,
-                Route::Full => &mut full,
-            };
-            if let Err(e) = run_batch(&rt, exec, route, items, &mut sessions, &metrics) {
-                warn!("batch failed: {e:#}");
-            }
+/// Sim-backend batch execution: real session stacking and metrics, modelled
+/// compute time, zero-valued actions.
+fn run_batch_sim(
+    spec: &SimSpec,
+    route: Route,
+    items: Vec<super::batcher::Item<Work>>,
+    sessions: &mut SessionManager,
+    metrics: &Metrics,
+) -> Result<()> {
+    let n = items.len();
+    let dequeue = Instant::now();
+    let queue_waits: Vec<Duration> =
+        items.iter().map(|i| dequeue.duration_since(i.work.received)).collect();
+
+    // raw frames still flow through the per-client frame stack so shard-local
+    // session state stays meaningful under the fleet gateway
+    for item in &items {
+        if let Payload::RawRgba { x, data } = &item.work.payload {
+            sessions.ingest_rgba(item.work.client, *x as usize, data)?;
         }
     }
+
+    // the modelled accelerator: launch overhead + linear per-item cost
+    let t_exec = Instant::now();
+    std::thread::sleep(spec.fixed + spec.per_item * n as u32);
+    let exec_time = t_exec.elapsed();
+
+    let services: Vec<Duration> = items.iter().map(|i| i.work.received.elapsed()).collect();
+    metrics.record_batch(route, n, 0, &queue_waits, exec_time, &services);
+
+    for item in &items {
+        let resp = Msg::Response(Response {
+            client: item.work.client,
+            id: item.work.id,
+            action: vec![0.0; spec.action_dim],
+        });
+        let mut w = item.work.reply.lock().unwrap();
+        if let Err(e) = write_msg(&mut *w, &resp) {
+            debug!("reply to client {}: {e}", item.work.client);
+        }
+        let _ = w.flush();
+    }
+    Ok(())
 }
 
 fn run_batch(

@@ -1,0 +1,176 @@
+//! Fleet-wide metric aggregation: merge per-shard `coordinator::Metrics`
+//! snapshots into one fleet-level view.
+//!
+//! Percentiles are computed from the **merged histogram** — bucket counts
+//! add across shards, so fleet p50/p95/p99 are quantiles of the combined
+//! latency distribution. Averaging per-shard percentiles would understate
+//! the tail whenever shards are imbalanced; the tests pin this down.
+
+use crate::coordinator::metrics::{MetricsInner, RouteMetrics};
+use crate::fleet::topology::ShardId;
+use crate::util::tables::Table;
+
+/// One shard's contribution to a fleet snapshot.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    pub id: ShardId,
+    pub metrics: MetricsInner,
+}
+
+/// Per-shard snapshots plus their merged fleet-level view.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub shards: Vec<ShardSnapshot>,
+    pub merged: MetricsInner,
+}
+
+/// Merge per-shard metric snapshots into a fleet snapshot.
+pub fn aggregate(shards: impl IntoIterator<Item = (ShardId, MetricsInner)>) -> FleetSnapshot {
+    let shards: Vec<ShardSnapshot> = shards
+        .into_iter()
+        .map(|(id, metrics)| ShardSnapshot { id, metrics })
+        .collect();
+    let mut merged = MetricsInner::default();
+    for s in &shards {
+        merged.merge(&s.metrics);
+    }
+    FleetSnapshot { shards, merged }
+}
+
+fn route_cells(name: &str, rm: &RouteMetrics, elapsed: f64) -> Option<Vec<String>> {
+    if rm.requests == 0 {
+        return None;
+    }
+    let q = |p: f64| rm.service.quantile_ns(p) / 1e6;
+    let thr = if elapsed > 0.0 { rm.requests as f64 / elapsed } else { 0.0 };
+    Some(vec![
+        name.to_string(),
+        rm.requests.to_string(),
+        format!("{:.1}", rm.mean_batch()),
+        format!("{:.2}", q(0.5)),
+        format!("{:.2}", q(0.95)),
+        format!("{:.2}", q(0.99)),
+        format!("{thr:.0}"),
+    ])
+}
+
+impl FleetSnapshot {
+    pub fn total_requests(&self) -> u64 {
+        self.merged.full.requests + self.merged.split.requests
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.merged.dropped
+    }
+
+    /// Fleet table: one row per (shard, route) plus merged fleet rows.
+    /// `elapsed` is the measurement window in seconds (for throughput).
+    pub fn table(&self, elapsed: f64) -> Table {
+        let mut t = Table::new(
+            "Fleet serving metrics (percentiles from the merged histogram)",
+            &["source", "requests", "mean batch", "p50 (ms)", "p95 (ms)", "p99 (ms)", "req/s"],
+        );
+        for s in &self.shards {
+            for (route, rm) in
+                [("server-only", &s.metrics.full), ("split", &s.metrics.split)]
+            {
+                if let Some(cells) = route_cells(&format!("{} {route}", s.id), rm, elapsed) {
+                    t.row(&cells);
+                }
+            }
+        }
+        for (route, rm) in [("server-only", &self.merged.full), ("split", &self.merged.split)] {
+            if let Some(cells) = route_cells(&format!("fleet {route}"), rm, elapsed) {
+                t.row(&cells);
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Route;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    fn shard_with(lat_ms: &[u64]) -> MetricsInner {
+        let m = Metrics::new();
+        for &ms in lat_ms {
+            m.record_batch(
+                Route::Split,
+                1,
+                0,
+                &[Duration::from_millis(1)],
+                Duration::from_millis(1),
+                &[Duration::from_millis(ms)],
+            );
+        }
+        m.snapshot()
+    }
+
+    /// Fleet percentiles must equal the quantiles of one histogram holding
+    /// every shard's samples — not any combination of per-shard percentiles.
+    #[test]
+    fn fleet_percentiles_come_from_the_merged_histogram() {
+        // shard 0: 95 fast requests; shard 1: 5 slow ones
+        let fast: Vec<u64> = vec![10; 95];
+        let slow: Vec<u64> = vec![500; 5];
+        let snap = aggregate(vec![
+            (ShardId(0), shard_with(&fast)),
+            (ShardId(1), shard_with(&slow)),
+        ]);
+
+        // reference: a single recorder that saw all 100 requests
+        let mut all = fast.clone();
+        all.extend_from_slice(&slow);
+        let reference = shard_with(&all);
+
+        assert_eq!(snap.merged.split.requests, 100);
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(
+                snap.merged.split.service.quantile_ns(q),
+                reference.split.service.quantile_ns(q),
+                "fleet q{q} != single-histogram q{q}"
+            );
+        }
+
+        // the failure mode this design avoids: averaging per-shard p99s
+        // (10ms and 500ms → 255ms) hides that the true fleet p99 is ~500ms
+        let p99_fleet = snap.merged.split.service.quantile_ns(0.99) / 1e6;
+        let p99_avg = (snap.shards[0].metrics.split.service.quantile_ns(0.99)
+            + snap.shards[1].metrics.split.service.quantile_ns(0.99))
+            / 2.0
+            / 1e6;
+        assert!(p99_fleet > 400.0, "fleet p99 lost the tail: {p99_fleet}ms");
+        assert!(p99_avg < 300.0, "sanity: averaging should understate ({p99_avg}ms)");
+    }
+
+    #[test]
+    fn aggregate_sums_counters_across_shards() {
+        let snap = aggregate(vec![
+            (ShardId(0), shard_with(&[10, 10])),
+            (ShardId(1), shard_with(&[10])),
+            (ShardId(2), shard_with(&[])),
+        ]);
+        assert_eq!(snap.total_requests(), 3);
+        assert_eq!(snap.shards.len(), 3);
+        assert_eq!(snap.merged.split.batches, 3);
+        assert_eq!(snap.merged.full.requests, 0);
+    }
+
+    #[test]
+    fn table_renders_shard_and_fleet_rows() {
+        let snap = aggregate(vec![
+            (ShardId(0), shard_with(&[10; 4])),
+            (ShardId(1), shard_with(&[20; 4])),
+        ]);
+        let t = snap.table(1.0);
+        // 2 shard split rows + 1 fleet split row (no full traffic)
+        assert_eq!(t.n_rows(), 3);
+        let md = t.to_markdown();
+        assert!(md.contains("fleet split"), "{md}");
+        assert!(md.contains("shard-0 split"), "{md}");
+    }
+}

@@ -1,0 +1,505 @@
+//! The fleet front gateway: one TCP endpoint speaking the existing
+//! `net::framing` wire protocol, fanning each connection out to the
+//! coordinator shard its session hashes to.
+//!
+//! Thread layout (mirrors the coordinator's):
+//!   * accept thread — owns the listener, spawns one connection thread per
+//!     client;
+//!   * connection threads — read the first frame to learn the session id,
+//!     consult the shared [`Topology`] for a consistent-hash placement, pin
+//!     an upstream connection to that shard, then pump frames client→shard
+//!     inline while a paired pump thread copies shard→client;
+//!   * (optional) health-monitor thread — probes shards and edits the
+//!     topology; the next placement simply routes around `Down` shards.
+//!
+//! The gateway acks a client's opening `Hello` itself, stamping the
+//! assigned shard id into the `shard` field; shard-side hello acks are
+//! filtered out of the return path so a client sees exactly one ack.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use log::{debug, warn};
+
+use crate::net::framing::{Hello, Msg};
+use crate::net::tcp::{read_msg, write_msg};
+
+use super::health::{HealthConfig, HealthMonitor};
+use super::topology::{ShardId, ShardState, Topology};
+
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// bind address; use port 0 for an ephemeral port
+    pub addr: String,
+    /// shard endpoints, all already listening
+    pub shards: Vec<(ShardId, SocketAddr)>,
+    /// ring points per shard
+    pub vnodes: usize,
+    /// deadline for pinning an upstream connection
+    pub connect_timeout: Duration,
+    /// background probing; None leaves state transitions to the operator.
+    /// Note that a refused pin marks a shard Down, and only a health
+    /// monitor (or an explicit `set_shard_state`) can bring it back up —
+    /// prefer `Some` unless states are managed externally
+    pub health: Option<HealthConfig>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            shards: Vec::new(),
+            vnodes: 64,
+            connect_timeout: Duration::from_secs(1),
+            health: None,
+        }
+    }
+}
+
+/// Per-frame counters, lock-free so the two pump directions of every
+/// connection never serialize on a mutex (the shard set is fixed at
+/// gateway start, so the per-shard map needs no locking either).
+struct Counters {
+    forwarded_requests: AtomicU64,
+    forwarded_responses: AtomicU64,
+    per_shard_requests: HashMap<ShardId, AtomicU64>,
+}
+
+impl Counters {
+    fn count_request(&self, shard: ShardId) {
+        self.forwarded_requests.fetch_add(1, Ordering::SeqCst);
+        if let Some(c) = self.per_shard_requests.get(&shard) {
+            c.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Gateway-side statistics snapshot. Connection-rate fields live behind a
+/// mutex (touched once per connection); frame-rate fields are read from
+/// the internal lock-free counters.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayStats {
+    /// client connections accepted
+    pub connections: u64,
+    /// connections rejected for lack of a routable shard
+    pub rejected: u64,
+    /// request frames forwarded client→shard
+    pub forwarded_requests: u64,
+    /// response frames forwarded shard→client
+    pub forwarded_responses: u64,
+    /// session -> pinned shard, as observed across all connections
+    pub assignments: HashMap<u32, ShardId>,
+    /// request frames per shard
+    pub per_shard_requests: HashMap<ShardId, u64>,
+    /// sessions whose placement changed between connections — stays 0 while
+    /// the routable set is stable (the session-affinity invariant)
+    pub reassigned: u64,
+}
+
+pub struct GatewayHandle {
+    pub addr: SocketAddr,
+    topology: Arc<Mutex<Topology>>,
+    stats: Arc<Mutex<GatewayStats>>,
+    counters: Arc<Counters>,
+    health: Option<HealthMonitor>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl GatewayHandle {
+    pub fn stats(&self) -> GatewayStats {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.forwarded_requests = self.counters.forwarded_requests.load(Ordering::SeqCst);
+        s.forwarded_responses = self.counters.forwarded_responses.load(Ordering::SeqCst);
+        s.per_shard_requests = self
+            .counters
+            .per_shard_requests
+            .iter()
+            .map(|(id, c)| (*id, c.load(Ordering::SeqCst)))
+            .collect();
+        s
+    }
+
+    /// Begin draining a shard: pinned connections keep flowing, new sessions
+    /// hash elsewhere.
+    pub fn drain(&self, id: ShardId) {
+        self.topology.lock().unwrap().drain(id);
+    }
+
+    /// True once a draining shard has no pinned connections left.
+    pub fn drained(&self, id: ShardId) -> bool {
+        self.topology.lock().unwrap().drained(id)
+    }
+
+    pub fn set_shard_state(&self, id: ShardId, state: ShardState) {
+        self.topology.lock().unwrap().set_state(id, state);
+    }
+
+    /// (id, state, live connections) per shard.
+    pub fn shard_states(&self) -> Vec<(ShardId, ShardState, usize)> {
+        let top = self.topology.lock().unwrap();
+        top.shards().map(|s| (s.id, s.state, s.connections)).collect()
+    }
+
+    /// Probe stats from the health monitor, if one is running.
+    pub fn health_stats(&self) -> Option<HashMap<ShardId, super::health::ProbeStats>> {
+        self.health.as_ref().map(|h| h.stats())
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.health.take() {
+            h.stop();
+        }
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the gateway in front of an already-listening shard set.
+pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
+    anyhow::ensure!(!cfg.shards.is_empty(), "gateway needs at least one shard");
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+
+    let mut topology = Topology::new(cfg.vnodes);
+    for (id, saddr) in &cfg.shards {
+        topology.add_shard(*id, *saddr);
+    }
+    let topology = Arc::new(Mutex::new(topology));
+    let stats = Arc::new(Mutex::new(GatewayStats::default()));
+    let counters = Arc::new(Counters {
+        forwarded_requests: AtomicU64::new(0),
+        forwarded_responses: AtomicU64::new(0),
+        per_shard_requests: cfg
+            .shards
+            .iter()
+            .map(|(id, _)| (*id, AtomicU64::new(0)))
+            .collect(),
+    });
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let health = cfg.health.clone().map(|h| HealthMonitor::start(topology.clone(), h));
+
+    let acc_shutdown = shutdown.clone();
+    let acc_topology = topology.clone();
+    let acc_stats = stats.clone();
+    let acc_counters = counters.clone();
+    let connect_timeout = cfg.connect_timeout;
+    let acceptor = std::thread::Builder::new()
+        .name("gw-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if acc_shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let topology = acc_topology.clone();
+                        let stats = acc_stats.clone();
+                        let counters = acc_counters.clone();
+                        let shutdown = acc_shutdown.clone();
+                        std::thread::Builder::new()
+                            .name("gw-conn".into())
+                            .spawn(move || {
+                                if let Err(e) = gw_conn(
+                                    s,
+                                    topology,
+                                    stats,
+                                    counters,
+                                    shutdown,
+                                    connect_timeout,
+                                ) {
+                                    debug!("gateway connection ended: {e:#}");
+                                }
+                            })
+                            .ok();
+                    }
+                    Err(e) => {
+                        warn!("gateway accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        })
+        .context("spawn gateway acceptor")?;
+
+    Ok(GatewayHandle { addr, topology, stats, counters, health, shutdown, threads: vec![acceptor] })
+}
+
+/// Serve one client connection end to end.
+fn gw_conn(
+    mut client: TcpStream,
+    topology: Arc<Mutex<Topology>>,
+    stats: Arc<Mutex<GatewayStats>>,
+    counters: Arc<Counters>,
+    shutdown: Arc<AtomicBool>,
+    connect_timeout: Duration,
+) -> Result<()> {
+    client.set_nodelay(true).ok();
+
+    // the first frame names the session this connection belongs to
+    let first = match read_msg(&mut client)? {
+        Some(m) => m,
+        None => return Ok(()), // connected and left (e.g. the shutdown poke)
+    };
+    let session = match &first {
+        Msg::Hello(h) => h.client,
+        Msg::Request(r) => r.client,
+        Msg::Response(_) => bail!("client opened with a response frame"),
+    };
+
+    // consistent-hash placement, re-routing around shards that refuse the
+    // pin (each refusal marks the shard Down for everyone)
+    let mut attempts = 0usize;
+    let (shard_id, upstream) = loop {
+        let pick = {
+            let top = topology.lock().unwrap();
+            top.route(session).map(|s| (s.id, s.addr))
+        };
+        let Some((id, saddr)) = pick else {
+            stats.lock().unwrap().rejected += 1;
+            bail!("no routable shard for session {session}");
+        };
+        match TcpStream::connect_timeout(&saddr, connect_timeout) {
+            Ok(s) => break (id, s),
+            Err(e) => {
+                warn!("gateway: {id} refused pin ({e}); marking down and re-routing");
+                topology.lock().unwrap().set_state(id, ShardState::Down);
+                attempts += 1;
+                if attempts > 16 {
+                    stats.lock().unwrap().rejected += 1;
+                    bail!("session {session}: no shard accepted the pin");
+                }
+            }
+        }
+    };
+    upstream.set_nodelay(true).ok();
+    topology.lock().unwrap().conn_opened(shard_id);
+    {
+        let mut st = stats.lock().unwrap();
+        st.connections += 1;
+        match st.assignments.insert(session, shard_id) {
+            Some(prev) if prev != shard_id => st.reassigned += 1,
+            _ => {}
+        }
+    }
+
+    let result =
+        pump_session(&mut client, upstream, &first, session, shard_id, &counters, &shutdown);
+    topology.lock().unwrap().conn_closed(shard_id);
+    result
+}
+
+fn pump_session(
+    client: &mut TcpStream,
+    mut upstream: TcpStream,
+    first: &Msg,
+    session: u32,
+    shard_id: ShardId,
+    counters: &Arc<Counters>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<()> {
+    // the gateway speaks for the fleet: ack the opening hello with the
+    // assigned shard before any traffic flows
+    if let Msg::Hello(h) = first {
+        write_msg(
+            client,
+            &Msg::Hello(Hello { client: h.client, split: h.split, shard: Some(shard_id.0) }),
+        )?;
+    }
+    write_msg(&mut upstream, first)?;
+    if matches!(first, Msg::Request(_)) {
+        counters.count_request(shard_id);
+    }
+
+    // shard -> client pump (hello acks already handled above)
+    let mut up_read = upstream.try_clone().context("clone upstream")?;
+    let mut client_write = client.try_clone().context("clone client stream")?;
+    let pump_counters = counters.clone();
+    let back = std::thread::Builder::new()
+        .name("gw-pump".into())
+        .spawn(move || loop {
+            match read_msg(&mut up_read) {
+                Ok(Some(Msg::Hello(_))) => continue,
+                Ok(Some(m)) => {
+                    if matches!(m, Msg::Response(_)) {
+                        pump_counters.forwarded_responses.fetch_add(1, Ordering::SeqCst);
+                    }
+                    if write_msg(&mut client_write, &m).is_err() {
+                        break;
+                    }
+                }
+                Ok(None) | Err(_) => break,
+            }
+        })
+        .context("spawn return pump")?;
+
+    // client -> shard pump, inline
+    let forward = (|| -> Result<()> {
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match read_msg(client)? {
+                Some(m) => {
+                    if matches!(m, Msg::Request(_)) {
+                        counters.count_request(shard_id);
+                    }
+                    write_msg(&mut upstream, &m)
+                        .with_context(|| format!("forward to {shard_id}"))?;
+                }
+                None => break, // client done
+            }
+        }
+        Ok(())
+    })();
+
+    // tear the upstream down so the return pump unblocks, then reap it
+    let _ = upstream.shutdown(Shutdown::Both);
+    let _ = back.join();
+    debug!("session {session} on {shard_id} closed");
+    forward
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{serve, Backend, ServerConfig, ServerHandle, SimSpec};
+    use crate::net::framing::{Payload, Request};
+
+    fn sim_shard(id: u16) -> ServerHandle {
+        serve(ServerConfig {
+            shard_id: Some(id),
+            backend: Backend::Sim(SimSpec {
+                fixed: Duration::from_micros(200),
+                per_item: Duration::from_micros(50),
+                action_dim: 1,
+            }),
+            ..ServerConfig::default()
+        })
+        .expect("sim shard")
+    }
+
+    fn gateway_over(shards: &[&ServerHandle]) -> GatewayHandle {
+        serve_gateway(GatewayConfig {
+            shards: shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (ShardId(i as u16), s.addr))
+                .collect(),
+            ..GatewayConfig::default()
+        })
+        .expect("gateway")
+    }
+
+    /// Raw-protocol round trip through the gateway: hello ack carries the
+    /// shard id, request comes back answered by the shard.
+    #[test]
+    fn hello_ack_names_the_assigned_shard_and_requests_flow() {
+        let s0 = sim_shard(0);
+        let s1 = sim_shard(1);
+        let gw = gateway_over(&[&s0, &s1]);
+
+        let mut conn = TcpStream::connect(gw.addr).unwrap();
+        write_msg(&mut conn, &Msg::Hello(Hello { client: 5, split: false, shard: None }))
+            .unwrap();
+        let ack = read_msg(&mut conn).unwrap().unwrap();
+        let assigned = match ack {
+            Msg::Hello(h) => h.shard.expect("gateway must stamp a shard"),
+            other => panic!("expected hello ack, got {other:?}"),
+        };
+        assert!(assigned < 2);
+
+        let x = 8u16;
+        write_msg(
+            &mut conn,
+            &Msg::Request(Request {
+                client: 5,
+                id: 99,
+                payload: Payload::RawRgba { x, data: vec![1; 4 * 8 * 8] },
+            }),
+        )
+        .unwrap();
+        let resp = loop {
+            match read_msg(&mut conn).unwrap().unwrap() {
+                Msg::Response(r) => break r,
+                _ => continue,
+            }
+        };
+        assert_eq!(resp.id, 99);
+        assert_eq!(resp.action.len(), 1);
+
+        let st = gw.stats();
+        assert_eq!(st.assignments[&5], ShardId(assigned));
+        assert_eq!(st.forwarded_requests, 1);
+        assert_eq!(st.forwarded_responses, 1);
+
+        drop(conn);
+        gw.shutdown();
+        s0.shutdown();
+        s1.shutdown();
+    }
+
+    #[test]
+    fn gateway_rejects_when_every_shard_is_down() {
+        let s0 = sim_shard(0);
+        let gw = gateway_over(&[&s0]);
+        gw.set_shard_state(ShardId(0), ShardState::Down);
+
+        let mut conn = TcpStream::connect(gw.addr).unwrap();
+        write_msg(&mut conn, &Msg::Hello(Hello { client: 1, split: false, shard: None }))
+            .unwrap();
+        // gateway closes without an ack
+        assert!(matches!(read_msg(&mut conn), Ok(None) | Err(_)));
+        // poll: the connection thread updates stats after the route fails
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while gw.stats().rejected == 0 {
+            assert!(std::time::Instant::now() < deadline, "rejection never counted");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        gw.shutdown();
+        s0.shutdown();
+    }
+
+    #[test]
+    fn unreachable_shard_is_marked_down_and_routed_around() {
+        let live = sim_shard(0);
+        // second loopback address: no parallel test can rebind this port
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.2:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let gw = serve_gateway(GatewayConfig {
+            shards: vec![(ShardId(0), live.addr), (ShardId(1), dead_addr)],
+            connect_timeout: Duration::from_millis(200),
+            ..GatewayConfig::default()
+        })
+        .expect("gateway");
+
+        // enough sessions that some hash onto the dead shard first
+        for session in 0..32u32 {
+            let mut conn = TcpStream::connect(gw.addr).unwrap();
+            write_msg(
+                &mut conn,
+                &Msg::Hello(Hello { client: session, split: false, shard: None }),
+            )
+            .unwrap();
+            match read_msg(&mut conn).unwrap() {
+                Some(Msg::Hello(h)) => assert_eq!(h.shard, Some(0), "landed on the dead shard"),
+                other => panic!("no ack: {other:?}"),
+            }
+        }
+        let states = gw.shard_states();
+        let dead = states.iter().find(|(id, ..)| *id == ShardId(1)).unwrap();
+        assert_eq!(dead.1, ShardState::Down);
+        gw.shutdown();
+        live.shutdown();
+    }
+}

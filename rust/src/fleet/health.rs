@@ -1,0 +1,291 @@
+//! Shard health: `Hello` round-trip probes over the real wire protocol.
+//!
+//! Every shard acks a `Hello` frame with its shard id (coordinator reader
+//! behaviour), so a probe is connect → hello → await ack. The monitor
+//! thread probes each shard on an interval and edits the shared
+//! [`Topology`]: consecutive failures mark a shard `Down` (new sessions
+//! route around it), slow acks mark it `Degraded`, and a recovered shard
+//! returns to `Up`. Operator intent is respected: a `Draining` shard is
+//! probed but never re-stated.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+use log::{debug, warn};
+
+use crate::net::framing::{Hello, Msg};
+use crate::net::tcp::{read_msg, write_msg};
+
+use super::topology::{ShardId, ShardState, Topology};
+
+/// Reserved session id for health probes (never creates server-side state:
+/// a `Hello` alone touches no `SessionManager` entry).
+pub const PROBE_CLIENT: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// time between probe rounds
+    pub interval: Duration,
+    /// connect + ack deadline per probe
+    pub timeout: Duration,
+    /// consecutive failures before a shard is marked Down
+    pub fail_threshold: u32,
+    /// ack RTT above this marks a shard Degraded
+    pub degraded_after: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            interval: Duration::from_millis(250),
+            timeout: Duration::from_millis(500),
+            fail_threshold: 2,
+            degraded_after: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Per-shard probe bookkeeping, cloneable for reports.
+#[derive(Debug, Clone, Default)]
+pub struct ProbeStats {
+    pub probes: u64,
+    pub failures: u64,
+    pub consecutive_failures: u32,
+    /// last successful round trip, seconds
+    pub last_rtt: Option<f64>,
+}
+
+/// One blocking probe: connect, hello, await the shard's hello ack.
+/// Returns the round-trip time and the shard id the ack carried.
+pub fn probe_shard(addr: SocketAddr, timeout: Duration) -> Result<(Duration, Option<u16>)> {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("probe connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    write_msg(
+        &mut stream,
+        &Msg::Hello(Hello { client: PROBE_CLIENT, split: false, shard: None }),
+    )?;
+    loop {
+        match read_msg(&mut stream)? {
+            Some(Msg::Hello(h)) => return Ok((t0.elapsed(), h.shard)),
+            Some(_) => continue, // stray traffic on a fresh connection
+            None => bail!("shard {addr} closed before acking the probe"),
+        }
+    }
+}
+
+/// Background prober that keeps a shared [`Topology`] honest.
+pub struct HealthMonitor {
+    shutdown: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>>,
+}
+
+impl HealthMonitor {
+    pub fn start(topology: Arc<Mutex<Topology>>, cfg: HealthConfig) -> HealthMonitor {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let t_shutdown = shutdown.clone();
+        let t_stats = stats.clone();
+        let thread = std::thread::Builder::new()
+            .name("mc-health".into())
+            .spawn(move || monitor_main(topology, cfg, t_shutdown, t_stats))
+            .expect("spawn health monitor");
+        HealthMonitor { shutdown, thread: Some(thread), stats }
+    }
+
+    /// Snapshot of per-shard probe stats.
+    pub fn stats(&self) -> HashMap<ShardId, ProbeStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn monitor_main(
+    topology: Arc<Mutex<Topology>>,
+    cfg: HealthConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>>,
+) {
+    while !shutdown.load(Ordering::SeqCst) {
+        // snapshot targets without holding the lock across probes
+        let targets: Vec<(ShardId, SocketAddr)> = {
+            let top = topology.lock().unwrap();
+            top.shards().map(|s| (s.id, s.addr)).collect()
+        };
+        for (id, addr) in targets {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let outcome = probe_shard(addr, cfg.timeout);
+            let consecutive = {
+                let mut st = stats.lock().unwrap();
+                let e = st.entry(id).or_default();
+                e.probes += 1;
+                match &outcome {
+                    Ok((rtt, _)) => {
+                        e.consecutive_failures = 0;
+                        e.last_rtt = Some(rtt.as_secs_f64());
+                    }
+                    Err(_) => {
+                        e.failures += 1;
+                        e.consecutive_failures += 1;
+                    }
+                }
+                e.consecutive_failures
+            };
+            let mut top = topology.lock().unwrap();
+            let Some(state) = top.state(id) else { continue };
+            if state == ShardState::Draining {
+                continue; // operator intent wins over probe evidence
+            }
+            match outcome {
+                Ok((rtt, _)) => {
+                    let next = if rtt > cfg.degraded_after {
+                        ShardState::Degraded
+                    } else {
+                        ShardState::Up
+                    };
+                    if state != next {
+                        if state == ShardState::Down {
+                            warn!("health: {id} recovered ({:.1} ms)", rtt.as_secs_f64() * 1e3);
+                        }
+                        top.set_state(id, next);
+                    }
+                }
+                Err(e) => {
+                    debug!("health: probe {id} failed: {e:#}");
+                    if consecutive >= cfg.fail_threshold && state != ShardState::Down {
+                        warn!("health: {id} marked down after {consecutive} failures");
+                        top.set_state(id, ShardState::Down);
+                    }
+                }
+            }
+        }
+        // sleep in small slices so stop() stays responsive
+        let mut left = cfg.interval;
+        while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
+            let step = left.min(Duration::from_millis(25));
+            std::thread::sleep(step);
+            left -= step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{serve, Backend, ServerConfig, SimSpec};
+
+    fn sim_server(shard_id: u16) -> crate::coordinator::ServerHandle {
+        serve(ServerConfig {
+            shard_id: Some(shard_id),
+            backend: Backend::Sim(SimSpec::default()),
+            ..ServerConfig::default()
+        })
+        .expect("sim server")
+    }
+
+    /// An address that refuses connections. Allocated on a second loopback
+    /// address no test ever listens on, so a parallel test binding
+    /// `127.0.0.1:0` can never be handed the just-freed port and turn the
+    /// "dead" endpoint live.
+    fn dead_addr() -> SocketAddr {
+        let l = std::net::TcpListener::bind("127.0.0.2:0").unwrap();
+        l.local_addr().unwrap()
+    }
+
+    #[test]
+    fn probe_round_trips_and_reports_shard_id() {
+        let server = sim_server(7);
+        let (rtt, shard) = probe_shard(server.addr, Duration::from_secs(2)).expect("probe");
+        assert_eq!(shard, Some(7));
+        assert!(rtt < Duration::from_secs(1));
+        server.shutdown();
+    }
+
+    #[test]
+    fn probe_fails_fast_against_a_dead_port() {
+        assert!(probe_shard(dead_addr(), Duration::from_millis(300)).is_err());
+    }
+
+    #[test]
+    fn monitor_marks_dead_shard_down_and_leaves_live_one_up() {
+        let live = sim_server(0);
+        let topology = Arc::new(Mutex::new(Topology::new(16)));
+        {
+            let mut t = topology.lock().unwrap();
+            t.add_shard(ShardId(0), live.addr);
+            t.add_shard(ShardId(1), dead_addr());
+        }
+        let monitor = HealthMonitor::start(
+            topology.clone(),
+            HealthConfig {
+                interval: Duration::from_millis(30),
+                timeout: Duration::from_millis(200),
+                fail_threshold: 2,
+                // generous: a loopback hello ack must never look degraded
+                degraded_after: Duration::from_secs(5),
+            },
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let (s0, s1) = {
+                let t = topology.lock().unwrap();
+                (t.state(ShardId(0)).unwrap(), t.state(ShardId(1)).unwrap())
+            };
+            if s1 == ShardState::Down && s0 == ShardState::Up {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "monitor never converged: shard0={s0:?} shard1={s1:?}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let stats = monitor.stats();
+        assert!(stats[&ShardId(1)].failures >= 2);
+        assert!(stats[&ShardId(0)].last_rtt.is_some());
+        monitor.stop();
+        live.shutdown();
+    }
+
+    #[test]
+    fn monitor_never_overrides_draining() {
+        let topology = Arc::new(Mutex::new(Topology::new(16)));
+        {
+            let mut t = topology.lock().unwrap();
+            t.add_shard(ShardId(0), dead_addr());
+            t.drain(ShardId(0));
+        }
+        let monitor = HealthMonitor::start(
+            topology.clone(),
+            HealthConfig {
+                interval: Duration::from_millis(20),
+                timeout: Duration::from_millis(100),
+                fail_threshold: 1,
+                ..HealthConfig::default()
+            },
+        );
+        std::thread::sleep(Duration::from_millis(400));
+        assert_eq!(
+            topology.lock().unwrap().state(ShardId(0)),
+            Some(ShardState::Draining),
+            "probe evidence overrode operator draining"
+        );
+        monitor.stop();
+    }
+}

@@ -1,0 +1,142 @@
+//! Sharded serving fleet: N coordinator shards behind a single front
+//! gateway — the scale-out layer above `coordinator::serve`.
+//!
+//! * [`topology`] — consistent-hash ring + shard table (states, draining,
+//!   connection counts). Sessions hash by their 32-bit id, so each client's
+//!   server-side `SessionManager` stack stays shard-local.
+//! * [`gateway`] — the front TCP endpoint speaking the existing
+//!   `net::framing` protocol; pins each connection to its hashed shard and
+//!   pumps frames both ways. Clients (and `coordinator::client::run_fleet`)
+//!   point at the gateway instead of a single server — nothing else changes.
+//! * [`health`] — `Hello` round-trip probes driving Up/Degraded/Down
+//!   transitions in the shared topology.
+//! * [`aggregate`] — merges per-shard `coordinator::Metrics` snapshots;
+//!   fleet percentiles come from the combined histogram, never from
+//!   averaging per-shard percentiles.
+//!
+//! Shards are stock `coordinator::serve` instances (PJRT- or Sim-backed);
+//! the gateway composes them rather than forking the server. The
+//! [`launch_local`] helper boots an entire single-process fleet for tests,
+//! benches, and the `serve_sharded` example.
+
+pub mod aggregate;
+pub mod gateway;
+pub mod health;
+pub mod topology;
+
+pub use aggregate::{aggregate, FleetSnapshot, ShardSnapshot};
+pub use gateway::{serve_gateway, GatewayConfig, GatewayHandle, GatewayStats};
+pub use health::{probe_shard, HealthConfig, HealthMonitor, ProbeStats};
+pub use topology::{HashRing, Shard, ShardId, ShardState, Topology};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::MetricsInner;
+use crate::coordinator::{serve, ServerConfig, ServerHandle};
+
+/// Configuration for a single-process local fleet.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// number of coordinator shards to launch
+    pub shards: usize,
+    /// gateway bind address
+    pub gateway_addr: String,
+    /// ring points per shard
+    pub vnodes: usize,
+    /// background probing for the gateway. On by default: a connect failure
+    /// makes the gateway mark a shard Down, and without a monitor nothing
+    /// ever brings it back (None = operator-driven states only)
+    pub health: Option<HealthConfig>,
+    /// template for every shard; `addr` is overridden with an ephemeral
+    /// port and `shard_id` with the shard's index
+    pub server: ServerConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 2,
+            gateway_addr: "127.0.0.1:0".into(),
+            vnodes: 64,
+            health: Some(HealthConfig::default()),
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+/// A running fleet: the gateway plus its shard servers, all in-process.
+pub struct LocalFleet {
+    pub gateway: GatewayHandle,
+    shards: Vec<(ShardId, ServerHandle)>,
+}
+
+/// Launch `cfg.shards` coordinator shards on ephemeral ports and a gateway
+/// in front of them.
+pub fn launch_local(cfg: FleetConfig) -> Result<LocalFleet> {
+    anyhow::ensure!(cfg.shards > 0, "a fleet needs at least one shard");
+    let mut shards = Vec::with_capacity(cfg.shards);
+    for i in 0..cfg.shards {
+        let id = ShardId(i as u16);
+        let mut sc = cfg.server.clone();
+        sc.addr = "127.0.0.1:0".into();
+        sc.shard_id = Some(id.0);
+        let handle = serve(sc).with_context(|| format!("launch {id}"))?;
+        shards.push((id, handle));
+    }
+    let gateway = serve_gateway(GatewayConfig {
+        addr: cfg.gateway_addr,
+        shards: shards.iter().map(|(id, h)| (*id, h.addr)).collect(),
+        vnodes: cfg.vnodes,
+        health: cfg.health,
+        ..GatewayConfig::default()
+    })?;
+    Ok(LocalFleet { gateway, shards })
+}
+
+impl LocalFleet {
+    /// The address clients (e.g. `coordinator::client::run_fleet`) dial.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.gateway.addr
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_ids(&self) -> Vec<ShardId> {
+        self.shards.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// One shard's raw metrics snapshot.
+    pub fn shard_metrics(&self, id: ShardId) -> Option<MetricsInner> {
+        self.shards
+            .iter()
+            .find(|(sid, _)| *sid == id)
+            .map(|(_, h)| h.metrics.snapshot())
+    }
+
+    /// Merged fleet snapshot across all live shards.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        aggregate(self.shards.iter().map(|(id, h)| (*id, h.metrics.snapshot())))
+    }
+
+    /// Hard-stop one shard (simulates a crash); the gateway discovers the
+    /// loss via connect failures or health probes and routes around it.
+    /// Returns false if the shard id is unknown.
+    pub fn stop_shard(&mut self, id: ShardId) -> bool {
+        if let Some(pos) = self.shards.iter().position(|(sid, _)| *sid == id) {
+            let (_, handle) = self.shards.remove(pos);
+            handle.shutdown();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn shutdown(self) {
+        self.gateway.shutdown();
+        for (_, h) in self.shards {
+            h.shutdown();
+        }
+    }
+}

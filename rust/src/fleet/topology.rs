@@ -1,0 +1,322 @@
+//! Consistent-hash shard topology: the hash ring that pins sessions to
+//! coordinator shards, plus the authoritative shard table with health /
+//! draining states and live connection counts.
+//!
+//! Placement hashes only the 32-bit session id (the `client` field every
+//! wire message carries), so a session's server-side state — its
+//! `SessionManager` frame stack — stays on one shard across reconnects.
+//! Each shard owns `vnodes` points on a 64-bit ring; removing a shard only
+//! remaps the keys that lived on its points (the consistent-hashing
+//! property the tests pin down).
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+
+/// Stable shard identity within a fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShardId(pub u16);
+
+impl std::fmt::Display for ShardId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard-{}", self.0)
+    }
+}
+
+/// Lifecycle of a shard as the gateway sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    /// healthy: accepts new sessions
+    Up,
+    /// responding slowly: still routable, flagged for operators
+    Degraded,
+    /// operator-initiated removal: existing connections keep flowing, new
+    /// sessions route elsewhere; fully drained once its connections hit 0
+    Draining,
+    /// failed health checks or unreachable: not routable
+    Down,
+}
+
+impl ShardState {
+    /// May new sessions land here?
+    pub fn routable(self) -> bool {
+        matches!(self, ShardState::Up | ShardState::Degraded)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardState::Up => "up",
+            ShardState::Degraded => "degraded",
+            ShardState::Draining => "draining",
+            ShardState::Down => "down",
+        }
+    }
+}
+
+/// One shard's entry in the fleet table.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub id: ShardId,
+    pub addr: SocketAddr,
+    pub state: ShardState,
+    /// live gateway connections currently pinned here
+    pub connections: usize,
+}
+
+/// splitmix64 finalizer — a well-mixed 64-bit hash for ring points and keys.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+fn ring_point(id: ShardId, vnode: usize) -> u64 {
+    mix64(((id.0 as u64) << 32) ^ (vnode as u64) ^ 0x5EED_0F1E_E7A1_1CE5)
+}
+
+fn key_point(session: u32) -> u64 {
+    mix64(session as u64 ^ 0xC1_1E57_0C0DE)
+}
+
+/// The ring itself: hash points -> shard, `vnodes` points per shard.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    points: BTreeMap<u64, ShardId>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    pub fn new(vnodes: usize) -> Self {
+        assert!(vnodes > 0, "a ring needs at least one vnode per shard");
+        HashRing { points: BTreeMap::new(), vnodes }
+    }
+
+    pub fn add(&mut self, id: ShardId) {
+        for v in 0..self.vnodes {
+            self.points.insert(ring_point(id, v), id);
+        }
+    }
+
+    pub fn remove(&mut self, id: ShardId) {
+        self.points.retain(|_, s| *s != id);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// First shard clockwise of the session's hash for which `eligible`
+    /// holds; None when no eligible shard exists.
+    pub fn route_filtered<F: Fn(ShardId) -> bool>(
+        &self,
+        session: u32,
+        eligible: F,
+    ) -> Option<ShardId> {
+        let h = key_point(session);
+        self.points
+            .range(h..)
+            .chain(self.points.range(..h))
+            .map(|(_, s)| *s)
+            .find(|s| eligible(*s))
+    }
+
+    /// First shard clockwise of the session's hash.
+    pub fn route(&self, session: u32) -> Option<ShardId> {
+        self.route_filtered(session, |_| true)
+    }
+}
+
+/// Authoritative fleet view: shard table + ring, shared (behind a mutex)
+/// between the gateway's connection threads and the health monitor.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    shards: BTreeMap<ShardId, Shard>,
+    ring: HashRing,
+}
+
+impl Topology {
+    pub fn new(vnodes: usize) -> Self {
+        Topology { shards: BTreeMap::new(), ring: HashRing::new(vnodes) }
+    }
+
+    pub fn add_shard(&mut self, id: ShardId, addr: SocketAddr) {
+        self.shards
+            .insert(id, Shard { id, addr, state: ShardState::Up, connections: 0 });
+        self.ring.add(id);
+    }
+
+    /// Drop a shard from the table and the ring entirely (use [`Self::drain`]
+    /// for the graceful path).
+    pub fn remove_shard(&mut self, id: ShardId) {
+        self.shards.remove(&id);
+        self.ring.remove(id);
+    }
+
+    pub fn set_state(&mut self, id: ShardId, state: ShardState) {
+        if let Some(s) = self.shards.get_mut(&id) {
+            s.state = state;
+        }
+    }
+
+    /// Begin connection draining: keep serving pinned connections, stop
+    /// accepting new sessions.
+    pub fn drain(&mut self, id: ShardId) {
+        self.set_state(id, ShardState::Draining);
+    }
+
+    /// A draining shard whose last pinned connection has closed.
+    pub fn drained(&self, id: ShardId) -> bool {
+        self.shards
+            .get(&id)
+            .is_some_and(|s| s.state == ShardState::Draining && s.connections == 0)
+    }
+
+    pub fn state(&self, id: ShardId) -> Option<ShardState> {
+        self.shards.get(&id).map(|s| s.state)
+    }
+
+    pub fn shard(&self, id: ShardId) -> Option<&Shard> {
+        self.shards.get(&id)
+    }
+
+    pub fn shards(&self) -> impl Iterator<Item = &Shard> {
+        self.shards.values()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_routable(&self) -> usize {
+        self.shards.values().filter(|s| s.state.routable()).count()
+    }
+
+    /// Consistent-hash placement among routable shards.
+    pub fn route(&self, session: u32) -> Option<&Shard> {
+        let id = self
+            .ring
+            .route_filtered(session, |s| {
+                self.shards.get(&s).map(|sh| sh.state.routable()).unwrap_or(false)
+            })?;
+        self.shards.get(&id)
+    }
+
+    pub fn conn_opened(&mut self, id: ShardId) {
+        if let Some(s) = self.shards.get_mut(&id) {
+            s.connections += 1;
+        }
+    }
+
+    pub fn conn_closed(&mut self, id: ShardId) {
+        if let Some(s) = self.shards.get_mut(&id) {
+            s.connections = s.connections.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn topo(n: u16) -> Topology {
+        let mut t = Topology::new(64);
+        for i in 0..n {
+            t.add_shard(ShardId(i), addr(9000 + i));
+        }
+        t
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let t = topo(4);
+        for session in 0..200u32 {
+            let a = t.route(session).unwrap().id;
+            let b = t.route(session).unwrap().id;
+            assert_eq!(a, b, "session {session} flapped");
+        }
+    }
+
+    #[test]
+    fn all_shards_receive_a_fair_share() {
+        let t = topo(4);
+        let mut counts = [0usize; 4];
+        for session in 0..4000u32 {
+            counts[t.route(session).unwrap().id.0 as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            // perfect balance would be 1000; vnodes keep skew modest
+            assert!(c > 400, "shard {i} starved: {counts:?}");
+            assert!(c < 1800, "shard {i} overloaded: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn removing_a_shard_only_remaps_its_own_sessions() {
+        let t4 = topo(4);
+        let mut t3 = t4.clone();
+        t3.remove_shard(ShardId(3));
+        let mut moved = 0;
+        for session in 0..2000u32 {
+            let before = t4.route(session).unwrap().id;
+            let after = t3.route(session).unwrap().id;
+            if before == ShardId(3) {
+                assert_ne!(after, ShardId(3));
+                moved += 1;
+            } else {
+                assert_eq!(before, after, "session {session} moved needlessly");
+            }
+        }
+        assert!(moved > 0, "shard 3 owned no sessions?");
+    }
+
+    #[test]
+    fn draining_and_down_shards_get_no_new_sessions() {
+        let mut t = topo(3);
+        t.drain(ShardId(0));
+        t.set_state(ShardId(1), ShardState::Down);
+        for session in 0..500u32 {
+            assert_eq!(t.route(session).unwrap().id, ShardId(2));
+        }
+        assert_eq!(t.n_routable(), 1);
+        // degraded stays routable
+        t.set_state(ShardId(2), ShardState::Degraded);
+        assert!(t.route(7).is_some());
+    }
+
+    #[test]
+    fn drained_requires_zero_connections() {
+        let mut t = topo(2);
+        t.conn_opened(ShardId(0));
+        t.drain(ShardId(0));
+        assert!(!t.drained(ShardId(0)));
+        t.conn_closed(ShardId(0));
+        assert!(t.drained(ShardId(0)));
+        // an up shard is never "drained"
+        assert!(!t.drained(ShardId(1)));
+    }
+
+    #[test]
+    fn empty_or_fully_down_topology_routes_nowhere() {
+        let t = Topology::new(8);
+        assert!(t.route(1).is_none());
+        let mut t = topo(2);
+        t.set_state(ShardId(0), ShardState::Down);
+        t.set_state(ShardId(1), ShardState::Down);
+        assert!(t.route(1).is_none());
+    }
+
+    #[test]
+    fn reconnecting_session_lands_on_the_same_shard_across_clones() {
+        // the gateway consults a fresh lock-guarded view per connection;
+        // placement must be a pure function of (topology, session)
+        let t = topo(5);
+        let u = t.clone();
+        for session in [0u32, 1, 42, 7_000_000, u32::MAX] {
+            assert_eq!(t.route(session).unwrap().id, u.route(session).unwrap().id);
+        }
+    }
+}

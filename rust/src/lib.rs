@@ -7,9 +7,16 @@
 //!   PPO/SAC/DDPG train steps written in JAX over shader-pass-structured
 //!   Pallas kernels, AOT-lowered to HLO text (`make artifacts`).
 //! * **L3 (this crate)** — everything at runtime: the PJRT [`runtime`],
-//!   the split-policy serving [`coordinator`], the OpenGL [`shader`]
-//!   toolchain, simulated edge [`device`]s, the shaped [`net`] stack,
-//!   pixel-observation [`envs`], and the generic [`rl`] trainer.
+//!   the split-policy serving [`coordinator`], the sharded serving
+//!   [`fleet`] (consistent-hash gateway, shard health/draining, merged
+//!   fleet metrics), the OpenGL [`shader`] toolchain, simulated edge
+//!   [`device`]s, the shaped [`net`] stack, pixel-observation [`envs`],
+//!   and the generic [`rl`] trainer.
+//!
+//! Scale-out path: `coordinator::serve` is one shard; `fleet::launch_local`
+//! (or an out-of-process gateway via `fleet::serve_gateway`) runs N of them
+//! behind a single endpoint, with sessions pinned to shards by consistent
+//! hashing on the wire-level client id — see DESIGN.md §3.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -22,6 +29,7 @@ pub mod envs;
 pub mod device;
 pub mod net;
 pub mod coordinator;
+pub mod fleet;
 pub mod rl;
 pub mod analysis;
 pub mod telemetry;

@@ -4,6 +4,7 @@
 //!   info                     manifest/artifact summary
 //!   serve                    run the coordinator (Ctrl-C to stop)
 //!   fleet                    drive a client fleet against a server
+//!   sharded                  run N shards behind the consistent-hash gateway
 //!   train                    train one (task, encoder) run
 //!   exp <experiment>         regenerate a paper table/figure
 //!   shader                   emit the GLSL shader sources for an encoder
@@ -13,8 +14,10 @@ use std::time::Duration;
 use anyhow::Result;
 
 use miniconv::coordinator::{
-    merged_latencies, run_fleet, serve, BatchPolicy, ClientConfig, Route, ServerConfig,
+    merged_latencies, run_fleet, serve, Backend, BatchPolicy, ClientConfig, Route, ServerConfig,
+    SimSpec,
 };
+use miniconv::fleet::{launch_local, FleetConfig};
 use miniconv::experiments as exp;
 use miniconv::experiments::learning::LearningScale;
 use miniconv::rl::Trainer;
@@ -33,12 +36,13 @@ fn main() {
         "info" => cmd_info(rest),
         "serve" => cmd_serve(rest),
         "fleet" => cmd_fleet(rest),
+        "sharded" => cmd_sharded(rest),
         "train" => cmd_train(rest),
         "exp" => cmd_exp(rest),
         "shader" => cmd_shader(rest),
         _ => {
             eprintln!(
-                "usage: miniconv <info|serve|fleet|train|exp|shader> [options]\n\
+                "usage: miniconv <info|serve|fleet|sharded|train|exp|shader> [options]\n\
                  run `miniconv <cmd> --help` for details"
             );
             std::process::exit(2);
@@ -175,6 +179,60 @@ fn cmd_fleet(argv: Vec<String>) -> Result<()> {
         format!("{hz:.1}"),
     ]);
     t.print();
+    Ok(())
+}
+
+fn cmd_sharded(argv: Vec<String>) -> Result<()> {
+    let a = Parser::new("run a sharded serving fleet behind the consistent-hash gateway")
+        .opt("shards", "4", "coordinator shards")
+        .opt("clients", "8", "simulated clients driven through the gateway")
+        .opt("decisions", "50", "decisions per client")
+        .opt("backend", "auto", "pjrt | sim | auto (pjrt when artifacts exist)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let have_artifacts = default_artifact_dir().join("manifest.json").exists();
+    let backend = match a.str("backend").as_str() {
+        "pjrt" => Backend::Pjrt,
+        "sim" => Backend::Sim(SimSpec::default()),
+        "auto" => {
+            if have_artifacts {
+                Backend::Pjrt
+            } else {
+                Backend::Sim(SimSpec::default())
+            }
+        }
+        other => anyhow::bail!("bad backend {other} (pjrt|sim|auto)"),
+    };
+    let sim = matches!(backend, Backend::Sim(_));
+    let fleet = launch_local(FleetConfig {
+        shards: a.usize("shards"),
+        server: ServerConfig { backend, ..ServerConfig::default() },
+        ..FleetConfig::default()
+    })?;
+    println!(
+        "gateway on {} fronting {} shards ({})",
+        fleet.addr(),
+        fleet.n_shards(),
+        if sim { "sim backend" } else { "pjrt backend" }
+    );
+    let cfg = ClientConfig {
+        mode: Route::Full,
+        decisions: a.usize("decisions"),
+        obs_x: if sim { Some(24) } else { None },
+        ..ClientConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let reports = run_fleet(fleet.addr(), a.usize("clients"), &cfg)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut lat = merged_latencies(&reports);
+    println!(
+        "{} decisions in {elapsed:.2}s (median {:.1} ms, p95 {:.1} ms)",
+        reports.iter().map(|r| r.decisions).sum::<usize>(),
+        lat.median() * 1e3,
+        lat.p95() * 1e3
+    );
+    fleet.snapshot().table(elapsed).print();
+    fleet.shutdown();
     Ok(())
 }
 

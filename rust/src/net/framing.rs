@@ -56,6 +56,10 @@ pub struct Hello {
     pub client: u32,
     /// "server-only" | "split"
     pub split: bool,
+    /// Shard this session was pinned to. `None` on a client's opening hello;
+    /// set by the fleet gateway (and by shard servers in their hello acks)
+    /// so clients and health probes can observe placement.
+    pub shard: Option<u16>,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -115,6 +119,13 @@ impl Msg {
             Msg::Hello(h) => {
                 put_u32(&mut body, h.client);
                 body.push(h.split as u8);
+                match h.shard {
+                    Some(s) => {
+                        body.push(1);
+                        put_u16(&mut body, s);
+                    }
+                    None => body.push(0),
+                }
                 MSG_HELLO
             }
             Msg::Request(r) => match &r.payload {
@@ -162,7 +173,12 @@ impl Msg {
             MSG_HELLO => {
                 let client = r.u32()?;
                 let split = r.take(1)?[0] != 0;
-                Msg::Hello(Hello { client, split })
+                let shard = match r.take(1)?[0] {
+                    0 => None,
+                    1 => Some(r.u16()?),
+                    other => bail!("bad shard tag {other}"),
+                };
+                Msg::Hello(Hello { client, split, shard })
             }
             MSG_REQUEST_RAW => {
                 let client = r.u32()?;
@@ -266,8 +282,10 @@ mod tests {
     fn response_and_hello_roundtrip() {
         for msg in [
             Msg::Response(Response { client: 1, id: 9, action: vec![0.5, -1.25] }),
-            Msg::Hello(Hello { client: 12, split: true }),
-            Msg::Hello(Hello { client: 12, split: false }),
+            Msg::Hello(Hello { client: 12, split: true, shard: None }),
+            Msg::Hello(Hello { client: 12, split: false, shard: None }),
+            Msg::Hello(Hello { client: 7, split: true, shard: Some(3) }),
+            Msg::Hello(Hello { client: 7, split: false, shard: Some(u16::MAX) }),
         ] {
             let enc = msg.encode();
             assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);

@@ -40,7 +40,7 @@ mod tests {
     #[test]
     fn roundtrip_over_a_buffer() {
         let msgs = vec![
-            Msg::Hello(Hello { client: 1, split: true }),
+            Msg::Hello(Hello { client: 1, split: true, shard: None }),
             Msg::Request(Request {
                 client: 1,
                 id: 1,

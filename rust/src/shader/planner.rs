@@ -11,23 +11,36 @@
 //! `ceil(cout/4)` passes, each binding `ceil(cin/4)` textures and
 //! performing `k^2 * ceil(cin/4)` samples per output pixel.
 
-use thiserror::Error;
-
 use super::ir::{EncoderIr, Op};
 
 pub const CHANNELS_PER_TEXTURE: usize = 4;
 pub const MAX_BOUND_TEXTURES: usize = 8;
 pub const MAX_SAMPLES_PER_PASS: usize = 64;
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PlanError {
-    #[error("layer {layer}: pass needs {textures} bound textures, limit is {limit}")]
     TooManyTextures { layer: usize, textures: usize, limit: usize },
-    #[error("layer {layer}: pass needs {samples} texture samples, budget is {budget}")]
     SampleBudget { layer: usize, samples: usize, budget: usize },
-    #[error("layer {layer}: unsupported op for shader deployment: {what}")]
     Unsupported { layer: usize, what: String },
 }
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::TooManyTextures { layer, textures, limit } => {
+                write!(f, "layer {layer}: pass needs {textures} bound textures, limit is {limit}")
+            }
+            PlanError::SampleBudget { layer, samples, budget } => {
+                write!(f, "layer {layer}: pass needs {samples} texture samples, budget is {budget}")
+            }
+            PlanError::Unsupported { layer, what } => {
+                write!(f, "layer {layer}: unsupported op for shader deployment: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// A logical texture: 4 packed channels of one layer's activation map.
 #[derive(Debug, Clone, PartialEq)]

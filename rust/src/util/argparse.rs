@@ -23,17 +23,26 @@ pub struct Args {
     specs: Vec<OptSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Unknown(name) => write!(f, "unknown option --{name}"),
+            ArgError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            ArgError::Invalid(name, value) => write!(f, "invalid value for --{name}: {value}"),
+            ArgError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 pub struct Parser {
     about: &'static str,

@@ -1,0 +1,201 @@
+//! End-to-end fleet integration: real gateway + N real coordinator shards
+//! (Sim backend, so no AOT artifacts are needed) driven by the real
+//! simulated-device client fleet over loopback TCP.
+//!
+//! The session-affinity invariant is verified two independent ways: the
+//! gateway's own session→shard table must never reassign, and each shard's
+//! request counter must equal exactly `decisions × clients assigned to it`
+//! — which cannot hold if any session's requests leaked onto two shards.
+
+use std::time::Duration;
+
+use miniconv::coordinator::{
+    run_client, run_fleet, Backend, BatchPolicy, ClientConfig, Route, ServerConfig, SimSpec,
+};
+use miniconv::fleet::{launch_local, FleetConfig, HealthConfig, ShardId, ShardState};
+
+const OBS_X: usize = 24;
+
+fn sim_fleet(shards: usize) -> FleetConfig {
+    FleetConfig {
+        shards,
+        server: ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            backend: Backend::Sim(SimSpec {
+                fixed: Duration::from_micros(300),
+                per_item: Duration::from_micros(100),
+                action_dim: 1,
+            }),
+            ..ServerConfig::default()
+        },
+        ..FleetConfig::default()
+    }
+}
+
+fn client_cfg(decisions: usize) -> ClientConfig {
+    ClientConfig {
+        mode: Route::Full,
+        decisions,
+        obs_x: Some(OBS_X),
+        ..ClientConfig::default()
+    }
+}
+
+#[test]
+fn fleet_serves_a_client_fleet_with_strict_shard_affinity() {
+    let fleet = launch_local(sim_fleet(3)).expect("fleet");
+    let (n_clients, decisions) = (12, 10);
+
+    let reports = run_fleet(fleet.addr(), n_clients, &client_cfg(decisions)).expect("fleet run");
+    assert_eq!(reports.len(), n_clients);
+    for (i, r) in reports.iter().enumerate() {
+        assert_eq!(r.decisions, decisions, "client {i} lost decisions");
+        assert_eq!(r.errors, 0, "client {i} saw rejections");
+        // raw route wire bytes: 4·X² per decision
+        assert_eq!(r.bytes_sent, (decisions * 4 * OBS_X * OBS_X) as u64);
+    }
+
+    let stats = fleet.gateway.stats();
+    let total = (n_clients * decisions) as u64;
+    assert_eq!(stats.assignments.len(), n_clients, "one pin per session");
+    assert_eq!(stats.reassigned, 0, "a session moved between shards");
+    assert_eq!(stats.forwarded_requests, total);
+    assert_eq!(stats.forwarded_responses, total);
+
+    // cross-check affinity against shard-side metrics: every shard served
+    // exactly decisions × (sessions pinned to it) requests
+    let mut accounted = 0u64;
+    for id in fleet.shard_ids() {
+        let pinned = stats.assignments.values().filter(|&&s| s == id).count() as u64;
+        let m = fleet.shard_metrics(id).expect("shard metrics");
+        assert_eq!(m.split.requests, 0);
+        assert_eq!(
+            m.full.requests,
+            pinned * decisions as u64,
+            "{id}: requests do not match its pinned sessions — affinity broken"
+        );
+        accounted += m.full.requests;
+    }
+    assert_eq!(accounted, total, "requests leaked outside the shard set");
+
+    // merged fleet snapshot sees everything exactly once
+    let snap = fleet.snapshot();
+    assert_eq!(snap.total_requests(), total);
+    assert_eq!(snap.total_dropped(), 0);
+    assert_eq!(snap.merged.full.service.count(), total);
+
+    fleet.shutdown();
+}
+
+#[test]
+fn reconnecting_sessions_land_on_their_original_shard() {
+    let fleet = launch_local(sim_fleet(4)).expect("fleet");
+    let cfg = client_cfg(3);
+    // two separate connections per session id
+    for round in 0..2 {
+        for id in 0..8u32 {
+            let r = run_client(fleet.addr(), id, &cfg)
+                .unwrap_or_else(|e| panic!("round {round} client {id}: {e:#}"));
+            assert_eq!(r.decisions, 3);
+        }
+    }
+    let stats = fleet.gateway.stats();
+    assert_eq!(stats.connections, 16, "8 sessions × 2 connections");
+    assert_eq!(stats.assignments.len(), 8);
+    assert_eq!(stats.reassigned, 0, "a reconnect hashed to a different shard");
+    fleet.shutdown();
+}
+
+#[test]
+fn draining_shard_keeps_serving_but_gets_no_new_sessions() {
+    let fleet = launch_local(sim_fleet(2)).expect("fleet");
+    let cfg = client_cfg(5);
+
+    // place a few sessions, find a shard that owns at least one
+    for id in 0..4u32 {
+        run_client(fleet.addr(), id, &cfg).expect("seed client");
+    }
+    let before = fleet.gateway.stats();
+    let victim = *before.assignments.values().next().expect("no assignments");
+
+    fleet.gateway.drain(victim);
+
+    // fresh sessions must all land elsewhere
+    for id in 100..112u32 {
+        let r = run_client(fleet.addr(), id, &cfg).expect("post-drain client");
+        assert_eq!(r.decisions, 5);
+    }
+    let after = fleet.gateway.stats();
+    for id in 100..112u32 {
+        assert_ne!(
+            after.assignments.get(&id),
+            Some(&victim),
+            "session {id} landed on the draining shard"
+        );
+    }
+    // all clients have disconnected, so the drain completes
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while !fleet.gateway.drained(victim) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "draining shard still holds connections"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn crashed_shard_is_routed_around_without_client_errors_for_new_sessions() {
+    let mut fleet = launch_local(sim_fleet(2)).expect("fleet");
+    let cfg = client_cfg(4);
+
+    // kill shard 1 outright: its listener closes mid-fleet
+    assert!(fleet.stop_shard(ShardId(1)));
+
+    // every new session still completes — the gateway marks the dead shard
+    // Down on the first refused pin and rehashes onto the survivor
+    for id in 0..10u32 {
+        let r = run_client(fleet.addr(), id, &cfg).expect("client after crash");
+        assert_eq!(r.decisions, 4, "client {id} degraded");
+    }
+    let stats = fleet.gateway.stats();
+    for (session, shard) in &stats.assignments {
+        assert_eq!(*shard, ShardId(0), "session {session} pinned to the dead shard");
+    }
+    let states = fleet.gateway.shard_states();
+    let dead = states.iter().find(|(id, ..)| *id == ShardId(1)).expect("dead shard listed");
+    assert_eq!(dead.1, ShardState::Down);
+    fleet.shutdown();
+}
+
+#[test]
+fn health_monitor_detects_a_crash_and_flags_it_down() {
+    let mut cfg = sim_fleet(2);
+    cfg.health = Some(HealthConfig {
+        interval: Duration::from_millis(40),
+        timeout: Duration::from_millis(200),
+        fail_threshold: 2,
+        degraded_after: Duration::from_secs(5),
+    });
+    let mut fleet = launch_local(cfg).expect("fleet");
+    assert!(fleet.stop_shard(ShardId(0)));
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let states = fleet.gateway.shard_states();
+        let s0 = states.iter().find(|(id, ..)| *id == ShardId(0)).unwrap().1;
+        if s0 == ShardState::Down {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "health monitor never marked the crashed shard down"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // the survivor keeps serving
+    let r = run_client(fleet.addr(), 42, &client_cfg(3)).expect("survivor client");
+    assert_eq!(r.decisions, 3);
+    fleet.shutdown();
+}

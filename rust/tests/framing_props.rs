@@ -1,0 +1,182 @@
+//! Property tests for the wire protocol (`net::framing` / `net::tcp`):
+//! encode/decode round-trips over arbitrary messages, the quantisation
+//! error bound, frame-length invariants, and oversized-frame rejection.
+
+use miniconv::net::framing::{Hello, Msg, Payload, Request, Response, MAX_FRAME};
+use miniconv::net::tcp::{read_msg, write_msg};
+use miniconv::net::{dequantize_features, quantize_features};
+use miniconv::util::proptest::{check, prop_assert, Gen};
+
+/// Draw an arbitrary message of any variant.
+fn arb_msg(g: &mut Gen) -> Msg {
+    match g.usize(0, 3) {
+        0 => {
+            let shard = if g.bool() { Some(g.usize(0, u16::MAX as usize) as u16) } else { None };
+            Msg::Hello(Hello {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                split: g.bool(),
+                shard,
+            })
+        }
+        1 => {
+            let x = g.usize(1, 12) as u16;
+            let data = (0..4 * x as usize * x as usize)
+                .map(|_| g.usize(0, 255) as u8)
+                .collect();
+            Msg::Request(Request {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, u64::MAX - 1),
+                payload: Payload::RawRgba { x, data },
+            })
+        }
+        2 => {
+            let (c, h, w) = (g.usize(1, 6), g.usize(1, 8), g.usize(1, 8));
+            let data = (0..c * h * w).map(|_| g.usize(0, 255) as u8).collect();
+            Msg::Request(Request {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                payload: Payload::Features {
+                    c: c as u16,
+                    h: h as u16,
+                    w: w as u16,
+                    scale: g.f64(1e-6, 100.0) as f32,
+                    data,
+                },
+            })
+        }
+        _ => {
+            let n = g.usize(0, 8);
+            Msg::Response(Response {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
+            })
+        }
+    }
+}
+
+#[test]
+fn prop_every_msg_variant_roundtrips() {
+    check(300, |g| {
+        let msg = arb_msg(g);
+        let enc = msg.encode();
+        let dec = Msg::decode(&enc[4..]).map_err(|e| format!("decode failed: {e}"))?;
+        prop_assert(dec == msg, format!("roundtrip changed the message: {msg:?}"))
+    });
+}
+
+#[test]
+fn prop_length_prefix_matches_frame_body() {
+    check(300, |g| {
+        let enc = arb_msg(g).encode();
+        let len = u32::from_le_bytes(enc[0..4].try_into().unwrap()) as usize;
+        prop_assert(len == enc.len() - 4, format!("prefix {len} != body {}", enc.len() - 4))?;
+        prop_assert(len <= MAX_FRAME, "frame exceeds MAX_FRAME")
+    });
+}
+
+#[test]
+fn prop_truncated_frames_are_rejected() {
+    check(200, |g| {
+        let enc = arb_msg(g).encode();
+        let body = &enc[4..];
+        if body.len() <= 1 {
+            return Ok(());
+        }
+        let cut = g.usize(1, body.len() - 1);
+        prop_assert(
+            Msg::decode(&body[..cut]).is_err(),
+            format!("decode accepted a {cut}-byte truncation of {} bytes", body.len()),
+        )
+    });
+}
+
+#[test]
+fn prop_trailing_garbage_is_rejected() {
+    check(200, |g| {
+        let enc = arb_msg(g).encode();
+        let mut body = enc[4..].to_vec();
+        body.push(g.usize(0, 255) as u8);
+        prop_assert(Msg::decode(&body).is_err(), "decode accepted trailing bytes")
+    });
+}
+
+#[test]
+fn prop_transport_rejects_frames_above_max_frame() {
+    check(100, |g| {
+        // forge a header claiming an oversized (or zero) body
+        let len = if g.bool() {
+            g.u64(MAX_FRAME as u64 + 1, u32::MAX as u64) as u32
+        } else {
+            0
+        };
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&len.to_le_bytes());
+        wire.push(1);
+        let mut cursor = std::io::Cursor::new(wire);
+        prop_assert(
+            read_msg(&mut cursor).is_err(),
+            format!("transport accepted a frame of claimed length {len}"),
+        )
+    });
+}
+
+#[test]
+fn prop_transport_roundtrips_message_streams() {
+    check(60, |g| {
+        let n = g.usize(1, 6);
+        let msgs: Vec<Msg> = (0..n).map(|_| arb_msg(g)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_msg(&mut wire, m).map_err(|e| format!("write: {e}"))?;
+        }
+        let mut cursor = std::io::Cursor::new(wire);
+        for (i, m) in msgs.iter().enumerate() {
+            let got = read_msg(&mut cursor)
+                .map_err(|e| format!("read {i}: {e}"))?
+                .ok_or_else(|| format!("early EOF at {i}"))?;
+            prop_assert(&got == m, format!("message {i} mutated in transit"))?;
+        }
+        prop_assert(
+            read_msg(&mut cursor).map_err(|e| e.to_string())?.is_none(),
+            "stream did not end cleanly",
+        )
+    });
+}
+
+#[test]
+fn prop_quantization_error_within_half_step_of_scale() {
+    check(300, |g| {
+        let n = g.usize(1, 256);
+        // post-ReLU features: non-negative, arbitrary magnitude
+        let mag = g.f64(1e-4, 1e4);
+        let feat: Vec<f32> = (0..n).map(|_| g.f64(0.0, mag) as f32).collect();
+        let (scale, q) = quantize_features(&feat);
+        prop_assert(scale > 0.0, "scale must be positive")?;
+        let back = dequantize_features(scale, &q);
+        prop_assert(back.len() == feat.len(), "length changed")?;
+        let step = scale / 255.0;
+        for (a, b) in feat.iter().zip(&back) {
+            let err = (a - b).abs();
+            prop_assert(
+                err <= step * 0.5 + scale * 1e-6,
+                format!("|{a} - {b}| = {err} > half step {}", step * 0.5),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_is_exact_at_zero_and_scale() {
+    check(100, |g| {
+        let n = g.usize(2, 64);
+        let peak = g.f64(1e-3, 1e3) as f32;
+        let mut feat = vec![0.0f32; n];
+        feat[0] = peak;
+        let (scale, q) = quantize_features(&feat);
+        prop_assert((scale - peak).abs() <= peak * 1e-6, "scale should be the max")?;
+        prop_assert(q[0] == 255, "peak must quantise to 255")?;
+        prop_assert(q[1..].iter().all(|&b| b == 0), "zeros must quantise to 0")
+    });
+}
