@@ -42,6 +42,9 @@ fn run_point(shards: usize, clients: usize, decisions: usize) -> Point {
                 fixed: Duration::from_millis(4),
                 per_item: Duration::from_millis(1),
                 action_dim: 1,
+                // shards run the real compiled encoder inside the modelled
+                // budget, so the sweep stresses the genuine hot path
+                encode: true,
             }),
             ..ServerConfig::default()
         },

@@ -1,16 +1,58 @@
 //! Hot-path micro-benchmarks (the criterion substitute): per-component
 //! timings of everything on the serving request path, used by the §Perf
 //! iteration log in EXPERIMENTS.md.
+//!
+//! Section 1 (always runs, artifact-free): legacy shader interpreter vs
+//! the precompiled pipeline on the default 84x84 MiniConv plans — Float
+//! and Rgba8 at 1/2/4 threads — plus a steady-state allocation count from
+//! a counting global allocator. Results are written to
+//! `BENCH_hotpath.json` (override the path with `BENCH_HOTPATH_OUT`) so
+//! the perf trajectory is machine-readable from this PR onward.
+//!
+//! Section 2 (requires `make artifacts`): XLA encoder/head/full-CNN and
+//! wire-path timings, unchanged.
 
 use std::time::Instant;
 
 use miniconv::envs::{CropMode, Env, Pendulum, PixelPipeline};
-use miniconv::net::framing::{Msg, Payload, Request};
+use miniconv::experiments::execution::{miniconv4_ir, miniconv16_ir};
+use miniconv::experiments::hotpath::{run_hotpath, synthetic_frame, synthetic_weights};
+use miniconv::net::framing::{quantize_features_into, Msg, Payload, Request};
 use miniconv::net::quantize_features;
 use miniconv::runtime::{default_artifact_dir, Runtime, Value};
-use miniconv::shader::{pipeline_from_manifest, TextureFormat};
+use miniconv::shader::{
+    pipeline_from_manifest, plan, unpack_conv_weights, CompiledPipeline, TextureFormat,
+};
+use miniconv::tensor::Chw;
+use miniconv::util::alloc_counter::CountingAlloc;
 use miniconv::util::rng::Rng;
 use miniconv::util::tables::Table;
+
+// counts heap allocations so the zero-allocation claim is measured, not
+// asserted by inspection (shared impl: util::alloc_counter)
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations across `frames` steady-state compiled frames (threads = 1).
+fn steady_state_allocs(x: usize, frames: usize) -> u64 {
+    let ir = miniconv4_ir();
+    let p = plan(&ir, x).expect("plan");
+    let flat = synthetic_weights(&ir, 1);
+    let ws = unpack_conv_weights(&ir, &flat).expect("weights");
+    let mut pipe = CompiledPipeline::new(p, ws, TextureFormat::Float).expect("compile");
+    let frame = synthetic_frame(ir.input_channels, x, 2);
+    let mut out = Chw::zeros(1, 1, 1);
+    // warm the arena and the output buffer, then count
+    for _ in 0..3 {
+        pipe.run_into(&frame, &mut out).expect("warmup frame");
+    }
+    let before = CountingAlloc::count();
+    for _ in 0..frames {
+        pipe.run_into(&frame, &mut out).expect("frame");
+    }
+    std::hint::black_box(&out);
+    CountingAlloc::count() - before
+}
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
     // warmup
@@ -26,12 +68,85 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
 }
 
 fn main() {
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("micro_hotpath: no artifacts — run `make artifacts`");
-        return;
+    // -- section 1: legacy vs compiled interpreter (artifact-free) --------
+    let x = 84;
+    let threads = [1usize, 2, 4];
+    let mut t = Table::new(
+        "shader hot path — legacy interpreter vs compiled pipeline (84²)",
+        &["arch", "format", "engine", "threads", "frames/s", "ns/pass", "speedup"],
+    );
+    let mut report4 = run_hotpath(&miniconv4_ir(), x, 40, &threads).expect("hotpath miniconv4");
+    let frames = 200;
+    let allocs = steady_state_allocs(x, frames);
+    // ceiling division: even one allocation per few hundred frames must
+    // show up as nonzero rather than rounding the gate green
+    report4.allocs_per_frame = Some(allocs.div_ceil(frames as u64));
+    let report16 = run_hotpath(&miniconv16_ir(), x, 15, &threads).expect("hotpath miniconv16");
+
+    for rep in [&report4, &report16] {
+        for r in &rep.rows {
+            let speedup = if r.engine == "compiled" {
+                let legacy = rep
+                    .rows
+                    .iter()
+                    .find(|l| l.format == r.format && l.engine == "legacy")
+                    .map(|l| l.frames_per_sec)
+                    .unwrap_or(0.0);
+                format!("{:.2}x", r.frames_per_sec / legacy.max(1e-12))
+            } else {
+                "1.00x".into()
+            };
+            t.row(&[
+                rep.arch.clone(),
+                r.format.clone(),
+                r.engine.clone(),
+                r.threads.to_string(),
+                format!("{:.1}", r.frames_per_sec),
+                format!("{:.0}", r.ns_per_pass),
+                speedup,
+            ]);
+        }
     }
-    let rt = Runtime::new(&dir).expect("runtime");
+    t.print();
+    println!(
+        "steady-state allocations: {allocs} total over {frames} compiled frames (threads=1)"
+    );
+    println!(
+        "single-thread speedup (miniconv4): float {:.2}x, rgba8 {:.2}x",
+        report4.speedup_float_1t, report4.speedup_rgba8_1t
+    );
+
+    let out_path =
+        std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&out_path, report4.to_json()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // the acceptance gates are enforced, not just printed: regressions must
+    // turn this bench red for whoever runs it
+    let mut failed = false;
+    if allocs > 0 {
+        eprintln!("FAIL: {allocs} steady-state allocations over {frames} frames (gate: 0)");
+        failed = true;
+    }
+    for (fmt, sp) in
+        [("float", report4.speedup_float_1t), ("rgba8", report4.speedup_rgba8_1t)]
+    {
+        if sp < 2.0 {
+            eprintln!("FAIL: {fmt} single-thread speedup {sp:.2}x is under the 2.00x gate");
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+
+    // -- section 2: PJRT artifacts (skipped when absent) -------------------
+    let Some(rt) = Runtime::try_new(&default_artifact_dir()) else {
+        println!("micro_hotpath: no artifacts — XLA/wire sections skipped (run `make artifacts`)");
+        return;
+    };
     let x = rt.manifest.serve_x;
     let mut rows: Vec<(String, f64)> = Vec::new();
 
@@ -58,6 +173,12 @@ fn main() {
     let obs_chw = pipe.obs_chw();
     rows.push(bench("shader interp encode (miniconv4, 84²)", 50, || {
         std::hint::black_box(shader.run(&obs_chw).unwrap());
+    }));
+    let mut compiled = CompiledPipeline::from_legacy(&shader).expect("compile");
+    let mut feat = Chw::zeros(1, 1, 1);
+    rows.push(bench("compiled encode (miniconv4, 84²)", 200, || {
+        compiled.run_into(&obs_chw, &mut feat).unwrap();
+        std::hint::black_box(&feat);
     }));
 
     // -- XLA encoder + heads ----------------------------------------------
@@ -104,6 +225,10 @@ fn main() {
     let feat_flat: Vec<f32> = (0..4 * s * s).map(|i| (i % 17) as f32 * 0.1).collect();
     rows.push(bench("quantize features to u8", 1000, || {
         std::hint::black_box(quantize_features(&feat_flat));
+    }));
+    let mut q_buf = Vec::new();
+    rows.push(bench("quantize features (reused buffer)", 1000, || {
+        std::hint::black_box(quantize_features_into(&feat_flat, &mut q_buf));
     }));
     let (scale, q) = quantize_features(&feat_flat);
     let msg = Msg::Request(Request {

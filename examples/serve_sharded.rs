@@ -31,6 +31,7 @@ fn main() -> Result<()> {
             fixed: Duration::from_millis(1),
             per_item: Duration::from_micros(300),
             action_dim: 1,
+            encode: true,
         })
     };
 

@@ -1,0 +1,109 @@
+"""Cross-check for rust/src/shader/compiled.rs interior/border math.
+
+Mirrors, in pure Python, the legacy interpreter's per-pixel conv/pool
+(checked border-zero fetch at every tap) and the compiled pipeline's
+interior/border split (interior pixels read unchecked), and asserts the
+two produce identical outputs over a sweep of shapes. Run directly:
+
+    python3 python/check_compiled_regions.py
+"""
+
+import random
+
+
+def interior_axis(out_dim, in_dim, k, stride, pad):
+    lo = -(-pad // stride)  # ceil div
+    if in_dim + pad < k:
+        return (0, 0)
+    hi = min((in_dim + pad - k) // stride + 1, out_dim)
+    return (0, 0) if lo >= hi else (lo, hi)
+
+
+def conv_legacy(inp, in_h, in_w, out_h, out_w, k, stride, pad):
+    out = [0.0] * (out_h * out_w)
+    for oy in range(out_h):
+        for ox in range(out_w):
+            acc = 0.0
+            iy0 = oy * stride - pad
+            ix0 = ox * stride - pad
+            for ky in range(k):
+                for kx in range(k):
+                    y, x = iy0 + ky, ix0 + kx
+                    v = inp[y * in_w + x] if 0 <= y < in_h and 0 <= x < in_w else 0.0
+                    acc += v * ((ky * k + kx) % 7 + 1)  # stand-in weights
+            out[oy * out_w + ox] = acc
+    return out
+
+
+def conv_compiled(inp, in_h, in_w, out_h, out_w, k, stride, pad):
+    out = [None] * (out_h * out_w)
+    oy0, oy1 = interior_axis(out_h, in_h, k, stride, pad)
+    ox0, ox1 = interior_axis(out_w, in_w, k, stride, pad)
+    interior = oy0 < oy1 and ox0 < ox1
+    top_end, bot_start = (oy0, oy1) if interior else (out_h, out_h)
+
+    def border_px(oy, ox):
+        acc = 0.0
+        iy0 = oy * stride - pad
+        ix0 = ox * stride - pad
+        for ky in range(k):
+            for kx in range(k):
+                y, x = iy0 + ky, ix0 + kx
+                v = inp[y * in_w + x] if 0 <= y < in_h and 0 <= x < in_w else 0.0
+                acc += v * ((ky * k + kx) % 7 + 1)
+        return acc
+
+    for oy in list(range(top_end)) + list(range(bot_start, out_h)):
+        for ox in range(out_w):
+            out[oy * out_w + ox] = border_px(oy, ox)
+    if interior:
+        for oy in range(oy0, oy1):
+            for ox in list(range(ox0)) + list(range(ox1, out_w)):
+                out[oy * out_w + ox] = border_px(oy, ox)
+        for oy in range(oy0, oy1):
+            iy0 = oy * stride - pad
+            assert iy0 >= 0, (oy, stride, pad)
+            for ox in range(ox0, ox1):
+                ix0 = ox * stride - pad
+                assert ix0 >= 0
+                acc = 0.0
+                for ky in range(k):
+                    row = iy0 + ky
+                    assert row < in_h, (row, in_h, oy, k, stride, pad)
+                    for kx in range(k):
+                        col = ix0 + kx
+                        assert col < in_w
+                        acc += inp[row * in_w + col] * ((ky * k + kx) % 7 + 1)
+                out[oy * out_w + ox] = acc
+    assert all(v is not None for v in out), "pixel not covered exactly once"
+    return out
+
+
+def main():
+    rng = random.Random(0)
+    checked = 0
+    for in_h in range(1, 30):
+        in_w = in_h
+        for k in (1, 2, 3, 4):
+            for stride in (1, 2, 3):
+                for same in (True, False):
+                    if same:
+                        out_h = -(-in_h // stride)
+                        out_w = -(-in_w // stride)
+                        pad = max((out_h - 1) * stride + k - in_h, 0) // 2
+                    else:
+                        if in_h < k:
+                            continue
+                        out_h = (in_h - k) // stride + 1
+                        out_w = (in_w - k) // stride + 1
+                        pad = 0
+                    inp = [rng.uniform(-1, 1) for _ in range(in_h * in_w)]
+                    a = conv_legacy(inp, in_h, in_w, out_h, out_w, k, stride, pad)
+                    b = conv_compiled(inp, in_h, in_w, out_h, out_w, k, stride, pad)
+                    assert a == b, (in_h, k, stride, same, pad)
+                    checked += 1
+    print(f"OK: {checked} shape/kernel/stride/pad combinations match exactly")
+
+
+if __name__ == "__main__":
+    main()

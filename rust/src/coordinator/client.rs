@@ -22,7 +22,8 @@ use crate::net::framing::{Hello, Msg, Payload, Request};
 use crate::net::shaped::ShapedWriter;
 use crate::net::tcp::{read_msg, write_msg};
 use crate::runtime::Manifest;
-use crate::shader::{pipeline_from_manifest, ShaderPipeline, TextureFormat};
+use crate::shader::{compiled_from_manifest, CompiledPipeline, TextureFormat};
+use crate::tensor::Chw;
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
@@ -113,10 +114,12 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         None => Sender_::Plain(stream),
     };
 
-    // split mode: the real shader-interpreter encoder over manifest params.
-    // server-only mode with a pinned obs_x never touches the manifest, so
-    // Sim-backend fleets run artifact-free.
-    let (shader, feat_k, cost, serve_x): (Option<ShaderPipeline>, usize, Option<FrameCost>, usize) =
+    // split mode: the real compiled shader encoder over manifest params
+    // (the legacy interpreter stays as the test oracle). Server-only mode
+    // with a pinned obs_x never touches the manifest, so Sim-backend
+    // fleets run artifact-free.
+    type SplitSetup = (Option<CompiledPipeline>, usize, Option<FrameCost>, usize);
+    let (mut shader, feat_k, cost, serve_x): SplitSetup =
         if cfg.mode == Route::Split {
             let manifest = Manifest::load(&cfg.artifact_dir)?;
             let serve_x = manifest.serve_x;
@@ -124,7 +127,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
                 .encoders
                 .get(&cfg.arch)
                 .ok_or_else(|| anyhow::anyhow!("unknown arch {}", cfg.arch))?;
-            let pipe = pipeline_from_manifest(
+            let mut pipe = compiled_from_manifest(
                 &manifest,
                 &cfg.arch,
                 serve_meta,
@@ -132,7 +135,11 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
                 &format!("serve_enc_{}", cfg.arch),
                 TextureFormat::Float,
             )?;
-            let cost = FrameCost::from_plan(&pipe.plan);
+            // parallelise independent passes up to the modelled device's cores
+            if let Some(spec) = &cfg.device {
+                pipe.set_threads(spec.cpu_cores);
+            }
+            let cost = FrameCost::from_plan(pipe.plan());
             (Some(pipe), serve_meta.feat_shape[0], Some(cost), serve_x)
         } else {
             let serve_x = match cfg.obs_x {
@@ -159,6 +166,9 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
     let t_run = Instant::now();
     let tick = cfg.rate_hz.map(|hz| Duration::from_secs_f64(1.0 / hz));
     let mut next_tick = Instant::now();
+    // per-frame scratch reused across decisions (steady-state: no growth)
+    let mut feat = Chw::zeros(1, 1, 1);
+    let mut flat: Vec<f32> = Vec::new();
 
     for i in 0..cfg.decisions {
         if let Some(t) = tick {
@@ -171,11 +181,13 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
 
         // observation is now available: the decision clock starts
         let t0 = Instant::now();
-        let payload = match (&shader, &mut device) {
+        let payload = match (&mut shader, &mut device) {
             (Some(pipe), dev) => {
-                // on-device encode (real shader-interpreter execution)
+                // on-device encode (real compiled-shader execution over
+                // reused scratch; single-thread runs are allocation-free,
+                // multi-pass layers at threads>1 pay only the scoped spawns)
                 let enc_t0 = Instant::now();
-                let feat = pipe.run(&pipeline.obs_chw())?;
+                pipe.run_into(&pipeline.obs_chw(), &mut feat)?;
                 let real_encode = enc_t0.elapsed().as_secs_f64();
                 // pad out to the simulated device's encode time
                 let sim_j = dev
@@ -187,8 +199,11 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
                 }
                 report.encode_times.push(real_encode.max(sim_j));
                 // transmit only the K-channel feature map, quantised to u8
+                // (the flatten buffer is reused; the wire buffer must be
+                // owned by the message)
                 let (c, h, w) = (feat_k, feat.h, feat.w);
-                let mut flat = Vec::with_capacity(c * h * w);
+                flat.clear();
+                flat.reserve(c * h * w);
                 for ch in 0..c {
                     for y in 0..h {
                         for x in 0..w {

@@ -69,8 +69,11 @@ pub enum Backend {
     /// real AOT artifacts through the PJRT runtime (requires `make artifacts`)
     Pjrt,
     /// simulated accelerator: real batching/session/metrics machinery, but
-    /// each batch costs `fixed + per_item * n` of executor wall time and
-    /// returns zero actions — serving-path experiments without artifacts
+    /// each batch costs `fixed + per_item * n` of executor wall time —
+    /// serving-path experiments without artifacts. With `encode: true`,
+    /// raw frames additionally run through the real compiled MiniConv-4
+    /// shader pipeline (synthetic weights) and actions are derived from
+    /// the features, so Sim shards exercise the genuine encoder hot path.
     Sim(SimSpec),
 }
 
@@ -83,6 +86,10 @@ pub struct SimSpec {
     pub per_item: Duration,
     /// action vector width returned to clients
     pub action_dim: usize,
+    /// run the compiled MiniConv-4 encoder over each RawRgba observation
+    /// (real compute, folded into the modelled batch cost) instead of
+    /// returning all-zero actions
+    pub encode: bool,
 }
 
 impl Default for SimSpec {
@@ -91,6 +98,7 @@ impl Default for SimSpec {
             fixed: Duration::from_micros(500),
             per_item: Duration::from_micros(150),
             action_dim: 1,
+            encode: false,
         }
     }
 }
@@ -375,6 +383,53 @@ fn executor_pjrt(
     });
 }
 
+/// The Sim backend's real-compute engine: compiled MiniConv-4 pipelines
+/// (synthetic deterministic weights) keyed by observation side length,
+/// plus a reused feature buffer — steady-state encodes don't allocate.
+struct SimEncoder {
+    pipes: HashMap<usize, crate::shader::CompiledPipeline>,
+    feat: crate::tensor::Chw,
+}
+
+impl SimEncoder {
+    fn new() -> Self {
+        SimEncoder { pipes: HashMap::new(), feat: crate::tensor::Chw::zeros(1, 1, 1) }
+    }
+
+    /// Encode a stacked 9×x×x observation; returns `action_dim` per-channel
+    /// feature means (deterministic, real compute).
+    fn encode(&mut self, x: usize, obs: Vec<f32>, action_dim: usize) -> Result<Vec<f32>> {
+        use std::collections::hash_map::Entry;
+        let pipe = match self.pipes.entry(x) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(e) => {
+                let ir = crate::experiments::execution::miniconv4_ir();
+                let plan = crate::shader::plan(&ir, x)?;
+                let mut rng = crate::util::rng::Rng::new(0xC0DE);
+                let flat: Vec<f32> =
+                    (0..ir.param_count()).map(|_| rng.normal_f32() * 0.3).collect();
+                let weights = crate::shader::unpack_conv_weights(&ir, &flat)?;
+                e.insert(crate::shader::CompiledPipeline::new(
+                    plan,
+                    weights,
+                    crate::shader::TextureFormat::Float,
+                )?)
+            }
+        };
+        let obs = crate::tensor::Chw::from_vec(9, x, x, obs);
+        pipe.run_into(&obs, &mut self.feat)?;
+        let feat = &self.feat;
+        let px = feat.h * feat.w;
+        Ok((0..action_dim)
+            .map(|c| {
+                let ch = c % feat.c;
+                let sum: f32 = feat.data[ch * px..(ch + 1) * px].iter().sum();
+                sum / px as f32
+            })
+            .collect())
+    }
+}
+
 fn executor_sim(
     spec: SimSpec,
     cfg: ServerConfig,
@@ -386,18 +441,20 @@ fn executor_sim(
     // no artifacts to stage: ready immediately
     let _ = ready.send(Ok(()));
     let mut sessions = SessionManager::new();
+    let mut encoder = SimEncoder::new();
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
-        run_batch_sim(&spec, route, items, &mut sessions, &metrics)
+        run_batch_sim(&spec, route, items, &mut sessions, &mut encoder, &metrics)
     });
 }
 
 /// Sim-backend batch execution: real session stacking and metrics, modelled
-/// compute time, zero-valued actions.
+/// compute time, and (with `encode`) real compiled-shader encodes.
 fn run_batch_sim(
     spec: &SimSpec,
     route: Route,
     items: Vec<super::batcher::Item<Work>>,
     sessions: &mut SessionManager,
+    encoder: &mut SimEncoder,
     metrics: &Metrics,
 ) -> Result<()> {
     let n = items.len();
@@ -406,26 +463,44 @@ fn run_batch_sim(
         items.iter().map(|i| dequeue.duration_since(i.work.received)).collect();
 
     // raw frames still flow through the per-client frame stack so shard-local
-    // session state stays meaningful under the fleet gateway
-    for item in &items {
+    // session state stays meaningful under the fleet gateway (outside the
+    // modelled window, exactly as before this PR)
+    let mut to_encode: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+    for (i, item) in items.iter().enumerate() {
         if let Payload::RawRgba { x, data } = &item.work.payload {
-            sessions.ingest_rgba(item.work.client, *x as usize, data)?;
+            let obs = sessions.ingest_rgba(item.work.client, *x as usize, data)?;
+            // a zero-sized frame has nothing to encode (and a 0-pixel plan
+            // would be degenerate): fall back to the zero-action reply
+            if spec.encode && *x > 0 {
+                to_encode.push((i, *x as usize, obs));
+            }
         }
     }
 
-    // the modelled accelerator: launch overhead + linear per-item cost
+    // the modelled accelerator: launch overhead + linear per-item cost.
+    // Real compiled-shader encodes run inside the window and only their
+    // own time is deducted, so encode:false batches sleep the full budget.
     let t_exec = Instant::now();
-    std::thread::sleep(spec.fixed + spec.per_item * n as u32);
+    let mut actions: HashMap<usize, Vec<f32>> = HashMap::new();
+    for (i, x, obs) in to_encode {
+        actions.insert(i, encoder.encode(x, obs, spec.action_dim)?);
+    }
+    let modelled = spec.fixed + spec.per_item * n as u32;
+    let spent = t_exec.elapsed();
+    if modelled > spent {
+        std::thread::sleep(modelled - spent);
+    }
     let exec_time = t_exec.elapsed();
 
     let services: Vec<Duration> = items.iter().map(|i| i.work.received.elapsed()).collect();
     metrics.record_batch(route, n, 0, &queue_waits, exec_time, &services);
 
-    for item in &items {
+    for (i, item) in items.iter().enumerate() {
+        let action = actions.remove(&i).unwrap_or_else(|| vec![0.0; spec.action_dim]);
         let resp = Msg::Response(Response {
             client: item.work.client,
             id: item.work.id,
-            action: vec![0.0; spec.action_dim],
+            action,
         });
         let mut w = item.work.reply.lock().unwrap();
         if let Err(e) = write_msg(&mut *w, &resp) {
@@ -471,8 +546,10 @@ fn run_batch(
             }
             Payload::Features { scale, data: q, .. } => {
                 anyhow::ensure!(q.len() == per_item, "feat len {} != {per_item}", q.len());
+                // hoist the per-byte div out of the dequant loop
+                let step = scale / 255.0;
                 for (o, &byte) in dst.iter_mut().zip(q.iter()) {
-                    *o = byte as f32 / 255.0 * scale;
+                    *o = byte as f32 * step;
                 }
             }
         }

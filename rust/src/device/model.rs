@@ -31,6 +31,9 @@ pub enum ExecPath {
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {
     pub name: &'static str,
+    /// CPU core count — sizes the compiled interpreter's worker pool when
+    /// the software path stands in for this device
+    pub cpu_cores: usize,
     /// GL texture-sample throughput at full clock, samples/s
     pub gpu_samples_per_sec: f64,
     /// fixed cost per shader pass (draw call, FBO bind), s
@@ -215,6 +218,7 @@ mod tests {
     fn toy_spec() -> DeviceSpec {
         DeviceSpec {
             name: "toy",
+            cpu_cores: 4,
             gpu_samples_per_sec: 10e6,
             pass_overhead: 1e-4,
             upload_bytes_per_sec: 100e6,

@@ -18,6 +18,7 @@ use super::thermal::ThermalModel;
 pub fn pi_zero_2w() -> DeviceSpec {
     DeviceSpec {
         name: "pi-zero-2w",
+        cpu_cores: 4, // quad-A53
         gpu_samples_per_sec: 12.0e6,
         pass_overhead: 0.3e-3,
         upload_bytes_per_sec: 250e6,
@@ -40,6 +41,7 @@ pub fn pi_zero_2w() -> DeviceSpec {
 pub fn pi_4b() -> DeviceSpec {
     DeviceSpec {
         name: "pi-4b",
+        cpu_cores: 4, // quad-A72
         gpu_samples_per_sec: 55.0e6,
         pass_overhead: 0.2e-3,
         upload_bytes_per_sec: 800e6,
@@ -63,6 +65,7 @@ pub fn pi_4b() -> DeviceSpec {
 pub fn jetson_nano(power_cap_watts: Option<f64>) -> DeviceSpec {
     DeviceSpec {
         name: "jetson-nano",
+        cpu_cores: 4, // quad-A57
         gpu_samples_per_sec: 300.0e6,
         pass_overhead: 0.15e-3,
         upload_bytes_per_sec: 2.0e9,

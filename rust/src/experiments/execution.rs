@@ -21,6 +21,18 @@ pub fn miniconv4_ir() -> EncoderIr {
     }
 }
 
+/// The wide variant: MiniConv-16 (4 passes per layer — the multi-pass
+/// layer shape the parallel hot path fans out over).
+pub fn miniconv16_ir() -> EncoderIr {
+    EncoderIr {
+        name: "miniconv16".into(),
+        input_channels: 9,
+        ops: (0..3)
+            .flat_map(|_| vec![Op::Conv { cout: 16, k: 3, stride: 2, same: true }, Op::Relu])
+            .collect(),
+    }
+}
+
 pub fn frame_cost(x: usize) -> FrameCost {
     FrameCost::from_plan(&plan(&miniconv4_ir(), x).expect("miniconv4 plan"))
 }

@@ -1,0 +1,232 @@
+//! Hot-path harness: legacy interpreter vs compiled pipeline, artifact-free.
+//!
+//! Builds the MiniConv encoder plan with synthetic deterministic weights,
+//! runs both engines on the same frames, and reports frames/sec and
+//! ns/pass per (format, engine, threads) cell plus the single-thread
+//! speedups the perf trajectory is tracked by. `benches/micro_hotpath.rs`
+//! wraps this into a before/after table and emits `BENCH_hotpath.json`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::shader::{plan, CompiledPipeline, EncoderIr, ShaderPipeline, TextureFormat};
+use crate::shader::{unpack_conv_weights, ConvWeights, PassPlan};
+use crate::tensor::Chw;
+use crate::util::rng::Rng;
+
+/// One measured cell of the hot-path matrix.
+#[derive(Debug, Clone)]
+pub struct HotpathRow {
+    /// "float" | "rgba8"
+    pub format: String,
+    /// "legacy" | "compiled"
+    pub engine: String,
+    pub threads: usize,
+    pub frames_per_sec: f64,
+    pub ns_per_pass: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    pub arch: String,
+    pub input_x: usize,
+    pub iters: usize,
+    pub n_passes: usize,
+    pub rows: Vec<HotpathRow>,
+    /// compiled/legacy single-thread frames-per-sec ratios
+    pub speedup_float_1t: f64,
+    pub speedup_rgba8_1t: f64,
+    /// heap allocations per steady-state compiled frame (threads = 1),
+    /// measured by the bench binary's counting allocator; None when the
+    /// harness runs without one
+    pub allocs_per_frame: Option<u64>,
+}
+
+/// Deterministic synthetic weights (same distribution the parity tests use).
+pub fn synthetic_weights(ir: &EncoderIr, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..ir.param_count()).map(|_| rng.normal_f32() * 0.3).collect()
+}
+
+/// Deterministic u8-quantised frame in `[0,1]`, like a rendered camera frame.
+pub fn synthetic_frame(c: usize, x: usize, seed: u64) -> Chw {
+    let mut rng = Rng::new(seed);
+    let mut f = Chw::zeros(c, x, x);
+    for v in f.data.iter_mut() {
+        *v = (rng.uniform() * 255.0).round() as f32 / 255.0;
+    }
+    f
+}
+
+fn time_frames<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    for _ in 0..(iters / 10).max(1) {
+        f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_rows(
+    rows: &mut Vec<HotpathRow>,
+    format: &str,
+    plan: &PassPlan,
+    weights: &[ConvWeights],
+    tex_format: &TextureFormat,
+    frame: &Chw,
+    iters: usize,
+    threads: &[usize],
+) -> Result<()> {
+    let n_passes = plan.passes.len();
+    let legacy = ShaderPipeline::new(plan.clone(), weights.to_vec(), tex_format.clone())?;
+    let per = time_frames(iters, || {
+        std::hint::black_box(legacy.run(frame).unwrap());
+    });
+    rows.push(HotpathRow {
+        format: format.into(),
+        engine: "legacy".into(),
+        threads: 1,
+        frames_per_sec: 1.0 / per,
+        ns_per_pass: per * 1e9 / n_passes as f64,
+    });
+    for &t in threads {
+        let mut compiled =
+            CompiledPipeline::new(plan.clone(), weights.to_vec(), tex_format.clone())?;
+        compiled.set_threads(t);
+        let mut out = Chw::zeros(1, 1, 1);
+        let per = time_frames(iters, || {
+            compiled.run_into(frame, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        rows.push(HotpathRow {
+            format: format.into(),
+            engine: "compiled".into(),
+            threads: t,
+            frames_per_sec: 1.0 / per,
+            ns_per_pass: per * 1e9 / n_passes as f64,
+        });
+    }
+    Ok(())
+}
+
+fn speedup(rows: &[HotpathRow], format: &str) -> f64 {
+    let fps = |engine: &str| {
+        rows.iter()
+            .find(|r| r.format == format && r.engine == engine && r.threads == 1)
+            .map(|r| r.frames_per_sec)
+            .unwrap_or(0.0)
+    };
+    let legacy = fps("legacy");
+    if legacy > 0.0 {
+        fps("compiled") / legacy
+    } else {
+        0.0
+    }
+}
+
+/// Run the full matrix for one encoder IR at input size `x`: Float and
+/// Rgba8 (scales calibrated on the bench frame), legacy vs compiled at
+/// each thread count in `threads`.
+pub fn run_hotpath(
+    ir: &EncoderIr,
+    x: usize,
+    iters: usize,
+    threads: &[usize],
+) -> Result<HotpathReport> {
+    let p = plan(ir, x).map_err(|e| anyhow::anyhow!("plan: {e}"))?;
+    let flat = synthetic_weights(ir, 1);
+    let weights = unpack_conv_weights(ir, &flat)?;
+    let frame = synthetic_frame(ir.input_channels, x, 2);
+    let scales = ShaderPipeline::calibrate(&p, &weights, &frame)?;
+
+    let mut rows = Vec::new();
+    push_rows(&mut rows, "float", &p, &weights, &TextureFormat::Float, &frame, iters, threads)?;
+    push_rows(
+        &mut rows,
+        "rgba8",
+        &p,
+        &weights,
+        &TextureFormat::Rgba8 { scales },
+        &frame,
+        iters,
+        threads,
+    )?;
+
+    let speedup_float_1t = speedup(&rows, "float");
+    let speedup_rgba8_1t = speedup(&rows, "rgba8");
+    Ok(HotpathReport {
+        arch: ir.name.clone(),
+        input_x: x,
+        iters,
+        n_passes: p.passes.len(),
+        rows,
+        speedup_float_1t,
+        speedup_rgba8_1t,
+        allocs_per_frame: None,
+    })
+}
+
+impl HotpathReport {
+    /// Machine-readable record for `BENCH_hotpath.json` (no serde offline —
+    /// hand-rolled, stable field order).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"bench\": \"micro_hotpath\",\n");
+        s.push_str(&format!("  \"arch\": \"{}\",\n", self.arch));
+        s.push_str(&format!("  \"input_x\": {},\n", self.input_x));
+        s.push_str(&format!("  \"iters\": {},\n", self.iters));
+        s.push_str(&format!("  \"n_passes\": {},\n", self.n_passes));
+        s.push_str(&format!("  \"speedup_float_1t\": {:.3},\n", self.speedup_float_1t));
+        s.push_str(&format!("  \"speedup_rgba8_1t\": {:.3},\n", self.speedup_rgba8_1t));
+        match self.allocs_per_frame {
+            Some(n) => s.push_str(&format!("  \"steady_state_allocs_per_frame\": {n},\n")),
+            None => s.push_str("  \"steady_state_allocs_per_frame\": null,\n"),
+        }
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"format\": \"{}\", \"engine\": \"{}\", \"threads\": {}, \
+                 \"frames_per_sec\": {:.1}, \"ns_per_pass\": {:.0}}}{}\n",
+                r.format,
+                r.engine,
+                r.threads,
+                r.frames_per_sec,
+                r.ns_per_pass,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::execution::miniconv4_ir;
+
+    #[test]
+    fn harness_measures_all_cells() {
+        // tiny input + few iters: shape check, not a perf assertion
+        let rep = run_hotpath(&miniconv4_ir(), 24, 3, &[1, 2]).unwrap();
+        assert_eq!(rep.rows.len(), 2 * 3); // 2 formats x (legacy + 2 compiled)
+        assert!(rep.rows.iter().all(|r| r.frames_per_sec > 0.0));
+        assert!(rep.speedup_float_1t > 0.0);
+        let json = rep.to_json();
+        assert!(json.contains("\"speedup_float_1t\""));
+        assert!(json.contains("\"engine\": \"compiled\""));
+        assert!(json.contains("\"steady_state_allocs_per_frame\": null"));
+    }
+
+    #[test]
+    fn synthetic_inputs_deterministic() {
+        let ir = miniconv4_ir();
+        assert_eq!(synthetic_weights(&ir, 5), synthetic_weights(&ir, 5));
+        assert_eq!(synthetic_frame(9, 8, 5).data, synthetic_frame(9, 8, 5).data);
+    }
+}

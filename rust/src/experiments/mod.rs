@@ -4,9 +4,11 @@
 //! results are diffable against EXPERIMENTS.md.
 
 pub mod execution;
+pub mod hotpath;
 pub mod learning;
 pub mod serving;
 
 pub use execution::{fig2_framesize, fig3_sustained, fig4_resources, SustainedTrace};
+pub use hotpath::{run_hotpath, HotpathReport, HotpathRow};
 pub use learning::{learning_table, table1_algorithms, LearningScale};
 pub use serving::{fig5_breakdown, table5_latency_sim, table6_scalability_sim, ServerCostModel};

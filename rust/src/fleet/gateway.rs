@@ -381,6 +381,7 @@ mod tests {
                 fixed: Duration::from_micros(200),
                 per_item: Duration::from_micros(50),
                 action_dim: 1,
+                encode: false,
             }),
             ..ServerConfig::default()
         })

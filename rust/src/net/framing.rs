@@ -221,13 +221,27 @@ impl Msg {
 }
 
 /// Quantise a float feature map (post-ReLU, >= 0) to u8 with its max as
+/// scale, writing into a caller-owned buffer (cleared, then filled;
+/// allocates only if capacity is short). The per-pixel division is
+/// replaced by one precomputed scale reciprocal. Callers that keep the
+/// buffer across frames (bench loops, telemetry) get true reuse; the wire
+/// path hands buffer ownership to the message, so it goes through the
+/// allocating [`quantize_features`] wrapper and benefits from the
+/// reciprocal only.
+pub fn quantize_features_into(feat: &[f32], out: &mut Vec<u8>) -> f32 {
+    let scale = feat.iter().fold(0.0f32, |a, &b| a.max(b)).max(1e-6);
+    let inv = 255.0 / scale;
+    out.clear();
+    out.reserve(feat.len());
+    out.extend(feat.iter().map(|&v| (v * inv).clamp(0.0, 255.0).round() as u8));
+    scale
+}
+
+/// Quantise a float feature map (post-ReLU, >= 0) to u8 with its max as
 /// scale — the uint8 feature buffer the paper transmits.
 pub fn quantize_features(feat: &[f32]) -> (f32, Vec<u8>) {
-    let scale = feat.iter().fold(0.0f32, |a, &b| a.max(b)).max(1e-6);
-    let data = feat
-        .iter()
-        .map(|&v| ((v / scale).clamp(0.0, 1.0) * 255.0).round() as u8)
-        .collect();
+    let mut data = Vec::new();
+    let scale = quantize_features_into(feat, &mut data);
     (scale, data)
 }
 
@@ -318,6 +332,22 @@ mod tests {
         for (a, b) in feat.iter().zip(&back) {
             assert!((a - b).abs() <= scale / 255.0 * 0.5 + 1e-6, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn quantize_into_reuses_buffer_and_matches_wrapper() {
+        let feat: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11) % 3.0).collect();
+        let (scale_a, q_a) = quantize_features(&feat);
+        let mut buf = Vec::new();
+        let scale_b = quantize_features_into(&feat, &mut buf);
+        assert_eq!(scale_a, scale_b);
+        assert_eq!(q_a, buf);
+        // refill with a shorter input: buffer shrinks logically, keeps capacity
+        let cap = buf.capacity();
+        let short = [0.5f32; 8];
+        quantize_features_into(&short, &mut buf);
+        assert_eq!(buf.len(), 8);
+        assert!(buf.capacity() >= cap);
     }
 
     #[test]

@@ -7,6 +7,9 @@ pub mod framing;
 pub mod shaped;
 pub mod tcp;
 
-pub use framing::{dequantize_features, quantize_features, Hello, Msg, Payload, Request, Response};
+pub use framing::{
+    dequantize_features, quantize_features, quantize_features_into, Hello, Msg, Payload, Request,
+    Response,
+};
 pub use shaped::{LinkModel, ShapedWriter, TokenBucket};
 pub use tcp::{read_msg, write_msg};

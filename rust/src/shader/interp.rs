@@ -91,31 +91,96 @@ fn store(h: usize, w: usize, vals: Vec<[f32; 4]>, fmt: Option<f32>) -> Tex {
     }
 }
 
+/// Weights for one pass as tap-major mat4 blocks (what the GLSL uniform
+/// array holds): W[tap][in_block] is a 4x4 matrix out<-in. Shared by the
+/// legacy interpreter and the compiled pipeline so both paths read the
+/// exact same per-tap matrices.
+pub(crate) fn tap_major_mats(
+    w: &ConvWeights,
+    out_block: usize,
+    n_in: usize,
+    k: usize,
+) -> (Vec<[[f32; 4]; 4]>, [f32; 4]) {
+    let mut mats = Vec::with_capacity(k * k * n_in);
+    for ky in 0..k {
+        for kx in 0..k {
+            for ib in 0..n_in {
+                let mut m = [[0.0f32; 4]; 4]; // m[out][in]
+                for o in 0..4 {
+                    let oc = out_block * 4 + o;
+                    if oc >= w.cout {
+                        continue;
+                    }
+                    for i in 0..4 {
+                        let ic = ib * 4 + i;
+                        if ic >= w.cin {
+                            continue;
+                        }
+                        m[o][i] = w.w[((oc * w.cin + ic) * k + ky) * k + kx];
+                    }
+                }
+                mats.push(m);
+            }
+        }
+    }
+    let mut bias = [0.0f32; 4];
+    for o in 0..4 {
+        let oc = out_block * 4 + o;
+        if oc < w.cout {
+            bias[o] = w.b[oc];
+        }
+    }
+    (mats, bias)
+}
+
+/// Sorted conv-layer ids of a plan (one weight set per entry).
+pub(crate) fn conv_layers_of(plan: &PassPlan) -> Vec<usize> {
+    plan.passes
+        .iter()
+        .filter(|p| matches!(p.kind, PassKind::Conv { .. }))
+        .map(|p| p.layer)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect()
+}
+
+/// Validate one weight set per conv layer and build the conv layer id →
+/// weight index map — shared by both pipeline constructors so the oracle
+/// and the compiled hot path can never drift on this rule.
+pub(crate) fn conv_index_checked(
+    plan: &PassPlan,
+    weights: &[ConvWeights],
+) -> Result<std::collections::BTreeMap<usize, usize>> {
+    let conv_layers = conv_layers_of(plan);
+    anyhow::ensure!(
+        conv_layers.len() == weights.len(),
+        "plan has {} conv layers, {} weight sets given",
+        conv_layers.len(),
+        weights.len()
+    );
+    Ok(conv_layers.iter().enumerate().map(|(i, &l)| (l, i)).collect())
+}
+
 /// The GL pipeline state for one encoder: plan + per-layer weights.
 pub struct ShaderPipeline {
     pub plan: PassPlan,
     weights: Vec<ConvWeights>,
     pub format: TextureFormat,
+    /// conv layer id -> index into `weights`, built once at construction so
+    /// the per-pass hot path never rescans the plan.
+    conv_index: std::collections::BTreeMap<usize, usize>,
 }
 
 impl ShaderPipeline {
     pub fn new(plan: PassPlan, weights: Vec<ConvWeights>, format: TextureFormat) -> Result<Self> {
         // one ConvWeights per conv layer in the plan
-        let conv_layers: Vec<usize> = plan
-            .passes
-            .iter()
-            .filter(|p| matches!(p.kind, PassKind::Conv { .. }))
-            .map(|p| p.layer)
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect();
-        anyhow::ensure!(
-            conv_layers.len() == weights.len(),
-            "plan has {} conv layers, {} weight sets given",
-            conv_layers.len(),
-            weights.len()
-        );
-        Ok(ShaderPipeline { plan, weights, format })
+        let conv_index = conv_index_checked(&plan, &weights)?;
+        Ok(ShaderPipeline { plan, weights, format, conv_index })
+    }
+
+    /// Per-layer conv weights (for compiling this pipeline).
+    pub fn weights(&self) -> &[ConvWeights] {
+        &self.weights
     }
 
     fn layer_scale(&self, layer: usize) -> Option<f32> {
@@ -151,51 +216,11 @@ impl ShaderPipeline {
             .collect()
     }
 
-    /// Weights for one pass as tap-major mat4 blocks (what the GLSL uniform
-    /// array holds): W[tap][in_block] is a 4x4 matrix out<-in.
+    /// Weights for one pass as tap-major mat4 blocks (cached layer index,
+    /// no plan rescan).
     fn pass_mats(&self, pass: &Pass, k: usize) -> (Vec<[[f32; 4]; 4]>, [f32; 4]) {
-        let conv_idx = self
-            .plan
-            .passes
-            .iter()
-            .filter(|p| matches!(p.kind, PassKind::Conv { .. }))
-            .map(|p| p.layer)
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .position(|l| l == pass.layer)
-            .expect("conv layer index");
-        let w = &self.weights[conv_idx];
-        let n_in = pass.in_textures.len();
-        let mut mats = Vec::with_capacity(k * k * n_in);
-        for ky in 0..k {
-            for kx in 0..k {
-                for ib in 0..n_in {
-                    let mut m = [[0.0f32; 4]; 4]; // m[out][in]
-                    for o in 0..4 {
-                        let oc = pass.out_block * 4 + o;
-                        if oc >= w.cout {
-                            continue;
-                        }
-                        for i in 0..4 {
-                            let ic = ib * 4 + i;
-                            if ic >= w.cin {
-                                continue;
-                            }
-                            m[o][i] = w.w[((oc * w.cin + ic) * k + ky) * k + kx];
-                        }
-                    }
-                    mats.push(m);
-                }
-            }
-        }
-        let mut bias = [0.0f32; 4];
-        for o in 0..4 {
-            let oc = pass.out_block * 4 + o;
-            if oc < w.cout {
-                bias[o] = w.b[oc];
-            }
-        }
-        (mats, bias)
+        let conv_idx = *self.conv_index.get(&pass.layer).expect("conv layer index");
+        tap_major_mats(&self.weights[conv_idx], pass.out_block, pass.in_textures.len(), k)
     }
 
     fn run_pass(&self, pass: &Pass, textures: &[Option<Tex>]) -> Tex {

@@ -5,15 +5,23 @@
 //! [`glsl::gen_all`] (GLSL ES 1.00 sources) and/or [`interp::ShaderPipeline`]
 //! (software execution, float or RGBA8-quantised textures).
 //!
+//! Two software execution engines exist: [`interp::ShaderPipeline`], the
+//! straightforward per-pass interpreter kept as the numerical oracle, and
+//! [`compiled::CompiledPipeline`], the precompiled zero-allocation hot
+//! path serving and sustained-load benches run per frame (bit-exact
+//! against the oracle in Float mode).
+//!
 //! The planner enforces the constraints the paper documents for the
 //! Pi Zero 2 W: 4 output channels per pass (RGBA), ≤ 8 bound textures,
 //! ≤ 64 texture samples per shader.
 
+pub mod compiled;
 pub mod glsl;
 pub mod interp;
 pub mod ir;
 pub mod planner;
 
+pub use compiled::CompiledPipeline;
 pub use glsl::{gen_all, ShaderSource, VERTEX_SHADER};
 pub use interp::{ShaderPipeline, TextureFormat};
 pub use ir::{unpack_conv_weights, ConvWeights, EncoderIr, Op};
@@ -41,4 +49,25 @@ pub fn pipeline_from_manifest(
     let flat = manifest.load_params(params_name)?;
     let weights = unpack_conv_weights(&ir, &flat)?;
     ShaderPipeline::new(plan, weights, format)
+}
+
+/// Build the precompiled hot-path pipeline for a manifest encoder — same
+/// inputs as [`pipeline_from_manifest`], compiled for steady-state serving.
+pub fn compiled_from_manifest(
+    manifest: &Manifest,
+    arch: &str,
+    meta: &EncoderMeta,
+    x: usize,
+    params_name: &str,
+    format: TextureFormat,
+) -> Result<CompiledPipeline> {
+    anyhow::ensure!(
+        meta.shader_deployable,
+        "{arch} is not shader-deployable (the planner would reject it)"
+    );
+    let ir = EncoderIr::from_meta(arch, manifest.obs_channels, meta);
+    let plan = plan(&ir, x)?;
+    let flat = manifest.load_params(params_name)?;
+    let weights = unpack_conv_weights(&ir, &flat)?;
+    CompiledPipeline::new(plan, weights, format)
 }

@@ -1,0 +1,43 @@
+//! Counting allocator shared by the zero-allocation gates
+//! (`rust/tests/compiled_alloc.rs`, `benches/micro_hotpath.rs`).
+//!
+//! Each gate binary declares its own `#[global_allocator] static G:
+//! CountingAlloc = CountingAlloc;` and reads [`CountingAlloc::count`]
+//! around the measured window. All allocating entry points are counted —
+//! including `alloc_zeroed`, which `vec![0; n]` reaches without going
+//! through `alloc` — so a hot path cannot escape the gate via the zeroed
+//! fast path. Deallocations are deliberately not counted: the gates care
+//! about heap traffic initiated per frame, and frees of warmup buffers
+//! would only add noise.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Total allocations observed so far (monotonic).
+    pub fn count() -> u64 {
+        ALLOCS.load(Ordering::SeqCst)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+}

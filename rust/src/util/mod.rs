@@ -5,6 +5,7 @@
 //! clap / rand / criterion / proptest (DESIGN.md §1); each is small, tested,
 //! and purpose-built for this stack.
 
+pub mod alloc_counter;
 pub mod argparse;
 pub mod json;
 pub mod proptest;

@@ -1,0 +1,46 @@
+//! Zero-allocation gate for the compiled shader hot path, enforced under
+//! plain `cargo test` (no bench run needed): steady-state `run_into`
+//! frames at threads = 1 must not touch the heap.
+//!
+//! This file is its own test binary with exactly one test so the counting
+//! global allocator sees no concurrent test threads — keep it that way.
+
+use miniconv::shader::{plan, unpack_conv_weights, CompiledPipeline, EncoderIr, Op, TextureFormat};
+use miniconv::tensor::Chw;
+use miniconv::util::alloc_counter::CountingAlloc;
+use miniconv::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_frames_do_not_allocate() {
+    let ir = EncoderIr {
+        name: "miniconv4".into(),
+        input_channels: 9,
+        ops: (0..3)
+            .flat_map(|_| vec![Op::Conv { cout: 4, k: 3, stride: 2, same: true }, Op::Relu])
+            .collect(),
+    };
+    let p = plan(&ir, 84).unwrap();
+    let mut rng = Rng::new(1);
+    let flat: Vec<f32> = (0..ir.param_count()).map(|_| rng.normal_f32() * 0.3).collect();
+    let ws = unpack_conv_weights(&ir, &flat).unwrap();
+    let mut pipe = CompiledPipeline::new(p, ws, TextureFormat::Float).unwrap();
+    let mut frame = Chw::zeros(9, 84, 84);
+    for v in frame.data.iter_mut() {
+        *v = (rng.uniform() * 255.0).round() as f32 / 255.0;
+    }
+    let mut out = Chw::zeros(1, 1, 1);
+    // warm the arena and size the output buffer
+    for _ in 0..3 {
+        pipe.run_into(&frame, &mut out).unwrap();
+    }
+    let before = CountingAlloc::count();
+    for _ in 0..50 {
+        pipe.run_into(&frame, &mut out).unwrap();
+    }
+    let during = CountingAlloc::count() - before;
+    std::hint::black_box(&out);
+    assert_eq!(during, 0, "compiled frame loop allocated {during} times over 50 frames");
+}

@@ -1,0 +1,205 @@
+//! Property tests for the compiled shader pipeline against the legacy
+//! interpreter (the oracle): Float mode must be bit-exact on arbitrary
+//! plans/weights/frames, multi-threaded execution must match
+//! single-threaded, scratch-arena reuse must be stateless across frames,
+//! and Rgba8 quantisation error must stay bounded (mirroring the
+//! framing_props error-bound style).
+
+use miniconv::shader::{plan, CompiledPipeline, EncoderIr, Op, ShaderPipeline, TextureFormat};
+use miniconv::tensor::Chw;
+use miniconv::util::proptest::{check, prop_assert, Gen};
+
+/// Draw a random shader-deployable encoder IR and a legal input size.
+/// Keeps within the planner's embedded-GL limits (≤ 8 bound textures,
+/// ≤ 64 samples/pass) and keeps spatial dims legal for every op.
+fn arb_ir(g: &mut Gen) -> (EncoderIr, usize) {
+    let input_channels = *g.choice(&[1usize, 3, 4, 9, 16]);
+    let x = g.usize(8, 28);
+    let mut ops = Vec::new();
+    let mut h = x;
+    let mut cin = input_channels;
+    let depth = g.usize(1, 3);
+    for _ in 0..depth {
+        // conv must respect the sample budget: k² * ceil(cin/4) <= 64
+        let k = if cin > 16 { 1 } else { *g.choice(&[1usize, 3]) };
+        let stride = g.usize(1, 2);
+        let same = g.bool();
+        if !same && h < k {
+            break;
+        }
+        let cout = *g.choice(&[3usize, 4, 5, 8, 16]);
+        ops.push(Op::Conv { cout, k, stride, same });
+        if g.bool() {
+            ops.push(Op::Relu);
+        }
+        h = if same { h.div_ceil(stride) } else { (h - k) / stride + 1 };
+        cin = cout;
+        // occasional pooling layer when there is room
+        if h >= 3 && g.usize(0, 3) == 0 {
+            ops.push(Op::MaxPool { k: 2, stride: 2 });
+            h = (h - 2) / 2 + 1;
+        }
+        if h < 2 {
+            break;
+        }
+    }
+    if ops.is_empty() {
+        ops.push(Op::Conv { cout: 4, k: 1, stride: 1, same: true });
+    }
+    (EncoderIr { name: "arb".into(), input_channels, ops }, x)
+}
+
+fn arb_frame(g: &mut Gen, c: usize, x: usize) -> Chw {
+    let mut f = Chw::zeros(c, x, x);
+    for v in f.data.iter_mut() {
+        *v = (g.f64(0.0, 255.0) as f32).round() / 255.0;
+    }
+    f
+}
+
+fn arb_weights(g: &mut Gen, n: usize) -> Vec<f32> {
+    (0..n).map(|_| g.f64(-0.6, 0.6) as f32).collect()
+}
+
+#[test]
+fn prop_compiled_float_bit_exact_vs_legacy() {
+    check(60, |g| {
+        let (ir, x) = arb_ir(g);
+        let p = match plan(&ir, x) {
+            Ok(p) => p,
+            Err(_) => return Ok(()), // drawn IR exceeded GL limits: skip
+        };
+        let flat = arb_weights(g, ir.param_count());
+        let ws = miniconv::shader::unpack_conv_weights(&ir, &flat)
+            .map_err(|e| format!("unpack: {e}"))?;
+        let frame = arb_frame(g, ir.input_channels, x);
+        let legacy = ShaderPipeline::new(p.clone(), ws.clone(), TextureFormat::Float)
+            .map_err(|e| format!("legacy: {e}"))?;
+        let mut compiled = CompiledPipeline::new(p, ws, TextureFormat::Float)
+            .map_err(|e| format!("compile: {e}"))?;
+        let want = legacy.run(&frame).map_err(|e| format!("legacy run: {e}"))?;
+        let got = compiled.run(&frame).map_err(|e| format!("compiled run: {e}"))?;
+        prop_assert(
+            (got.c, got.h, got.w) == (want.c, want.h, want.w),
+            format!("shape {:?} vs {:?}", (got.c, got.h, got.w), (want.c, want.h, want.w)),
+        )?;
+        for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            prop_assert(
+                a.to_bits() == b.to_bits(),
+                format!("{}@{x}: pixel {i} differs: {a} vs {b}", ir.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_matches_single_thread() {
+    check(25, |g| {
+        let (ir, x) = arb_ir(g);
+        let p = match plan(&ir, x) {
+            Ok(p) => p,
+            Err(_) => return Ok(()),
+        };
+        let flat = arb_weights(g, ir.param_count());
+        let ws = miniconv::shader::unpack_conv_weights(&ir, &flat)
+            .map_err(|e| format!("unpack: {e}"))?;
+        let frame = arb_frame(g, ir.input_channels, x);
+        let mut one = CompiledPipeline::new(p.clone(), ws.clone(), TextureFormat::Float)
+            .map_err(|e| format!("compile: {e}"))?;
+        let mut many = CompiledPipeline::new(p, ws, TextureFormat::Float)
+            .map_err(|e| format!("compile: {e}"))?;
+        many.set_threads(g.usize(2, 6));
+        let a = one.run(&frame).map_err(|e| e.to_string())?;
+        let b = many.run(&frame).map_err(|e| e.to_string())?;
+        for (u, v) in a.data.iter().zip(&b.data) {
+            prop_assert(u.to_bits() == v.to_bits(), "parallel run diverged")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scratch_reuse_stateless_across_frames() {
+    check(25, |g| {
+        let (ir, x) = arb_ir(g);
+        let p = match plan(&ir, x) {
+            Ok(p) => p,
+            Err(_) => return Ok(()),
+        };
+        let flat = arb_weights(g, ir.param_count());
+        let ws = miniconv::shader::unpack_conv_weights(&ir, &flat)
+            .map_err(|e| format!("unpack: {e}"))?;
+        let mut warm = CompiledPipeline::new(p.clone(), ws.clone(), TextureFormat::Float)
+            .map_err(|e| format!("compile: {e}"))?;
+        let mut out = Chw::zeros(1, 1, 1);
+        for _ in 0..g.usize(1, 3) {
+            let f = arb_frame(g, ir.input_channels, x);
+            warm.run_into(&f, &mut out).map_err(|e| e.to_string())?;
+        }
+        let last = arb_frame(g, ir.input_channels, x);
+        warm.run_into(&last, &mut out).map_err(|e| e.to_string())?;
+        let mut cold = CompiledPipeline::new(p, ws, TextureFormat::Float)
+            .map_err(|e| format!("compile: {e}"))?;
+        let want = cold.run(&last).map_err(|e| e.to_string())?;
+        for (u, v) in out.data.iter().zip(&want.data) {
+            prop_assert(u.to_bits() == v.to_bits(), "warm arena leaked state across frames")?;
+        }
+        Ok(())
+    });
+}
+
+/// Miniconv-family IR for the quantisation bound: ReLU after every conv
+/// (Rgba8 storage clamps to [0, scale], so unbounded-negative activations
+/// of un-ReLU'd random nets would break any additive error bound) and
+/// weights at the calibration scale the seed parity tests use.
+fn arb_relu_ir(g: &mut Gen) -> (EncoderIr, usize) {
+    let x = g.usize(12, 28);
+    let depth = g.usize(1, 3);
+    let mut ops = Vec::new();
+    for _ in 0..depth {
+        let cout = *g.choice(&[4usize, 8, 16]);
+        ops.push(Op::Conv { cout, k: 3, stride: 2, same: true });
+        ops.push(Op::Relu);
+    }
+    (EncoderIr { name: "arb-relu".into(), input_channels: 9, ops }, x)
+}
+
+#[test]
+fn prop_rgba8_error_bounded_by_layer_scale() {
+    // Mirrors framing_props' quantisation bound: with per-layer scales
+    // calibrated on the frame itself, the compiled Rgba8 output must stay
+    // within a small fraction of the final layer's scale of the Float
+    // output.
+    check(30, |g| {
+        let (ir, x) = arb_relu_ir(g);
+        let p = match plan(&ir, x) {
+            Ok(p) => p,
+            Err(_) => return Ok(()),
+        };
+        let flat: Vec<f32> = (0..ir.param_count()).map(|_| g.f64(-0.35, 0.35) as f32).collect();
+        let ws = miniconv::shader::unpack_conv_weights(&ir, &flat)
+            .map_err(|e| format!("unpack: {e}"))?;
+        let frame = arb_frame(g, ir.input_channels, x);
+        let scales = ShaderPipeline::calibrate(&p, &ws, &frame).map_err(|e| e.to_string())?;
+        let mut q = CompiledPipeline::new(
+            p.clone(),
+            ws.clone(),
+            TextureFormat::Rgba8 { scales: scales.clone() },
+        )
+        .map_err(|e| format!("compile q: {e}"))?;
+        let mut f = CompiledPipeline::new(p, ws, TextureFormat::Float)
+            .map_err(|e| format!("compile f: {e}"))?;
+        let got_q = q.run(&frame).map_err(|e| e.to_string())?;
+        let got_f = f.run(&frame).map_err(|e| e.to_string())?;
+        // 8% of the final scale: the canonical miniconv configuration is
+        // held to 5% in the unit tests; random depth/width/weight draws get
+        // a little headroom for unlucky error alignment
+        let tol = scales.last().copied().unwrap_or(1.0).max(1.0) * 0.08;
+        let diff = got_q.max_abs_diff(&got_f);
+        prop_assert(
+            diff < tol,
+            format!("rgba8 error {diff} vs tol {tol} (scales {scales:?})"),
+        )
+    });
+}

@@ -25,6 +25,9 @@ fn sim_fleet(shards: usize) -> FleetConfig {
                 fixed: Duration::from_micros(300),
                 per_item: Duration::from_micros(100),
                 action_dim: 1,
+                // real compiled-shader encodes behind the modelled cost:
+                // the fleet path exercises the serving hot path end-to-end
+                encode: true,
             }),
             ..ServerConfig::default()
         },
