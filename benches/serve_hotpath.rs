@@ -1,0 +1,122 @@
+//! Serve hot-path before/after harness: the coordinator's
+//! ingest→batch→policy→reply pipeline, legacy per-request engine vs the
+//! pooled `BatchArena` engine, over a 1/8/64-client matrix on both routes
+//! (raw 84² RGBA ingest and quantised 4×11×11 features).
+//!
+//! Results land in `BENCH_serve.json` (override with `--out` or the
+//! `BENCH_SERVE_OUT` env var). Gates, also embedded in the JSON:
+//!   * pooled ≥ 2x legacy requests/sec at clients == max_batch (8) on the
+//!     server-only route (the data-movement-dominated one);
+//!   * 0 steady-state heap allocations per pooled request, measured by
+//!     the counting global allocator (shared impl: `util::alloc_counter`).
+//!
+//! `--iters N` caps the measured rounds per cell — CI runs a cheap smoke
+//! pass with a tiny N; gate verdicts are only meaningful at the default.
+
+use miniconv::coordinator::Route;
+use miniconv::experiments::serving::{
+    bench_payloads, run_serve_hotpath, ServeDriver, ServeEngine,
+};
+use miniconv::util::alloc_counter::CountingAlloc;
+use miniconv::util::argparse::Parser;
+use miniconv::util::tables::Table;
+
+// counts heap allocations so the zero-allocation claim is measured, not
+// asserted by inspection
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const MAX_BATCH: usize = 8;
+
+/// Allocations per steady-state pooled request: both routes at
+/// clients == max_batch, counted after the driver state is warm.
+fn steady_state_allocs_per_request(rounds: usize) -> u64 {
+    let (split, split_dim) = bench_payloads(Route::Split, MAX_BATCH, 84, (4, 11, 11), 0xA110C);
+    let (full, full_dim) = bench_payloads(Route::Full, MAX_BATCH, 84, (4, 11, 11), 0xA110D);
+    let mut ds = ServeDriver::new(&split, MAX_BATCH, split_dim, 4);
+    let mut df = ServeDriver::new(&full, MAX_BATCH, full_dim, 4);
+    for _ in 0..3 {
+        ds.round(ServeEngine::Pooled).expect("warmup split round");
+        df.round(ServeEngine::Pooled).expect("warmup full round");
+    }
+    let before = CountingAlloc::count();
+    for _ in 0..rounds {
+        ds.round(ServeEngine::Pooled).expect("split round");
+        df.round(ServeEngine::Pooled).expect("full round");
+    }
+    let allocs = CountingAlloc::count() - before;
+    std::hint::black_box((ds.sink().len(), df.sink().len()));
+    let requests = (2 * MAX_BATCH * rounds) as u64;
+    // ceiling division: even one allocation per few hundred requests must
+    // show up as nonzero rather than rounding the gate green
+    allocs.div_ceil(requests)
+}
+
+fn main() {
+    let args = Parser::new("serve hot path — legacy vs pooled ingest→batch→policy→reply")
+        .opt("iters", "400", "measured rounds per cell")
+        .opt("out", "", "output path (default BENCH_SERVE_OUT or BENCH_serve.json)")
+        .parse();
+    let iters: usize = args.usize("iters");
+    let out_path = {
+        let o = args.str("out");
+        if o.is_empty() {
+            std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into())
+        } else {
+            o
+        }
+    };
+
+    let mut report =
+        run_serve_hotpath(&[1, MAX_BATCH, 64], MAX_BATCH, iters).expect("serve hotpath matrix");
+    let alloc_rounds = 50.min(iters.max(1));
+    report.allocs_per_request = Some(steady_state_allocs_per_request(alloc_rounds));
+
+    let mut t = Table::new(
+        "serve hot path — legacy vs pooled pipeline (84² raw / 4×11×11 features)",
+        &["route", "engine", "clients", "max_batch", "req/s", "ns/req", "speedup"],
+    );
+    for c in &report.cells {
+        let speedup = if c.engine == "pooled" {
+            let legacy = report
+                .cells
+                .iter()
+                .find(|l| l.route == c.route && l.clients == c.clients && l.engine == "legacy")
+                .map(|l| l.requests_per_sec)
+                .unwrap_or(0.0);
+            format!("{:.2}x", c.requests_per_sec / legacy.max(1e-12))
+        } else {
+            "1.00x".into()
+        };
+        t.row(&[
+            c.route.into(),
+            c.engine.into(),
+            c.clients.to_string(),
+            c.max_batch.to_string(),
+            format!("{:.0}", c.requests_per_sec),
+            format!("{:.0}", c.ns_per_request),
+            speedup,
+        ]);
+    }
+    t.print();
+    println!(
+        "speedup at batch {MAX_BATCH}: server-only {:.2}x, split {:.2}x",
+        report.speedup_full_b, report.speedup_split_b
+    );
+    println!(
+        "steady-state allocations per pooled request: {}",
+        report.allocs_per_request.unwrap_or(u64::MAX)
+    );
+    println!(
+        "gates: speedup_full >= 2.0 -> {}, allocs == 0 -> {}",
+        if report.speedup_full_b >= 2.0 { "PASS" } else { "FAIL" },
+        if report.allocs_per_request == Some(0) { "PASS" } else { "FAIL" },
+    );
+
+    let json = report.to_json();
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+}

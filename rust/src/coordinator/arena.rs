@@ -1,0 +1,171 @@
+//! Pooled storage for the executor's ingest→batch→policy→reply hot path.
+//!
+//! One [`BatchArena`] lives as long as its executor thread; every
+//! per-batch buffer on the request path draws from it, so steady-state
+//! batches perform no heap allocation (DESIGN.md §5 has the lifetime
+//! rules). The centrepiece is a contiguous row-major `[rows, feat_dim]`
+//! batch matrix: the fused dequantise/ingest pack writes each request's
+//! features directly into its row, and the policy executable consumes the
+//! matrix without any intermediate per-request `Vec<f32>`.
+
+use std::time::Duration;
+
+/// Pooled batch-assembly buffers owned by one executor thread.
+///
+/// Buffer lifetime rules (DESIGN.md §5):
+///   * the arena outlives every batch; batches only *view* its storage;
+///   * [`BatchArena::begin`] reshapes the matrix for the next batch and
+///     zero-fills padding rows only — occupied rows are fully overwritten
+///     by the pack loop, never trusted from the previous batch;
+///   * a geometry change (different `feat_dim` or element count) zeroes
+///     the whole matrix, since stale content would be laid out wrongly;
+///   * scratch vectors (`queue_waits`, `services`, `actions`, `frame`)
+///     are cleared per batch but keep their capacity forever.
+#[derive(Debug, Default)]
+pub struct BatchArena {
+    /// contiguous row-major `[rows, feat_dim]` batch matrix
+    matrix: Vec<f32>,
+    feat_dim: usize,
+    rows: usize,
+    /// per-item queue-wait scratch for metrics
+    pub queue_waits: Vec<Duration>,
+    /// per-item service-time scratch for metrics
+    pub services: Vec<Duration>,
+    /// flat `[rows * action_dim]` batched policy output
+    pub actions: Vec<f32>,
+    /// encoded reply-frame scratch (one reply at a time)
+    pub frame: Vec<u8>,
+}
+
+impl BatchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a batch: shape the matrix as `[rows, feat_dim]` and zero the
+    /// rows at and beyond `used` (the padding slots the executable sees).
+    /// Rows below `used` must each be fully overwritten by the caller's
+    /// pack loop. Capacity is kept across batches; steady-state calls with
+    /// a stable geometry never touch the heap.
+    pub fn begin(&mut self, used: usize, rows: usize, feat_dim: usize) {
+        assert!(used <= rows, "used {used} > rows {rows}");
+        let elems = rows * feat_dim;
+        if self.matrix.len() != elems || self.feat_dim != feat_dim {
+            // geometry change: previous content has the wrong layout
+            self.matrix.clear();
+            self.matrix.resize(elems, 0.0);
+        } else {
+            self.matrix[used * feat_dim..].fill(0.0);
+        }
+        self.rows = rows;
+        self.feat_dim = feat_dim;
+        self.queue_waits.clear();
+        self.services.clear();
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Mutable view of row `i` — the fused dequant/ingest pack target.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.feat_dim;
+        &mut self.matrix[i * d..(i + 1) * d]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.feat_dim;
+        &self.matrix[i * d..(i + 1) * d]
+    }
+
+    /// The packed `[rows, feat_dim]` matrix (padding rows zeroed).
+    pub fn matrix(&self) -> &[f32] {
+        &self.matrix
+    }
+
+    /// Size the flat action buffer to `rows * action_dim`, zero-filled
+    /// (items the policy skips reply with zero actions).
+    pub fn begin_actions(&mut self, rows: usize, action_dim: usize) {
+        self.actions.clear();
+        self.actions.resize(rows * action_dim, 0.0);
+    }
+
+    /// Disjoint (input row, action row) views for in-place policy
+    /// evaluation over the arena's own storage.
+    pub fn row_and_action(&mut self, i: usize, action_dim: usize) -> (&[f32], &mut [f32]) {
+        let d = self.feat_dim;
+        (
+            &self.matrix[i * d..(i + 1) * d],
+            &mut self.actions[i * action_dim..(i + 1) * action_dim],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_pack_without_bleed_and_padding_is_zeroed() {
+        let mut a = BatchArena::new();
+        a.begin(2, 4, 3);
+        a.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        a.row_mut(1).copy_from_slice(&[4.0, 5.0, 6.0]);
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(a.row(2), &[0.0; 3]);
+        assert_eq!(a.row(3), &[0.0; 3]);
+        assert_eq!(a.matrix().len(), 12);
+    }
+
+    #[test]
+    fn stable_geometry_rezeroes_only_padding() {
+        let mut a = BatchArena::new();
+        a.begin(4, 4, 2);
+        for i in 0..4 {
+            a.row_mut(i).fill(9.0);
+        }
+        // next batch uses fewer rows: the now-padding rows must be zeroed
+        a.begin(2, 4, 2);
+        assert_eq!(a.row(2), &[0.0; 2]);
+        assert_eq!(a.row(3), &[0.0; 2]);
+        // occupied rows are the caller's to overwrite — stale content is
+        // permitted there by contract
+        a.row_mut(0).fill(1.0);
+        a.row_mut(1).fill(2.0);
+        assert_eq!(a.matrix(), &[1.0, 1.0, 2.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn geometry_change_zeroes_everything() {
+        let mut a = BatchArena::new();
+        a.begin(2, 2, 4);
+        for i in 0..2 {
+            a.row_mut(i).fill(7.0);
+        }
+        // same element count, different feat_dim: full re-zero
+        a.begin(0, 4, 2);
+        assert!(a.matrix().iter().all(|&v| v == 0.0));
+        assert_eq!(a.feat_dim(), 2);
+        assert_eq!(a.rows(), 4);
+    }
+
+    #[test]
+    fn actions_are_zero_defaulted_and_disjoint_from_rows() {
+        let mut a = BatchArena::new();
+        a.begin(2, 2, 3);
+        a.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        a.begin_actions(2, 2);
+        assert_eq!(a.actions, &[0.0; 4]);
+        let (row, act) = a.row_and_action(0, 2);
+        act[0] = row[0] + row[1];
+        act[1] = row[2];
+        assert_eq!(a.actions, &[3.0, 3.0, 0.0, 0.0]);
+        // row content untouched
+        assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+    }
+}

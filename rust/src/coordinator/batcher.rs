@@ -44,13 +44,6 @@ pub struct BatchCollector<T> {
     pub max_depth: usize,
 }
 
-fn slot(route: Route) -> usize {
-    match route {
-        Route::Full => 0,
-        Route::Split => 1,
-    }
-}
-
 impl<T> BatchCollector<T> {
     pub fn new(policy: BatchPolicy, max_depth: usize) -> Self {
         BatchCollector {
@@ -61,19 +54,21 @@ impl<T> BatchCollector<T> {
         }
     }
 
-    /// Enqueue; returns false (and counts a drop) if the route is saturated.
-    pub fn push(&mut self, route: Route, work: T, now: Instant) -> bool {
-        let q = &mut self.queues[slot(route)];
+    /// Enqueue; on a saturated route the work is handed back (and a drop
+    /// counted) so the caller can build its rejection reply from the
+    /// returned item instead of cloning reply handles up front.
+    pub fn push(&mut self, route: Route, work: T, now: Instant) -> Option<T> {
+        let q = &mut self.queues[route.index()];
         if q.len() >= self.max_depth {
             self.dropped += 1;
-            return false;
+            return Some(work);
         }
         q.push_back(Item { route, enqueued: now, work });
-        true
+        None
     }
 
     pub fn depth(&self, route: Route) -> usize {
-        self.queues[slot(route)].len()
+        self.queues[route.index()].len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -86,8 +81,8 @@ impl<T> BatchCollector<T> {
     /// (FIFO fairness across routes).
     pub fn ready(&self, now: Instant) -> Option<Route> {
         let mut best: Option<(Route, Instant)> = None;
-        for route in [Route::Full, Route::Split] {
-            let q = &self.queues[slot(route)];
+        for route in Route::ALL {
+            let q = &self.queues[route.index()];
             if let Some(head) = q.front() {
                 let full = q.len() >= self.policy.max_batch;
                 let waited = now.duration_since(head.enqueued) >= self.policy.max_wait;
@@ -116,11 +111,22 @@ impl<T> BatchCollector<T> {
             .min()
     }
 
-    /// Take up to max_batch items from a route's queue.
-    pub fn take(&mut self, route: Route) -> Vec<Item<T>> {
-        let q = &mut self.queues[slot(route)];
+    /// Drain up to max_batch items from a route's queue into
+    /// caller-provided storage (cleared first; capacity is reused across
+    /// batches — the executor's pooled batch buffer).
+    pub fn take_into(&mut self, route: Route, out: &mut Vec<Item<T>>) {
+        out.clear();
+        let q = &mut self.queues[route.index()];
         let n = q.len().min(self.policy.max_batch);
-        q.drain(..n).collect()
+        out.extend(q.drain(..n));
+    }
+
+    /// Take up to max_batch items from a route's queue (allocating
+    /// convenience over [`BatchCollector::take_into`]).
+    pub fn take(&mut self, route: Route) -> Vec<Item<T>> {
+        let mut out = Vec::new();
+        self.take_into(route, &mut out);
+        out
     }
 }
 
@@ -179,16 +185,38 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_drops_above_depth() {
+    fn backpressure_returns_rejected_work() {
         let mut c = BatchCollector::new(BatchPolicy::default(), 2);
         let now = t0();
-        assert!(c.push(Route::Split, 0, now));
-        assert!(c.push(Route::Split, 1, now));
-        assert!(!c.push(Route::Split, 2, now));
+        assert!(c.push(Route::Split, 0, now).is_none());
+        assert!(c.push(Route::Split, 1, now).is_none());
+        // the saturated push hands the work back for an explicit rejection
+        assert_eq!(c.push(Route::Split, 2, now), Some(2));
         assert_eq!(c.dropped, 1);
         assert_eq!(c.depth(Route::Split), 2);
         // other route unaffected
-        assert!(c.push(Route::Full, 3, now));
+        assert!(c.push(Route::Full, 3, now).is_none());
+    }
+
+    #[test]
+    fn take_into_reuses_buffer_and_preserves_fifo() {
+        let mut c = BatchCollector::new(
+            BatchPolicy { max_batch: 3, max_wait: Duration::ZERO },
+            100,
+        );
+        let now = t0();
+        for i in 0..5 {
+            c.push(Route::Full, i, now);
+        }
+        let mut batch = Vec::new();
+        c.take_into(Route::Full, &mut batch);
+        assert_eq!(batch.iter().map(|i| i.work).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let cap = batch.capacity();
+        c.take_into(Route::Full, &mut batch);
+        assert_eq!(batch.iter().map(|i| i.work).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(batch.capacity() >= cap, "drain-into must not shrink the pooled buffer");
+        c.take_into(Route::Full, &mut batch);
+        assert!(batch.is_empty());
     }
 
     #[test]

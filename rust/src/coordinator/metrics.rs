@@ -19,6 +19,9 @@ pub struct RouteMetrics {
     pub service: LatencyHist,
     /// queue wait: enqueue -> dequeue
     pub queue_wait: LatencyHist,
+    /// batch assembly: fused dequantise/ingest pack into the arena matrix
+    /// (one sample per batch)
+    pub pack: LatencyHist,
     /// pure model execution time
     pub execute: LatencyHist,
 }
@@ -28,6 +31,7 @@ impl RouteMetrics {
         RouteMetrics {
             service: LatencyHist::new(),
             queue_wait: LatencyHist::new(),
+            pack: LatencyHist::new(),
             execute: LatencyHist::new(),
             ..Default::default()
         }
@@ -62,6 +66,7 @@ impl RouteMetrics {
         self.padded_slots += other.padded_slots;
         self.service.merge(&other.service);
         self.queue_wait.merge(&other.queue_wait);
+        self.pack.merge(&other.pack);
         self.execute.merge(&other.execute);
     }
 }
@@ -109,11 +114,13 @@ impl Metrics {
         })))
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
         route: Route,
         n_items: usize,
         padded: usize,
+        pack: Duration,
         queue_waits: &[Duration],
         execute: Duration,
         service: &[Duration],
@@ -124,6 +131,7 @@ impl Metrics {
         rm.batches += 1;
         rm.batched_items += n_items as u64;
         rm.padded_slots += padded as u64;
+        rm.pack.record(pack);
         rm.execute.record(execute);
         for d in queue_waits {
             rm.queue_wait.record(*d);
@@ -153,6 +161,7 @@ mod tests {
             Route::Split,
             3,
             1,
+            Duration::from_micros(40),
             &[Duration::from_millis(1); 3],
             Duration::from_millis(2),
             &[Duration::from_millis(5); 3],
@@ -161,6 +170,7 @@ mod tests {
             Route::Split,
             5,
             3,
+            Duration::from_micros(40),
             &[Duration::from_millis(1); 5],
             Duration::from_millis(2),
             &[Duration::from_millis(9); 5],
@@ -171,6 +181,8 @@ mod tests {
         assert!((s.split.mean_batch() - 4.0).abs() < 1e-9);
         assert!((s.split.padding_ratio() - 4.0 / 12.0).abs() < 1e-9);
         assert_eq!(s.split.service.count(), 8);
+        // pack records one sample per batch
+        assert_eq!(s.split.pack.count(), 2);
         assert_eq!(s.full.requests, 0);
     }
 
@@ -183,6 +195,7 @@ mod tests {
                 Route::Full,
                 1,
                 0,
+                Duration::from_micros(5),
                 &[Duration::from_millis(1)],
                 Duration::from_millis(1),
                 &[Duration::from_millis(ms)],
@@ -216,6 +229,7 @@ mod tests {
                 route,
                 n,
                 0,
+                Duration::from_micros(ms),
                 &vec![Duration::from_millis(1); n],
                 Duration::from_millis(2),
                 &vec![Duration::from_millis(ms); n],

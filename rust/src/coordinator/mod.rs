@@ -3,6 +3,7 @@
 //! per-client [`session`] state, serving [`metrics`], the TCP [`server`],
 //! and a simulated-device [`client`] fleet for load experiments.
 
+pub mod arena;
 pub mod batcher;
 pub mod client;
 pub mod metrics;
@@ -10,6 +11,7 @@ pub mod router;
 pub mod server;
 pub mod session;
 
+pub use arena::BatchArena;
 pub use batcher::{BatchCollector, BatchPolicy};
 pub use client::{merged_latencies, run_client, run_fleet, ClientConfig, ClientReport};
 pub use metrics::Metrics;

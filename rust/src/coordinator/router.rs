@@ -18,10 +18,21 @@ pub enum Route {
 }
 
 impl Route {
+    /// Every route, in dense-index order (see [`Route::index`]).
+    pub const ALL: [Route; 2] = [Route::Full, Route::Split];
+
     pub fn of(payload: &Payload) -> Route {
         match payload {
             Payload::RawRgba { .. } => Route::Full,
             Payload::Features { .. } => Route::Split,
+        }
+    }
+
+    /// Dense index for per-route arrays (batcher queues, pooled scratch).
+    pub fn index(self) -> usize {
+        match self {
+            Route::Full => 0,
+            Route::Split => 1,
         }
     }
 
@@ -81,6 +92,15 @@ mod tests {
             Route::Split
         );
         assert_eq!(Route::Full.name(), "server-only");
+    }
+
+    #[test]
+    fn dense_indices_cover_all_routes() {
+        let mut seen = [false; 2];
+        for r in Route::ALL {
+            seen[r.index()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

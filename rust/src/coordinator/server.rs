@@ -11,7 +11,6 @@
 //!     the right executable from the batch ladder, writes responses.
 
 use std::collections::HashMap;
-use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -23,10 +22,13 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 use log::{debug, warn};
 
-use crate::net::framing::{Hello, Msg, Payload, Response};
-use crate::net::tcp::{read_msg, write_msg};
+use crate::net::framing::{
+    dequantize_features_into, encode_response_into, Hello, Msg, Payload, Response,
+};
+use crate::net::tcp::{read_msg, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
 
+use super::arena::BatchArena;
 use super::batcher::{BatchCollector, BatchPolicy};
 use super::metrics::Metrics;
 use super::router::{pick_batch, Route};
@@ -109,6 +111,10 @@ struct Work {
     id: u64,
     payload: Payload,
     received: Instant,
+    /// the connection's shared writer: wrapped in an `Arc` once per
+    /// connection by the reader and shared across every work item queued
+    /// from it — enqueueing and replying never clone the stream, and the
+    /// executor only touches the handle it was given
     reply: Arc<Mutex<TcpStream>>,
 }
 
@@ -242,6 +248,8 @@ struct RouteExec {
     ladder: Vec<usize>,
     params: DeviceTensor,
     prefix: String,
+    /// preallocated output `Value` storage, reused across batches
+    outs: Vec<Value>,
 }
 
 fn executor_main(
@@ -259,6 +267,10 @@ fn executor_main(
 
 /// The batching loop shared by every backend: pull work, honour the batch
 /// deadline, report drops, hand ready batches to `run`.
+///
+/// Batches are drained into one pooled `Vec<Item<Work>>` that lives for
+/// the executor's lifetime — `run` borrows the batch, it never owns it,
+/// so the steady-state loop performs no per-batch allocation.
 fn executor_loop<F>(
     policy: BatchPolicy,
     max_depth: usize,
@@ -267,9 +279,10 @@ fn executor_loop<F>(
     shutdown: &AtomicBool,
     mut run: F,
 ) where
-    F: FnMut(Route, Vec<super::batcher::Item<Work>>) -> Result<()>,
+    F: FnMut(Route, &[super::batcher::Item<Work>]) -> Result<()>,
 {
     let mut collector: BatchCollector<Work> = BatchCollector::new(policy, max_depth);
+    let mut batch: Vec<super::batcher::Item<Work>> = Vec::new();
     let mut dropped_reported = 0u64;
 
     loop {
@@ -284,16 +297,21 @@ fn executor_loop<F>(
         match rx.recv_timeout(timeout) {
             Ok(w) => {
                 let now = Instant::now();
+                // a saturated push hands the work back, so the reply handle
+                // is only touched (and never cloned) on the rejection path
                 let admit = |w: Work, collector: &mut BatchCollector<Work>| {
                     let route = Route::of(&w.payload);
-                    let (client, id, reply) = (w.client, w.id, w.reply.clone());
-                    if !collector.push(route, w, now) {
+                    if let Some(rejected) = collector.push(route, w, now) {
                         // back-pressure: reject explicitly (empty action)
                         // so the client never blocks on a dropped request
-                        let mut wtr = reply.lock().unwrap();
+                        let mut wtr = rejected.reply.lock().unwrap();
                         let _ = write_msg(
                             &mut *wtr,
-                            &Msg::Response(Response { client, id, action: vec![] }),
+                            &Msg::Response(Response {
+                                client: rejected.client,
+                                id: rejected.id,
+                                action: vec![],
+                            }),
                         );
                     }
                 };
@@ -312,10 +330,13 @@ fn executor_loop<F>(
         }
 
         while let Some(route) = collector.ready(Instant::now()) {
-            let items = collector.take(route);
-            if let Err(e) = run(route, items) {
+            collector.take_into(route, &mut batch);
+            if let Err(e) = run(route, &batch) {
                 warn!("batch failed: {e:#}");
             }
+            // drop the items now (payload buffers, reply-handle Arcs) so an
+            // idle executor never pins client sockets; capacity stays pooled
+            batch.clear();
         }
     }
 }
@@ -345,12 +366,14 @@ fn executor_pjrt(
             ladder: rt.manifest.batch_ladder(&head_prefix),
             params: rt.to_device(&head_params)?,
             prefix: head_prefix,
+            outs: Vec::new(),
         };
         let mut full = RouteExec {
             exes: HashMap::new(),
             ladder: rt.manifest.batch_ladder(&full_prefix),
             params: rt.to_device(&full_params)?,
             prefix: full_prefix,
+            outs: Vec::new(),
         };
         anyhow::ensure!(!split.ladder.is_empty(), "no head artifacts for {}", cfg.arch);
         anyhow::ensure!(!full.ladder.is_empty(), "no full artifacts");
@@ -374,31 +397,42 @@ fn executor_pjrt(
     };
 
     let mut sessions = SessionManager::new();
+    let mut arena = BatchArena::new();
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
         let exec = match route {
             Route::Split => &mut split,
             Route::Full => &mut full,
         };
-        run_batch(&rt, exec, route, items, &mut sessions, &metrics)
+        run_batch(&rt, exec, route, items, &mut sessions, &mut arena, &metrics)
     });
 }
 
 /// The Sim backend's real-compute engine: compiled MiniConv-4 pipelines
 /// (synthetic deterministic weights) keyed by observation side length,
-/// plus a reused feature buffer — steady-state encodes don't allocate.
+/// plus reused observation/feature buffers — steady-state encodes don't
+/// allocate.
 struct SimEncoder {
     pipes: HashMap<usize, crate::shader::CompiledPipeline>,
+    obs: crate::tensor::Chw,
     feat: crate::tensor::Chw,
+    /// (batch row, side length) of raw items to encode this batch (pooled)
+    to_encode: Vec<(usize, usize)>,
 }
 
 impl SimEncoder {
     fn new() -> Self {
-        SimEncoder { pipes: HashMap::new(), feat: crate::tensor::Chw::zeros(1, 1, 1) }
+        SimEncoder {
+            pipes: HashMap::new(),
+            obs: crate::tensor::Chw::zeros(1, 1, 1),
+            feat: crate::tensor::Chw::zeros(1, 1, 1),
+            to_encode: Vec::new(),
+        }
     }
 
-    /// Encode a stacked 9×x×x observation; returns `action_dim` per-channel
-    /// feature means (deterministic, real compute).
-    fn encode(&mut self, x: usize, obs: Vec<f32>, action_dim: usize) -> Result<Vec<f32>> {
+    /// Encode a stacked 9×x×x observation (borrowed from its arena batch
+    /// row), writing per-channel feature means into `out` (deterministic,
+    /// real compute, no steady-state allocation).
+    fn encode_into(&mut self, x: usize, obs: &[f32], out: &mut [f32]) -> Result<()> {
         use std::collections::hash_map::Entry;
         let pipe = match self.pipes.entry(x) {
             Entry::Occupied(e) => e.into_mut(),
@@ -416,17 +450,20 @@ impl SimEncoder {
                 )?)
             }
         };
-        let obs = crate::tensor::Chw::from_vec(9, x, x, obs);
-        pipe.run_into(&obs, &mut self.feat)?;
+        self.obs.c = 9;
+        self.obs.h = x;
+        self.obs.w = x;
+        self.obs.data.clear();
+        self.obs.data.extend_from_slice(obs);
+        pipe.run_into(&self.obs, &mut self.feat)?;
         let feat = &self.feat;
         let px = feat.h * feat.w;
-        Ok((0..action_dim)
-            .map(|c| {
-                let ch = c % feat.c;
-                let sum: f32 = feat.data[ch * px..(ch + 1) * px].iter().sum();
-                sum / px as f32
-            })
-            .collect())
+        for (c, o) in out.iter_mut().enumerate() {
+            let ch = c % feat.c;
+            let sum: f32 = feat.data[ch * px..(ch + 1) * px].iter().sum();
+            *o = sum / px as f32;
+        }
+        Ok(())
     }
 }
 
@@ -442,49 +479,74 @@ fn executor_sim(
     let _ = ready.send(Ok(()));
     let mut sessions = SessionManager::new();
     let mut encoder = SimEncoder::new();
+    let mut arena = BatchArena::new();
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
-        run_batch_sim(&spec, route, items, &mut sessions, &mut encoder, &metrics)
+        run_batch_sim(&spec, route, items, &mut sessions, &mut encoder, &mut arena, &metrics)
     });
 }
 
 /// Sim-backend batch execution: real session stacking and metrics, modelled
-/// compute time, and (with `encode`) real compiled-shader encodes.
+/// compute time, and (with `encode`) real compiled-shader encodes. All
+/// per-batch state (observation rows, actions, reply frames) lives in the
+/// arena — the per-item `HashMap` action scatter is gone.
 fn run_batch_sim(
     spec: &SimSpec,
     route: Route,
-    items: Vec<super::batcher::Item<Work>>,
+    items: &[super::batcher::Item<Work>],
     sessions: &mut SessionManager,
     encoder: &mut SimEncoder,
+    arena: &mut BatchArena,
     metrics: &Metrics,
 ) -> Result<()> {
     let n = items.len();
     let dequeue = Instant::now();
-    let queue_waits: Vec<Duration> =
-        items.iter().map(|i| dequeue.duration_since(i.work.received)).collect();
+    arena.queue_waits.clear();
+    arena
+        .queue_waits
+        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
 
     // raw frames still flow through the per-client frame stack so shard-local
     // session state stays meaningful under the fleet gateway (outside the
-    // modelled window, exactly as before this PR)
-    let mut to_encode: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+    // modelled window, exactly as before this PR) — stacked observations
+    // now land directly in arena batch rows
+    let t_pack = Instant::now();
+    let feat_dim = items
+        .iter()
+        .map(|i| match &i.work.payload {
+            Payload::RawRgba { x, .. } => 9 * (*x as usize) * (*x as usize),
+            Payload::Features { .. } => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    arena.begin(0, n, feat_dim);
+    encoder.to_encode.clear();
     for (i, item) in items.iter().enumerate() {
         if let Payload::RawRgba { x, data } = &item.work.payload {
-            let obs = sessions.ingest_rgba(item.work.client, *x as usize, data)?;
+            let x = *x as usize;
+            let row = arena.row_mut(i);
+            sessions.ingest_rgba_into(item.work.client, x, data, &mut row[..9 * x * x])?;
             // a zero-sized frame has nothing to encode (and a 0-pixel plan
             // would be degenerate): fall back to the zero-action reply
-            if spec.encode && *x > 0 {
-                to_encode.push((i, *x as usize, obs));
+            if spec.encode && x > 0 {
+                encoder.to_encode.push((i, x));
             }
         }
     }
+    let pack_time = t_pack.elapsed();
 
     // the modelled accelerator: launch overhead + linear per-item cost.
     // Real compiled-shader encodes run inside the window and only their
     // own time is deducted, so encode:false batches sleep the full budget.
     let t_exec = Instant::now();
-    let mut actions: HashMap<usize, Vec<f32>> = HashMap::new();
-    for (i, x, obs) in to_encode {
-        actions.insert(i, encoder.encode(x, obs, spec.action_dim)?);
+    arena.begin_actions(n, spec.action_dim);
+    // take the worklist so the encoder stays borrowable inside the loop
+    // (mem::take swaps in an empty Vec — no allocation either way)
+    let to_encode = std::mem::take(&mut encoder.to_encode);
+    for &(i, x) in &to_encode {
+        let (row, act) = arena.row_and_action(i, spec.action_dim);
+        encoder.encode_into(x, &row[..9 * x * x], act)?;
     }
+    encoder.to_encode = to_encode;
     let modelled = spec.fixed + spec.per_item * n as u32;
     let spent = t_exec.elapsed();
     if modelled > spent {
@@ -492,21 +554,30 @@ fn run_batch_sim(
     }
     let exec_time = t_exec.elapsed();
 
-    let services: Vec<Duration> = items.iter().map(|i| i.work.received.elapsed()).collect();
-    metrics.record_batch(route, n, 0, &queue_waits, exec_time, &services);
+    arena.services.clear();
+    arena.services.extend(items.iter().map(|i| i.work.received.elapsed()));
+    metrics.record_batch(
+        route,
+        n,
+        0,
+        pack_time,
+        &arena.queue_waits,
+        exec_time,
+        &arena.services,
+    );
 
     for (i, item) in items.iter().enumerate() {
-        let action = actions.remove(&i).unwrap_or_else(|| vec![0.0; spec.action_dim]);
-        let resp = Msg::Response(Response {
-            client: item.work.client,
-            id: item.work.id,
-            action,
-        });
+        let a0 = i * spec.action_dim;
+        encode_response_into(
+            item.work.client,
+            item.work.id,
+            &arena.actions[a0..a0 + spec.action_dim],
+            &mut arena.frame,
+        );
         let mut w = item.work.reply.lock().unwrap();
-        if let Err(e) = write_msg(&mut *w, &resp) {
+        if let Err(e) = write_frame(&mut *w, &arena.frame) {
             debug!("reply to client {}: {e}", item.work.client);
         }
-        let _ = w.flush();
     }
     Ok(())
 }
@@ -515,15 +586,18 @@ fn run_batch(
     rt: &Runtime,
     exec: &mut RouteExec,
     route: Route,
-    items: Vec<super::batcher::Item<Work>>,
+    items: &[super::batcher::Item<Work>],
     sessions: &mut SessionManager,
+    arena: &mut BatchArena,
     metrics: &Metrics,
 ) -> Result<()> {
     let n = items.len();
     let b = pick_batch(n, &exec.ladder);
     let dequeue = Instant::now();
-    let queue_waits: Vec<Duration> =
-        items.iter().map(|i| dequeue.duration_since(i.work.received)).collect();
+    arena.queue_waits.clear();
+    arena
+        .queue_waits
+        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
 
     // compile-on-first-use per ladder entry
     if !exec.exes.contains_key(&b) {
@@ -532,56 +606,64 @@ fn run_batch(
     }
     let exe = exec.exes[&b].clone();
 
-    // assemble the batched input tensor
+    // fused dequantise-and-pack: each request's features land directly in
+    // its arena batch row (padding rows are zeroed by `begin`) — no
+    // per-request `Vec<f32>` anywhere on this path
     let in_spec = &exe.spec.inputs[1];
     let per_item: usize = in_spec.shape[1..].iter().product();
-    let mut data = vec![0.0f32; in_spec.elems()];
+    let t_pack = Instant::now();
+    arena.begin(n, b, per_item);
     for (i, item) in items.iter().enumerate() {
-        let dst = &mut data[i * per_item..(i + 1) * per_item];
+        let row = arena.row_mut(i);
         match &item.work.payload {
             Payload::RawRgba { x, data: rgba } => {
-                let obs = sessions.ingest_rgba(item.work.client, *x as usize, rgba)?;
-                anyhow::ensure!(obs.len() == per_item, "obs len {} != {per_item}", obs.len());
-                dst.copy_from_slice(&obs);
+                sessions.ingest_rgba_into(item.work.client, *x as usize, rgba, row)?;
             }
             Payload::Features { scale, data: q, .. } => {
                 anyhow::ensure!(q.len() == per_item, "feat len {} != {per_item}", q.len());
-                // hoist the per-byte div out of the dequant loop
-                let step = scale / 255.0;
-                for (o, &byte) in dst.iter_mut().zip(q.iter()) {
-                    *o = byte as f32 * step;
-                }
+                dequantize_features_into(*scale, q, row);
             }
         }
     }
+    let pack_time = t_pack.elapsed();
 
-    // execute with device-resident params (host batch staged per call)
+    // execute with device-resident params; the arena matrix is staged
+    // directly and outputs decode into the route's pooled `Value`s
     let t_exec = Instant::now();
-    let batch_val = Value::f32(&in_spec.shape, data);
-    let batch_dev = rt.to_device(&batch_val)?;
-    let out = exe.run_device(&[&exec.params, &batch_dev])?;
+    let batch_dev = rt.to_device_f32(&in_spec.shape, arena.matrix())?;
+    exe.run_device_into(&[&exec.params, &batch_dev], &mut exec.outs)?;
     let exec_time = t_exec.elapsed();
 
-    let actions = out[0].as_f32()?;
+    let actions = exec.outs[0].as_f32()?;
     let adim = exe.spec.outputs[0].shape[1];
 
     // record metrics BEFORE writing responses: a client that just received
     // its action must observe its request in the metrics snapshot
-    let services: Vec<Duration> = items.iter().map(|i| i.work.received.elapsed()).collect();
-    metrics.record_batch(route, n, b - n, &queue_waits, exec_time, &services);
+    arena.services.clear();
+    arena.services.extend(items.iter().map(|i| i.work.received.elapsed()));
+    metrics.record_batch(
+        route,
+        n,
+        b - n,
+        pack_time,
+        &arena.queue_waits,
+        exec_time,
+        &arena.services,
+    );
 
-    // respond
+    // respond from the contiguous action matrix through the pooled reply
+    // frame — no per-action `.to_vec()`, no per-reply encode allocation
     for (i, item) in items.iter().enumerate() {
-        let resp = Msg::Response(Response {
-            client: item.work.client,
-            id: item.work.id,
-            action: actions[i * adim..(i + 1) * adim].to_vec(),
-        });
+        encode_response_into(
+            item.work.client,
+            item.work.id,
+            &actions[i * adim..(i + 1) * adim],
+            &mut arena.frame,
+        );
         let mut w = item.work.reply.lock().unwrap();
-        if let Err(e) = write_msg(&mut *w, &resp) {
+        if let Err(e) = write_frame(&mut *w, &arena.frame) {
             debug!("reply to client {}: {e}", item.work.client);
         }
-        let _ = w.flush();
     }
     Ok(())
 }

@@ -11,11 +11,17 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 /// One client's stacking state: up to 3 most-recent frames as normalised
-/// 3-channel planes.
+/// 3-channel planes, held in a fixed ring so steady-state ingest reuses
+/// the same three buffers forever (no per-request allocation, no
+/// shift-down of older frames).
 #[derive(Debug, Default)]
 struct ClientState {
-    /// each entry: 3*x*x floats (CHW)
-    frames: Vec<Vec<f32>>,
+    /// ring of the 3 most-recent planes, each 3*x*x floats (CHW)
+    ring: [Vec<f32>; 3],
+    /// frames ingested since the last reset, saturating at 3
+    count: usize,
+    /// ring slot holding the newest frame
+    newest: usize,
     x: usize,
 }
 
@@ -37,18 +43,37 @@ impl SessionManager {
         self.clients.remove(&client);
     }
 
-    /// Ingest an RGBA frame (4·x² bytes) and return the stacked 9×x×x
-    /// observation (oldest→newest).
-    pub fn ingest_rgba(&mut self, client: u32, x: usize, rgba: &[u8]) -> Result<Vec<f32>> {
+    /// Ingest an RGBA frame (4·x² bytes), writing the stacked 9×x×x
+    /// observation (oldest→newest) directly into `out` — a batch-matrix
+    /// row on the serving hot path. Steady-state calls touch the heap
+    /// only until the client's ring buffers are warm.
+    pub fn ingest_rgba_into(
+        &mut self,
+        client: u32,
+        x: usize,
+        rgba: &[u8],
+        out: &mut [f32],
+    ) -> Result<()> {
         ensure!(rgba.len() == 4 * x * x, "rgba size {} != {}", rgba.len(), 4 * x * x);
+        ensure!(out.len() == 9 * x * x, "obs slice {} != {}", out.len(), 9 * x * x);
         let st = self.clients.entry(client).or_default();
         if st.x != x {
             // resolution change (or first frame): reset the stack
-            st.frames.clear();
+            st.count = 0;
+            st.newest = 0;
             st.x = x;
         }
-        // RGBA HWC u8 -> RGB CHW f32/255 (alpha dropped)
-        let mut plane = vec![0.0f32; 3 * x * x];
+        // RGBA HWC u8 -> RGB CHW f32/255 (alpha dropped), into the ring
+        // slot after the newest (the expiring oldest slot once full)
+        let slot = if st.count == 0 { 0 } else { (st.newest + 1) % 3 };
+        let plane = &mut st.ring[slot];
+        if plane.len() != 3 * x * x {
+            // first use of this slot (or a resolution change): size it once;
+            // the pixel loop below overwrites every element, so a warm plane
+            // needs no zero-fill
+            plane.clear();
+            plane.resize(3 * x * x, 0.0);
+        }
         for y in 0..x {
             for xx in 0..x {
                 let i = (y * x + xx) * 4;
@@ -57,18 +82,26 @@ impl SessionManager {
                 }
             }
         }
-        if st.frames.is_empty() {
-            st.frames = vec![plane.clone(), plane.clone(), plane];
-        } else {
-            st.frames.push(plane);
-            if st.frames.len() > 3 {
-                st.frames.remove(0);
+        st.newest = slot;
+        st.count = (st.count + 1).min(3);
+        // stack oldest→newest; while count < 3 the first frame repeats,
+        // matching the training-time FrameStack reset semantics
+        let n = 3 * x * x;
+        if n > 0 {
+            for (j, dst) in out.chunks_mut(n).enumerate() {
+                let back = (2 - j).min(st.count - 1); // frames back from newest
+                let slot = (st.newest + 3 - back) % 3;
+                dst.copy_from_slice(&st.ring[slot]);
             }
         }
-        let mut obs = Vec::with_capacity(9 * x * x);
-        for f in &st.frames {
-            obs.extend_from_slice(f);
-        }
+        Ok(())
+    }
+
+    /// Ingest an RGBA frame and return the stacked observation
+    /// (allocating wrapper over [`SessionManager::ingest_rgba_into`]).
+    pub fn ingest_rgba(&mut self, client: u32, x: usize, rgba: &[u8]) -> Result<Vec<f32>> {
+        let mut obs = vec![0.0f32; 9 * x * x];
+        self.ingest_rgba_into(client, x, rgba, &mut obs)?;
         Ok(obs)
     }
 }
@@ -133,6 +166,38 @@ mod tests {
     fn wrong_size_rejected() {
         let mut s = SessionManager::new();
         assert!(s.ingest_rgba(1, 4, &[0; 10]).is_err());
+    }
+
+    #[test]
+    fn into_variant_matches_wrapper_across_sequences() {
+        // drive two managers through the same frame stream (including a
+        // resolution change and interleaved clients); the in-place variant
+        // must produce the wrapper's observations exactly
+        let mut a = SessionManager::new();
+        let mut b = SessionManager::new();
+        let stream: [(u32, usize, u8); 6] =
+            [(1, 4, 10), (2, 4, 99), (1, 4, 20), (1, 2, 50), (1, 2, 60), (2, 4, 7)];
+        for (client, x, v) in stream {
+            let f = frame(x, v);
+            let want = a.ingest_rgba(client, x, &f).unwrap();
+            let mut got = vec![f32::NAN; 9 * x * x];
+            b.ingest_rgba_into(client, x, &f, &mut got).unwrap();
+            assert_eq!(want, got, "client {client} x {x} v {v}");
+        }
+    }
+
+    #[test]
+    fn into_variant_rejects_wrong_out_len() {
+        let mut s = SessionManager::new();
+        let mut out = vec![0.0f32; 9 * 16 - 1];
+        assert!(s.ingest_rgba_into(1, 4, &frame(4, 1), &mut out).is_err());
+    }
+
+    #[test]
+    fn zero_sized_frame_is_a_no_op_observation() {
+        let mut s = SessionManager::new();
+        let obs = s.ingest_rgba(3, 0, &[]).unwrap();
+        assert!(obs.is_empty());
     }
 
     #[test]

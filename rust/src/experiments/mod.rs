@@ -11,4 +11,7 @@ pub mod serving;
 pub use execution::{fig2_framesize, fig3_sustained, fig4_resources, SustainedTrace};
 pub use hotpath::{run_hotpath, HotpathReport, HotpathRow};
 pub use learning::{learning_table, table1_algorithms, LearningScale};
-pub use serving::{fig5_breakdown, table5_latency_sim, table6_scalability_sim, ServerCostModel};
+pub use serving::{
+    bench_payloads, fig5_breakdown, run_serve_hotpath, table5_latency_sim, table6_scalability_sim,
+    ServeDriver, ServeEngine, ServeHotpathCell, ServeHotpathReport, ServerCostModel,
+};

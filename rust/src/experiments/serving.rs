@@ -8,9 +8,21 @@
 //!   * **real** — task-scale (X=84) over the actual coordinator, loopback
 //!     TCP, and PJRT executables (driven from benches/examples).
 
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
 use crate::analysis::latency::DecisionBreakdown;
+use crate::coordinator::batcher::{BatchCollector, BatchPolicy, Item};
+use crate::coordinator::{BatchArena, Route, SessionManager};
 use crate::device::{Device, ExecPath};
+use crate::net::framing::{
+    dequantize_features, dequantize_features_into, encode_response_into, quantize_features, Msg,
+    Payload, Response,
+};
 use crate::net::shaped::LinkModel;
+use crate::net::tcp::{write_frame, write_msg};
 use crate::util::rng::Rng;
 use crate::util::simclock::EventQueue;
 use crate::util::stats::Samples;
@@ -234,6 +246,431 @@ pub fn table6_scalability_sim(rate_hz: f64, p95_budget_s: f64) -> (Table, usize,
     (t, server_only, split)
 }
 
+// ---------------------------------------------------------------------------
+// Serve hot path (real mode, artifact-free): the coordinator's
+// ingest→batch→policy→reply pipeline, legacy per-request engine vs the
+// pooled BatchArena engine. `benches/serve_hotpath.rs` wraps this into the
+// before/after matrix and emits `BENCH_serve.json`; the legacy engine is
+// kept as the bit-exact oracle (identical reply bytes for identical
+// inputs), enforced by `rust/tests/serve_pack_props.rs`.
+// ---------------------------------------------------------------------------
+
+/// Which implementation of the pipeline machinery runs a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeEngine {
+    /// seed-coordinator behaviour: fresh zeroed batch matrix per batch,
+    /// per-request `dequantize_features` / `ingest_rgba` vectors, HashMap
+    /// action scatter, per-reply `Msg::Response` encode allocation
+    Legacy,
+    /// the BatchArena path: fused dequantise/ingest pack into pooled rows,
+    /// flat action buffer, pooled reply frame
+    Pooled,
+}
+
+impl ServeEngine {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeEngine::Legacy => "legacy",
+            ServeEngine::Pooled => "pooled",
+        }
+    }
+}
+
+/// One request as the harness fleet replays it. The payload is borrowed
+/// from the per-client pool, so the measured loop owns no request
+/// allocations (on the wire path the reader thread owns the decode; that
+/// cost is identical for both engines and outside this harness).
+#[derive(Debug)]
+pub struct BenchRequest<'a> {
+    pub client: u32,
+    pub id: u64,
+    pub payload: &'a Payload,
+}
+
+/// The stand-in policy head shared by both engines: strided sums over the
+/// batch row — deterministic, O(feat_dim/stride) per action, cheap enough
+/// that the measured difference is the pipeline machinery itself.
+const HEAD_STRIDE: usize = 97;
+
+fn head_into(row: &[f32], out: &mut [f32]) {
+    for (a, o) in out.iter_mut().enumerate() {
+        let mut sum = 0.0f32;
+        let mut k = a;
+        while k < row.len() {
+            sum += row[k];
+            k += HEAD_STRIDE;
+        }
+        *o = sum;
+    }
+}
+
+/// Mutable pipeline state shared by both engines (sessions evolve
+/// identically because both engines ingest through the same manager
+/// semantics). Replies are written into `sink`, standing in for the
+/// per-connection sockets, and retained per round so engines can be
+/// compared bit-for-bit.
+pub struct ServeHarness {
+    pub sessions: SessionManager,
+    pub arena: BatchArena,
+    pub action_dim: usize,
+    pub sink: Vec<u8>,
+}
+
+impl ServeHarness {
+    pub fn new(action_dim: usize) -> Self {
+        ServeHarness {
+            sessions: SessionManager::new(),
+            arena: BatchArena::new(),
+            action_dim,
+            sink: Vec::new(),
+        }
+    }
+}
+
+/// One legacy batch, mirroring the seed coordinator's request path.
+pub fn run_batch_legacy(
+    h: &mut ServeHarness,
+    items: &[Item<BenchRequest<'_>>],
+    feat_dim: usize,
+) -> Result<()> {
+    let n = items.len();
+    // fresh zeroed batch matrix every batch
+    let mut data = vec![0.0f32; n * feat_dim];
+    for (i, item) in items.iter().enumerate() {
+        let dst = &mut data[i * feat_dim..(i + 1) * feat_dim];
+        match item.work.payload {
+            Payload::RawRgba { x, data: rgba } => {
+                let obs = h.sessions.ingest_rgba(item.work.client, *x as usize, rgba)?;
+                anyhow::ensure!(obs.len() == feat_dim, "obs len {} != {feat_dim}", obs.len());
+                dst.copy_from_slice(&obs);
+            }
+            Payload::Features { scale, data: q, .. } => {
+                anyhow::ensure!(q.len() == feat_dim, "feat len {} != {feat_dim}", q.len());
+                // the per-request dequantised vector the tentpole removes
+                let f = dequantize_features(*scale, q);
+                dst.copy_from_slice(&f);
+            }
+        }
+    }
+    // per-item action vectors scattered through a HashMap (the seed Sim
+    // backend's shape)
+    let mut actions: HashMap<usize, Vec<f32>> = HashMap::new();
+    for i in 0..n {
+        let mut a = vec![0.0f32; h.action_dim];
+        head_into(&data[i * feat_dim..(i + 1) * feat_dim], &mut a);
+        actions.insert(i, a);
+    }
+    for (i, item) in items.iter().enumerate() {
+        let action = actions.remove(&i).unwrap_or_else(|| vec![0.0; h.action_dim]);
+        let resp = Msg::Response(Response { client: item.work.client, id: item.work.id, action });
+        write_msg(&mut h.sink, &resp)?;
+    }
+    Ok(())
+}
+
+/// One pooled batch: the BatchArena path, as `coordinator::server` runs it.
+pub fn run_batch_pooled(
+    h: &mut ServeHarness,
+    items: &[Item<BenchRequest<'_>>],
+    feat_dim: usize,
+) -> Result<()> {
+    let n = items.len();
+    h.arena.begin(n, n, feat_dim);
+    for (i, item) in items.iter().enumerate() {
+        let row = h.arena.row_mut(i);
+        match item.work.payload {
+            Payload::RawRgba { x, data: rgba } => {
+                h.sessions.ingest_rgba_into(item.work.client, *x as usize, rgba, row)?;
+            }
+            Payload::Features { scale, data: q, .. } => {
+                anyhow::ensure!(q.len() == feat_dim, "feat len {} != {feat_dim}", q.len());
+                dequantize_features_into(*scale, q, row);
+            }
+        }
+    }
+    h.arena.begin_actions(n, h.action_dim);
+    for i in 0..n {
+        let (row, act) = h.arena.row_and_action(i, h.action_dim);
+        head_into(row, act);
+    }
+    for (i, item) in items.iter().enumerate() {
+        let a0 = i * h.action_dim;
+        encode_response_into(
+            item.work.client,
+            item.work.id,
+            &h.arena.actions[a0..a0 + h.action_dim],
+            &mut h.arena.frame,
+        );
+        write_frame(&mut h.sink, &h.arena.frame)?;
+    }
+    Ok(())
+}
+
+/// Deterministic per-client request payloads for one route. Returns the
+/// payload pool and the route's feature dimension (batch-row width).
+pub fn bench_payloads(
+    route: Route,
+    clients: usize,
+    x: usize,
+    feat: (u16, u16, u16),
+    seed: u64,
+) -> (Vec<(u32, Payload)>, usize) {
+    let mut rng = Rng::new(seed);
+    let mut payloads = Vec::with_capacity(clients);
+    let feat_dim = match route {
+        Route::Full => 9 * x * x,
+        Route::Split => feat.0 as usize * feat.1 as usize * feat.2 as usize,
+    };
+    for c in 0..clients {
+        let payload = match route {
+            Route::Full => {
+                let data: Vec<u8> =
+                    (0..4 * x * x).map(|_| (rng.uniform() * 255.0) as u8).collect();
+                Payload::RawRgba { x: x as u16, data }
+            }
+            Route::Split => {
+                let f: Vec<f32> =
+                    (0..feat_dim).map(|_| (rng.uniform() * 3.0) as f32).collect();
+                let (scale, data) = quantize_features(&f);
+                Payload::Features { c: feat.0, h: feat.1, w: feat.2, scale, data }
+            }
+        };
+        payloads.push((c as u32, payload));
+    }
+    (payloads, feat_dim)
+}
+
+/// Replays rounds of one request per client through the batcher and one
+/// engine. All state (collector, drained-batch storage, harness arena)
+/// persists across rounds, so pooled steady-state rounds are
+/// allocation-free — the property `rust/tests/serve_alloc.rs` gates.
+pub struct ServeDriver<'a> {
+    pub harness: ServeHarness,
+    collector: BatchCollector<BenchRequest<'a>>,
+    batch: Vec<Item<BenchRequest<'a>>>,
+    payloads: &'a [(u32, Payload)],
+    feat_dim: usize,
+    next_id: u64,
+}
+
+impl<'a> ServeDriver<'a> {
+    pub fn new(
+        payloads: &'a [(u32, Payload)],
+        max_batch: usize,
+        feat_dim: usize,
+        action_dim: usize,
+    ) -> Self {
+        ServeDriver {
+            harness: ServeHarness::new(action_dim),
+            collector: BatchCollector::new(
+                BatchPolicy { max_batch, max_wait: Duration::ZERO },
+                payloads.len().max(1) * 2,
+            ),
+            batch: Vec::new(),
+            payloads,
+            feat_dim,
+            next_id: 0,
+        }
+    }
+
+    /// One round: enqueue one request per client, then drain every ready
+    /// batch through `engine`. Reply bytes of the whole round are left in
+    /// `harness.sink`.
+    pub fn round(&mut self, engine: ServeEngine) -> Result<()> {
+        self.harness.sink.clear();
+        let now = Instant::now();
+        let payloads = self.payloads;
+        for (client, payload) in payloads {
+            self.next_id += 1;
+            let work = BenchRequest { client: *client, id: self.next_id, payload };
+            anyhow::ensure!(
+                self.collector.push(Route::of(payload), work, now).is_none(),
+                "bench collector saturated"
+            );
+        }
+        while let Some(route) = self.collector.ready(now) {
+            self.collector.take_into(route, &mut self.batch);
+            match engine {
+                ServeEngine::Legacy => {
+                    run_batch_legacy(&mut self.harness, &self.batch, self.feat_dim)?
+                }
+                ServeEngine::Pooled => {
+                    run_batch_pooled(&mut self.harness, &self.batch, self.feat_dim)?
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Timed rounds (with warmup): seconds per round.
+    pub fn rounds(&mut self, engine: ServeEngine, iters: usize) -> Result<f64> {
+        for _ in 0..(iters / 10).max(1) {
+            self.round(engine)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            self.round(engine)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / iters as f64)
+    }
+
+    pub fn sink(&self) -> &[u8] {
+        &self.harness.sink
+    }
+
+    pub fn requests_per_round(&self) -> usize {
+        self.payloads.len()
+    }
+}
+
+/// One measured cell of the serve hot-path matrix.
+#[derive(Debug, Clone)]
+pub struct ServeHotpathCell {
+    /// "server-only" | "split"
+    pub route: &'static str,
+    /// "legacy" | "pooled"
+    pub engine: &'static str,
+    pub clients: usize,
+    pub max_batch: usize,
+    pub requests_per_sec: f64,
+    pub ns_per_request: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeHotpathReport {
+    pub iters: usize,
+    pub action_dim: usize,
+    /// raw-observation side length (server-only route)
+    pub raw_x: usize,
+    /// split feature dims (c, h, w)
+    pub feat: (u16, u16, u16),
+    pub max_batch: usize,
+    pub cells: Vec<ServeHotpathCell>,
+    /// pooled/legacy requests-per-sec ratios at clients == max_batch
+    pub speedup_full_b: f64,
+    pub speedup_split_b: f64,
+    /// heap allocations per steady-state pooled request, measured by the
+    /// bench binary's counting allocator; None when the harness runs
+    /// without one
+    pub allocs_per_request: Option<u64>,
+}
+
+fn cell_rps(cells: &[ServeHotpathCell], route: &str, engine: &str, clients: usize) -> f64 {
+    cells
+        .iter()
+        .find(|c| c.route == route && c.engine == engine && c.clients == clients)
+        .map(|c| c.requests_per_sec)
+        .unwrap_or(0.0)
+}
+
+/// Run the full serve hot-path matrix: every (route, engine, clients)
+/// cell, fresh pipeline state per cell so session stacks are comparable.
+pub fn run_serve_hotpath(
+    clients_matrix: &[usize],
+    max_batch: usize,
+    iters: usize,
+) -> Result<ServeHotpathReport> {
+    let action_dim = 4;
+    let raw_x = 84;
+    let feat = (4u16, 11u16, 11u16);
+    let mut cells = Vec::new();
+    for route in [Route::Full, Route::Split] {
+        for &clients in clients_matrix {
+            let (payloads, feat_dim) = bench_payloads(route, clients, raw_x, feat, 0xBA7C4);
+            for engine in [ServeEngine::Legacy, ServeEngine::Pooled] {
+                let mut driver = ServeDriver::new(&payloads, max_batch, feat_dim, action_dim);
+                let per_round = driver.rounds(engine, iters)?;
+                let per_req = per_round / clients.max(1) as f64;
+                cells.push(ServeHotpathCell {
+                    route: route.name(),
+                    engine: engine.name(),
+                    clients,
+                    max_batch,
+                    requests_per_sec: 1.0 / per_req,
+                    ns_per_request: per_req * 1e9,
+                });
+            }
+        }
+    }
+    let speedup = |route: &str| {
+        let legacy = cell_rps(&cells, route, "legacy", max_batch);
+        if legacy > 0.0 {
+            cell_rps(&cells, route, "pooled", max_batch) / legacy
+        } else {
+            0.0
+        }
+    };
+    Ok(ServeHotpathReport {
+        iters,
+        action_dim,
+        raw_x,
+        feat,
+        max_batch,
+        speedup_full_b: speedup("server-only"),
+        speedup_split_b: speedup("split"),
+        cells,
+        allocs_per_request: None,
+    })
+}
+
+impl ServeHotpathReport {
+    /// Machine-readable record for `BENCH_serve.json` (no serde offline —
+    /// hand-rolled, stable field order; see DESIGN.md §5 for semantics).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"bench\": \"serve_hotpath\",\n");
+        s.push_str(&format!("  \"iters\": {},\n", self.iters));
+        s.push_str(&format!("  \"action_dim\": {},\n", self.action_dim));
+        s.push_str(&format!("  \"raw_x\": {},\n", self.raw_x));
+        s.push_str(&format!(
+            "  \"feat_dims\": [{}, {}, {}],\n",
+            self.feat.0, self.feat.1, self.feat.2
+        ));
+        s.push_str(&format!("  \"max_batch\": {},\n", self.max_batch));
+        s.push_str(&format!(
+            "  \"speedup_full_at_max_batch\": {:.3},\n",
+            self.speedup_full_b
+        ));
+        s.push_str(&format!(
+            "  \"speedup_split_at_max_batch\": {:.3},\n",
+            self.speedup_split_b
+        ));
+        match self.allocs_per_request {
+            Some(n) => s.push_str(&format!("  \"steady_state_allocs_per_request\": {n},\n")),
+            None => s.push_str("  \"steady_state_allocs_per_request\": null,\n"),
+        }
+        s.push_str("  \"gates\": {\n");
+        s.push_str("    \"min_speedup_full_at_max_batch\": 2.0,\n");
+        s.push_str("    \"max_steady_state_allocs_per_request\": 0,\n");
+        s.push_str(&format!(
+            "    \"speedup_pass\": {},\n",
+            self.speedup_full_b >= 2.0
+        ));
+        match self.allocs_per_request {
+            Some(n) => s.push_str(&format!("    \"alloc_pass\": {}\n", n == 0)),
+            None => s.push_str("    \"alloc_pass\": null\n"),
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"results\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"route\": \"{}\", \"engine\": \"{}\", \"clients\": {}, \
+                 \"max_batch\": {}, \"requests_per_sec\": {:.1}, \"ns_per_request\": {:.0}}}{}\n",
+                c.route,
+                c.engine,
+                c.clients,
+                c.max_batch,
+                c.requests_per_sec,
+                c.ns_per_request,
+                if i + 1 == self.cells.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,5 +733,57 @@ mod tests {
     fn bits_helpers_consistent_with_wire() {
         assert_eq!(raw_bits(84) as usize, 84 * 84 * 32);
         assert_eq!(feature_bits(84, 3, 4) as usize, 4 * 11 * 11 * 8);
+    }
+
+    #[test]
+    fn serve_engines_are_bit_exact_on_both_routes() {
+        // small geometry so the test is quick; 3 rounds exercise the
+        // evolving per-client frame stacks on the raw route
+        for route in [Route::Full, Route::Split] {
+            let (payloads, feat_dim) = bench_payloads(route, 5, 8, (4, 3, 3), 42);
+            let mut legacy = ServeDriver::new(&payloads, 2, feat_dim, 4);
+            let mut pooled = ServeDriver::new(&payloads, 2, feat_dim, 4);
+            for round in 0..3 {
+                legacy.round(ServeEngine::Legacy).unwrap();
+                pooled.round(ServeEngine::Pooled).unwrap();
+                assert!(!legacy.sink().is_empty());
+                assert_eq!(
+                    legacy.sink(),
+                    pooled.sink(),
+                    "reply bytes diverged on {} round {round}",
+                    route.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn serve_hotpath_report_covers_matrix_and_emits_gates() {
+        let rep = run_serve_hotpath(&[1, 2], 2, 3).unwrap();
+        // 2 routes x 2 clients x 2 engines
+        assert_eq!(rep.cells.len(), 8);
+        assert!(rep.cells.iter().all(|c| c.requests_per_sec > 0.0));
+        assert!(rep.speedup_full_b > 0.0);
+        assert!(rep.speedup_split_b > 0.0);
+        let json = rep.to_json();
+        assert!(json.contains("\"speedup_full_at_max_batch\""));
+        assert!(json.contains("\"min_speedup_full_at_max_batch\": 2.0"));
+        assert!(json.contains("\"steady_state_allocs_per_request\": null"));
+        assert!(json.contains("\"alloc_pass\": null"));
+        assert!(json.contains("\"engine\": \"pooled\""));
+    }
+
+    #[test]
+    fn bench_payloads_are_deterministic_and_sized() {
+        let (a, da) = bench_payloads(Route::Split, 3, 84, (4, 11, 11), 9);
+        let (b, db) = bench_payloads(Route::Split, 3, 84, (4, 11, 11), 9);
+        assert_eq!(da, 4 * 11 * 11);
+        assert_eq!(da, db);
+        assert_eq!(a, b);
+        let (r, dr) = bench_payloads(Route::Full, 2, 16, (4, 11, 11), 9);
+        assert_eq!(dr, 9 * 16 * 16);
+        for (_, p) in &r {
+            assert_eq!(p.wire_bytes(), 4 * 16 * 16);
+        }
     }
 }

@@ -102,6 +102,7 @@ mod tests {
                 Route::Split,
                 1,
                 0,
+                Duration::from_micros(20),
                 &[Duration::from_millis(1)],
                 Duration::from_millis(1),
                 &[Duration::from_millis(ms)],

@@ -25,8 +25,10 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 use log::{debug, warn};
 
-use crate::net::framing::{Hello, Msg};
-use crate::net::tcp::{read_msg, write_msg};
+use crate::net::framing::{
+    Hello, Msg, MSG_HELLO, MSG_REQUEST_FEAT, MSG_REQUEST_RAW, MSG_RESPONSE,
+};
+use crate::net::tcp::{read_msg, read_raw_frame, write_msg, write_raw_frame};
 
 use super::health::{HealthConfig, HealthMonitor};
 use super::topology::{ShardId, ShardState, Topology};
@@ -319,44 +321,66 @@ fn pump_session(
         counters.count_request(shard_id);
     }
 
+    // Both pumps forward frames **verbatim**: one pooled buffer per
+    // direction, a one-byte type peek for counters/filtering, no
+    // decode/re-encode round trip — per-frame cost is a read, a tag
+    // branch, and a write (DistrEdge's partitioned-serving lesson: data
+    // movement, not compute, dominates the proxy path).
+
     // shard -> client pump (hello acks already handled above)
     let mut up_read = upstream.try_clone().context("clone upstream")?;
     let mut client_write = client.try_clone().context("clone client stream")?;
     let pump_counters = counters.clone();
     let back = std::thread::Builder::new()
         .name("gw-pump".into())
-        .spawn(move || loop {
-            match read_msg(&mut up_read) {
-                Ok(Some(Msg::Hello(_))) => continue,
-                Ok(Some(m)) => {
-                    if matches!(m, Msg::Response(_)) {
-                        pump_counters.forwarded_responses.fetch_add(1, Ordering::SeqCst);
+        .spawn(move || {
+            let mut frame = Vec::new();
+            loop {
+                match read_raw_frame(&mut up_read, &mut frame) {
+                    Ok(true) => {
+                        match frame[0] {
+                            // shard-side hello acks stay internal to the fleet
+                            MSG_HELLO => continue,
+                            MSG_RESPONSE => {
+                                pump_counters
+                                    .forwarded_responses
+                                    .fetch_add(1, Ordering::SeqCst);
+                            }
+                            MSG_REQUEST_RAW | MSG_REQUEST_FEAT => {}
+                            // a corrupt/version-skewed shard must surface at
+                            // the gateway boundary, not be relayed onward
+                            other => {
+                                warn!("shard {shard_id} sent unknown frame type {other}");
+                                break;
+                            }
+                        }
+                        if write_raw_frame(&mut client_write, &frame).is_err() {
+                            break;
+                        }
                     }
-                    if write_msg(&mut client_write, &m).is_err() {
-                        break;
-                    }
+                    Ok(false) | Err(_) => break,
                 }
-                Ok(None) | Err(_) => break,
             }
         })
         .context("spawn return pump")?;
 
     // client -> shard pump, inline
     let forward = (|| -> Result<()> {
+        let mut frame = Vec::new();
         loop {
             if shutdown.load(Ordering::SeqCst) {
                 break;
             }
-            match read_msg(client)? {
-                Some(m) => {
-                    if matches!(m, Msg::Request(_)) {
-                        counters.count_request(shard_id);
-                    }
-                    write_msg(&mut upstream, &m)
-                        .with_context(|| format!("forward to {shard_id}"))?;
-                }
-                None => break, // client done
+            if !read_raw_frame(client, &mut frame)? {
+                break; // client done
             }
+            match frame[0] {
+                MSG_REQUEST_RAW | MSG_REQUEST_FEAT => counters.count_request(shard_id),
+                MSG_HELLO | MSG_RESPONSE => {}
+                other => anyhow::bail!("client sent unknown frame type {other}"),
+            }
+            write_raw_frame(&mut upstream, &frame)
+                .with_context(|| format!("forward to {shard_id}"))?;
         }
         Ok(())
     })();

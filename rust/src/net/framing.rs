@@ -111,56 +111,70 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Patch the 4-byte length prefix of a frame assembled by an
+/// `encode*_into` writer (everything after the prefix counts).
+fn seal_frame(out: &mut [u8]) {
+    let len = (out.len() - 4) as u32;
+    out[0..4].copy_from_slice(&len.to_le_bytes());
+}
+
 impl Msg {
-    /// Encode as a length-prefixed frame.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::new();
-        let ty = match self {
+    /// Encode as a length-prefixed frame into a caller-owned buffer
+    /// (cleared, then filled; capacity is reused across frames — the
+    /// serving reply path pools one buffer per executor).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&[0u8; 4]); // length prefix, sealed below
+        match self {
             Msg::Hello(h) => {
-                put_u32(&mut body, h.client);
-                body.push(h.split as u8);
+                out.push(MSG_HELLO);
+                put_u32(out, h.client);
+                out.push(h.split as u8);
                 match h.shard {
                     Some(s) => {
-                        body.push(1);
-                        put_u16(&mut body, s);
+                        out.push(1);
+                        put_u16(out, s);
                     }
-                    None => body.push(0),
+                    None => out.push(0),
                 }
-                MSG_HELLO
             }
             Msg::Request(r) => match &r.payload {
                 Payload::RawRgba { x, data } => {
-                    put_u32(&mut body, r.client);
-                    put_u64(&mut body, r.id);
-                    put_u16(&mut body, *x);
-                    body.extend_from_slice(data);
-                    MSG_REQUEST_RAW
+                    out.push(MSG_REQUEST_RAW);
+                    put_u32(out, r.client);
+                    put_u64(out, r.id);
+                    put_u16(out, *x);
+                    out.extend_from_slice(data);
                 }
                 Payload::Features { c, h, w, scale, data } => {
-                    put_u32(&mut body, r.client);
-                    put_u64(&mut body, r.id);
-                    put_u16(&mut body, *c);
-                    put_u16(&mut body, *h);
-                    put_u16(&mut body, *w);
-                    put_f32(&mut body, *scale);
-                    body.extend_from_slice(data);
-                    MSG_REQUEST_FEAT
+                    out.push(MSG_REQUEST_FEAT);
+                    put_u32(out, r.client);
+                    put_u64(out, r.id);
+                    put_u16(out, *c);
+                    put_u16(out, *h);
+                    put_u16(out, *w);
+                    put_f32(out, *scale);
+                    out.extend_from_slice(data);
                 }
             },
             Msg::Response(r) => {
-                put_u32(&mut body, r.client);
-                put_u64(&mut body, r.id);
-                put_u16(&mut body, r.action.len() as u16);
+                out.push(MSG_RESPONSE);
+                put_u32(out, r.client);
+                put_u64(out, r.id);
+                put_u16(out, r.action.len() as u16);
                 for a in &r.action {
-                    put_f32(&mut body, *a);
+                    put_f32(out, *a);
                 }
-                MSG_RESPONSE
             }
-        };
-        let mut out = Vec::with_capacity(5 + body.len());
-        put_u32(&mut out, (body.len() + 1) as u32);
-        out.push(ty);
-        out.extend_from_slice(&body);
+        }
+        seal_frame(out);
+    }
+
+    /// Encode as a length-prefixed frame (allocating convenience over
+    /// [`Msg::encode_into`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
         out
     }
 
@@ -245,9 +259,47 @@ pub fn quantize_features(feat: &[f32]) -> (f32, Vec<u8>) {
     (scale, data)
 }
 
-/// Dequantise back to floats.
+/// Encode a response frame straight from an action slice into a pooled
+/// buffer: the reply hot path never materialises a [`Response`] struct or
+/// clones the action vector. Byte-identical to
+/// `Msg::Response(Response { .. }).encode()`.
+pub fn encode_response_into(client: u32, id: u64, action: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]);
+    out.push(MSG_RESPONSE);
+    put_u32(out, client);
+    put_u64(out, id);
+    put_u16(out, action.len() as u16);
+    for a in action {
+        put_f32(out, *a);
+    }
+    seal_frame(out);
+}
+
+/// Dequantise a u8 feature payload directly into a caller-provided slice
+/// (a batch-matrix row) — the fused dequantise-and-pack step of the
+/// serving hot path. A 256-entry stack LUT (one entry per byte value,
+/// computed with the exact per-byte expression of
+/// [`dequantize_features`]) replaces the per-byte divide, mirroring the
+/// per-scale dequant LUT in `shader::compiled`; results are bit-identical
+/// to the allocating wrapper.
+pub fn dequantize_features_into(scale: f32, data: &[u8], out: &mut [f32]) {
+    assert_eq!(data.len(), out.len(), "dequantize into a slice of the wrong length");
+    let mut lut = [0.0f32; 256];
+    for (b, v) in lut.iter_mut().enumerate() {
+        *v = b as f32 / 255.0 * scale;
+    }
+    for (o, &b) in out.iter_mut().zip(data.iter()) {
+        *o = lut[b as usize];
+    }
+}
+
+/// Dequantise back to floats (allocating wrapper over
+/// [`dequantize_features_into`]).
 pub fn dequantize_features(scale: f32, data: &[u8]) -> Vec<f32> {
-    data.iter().map(|&b| b as f32 / 255.0 * scale).collect()
+    let mut out = vec![0.0f32; data.len()];
+    dequantize_features_into(scale, data, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -348,6 +400,64 @@ mod tests {
         quantize_features_into(&short, &mut buf);
         assert_eq!(buf.len(), 8);
         assert!(buf.capacity() >= cap);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches_encode() {
+        let msgs = [
+            Msg::Hello(Hello { client: 7, split: true, shard: Some(3) }),
+            Msg::Request(Request {
+                client: 1,
+                id: 2,
+                payload: Payload::Features { c: 4, h: 3, w: 3, scale: 1.5, data: vec![5; 36] },
+            }),
+            Msg::Request(Request {
+                client: 1,
+                id: 3,
+                payload: Payload::RawRgba { x: 2, data: vec![9; 16] },
+            }),
+            Msg::Response(Response { client: 4, id: 9, action: vec![0.5, -1.0, 2.0] }),
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            m.encode_into(&mut buf);
+            assert_eq!(buf, m.encode());
+            assert_eq!(Msg::decode(&buf[4..]).unwrap(), *m);
+        }
+        // the buffer shrinks logically between frames but keeps capacity
+        let cap = buf.capacity();
+        msgs[0].encode_into(&mut buf);
+        assert!(buf.capacity() >= cap);
+    }
+
+    #[test]
+    fn encode_response_into_matches_msg_encode() {
+        let mut buf = vec![0xAA; 3]; // stale content must be discarded
+        encode_response_into(12, 99, &[0.25, -3.5], &mut buf);
+        let via_msg =
+            Msg::Response(Response { client: 12, id: 99, action: vec![0.25, -3.5] }).encode();
+        assert_eq!(buf, via_msg);
+        // empty action (the back-pressure rejection reply)
+        encode_response_into(1, 2, &[], &mut buf);
+        assert_eq!(buf, Msg::Response(Response { client: 1, id: 2, action: vec![] }).encode());
+    }
+
+    #[test]
+    fn dequantize_into_bit_exact_with_wrapper() {
+        let data: Vec<u8> = (0..=255).collect();
+        for scale in [1e-6f32, 0.37, 1.0, 3.1415, 255.0] {
+            let legacy = dequantize_features(scale, &data);
+            let mut row = vec![f32::NAN; data.len()];
+            dequantize_features_into(scale, &data, &mut row);
+            assert_eq!(legacy, row, "scale {scale}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong length")]
+    fn dequantize_into_rejects_wrong_length() {
+        let mut row = [0.0f32; 3];
+        dequantize_features_into(1.0, &[1, 2], &mut row);
     }
 
     #[test]

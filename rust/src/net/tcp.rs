@@ -11,7 +11,43 @@ use super::framing::{Msg, MAX_FRAME};
 /// Write one message (blocking).
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
     let frame = msg.encode();
-    w.write_all(&frame).context("writing frame")?;
+    write_frame(w, &frame)
+}
+
+/// Write an already-encoded frame (length prefix included), e.g. one built
+/// by `Msg::encode_into` or `framing::encode_response_into` — the pooled
+/// reply path writes straight from the reused buffer.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(frame).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame body (type byte + payload) into a
+/// caller-owned buffer without decoding it — the gateway's forwarding path
+/// copies frames verbatim instead of decode/re-encode round trips.
+/// Returns Ok(false) on clean EOF at a frame boundary.
+pub fn read_raw_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(len > 0 && len <= MAX_FRAME, "bad frame length {len}");
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf.as_mut_slice()).context("reading frame body")?;
+    Ok(true)
+}
+
+/// Write a frame body previously read by [`read_raw_frame`] (re-adds the
+/// length prefix; the body bytes are never re-encoded).
+pub fn write_raw_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
+    let len = body.len() as u32;
+    w.write_all(&len.to_le_bytes()).context("writing frame length")?;
+    w.write_all(body).context("writing frame body")?;
     w.flush().context("flushing frame")?;
     Ok(())
 }
@@ -19,16 +55,10 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
 /// Read one message (blocking). Returns Ok(None) on clean EOF at a frame
 /// boundary.
 pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
-    let mut len_buf = [0u8; 4];
-    match r.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e).context("reading frame length"),
+    let mut body = Vec::new();
+    if !read_raw_frame(r, &mut body)? {
+        return Ok(None);
     }
-    let len = u32::from_le_bytes(len_buf) as usize;
-    ensure!(len > 0 && len <= MAX_FRAME, "bad frame length {len}");
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading frame body")?;
     Ok(Some(Msg::decode(&body)?))
 }
 
@@ -63,6 +93,44 @@ mod tests {
             assert_eq!(&read_msg(&mut cursor).unwrap().unwrap(), m);
         }
         assert!(read_msg(&mut cursor).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn raw_frame_roundtrip_preserves_bytes_and_reuses_buffer() {
+        let msg = Msg::Request(Request {
+            client: 8,
+            id: 21,
+            payload: Payload::Features { c: 4, h: 2, w: 2, scale: 1.25, data: vec![7; 16] },
+        });
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &msg).unwrap();
+        write_msg(&mut wire, &Msg::Response(Response { client: 8, id: 21, action: vec![1.0] }))
+            .unwrap();
+
+        let mut cursor = std::io::Cursor::new(&wire);
+        let mut buf = Vec::new();
+        let mut forwarded = Vec::new();
+        while read_raw_frame(&mut cursor, &mut buf).unwrap() {
+            write_raw_frame(&mut forwarded, &buf).unwrap();
+        }
+        // verbatim copy: the forwarded stream is byte-identical
+        assert_eq!(forwarded, wire);
+        // and decodes to the original messages
+        let mut cursor = std::io::Cursor::new(forwarded);
+        assert_eq!(read_msg(&mut cursor).unwrap().unwrap(), msg);
+        assert!(matches!(read_msg(&mut cursor).unwrap().unwrap(), Msg::Response(_)));
+    }
+
+    #[test]
+    fn write_frame_matches_write_msg() {
+        let msg = Msg::Hello(Hello { client: 2, split: true, shard: Some(1) });
+        let mut a = Vec::new();
+        write_msg(&mut a, &msg).unwrap();
+        let mut b = Vec::new();
+        let mut frame = Vec::new();
+        msg.encode_into(&mut frame);
+        write_frame(&mut b, &frame).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

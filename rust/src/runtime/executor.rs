@@ -213,6 +213,87 @@ impl Exe {
         let out = self.exe.execute_b(&bufs).map_err(wrap_xla)?;
         self.decode_outputs(out)
     }
+
+    /// Execute with device-resident buffers, decoding outputs into
+    /// caller-preallocated `Value` storage. `outs` is sized and shaped on
+    /// first use; afterwards each output's backing vector keeps its
+    /// capacity, so the runtime side of the serving hot path stops
+    /// re-allocating output values per batch. (The PJRT boundary itself —
+    /// literal decode inside the xla bindings — still allocates; that cost
+    /// is outside this crate.)
+    pub fn run_device_into(&self, inputs: &[&DeviceTensor], outs: &mut Vec<Value>) -> Result<()> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|t| &t.buf).collect();
+        let raw = self.exe.execute_b(&bufs).map_err(wrap_xla)?;
+        self.decode_outputs_into(raw, outs)
+    }
+
+    fn decode_outputs_into(
+        &self,
+        bufs: Vec<Vec<xla::PjRtBuffer>>,
+        outs: &mut Vec<Value>,
+    ) -> Result<()> {
+        let first = bufs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.spec.name))?;
+        let tuple = first.to_literal_sync().map_err(wrap_xla)?;
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: {} outputs returned, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        // size the storage once; shapes are stable per executable after that
+        while outs.len() < parts.len() {
+            outs.push(Value::F32 { shape: Vec::new(), data: Vec::new() });
+        }
+        outs.truncate(parts.len());
+        for ((lit, spec), out) in parts.into_iter().zip(&self.spec.outputs).zip(outs.iter_mut()) {
+            let elems: usize = spec.shape.iter().product();
+            match spec.dtype {
+                DType::F32 => {
+                    let v = lit.to_vec::<f32>().map_err(wrap_xla)?;
+                    anyhow::ensure!(
+                        v.len() == elems,
+                        "{}: output {} element count mismatch",
+                        self.spec.name,
+                        spec.name
+                    );
+                    match out {
+                        Value::F32 { shape, data } => {
+                            shape.clear();
+                            shape.extend_from_slice(&spec.shape);
+                            data.clear();
+                            data.extend_from_slice(&v);
+                        }
+                        other => *other = Value::F32 { shape: spec.shape.clone(), data: v },
+                    }
+                }
+                DType::I32 => {
+                    let v = lit.to_vec::<i32>().map_err(wrap_xla)?;
+                    anyhow::ensure!(
+                        v.len() == elems,
+                        "{}: output {} element count mismatch",
+                        self.spec.name,
+                        spec.name
+                    );
+                    match out {
+                        Value::I32 { shape, data } => {
+                            shape.clear();
+                            shape.extend_from_slice(&spec.shape);
+                            data.clear();
+                            data.extend_from_slice(&v);
+                        }
+                        other => *other = Value::I32 { shape: spec.shape.clone(), data: v },
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Thread-confined runtime: PJRT client + compiled-executable cache.
@@ -255,6 +336,23 @@ impl Runtime {
         let exe = Rc::new(Exe { exe, spec });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    /// Stage a raw f32 host slice onto the device without building a
+    /// `Value` first — the serving hot path stages the arena's pooled
+    /// batch matrix directly.
+    pub fn to_device_f32(&self, shape: &[usize], data: &[f32]) -> Result<DeviceTensor> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "to_device_f32: shape {:?} / data len {} mismatch",
+            shape,
+            data.len()
+        );
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(wrap_xla)?;
+        Ok(DeviceTensor { buf, shape: shape.to_vec() })
     }
 
     /// Stage a host value onto the device (used for long-lived params).

@@ -1,0 +1,41 @@
+//! Zero-allocation gate for the batched server ingest→policy→reply path,
+//! enforced under plain `cargo test` (no bench run needed): steady-state
+//! pooled rounds over both routes must not touch the heap once the
+//! collector, session rings, and arena are warm.
+//!
+//! This file is its own test binary with exactly one test so the counting
+//! global allocator sees no concurrent test threads — keep it that way
+//! (same setup as `rust/tests/compiled_alloc.rs`).
+
+use miniconv::coordinator::Route;
+use miniconv::experiments::serving::{bench_payloads, ServeDriver, ServeEngine};
+use miniconv::util::alloc_counter::CountingAlloc;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_serve_rounds_do_not_allocate() {
+    // small raw frames keep the test fast; the allocation profile is
+    // geometry-independent (capacities, not sizes, decide reuse)
+    let (split, split_dim) = bench_payloads(Route::Split, 8, 16, (4, 11, 11), 1);
+    let (full, full_dim) = bench_payloads(Route::Full, 8, 16, (4, 11, 11), 2);
+    let mut ds = ServeDriver::new(&split, 8, split_dim, 4);
+    let mut df = ServeDriver::new(&full, 8, full_dim, 4);
+    // warm the collector queues, session rings, arena, and reply sink
+    for _ in 0..3 {
+        ds.round(ServeEngine::Pooled).unwrap();
+        df.round(ServeEngine::Pooled).unwrap();
+    }
+    let before = CountingAlloc::count();
+    for _ in 0..50 {
+        ds.round(ServeEngine::Pooled).unwrap();
+        df.round(ServeEngine::Pooled).unwrap();
+    }
+    let during = CountingAlloc::count() - before;
+    std::hint::black_box((ds.sink().len(), df.sink().len()));
+    assert_eq!(
+        during, 0,
+        "pooled serve rounds allocated {during} times over 50 rounds x 16 requests"
+    );
+}

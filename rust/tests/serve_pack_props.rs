@@ -1,0 +1,144 @@
+//! Property tests for the batched server ingest→policy pack path: the
+//! fused dequantise-and-pack must be bit-exact with the legacy per-request
+//! dequantise, arena rows must not bleed across clients, the batcher's
+//! drain-into must preserve the FIFO/max-batch invariants, and the pooled
+//! serve engine must reply byte-identically to the legacy engine.
+
+use std::time::{Duration, Instant};
+
+use miniconv::coordinator::batcher::{BatchCollector, BatchPolicy};
+use miniconv::coordinator::{BatchArena, Route, SessionManager};
+use miniconv::experiments::serving::{bench_payloads, ServeDriver, ServeEngine};
+use miniconv::net::framing::{dequantize_features, dequantize_features_into, quantize_features};
+use miniconv::util::proptest::{check, prop_assert};
+
+#[test]
+fn prop_quantise_pack_row_equals_legacy_dequantise() {
+    check(200, |g| {
+        let n = g.usize(1, 600);
+        let feat: Vec<f32> = (0..n).map(|_| (g.f64(0.0, 5.0)) as f32).collect();
+        let (scale, q) = quantize_features(&feat);
+        let legacy = dequantize_features(scale, &q);
+        let mut row = vec![f32::NAN; n];
+        dequantize_features_into(scale, &q, &mut row);
+        prop_assert(legacy == row, format!("pack row diverged at scale {scale}"))
+    });
+}
+
+#[test]
+fn prop_arena_rows_do_not_bleed_across_clients() {
+    check(100, |g| {
+        let rows_used = g.usize(1, 8);
+        let rows = rows_used + g.usize(0, 4);
+        let d = g.usize(1, 64);
+        let mut arena = BatchArena::new();
+        // two batches back to back: the second must show no trace of the
+        // first beyond its own packed rows
+        for round in 0..2 {
+            arena.begin(rows_used, rows, d);
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            for i in 0..rows_used {
+                let feat: Vec<f32> =
+                    (0..d).map(|k| (round * 1000 + i * 10 + k) as f32 * 0.25).collect();
+                let (scale, q) = quantize_features(&feat);
+                dequantize_features_into(scale, &q, arena.row_mut(i));
+                want.push(dequantize_features(scale, &q));
+            }
+            for i in 0..rows_used {
+                prop_assert(
+                    arena.row(i) == want[i].as_slice(),
+                    format!("row {i} corrupted in round {round}"),
+                )?;
+            }
+            for i in rows_used..rows {
+                prop_assert(
+                    arena.row(i).iter().all(|&v| v == 0.0),
+                    format!("padding row {i} not zeroed in round {round}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_take_into_preserves_fifo_and_max_batch() {
+    check(100, |g| {
+        let max_batch = g.usize(1, 16);
+        let n = g.usize(1, 60);
+        let mut c: BatchCollector<usize> =
+            BatchCollector::new(BatchPolicy { max_batch, max_wait: Duration::ZERO }, 1000);
+        let now = Instant::now();
+        for i in 0..n {
+            let route = if g.bool() { Route::Split } else { Route::Full };
+            c.push(route, i, now);
+        }
+        // one pooled buffer reused across every drain
+        let mut batch = Vec::new();
+        let mut seen = Vec::new();
+        let mut prev_per_route = [None::<usize>, None::<usize>];
+        let later = now + Duration::from_millis(1);
+        while let Some(route) = c.ready(later) {
+            c.take_into(route, &mut batch);
+            prop_assert(batch.len() <= max_batch, "batch exceeds max_batch")?;
+            prop_assert(!batch.is_empty(), "ready route drained empty")?;
+            for item in &batch {
+                let slot = route.index();
+                if let Some(p) = prev_per_route[slot] {
+                    prop_assert(item.work > p, "FIFO violated within route")?;
+                }
+                prev_per_route[slot] = Some(item.work);
+                seen.push(item.work);
+            }
+        }
+        seen.sort_unstable();
+        prop_assert(
+            seen == (0..n).collect::<Vec<_>>(),
+            format!("items lost or duplicated: {seen:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_session_ingest_into_matches_legacy_wrapper() {
+    check(60, |g| {
+        let mut a = SessionManager::new();
+        let mut b = SessionManager::new();
+        let steps = g.usize(1, 12);
+        for _ in 0..steps {
+            let client = g.usize(0, 2) as u32;
+            let x = *g.choice(&[2usize, 3, 4]);
+            let frame: Vec<u8> = (0..4 * x * x).map(|_| g.usize(0, 255) as u8).collect();
+            let want = a.ingest_rgba(client, x, &frame).map_err(|e| e.to_string())?;
+            let mut got = vec![f32::NAN; 9 * x * x];
+            b.ingest_rgba_into(client, x, &frame, &mut got).map_err(|e| e.to_string())?;
+            prop_assert(want == got, format!("obs diverged for client {client} x {x}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance oracle: the pooled engine's reply bytes equal the legacy
+/// engine's for identical request streams, on both routes, across rounds
+/// (so evolving frame-stack state is covered).
+#[test]
+fn pooled_engine_is_action_identical_to_legacy() {
+    for (route, clients, max_batch) in
+        [(Route::Full, 6, 4), (Route::Split, 6, 4), (Route::Full, 1, 8), (Route::Split, 8, 8)]
+    {
+        let (payloads, feat_dim) = bench_payloads(route, clients, 12, (4, 5, 5), 0xFACE);
+        let mut legacy = ServeDriver::new(&payloads, max_batch, feat_dim, 4);
+        let mut pooled = ServeDriver::new(&payloads, max_batch, feat_dim, 4);
+        for round in 0..4 {
+            legacy.round(ServeEngine::Legacy).unwrap();
+            pooled.round(ServeEngine::Pooled).unwrap();
+            assert!(!legacy.sink().is_empty());
+            assert_eq!(
+                legacy.sink(),
+                pooled.sink(),
+                "{} clients={clients} round={round}: replies diverged",
+                route.name()
+            );
+        }
+    }
+}
