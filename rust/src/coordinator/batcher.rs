@@ -3,7 +3,10 @@
 //! serving trade-off between batching efficiency and queueing latency.
 //!
 //! The collector is pure logic over an abstract clock so the policy is unit
-//! testable; the server thread feeds it from an mpsc channel.
+//! testable; the server thread feeds it from an mpsc channel. Because every
+//! method takes its `Instant` from the caller, the same collector runs
+//! unchanged under the simnet's virtual clock (`sim::SimClock` mints the
+//! instants there) — the chaos scenarios batch with this exact code.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -69,6 +72,11 @@ impl<T> BatchCollector<T> {
 
     pub fn depth(&self, route: Route) -> usize {
         self.queues[route.index()].len()
+    }
+
+    /// The policy this collector batches under.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
     }
 
     pub fn is_empty(&self) -> bool {

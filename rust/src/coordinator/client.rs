@@ -12,7 +12,7 @@
 use std::io::Write;
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -22,6 +22,7 @@ use crate::net::framing::{Hello, Msg, Payload, Request};
 use crate::net::shaped::ShapedWriter;
 use crate::net::tcp::{read_msg, write_msg};
 use crate::runtime::Manifest;
+use crate::sim::clock::ClockHandle;
 use crate::shader::{compiled_from_manifest, CompiledPipeline, TextureFormat};
 use crate::tensor::Chw;
 use crate::util::rng::Rng;
@@ -48,6 +49,13 @@ pub struct ClientConfig {
     /// against Sim-backend coordinators (ignored in split mode, which needs
     /// the manifest for the shader pipeline anyway)
     pub obs_x: Option<usize>,
+    /// time source for pacing, shaping, and latency stamps (the clock
+    /// seam, DESIGN.md §6); defaults to the wall clock. Keep it wall for
+    /// a live client — socket reads still block in real time — and use
+    /// the `sim::scenario` runner for fully virtual-time clients; the
+    /// shaped-link property tests drive `ShapedWriter` alone under a
+    /// `SimClock` through this same seam.
+    pub clock: ClockHandle,
 }
 
 impl Default for ClientConfig {
@@ -62,6 +70,7 @@ impl Default for ClientConfig {
             artifact_dir: crate::runtime::default_artifact_dir(),
             seed: 0,
             obs_x: None,
+            clock: ClockHandle::wall(),
         }
     }
 }
@@ -110,7 +119,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
     stream.set_nodelay(true).ok();
     let mut recv = stream.try_clone()?;
     let mut send = match cfg.shape_bps {
-        Some(bps) => Sender_::Shaped(ShapedWriter::new(stream, bps)),
+        Some(bps) => Sender_::Shaped(ShapedWriter::with_clock(stream, bps, cfg.clock.clone())),
         None => Sender_::Plain(stream),
     };
 
@@ -163,39 +172,39 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
     pipeline.observe(&env, &mut rng);
 
     let mut report = ClientReport::default();
-    let t_run = Instant::now();
+    let t_run = cfg.clock.now();
     let tick = cfg.rate_hz.map(|hz| Duration::from_secs_f64(1.0 / hz));
-    let mut next_tick = Instant::now();
+    let mut next_tick = cfg.clock.now();
     // per-frame scratch reused across decisions (steady-state: no growth)
     let mut feat = Chw::zeros(1, 1, 1);
     let mut flat: Vec<f32> = Vec::new();
 
     for i in 0..cfg.decisions {
         if let Some(t) = tick {
-            let now = Instant::now();
+            let now = cfg.clock.now();
             if next_tick > now {
-                std::thread::sleep(next_tick - now);
+                cfg.clock.sleep(next_tick - now);
             }
             next_tick += t;
         }
 
         // observation is now available: the decision clock starts
-        let t0 = Instant::now();
+        let t0 = cfg.clock.now();
         let payload = match (&mut shader, &mut device) {
             (Some(pipe), dev) => {
                 // on-device encode (real compiled-shader execution over
                 // reused scratch; single-thread runs are allocation-free,
                 // multi-pass layers at threads>1 pay only the scoped spawns)
-                let enc_t0 = Instant::now();
+                let enc_t0 = cfg.clock.now();
                 pipe.run_into(&pipeline.obs_chw(), &mut feat)?;
-                let real_encode = enc_t0.elapsed().as_secs_f64();
+                let real_encode = cfg.clock.now().duration_since(enc_t0).as_secs_f64();
                 // pad out to the simulated device's encode time
                 let sim_j = dev
                     .as_mut()
                     .map(|d| d.encode_frame(cost.as_ref().unwrap(), ExecPath::Gpu).duration)
                     .unwrap_or(real_encode);
                 if sim_j > real_encode {
-                    std::thread::sleep(Duration::from_secs_f64(sim_j - real_encode));
+                    cfg.clock.sleep(Duration::from_secs_f64(sim_j - real_encode));
                 }
                 report.encode_times.push(real_encode.max(sim_j));
                 // transmit only the K-channel feature map, quantised to u8
@@ -232,7 +241,9 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
             // explicit server rejection (back-pressure): count and move on
             report.errors += 1;
         } else {
-            report.latencies.push(t0.elapsed().as_secs_f64());
+            report
+                .latencies
+                .push(cfg.clock.now().duration_since(t0).as_secs_f64());
             report.decisions += 1;
         }
 
@@ -250,7 +261,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         }
         pipeline.observe(&env, &mut rng);
     }
-    report.elapsed = t_run.elapsed().as_secs_f64();
+    report.elapsed = cfg.clock.now().duration_since(t_run).as_secs_f64();
     if let Sender_::Plain(ref mut s) = send {
         let _ = s.flush();
     }

@@ -27,6 +27,7 @@ use crate::net::framing::{
 };
 use crate::net::tcp::{read_msg, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
+use crate::sim::clock::ClockHandle;
 
 use super::arena::BatchArena;
 use super::batcher::{BatchCollector, BatchPolicy};
@@ -49,6 +50,14 @@ pub struct ServerConfig {
     pub shard_id: Option<u16>,
     /// inference engine behind the batcher
     pub backend: Backend,
+    /// time source for queue-wait stamps, batch deadlines, and the Sim
+    /// backend's modelled waits (the clock seam, DESIGN.md §6). Keep this
+    /// the wall clock for a live server: the executor blocks in real-time
+    /// `recv_timeout` between batches, so a virtual clock would stall the
+    /// `max_wait` deadline. Fully virtual-time serving goes through the
+    /// single-threaded `sim::scenario` runner instead, which drives the
+    /// same batcher/session components event by event.
+    pub clock: ClockHandle,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +70,7 @@ impl Default for ServerConfig {
             artifact_dir: crate::runtime::default_artifact_dir(),
             shard_id: None,
             backend: Backend::Pjrt,
+            clock: ClockHandle::wall(),
         }
     }
 }
@@ -161,6 +171,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     // accept thread
     let acc_shutdown = shutdown.clone();
     let shard_id = cfg.shard_id;
+    let acc_clock = cfg.clock.clone();
     let acceptor = std::thread::Builder::new()
         .name("mc-accept".into())
         .spawn(move || {
@@ -172,9 +183,10 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                     Ok(s) => {
                         let tx = tx.clone();
                         let shutdown = acc_shutdown.clone();
+                        let clock = acc_clock.clone();
                         std::thread::Builder::new()
                             .name("mc-reader".into())
-                            .spawn(move || reader_main(s, tx, shutdown, shard_id))
+                            .spawn(move || reader_main(s, tx, shutdown, shard_id, clock))
                             .ok();
                     }
                     Err(e) => {
@@ -194,6 +206,7 @@ fn reader_main(
     tx: Sender<Work>,
     shutdown: Arc<AtomicBool>,
     shard_id: Option<u16>,
+    clock: ClockHandle,
 ) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
@@ -213,7 +226,7 @@ fn reader_main(
                     client: r.client,
                     id: r.id,
                     payload: r.payload,
-                    received: Instant::now(),
+                    received: clock.now(),
                     reply: writer.clone(),
                 };
                 if tx.send(work).is_err() {
@@ -277,6 +290,7 @@ fn executor_loop<F>(
     rx: Receiver<Work>,
     metrics: &Metrics,
     shutdown: &AtomicBool,
+    clock: &ClockHandle,
     mut run: F,
 ) where
     F: FnMut(Route, &[super::batcher::Item<Work>]) -> Result<()>,
@@ -292,11 +306,11 @@ fn executor_loop<F>(
         // pull work: block briefly when idle, otherwise honour the batch
         // deadline
         let timeout = collector
-            .next_deadline(Instant::now())
+            .next_deadline(clock.now())
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(w) => {
-                let now = Instant::now();
+                let now = clock.now();
                 // a saturated push hands the work back, so the reply handle
                 // is only touched (and never cloned) on the rejection path
                 let admit = |w: Work, collector: &mut BatchCollector<Work>| {
@@ -329,7 +343,7 @@ fn executor_loop<F>(
             dropped_reported = collector.dropped;
         }
 
-        while let Some(route) = collector.ready(Instant::now()) {
+        while let Some(route) = collector.ready(clock.now()) {
             collector.take_into(route, &mut batch);
             if let Err(e) = run(route, &batch) {
                 warn!("batch failed: {e:#}");
@@ -398,12 +412,13 @@ fn executor_pjrt(
 
     let mut sessions = SessionManager::new();
     let mut arena = BatchArena::new();
-    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
+    let clock = cfg.clock.clone();
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |route, items| {
         let exec = match route {
             Route::Split => &mut split,
             Route::Full => &mut full,
         };
-        run_batch(&rt, exec, route, items, &mut sessions, &mut arena, &metrics)
+        run_batch(&rt, exec, route, items, &mut sessions, &mut arena, &metrics, &cfg.clock)
     });
 }
 
@@ -480,8 +495,18 @@ fn executor_sim(
     let mut sessions = SessionManager::new();
     let mut encoder = SimEncoder::new();
     let mut arena = BatchArena::new();
-    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, |route, items| {
-        run_batch_sim(&spec, route, items, &mut sessions, &mut encoder, &mut arena, &metrics)
+    let clock = cfg.clock.clone();
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |route, items| {
+        run_batch_sim(
+            &spec,
+            route,
+            items,
+            &mut sessions,
+            &mut encoder,
+            &mut arena,
+            &metrics,
+            &cfg.clock,
+        )
     });
 }
 
@@ -489,6 +514,7 @@ fn executor_sim(
 /// compute time, and (with `encode`) real compiled-shader encodes. All
 /// per-batch state (observation rows, actions, reply frames) lives in the
 /// arena — the per-item `HashMap` action scatter is gone.
+#[allow(clippy::too_many_arguments)]
 fn run_batch_sim(
     spec: &SimSpec,
     route: Route,
@@ -497,9 +523,10 @@ fn run_batch_sim(
     encoder: &mut SimEncoder,
     arena: &mut BatchArena,
     metrics: &Metrics,
+    clock: &ClockHandle,
 ) -> Result<()> {
     let n = items.len();
-    let dequeue = Instant::now();
+    let dequeue = clock.now();
     arena.queue_waits.clear();
     arena
         .queue_waits
@@ -509,7 +536,7 @@ fn run_batch_sim(
     // session state stays meaningful under the fleet gateway (outside the
     // modelled window, exactly as before this PR) — stacked observations
     // now land directly in arena batch rows
-    let t_pack = Instant::now();
+    let t_pack = clock.now();
     let feat_dim = items
         .iter()
         .map(|i| match &i.work.payload {
@@ -532,12 +559,12 @@ fn run_batch_sim(
             }
         }
     }
-    let pack_time = t_pack.elapsed();
+    let pack_time = clock.now().duration_since(t_pack);
 
     // the modelled accelerator: launch overhead + linear per-item cost.
     // Real compiled-shader encodes run inside the window and only their
     // own time is deducted, so encode:false batches sleep the full budget.
-    let t_exec = Instant::now();
+    let t_exec = clock.now();
     arena.begin_actions(n, spec.action_dim);
     // take the worklist so the encoder stays borrowable inside the loop
     // (mem::take swaps in an empty Vec — no allocation either way)
@@ -548,14 +575,17 @@ fn run_batch_sim(
     }
     encoder.to_encode = to_encode;
     let modelled = spec.fixed + spec.per_item * n as u32;
-    let spent = t_exec.elapsed();
+    let spent = clock.now().duration_since(t_exec);
     if modelled > spent {
-        std::thread::sleep(modelled - spent);
+        clock.sleep(modelled - spent);
     }
-    let exec_time = t_exec.elapsed();
+    let exec_time = clock.now().duration_since(t_exec);
 
+    let done = clock.now();
     arena.services.clear();
-    arena.services.extend(items.iter().map(|i| i.work.received.elapsed()));
+    arena
+        .services
+        .extend(items.iter().map(|i| done.duration_since(i.work.received)));
     metrics.record_batch(
         route,
         n,
@@ -582,6 +612,7 @@ fn run_batch_sim(
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     rt: &Runtime,
     exec: &mut RouteExec,
@@ -590,10 +621,11 @@ fn run_batch(
     sessions: &mut SessionManager,
     arena: &mut BatchArena,
     metrics: &Metrics,
+    clock: &ClockHandle,
 ) -> Result<()> {
     let n = items.len();
     let b = pick_batch(n, &exec.ladder);
-    let dequeue = Instant::now();
+    let dequeue = clock.now();
     arena.queue_waits.clear();
     arena
         .queue_waits
@@ -611,7 +643,7 @@ fn run_batch(
     // per-request `Vec<f32>` anywhere on this path
     let in_spec = &exe.spec.inputs[1];
     let per_item: usize = in_spec.shape[1..].iter().product();
-    let t_pack = Instant::now();
+    let t_pack = clock.now();
     arena.begin(n, b, per_item);
     for (i, item) in items.iter().enumerate() {
         let row = arena.row_mut(i);
@@ -625,22 +657,25 @@ fn run_batch(
             }
         }
     }
-    let pack_time = t_pack.elapsed();
+    let pack_time = clock.now().duration_since(t_pack);
 
     // execute with device-resident params; the arena matrix is staged
     // directly and outputs decode into the route's pooled `Value`s
-    let t_exec = Instant::now();
+    let t_exec = clock.now();
     let batch_dev = rt.to_device_f32(&in_spec.shape, arena.matrix())?;
     exe.run_device_into(&[&exec.params, &batch_dev], &mut exec.outs)?;
-    let exec_time = t_exec.elapsed();
+    let exec_time = clock.now().duration_since(t_exec);
 
     let actions = exec.outs[0].as_f32()?;
     let adim = exe.spec.outputs[0].shape[1];
 
     // record metrics BEFORE writing responses: a client that just received
     // its action must observe its request in the metrics snapshot
+    let done = clock.now();
     arena.services.clear();
-    arena.services.extend(items.iter().map(|i| i.work.received.elapsed()));
+    arena
+        .services
+        .extend(items.iter().map(|i| done.duration_since(i.work.received)));
     metrics.record_batch(
         route,
         n,

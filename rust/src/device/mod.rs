@@ -9,4 +9,4 @@ pub mod thermal;
 
 pub use model::{Device, DeviceSpec, ExecPath, FrameCost, FrameStats};
 pub use presets::{all as all_devices, by_name, jetson_nano, pi_4b, pi_zero_2w};
-pub use thermal::ThermalModel;
+pub use thermal::{ClockedThermal, ThermalModel};

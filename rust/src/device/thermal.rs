@@ -1,6 +1,12 @@
 //! First-order thermal RC model: the die heats with dissipated power and
 //! cools toward ambient with time constant `tau`. Drives the throttling
 //! behaviour in the sustained-load experiments (paper Fig. 3/4).
+//!
+//! [`ThermalModel`] is pure over `dt`; [`ClockedThermal`] closes it over
+//! an instant stream from the clock seam (`sim::Clock`), so the simnet's
+//! chaos scenarios integrate the identical RC dynamics in virtual time.
+
+use std::time::Instant;
 
 #[derive(Debug, Clone)]
 pub struct ThermalModel {
@@ -64,6 +70,39 @@ impl ThermalModel {
     }
 }
 
+/// Clock-driven wrapper: integrates the RC model across the gaps between
+/// observation instants. The caller reports the power that was dissipated
+/// *since the previous update* — a shard executor calls
+/// `update(idle_watts, batch_start)` then `update(active_watts, batch_end)`
+/// to alternate idle/active stretches. Instants come from the clock seam,
+/// so wall-clock governors and virtual-time scenarios share this code.
+#[derive(Debug, Clone)]
+pub struct ClockedThermal {
+    model: ThermalModel,
+    last: Instant,
+}
+
+impl ClockedThermal {
+    pub fn new(model: ThermalModel, now: Instant) -> ClockedThermal {
+        ClockedThermal { model, last: now }
+    }
+
+    /// Integrate `watts` over the time since the last update. Stale or
+    /// tied instants integrate zero time (never panic, never cool
+    /// backwards).
+    pub fn update(&mut self, watts: f64, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        if dt > 0.0 {
+            self.model.step(watts, dt);
+        }
+        self.last = self.last.max(now);
+    }
+
+    pub fn model(&self) -> &ThermalModel {
+        &self.model
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +157,47 @@ mod tests {
         m.step(10.0, 300.0);
         m.step(0.0, 3000.0);
         assert!((m.temp() - 25.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn clocked_wrapper_matches_manual_stepping() {
+        use std::time::Duration;
+        let t0 = Instant::now();
+        let mut manual = model();
+        let mut clocked = ClockedThermal::new(model(), t0);
+        // alternate idle/active stretches over explicit instants
+        let schedule = [(3.0, 10.0), (0.5, 2.0), (6.0, 30.0), (0.0, 120.0)];
+        let mut at = t0;
+        for (watts, secs) in schedule {
+            manual.step(watts, secs);
+            at += Duration::from_secs_f64(secs);
+            clocked.update(watts, at);
+        }
+        assert!((manual.temp() - clocked.model().temp()).abs() < 1e-9);
+        assert_eq!(manual.throttled(), clocked.model().throttled());
+    }
+
+    #[test]
+    fn clocked_wrapper_ignores_stale_instants() {
+        let t0 = Instant::now();
+        let mut c = ClockedThermal::new(model(), t0);
+        c.update(6.0, t0 + std::time::Duration::from_secs(100));
+        let temp = c.model().temp();
+        // an instant from the past must not integrate negative time
+        c.update(6.0, t0);
+        assert_eq!(c.model().temp(), temp);
+    }
+
+    #[test]
+    fn clocked_wrapper_under_virtual_instants_throttles_and_recovers() {
+        // virtual instants are just base + offset: drive a full
+        // heat-throttle-cool cycle with zero real waiting
+        use std::time::Duration;
+        let base = Instant::now();
+        let mut c = ClockedThermal::new(model(), base);
+        c.update(8.0, base + Duration::from_secs(600)); // 105C target
+        assert!(c.model().throttled(), "sustained 8W must trip 70C");
+        c.update(0.0, base + Duration::from_secs(1200));
+        assert!(!c.model().throttled(), "10 min idle must recover");
     }
 }

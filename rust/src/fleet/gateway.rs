@@ -29,6 +29,7 @@ use crate::net::framing::{
     Hello, Msg, MSG_HELLO, MSG_REQUEST_FEAT, MSG_REQUEST_RAW, MSG_RESPONSE,
 };
 use crate::net::tcp::{read_msg, read_raw_frame, write_msg, write_raw_frame};
+use crate::util::signal::Signal;
 
 use super::health::{HealthConfig, HealthMonitor};
 use super::topology::{ShardId, ShardState, Topology};
@@ -110,6 +111,9 @@ pub struct GatewayHandle {
     health: Option<HealthMonitor>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
+    /// notified after every observable state change (stats, topology,
+    /// probe verdicts) — the event-driven replacement for sleep-polling
+    signal: Arc<Signal>,
 }
 
 impl GatewayHandle {
@@ -130,6 +134,7 @@ impl GatewayHandle {
     /// hash elsewhere.
     pub fn drain(&self, id: ShardId) {
         self.topology.lock().unwrap().drain(id);
+        self.signal.notify();
     }
 
     /// True once a draining shard has no pinned connections left.
@@ -139,6 +144,28 @@ impl GatewayHandle {
 
     pub fn set_shard_state(&self, id: ShardId, state: ShardState) {
         self.topology.lock().unwrap().set_state(id, state);
+        self.signal.notify();
+    }
+
+    /// Block until `pred` holds over the stats snapshot (re-checked on
+    /// every connection/topology event) or `timeout` elapses; returns the
+    /// final verdict.
+    pub fn wait_stats<F: Fn(&GatewayStats) -> bool>(&self, timeout: Duration, pred: F) -> bool {
+        self.signal.wait_until(timeout, || pred(&self.stats()))
+    }
+
+    /// Event-driven drain completion: true once the shard is Draining with
+    /// zero pinned connections.
+    pub fn wait_drained(&self, id: ShardId, timeout: Duration) -> bool {
+        self.signal
+            .wait_until(timeout, || self.topology.lock().unwrap().drained(id))
+    }
+
+    /// Block until a shard reaches `state` (via probes, refused pins, or
+    /// operator edits) or `timeout` elapses.
+    pub fn wait_shard_state(&self, id: ShardId, state: ShardState, timeout: Duration) -> bool {
+        self.signal
+            .wait_until(timeout, || self.topology.lock().unwrap().state(id) == Some(state))
     }
 
     /// (id, state, live connections) per shard.
@@ -187,12 +214,17 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
             .collect(),
     });
     let shutdown = Arc::new(AtomicBool::new(false));
-    let health = cfg.health.clone().map(|h| HealthMonitor::start(topology.clone(), h));
+    let signal = Arc::new(Signal::new());
+    let health = cfg
+        .health
+        .clone()
+        .map(|h| HealthMonitor::start_with(topology.clone(), h, signal.clone()));
 
     let acc_shutdown = shutdown.clone();
     let acc_topology = topology.clone();
     let acc_stats = stats.clone();
     let acc_counters = counters.clone();
+    let acc_signal = signal.clone();
     let connect_timeout = cfg.connect_timeout;
     let acceptor = std::thread::Builder::new()
         .name("gw-accept".into())
@@ -207,19 +239,25 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
                         let stats = acc_stats.clone();
                         let counters = acc_counters.clone();
                         let shutdown = acc_shutdown.clone();
+                        let signal = acc_signal.clone();
                         std::thread::Builder::new()
                             .name("gw-conn".into())
                             .spawn(move || {
-                                if let Err(e) = gw_conn(
+                                let r = gw_conn(
                                     s,
                                     topology,
                                     stats,
                                     counters,
                                     shutdown,
                                     connect_timeout,
-                                ) {
+                                    &signal,
+                                );
+                                if let Err(e) = r {
                                     debug!("gateway connection ended: {e:#}");
                                 }
+                                // the connection's final state edits are
+                                // visible: wake any waiters
+                                signal.notify();
                             })
                             .ok();
                     }
@@ -232,7 +270,16 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
         })
         .context("spawn gateway acceptor")?;
 
-    Ok(GatewayHandle { addr, topology, stats, counters, health, shutdown, threads: vec![acceptor] })
+    Ok(GatewayHandle {
+        addr,
+        topology,
+        stats,
+        counters,
+        health,
+        shutdown,
+        threads: vec![acceptor],
+        signal,
+    })
 }
 
 /// Serve one client connection end to end.
@@ -243,6 +290,7 @@ fn gw_conn(
     counters: Arc<Counters>,
     shutdown: Arc<AtomicBool>,
     connect_timeout: Duration,
+    signal: &Signal,
 ) -> Result<()> {
     client.set_nodelay(true).ok();
 
@@ -267,6 +315,7 @@ fn gw_conn(
         };
         let Some((id, saddr)) = pick else {
             stats.lock().unwrap().rejected += 1;
+            signal.notify();
             bail!("no routable shard for session {session}");
         };
         match TcpStream::connect_timeout(&saddr, connect_timeout) {
@@ -274,9 +323,11 @@ fn gw_conn(
             Err(e) => {
                 warn!("gateway: {id} refused pin ({e}); marking down and re-routing");
                 topology.lock().unwrap().set_state(id, ShardState::Down);
+                signal.notify();
                 attempts += 1;
                 if attempts > 16 {
                     stats.lock().unwrap().rejected += 1;
+                    signal.notify();
                     bail!("session {session}: no shard accepted the pin");
                 }
             }
@@ -292,10 +343,12 @@ fn gw_conn(
             _ => {}
         }
     }
+    signal.notify();
 
     let result =
         pump_session(&mut client, upstream, &first, session, shard_id, &counters, &shutdown);
     topology.lock().unwrap().conn_closed(shard_id);
+    signal.notify();
     result
 }
 
@@ -483,12 +536,11 @@ mod tests {
             .unwrap();
         // gateway closes without an ack
         assert!(matches!(read_msg(&mut conn), Ok(None) | Err(_)));
-        // poll: the connection thread updates stats after the route fails
-        let deadline = std::time::Instant::now() + Duration::from_secs(2);
-        while gw.stats().rejected == 0 {
-            assert!(std::time::Instant::now() < deadline, "rejection never counted");
-            std::thread::sleep(Duration::from_millis(10));
-        }
+        // event-driven: woken the instant the connection thread counts it
+        assert!(
+            gw.wait_stats(Duration::from_secs(2), |s| s.rejected > 0),
+            "rejection never counted"
+        );
         gw.shutdown();
         s0.shutdown();
     }

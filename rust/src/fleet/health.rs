@@ -7,6 +7,14 @@
 //! route around it), slow acks mark it `Degraded`, and a recovered shard
 //! returns to `Up`. Operator intent is respected: a `Draining` shard is
 //! probed but never re-stated.
+//!
+//! The verdict→state step is the pure [`probe_transition`] function: the
+//! threaded monitor applies it to wall-clock probe outcomes, and the
+//! simnet's virtual-time prober (`sim::scenario`) applies the *same*
+//! function to simulated outcomes — one state machine, two time sources.
+//! Observers never poll: the monitor notifies a [`Signal`] after every
+//! probe verdict, and [`HealthMonitor::wait_topology`] blocks until a
+//! predicate over the topology holds.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
@@ -19,6 +27,7 @@ use log::{debug, warn};
 
 use crate::net::framing::{Hello, Msg};
 use crate::net::tcp::{read_msg, write_msg};
+use crate::util::signal::Signal;
 
 use super::topology::{ShardId, ShardState, Topology};
 
@@ -59,6 +68,34 @@ pub struct ProbeStats {
     pub last_rtt: Option<f64>,
 }
 
+/// The pure probe-verdict state machine: given a shard's current state,
+/// the latest probe outcome (`Some(rtt)` on success), and the consecutive
+/// failure count *including* this outcome, decide the next state (None =
+/// no change). Draining is sacred — operator intent wins over probe
+/// evidence in every case.
+pub fn probe_transition(
+    current: ShardState,
+    rtt: Option<Duration>,
+    consecutive_failures: u32,
+    cfg: &HealthConfig,
+) -> Option<ShardState> {
+    if current == ShardState::Draining {
+        return None;
+    }
+    match rtt {
+        Some(rtt) => {
+            let next = if rtt > cfg.degraded_after {
+                ShardState::Degraded
+            } else {
+                ShardState::Up
+            };
+            (current != next).then_some(next)
+        }
+        None => (consecutive_failures >= cfg.fail_threshold && current != ShardState::Down)
+            .then_some(ShardState::Down),
+    }
+}
+
 /// One blocking probe: connect, hello, await the shard's hello ack.
 /// Returns the round-trip time and the shard id the ack carried.
 pub fn probe_shard(addr: SocketAddr, timeout: Duration) -> Result<(Duration, Option<u16>)> {
@@ -85,20 +122,35 @@ pub struct HealthMonitor {
     shutdown: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>>,
+    topology: Arc<Mutex<Topology>>,
+    signal: Arc<Signal>,
 }
 
 impl HealthMonitor {
     pub fn start(topology: Arc<Mutex<Topology>>, cfg: HealthConfig) -> HealthMonitor {
+        Self::start_with(topology, cfg, Arc::new(Signal::new()))
+    }
+
+    /// Start against a caller-provided change [`Signal`] — the gateway
+    /// shares one signal between its own stats edits and the monitor's
+    /// topology edits, so a single wait observes both.
+    pub fn start_with(
+        topology: Arc<Mutex<Topology>>,
+        cfg: HealthConfig,
+        signal: Arc<Signal>,
+    ) -> HealthMonitor {
         let shutdown = Arc::new(AtomicBool::new(false));
         let stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let t_shutdown = shutdown.clone();
         let t_stats = stats.clone();
+        let t_topology = topology.clone();
+        let t_signal = signal.clone();
         let thread = std::thread::Builder::new()
             .name("mc-health".into())
-            .spawn(move || monitor_main(topology, cfg, t_shutdown, t_stats))
+            .spawn(move || monitor_main(t_topology, cfg, t_shutdown, t_stats, t_signal))
             .expect("spawn health monitor");
-        HealthMonitor { shutdown, thread: Some(thread), stats }
+        HealthMonitor { shutdown, thread: Some(thread), stats, topology, signal }
     }
 
     /// Snapshot of per-shard probe stats.
@@ -106,8 +158,33 @@ impl HealthMonitor {
         self.stats.lock().unwrap().clone()
     }
 
+    /// The change signal: notified after every probe verdict.
+    pub fn signal(&self) -> &Arc<Signal> {
+        &self.signal
+    }
+
+    /// Block until `pred` holds over the shared topology (re-checked after
+    /// every probe verdict) or `timeout` elapses; returns the final
+    /// verdict. The event-driven replacement for sleep-poll loops.
+    pub fn wait_topology<F: Fn(&Topology) -> bool>(&self, timeout: Duration, pred: F) -> bool {
+        let top = self.topology.clone();
+        self.signal.wait_until(timeout, || pred(&top.lock().unwrap()))
+    }
+
+    /// Block until `pred` holds over the probe stats, or `timeout`.
+    pub fn wait_stats<F: Fn(&HashMap<ShardId, ProbeStats>) -> bool>(
+        &self,
+        timeout: Duration,
+        pred: F,
+    ) -> bool {
+        let stats = self.stats.clone();
+        self.signal.wait_until(timeout, || pred(&stats.lock().unwrap()))
+    }
+
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
+        // wake the interval wait instantly — no sleep-slice latency
+        self.signal.notify();
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -119,6 +196,7 @@ fn monitor_main(
     cfg: HealthConfig,
     shutdown: Arc<AtomicBool>,
     stats: Arc<Mutex<HashMap<ShardId, ProbeStats>>>,
+    signal: Arc<Signal>,
 ) {
     while !shutdown.load(Ordering::SeqCst) {
         // snapshot targets without holding the lock across probes
@@ -147,41 +225,35 @@ fn monitor_main(
                 }
                 e.consecutive_failures
             };
-            let mut top = topology.lock().unwrap();
-            let Some(state) = top.state(id) else { continue };
-            if state == ShardState::Draining {
-                continue; // operator intent wins over probe evidence
-            }
-            match outcome {
-                Ok((rtt, _)) => {
-                    let next = if rtt > cfg.degraded_after {
-                        ShardState::Degraded
-                    } else {
-                        ShardState::Up
-                    };
-                    if state != next {
-                        if state == ShardState::Down {
-                            warn!("health: {id} recovered ({:.1} ms)", rtt.as_secs_f64() * 1e3);
-                        }
-                        top.set_state(id, next);
-                    }
-                }
+            let rtt = match outcome {
+                Ok((rtt, _)) => Some(rtt),
                 Err(e) => {
                     debug!("health: probe {id} failed: {e:#}");
-                    if consecutive >= cfg.fail_threshold && state != ShardState::Down {
-                        warn!("health: {id} marked down after {consecutive} failures");
-                        top.set_state(id, ShardState::Down);
+                    None
+                }
+            };
+            {
+                let mut top = topology.lock().unwrap();
+                let Some(state) = top.state(id) else { continue };
+                if let Some(next) = probe_transition(state, rtt, consecutive, &cfg) {
+                    match next {
+                        ShardState::Down => {
+                            warn!("health: {id} marked down after {consecutive} failures")
+                        }
+                        _ if state == ShardState::Down => {
+                            let ms = rtt.unwrap_or_default().as_secs_f64() * 1e3;
+                            warn!("health: {id} recovered ({ms:.1} ms)");
+                        }
+                        _ => {}
                     }
+                    top.set_state(id, next);
                 }
             }
+            // topology lock released: announce the verdict to waiters
+            signal.notify();
         }
-        // sleep in small slices so stop() stays responsive
-        let mut left = cfg.interval;
-        while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
-            let step = left.min(Duration::from_millis(25));
-            std::thread::sleep(step);
-            left -= step;
-        }
+        // event-driven interval: wakes instantly when stop() notifies
+        signal.wait_until(cfg.interval, || shutdown.load(Ordering::SeqCst));
     }
 }
 
@@ -208,6 +280,36 @@ mod tests {
         l.local_addr().unwrap()
     }
 
+    fn cfg_ms(interval: u64, timeout: u64, fail_threshold: u32) -> HealthConfig {
+        HealthConfig {
+            interval: Duration::from_millis(interval),
+            timeout: Duration::from_millis(timeout),
+            fail_threshold,
+            // generous: a loopback hello ack must never look degraded
+            degraded_after: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn transition_function_is_the_documented_state_machine() {
+        let cfg = HealthConfig { fail_threshold: 2, ..HealthConfig::default() };
+        let fast = Some(Duration::from_millis(1));
+        let slow = Some(Duration::from_secs(1));
+        use ShardState::*;
+        // successes
+        assert_eq!(probe_transition(Up, fast, 0, &cfg), None);
+        assert_eq!(probe_transition(Up, slow, 0, &cfg), Some(Degraded));
+        assert_eq!(probe_transition(Degraded, fast, 0, &cfg), Some(Up));
+        assert_eq!(probe_transition(Down, fast, 0, &cfg), Some(Up));
+        // failures: threshold gates the Down edge
+        assert_eq!(probe_transition(Up, None, 1, &cfg), None);
+        assert_eq!(probe_transition(Up, None, 2, &cfg), Some(Down));
+        assert_eq!(probe_transition(Down, None, 9, &cfg), None);
+        // draining is never re-stated, by success or failure
+        assert_eq!(probe_transition(Draining, fast, 0, &cfg), None);
+        assert_eq!(probe_transition(Draining, None, 99, &cfg), None);
+    }
+
     #[test]
     fn probe_round_trips_and_reports_shard_id() {
         let server = sim_server(7);
@@ -231,31 +333,13 @@ mod tests {
             t.add_shard(ShardId(0), live.addr);
             t.add_shard(ShardId(1), dead_addr());
         }
-        let monitor = HealthMonitor::start(
-            topology.clone(),
-            HealthConfig {
-                interval: Duration::from_millis(30),
-                timeout: Duration::from_millis(200),
-                fail_threshold: 2,
-                // generous: a loopback hello ack must never look degraded
-                degraded_after: Duration::from_secs(5),
-            },
-        );
-        let deadline = Instant::now() + Duration::from_secs(5);
-        loop {
-            let (s0, s1) = {
-                let t = topology.lock().unwrap();
-                (t.state(ShardId(0)).unwrap(), t.state(ShardId(1)).unwrap())
-            };
-            if s1 == ShardState::Down && s0 == ShardState::Up {
-                break;
-            }
-            assert!(
-                Instant::now() < deadline,
-                "monitor never converged: shard0={s0:?} shard1={s1:?}"
-            );
-            std::thread::sleep(Duration::from_millis(20));
-        }
+        let monitor = HealthMonitor::start(topology.clone(), cfg_ms(30, 200, 2));
+        // event-driven: woken on every probe verdict, no sleep-polling
+        let converged = monitor.wait_topology(Duration::from_secs(5), |t| {
+            t.state(ShardId(1)) == Some(ShardState::Down)
+                && t.state(ShardId(0)) == Some(ShardState::Up)
+        });
+        assert!(converged, "monitor never converged: {:?}", monitor.stats());
         let stats = monitor.stats();
         assert!(stats[&ShardId(1)].failures >= 2);
         assert!(stats[&ShardId(0)].last_rtt.is_some());
@@ -271,16 +355,13 @@ mod tests {
             t.add_shard(ShardId(0), dead_addr());
             t.drain(ShardId(0));
         }
-        let monitor = HealthMonitor::start(
-            topology.clone(),
-            HealthConfig {
-                interval: Duration::from_millis(20),
-                timeout: Duration::from_millis(100),
-                fail_threshold: 1,
-                ..HealthConfig::default()
-            },
-        );
-        std::thread::sleep(Duration::from_millis(400));
+        let monitor = HealthMonitor::start(topology.clone(), cfg_ms(20, 100, 1));
+        // wait for hard evidence the threshold was crossed repeatedly —
+        // not for wall time to pass
+        let probed = monitor.wait_stats(Duration::from_secs(5), |s| {
+            s.get(&ShardId(0)).is_some_and(|e| e.consecutive_failures >= 3)
+        });
+        assert!(probed, "monitor never probed the drained shard");
         assert_eq!(
             topology.lock().unwrap().state(ShardId(0)),
             Some(ShardState::Draining),

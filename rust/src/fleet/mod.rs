@@ -26,7 +26,7 @@ pub mod topology;
 
 pub use aggregate::{aggregate, FleetSnapshot, ShardSnapshot};
 pub use gateway::{serve_gateway, GatewayConfig, GatewayHandle, GatewayStats};
-pub use health::{probe_shard, HealthConfig, HealthMonitor, ProbeStats};
+pub use health::{probe_shard, probe_transition, HealthConfig, HealthMonitor, ProbeStats};
 pub use topology::{HashRing, Shard, ShardId, ShardState, Topology};
 
 use anyhow::{Context, Result};

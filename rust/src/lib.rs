@@ -10,8 +10,9 @@
 //!   the split-policy serving [`coordinator`], the sharded serving
 //!   [`fleet`] (consistent-hash gateway, shard health/draining, merged
 //!   fleet metrics), the OpenGL [`shader`] toolchain, simulated edge
-//!   [`device`]s, the shaped [`net`] stack, pixel-observation [`envs`],
-//!   and the generic [`rl`] trainer.
+//!   [`device`]s, the shaped [`net`] stack, the deterministic [`sim`]
+//!   substrate (virtual clock + chaos-scenario simnet, DESIGN.md §6),
+//!   pixel-observation [`envs`], and the generic [`rl`] trainer.
 //!
 //! Scale-out path: `coordinator::serve` is one shard; `fleet::launch_local`
 //! (or an out-of-process gateway via `fleet::serve_gateway`) runs N of them
@@ -28,6 +29,7 @@ pub mod shader;
 pub mod envs;
 pub mod device;
 pub mod net;
+pub mod sim;
 pub mod coordinator;
 pub mod fleet;
 pub mod rl;

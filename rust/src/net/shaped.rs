@@ -2,12 +2,21 @@
 //! behave like a B-bits-per-second link (the `tc netem`-style shaping the
 //! paper applies in §4.3), plus an analytic link model used by the
 //! deterministic experiments.
+//!
+//! All time flows through the [`crate::sim::Clock`] seam: production code
+//! pays real sleeps ([`ShapedWriter::new`] uses the wall clock), while
+//! tests and the simnet drive the identical refill/deficit arithmetic
+//! under a virtual clock with zero real waiting
+//! ([`ShapedWriter::with_clock`]).
 
 use std::io::{Read, Write};
 use std::time::{Duration, Instant};
 
-/// Token bucket over wall-clock time. `rate_bps` is in *bits* per second
-/// (matching the paper's Mb/s figures); burst is the bucket depth in bytes.
+use crate::sim::clock::ClockHandle;
+
+/// Token bucket over an injected clock's instants. `rate_bps` is in *bits*
+/// per second (matching the paper's Mb/s figures); burst is the bucket
+/// depth in bytes.
 #[derive(Debug)]
 pub struct TokenBucket {
     rate_bytes_per_sec: f64,
@@ -18,27 +27,52 @@ pub struct TokenBucket {
 
 impl TokenBucket {
     pub fn new(rate_bps: f64, burst_bytes: usize) -> TokenBucket {
+        Self::new_at(rate_bps, burst_bytes, Instant::now())
+    }
+
+    /// Construct against an explicit epoch — required under a sim clock,
+    /// where `Instant::now()` would smuggle a wall-clock read (and a
+    /// nondeterministic first refill) into virtual time.
+    pub fn new_at(rate_bps: f64, burst_bytes: usize, now: Instant) -> TokenBucket {
+        assert!(
+            rate_bps > 0.0 && rate_bps.is_finite(),
+            "token bucket needs a positive finite rate (got {rate_bps})"
+        );
         TokenBucket {
             rate_bytes_per_sec: rate_bps / 8.0,
-            burst_bytes: burst_bytes as f64,
+            burst_bytes: (burst_bytes as f64).max(1.0),
             tokens: burst_bytes as f64,
-            last: Instant::now(),
+            last: now,
         }
     }
 
+    /// Bucket depth in bytes.
+    pub fn burst_bytes(&self) -> usize {
+        self.burst_bytes as usize
+    }
+
     fn refill(&mut self, now: Instant) {
-        let dt = now.duration_since(self.last).as_secs_f64();
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
         self.tokens = (self.tokens + dt * self.rate_bytes_per_sec).min(self.burst_bytes);
         self.last = now;
     }
 
     /// How long to wait before `n` bytes may be sent (0 if sendable now).
+    ///
+    /// A demand larger than the bucket depth can never be met by waiting —
+    /// refill caps at `burst_bytes`, so the naive deficit would starve the
+    /// caller forever. The demand is clamped to the depth instead: the
+    /// caller is released once the bucket is full, and its `consume`
+    /// drives the balance negative, back-pressuring subsequent sends by
+    /// exactly the overshoot. The returned delay is always finite and
+    /// non-negative.
     pub fn delay_for(&mut self, n: usize, now: Instant) -> Duration {
         self.refill(now);
-        if self.tokens >= n as f64 {
+        let need = (n as f64).min(self.burst_bytes);
+        if self.tokens >= need {
             Duration::ZERO
         } else {
-            let deficit = n as f64 - self.tokens;
+            let deficit = need - self.tokens;
             Duration::from_secs_f64(deficit / self.rate_bytes_per_sec)
         }
     }
@@ -56,14 +90,23 @@ pub struct ShapedWriter<W: Write> {
     inner: W,
     bucket: TokenBucket,
     chunk: usize,
+    clock: ClockHandle,
 }
 
 impl<W: Write> ShapedWriter<W> {
     pub fn new(inner: W, rate_bps: f64) -> ShapedWriter<W> {
+        Self::with_clock(inner, rate_bps, ClockHandle::wall())
+    }
+
+    /// Pace against an injected clock: under a `SimClock`, the delay loop
+    /// advances virtual time instead of sleeping — the shaped-link
+    /// property tests run arbitrary write schedules in microseconds.
+    pub fn with_clock(inner: W, rate_bps: f64, clock: ClockHandle) -> ShapedWriter<W> {
         // bucket depth ~ 20ms of the link rate: small enough for smooth
         // pacing, big enough to not throttle tiny frames artificially
         let burst = ((rate_bps / 8.0) * 0.02).max(1500.0) as usize;
-        ShapedWriter { inner, bucket: TokenBucket::new(rate_bps, burst), chunk: 1500 }
+        let bucket = TokenBucket::new_at(rate_bps, burst, clock.now());
+        ShapedWriter { inner, bucket, chunk: 1500, clock }
     }
 
     pub fn into_inner(self) -> W {
@@ -75,11 +118,11 @@ impl<W: Write> Write for ShapedWriter<W> {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
         let n = buf.len().min(self.chunk);
         loop {
-            let d = self.bucket.delay_for(n, Instant::now());
+            let d = self.bucket.delay_for(n, self.clock.now());
             if d.is_zero() {
                 break;
             }
-            std::thread::sleep(d);
+            self.clock.sleep(d);
         }
         self.bucket.consume(n);
         self.inner.write_all(&buf[..n])?;
@@ -193,5 +236,56 @@ mod tests {
         let t0 = Instant::now();
         w.write_all(&buf).unwrap();
         assert!(t0.elapsed().as_secs_f64() < 0.05);
+    }
+
+    #[test]
+    fn oversized_demand_does_not_starve() {
+        // Regression: a demand above the bucket depth used to make
+        // `delay_for` unsatisfiable forever (refill caps at burst), so a
+        // delay/sleep/retry loop spun without end. Now the demand clamps
+        // to the depth: wait once, send, go negative.
+        let mut b = TokenBucket::new(8_000.0, 100); // 1000 B/s, 100 B deep
+        let t0 = Instant::now();
+        b.consume(100); // empty it
+        let d = b.delay_for(500, t0);
+        assert!(d > Duration::ZERO);
+        // a full refill satisfies the clamped demand
+        let later = t0 + d;
+        assert_eq!(b.delay_for(500, later), Duration::ZERO);
+        b.consume(500); // -400: the overshoot back-pressures the next send
+        let d2 = b.delay_for(100, later);
+        assert!((d2.as_secs_f64() - 0.5).abs() < 0.01, "{d2:?}");
+    }
+
+    #[test]
+    fn shaped_writer_virtual_clock_paces_without_real_sleeps() {
+        use crate::sim::clock::SimClock;
+        // 800 kb/s = 100 kB/s: 50 kB takes ~0.5 s of *virtual* time
+        let clock = SimClock::new();
+        let mut w = ShapedWriter::with_clock(Vec::new(), 800_000.0, clock.handle());
+        let real0 = Instant::now();
+        w.write_all(&[7u8; 50_000]).unwrap();
+        assert!(real0.elapsed().as_secs_f64() < 0.2, "slept in real time");
+        let vt = clock.now_secs();
+        // burst gives a 2 kB head start: expect ~0.48 s of virtual pacing
+        assert!((0.4..0.6).contains(&vt), "virtual time {vt}");
+        assert_eq!(w.into_inner().len(), 50_000);
+    }
+
+    #[test]
+    fn virtual_and_wall_bucket_arithmetic_agree() {
+        // same instants, same answers: the clock seam changes the source
+        // of instants, never the arithmetic
+        let t0 = Instant::now();
+        let mut a = TokenBucket::new_at(1e6, 2500, t0);
+        let mut b = TokenBucket::new_at(1e6, 2500, t0);
+        for i in 0..200u64 {
+            let now = t0 + Duration::from_millis(i * 3);
+            let d1 = a.delay_for(1500, now);
+            let d2 = b.delay_for(1500, now);
+            assert_eq!(d1, d2);
+            a.consume(1500);
+            b.consume(1500);
+        }
     }
 }

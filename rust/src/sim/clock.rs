@@ -1,0 +1,211 @@
+//! The clock seam: every time-sensitive subsystem (token-bucket shaping,
+//! batch deadlines, client pacing, thermal integration) reads time through
+//! a [`Clock`] instead of calling `Instant::now()` directly. Production
+//! code injects [`WallClock`]; the deterministic scenario runner injects a
+//! [`SimClock`] whose `Instant`s are minted from a virtual offset, so the
+//! exact same arithmetic (the batcher's `Instant`-typed deadlines, the
+//! bucket's refill math) runs under simulated time with zero real sleeps.
+//!
+//! `SimClock` pairs with the virtual [`EventQueue`] (re-exported from
+//! `util::simclock`): the runner pops the next event, `advance_to_secs`
+//! the clock, and handles it — discrete-event simulation over the same
+//! component code the threaded servers run.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub use crate::util::simclock::EventQueue;
+
+/// A source of monotonic time plus the ability to wait.
+pub trait Clock: Send + Sync {
+    /// Current instant. Sim clocks mint `base + virtual_offset`, so the
+    /// values are ordinary `Instant`s and all `Duration` arithmetic in
+    /// downstream code works unchanged.
+    fn now(&self) -> Instant;
+
+    /// Wait for `d`. On the wall clock this is `thread::sleep`; on a sim
+    /// clock the virtual time simply advances (in a single-threaded
+    /// simulation the sleeper is the only runnable task).
+    fn sleep(&self, d: Duration);
+}
+
+/// Real time: `Instant::now()` + `thread::sleep`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+
+    fn sleep(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// Shared virtual clock. Cloning shares the underlying time cell, so a
+/// scenario runner and the components it drives all observe one timeline.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    inner: Arc<Mutex<Duration>>,
+    base: Instant,
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { inner: Arc::new(Mutex::new(Duration::ZERO)), base: Instant::now() }
+    }
+
+    /// Seconds of virtual time since the clock was created.
+    pub fn now_secs(&self) -> f64 {
+        self.inner.lock().unwrap().as_secs_f64()
+    }
+
+    /// The instant a virtual timestamp (seconds since start) maps to.
+    pub fn instant_at(&self, t_secs: f64) -> Instant {
+        self.base + Duration::from_secs_f64(t_secs.max(0.0))
+    }
+
+    pub fn advance(&self, d: Duration) {
+        *self.inner.lock().unwrap() += d;
+    }
+
+    pub fn advance_secs(&self, s: f64) {
+        assert!(s >= 0.0 && s.is_finite(), "advance by {s}");
+        self.advance(Duration::from_secs_f64(s));
+    }
+
+    /// Jump to an absolute virtual time (seconds since start). Never moves
+    /// backwards: an event popped at a tied or stale timestamp leaves the
+    /// clock where it is.
+    pub fn advance_to_secs(&self, t: f64) {
+        assert!(t.is_finite(), "advance_to {t}");
+        let mut g = self.inner.lock().unwrap();
+        let target = Duration::from_secs_f64(t.max(0.0));
+        if target > *g {
+            *g = target;
+        }
+    }
+
+    /// A type-erased handle for injection into configs.
+    pub fn handle(&self) -> ClockHandle {
+        ClockHandle(Arc::new(self.clone()))
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Instant {
+        self.base + *self.inner.lock().unwrap()
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.advance(d);
+    }
+}
+
+/// Cloneable, debuggable handle to a `dyn Clock` — the currency configs
+/// carry (`ClientConfig`, `ServerConfig`, `ShapedWriter`).
+#[derive(Clone)]
+pub struct ClockHandle(Arc<dyn Clock>);
+
+impl ClockHandle {
+    pub fn wall() -> ClockHandle {
+        ClockHandle(Arc::new(WallClock))
+    }
+
+    pub fn sim(clock: &SimClock) -> ClockHandle {
+        clock.handle()
+    }
+
+    pub fn now(&self) -> Instant {
+        self.0.now()
+    }
+
+    pub fn sleep(&self, d: Duration) {
+        self.0.sleep(d);
+    }
+}
+
+impl Default for ClockHandle {
+    fn default() -> Self {
+        ClockHandle::wall()
+    }
+}
+
+impl std::fmt::Debug for ClockHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ClockHandle")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = WallClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sim_clock_advances_only_virtually() {
+        let c = SimClock::new();
+        let t0 = c.now();
+        c.advance_secs(2.5);
+        assert_eq!(c.now().duration_since(t0), Duration::from_secs_f64(2.5));
+        assert!((c.now_secs() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_sleep_is_instant_in_real_time() {
+        let c = SimClock::new();
+        let real0 = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(real0.elapsed() < Duration::from_secs(1));
+        assert!((c.now_secs() - 3600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clones_share_the_timeline() {
+        let a = SimClock::new();
+        let b = a.clone();
+        a.advance_secs(1.0);
+        assert!((b.now_secs() - 1.0).abs() < 1e-12);
+        b.advance_to_secs(5.0);
+        assert!((a.now_secs() - 5.0).abs() < 1e-12);
+        // stale pops never rewind
+        b.advance_to_secs(4.0);
+        assert!((a.now_secs() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn instant_at_matches_advance() {
+        let c = SimClock::new();
+        let i = c.instant_at(1.25);
+        c.advance_secs(1.25);
+        assert_eq!(c.now(), i);
+    }
+
+    #[test]
+    fn handle_is_injectable() {
+        let c = SimClock::new();
+        let h = c.handle();
+        let t0 = h.now();
+        h.sleep(Duration::from_millis(250));
+        assert_eq!(h.now().duration_since(t0), Duration::from_millis(250));
+        // default handle is the wall clock
+        let w = ClockHandle::default();
+        assert!(w.now().elapsed() < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,37 @@
+//! Deterministic simulation substrate (the "simnet", DESIGN.md §6).
+//!
+//! Everything the fleet/serve stack needs to run under **virtual time**,
+//! fully in-process, with seeded fault injection:
+//!
+//! * [`clock`] — the [`Clock`] seam ([`WallClock`] / [`SimClock`] /
+//!   [`ClockHandle`]) threaded through `net::shaped`, the coordinator's
+//!   client and server, and `device::thermal`. Sim clocks mint ordinary
+//!   `Instant`s, so `Duration` arithmetic downstream is untouched.
+//! * [`transport`] — the [`Transport`] framing surface, [`SimNet`] lane
+//!   fabric (latency/jitter, token-bucket bandwidth, drop, duplicate,
+//!   reorder, partition, mid-frame cuts), and the [`SimDuplex`]
+//!   `Read`/`Write` socket pair that `net::tcp::read_msg`/`write_msg`
+//!   drive unmodified.
+//! * [`log`] — the canonical [`EventLog`]: byte-identical across
+//!   same-seed runs (CI diffs it to enforce determinism).
+//! * [`scenario`] — the chaos runner: gateway + N shards + M clients as a
+//!   discrete-event simulation reusing the real `Topology`,
+//!   `BatchCollector`, `SessionManager`, `net::framing`, and
+//!   `probe_transition` state machine. `rust/tests/sim_scenarios.rs` is
+//!   the scenario suite; DESIGN.md §6 documents how to write a new one.
+//!
+//! Zero `std::thread::sleep` exists anywhere under this module: waiting
+//! is advancing the clock.
+
+pub mod clock;
+pub mod log;
+pub mod scenario;
+pub mod transport;
+
+pub use clock::{Clock, ClockHandle, SimClock, WallClock};
+pub use log::EventLog;
+pub use scenario::{
+    run_scenario, ClientOutcome, FaultCmd, GatewayOutcome, ScenarioConfig, ScenarioReport,
+    ShardOutcome, ThermalSpec,
+};
+pub use transport::{Delivery, LaneId, LinkFaults, SimDuplex, SimEndpoint, SimNet, Transport};

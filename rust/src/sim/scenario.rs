@@ -1,0 +1,1253 @@
+//! The chaos-scenario runner: gateway + N shards + M split/server-only
+//! clients composed fully in-process over [`SimNet`] lanes, advanced in
+//! virtual time, emitting a canonical [`EventLog`].
+//!
+//! The runner is a single-threaded discrete-event simulation that reuses
+//! the *real* fleet components wherever they are pure over time: the
+//! consistent-hash [`Topology`] routes sessions, [`BatchCollector`] forms
+//! batches from `Instant`s minted by the [`SimClock`], [`SessionManager`]
+//! stacks raw frames, `net::framing` encodes every byte on the wire, and
+//! [`probe_transition`] drives the same Up/Degraded/Down/Draining state
+//! machine the threaded health monitor runs. Only the thread/socket shell
+//! is replaced — by lanes, events, and virtual sleeps.
+//!
+//! Determinism contract: one seeded [`Rng`] feeds every fault decision,
+//! all shared maps are `BTreeMap`s (no hash-iteration order anywhere),
+//! and no wall-clock read exists on this path — two runs with the same
+//! [`ScenarioConfig`] render byte-identical logs. See DESIGN.md §6.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::{BatchCollector, BatchPolicy, Item};
+use crate::coordinator::router::Route;
+use crate::coordinator::session::SessionManager;
+use crate::device::thermal::{ClockedThermal, ThermalModel};
+use crate::fleet::health::{probe_transition, HealthConfig, ProbeStats};
+use crate::fleet::topology::{ShardId, ShardState, Topology};
+use crate::net::framing::{Hello, Msg, Payload, Request, Response};
+use crate::util::simclock::EventQueue;
+use crate::util::stats::Samples;
+
+use super::clock::SimClock;
+use super::log::EventLog;
+use super::transport::{Delivery, LaneId, LinkFaults, SimNet};
+
+/// Thermal chaos: an RC die model behind the shard executor. While the
+/// model reports throttled, batch costs multiply by `throttle_factor`.
+#[derive(Debug, Clone)]
+pub struct ThermalSpec {
+    pub model: ThermalModel,
+    /// dissipation while executing a batch, watts
+    pub active_watts: f64,
+    /// dissipation between batches, watts
+    pub idle_watts: f64,
+    /// batch-cost multiplier while throttled
+    pub throttle_factor: f64,
+}
+
+/// Timed chaos commands, applied at their scheduled virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultCmd {
+    /// hard-kill a shard: lanes close, queued work dies with it
+    CrashShard(usize),
+    /// bring a crashed shard back with fresh state (listener reopens)
+    RestartShard(usize),
+    /// blackhole both trunk directions of a shard (links up, path gone)
+    PartitionShard(usize),
+    /// heal a partition
+    HealShard(usize),
+    /// operator drain: existing pins keep flowing, new sessions go elsewhere
+    DrainShard(usize),
+    /// tear the gateway→shard trunk inside the next frame's bytes
+    CutShardUplinkMidFrame(usize),
+    /// integrate the shard's thermal model to now and log temp/throttle
+    SampleThermal(usize),
+}
+
+/// Everything a scenario is: fleet shape, link fault models, batch policy,
+/// modelled costs, and the timed fault plan. Fully determines the run
+/// together with `seed`.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub seed: u64,
+    pub shards: usize,
+    /// server-only clients (RawRgba payloads through SessionManager)
+    pub raw_clients: usize,
+    /// split clients (quantised Feature payloads, on-device encode time j)
+    pub split_clients: usize,
+    /// decisions per client
+    pub decisions: usize,
+    /// observation side length for raw clients (keep small: 4–8)
+    pub obs_x: usize,
+    /// transmitted feature block for split clients: (c, h, w)
+    pub feat: (usize, usize, usize),
+    /// modelled on-device encode time per split decision, seconds
+    pub encode_j: f64,
+    /// idle time between a response and the next decision
+    pub think: f64,
+    /// client response deadline before reconnect + retransmit
+    pub req_timeout: f64,
+    /// per-client retry/reconnect budget before giving up
+    pub max_retries: u64,
+    pub policy: BatchPolicy,
+    pub max_depth: usize,
+    /// modelled batch cost: fixed + per_item·n, seconds
+    pub exec_fixed: f64,
+    pub exec_per_item: f64,
+    /// route through the consistent-hash gateway (false = clients dial
+    /// shard 0 directly, as the break-even experiments do)
+    pub gateway: bool,
+    /// client → gateway (or → shard) uplink
+    pub client_link: LinkFaults,
+    /// gateway (or shard) → client downlink
+    pub reply_link: LinkFaults,
+    /// gateway ↔ shard trunk, both directions
+    pub shard_link: LinkFaults,
+    /// virtual-time health probing cadence (None = no prober)
+    pub probe_interval: Option<f64>,
+    /// thresholds for [`probe_transition`]
+    pub health: HealthConfig,
+    pub thermal: Option<ThermalSpec>,
+    pub faults: Vec<(f64, FaultCmd)>,
+    /// livelock safety valve
+    pub max_events: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 1,
+            shards: 2,
+            raw_clients: 4,
+            split_clients: 0,
+            decisions: 8,
+            obs_x: 4,
+            feat: (4, 3, 3),
+            encode_j: 0.002,
+            think: 0.0,
+            req_timeout: 0.25,
+            max_retries: 64,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            max_depth: 512,
+            exec_fixed: 0.0005,
+            exec_per_item: 0.0002,
+            gateway: true,
+            client_link: LinkFaults::ideal(),
+            reply_link: LinkFaults::ideal(),
+            shard_link: LinkFaults::ideal(),
+            probe_interval: None,
+            health: HealthConfig::default(),
+            thermal: None,
+            faults: Vec::new(),
+            max_events: 2_000_000,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ClientOutcome {
+    /// accepted decisions (non-empty actions)
+    pub decisions: usize,
+    /// explicit back-pressure rejections observed
+    pub rejected: u64,
+    /// duplicate/stale responses discarded by id de-duplication
+    pub dup_responses: u64,
+    /// hello retries + request retransmits
+    pub retries: u64,
+    /// connection epochs beyond the first
+    pub reconnects: u64,
+    pub gave_up: u64,
+    /// hello acks observed per connection epoch (exactly-once invariant:
+    /// every entry should be 1)
+    pub hello_acks: Vec<u64>,
+    /// end-to-end decision latencies, virtual seconds
+    pub latencies: Samples,
+}
+
+#[derive(Debug, Default)]
+pub struct ShardOutcome {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_batch: usize,
+    /// batches fired because the route filled to max_batch
+    pub size_fired: u64,
+    /// batches fired on the max_wait deadline
+    pub deadline_fired: u64,
+    /// admissions bounced by the depth bound (explicit empty-action reply)
+    pub rejected: u64,
+    /// torn/undecodable frames surfaced at this shard
+    pub frame_errors: u64,
+    pub throttled_batches: u64,
+    pub max_temp: f64,
+    pub final_throttled: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct GatewayOutcome {
+    /// first-time session placements
+    pub assignments: u64,
+    /// placements that moved a session to a different shard
+    pub reassigned: u64,
+    /// shard-side hello acks filtered off the return path
+    pub filtered_shard_acks: u64,
+    pub forwarded_requests: u64,
+    pub forwarded_responses: u64,
+    /// hellos/requests with no routable shard
+    pub no_route: u64,
+    /// trunk closures observed (crash detection)
+    pub crash_detected: u64,
+}
+
+#[derive(Debug)]
+pub struct ScenarioReport {
+    /// the canonical event log (byte-identical across same-seed runs)
+    pub log: String,
+    pub clients: Vec<ClientOutcome>,
+    pub shards: Vec<ShardOutcome>,
+    pub gateway: GatewayOutcome,
+    /// final topology state per shard (gateway mode)
+    pub shard_states: Vec<ShardState>,
+    /// final `Topology::drained` verdict per shard (gateway mode)
+    pub drained: Vec<bool>,
+    /// virtual end time, seconds
+    pub elapsed: f64,
+    /// events processed
+    pub events: usize,
+}
+
+impl ScenarioReport {
+    pub fn completed_decisions(&self) -> usize {
+        self.clients.iter().map(|c| c.decisions).sum()
+    }
+
+    pub fn total_give_ups(&self) -> u64 {
+        self.clients.iter().map(|c| c.gave_up).sum()
+    }
+
+    /// Every connection epoch of every client saw exactly one hello ack.
+    pub fn hello_acks_exactly_once(&self) -> bool {
+        self.clients
+            .iter()
+            .all(|c| c.hello_acks.iter().all(|&n| n == 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// world internals
+// ---------------------------------------------------------------------------
+
+/// Who consumes deliveries on a lane.
+#[derive(Debug, Clone, Copy)]
+enum Owner {
+    Client(usize),
+    GatewayFromClient(usize),
+    GatewayFromShard(usize),
+    Shard(usize),
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// client (re)connects: send hello on the current epoch
+    Connect(usize),
+    /// client starts its next decision
+    Kick(usize),
+    /// client's pending request goes on the wire (encode done)
+    Send(usize),
+    HelloTimeout { c: usize, epoch: u64 },
+    ReqTimeout { c: usize, id: u64, epoch: u64 },
+    /// batch-deadline check
+    ShardWake(usize),
+    /// modelled execution finished: replies go on the wire — but only if
+    /// the shard incarnation that formed the batch is still the one alive
+    ExecDone { s: usize, incarnation: u64, replies: Vec<(u32, u64, f32)> },
+    Probe,
+    /// index into cfg.faults
+    Fault(usize),
+}
+
+struct Pending {
+    id: u64,
+    t0: f64,
+}
+
+struct ClientSim {
+    mode: Route,
+    up: LaneId,
+    down: LaneId,
+    epoch: u64,
+    next_id: u64,
+    pending: Option<Pending>,
+    done: usize,
+    finished: bool,
+    out: ClientOutcome,
+}
+
+struct SimWork {
+    client: u32,
+    id: u64,
+    payload: Payload,
+}
+
+struct ShardSim {
+    up: LaneId,
+    down: LaneId,
+    alive: bool,
+    /// bumped on every restart: in-flight work from a dead incarnation
+    /// (batches executing at crash time) must not answer after a restart
+    incarnation: u64,
+    collector: BatchCollector<SimWork>,
+    sessions: SessionManager,
+    obs_scratch: Vec<f32>,
+    busy_until: f64,
+    thermal: Option<ClockedThermal>,
+    out: ShardOutcome,
+}
+
+struct GatewaySim {
+    topology: Topology,
+    /// live pin per session (hello-established, request-consulted)
+    pins: BTreeMap<u32, usize>,
+    /// last placement per session, for the reassignment counter
+    last_assign: BTreeMap<u32, usize>,
+    out: GatewayOutcome,
+}
+
+struct World {
+    cfg: ScenarioConfig,
+    clock: SimClock,
+    net: SimNet,
+    log: EventLog,
+    events: EventQueue<Ev>,
+    owners: Vec<Owner>,
+    clients: Vec<ClientSim>,
+    shards: Vec<ShardSim>,
+    gw: GatewaySim,
+    probe_stats: Vec<ProbeStats>,
+    partitioned: Vec<bool>,
+    n_events: usize,
+}
+
+/// Encode a message to its frame body (length prefix stripped): the byte
+/// form lanes carry and `Msg::decode` accepts.
+fn msg_body(m: &Msg) -> Vec<u8> {
+    let framed = m.encode();
+    framed[4..].to_vec()
+}
+
+/// Run one scenario to completion. See the module docs for the model.
+pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
+    let mut w = World::new(cfg.clone())?;
+    w.prime();
+    w.drive()?;
+    Ok(w.finish())
+}
+
+impl World {
+    fn new(cfg: ScenarioConfig) -> Result<World> {
+        if cfg.shards == 0 {
+            bail!("a scenario needs at least one shard");
+        }
+        if cfg.raw_clients + cfg.split_clients == 0 {
+            bail!("a scenario needs at least one client");
+        }
+        let mut net = SimNet::new(cfg.seed);
+        let mut owners = Vec::new();
+        let mut topology = Topology::new(32);
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for s in 0..cfg.shards {
+            let name = format!("shard-{s}");
+            let up = net.lane("gw", &name, cfg.shard_link);
+            owners.push(Owner::Shard(s));
+            let down = net.lane(&name, "gw", cfg.shard_link);
+            owners.push(Owner::GatewayFromShard(s));
+            topology.add_shard(
+                ShardId(s as u16),
+                format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
+            );
+            shards.push(ShardSim {
+                up,
+                down,
+                alive: true,
+                incarnation: 0,
+                collector: BatchCollector::new(cfg.policy, cfg.max_depth),
+                sessions: SessionManager::new(),
+                obs_scratch: Vec::new(),
+                busy_until: 0.0,
+                thermal: None,
+                out: ShardOutcome::default(),
+            });
+        }
+        let peer = if cfg.gateway { "gw".to_string() } else { "shard-0".to_string() };
+        let n_clients = cfg.raw_clients + cfg.split_clients;
+        let mut clients = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let name = format!("client-{c}");
+            let up = net.lane(&name, &peer, cfg.client_link);
+            owners.push(if cfg.gateway {
+                Owner::GatewayFromClient(c)
+            } else {
+                Owner::Shard(0)
+            });
+            let down = net.lane(&peer, &name, cfg.reply_link);
+            owners.push(Owner::Client(c));
+            clients.push(ClientSim {
+                mode: if c < cfg.raw_clients { Route::Full } else { Route::Split },
+                up,
+                down,
+                epoch: 0,
+                next_id: 0,
+                pending: None,
+                done: 0,
+                finished: false,
+                out: ClientOutcome { hello_acks: vec![0], ..ClientOutcome::default() },
+            });
+        }
+        let n_shards = cfg.shards;
+        Ok(World {
+            cfg,
+            clock: SimClock::new(),
+            net,
+            log: EventLog::new(),
+            events: EventQueue::new(),
+            owners,
+            clients,
+            shards,
+            gw: GatewaySim {
+                topology,
+                pins: BTreeMap::new(),
+                last_assign: BTreeMap::new(),
+                out: GatewayOutcome::default(),
+            },
+            probe_stats: vec![ProbeStats::default(); n_shards],
+            partitioned: vec![false; n_shards],
+            n_events: 0,
+        })
+    }
+
+    fn prime(&mut self) {
+        if let Some(spec) = &self.cfg.thermal {
+            let t0 = self.clock.instant_at(0.0);
+            for sh in &mut self.shards {
+                sh.thermal = Some(ClockedThermal::new(spec.model.clone(), t0));
+            }
+        }
+        for c in 0..self.clients.len() {
+            self.events.push(1e-4 * (c + 1) as f64, Ev::Connect(c));
+        }
+        for (k, (t, _)) in self.cfg.faults.iter().enumerate() {
+            self.events.push(*t, Ev::Fault(k));
+        }
+        if let Some(p) = self.cfg.probe_interval {
+            self.events.push(p, Ev::Probe);
+        }
+    }
+
+    fn drive(&mut self) -> Result<()> {
+        loop {
+            let net_t = self.net.peek_time();
+            let ev_t = self.events.peek_time();
+            let from_net = match (net_t, ev_t) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(b)) => a <= b,
+            };
+            self.n_events += 1;
+            if self.n_events > self.cfg.max_events {
+                bail!("scenario exceeded {} events — livelock?", self.cfg.max_events);
+            }
+            if from_net {
+                let (t, lane, d) = self.net.pop().unwrap();
+                self.clock.advance_to_secs(t);
+                self.on_delivery(t, lane, d);
+            } else {
+                let (t, ev) = self.events.pop().unwrap();
+                self.clock.advance_to_secs(t);
+                self.on_event(t, ev);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> ScenarioReport {
+        let shard_states = (0..self.shards.len())
+            .map(|s| self.gw.topology.state(ShardId(s as u16)).unwrap())
+            .collect();
+        let drained = (0..self.shards.len())
+            .map(|s| self.gw.topology.drained(ShardId(s as u16)))
+            .collect();
+        ScenarioReport {
+            log: self.log.render(),
+            clients: self.clients.into_iter().map(|c| c.out).collect(),
+            shards: self.shards.into_iter().map(|s| s.out).collect(),
+            gateway: self.gw.out,
+            shard_states,
+            drained,
+            elapsed: self.clock.now_secs(),
+            events: self.n_events,
+        }
+    }
+
+    fn all_done(&self) -> bool {
+        self.clients.iter().all(|c| c.finished)
+    }
+
+    fn reply_lane(&self, s: usize, client: u32) -> LaneId {
+        if self.cfg.gateway {
+            self.shards[s].down
+        } else {
+            self.clients[client as usize].down
+        }
+    }
+
+    // -- event handlers -----------------------------------------------------
+
+    fn on_event(&mut self, t: f64, ev: Ev) {
+        match ev {
+            Ev::Connect(c) => self.client_connect(t, c),
+            Ev::Kick(c) => self.client_kick(t, c),
+            Ev::Send(c) => self.client_send(t, c),
+            Ev::HelloTimeout { c, epoch } => self.client_hello_timeout(t, c, epoch),
+            Ev::ReqTimeout { c, id, epoch } => self.client_req_timeout(t, c, id, epoch),
+            Ev::ShardWake(s) => self.shard_pump(t, s),
+            Ev::ExecDone { s, incarnation, replies } => {
+                self.shard_exec_done(t, s, incarnation, replies)
+            }
+            Ev::Probe => self.probe_round(t),
+            Ev::Fault(k) => self.apply_fault(t, k),
+        }
+    }
+
+    fn client_connect(&mut self, t: f64, c: usize) {
+        let cl = &mut self.clients[c];
+        if cl.finished {
+            return;
+        }
+        let (epoch, up, split) = (cl.epoch, cl.up, cl.mode == Route::Split);
+        let body = msg_body(&Msg::Hello(Hello { client: c as u32, split, shard: None }));
+        self.log.record(t, "hello", &format!("client={c} epoch={epoch}"));
+        self.net.send(up, t, &body, &mut self.log);
+        self.events
+            .push(t + self.cfg.req_timeout, Ev::HelloTimeout { c, epoch });
+    }
+
+    /// Bump the connection epoch (a reconnect) and send a fresh hello.
+    /// The old socket is torn down first: anything still in flight on
+    /// either lane (a delayed ack, a stale response) is flushed, exactly
+    /// as a closed TCP socket would never deliver it — so per-epoch
+    /// hello-ack accounting stays honest even when delays exceed the
+    /// timeout.
+    fn client_reconnect(&mut self, t: f64, c: usize, why: &str) {
+        let cl = &mut self.clients[c];
+        cl.epoch += 1;
+        cl.out.hello_acks.push(0);
+        cl.out.reconnects += 1;
+        let (epoch, up, down) = (cl.epoch, cl.up, cl.down);
+        self.net.flush(up);
+        self.net.flush(down);
+        self.log
+            .record(t, "reconnect", &format!("client={c} epoch={epoch} why={why}"));
+        self.events.push(t, Ev::Connect(c));
+    }
+
+    /// Spend one unit of the retry budget; returns false (and finishes the
+    /// client) when the budget is exhausted.
+    fn client_spend_retry(&mut self, t: f64, c: usize) -> bool {
+        let cl = &mut self.clients[c];
+        cl.out.retries += 1;
+        if cl.out.retries > self.cfg.max_retries {
+            cl.out.gave_up += 1;
+            cl.finished = true;
+            self.log.record(t, "give_up", &format!("client={c}"));
+            self.gateway_unpin(t, c as u32);
+            return false;
+        }
+        true
+    }
+
+    fn client_kick(&mut self, t: f64, c: usize) {
+        let cl = &mut self.clients[c];
+        if cl.finished {
+            return;
+        }
+        if cl.done >= self.cfg.decisions {
+            cl.finished = true;
+            self.log.record(t, "client_done", &format!("client={c}"));
+            self.gateway_unpin(t, c as u32);
+            return;
+        }
+        if cl.pending.is_some() {
+            return;
+        }
+        let id = cl.next_id;
+        cl.next_id += 1;
+        cl.pending = Some(Pending { id, t0: t });
+        let delay = if cl.mode == Route::Split { self.cfg.encode_j } else { 0.0 };
+        if delay > 0.0 {
+            self.log
+                .record(t, "encode", &format!("client={c} id={id} j={delay:.6}"));
+        }
+        self.events.push(t + delay, Ev::Send(c));
+    }
+
+    fn client_send(&mut self, t: f64, c: usize) {
+        let (id, up, epoch, payload) = {
+            let cl = &mut self.clients[c];
+            if cl.finished {
+                return;
+            }
+            let Some(p) = &cl.pending else { return };
+            let id = p.id;
+            let fill = ((c as u64 * 131 + id * 17) % 251) as u8;
+            let payload = match cl.mode {
+                Route::Full => {
+                    let x = self.cfg.obs_x;
+                    Payload::RawRgba { x: x as u16, data: vec![fill; 4 * x * x] }
+                }
+                Route::Split => {
+                    let (fc, fh, fw) = self.cfg.feat;
+                    Payload::Features {
+                        c: fc as u16,
+                        h: fh as u16,
+                        w: fw as u16,
+                        scale: 1.0,
+                        data: vec![fill; fc * fh * fw],
+                    }
+                }
+            };
+            (id, cl.up, cl.epoch, payload)
+        };
+        let body = msg_body(&Msg::Request(Request { client: c as u32, id, payload }));
+        self.log
+            .record(t, "request", &format!("client={c} id={id} bytes={}", body.len()));
+        self.net.send(up, t, &body, &mut self.log);
+        self.events
+            .push(t + self.cfg.req_timeout, Ev::ReqTimeout { c, id, epoch });
+    }
+
+    fn client_hello_timeout(&mut self, t: f64, c: usize, epoch: u64) {
+        let cl = &self.clients[c];
+        if cl.finished || cl.epoch != epoch || cl.out.hello_acks[epoch as usize] > 0 {
+            return;
+        }
+        if self.client_spend_retry(t, c) {
+            self.client_reconnect(t, c, "hello_timeout");
+        }
+    }
+
+    fn client_req_timeout(&mut self, t: f64, c: usize, id: u64, epoch: u64) {
+        let cl = &self.clients[c];
+        if cl.finished || cl.epoch != epoch {
+            return;
+        }
+        let Some(p) = &cl.pending else { return };
+        if p.id != id {
+            return;
+        }
+        if self.client_spend_retry(t, c) {
+            self.client_reconnect(t, c, "req_timeout");
+        }
+    }
+
+    fn client_on_frame(&mut self, t: f64, c: usize, body: &[u8]) {
+        let msg = match Msg::decode(body) {
+            Ok(m) => m,
+            Err(_) => {
+                self.log.record(t, "client_frame_error", &format!("client={c}"));
+                return;
+            }
+        };
+        match msg {
+            Msg::Hello(h) => {
+                let cl = &mut self.clients[c];
+                if cl.finished {
+                    return;
+                }
+                let e = cl.epoch as usize;
+                cl.out.hello_acks[e] += 1;
+                if cl.out.hello_acks[e] == 1 {
+                    let shard = h.shard.map(|s| s as i32).unwrap_or(-1);
+                    let resend = cl.pending.is_some();
+                    self.log
+                        .record(t, "ack", &format!("client={c} epoch={e} shard={shard}"));
+                    if resend {
+                        self.events.push(t, Ev::Send(c));
+                    } else {
+                        self.events.push(t, Ev::Kick(c));
+                    }
+                } else {
+                    self.log.record(t, "dup_ack", &format!("client={c} epoch={e}"));
+                }
+            }
+            Msg::Response(r) => {
+                let think = self.cfg.think;
+                let cl = &mut self.clients[c];
+                if cl.finished {
+                    return;
+                }
+                let fresh = cl.pending.as_ref().is_some_and(|p| p.id == r.id);
+                if !fresh {
+                    cl.out.dup_responses += 1;
+                    self.log
+                        .record(t, "stale_response", &format!("client={c} id={}", r.id));
+                    return;
+                }
+                let t0 = cl.pending.take().unwrap().t0;
+                cl.done += 1;
+                if r.action.is_empty() {
+                    cl.out.rejected += 1;
+                    self.log.record(t, "rejected", &format!("client={c} id={}", r.id));
+                } else {
+                    cl.out.decisions += 1;
+                    cl.out.latencies.push(t - t0);
+                    self.log.record(
+                        t,
+                        "answer",
+                        &format!("client={c} id={} lat={:.6}", r.id, t - t0),
+                    );
+                }
+                self.events.push(t + think, Ev::Kick(c));
+            }
+            Msg::Request(_) => {
+                self.log.record(t, "client_unexpected", &format!("client={c}"));
+            }
+        }
+    }
+
+    // -- gateway ------------------------------------------------------------
+
+    /// Close a session's live pin (client finished or gave up).
+    fn gateway_unpin(&mut self, t: f64, session: u32) {
+        if let Some(s) = self.gw.pins.remove(&session) {
+            self.gw.topology.conn_closed(ShardId(s as u16));
+            self.log
+                .record(t, "unpin", &format!("session={session} shard={s}"));
+        }
+    }
+
+    fn gateway_hello(&mut self, t: f64, h: Hello) {
+        let session = h.client;
+        if let Some(prev) = self.gw.pins.remove(&session) {
+            self.gw.topology.conn_closed(ShardId(prev as u16));
+        }
+        let pick = self.gw.topology.route(session).map(|sh| sh.id.0 as usize);
+        let Some(s) = pick else {
+            self.gw.out.no_route += 1;
+            self.log.record(t, "no_route", &format!("session={session}"));
+            return; // no ack: the client's hello timeout drives the retry
+        };
+        self.gw.topology.conn_opened(ShardId(s as u16));
+        self.gw.pins.insert(session, s);
+        match self.gw.last_assign.insert(session, s) {
+            Some(prev) if prev != s => {
+                self.gw.out.reassigned += 1;
+                self.log
+                    .record(t, "reassign", &format!("session={session} {prev}->{s}"));
+            }
+            Some(_) => {}
+            None => {
+                self.gw.out.assignments += 1;
+                self.log.record(t, "pin", &format!("session={session} shard={s}"));
+            }
+        }
+        // the gateway speaks for the fleet: ack with the assigned shard
+        let ack = msg_body(&Msg::Hello(Hello {
+            client: session,
+            split: h.split,
+            shard: Some(s as u16),
+        }));
+        let down = self.clients[session as usize].down;
+        self.net.send(down, t, &ack, &mut self.log);
+        // forward the hello upstream; the shard's own ack must be filtered
+        let up = self.shards[s].up;
+        if self.shards[s].alive && self.net.is_open(up) {
+            let fwd = msg_body(&Msg::Hello(Hello { client: session, split: h.split, shard: None }));
+            self.net.send(up, t, &fwd, &mut self.log);
+        }
+    }
+
+    fn gateway_request(&mut self, t: f64, session: u32, body: &[u8]) {
+        let pinned = self.gw.pins.get(&session).copied();
+        let usable = |w: &World, s: usize| {
+            w.shards[s].alive
+                && w.net.is_open(w.shards[s].up)
+                && w.gw.topology.state(ShardId(s as u16)) != Some(ShardState::Down)
+        };
+        let s = match pinned {
+            Some(s) if usable(self, s) => s,
+            _ => {
+                // the pin is gone (crash, cut, Down): re-place the session
+                let pick = self.gw.topology.route(session).map(|sh| sh.id.0 as usize);
+                let Some(ns) = pick else {
+                    self.gw.out.no_route += 1;
+                    self.log.record(t, "no_route", &format!("session={session}"));
+                    return;
+                };
+                if let Some(prev) = pinned {
+                    self.gw.topology.conn_closed(ShardId(prev as u16));
+                }
+                self.gw.topology.conn_opened(ShardId(ns as u16));
+                self.gw.pins.insert(session, ns);
+                if self.gw.last_assign.insert(session, ns) != Some(ns) {
+                    self.gw.out.reassigned += 1;
+                }
+                self.log
+                    .record(t, "repin", &format!("session={session} shard={ns}"));
+                ns
+            }
+        };
+        self.gw.out.forwarded_requests += 1;
+        let up = self.shards[s].up;
+        self.net.send(up, t, body, &mut self.log);
+    }
+
+    /// A shard's return trunk closed: treat it like the real gateway's
+    /// refused pin — mark Down, drop its pins, let clients re-hello.
+    fn gateway_trunk_lost(&mut self, t: f64, s: usize) {
+        self.gw.out.crash_detected += 1;
+        self.gw.topology.set_state(ShardId(s as u16), ShardState::Down);
+        let lost: Vec<u32> = self
+            .gw
+            .pins
+            .iter()
+            .filter(|(_, &p)| p == s)
+            .map(|(&k, _)| k)
+            .collect();
+        for session in lost {
+            self.gw.pins.remove(&session);
+            self.gw.topology.conn_closed(ShardId(s as u16));
+        }
+        self.log.record(t, "trunk_lost", &format!("shard={s}"));
+    }
+
+    // -- shards -------------------------------------------------------------
+
+    fn shard_on_frame(&mut self, t: f64, s: usize, body: &[u8]) {
+        if !self.shards[s].alive {
+            self.log.record(t, "dead_shard_rx", &format!("shard={s}"));
+            return;
+        }
+        let msg = match Msg::decode(body) {
+            Ok(m) => m,
+            Err(_) => {
+                self.shards[s].out.frame_errors += 1;
+                self.log.record(t, "shard_frame_error", &format!("shard={s}"));
+                return;
+            }
+        };
+        match msg {
+            Msg::Hello(h) => {
+                let ack = msg_body(&Msg::Hello(Hello {
+                    client: h.client,
+                    split: h.split,
+                    shard: Some(s as u16),
+                }));
+                let lane = self.reply_lane(s, h.client);
+                self.net.send(lane, t, &ack, &mut self.log);
+            }
+            Msg::Request(r) => self.shard_request(t, s, r),
+            Msg::Response(_) => {
+                self.log.record(t, "shard_unexpected", &format!("shard={s}"));
+            }
+        }
+    }
+
+    fn shard_request(&mut self, t: f64, s: usize, r: Request) {
+        let (client, id) = (r.client, r.id);
+        let route = Route::of(&r.payload);
+        let reply_lane = self.reply_lane(s, client);
+        let now_i = self.clock.instant_at(t);
+        let sh = &mut self.shards[s];
+        sh.out.requests += 1;
+        let work = SimWork { client, id, payload: r.payload };
+        if sh.collector.push(route, work, now_i).is_some() {
+            sh.out.rejected += 1;
+            // explicit empty-action rejection, like the executor's
+            // back-pressure path
+            let reply = msg_body(&Msg::Response(Response { client, id, action: vec![] }));
+            self.log
+                .record(t, "reject", &format!("shard={s} client={client} id={id}"));
+            self.net.send(reply_lane, t, &reply, &mut self.log);
+        }
+        self.shard_pump(t, s);
+    }
+
+    /// Form every ready batch, model its execution window, and schedule
+    /// the replies; then arm the next deadline wake.
+    fn shard_pump(&mut self, t: f64, s: usize) {
+        if !self.shards[s].alive {
+            return;
+        }
+        let thermal_cfg = self
+            .cfg
+            .thermal
+            .as_ref()
+            .map(|sp| (sp.idle_watts, sp.active_watts, sp.throttle_factor));
+        let now_i = self.clock.instant_at(t);
+        loop {
+            let Some(route) = self.shards[s].collector.ready(now_i) else { break };
+            let max_batch = self.shards[s].collector.policy().max_batch;
+            let size_fired = self.shards[s].collector.depth(route) >= max_batch;
+            let mut batch: Vec<Item<SimWork>> = Vec::new();
+            self.shards[s].collector.take_into(route, &mut batch);
+            let n = batch.len();
+            let start = t.max(self.shards[s].busy_until);
+            // thermal: integrate the idle stretch, read the throttle state
+            let mut factor = 1.0;
+            if let Some((idle_w, _, throttle_factor)) = thermal_cfg {
+                let at = self.clock.instant_at(start);
+                let sh = &mut self.shards[s];
+                if let Some(th) = sh.thermal.as_mut() {
+                    th.update(idle_w, at);
+                    if th.model().throttled() {
+                        factor = throttle_factor;
+                        sh.out.throttled_batches += 1;
+                    }
+                }
+            }
+            let cost = (self.cfg.exec_fixed + self.cfg.exec_per_item * n as f64) * factor;
+            let done = start + cost;
+            self.shards[s].busy_until = done;
+            if let Some((_, active_w, _)) = thermal_cfg {
+                let at = self.clock.instant_at(done);
+                let sh = &mut self.shards[s];
+                if let Some(th) = sh.thermal.as_mut() {
+                    th.update(active_w, at);
+                    sh.out.max_temp = sh.out.max_temp.max(th.model().temp());
+                }
+            }
+            // real ingest machinery, modelled compute
+            let mut replies = Vec::with_capacity(n);
+            for item in &batch {
+                let w = &item.work;
+                match &w.payload {
+                    Payload::RawRgba { x, data } => {
+                        let x = *x as usize;
+                        let sh = &mut self.shards[s];
+                        sh.obs_scratch.clear();
+                        sh.obs_scratch.resize(9 * x * x, 0.0);
+                        let _ = sh
+                            .sessions
+                            .ingest_rgba_into(w.client, x, data, &mut sh.obs_scratch);
+                    }
+                    Payload::Features { scale, data, .. } => {
+                        let _ = crate::net::framing::dequantize_features(*scale, data);
+                    }
+                }
+                let action = (w.client as f32) * 1e-3 + (w.id as f32) * 1e-6 + 0.125;
+                replies.push((w.client, w.id, action));
+            }
+            {
+                let sh = &mut self.shards[s];
+                sh.out.batches += 1;
+                sh.out.max_batch = sh.out.max_batch.max(n);
+                if size_fired {
+                    sh.out.size_fired += 1;
+                } else {
+                    sh.out.deadline_fired += 1;
+                }
+            }
+            let fired = if size_fired { "size" } else { "deadline" };
+            let throttled = factor > 1.0;
+            self.log.record(
+                t,
+                "batch",
+                &format!(
+                    "shard={s} route={} n={n} fired={fired} throttled={throttled} done={done:.6}",
+                    route.name()
+                ),
+            );
+            let incarnation = self.shards[s].incarnation;
+            self.events.push(done, Ev::ExecDone { s, incarnation, replies });
+        }
+        if let Some(d) = self.shards[s].collector.next_deadline(now_i) {
+            if !self.shards[s].collector.is_empty() {
+                self.events
+                    .push(t + d.as_secs_f64() + 1e-6, Ev::ShardWake(s));
+            }
+        }
+    }
+
+    fn shard_exec_done(
+        &mut self,
+        t: f64,
+        s: usize,
+        incarnation: u64,
+        replies: Vec<(u32, u64, f32)>,
+    ) {
+        if !self.shards[s].alive || self.shards[s].incarnation != incarnation {
+            // crashed mid-exec (even if already restarted): the batch's
+            // work died with the old incarnation
+            self.log
+                .record(t, "replies_lost", &format!("shard={s} n={}", replies.len()));
+            return;
+        }
+        for (client, id, action) in replies {
+            let lane = self.reply_lane(s, client);
+            let body = msg_body(&Msg::Response(Response { client, id, action: vec![action] }));
+            self.net.send(lane, t, &body, &mut self.log);
+        }
+    }
+
+    // -- health & faults ----------------------------------------------------
+
+    fn probe_round(&mut self, t: f64) {
+        if self.cfg.gateway {
+            for s in 0..self.shards.len() {
+                let reachable = self.shards[s].alive
+                    && !self.partitioned[s]
+                    && self.net.is_open(self.shards[s].up)
+                    && self.net.is_open(self.shards[s].down);
+                let rtt = reachable
+                    .then(|| Duration::from_secs_f64(2.0 * self.cfg.shard_link.latency + 1e-4));
+                let st = &mut self.probe_stats[s];
+                st.probes += 1;
+                match rtt {
+                    Some(d) => {
+                        st.consecutive_failures = 0;
+                        st.last_rtt = Some(d.as_secs_f64());
+                    }
+                    None => {
+                        st.failures += 1;
+                        st.consecutive_failures += 1;
+                    }
+                }
+                let consecutive = st.consecutive_failures;
+                let id = ShardId(s as u16);
+                let cur = self.gw.topology.state(id).unwrap();
+                if let Some(next) = probe_transition(cur, rtt, consecutive, &self.cfg.health) {
+                    self.gw.topology.set_state(id, next);
+                    self.log.record(
+                        t,
+                        "probe_state",
+                        &format!("shard={s} {}->{}", cur.name(), next.name()),
+                    );
+                }
+            }
+        }
+        match self.cfg.probe_interval {
+            Some(p) if !self.all_done() => self.events.push(t + p, Ev::Probe),
+            _ => {}
+        }
+    }
+
+    fn apply_fault(&mut self, t: f64, k: usize) {
+        let (_, cmd) = self.cfg.faults[k];
+        match cmd {
+            FaultCmd::CrashShard(s) => {
+                self.log.record(t, "fault_crash", &format!("shard={s}"));
+                self.shards[s].alive = false;
+                let (up, down) = (self.shards[s].up, self.shards[s].down);
+                self.net.cut(up, false, t, &mut self.log);
+                self.net.cut(down, false, t, &mut self.log);
+            }
+            FaultCmd::RestartShard(s) => {
+                self.log.record(t, "fault_restart", &format!("shard={s}"));
+                let policy = self.cfg.policy;
+                let max_depth = self.cfg.max_depth;
+                let sh = &mut self.shards[s];
+                sh.alive = true;
+                sh.incarnation += 1;
+                sh.collector = BatchCollector::new(policy, max_depth);
+                sh.sessions = SessionManager::new();
+                sh.busy_until = t;
+                let (up, down) = (sh.up, sh.down);
+                self.net.reopen(up, t, &mut self.log);
+                self.net.reopen(down, t, &mut self.log);
+                if self.cfg.gateway && self.cfg.probe_interval.is_none() {
+                    // no prober to revive it: treat the restart as the
+                    // operator bringing it back
+                    self.gw.topology.set_state(ShardId(s as u16), ShardState::Up);
+                }
+            }
+            FaultCmd::PartitionShard(s) => {
+                self.partitioned[s] = true;
+                let (up, down) = (self.shards[s].up, self.shards[s].down);
+                self.net.set_partitioned(up, true, t, &mut self.log);
+                self.net.set_partitioned(down, true, t, &mut self.log);
+            }
+            FaultCmd::HealShard(s) => {
+                self.partitioned[s] = false;
+                let (up, down) = (self.shards[s].up, self.shards[s].down);
+                self.net.set_partitioned(up, false, t, &mut self.log);
+                self.net.set_partitioned(down, false, t, &mut self.log);
+            }
+            FaultCmd::DrainShard(s) => {
+                self.gw.topology.drain(ShardId(s as u16));
+                self.log.record(t, "fault_drain", &format!("shard={s}"));
+            }
+            FaultCmd::CutShardUplinkMidFrame(s) => {
+                let up = self.shards[s].up;
+                self.net.cut(up, true, t, &mut self.log);
+            }
+            FaultCmd::SampleThermal(s) => {
+                let idle_w = self.cfg.thermal.as_ref().map(|sp| sp.idle_watts).unwrap_or(0.0);
+                let at = self.clock.instant_at(t);
+                let sh = &mut self.shards[s];
+                if let Some(th) = sh.thermal.as_mut() {
+                    th.update(idle_w, at);
+                    sh.out.max_temp = sh.out.max_temp.max(th.model().temp());
+                    sh.out.final_throttled = th.model().throttled();
+                    let temp = th.model().temp();
+                    let throttled = th.model().throttled();
+                    self.log.record(
+                        t,
+                        "thermal",
+                        &format!("shard={s} temp={temp:.3} throttled={throttled}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // -- delivery dispatch ---------------------------------------------------
+
+    fn on_delivery(&mut self, t: f64, lane: LaneId, d: Delivery) {
+        match self.owners[lane] {
+            Owner::Client(c) => match d {
+                Delivery::Frame(body) => self.client_on_frame(t, c, &body),
+                Delivery::Truncated(_) => {
+                    self.log.record(t, "client_torn_frame", &format!("client={c}"));
+                }
+                Delivery::Closed => {
+                    self.log.record(t, "client_conn_closed", &format!("client={c}"));
+                }
+            },
+            Owner::GatewayFromClient(c) => match d {
+                Delivery::Frame(body) => match Msg::decode(&body) {
+                    Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
+                    Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
+                    Ok(Msg::Response(_)) => {
+                        self.log.record(t, "gw_unexpected", &format!("client={c}"));
+                    }
+                    Err(_) => {
+                        self.log.record(t, "gw_frame_error", &format!("client={c}"));
+                    }
+                },
+                Delivery::Truncated(_) => {
+                    self.log.record(t, "gw_torn_frame", &format!("client={c}"));
+                }
+                Delivery::Closed => {
+                    self.gateway_unpin(t, c as u32);
+                }
+            },
+            Owner::GatewayFromShard(s) => match d {
+                Delivery::Frame(body) => match Msg::decode(&body) {
+                    Ok(Msg::Hello(_)) => {
+                        // shard-side hello acks stay internal to the fleet
+                        self.gw.out.filtered_shard_acks += 1;
+                        self.log.record(t, "filter_ack", &format!("shard={s}"));
+                    }
+                    Ok(Msg::Response(r)) => {
+                        self.gw.out.forwarded_responses += 1;
+                        let down = self.clients[r.client as usize].down;
+                        self.net.send(down, t, &body, &mut self.log);
+                    }
+                    Ok(Msg::Request(_)) => {
+                        self.log.record(t, "gw_unexpected", &format!("shard={s}"));
+                    }
+                    Err(_) => {
+                        self.log.record(t, "gw_frame_error", &format!("shard={s}"));
+                    }
+                },
+                Delivery::Truncated(_) => {
+                    self.log.record(t, "gw_torn_frame", &format!("shard={s}"));
+                    self.gateway_trunk_lost(t, s);
+                }
+                Delivery::Closed => self.gateway_trunk_lost(t, s),
+            },
+            Owner::Shard(s) => match d {
+                Delivery::Frame(body) => self.shard_on_frame(t, s, &body),
+                Delivery::Truncated(_) => {
+                    self.shards[s].out.frame_errors += 1;
+                    self.log.record(t, "shard_torn_frame", &format!("shard={s}"));
+                }
+                Delivery::Closed => {
+                    self.log.record(t, "shard_uplink_closed", &format!("shard={s}"));
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(seed: u64) -> ScenarioConfig {
+        ScenarioConfig { seed, ..ScenarioConfig::default() }
+    }
+
+    #[test]
+    fn baseline_scenario_completes_every_decision() {
+        let r = run_scenario(&base(1)).expect("scenario");
+        assert_eq!(r.total_give_ups(), 0);
+        assert_eq!(r.completed_decisions(), 4 * 8);
+        assert!(r.hello_acks_exactly_once(), "{:?}", r.clients[0].hello_acks);
+        assert_eq!(r.gateway.no_route, 0);
+        assert_eq!(r.gateway.reassigned, 0);
+        let shard_reqs: u64 = r.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(shard_reqs, 32);
+        assert!(r.elapsed > 0.0 && r.elapsed < 10.0, "{}", r.elapsed);
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        let a = run_scenario(&base(7)).unwrap();
+        let b = run_scenario(&base(7)).unwrap();
+        assert_eq!(a.log, b.log, "same-seed logs diverged");
+        let c = run_scenario(&base(8)).unwrap();
+        assert_ne!(a.log, c.log, "different seeds produced the same log");
+    }
+
+    #[test]
+    fn direct_mode_skips_the_gateway() {
+        let cfg = ScenarioConfig {
+            gateway: false,
+            shards: 1,
+            raw_clients: 1,
+            split_clients: 1,
+            decisions: 5,
+            ..base(3)
+        };
+        let r = run_scenario(&cfg).unwrap();
+        assert_eq!(r.total_give_ups(), 0);
+        assert_eq!(r.completed_decisions(), 10);
+        assert_eq!(r.gateway.forwarded_requests, 0, "gateway must be inert");
+        assert_eq!(r.shards[0].requests, 10);
+    }
+
+    #[test]
+    fn split_clients_pay_the_encode_time() {
+        let cfg = ScenarioConfig {
+            gateway: false,
+            shards: 1,
+            raw_clients: 0,
+            split_clients: 1,
+            decisions: 4,
+            encode_j: 0.05,
+            ..base(4)
+        };
+        let mut r = run_scenario(&cfg).unwrap();
+        assert_eq!(r.completed_decisions(), 4);
+        assert!(
+            r.clients[0].latencies.median() >= 0.05,
+            "latency must include j: {}",
+            r.clients[0].latencies.median()
+        );
+    }
+
+    #[test]
+    fn rejects_configs_without_actors() {
+        assert!(run_scenario(&ScenarioConfig { shards: 0, ..base(1) }).is_err());
+        assert!(run_scenario(&ScenarioConfig {
+            raw_clients: 0,
+            split_clients: 0,
+            ..base(1)
+        })
+        .is_err());
+    }
+}

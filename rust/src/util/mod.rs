@@ -10,6 +10,7 @@ pub mod argparse;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod signal;
 pub mod simclock;
 pub mod stats;
 pub mod tables;

@@ -1,0 +1,129 @@
+//! Edge-triggered readiness signal: an epoch counter under a condvar.
+//!
+//! The fleet's e2e tests used to discover state changes (a shard marked
+//! Down, a drain completing, a rejection counted) by polling shared state
+//! in a `sleep` loop — the classic source of timing flake. A [`Signal`] is
+//! notified by whoever mutates the state; waiters re-evaluate a predicate
+//! only when something actually changed (or on timeout), so convergence is
+//! observed the instant it happens with no sleep granularity in the path.
+//!
+//! Locking contract: `notify()` only locks the signal's own epoch mutex,
+//! and `wait_until` never holds that mutex while running the predicate —
+//! so predicates may freely lock foreign state (a topology, a stats map)
+//! without lock-ordering hazards.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A monotone epoch counter + condvar. Cheap to share behind an `Arc`.
+#[derive(Debug, Default)]
+pub struct Signal {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Signal {
+    pub fn new() -> Signal {
+        Signal::default()
+    }
+
+    /// Announce that observable state changed. Call *after* releasing any
+    /// state locks the change touched.
+    pub fn notify(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Current epoch (mostly useful for tests and diagnostics).
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Block until `pred()` holds or `timeout` elapses. The predicate is
+    /// re-evaluated after every notification (and once at the deadline);
+    /// returns the predicate's final verdict.
+    pub fn wait_until<F: FnMut() -> bool>(&self, timeout: Duration, mut pred: F) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let seen = *self.epoch.lock().unwrap();
+            if pred() {
+                return true;
+            }
+            let mut g = self.epoch.lock().unwrap();
+            loop {
+                if *g != seen {
+                    break; // something changed while the predicate ran
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    drop(g);
+                    return pred();
+                }
+                let (ng, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = ng;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn immediate_predicate_returns_without_waiting() {
+        let s = Signal::new();
+        let t0 = Instant::now();
+        assert!(s.wait_until(Duration::from_secs(5), || true));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn timeout_returns_false_when_predicate_never_holds() {
+        let s = Signal::new();
+        assert!(!s.wait_until(Duration::from_millis(30), || false));
+    }
+
+    #[test]
+    fn waiter_wakes_on_notify() {
+        let s = Arc::new(Signal::new());
+        let v = Arc::new(AtomicU64::new(0));
+        let (ts, tv) = (s.clone(), v.clone());
+        let t = std::thread::spawn(move || {
+            tv.store(7, Ordering::SeqCst);
+            ts.notify();
+        });
+        assert!(s.wait_until(Duration::from_secs(5), || v.load(Ordering::SeqCst) == 7));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn epoch_counts_notifications() {
+        let s = Signal::new();
+        assert_eq!(s.epoch(), 0);
+        s.notify();
+        s.notify();
+        assert_eq!(s.epoch(), 2);
+    }
+
+    #[test]
+    fn change_during_predicate_is_not_missed() {
+        // pred false -> state changes + notify before the waiter re-locks:
+        // the epoch comparison must catch it rather than sleeping the full
+        // timeout. We can't force the interleaving, but we can at least
+        // assert the waiter converges fast with a racing notifier.
+        let s = Arc::new(Signal::new());
+        let v = Arc::new(AtomicU64::new(0));
+        let (ts, tv) = (s.clone(), v.clone());
+        let t = std::thread::spawn(move || {
+            for i in 1..=100u64 {
+                tv.store(i, Ordering::SeqCst);
+                ts.notify();
+            }
+        });
+        assert!(s.wait_until(Duration::from_secs(5), || v.load(Ordering::SeqCst) >= 100));
+        t.join().unwrap();
+    }
+}

@@ -2,6 +2,14 @@
 //! deterministic network model advance a virtual clock instead of sleeping,
 //! which makes the 5,000-frame sustained-load experiments (Fig. 3/4)
 //! reproducible and fast regardless of host speed.
+//!
+//! Two sim-time types coexist deliberately: this module's [`SimClock`] is
+//! the *plain f64-seconds counter* the device/experiment layer advances
+//! by hand, while `crate::sim::clock::SimClock` is the *`Instant`-minting
+//! shared clock* behind the `sim::Clock` seam (injectable wherever
+//! production code expects wall-clock instants). New time-seam work
+//! should use `sim::clock`; the [`EventQueue`] here is shared by both
+//! (re-exported from `sim::clock`).
 
 /// A monotonically-advancing virtual clock, in seconds.
 #[derive(Debug, Clone, Default)]
@@ -85,6 +93,11 @@ impl<T> EventQueue<T> {
 
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.time)
+    }
+
+    /// Time and payload of the next event without popping it.
+    pub fn peek(&self) -> Option<(f64, &T)> {
+        self.heap.peek().map(|e| (e.time, &e.payload))
     }
 
     pub fn pop(&mut self) -> Option<(f64, T)> {

@@ -6,6 +6,13 @@
 //! gateway's own session→shard table must never reassign, and each shard's
 //! request counter must equal exactly `decisions × clients assigned to it`
 //! — which cannot hold if any session's requests leaked onto two shards.
+//!
+//! No sleep-polling: state convergence (drain completion, crash
+//! detection) is observed through the gateway's change `Signal`
+//! (`wait_drained` / `wait_shard_state`), which wakes the instant the
+//! monitor or a connection thread commits the transition. The same
+//! scenarios also run under virtual time in `sim_scenarios.rs`; these
+//! tests keep the real-socket coverage.
 
 use std::time::Duration;
 
@@ -136,15 +143,12 @@ fn draining_shard_keeps_serving_but_gets_no_new_sessions() {
             "session {id} landed on the draining shard"
         );
     }
-    // all clients have disconnected, so the drain completes
-    let deadline = std::time::Instant::now() + Duration::from_secs(2);
-    while !fleet.gateway.drained(victim) {
-        assert!(
-            std::time::Instant::now() < deadline,
-            "draining shard still holds connections"
-        );
-        std::thread::sleep(Duration::from_millis(10));
-    }
+    // all clients have disconnected, so the drain completes; the signal
+    // fires on the closing connection's final topology edit
+    assert!(
+        fleet.gateway.wait_drained(victim, Duration::from_secs(2)),
+        "draining shard still holds connections"
+    );
     fleet.shutdown();
 }
 
@@ -184,19 +188,13 @@ fn health_monitor_detects_a_crash_and_flags_it_down() {
     let mut fleet = launch_local(cfg).expect("fleet");
     assert!(fleet.stop_shard(ShardId(0)));
 
-    let deadline = std::time::Instant::now() + Duration::from_secs(5);
-    loop {
-        let states = fleet.gateway.shard_states();
-        let s0 = states.iter().find(|(id, ..)| *id == ShardId(0)).unwrap().1;
-        if s0 == ShardState::Down {
-            break;
-        }
-        assert!(
-            std::time::Instant::now() < deadline,
-            "health monitor never marked the crashed shard down"
-        );
-        std::thread::sleep(Duration::from_millis(20));
-    }
+    // event-driven: woken on the probe verdict that flips the state
+    assert!(
+        fleet
+            .gateway
+            .wait_shard_state(ShardId(0), ShardState::Down, Duration::from_secs(5)),
+        "health monitor never marked the crashed shard down"
+    );
     // the survivor keeps serving
     let r = run_client(fleet.addr(), 42, &client_cfg(3)).expect("survivor client");
     assert_eq!(r.decisions, 3);

@@ -1,10 +1,16 @@
 //! Property tests for the wire protocol (`net::framing` / `net::tcp`):
 //! encode/decode round-trips over arbitrary messages, the quantisation
-//! error bound, frame-length invariants, and oversized-frame rejection.
+//! error bound, frame-length invariants, and oversized-frame rejection —
+//! plus the shaped-link (`net::shaped`) conservation/liveness properties,
+//! driven under the virtual clock so arbitrary write schedules run in
+//! microseconds with zero real sleeps.
+
+use std::io::Write;
 
 use miniconv::net::framing::{Hello, Msg, Payload, Request, Response, MAX_FRAME};
 use miniconv::net::tcp::{read_msg, write_msg};
-use miniconv::net::{dequantize_features, quantize_features};
+use miniconv::net::{dequantize_features, quantize_features, ShapedWriter, TokenBucket};
+use miniconv::sim::{Clock, SimClock};
 use miniconv::util::proptest::{check, prop_assert, Gen};
 
 /// Draw an arbitrary message of any variant.
@@ -162,6 +168,90 @@ fn prop_quantization_error_within_half_step_of_scale() {
                 err <= step * 0.5 + scale * 1e-6,
                 format!("|{a} - {b}| = {err} > half step {}", step * 0.5),
             )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn token_bucket_oversized_demand_terminates() {
+    // Regression for the starvation edge: `delay_for(n)` with
+    // n > burst_bytes could never be satisfied after refill capping, so a
+    // delay/sleep/retry loop (ShapedWriter's write loop) spun forever.
+    // The demand now clamps to the bucket depth: the wait is bounded.
+    let clock = SimClock::new();
+    let mut bucket = TokenBucket::new_at(8_000.0, 100, clock.instant_at(0.0));
+    bucket.consume(100); // empty
+    let n = 5_000; // 50x the bucket depth
+    let mut waits = 0;
+    loop {
+        let d = bucket.delay_for(n, clock.now());
+        if d.is_zero() {
+            break;
+        }
+        assert!(d.as_secs_f64().is_finite() && d.as_secs_f64() > 0.0);
+        clock.advance(d);
+        waits += 1;
+        assert!(waits <= 4, "delay/retry loop failed to converge");
+    }
+    bucket.consume(n);
+    // the overshoot back-pressures: the next byte needs ~ (n - burst)/rate
+    let d = bucket.delay_for(1, clock.now());
+    assert!((d.as_secs_f64() - 4.901).abs() < 0.01, "{d:?}");
+}
+
+#[test]
+fn prop_shaped_writer_never_exceeds_rate_times_t_plus_burst() {
+    // Conservation: under any seeded write schedule on the virtual clock,
+    // bytes released through the shaper never exceed rate·t + burst.
+    // Liveness: every write_all returns and the full payload drains.
+    check(60, |g| {
+        let rate_bps = g.f64(10_000.0, 1e8);
+        let rate_bytes = rate_bps / 8.0;
+        let burst = (rate_bytes * 0.02).max(1500.0);
+        let clock = SimClock::new();
+        let mut w = ShapedWriter::with_clock(Vec::new(), rate_bps, clock.handle());
+        let n_writes = g.usize(1, 30);
+        let mut total = 0usize;
+        for _ in 0..n_writes {
+            // occasional idle gaps let the bucket refill between writes
+            if g.bool() {
+                clock.advance_secs(g.f64(0.0, 0.05));
+            }
+            let size = g.usize(1, 50_000);
+            total += size;
+            let chunk = vec![0u8; size];
+            w.write_all(&chunk).map_err(|e| format!("write: {e}"))?;
+            let elapsed = clock.now_secs();
+            let cap = rate_bytes * elapsed + burst + 1.0;
+            prop_assert(
+                total as f64 <= cap,
+                format!("released {total} B > rate·t+burst = {cap:.1} B at t={elapsed:.4}"),
+            )?;
+        }
+        let inner = w.into_inner();
+        prop_assert(inner.len() == total, format!("drained {} of {total}", inner.len()))
+    });
+}
+
+#[test]
+fn prop_token_bucket_delays_are_finite_and_nonnegative() {
+    // Under arbitrary interleavings of delay_for/consume (including
+    // demands far above the burst and token balances driven negative),
+    // no NaN and no panic-producing negative duration can appear.
+    check(120, |g| {
+        let rate_bps = g.f64(1.0, 1e9);
+        let burst = g.usize(1, 1_000_000);
+        let clock = SimClock::new();
+        let mut b = TokenBucket::new_at(rate_bps, burst, clock.instant_at(0.0));
+        for _ in 0..g.usize(1, 40) {
+            clock.advance_secs(g.f64(0.0, 10.0));
+            let n = g.usize(0, 10_000_000);
+            let d = b.delay_for(n, clock.now());
+            prop_assert(d.as_secs_f64().is_finite(), "delay is not finite")?;
+            if g.bool() {
+                b.consume(n);
+            }
         }
         Ok(())
     });

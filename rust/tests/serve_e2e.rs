@@ -1,6 +1,16 @@
 //! End-to-end serving integration: real coordinator over loopback TCP,
 //! real artifacts, real shader-interpreter encoding on split clients.
 //! Requires `make artifacts` (skipped otherwise).
+//!
+//! Readiness is event-driven by construction: `serve()` returns only
+//! after the listener is bound and the executor has compiled its batch-1
+//! executables, so no test here waits on wall-clock polling. The
+//! bandwidth-shaping claim this file checks on real sockets
+//! (`shaped_split_latency_beats_raw_at_low_bandwidth`) is pinned
+//! deterministically — across a 1/5/20 Mb/s matrix and against the
+//! analytic break-even model — by the virtual-time suite in
+//! `sim_scenarios.rs`; the generous 3× margin here only guards the
+//! real-socket plumbing, not the timing claim itself.
 
 use std::time::Duration;
 

@@ -1,0 +1,451 @@
+//! Chaos-scenario suite over the deterministic simnet (`miniconv::sim`):
+//! gateway + shards + clients fully in-process, virtual time, seeded
+//! faults. Every scenario runs across a small seed matrix and, when
+//! `SIM_LOG_DIR` is set, writes its canonical event log to disk — CI runs
+//! the suite twice and byte-diffs the two directories to enforce the
+//! seed/replay contract. Zero `std::thread::sleep` anywhere on this path:
+//! the whole suite is pure event-queue arithmetic.
+
+use std::time::Duration;
+
+use miniconv::analysis::breakeven::split_wins;
+use miniconv::coordinator::BatchPolicy;
+use miniconv::device::ThermalModel;
+use miniconv::fleet::{ShardId, ShardState, Topology};
+use miniconv::net::LinkModel;
+use miniconv::sim::{
+    run_scenario, FaultCmd, LinkFaults, ScenarioConfig, ScenarioReport, ThermalSpec,
+};
+
+const SEEDS: [u64; 3] = [11, 23, 47];
+
+/// Run one scenario; emit its canonical log for the CI determinism diff.
+fn run_and_emit(name: &str, cfg: &ScenarioConfig) -> ScenarioReport {
+    let report = run_scenario(cfg).unwrap_or_else(|e| panic!("{name} seed {}: {e:#}", cfg.seed));
+    if let Ok(dir) = std::env::var("SIM_LOG_DIR") {
+        let dir = std::path::Path::new(&dir);
+        std::fs::create_dir_all(dir).expect("create SIM_LOG_DIR");
+        std::fs::write(dir.join(format!("{name}-{}.log", cfg.seed)), &report.log)
+            .expect("write scenario log");
+    }
+    report
+}
+
+/// Replicate the scenario runner's consistent-hash placement (the ring is
+/// a pure function of shard ids + vnodes, independent of the seed) to
+/// know which sessions start on shard 1.
+fn sessions_on_shard1(n_clients: usize, shards: usize) -> Vec<u32> {
+    let mut t = Topology::new(32);
+    for s in 0..shards {
+        t.add_shard(
+            ShardId(s as u16),
+            format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
+        );
+    }
+    (0..n_clients as u32)
+        .filter(|&s| t.route(s).unwrap().id == ShardId(1))
+        .collect()
+}
+
+fn at_most_one_ack_per_epoch(r: &ScenarioReport) -> bool {
+    r.clients
+        .iter()
+        .all(|c| c.hello_acks.iter().all(|&n| n <= 1))
+}
+
+// ---------------------------------------------------------------------------
+// determinism: the foundation every other scenario stands on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_runs_are_byte_identical() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 4,
+            split_clients: 2,
+            decisions: 6,
+            probe_interval: Some(0.02),
+            faults: vec![
+                (0.004, FaultCmd::PartitionShard(1)),
+                (0.05, FaultCmd::HealShard(1)),
+            ],
+            client_link: LinkFaults { jitter: 0.002, drop_p: 0.1, ..LinkFaults::ideal() },
+            req_timeout: 0.04,
+            ..ScenarioConfig::default()
+        };
+        let a = run_and_emit("determinism", &cfg);
+        let b = run_scenario(&cfg).expect("rerun");
+        assert_eq!(a.log, b.log, "seed {seed}: same-seed logs diverged");
+        assert!(!a.log.is_empty());
+    }
+    // and different seeds must actually explore different schedules
+    let mk = |seed| ScenarioConfig {
+        seed,
+        client_link: LinkFaults { jitter: 0.002, drop_p: 0.1, ..LinkFaults::ideal() },
+        ..ScenarioConfig::default()
+    };
+    let a = run_scenario(&mk(SEEDS[0])).unwrap();
+    let b = run_scenario(&mk(SEEDS[1])).unwrap();
+    assert_ne!(a.log, b.log, "different seeds produced identical logs");
+}
+
+// ---------------------------------------------------------------------------
+// scenario 1: shard crash + restart — hello-ack exactly-once under failover
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hello_ack_exactly_once_under_shard_failover() {
+    let n_clients = 12;
+    let moved = sessions_on_shard1(n_clients, 2);
+    assert!(!moved.is_empty(), "hash placed nothing on shard 1; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: n_clients,
+            decisions: 6,
+            think: 0.01,
+            req_timeout: 0.05,
+            probe_interval: Some(0.02),
+            faults: vec![
+                (0.005, FaultCmd::CrashShard(1)),
+                (0.06, FaultCmd::RestartShard(1)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("failover", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a client gave up");
+        assert_eq!(r.completed_decisions(), n_clients * 6, "seed {seed}");
+        // the invariant in the scenario's name: every connection epoch saw
+        // exactly one hello ack — shard-side acks never leaked through
+        assert!(r.hello_acks_exactly_once(), "seed {seed}: {:?}",
+            r.clients.iter().map(|c| c.hello_acks.clone()).collect::<Vec<_>>());
+        assert!(r.gateway.filtered_shard_acks > 0, "seed {seed}: filter never exercised");
+        assert!(r.gateway.crash_detected >= 1, "seed {seed}: crash never detected");
+        // every session that started on the crashed shard moved exactly once
+        assert_eq!(r.gateway.reassigned as usize, moved.len(), "seed {seed}");
+        // the restarted shard was probed back to Up
+        assert_eq!(r.shard_states[1], ShardState::Up, "seed {seed}");
+        assert_eq!(r.gateway.no_route, 0, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 2: reordered frames — batch-deadline correctness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_deadlines_hold_under_reordered_frames() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 1,
+            raw_clients: 6,
+            decisions: 8,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            shard_link: LinkFaults {
+                reorder_p: 0.3,
+                reorder_delay: 0.004,
+                ..LinkFaults::ideal()
+            },
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("reorder", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        // exactly-once despite arbitrary arrival order: every decision
+        // answered, nothing duplicated, nothing retried
+        assert_eq!(r.completed_decisions(), 48, "seed {seed}");
+        assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0);
+        assert_eq!(r.clients.iter().map(|c| c.retries).sum::<u64>(), 0, "seed {seed}");
+        let s = &r.shards[0];
+        assert_eq!(s.requests, 48, "seed {seed}: requests lost or duplicated");
+        // batching policy invariants held batch by batch
+        assert!(s.max_batch <= 4, "seed {seed}: batch exceeded max_batch");
+        assert_eq!(s.size_fired + s.deadline_fired, s.batches, "seed {seed}");
+        assert!(s.batches >= 12, "seed {seed}: {} batches for 48 reqs at cap 4", s.batches);
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 3: operator drain during a network partition
+// ---------------------------------------------------------------------------
+
+#[test]
+fn draining_completes_under_partition_and_probes_never_override_it() {
+    let n_clients = 8;
+    let moved = sessions_on_shard1(n_clients, 2);
+    assert!(!moved.is_empty(), "hash placed nothing on shard 1; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: n_clients,
+            decisions: 8,
+            think: 0.005,
+            req_timeout: 0.04,
+            probe_interval: Some(0.02),
+            faults: vec![
+                (0.01, FaultCmd::DrainShard(1)),
+                (0.01, FaultCmd::PartitionShard(1)),
+                (0.08, FaultCmd::HealShard(1)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("drain_partition", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), n_clients * 8, "seed {seed}");
+        // operator intent survived failing probes for the whole partition
+        assert_eq!(r.shard_states[1], ShardState::Draining, "seed {seed}");
+        // every session pinned there moved off, so the drain completed
+        assert_eq!(r.gateway.reassigned as usize, moved.len(), "seed {seed}");
+        assert!(r.drained[1], "seed {seed}: drain never completed");
+        assert!(r.log.contains(" partition "), "seed {seed}");
+        assert!(r.log.contains(" heal "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 4: thermal throttle + recovery under sustained load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thermal_throttle_engages_and_recovers_under_sustained_load() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            gateway: false,
+            shards: 1,
+            raw_clients: 6,
+            decisions: 30,
+            exec_fixed: 0.002,
+            exec_per_item: 0.004,
+            req_timeout: 3.0,
+            thermal: Some(ThermalSpec {
+                // fast RC so the cycle fits the run: 25C ambient, 10C/W,
+                // tau 50 ms, trip 70C, resume 60C
+                model: ThermalModel::new(25.0, 10.0, 0.05, 70.0, 60.0),
+                active_watts: 8.0,
+                idle_watts: 0.0,
+                throttle_factor: 3.0,
+            }),
+            faults: vec![
+                (5.0, FaultCmd::SampleThermal(0)),
+                (5.1, FaultCmd::SampleThermal(0)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("thermal", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), 180, "seed {seed}");
+        let s = &r.shards[0];
+        assert!(s.throttled_batches >= 1, "seed {seed}: never throttled");
+        assert!(
+            s.throttled_batches < s.batches,
+            "seed {seed}: every batch throttled — no unthrottled baseline"
+        );
+        assert!(s.max_temp > 70.0, "seed {seed}: die never crossed the trip point");
+        // after the load stops, the idle samples show full recovery
+        assert!(!s.final_throttled, "seed {seed}: never recovered");
+        assert!(r.log.contains(" thermal "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 5: break-even latency under 1/5/20 Mb/s shaped links,
+// cross-checked against the paper's analytic model (analysis::breakeven)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shaped_link_breakeven_matches_the_analytic_model() {
+    let (x, n, k, j) = (84usize, 3u32, 4usize, 0.05f64);
+    for seed in SEEDS {
+        for mbps in [1.0, 5.0, 20.0] {
+            let bps = mbps * 1e6;
+            let run = |raw: bool| {
+                let cfg = ScenarioConfig {
+                    seed,
+                    gateway: false,
+                    shards: 1,
+                    raw_clients: usize::from(raw),
+                    split_clients: usize::from(!raw),
+                    decisions: 6,
+                    obs_x: x,
+                    feat: (k, 11, 11),
+                    encode_j: j,
+                    req_timeout: 5.0,
+                    policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                    exec_fixed: 0.003,
+                    exec_per_item: 0.001,
+                    client_link: LinkFaults::shaped(bps, 0.002),
+                    reply_link: LinkFaults { latency: 0.002, ..LinkFaults::ideal() },
+                    ..ScenarioConfig::default()
+                };
+                let mode = if raw { "raw" } else { "split" };
+                let mut r = run_and_emit(&format!("breakeven_{mode}_{mbps}mbps"), &cfg);
+                assert_eq!(r.completed_decisions(), 6, "seed {seed} {mode} {mbps}Mb/s");
+                r.clients[0].latencies.median()
+            };
+            let raw_med = run(true);
+            let split_med = run(false);
+            // winner must match the paper's break-even inequality
+            let split_should_win = split_wins(bps, x, n, k, j);
+            assert_eq!(
+                split_med < raw_med,
+                split_should_win,
+                "seed {seed} at {mbps} Mb/s: split {split_med:.4}s vs raw {raw_med:.4}s \
+                 (model says split_wins={split_should_win})"
+            );
+            // and the raw latency itself tracks the serialisation model:
+            // body 15+4X² plus the 4-byte prefix over a B-bps link
+            let link = LinkModel::new(bps, 0.002);
+            let lower = link.transfer_time(4 * x * x + 19);
+            assert!(
+                raw_med > lower && raw_med < lower + 0.05,
+                "seed {seed} at {mbps} Mb/s: raw {raw_med:.4}s vs analytic floor {lower:.4}s"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 6: duplicated frames — id-level de-duplication holds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn duplicated_frames_are_absorbed_by_id_deduplication() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 1,
+            raw_clients: 4,
+            decisions: 8,
+            client_link: LinkFaults { dup_p: 0.5, ..LinkFaults::ideal() },
+            reply_link: LinkFaults { dup_p: 0.5, ..LinkFaults::ideal() },
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("duplicate", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        // exactly 32 decisions recorded even though the wire carried far
+        // more frames than that
+        assert_eq!(r.completed_decisions(), 32, "seed {seed}");
+        let dups: u64 = r.clients.iter().map(|c| c.dup_responses).sum();
+        assert!(dups >= 1, "seed {seed}: duplication never observed");
+        assert!(
+            r.shards[0].requests > 32,
+            "seed {seed}: no duplicated request reached the shard"
+        );
+        // per-client latency count equals accepted decisions: no double
+        // counting from the duplicates
+        for (i, c) in r.clients.iter().enumerate() {
+            assert_eq!(c.latencies.len(), c.decisions, "seed {seed} client {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 7: dropped frames — timeout + reconnect + retransmit recovers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropped_frames_recover_via_timeout_and_retransmit() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 1,
+            raw_clients: 4,
+            decisions: 6,
+            req_timeout: 0.03,
+            client_link: LinkFaults { drop_p: 0.3, ..LinkFaults::ideal() },
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("drop", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), 24, "seed {seed}");
+        let retries: u64 = r.clients.iter().map(|c| c.retries).sum();
+        assert!(retries >= 1, "seed {seed}: a 30% drop rate never forced a retry");
+        // responses were never dropped, so retransmits cannot double-count
+        assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0);
+        // drops may eat hellos (epochs with zero acks) but never duplicate
+        assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
+        assert!(r.log.contains(" drop "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 8: mid-frame disconnect — torn frames surface as clean errors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_frame_disconnect_is_a_clean_error_and_sessions_reroute() {
+    let n_clients = 8;
+    let moved = sessions_on_shard1(n_clients, 2);
+    assert!(!moved.is_empty(), "hash placed nothing on shard 1; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: n_clients,
+            decisions: 6,
+            think: 0.008,
+            req_timeout: 0.05,
+            probe_interval: Some(0.02),
+            faults: vec![
+                (0.008, FaultCmd::CutShardUplinkMidFrame(1)),
+                (0.1, FaultCmd::RestartShard(1)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("midframe_cut", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), n_clients * 6, "seed {seed}");
+        // the torn frame was rejected at the framing layer, not half-parsed
+        assert!(
+            r.shards[1].frame_errors >= 1,
+            "seed {seed}: the cut never tore a frame"
+        );
+        assert!(r.log.contains(" cut_mid_frame "), "seed {seed}");
+        // victims re-routed and the shard came back
+        assert!(r.gateway.reassigned >= 1, "seed {seed}");
+        assert_eq!(r.shard_states[1], ShardState::Up, "seed {seed}");
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 9: jitter + reorder everywhere — liveness with zero retries
+// ---------------------------------------------------------------------------
+
+#[test]
+fn jittered_reordering_links_stay_exactly_once_without_retries() {
+    for seed in SEEDS {
+        let jittery = LinkFaults {
+            jitter: 0.003,
+            reorder_p: 0.2,
+            reorder_delay: 0.005,
+            ..LinkFaults::ideal()
+        };
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 4,
+            split_clients: 2,
+            decisions: 8,
+            client_link: jittery,
+            reply_link: jittery,
+            shard_link: jittery,
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("jitter", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), 48, "seed {seed}");
+        // nothing was lost, so jitter alone must not trigger the recovery
+        // machinery: no retries, no reconnects, no duplicates
+        assert_eq!(r.clients.iter().map(|c| c.retries).sum::<u64>(), 0, "seed {seed}");
+        assert_eq!(r.clients.iter().map(|c| c.reconnects).sum::<u64>(), 0, "seed {seed}");
+        assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0);
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+    }
+}
