@@ -1,0 +1,206 @@
+//! Adaptive-codec wire benchmark: the delta + entropy-packed feature
+//! format vs the flat u8 format on a real pendulum raster stream, across
+//! the quantisation ladder.
+//!
+//! Per quantisation level it measures mean bytes/frame (flat vs delta),
+//! the compression ratio, encode/decode ns/frame, and asserts bit-exact
+//! reconstruction of every frame. A steady-state allocation count over
+//! pooled encode/decode buffers guards the zero-allocation discipline
+//! (shared counting allocator: `util::alloc_counter`).
+//!
+//! Results land in `BENCH_codec.json` (override with `--out` or the
+//! `BENCH_CODEC_OUT` env var). Gates, also embedded in the JSON:
+//!   * compression ratio ≥ 2.0 at qmax 255 on the pendulum stream (the
+//!     simnet acceptance scenario's wire-level counterpart);
+//!   * 0 steady-state heap allocations per encoded+decoded frame;
+//!   * every frame reconstructs bit-exactly at every level.
+//!
+//! `--iters N` caps the stream length — CI runs a cheap smoke pass with a
+//! tiny N; gate verdicts are only meaningful at the default.
+
+use std::time::Instant;
+
+use miniconv::codec::{self, Decoder, Encoder};
+use miniconv::envs::pendulum_raster_stream;
+use miniconv::util::alloc_counter::CountingAlloc;
+use miniconv::util::argparse::Parser;
+use miniconv::util::tables::Table;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Raster side length of the transmitted frame (3 RGB planes).
+const SIDE: usize = 48;
+const QMAX_LADDER: [u8; 4] = [255, 127, 63, 31];
+
+struct Cell {
+    qmax: u8,
+    flat_bytes_per_frame: f64,
+    delta_bytes_per_frame: f64,
+    ratio: f64,
+    encode_ns_per_frame: f64,
+    decode_ns_per_frame: f64,
+    keyframes: u64,
+    exact: bool,
+}
+
+fn run_cell(stream: &[Vec<f32>], qmax: u8) -> Cell {
+    let n = stream[0].len();
+    let mut enc = Encoder::new();
+    let mut dec = Decoder::new();
+    let mut qbuf = Vec::new();
+    let mut wire = Vec::new();
+    let mut delta_bytes = 0usize;
+    let mut exact = true;
+    let mut enc_ns = 0.0f64;
+    let mut dec_ns = 0.0f64;
+    for f in stream {
+        let t0 = Instant::now();
+        codec::quantize_into(f, qmax, &mut qbuf);
+        let (flags, seq) = enc.encode_into(&qbuf, &mut wire);
+        enc_ns += t0.elapsed().as_nanos() as f64;
+        delta_bytes += wire.len();
+        let t1 = Instant::now();
+        dec.apply(flags, qmax, seq, n, &wire).expect("decode");
+        dec_ns += t1.elapsed().as_nanos() as f64;
+        exact &= dec.frame() == qbuf.as_slice();
+    }
+    let frames = stream.len() as f64;
+    Cell {
+        qmax,
+        flat_bytes_per_frame: n as f64,
+        delta_bytes_per_frame: delta_bytes as f64 / frames,
+        ratio: n as f64 * frames / delta_bytes as f64,
+        encode_ns_per_frame: enc_ns / frames,
+        decode_ns_per_frame: dec_ns / frames,
+        keyframes: enc.keyframes,
+        exact,
+    }
+}
+
+/// Steady-state allocations per encode+decode round over pooled buffers:
+/// one full pass warms every buffer to its high-water capacity, then the
+/// measured pass must not touch the heap.
+fn steady_state_allocs_per_frame(stream: &[Vec<f32>]) -> u64 {
+    let n = stream[0].len();
+    let mut enc = Encoder::new();
+    let mut dec = Decoder::new();
+    let mut qbuf = Vec::new();
+    let mut wire = Vec::new();
+    let mut pump = |enc: &mut Encoder, dec: &mut Decoder, qbuf: &mut Vec<u8>, wire: &mut Vec<u8>| {
+        for f in stream {
+            codec::quantize_into(f, 255, qbuf);
+            let (flags, seq) = enc.encode_into(qbuf, wire);
+            dec.apply(flags, 255, seq, n, wire).expect("decode");
+        }
+    };
+    // two warm passes: the second includes the wrap-around delta (last
+    // frame -> first frame), so every pooled buffer reaches the high-water
+    // capacity the measured pass will need
+    pump(&mut enc, &mut dec, &mut qbuf, &mut wire);
+    pump(&mut enc, &mut dec, &mut qbuf, &mut wire);
+    let before = CountingAlloc::count();
+    pump(&mut enc, &mut dec, &mut qbuf, &mut wire);
+    let allocs = CountingAlloc::count() - before;
+    std::hint::black_box(dec.frame().len());
+    allocs.div_ceil(stream.len() as u64)
+}
+
+fn main() {
+    let args = Parser::new("codec wire format — delta + entropy packing vs flat u8")
+        .opt("iters", "200", "pendulum stream length (frames)")
+        .opt("seed", "7", "pendulum stream seed")
+        .opt("out", "", "output path (default BENCH_CODEC_OUT or BENCH_codec.json)")
+        .parse();
+    let iters: usize = args.usize("iters").max(2);
+    let out_path = {
+        let o = args.str("out");
+        if o.is_empty() {
+            std::env::var("BENCH_CODEC_OUT").unwrap_or_else(|_| "BENCH_codec.json".into())
+        } else {
+            o
+        }
+    };
+
+    let stream = pendulum_raster_stream(args.u64("seed"), SIDE, iters);
+    let cells: Vec<Cell> = QMAX_LADDER.iter().map(|&q| run_cell(&stream, q)).collect();
+    let allocs = steady_state_allocs_per_frame(&stream);
+
+    let mut t = Table::new(
+        &format!("codec wire — pendulum raster stream, 3x{SIDE}x{SIDE}, {iters} frames"),
+        &[
+            "qmax",
+            "flat B/frame",
+            "delta B/frame",
+            "ratio",
+            "enc ns",
+            "dec ns",
+            "keyframes",
+            "exact",
+        ],
+    );
+    for c in &cells {
+        t.row(&[
+            c.qmax.to_string(),
+            format!("{:.0}", c.flat_bytes_per_frame),
+            format!("{:.1}", c.delta_bytes_per_frame),
+            format!("{:.2}x", c.ratio),
+            format!("{:.0}", c.encode_ns_per_frame),
+            format!("{:.0}", c.decode_ns_per_frame),
+            c.keyframes.to_string(),
+            c.exact.to_string(),
+        ]);
+    }
+    t.print();
+
+    let ratio_255 = cells[0].ratio;
+    let all_exact = cells.iter().all(|c| c.exact);
+    println!("steady-state allocations per encoded+decoded frame: {allocs}");
+    println!(
+        "gates: ratio@255 >= 2.0 -> {}, allocs == 0 -> {}, bit-exact -> {}",
+        if ratio_255 >= 2.0 { "PASS" } else { "FAIL" },
+        if allocs == 0 { "PASS" } else { "FAIL" },
+        if all_exact { "PASS" } else { "FAIL" },
+    );
+
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"codec_wire\",\n");
+    s.push_str(&format!("  \"iters\": {iters},\n"));
+    s.push_str(&format!("  \"stream\": \"pendulum_raster_3x{SIDE}x{SIDE}\",\n"));
+    s.push_str(&format!("  \"seed\": {},\n", args.u64("seed")));
+    s.push_str(&format!("  \"compression_ratio_at_qmax_255\": {:.3},\n", ratio_255));
+    s.push_str(&format!("  \"steady_state_allocs_per_frame\": {allocs},\n"));
+    s.push_str(&format!("  \"bit_exact_all_levels\": {all_exact},\n"));
+    s.push_str("  \"gates\": {\n");
+    s.push_str("    \"min_compression_ratio_at_qmax_255\": 2.0,\n");
+    s.push_str("    \"max_steady_state_allocs_per_frame\": 0,\n");
+    s.push_str(&format!("    \"ratio_pass\": {},\n", ratio_255 >= 2.0));
+    s.push_str(&format!("    \"alloc_pass\": {},\n", allocs == 0));
+    s.push_str(&format!("    \"exact_pass\": {all_exact}\n"));
+    s.push_str("  },\n");
+    s.push_str("  \"results\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"qmax\": {}, \"flat_bytes_per_frame\": {:.1}, \
+             \"delta_bytes_per_frame\": {:.1}, \"compression_ratio\": {:.3}, \
+             \"encode_ns_per_frame\": {:.0}, \"decode_ns_per_frame\": {:.0}, \
+             \"keyframes\": {}, \"bit_exact\": {}}}{}\n",
+            c.qmax,
+            c.flat_bytes_per_frame,
+            c.delta_bytes_per_frame,
+            c.ratio,
+            c.encode_ns_per_frame,
+            c.decode_ns_per_frame,
+            c.keyframes,
+            c.exact,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(&out_path, &s) {
+        eprintln!("could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+}

@@ -3,22 +3,30 @@
 //! connection-draining exercise.
 //!
 //! With AOT artifacts present the shards run the real PJRT backend and the
-//! fleet serves both pipelines; without them the Sim backend stands in so
-//! the whole fleet path (gateway, hashing, draining, merged metrics) still
-//! runs end to end.
+//! fleet serves both pipelines — pass `--codec delta` to run the split
+//! fleet on the adaptive delta wire format (DESIGN.md §7) instead of the
+//! flat u8 one. Without artifacts the Sim backend stands in so the whole
+//! fleet path (gateway, hashing, draining, merged metrics) still runs end
+//! to end over raw frames.
 //!
-//! Run: `cargo run --release --example serve_sharded`
+//! Run: `cargo run --release --example serve_sharded -- [--codec flat|delta]`
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use miniconv::codec::CodecId;
 use miniconv::coordinator::{
     run_fleet, Backend, BatchPolicy, ClientConfig, Route, ServerConfig, SimSpec,
 };
 use miniconv::fleet::{launch_local, FleetConfig, ShardId};
+use miniconv::util::argparse::Parser;
 
 fn main() -> Result<()> {
+    let args = Parser::new("sharded serving demo")
+        .opt("codec", "flat", "split-route feature codec: flat | delta")
+        .parse();
+    let codec = CodecId::parse(&args.str("codec"))?;
     let have_artifacts = miniconv::runtime::default_artifact_dir()
         .join("manifest.json")
         .exists();
@@ -47,10 +55,16 @@ fn main() -> Result<()> {
     })?;
     println!("gateway on {} fronting {} shards", fleet.addr(), fleet.n_shards());
 
+    // with artifacts the fleet serves the split route, so the negotiated
+    // codec actually carries the feature frames; the Sim fallback serves
+    // raw frames (the codec negotiation is a split-route concern)
+    let mode = if have_artifacts { Route::Split } else { Route::Full };
+    println!("clients: {} route, {} codec", mode.name(), codec.name());
     let cfg = ClientConfig {
-        mode: Route::Full,
+        mode,
         decisions: 30,
         obs_x: if have_artifacts { None } else { Some(24) },
+        codec,
         ..ClientConfig::default()
     };
     let n_clients = 16;
@@ -62,6 +76,13 @@ fn main() -> Result<()> {
         "\n{n_clients} clients × {} decisions in {elapsed:.2}s ({:.0} dec/s aggregate)",
         cfg.decisions,
         decisions as f64 / elapsed
+    );
+    let bytes: u64 = reports.iter().map(|r| r.bytes_sent).sum();
+    println!(
+        "wire: {bytes} B sent ({:.0} B/frame); codec: {} keyframes, {} deltas",
+        bytes as f64 / decisions.max(1) as f64,
+        reports.iter().map(|r| r.keyframes).sum::<u64>(),
+        reports.iter().map(|r| r.deltas).sum::<u64>(),
     );
 
     fleet.snapshot().table(elapsed).print();

@@ -19,9 +19,38 @@ pub fn breakeven_bandwidth_bps(x: usize, n: u32, k: usize, j: f64) -> f64 {
     32.0 * x2 * (1.0 - k as f64 / (4.0 * 4f64.powi(n as i32))) / j
 }
 
+/// Break-even bandwidth for **measured** per-frame payloads: split wins
+/// while the per-frame transmission saving `8·(raw_bytes − feat_bytes)/B`
+/// exceeds the on-device encode time `j`. This is the general form the
+/// closed-form model above specialises (raw = 4X², feat = K(X/2ⁿ)²) —
+/// feed it the achieved bytes/frame of an adaptive codec instead of the
+/// flat u8 assumption.
+pub fn breakeven_bandwidth_bps_bytes(raw_bytes: f64, feat_bytes: f64, j: f64) -> f64 {
+    assert!(j > 0.0, "on-device time must be positive");
+    8.0 * (raw_bytes - feat_bytes) / j
+}
+
+/// Compression-ratio-aware break-even: the flat feature payload shrinks
+/// by `ratio` (achieved flat-bytes / wire-bytes; 1.0 reproduces the
+/// paper's uncompressed model, the regression test pins the equivalence).
+/// A codec that halves the payload (`ratio = 2.0`) raises the break-even
+/// bandwidth — split stays the right choice on faster links.
+pub fn breakeven_bandwidth_bps_compressed(x: usize, n: u32, k: usize, j: f64, ratio: f64) -> f64 {
+    assert!(ratio > 0.0, "compression ratio must be positive");
+    let x2 = (x * x) as f64;
+    let raw_bytes = 4.0 * x2;
+    let feat_bytes = k as f64 * x2 / 4f64.powi(n as i32) / ratio;
+    breakeven_bandwidth_bps_bytes(raw_bytes, feat_bytes, j)
+}
+
 /// Does split-policy yield lower decision latency at bandwidth `b_bps`?
 pub fn split_wins(b_bps: f64, x: usize, n: u32, k: usize, j: f64) -> bool {
     b_bps < breakeven_bandwidth_bps(x, n, k, j)
+}
+
+/// [`split_wins`] over measured per-frame payload sizes.
+pub fn split_wins_bytes(b_bps: f64, raw_bytes: f64, feat_bytes: f64, j: f64) -> bool {
+    b_bps < breakeven_bandwidth_bps_bytes(raw_bytes, feat_bytes, j)
 }
 
 /// Raw-observation bits per frame (uncompressed RGBA, the paper's model).
@@ -84,5 +113,51 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_j_rejected() {
         breakeven_bandwidth_bps(400, 3, 4, 0.0);
+    }
+
+    /// Regression pin: the bytes-parameterised model at ratio 1.0 IS the
+    /// paper's closed form, across the whole (X, n, K, j) grid the repo
+    /// uses.
+    #[test]
+    fn ratio_one_reproduces_the_closed_form() {
+        for x in [84usize, 400] {
+            for n in [2u32, 3] {
+                for k in [4usize, 16] {
+                    for j in [0.01f64, 0.1, 0.2] {
+                        let old = breakeven_bandwidth_bps(x, n, k, j);
+                        let new = breakeven_bandwidth_bps_compressed(x, n, k, j, 1.0);
+                        assert!(
+                            (old - new).abs() <= old.abs() * 1e-12,
+                            "X={x} n={n} K={k} j={j}: {old} vs {new}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compression_raises_the_breakeven() {
+        let flat = breakeven_bandwidth_bps_compressed(400, 3, 4, 0.1, 1.0);
+        let halved = breakeven_bandwidth_bps_compressed(400, 3, 4, 0.1, 2.0);
+        assert!(halved > flat, "{halved} <= {flat}");
+        // at infinite compression the feature payload vanishes: the bound
+        // is pure raw transmission vs on-device time
+        let limit = breakeven_bandwidth_bps_bytes(4.0 * 400.0 * 400.0, 0.0, 0.1);
+        assert!(halved < limit);
+        let nearly_free = breakeven_bandwidth_bps_compressed(400, 3, 4, 0.1, 1e9);
+        assert!((nearly_free - limit).abs() < limit * 1e-6);
+    }
+
+    #[test]
+    fn bytes_model_matches_measured_payloads() {
+        // achieved 2.3x compression on a 4×50×50 feature frame, X=400
+        let raw = 4.0 * 400.0 * 400.0;
+        let feat_flat = 4.0 * 50.0 * 50.0;
+        let feat = feat_flat / 2.3;
+        let b = breakeven_bandwidth_bps_bytes(raw, feat, 0.1);
+        assert!(b > breakeven_bandwidth_bps(400, 3, 4, 0.1));
+        assert!(split_wins_bytes(b - 1.0, raw, feat, 0.1));
+        assert!(!split_wins_bytes(b + 1.0, raw, feat, 0.1));
     }
 }

@@ -4,5 +4,8 @@
 pub mod breakeven;
 pub mod latency;
 
-pub use breakeven::{breakeven_bandwidth_bps, split_wins};
+pub use breakeven::{
+    breakeven_bandwidth_bps, breakeven_bandwidth_bps_bytes, breakeven_bandwidth_bps_compressed,
+    split_wins, split_wins_bytes,
+};
 pub use latency::{DecisionBreakdown, PipelineKind};

@@ -1,0 +1,350 @@
+//! Temporal delta coding of quantised feature frames.
+//!
+//! The encoder keeps the previous frame it put on the wire and emits one
+//! of three frame kinds (wire `flags`, see DESIGN.md §7):
+//!
+//! * **packed keyframe** (`FLAG_KEYFRAME`) — residuals against the
+//!   all-zeros frame (post-ReLU features are sparse, so this usually
+//!   beats the flat bytes);
+//! * **raw keyframe** (`FLAG_KEYFRAME | FLAG_RAW`) — the quantised bytes
+//!   verbatim, chosen whenever packing would not help (dense frames);
+//! * **delta** (no flags) — residuals against the previous frame.
+//!
+//! The encoder always picks the smaller representation, so the wire
+//! payload never exceeds the flat `n`-byte frame. Keyframes are
+//! self-contained: the decoder accepts one at any sequence number and
+//! resets its chain state. Deltas require the decoder to hold the exact
+//! previous frame (`seq` must advance by one); anything else — a restart,
+//! a reconnect, a lost frame, a corrupt payload — is a rejection, after
+//! which the decoder stays poisoned until the next keyframe. Chain-state
+//! recovery is the rate controller's job ([`super::rate`]): it forces a
+//! keyframe on every loss signal.
+
+use anyhow::{ensure, Result};
+
+use super::pack::{pack_residuals_into, unpack_residuals_into};
+
+/// Wire flag: this frame is self-contained (no reference required).
+pub const FLAG_KEYFRAME: u8 = 1;
+/// Wire flag: the payload is the quantised frame verbatim, not packed.
+pub const FLAG_RAW: u8 = 2;
+
+/// Delta encoder for one feature stream (one client session).
+#[derive(Debug, Default)]
+pub struct Encoder {
+    /// the quantised frame most recently put on the wire
+    prev: Vec<u8>,
+    /// all-zeros reference for packed keyframes (kept sized to the frame)
+    zeros: Vec<u8>,
+    /// packed-keyframe scratch for the packed-vs-raw size choice
+    packed: Vec<u8>,
+    seq: u32,
+    /// false until a keyframe has been emitted (and after `force_keyframe`)
+    primed: bool,
+    /// keyframes emitted (raw + packed)
+    pub keyframes: u64,
+    /// delta frames emitted
+    pub deltas: u64,
+}
+
+impl Encoder {
+    pub fn new() -> Encoder {
+        Encoder::default()
+    }
+
+    /// The next frame will be a keyframe (reconnect, server rejection, or
+    /// the rate controller's periodic refresh).
+    pub fn force_keyframe(&mut self) {
+        self.primed = false;
+    }
+
+    /// Encode the quantised frame `cur` into `out` (cleared first; its
+    /// capacity is pooled across frames — zero steady-state allocations
+    /// once the stream's buffers are warm). Returns the wire
+    /// `(flags, seq)` for the frame header. The payload is never longer
+    /// than `cur` itself.
+    pub fn encode_into(&mut self, cur: &[u8], out: &mut Vec<u8>) -> (u8, u32) {
+        out.clear();
+        let n = cur.len();
+        let seq = self.seq.wrapping_add(1);
+        let key = !self.primed || self.prev.len() != n;
+        let flags = if key {
+            if self.zeros.len() != n {
+                self.zeros.clear();
+                self.zeros.resize(n, 0);
+            }
+            self.packed.clear();
+            pack_residuals_into(cur, &self.zeros, &mut self.packed);
+            if self.packed.len() < n {
+                out.extend_from_slice(&self.packed);
+                FLAG_KEYFRAME
+            } else {
+                out.extend_from_slice(cur);
+                FLAG_KEYFRAME | FLAG_RAW
+            }
+        } else {
+            pack_residuals_into(cur, &self.prev, out);
+            if out.len() < n {
+                0
+            } else {
+                // the delta grew past the flat frame: a raw keyframe is no
+                // larger and restarts the chain for free
+                out.clear();
+                out.extend_from_slice(cur);
+                FLAG_KEYFRAME | FLAG_RAW
+            }
+        };
+        if flags & FLAG_KEYFRAME != 0 {
+            self.keyframes += 1;
+        } else {
+            self.deltas += 1;
+        }
+        self.prev.clear();
+        self.prev.extend_from_slice(cur);
+        self.primed = true;
+        self.seq = seq;
+        (flags, seq)
+    }
+}
+
+/// Delta decoder for one feature stream. Holds the reconstructed previous
+/// frame; [`Decoder::apply`] advances it by one wire frame.
+#[derive(Debug, Default)]
+pub struct Decoder {
+    prev: Vec<u8>,
+    seq: u32,
+    /// false until a keyframe has been applied (and after any error)
+    primed: bool,
+    /// frames accepted
+    pub accepted: u64,
+    /// frames rejected (chain break, geometry change, corrupt payload)
+    pub rejected: u64,
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder::default()
+    }
+
+    /// Drop the cached reference frame: the stream's next frame must be a
+    /// keyframe. Called on every session (re)connect so a new incarnation
+    /// can never delta against a stale base.
+    pub fn reset(&mut self) {
+        self.primed = false;
+    }
+
+    /// True once a frame has been applied since the last reset/error.
+    pub fn primed(&self) -> bool {
+        self.primed
+    }
+
+    /// The most recently reconstructed quantised frame.
+    pub fn frame(&self) -> &[u8] {
+        &self.prev
+    }
+
+    /// Apply one wire frame of `n = c·h·w` values. On success
+    /// [`Decoder::frame`] holds the reconstructed quantised frame
+    /// (bit-identical to what the encoder consumed). Any error poisons the
+    /// chain state — a later delta cannot silently decode against a
+    /// half-applied base — until a keyframe re-primes it.
+    pub fn apply(&mut self, flags: u8, qmax: u8, seq: u32, n: usize, data: &[u8]) -> Result<()> {
+        let r = self.apply_inner(flags, qmax, seq, n, data);
+        match r {
+            Ok(()) => self.accepted += 1,
+            Err(_) => {
+                self.primed = false;
+                self.rejected += 1;
+            }
+        }
+        r
+    }
+
+    fn apply_inner(&mut self, flags: u8, qmax: u8, seq: u32, n: usize, data: &[u8]) -> Result<()> {
+        if flags & FLAG_KEYFRAME != 0 {
+            if flags & FLAG_RAW != 0 {
+                ensure!(data.len() == n, "raw keyframe is {} bytes, frame is {n}", data.len());
+                ensure!(
+                    data.iter().all(|&b| b <= qmax),
+                    "raw keyframe value above qmax {qmax}"
+                );
+                self.prev.clear();
+                self.prev.extend_from_slice(data);
+            } else {
+                self.prev.clear();
+                self.prev.resize(n, 0);
+                unpack_residuals_into(data, &mut self.prev, qmax)?;
+            }
+        } else {
+            ensure!(self.primed, "delta frame without a decoded base");
+            ensure!(
+                self.prev.len() == n,
+                "delta geometry changed ({} != {n})",
+                self.prev.len()
+            );
+            ensure!(
+                seq == self.seq.wrapping_add(1),
+                "delta chain break (got seq {seq}, base is {})",
+                self.seq
+            );
+            unpack_residuals_into(data, &mut self.prev, qmax)?;
+        }
+        self.seq = seq;
+        self.primed = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a frame sequence through encoder + decoder, asserting
+    /// bit-exact reconstruction after every frame. Returns total payload
+    /// bytes.
+    fn pump(frames: &[Vec<u8>]) -> usize {
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut wire = Vec::new();
+        let mut total = 0;
+        for f in frames {
+            let (flags, seq) = enc.encode_into(f, &mut wire);
+            assert!(wire.len() <= f.len(), "payload exceeded the flat frame");
+            dec.apply(flags, 255, seq, f.len(), &wire).expect("apply");
+            assert_eq!(dec.frame(), &f[..], "reconstruction diverged");
+            total += wire.len();
+        }
+        total
+    }
+
+    #[test]
+    fn first_frame_is_a_keyframe_then_deltas_flow() {
+        let mut enc = Encoder::new();
+        let mut wire = Vec::new();
+        let (flags, seq) = enc.encode_into(&[1, 2, 3], &mut wire);
+        assert_ne!(flags & FLAG_KEYFRAME, 0);
+        assert_eq!(seq, 1);
+        let (flags, seq) = enc.encode_into(&[1, 2, 4], &mut wire);
+        assert_eq!(flags, 0, "second frame should be a delta");
+        assert_eq!(seq, 2);
+        assert_eq!(enc.keyframes, 1);
+        assert_eq!(enc.deltas, 1);
+    }
+
+    #[test]
+    fn constant_stream_collapses() {
+        let frames: Vec<Vec<u8>> = (0..10).map(|_| vec![40u8; 256]).collect();
+        let total = pump(&frames);
+        // keyframe ≤ 256, then 9 mask-only deltas of 2 bytes each
+        // (256 values = 16 blocks = 2 mask bytes)
+        assert!(total <= 256 + 9 * 2, "constant stream cost {total} bytes");
+    }
+
+    #[test]
+    fn slowly_varying_stream_beats_flat() {
+        let n = 256;
+        let frames: Vec<Vec<u8>> = (0..12)
+            .map(|t| {
+                (0..n)
+                    .map(|i| if i / 8 == t { 100 + t as u8 } else { 3 })
+                    .collect()
+            })
+            .collect();
+        let total = pump(&frames);
+        assert!(total < 12 * n / 2, "slowly varying stream cost {total} of {}", 12 * n);
+    }
+
+    #[test]
+    fn dense_random_frames_fall_back_to_raw_keyframes() {
+        // frames with no temporal structure: every payload must still be
+        // bounded by the flat size
+        let mut rng = crate::util::rng::Rng::new(9);
+        let frames: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..300).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let total = pump(&frames);
+        assert!(total <= 6 * 300);
+    }
+
+    #[test]
+    fn forced_keyframe_restarts_the_chain() {
+        let mut enc = Encoder::new();
+        let mut wire = Vec::new();
+        enc.encode_into(&[9; 64], &mut wire);
+        enc.force_keyframe();
+        let (flags, _) = enc.encode_into(&[9; 64], &mut wire);
+        assert_ne!(flags & FLAG_KEYFRAME, 0);
+    }
+
+    #[test]
+    fn decoder_rejects_delta_after_reset_until_a_keyframe() {
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut wire = Vec::new();
+        let f0 = vec![5u8; 64];
+        let (flags, seq) = enc.encode_into(&f0, &mut wire);
+        dec.apply(flags, 255, seq, 64, &wire).unwrap();
+        dec.reset();
+        let mut f1 = f0.clone();
+        f1[0] = 6;
+        let (flags, seq) = enc.encode_into(&f1, &mut wire);
+        assert_eq!(flags, 0);
+        assert!(dec.apply(flags, 255, seq, 64, &wire).is_err());
+        assert_eq!(dec.rejected, 1);
+        // keyframe recovers
+        enc.force_keyframe();
+        let mut f2 = f1.clone();
+        f2[1] = 7;
+        let (flags, seq) = enc.encode_into(&f2, &mut wire);
+        dec.apply(flags, 255, seq, 64, &wire).unwrap();
+        assert_eq!(dec.frame(), &f2[..]);
+    }
+
+    #[test]
+    fn skipped_frame_breaks_the_chain() {
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut wire = Vec::new();
+        let f1 = vec![1u8; 64];
+        let (flags, seq) = enc.encode_into(&f1, &mut wire);
+        dec.apply(flags, 255, seq, 64, &wire).unwrap();
+        // frame 2 is lost in transit
+        let mut f2 = f1.clone();
+        f2[0] = 2;
+        let mut lost = Vec::new();
+        enc.encode_into(&f2, &mut lost);
+        // frame 3 arrives: a genuine delta whose seq jumped by two
+        let mut f3 = f2.clone();
+        f3[1] = 3;
+        let (flags, seq) = enc.encode_into(&f3, &mut wire);
+        assert_eq!(flags, 0, "sparse change must encode as a delta");
+        assert!(dec.apply(flags, 255, seq, 64, &wire).is_err());
+        assert!(!dec.primed());
+    }
+
+    #[test]
+    fn corrupt_payload_poisons_the_chain() {
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut wire = Vec::new();
+        let (flags, seq) = enc.encode_into(&[10; 64], &mut wire);
+        dec.apply(flags, 255, seq, 64, &wire).unwrap();
+        let mut f1 = vec![10u8; 64];
+        f1[5] = 12;
+        let (flags, seq) = enc.encode_into(&f1, &mut wire);
+        assert_eq!(flags, 0);
+        let cut = &wire[..wire.len() - 1];
+        assert!(dec.apply(flags, 255, seq, 64, cut).is_err());
+        // the chain is poisoned: even the true payload is now refused
+        assert!(dec.apply(flags, 255, seq, 64, &wire).is_err());
+    }
+
+    #[test]
+    fn geometry_change_forces_a_keyframe() {
+        let mut enc = Encoder::new();
+        let mut wire = Vec::new();
+        enc.encode_into(&[1; 64], &mut wire);
+        let (flags, _) = enc.encode_into(&[1; 32], &mut wire);
+        assert_ne!(flags & FLAG_KEYFRAME, 0, "length change must re-key");
+    }
+}

@@ -1,0 +1,296 @@
+//! Adaptive feature-frame codec (DESIGN.md §7): temporal [`delta`] coding
+//! against the previous frame, [`pack`]ed with per-block significance
+//! masks + zigzag/varint entropy coding, under a closed-loop [`rate`]
+//! controller that picks the quantisation level and keyframe cadence from
+//! the observed link.
+//!
+//! The codec is negotiated per session in the `Hello` handshake
+//! (`net::framing`): a split client requests a codec id, the server ack
+//! echoes the one it accepts, and every feature frame then travels as a
+//! versioned `Msg::Request` with `Payload::FeaturesV2` carrying
+//! `(codec, flags, qmax, seq)` alongside the quantised payload. Raw-route
+//! clients and flat-codec clients are untouched — they keep the v1 wire
+//! format byte for byte.
+//!
+//! Correctness contract: the codec is **lossless over the quantised
+//! domain**. Quantising at ceiling `qmax` and shipping the frame through
+//! encoder → wire → decoder reconstructs the exact quantised bytes at
+//! every quantisation level, and at `qmax = 255` both the quantise and
+//! dequantise steps are bit-identical to the flat v1 path
+//! (`net::framing::{quantize_features_into, dequantize_features_into}`) —
+//! the oracle `rust/tests/codec_props.rs` pins.
+
+pub mod delta;
+pub mod pack;
+pub mod rate;
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+pub use delta::{Decoder, Encoder, FLAG_KEYFRAME, FLAG_RAW};
+pub use pack::BLOCK;
+pub use rate::{RateConfig, RateController};
+
+/// Wire id of the flat v1 format (per-frame u8 quantisation, no state).
+pub const CODEC_FLAT: u8 = 0;
+/// Wire id of the delta + entropy-packed format.
+pub const CODEC_DELTA: u8 = 1;
+
+/// Which feature-frame codec a session speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecId {
+    /// flat per-frame u8 quantisation (the paper's wire format)
+    Flat,
+    /// temporal delta + entropy packing with closed-loop rate control
+    Delta,
+}
+
+impl CodecId {
+    pub fn wire_id(self) -> u8 {
+        match self {
+            CodecId::Flat => CODEC_FLAT,
+            CodecId::Delta => CODEC_DELTA,
+        }
+    }
+
+    pub fn from_wire(id: u8) -> Option<CodecId> {
+        match id {
+            CODEC_FLAT => Some(CodecId::Flat),
+            CODEC_DELTA => Some(CodecId::Delta),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`flat` | `delta`).
+    pub fn parse(s: &str) -> Result<CodecId> {
+        match s {
+            "flat" => Ok(CodecId::Flat),
+            "delta" => Ok(CodecId::Delta),
+            other => anyhow::bail!("unknown codec {other:?} (flat|delta)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecId::Flat => "flat",
+            CodecId::Delta => "delta",
+        }
+    }
+}
+
+/// Quantise a float feature map (post-ReLU, >= 0) into `[0, qmax]` with
+/// its max as scale, writing into a caller-owned buffer. At `qmax = 255`
+/// this is bit-identical to `net::framing::quantize_features_into` (same
+/// expression, same reciprocal).
+pub fn quantize_into(feat: &[f32], qmax: u8, out: &mut Vec<u8>) -> f32 {
+    let scale = feat.iter().fold(0.0f32, |a, &b| a.max(b)).max(1e-6);
+    let inv = qmax as f32 / scale;
+    out.clear();
+    out.reserve(feat.len());
+    out.extend(feat.iter().map(|&v| (v * inv).clamp(0.0, qmax as f32).round() as u8));
+    scale
+}
+
+/// Dequantise a `[0, qmax]` frame directly into a batch-matrix row via a
+/// per-scale LUT — the codec counterpart of the fused
+/// `net::framing::dequantize_features_into` path, bit-identical to it at
+/// `qmax = 255`.
+pub fn dequantize_into(scale: f32, qmax: u8, data: &[u8], out: &mut [f32]) {
+    assert_eq!(data.len(), out.len(), "dequantize into a slice of the wrong length");
+    let mut lut = [0.0f32; 256];
+    for (b, v) in lut.iter_mut().enumerate().take(qmax as usize + 1) {
+        *v = b as f32 / qmax as f32 * scale;
+    }
+    for (o, &b) in out.iter_mut().zip(data.iter()) {
+        *o = lut[b as usize];
+    }
+}
+
+/// Per-client decoder state held by a serving executor (or a sim shard):
+/// one [`Decoder`] per session, reset on every session (re)connect so a
+/// new incarnation can never delta against a stale base. A `BTreeMap`
+/// keeps iteration order deterministic under the simnet.
+#[derive(Debug, Default)]
+pub struct Decoders {
+    streams: BTreeMap<u32, Decoder>,
+    /// frames rejected across all sessions (chain breaks, corrupt payloads)
+    pub rejects: u64,
+    /// frames decoded across all sessions
+    pub accepted: u64,
+}
+
+impl Decoders {
+    pub fn new() -> Decoders {
+        Decoders::default()
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Session (re)connect: drop the cached previous-frame state so the
+    /// next frame from this client must be a keyframe.
+    pub fn invalidate(&mut self, client: u32) {
+        if let Some(d) = self.streams.get_mut(&client) {
+            d.reset();
+        }
+    }
+
+    /// Session gone: free its stream state entirely.
+    pub fn disconnect(&mut self, client: u32) {
+        self.streams.remove(&client);
+    }
+
+    /// The most recently reconstructed quantised frame for a session
+    /// (None before its first accepted frame).
+    pub fn frame(&self, client: u32) -> Option<&[u8]> {
+        self.streams
+            .get(&client)
+            .filter(|d| d.primed())
+            .map(|d| d.frame())
+    }
+
+    /// Decode one `FeaturesV2` frame straight into a batch-matrix row
+    /// (`row.len()` must equal `c·h·w`): reconstruct the quantised frame
+    /// through the client's [`Decoder`], then dequantise via the fused LUT
+    /// path. On `Err` the row is untouched or partially stale — callers
+    /// reply `need_keyframe` and zero the slot.
+    pub fn decode_into(
+        &mut self,
+        client: u32,
+        f: &crate::net::framing::FeatureFrame,
+        row: &mut [f32],
+    ) -> Result<()> {
+        ensure!(f.codec == CODEC_DELTA, "unsupported codec id {}", f.codec);
+        ensure!(f.qmax > 0, "qmax must be positive");
+        let n = f.c as usize * f.h as usize * f.w as usize;
+        ensure!(row.len() == n, "feat len {n} != row {}", row.len());
+        let dec = self.streams.entry(client).or_default();
+        let r = dec.apply(f.flags, f.qmax, f.seq, n, &f.data);
+        match r {
+            Ok(()) => {
+                self.accepted += 1;
+                dequantize_into(f.scale, f.qmax, dec.frame(), row);
+                Ok(())
+            }
+            Err(e) => {
+                self.rejects += 1;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::FeatureFrame;
+
+    #[test]
+    fn codec_id_roundtrips_wire_and_cli() {
+        for c in [CodecId::Flat, CodecId::Delta] {
+            assert_eq!(CodecId::from_wire(c.wire_id()), Some(c));
+            assert_eq!(CodecId::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(CodecId::from_wire(9), None);
+        assert!(CodecId::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn quantize_at_255_matches_the_flat_path_bit_for_bit() {
+        let feat: Vec<f32> = (0..300).map(|i| ((i as f32 * 0.37) % 5.0).max(0.0)).collect();
+        let (scale_flat, q_flat) = crate::net::framing::quantize_features(&feat);
+        let mut q = Vec::new();
+        let scale = quantize_into(&feat, 255, &mut q);
+        assert_eq!(scale.to_bits(), scale_flat.to_bits());
+        assert_eq!(q, q_flat);
+        let mut a = vec![f32::NAN; feat.len()];
+        let mut b = vec![f32::NAN; feat.len()];
+        dequantize_into(scale, 255, &q, &mut a);
+        crate::net::framing::dequantize_features_into(scale_flat, &q_flat, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn coarser_levels_bound_the_error_by_half_a_step() {
+        let feat: Vec<f32> = (0..128).map(|i| (i as f32 * 0.11) % 2.0).collect();
+        for qmax in [255u8, 127, 63, 31] {
+            let mut q = Vec::new();
+            let scale = quantize_into(&feat, qmax, &mut q);
+            assert!(q.iter().all(|&b| b <= qmax));
+            let mut back = vec![0.0f32; feat.len()];
+            dequantize_into(scale, qmax, &q, &mut back);
+            let step = scale / qmax as f32;
+            for (a, b) in feat.iter().zip(&back) {
+                assert!((a - b).abs() <= step * 0.5 + scale * 1e-6, "qmax {qmax}: {a} vs {b}");
+            }
+        }
+    }
+
+    fn frame_of(enc: &mut Encoder, qbuf: &[u8], qmax: u8, scale: f32) -> FeatureFrame {
+        let mut data = Vec::new();
+        let (flags, seq) = enc.encode_into(qbuf, &mut data);
+        FeatureFrame {
+            c: 1,
+            h: 1,
+            w: qbuf.len() as u16,
+            codec: CODEC_DELTA,
+            flags,
+            qmax,
+            seq,
+            scale,
+            data,
+        }
+    }
+
+    #[test]
+    fn decoders_invalidate_forces_a_keyframe_per_incarnation() {
+        let mut enc = Encoder::new();
+        let mut decs = Decoders::new();
+        let mut row = vec![0.0f32; 64];
+        let q0 = vec![4u8; 64];
+        let f0 = frame_of(&mut enc, &q0, 255, 1.0);
+        decs.decode_into(7, &f0, &mut row).unwrap();
+        // reconnect: cached base dropped, the in-flight delta is rejected
+        decs.invalidate(7);
+        let mut q1 = q0.clone();
+        q1[63] = 5;
+        let f1 = frame_of(&mut enc, &q1, 255, 1.0);
+        assert_eq!(f1.flags, 0, "expected a delta frame");
+        assert!(decs.decode_into(7, &f1, &mut row).is_err());
+        assert_eq!(decs.rejects, 1);
+        // the client keyframes and the stream recovers
+        enc.force_keyframe();
+        let f2 = frame_of(&mut enc, &[1; 64], 255, 2.0);
+        decs.decode_into(7, &f2, &mut row).unwrap();
+        assert_eq!(decs.accepted, 2);
+        assert_eq!(decs.n_streams(), 1);
+        decs.disconnect(7);
+        assert_eq!(decs.n_streams(), 0);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_codec_and_geometry() {
+        let mut decs = Decoders::new();
+        let mut row = vec![0.0f32; 4];
+        let bad = FeatureFrame {
+            c: 1,
+            h: 2,
+            w: 2,
+            codec: CODEC_FLAT,
+            flags: FLAG_KEYFRAME | FLAG_RAW,
+            qmax: 255,
+            seq: 1,
+            scale: 1.0,
+            data: vec![0; 4],
+        };
+        assert!(decs.decode_into(1, &bad, &mut row).is_err());
+        let mut short_row = vec![0.0f32; 3];
+        let ok = FeatureFrame { codec: CODEC_DELTA, ..bad };
+        assert!(decs.decode_into(1, &ok, &mut short_row).is_err());
+        assert!(decs.decode_into(1, &ok, &mut row).is_ok());
+    }
+}

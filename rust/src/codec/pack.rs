@@ -1,0 +1,275 @@
+//! Entropy packing for quantised feature residuals: per-block significance
+//! masks + zigzag/varint coding, all into pooled buffers.
+//!
+//! The packed form of a residual vector `cur - prev` (both quantised u8
+//! frames of the same length `n`) is
+//!
+//! ```text
+//! [mask: ceil(ceil(n/BLOCK)/8) bytes][varints of every significant block]
+//! ```
+//!
+//! where block `b` covers values `[b·BLOCK, (b+1)·BLOCK)` and is
+//! *significant* (mask bit set, LSB-first) iff any residual in it is
+//! nonzero. Insignificant blocks cost one mask bit and nothing else — the
+//! skip path that makes constant and slowly-varying frames collapse to a
+//! few bytes. Significant blocks carry every residual in order, each
+//! zigzag-mapped to an unsigned value and LEB128-varint coded (residuals
+//! live in [-255, 255], so a varint is at most two bytes).
+//!
+//! The format is canonical: unused bits of the final mask byte must be
+//! zero and the payload must end exactly at the last varint, so corrupt or
+//! truncated payloads are rejected, never half-applied silently (the
+//! caller additionally poisons its chain state on any error; see
+//! [`super::delta::Decoder`]).
+
+use anyhow::{ensure, Result};
+
+/// Values per significance block. 16 keeps the mask overhead at `n/128`
+/// bytes while skipping most of a static background; raster changes
+/// cluster along a handful of rows, so small blocks keep a moving
+/// sprite's cost proportional to the pixels it actually touched.
+pub const BLOCK: usize = 16;
+
+/// Map a signed residual to an unsigned code (0, -1, 1, -2, 2 → 0, 1, 2,
+/// 3, 4): small magnitudes of either sign get short varints.
+#[inline]
+pub fn zigzag(d: i32) -> u32 {
+    ((d << 1) ^ (d >> 31)) as u32
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(z: u32) -> i32 {
+    ((z >> 1) as i32) ^ -((z & 1) as i32)
+}
+
+/// Append one LEB128 varint (7 value bits per byte, high bit = continue).
+#[inline]
+pub fn put_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 varint at `*pos`, advancing it. Rejects truncation and
+/// varints longer than the 5 bytes a u32 can need.
+#[inline]
+pub fn get_varint(data: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        ensure!(*pos < data.len(), "truncated varint");
+        ensure!(shift <= 28, "varint overflows u32");
+        let b = data[*pos];
+        *pos += 1;
+        // the 5th byte contributes only 4 bits; silently dropping the rest
+        // would let two distinct byte streams decode to the same value,
+        // breaking the canonical-form contract
+        ensure!(shift < 28 || b & 0x7F <= 0x0F, "varint overflows u32");
+        v |= ((b & 0x7F) as u32) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Pack the residuals `cur - prev` (equal-length quantised frames),
+/// appending the mask + varint stream to `out` (the caller clears; the
+/// buffer's capacity is pooled across frames).
+pub fn pack_residuals_into(cur: &[u8], prev: &[u8], out: &mut Vec<u8>) {
+    assert_eq!(cur.len(), prev.len(), "residual frames must have equal length");
+    let n = cur.len();
+    let n_blocks = n.div_ceil(BLOCK);
+    let mask_bytes = n_blocks.div_ceil(8);
+    let mask_start = out.len();
+    out.resize(mask_start + mask_bytes, 0);
+    for b in 0..n_blocks {
+        let lo = b * BLOCK;
+        let hi = (lo + BLOCK).min(n);
+        if cur[lo..hi] == prev[lo..hi] {
+            continue;
+        }
+        out[mask_start + b / 8] |= 1 << (b % 8);
+        for i in lo..hi {
+            put_varint(out, zigzag(cur[i] as i32 - prev[i] as i32));
+        }
+    }
+}
+
+/// Apply a packed residual stream onto `base` in place (`base` holds the
+/// reference frame and ends up holding the reconstructed one). Every
+/// reconstructed value must stay in `[0, qmax]` — anything else means the
+/// stream was built against a different base (or corrupted) and the whole
+/// frame is rejected. On `Err`, `base` may be partially updated; the
+/// caller must treat its chain state as poisoned.
+pub fn unpack_residuals_into(data: &[u8], base: &mut [u8], qmax: u8) -> Result<()> {
+    let n = base.len();
+    let n_blocks = n.div_ceil(BLOCK);
+    let mask_bytes = n_blocks.div_ceil(8);
+    ensure!(data.len() >= mask_bytes, "truncated block mask");
+    // canonical form: mask bits past the last block must be zero
+    for b in n_blocks..mask_bytes * 8 {
+        ensure!(data[b / 8] & (1 << (b % 8)) == 0, "nonzero padding bit in block mask");
+    }
+    let mut pos = mask_bytes;
+    for b in 0..n_blocks {
+        if data[b / 8] & (1 << (b % 8)) == 0 {
+            continue;
+        }
+        let lo = b * BLOCK;
+        let hi = (lo + BLOCK).min(n);
+        for v in base[lo..hi].iter_mut() {
+            let z = get_varint(data, &mut pos)?;
+            let r = *v as i32 + unzigzag(z);
+            ensure!(
+                (0..=qmax as i32).contains(&r),
+                "reconstructed value {r} outside [0, {qmax}]"
+            );
+            *v = r as u8;
+        }
+    }
+    ensure!(pos == data.len(), "trailing bytes after packed residuals");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_is_a_bijection_on_residual_range() {
+        for d in -255i32..=255 {
+            let z = zigzag(d);
+            assert!(z <= 510, "zigzag({d}) = {z}");
+            assert_eq!(unzigzag(z), d);
+        }
+    }
+
+    #[test]
+    fn varint_roundtrips_and_is_short_for_small_values() {
+        let mut buf = Vec::new();
+        for v in [0u32, 1, 63, 64, 127, 128, 510, 16383, 16384, u32::MAX] {
+            buf.clear();
+            put_varint(&mut buf, v);
+            if v < 128 {
+                assert_eq!(buf.len(), 1, "{v}");
+            }
+            let mut pos = 0;
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overflow() {
+        let mut pos = 0;
+        assert!(get_varint(&[], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(get_varint(&[0x80, 0x80], &mut pos).is_err(), "unterminated");
+        let mut pos = 0;
+        assert!(get_varint(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], &mut pos).is_err());
+        // a 5th byte with bits beyond u32 must be rejected, not truncated:
+        // [0x80,0x80,0x80,0x80,0x70] would otherwise decode to 0, aliasing
+        // the canonical [0x00]
+        let mut pos = 0;
+        assert!(get_varint(&[0x80, 0x80, 0x80, 0x80, 0x70], &mut pos).is_err());
+        // the maximal canonical u32 still decodes
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u32::MAX);
+        let mut pos = 0;
+        assert_eq!(get_varint(&buf, &mut pos).unwrap(), u32::MAX);
+    }
+
+    fn roundtrip(cur: &[u8], prev: &[u8]) -> Vec<u8> {
+        let mut packed = Vec::new();
+        pack_residuals_into(cur, prev, &mut packed);
+        let mut base = prev.to_vec();
+        unpack_residuals_into(&packed, &mut base, 255).expect("unpack");
+        assert_eq!(base, cur);
+        packed
+    }
+
+    #[test]
+    fn identical_frames_cost_only_the_mask() {
+        let frame = vec![7u8; 100];
+        let packed = roundtrip(&frame, &frame);
+        // 7 blocks -> 1 mask byte, nothing else
+        assert_eq!(packed.len(), 1);
+        assert_eq!(packed[0], 0);
+    }
+
+    #[test]
+    fn single_changed_value_costs_one_block() {
+        let prev = vec![10u8; 100];
+        let mut cur = prev.clone();
+        cur[50] = 11;
+        let packed = roundtrip(&cur, &prev);
+        // 1 mask byte + 16 one-byte varints for the touched block
+        // (value 50 falls in block 3, which is full: 100 = 6*16 + 4)
+        assert_eq!(packed.len(), 1 + 16);
+    }
+
+    #[test]
+    fn empty_frame_packs_to_nothing() {
+        let packed = roundtrip(&[], &[]);
+        assert!(packed.is_empty());
+        let mut base: Vec<u8> = Vec::new();
+        assert!(unpack_residuals_into(&[], &mut base, 255).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_reconstruction_is_rejected() {
+        // residual says +2 on a base of 254 at qmax 255 — fine; at qmax 63
+        // the same stream must be rejected
+        let prev = vec![60u8; 8];
+        let mut cur = prev.clone();
+        cur[0] = 62;
+        let mut packed = Vec::new();
+        pack_residuals_into(&cur, &prev, &mut packed);
+        let mut base = prev.clone();
+        assert!(unpack_residuals_into(&packed, &mut base, 63).is_ok());
+        let mut cur_high = prev.clone();
+        cur_high[0] = 70; // above qmax 63
+        packed.clear();
+        pack_residuals_into(&cur_high, &prev, &mut packed);
+        let mut base = prev.clone();
+        assert!(unpack_residuals_into(&packed, &mut base, 63).is_err());
+    }
+
+    #[test]
+    fn truncated_and_padded_streams_are_rejected() {
+        let prev = vec![0u8; 64];
+        let mut cur = prev.clone();
+        cur[0] = 5;
+        cur[40] = 9;
+        let mut packed = Vec::new();
+        pack_residuals_into(&cur, &prev, &mut packed);
+        // truncate anywhere: must error, never panic
+        for cut in 0..packed.len() {
+            let mut base = prev.clone();
+            assert!(
+                unpack_residuals_into(&packed[..cut], &mut base, 255).is_err(),
+                "accepted a {cut}-byte truncation of {} bytes",
+                packed.len()
+            );
+        }
+        // trailing garbage
+        let mut padded = packed.clone();
+        padded.push(0);
+        let mut base = prev.clone();
+        assert!(unpack_residuals_into(&padded, &mut base, 255).is_err());
+        // nonzero padding bit in the mask (64 values -> 2 blocks, bits 2..8
+        // of the single mask byte are padding)
+        let mut bent = packed.clone();
+        bent[0] |= 1 << 5;
+        let mut base = prev.clone();
+        assert!(unpack_residuals_into(&bent, &mut base, 255).is_err());
+    }
+}

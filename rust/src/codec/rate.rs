@@ -1,0 +1,284 @@
+//! Closed-loop rate control for the feature codec.
+//!
+//! The controller owns two per-session decisions the encoder consults
+//! before every frame:
+//!
+//! * **quantisation level** — a ceiling `qmax` from a configurable ladder
+//!   (finest → coarsest). Each server ack feeds one link-time sample
+//!   (end-to-end latency minus the server-reported queue wait, i.e. the
+//!   part the link is responsible for) into an EWMA; when the EWMA sits
+//!   above the latency target the controller steps coarser, when it sits
+//!   comfortably below it steps finer. A hold-down of `hold` acks between
+//!   moves plus the `low_water`/`high_water` hysteresis gap keeps it from
+//!   oscillating.
+//! * **keyframe vs delta** — deltas by default; a keyframe is forced by
+//!   any loss signal ([`RateController::on_loss`]: reconnect, an explicit
+//!   server rejection, or a `need_keyframe` ack) and by the periodic
+//!   refresh every `keyframe_interval` frames, which bounds how long a
+//!   silent desync can live.
+//!
+//! State machine (DESIGN.md §7): `Keyframe → Delta` on every sent
+//! keyframe; `Delta → Keyframe` on loss or refresh. The quantisation
+//! level moves independently of the keyframe axis.
+//!
+//! All arithmetic is plain `f64` over caller-provided samples — no clock
+//! reads — so the controller is bit-deterministic under the simnet.
+
+/// Tuning for [`RateController`].
+#[derive(Debug, Clone)]
+pub struct RateConfig {
+    /// per-decision link-time budget the controller steers toward, seconds
+    pub target_latency: f64,
+    /// quantisation ceilings, finest first (values quantise into [0, qmax])
+    pub ladder: Vec<u8>,
+    /// EWMA smoothing factor for link-time samples, in (0, 1]
+    pub alpha: f64,
+    /// step coarser when `ewma > target_latency * high_water`
+    pub high_water: f64,
+    /// step finer when `ewma < target_latency * low_water`
+    pub low_water: f64,
+    /// minimum acks between quantisation moves (adaptation hold-down)
+    pub hold: u32,
+    /// force a keyframe every this many frames (0 = only on loss)
+    pub keyframe_interval: u32,
+}
+
+impl Default for RateConfig {
+    fn default() -> Self {
+        RateConfig {
+            target_latency: 0.05,
+            ladder: vec![255, 127, 63, 31],
+            alpha: 0.3,
+            high_water: 1.0,
+            low_water: 0.5,
+            hold: 4,
+            keyframe_interval: 64,
+        }
+    }
+}
+
+/// Per-session adaptive controller; see the module docs.
+#[derive(Debug)]
+pub struct RateController {
+    cfg: RateConfig,
+    /// index into `cfg.ladder` (0 = finest)
+    level: usize,
+    ewma: Option<f64>,
+    ewma_bps: Option<f64>,
+    acks_since_move: u32,
+    frames_since_key: u32,
+    force_key: bool,
+    /// quantisation steps taken toward coarser levels
+    pub coarser_steps: u64,
+    /// quantisation steps taken back toward finer levels
+    pub finer_steps: u64,
+    /// loss signals received (each forces the next frame to be a keyframe)
+    pub losses: u64,
+}
+
+impl RateController {
+    pub fn new(cfg: RateConfig) -> RateController {
+        assert!(!cfg.ladder.is_empty(), "rate ladder must not be empty");
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
+        RateController {
+            cfg,
+            level: 0,
+            ewma: None,
+            ewma_bps: None,
+            acks_since_move: 0,
+            frames_since_key: 0,
+            force_key: true,
+            coarser_steps: 0,
+            finer_steps: 0,
+            losses: 0,
+        }
+    }
+
+    /// The current quantisation ceiling.
+    pub fn qmax(&self) -> u8 {
+        self.cfg.ladder[self.level]
+    }
+
+    /// Current ladder position (0 = finest).
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Smoothed link-time estimate, seconds (None before the first ack).
+    pub fn ewma_latency(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Smoothed goodput estimate, bits/s (None before the first ack).
+    pub fn estimated_bps(&self) -> Option<f64> {
+        self.ewma_bps
+    }
+
+    /// A loss signal: reconnect, an explicit server rejection, or a
+    /// `need_keyframe` ack. The next frame will be a keyframe.
+    pub fn on_loss(&mut self) {
+        self.force_key = true;
+        self.losses += 1;
+    }
+
+    /// Feed one server ack: `wire_bytes` were acknowledged after
+    /// `latency_s` end to end, of which `queue_wait_s` was spent queued at
+    /// the server (not the link's fault, so it is subtracted).
+    pub fn on_ack(&mut self, wire_bytes: usize, latency_s: f64, queue_wait_s: f64) {
+        let link = (latency_s - queue_wait_s).max(1e-6);
+        let a = self.cfg.alpha;
+        self.ewma = Some(match self.ewma {
+            None => link,
+            Some(e) => e + a * (link - e),
+        });
+        let bps = wire_bytes as f64 * 8.0 / link;
+        self.ewma_bps = Some(match self.ewma_bps {
+            None => bps,
+            Some(e) => e + a * (bps - e),
+        });
+        self.acks_since_move += 1;
+        if self.acks_since_move < self.cfg.hold {
+            return;
+        }
+        let e = self.ewma.unwrap();
+        if e > self.cfg.target_latency * self.cfg.high_water {
+            if self.level + 1 < self.cfg.ladder.len() {
+                self.level += 1;
+                self.coarser_steps += 1;
+                self.acks_since_move = 0;
+            }
+        } else if e < self.cfg.target_latency * self.cfg.low_water && self.level > 0 {
+            self.level -= 1;
+            self.finer_steps += 1;
+            self.acks_since_move = 0;
+        }
+    }
+
+    /// Must the next frame be a keyframe (forced or periodic refresh)?
+    pub fn keyframe_due(&self) -> bool {
+        self.force_key
+            || (self.cfg.keyframe_interval > 0
+                && self.frames_since_key >= self.cfg.keyframe_interval)
+    }
+
+    /// Note a sent frame so the forced-keyframe latch and the periodic
+    /// refresh counter advance. `keyframe` is what actually went on the
+    /// wire (the encoder may upgrade a delta to a keyframe on its own).
+    pub fn frame_sent(&mut self, keyframe: bool) {
+        if keyframe {
+            self.force_key = false;
+            self.frames_since_key = 0;
+        } else {
+            self.frames_since_key += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> RateController {
+        RateController::new(RateConfig {
+            target_latency: 0.01,
+            hold: 2,
+            ..RateConfig::default()
+        })
+    }
+
+    #[test]
+    fn starts_finest_and_keyframe_forced() {
+        let c = ctl();
+        assert_eq!(c.qmax(), 255);
+        assert!(c.keyframe_due());
+    }
+
+    #[test]
+    fn sustained_congestion_walks_to_the_coarse_floor() {
+        let mut c = ctl();
+        for _ in 0..40 {
+            c.on_ack(400, 0.05, 0.0); // 5x over target
+        }
+        assert_eq!(c.level(), 3, "should sit at the coarsest rung");
+        assert_eq!(c.qmax(), 31);
+        assert!(c.coarser_steps >= 3);
+        // and a relieved link walks it back to the finest
+        for _ in 0..40 {
+            c.on_ack(400, 0.001, 0.0); // 10x under target
+        }
+        assert_eq!(c.level(), 0);
+        assert!(c.finer_steps >= 3);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_the_level() {
+        let mut c = ctl();
+        // between low (0.005) and high (0.01): no movement ever
+        for _ in 0..100 {
+            c.on_ack(400, 0.007, 0.0);
+        }
+        assert_eq!(c.level(), 0);
+        assert_eq!(c.coarser_steps + c.finer_steps, 0);
+    }
+
+    #[test]
+    fn queue_wait_is_not_the_links_fault() {
+        let mut c = ctl();
+        // 50 ms end to end, but 45 ms of it queued at the server
+        for _ in 0..40 {
+            c.on_ack(400, 0.05, 0.045);
+        }
+        assert_eq!(c.level(), 0, "server queueing must not coarsen the codec");
+    }
+
+    #[test]
+    fn loss_forces_exactly_one_keyframe() {
+        let mut c = ctl();
+        c.frame_sent(true);
+        assert!(!c.keyframe_due());
+        c.on_loss();
+        assert!(c.keyframe_due());
+        c.frame_sent(true);
+        assert!(!c.keyframe_due());
+        assert_eq!(c.losses, 1);
+    }
+
+    #[test]
+    fn periodic_refresh_fires_on_the_interval() {
+        let mut c = RateController::new(RateConfig {
+            keyframe_interval: 3,
+            ..RateConfig::default()
+        });
+        c.frame_sent(true);
+        for _ in 0..3 {
+            assert!(!c.keyframe_due());
+            c.frame_sent(false);
+        }
+        assert!(c.keyframe_due(), "4th frame is the refresh");
+        // interval 0 disables the refresh entirely
+        let mut c = RateController::new(RateConfig {
+            keyframe_interval: 0,
+            ..RateConfig::default()
+        });
+        c.frame_sent(true);
+        for _ in 0..500 {
+            c.frame_sent(false);
+        }
+        assert!(!c.keyframe_due());
+    }
+
+    #[test]
+    fn goodput_estimate_tracks_the_samples() {
+        let mut c = ctl();
+        c.on_ack(1250, 0.01, 0.0); // 1250 B in 10 ms = 1 Mb/s
+        let bps = c.estimated_bps().unwrap();
+        assert!((bps - 1e6).abs() < 1.0, "{bps}");
+        assert!((c.ewma_latency().unwrap() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ladder")]
+    fn empty_ladder_is_rejected() {
+        RateController::new(RateConfig { ladder: vec![], ..RateConfig::default() });
+    }
+}

@@ -33,6 +33,10 @@ pub struct BatchArena {
     pub services: Vec<Duration>,
     /// flat `[rows * action_dim]` batched policy output
     pub actions: Vec<f32>,
+    /// per-item codec verdict: true when the item's feature frame failed
+    /// to decode (chain break / stale base / corrupt payload) — its row is
+    /// zeroed and its reply carries `RESP_FLAG_NEED_KEYFRAME`
+    pub need_key: Vec<bool>,
     /// encoded reply-frame scratch (one reply at a time)
     pub frame: Vec<u8>,
 }
@@ -61,6 +65,8 @@ impl BatchArena {
         self.feat_dim = feat_dim;
         self.queue_waits.clear();
         self.services.clear();
+        self.need_key.clear();
+        self.need_key.resize(rows, false);
     }
 
     pub fn feat_dim(&self) -> usize {
@@ -152,6 +158,16 @@ mod tests {
         assert!(a.matrix().iter().all(|&v| v == 0.0));
         assert_eq!(a.feat_dim(), 2);
         assert_eq!(a.rows(), 4);
+    }
+
+    #[test]
+    fn need_key_scratch_resets_every_batch() {
+        let mut a = BatchArena::new();
+        a.begin(2, 4, 3);
+        assert_eq!(a.need_key, vec![false; 4]);
+        a.need_key[1] = true;
+        a.begin(2, 2, 3);
+        assert_eq!(a.need_key, vec![false; 2], "stale verdicts must not leak");
     }
 
     #[test]

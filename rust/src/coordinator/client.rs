@@ -16,9 +16,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::codec::{self, CodecId, Encoder, RateConfig, RateController, CODEC_DELTA};
 use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
 use crate::envs::{CropMode, Env, Pendulum, PixelPipeline};
-use crate::net::framing::{Hello, Msg, Payload, Request};
+use crate::net::framing::{FeatureFrame, Hello, Msg, Payload, Request};
 use crate::net::shaped::ShapedWriter;
 use crate::net::tcp::{read_msg, write_msg};
 use crate::runtime::Manifest;
@@ -49,6 +50,13 @@ pub struct ClientConfig {
     /// against Sim-backend coordinators (ignored in split mode, which needs
     /// the manifest for the shader pipeline anyway)
     pub obs_x: Option<usize>,
+    /// feature-frame codec for the split route, negotiated in the Hello
+    /// handshake (raw-route clients ignore it; if the server ack declines
+    /// the codec the session falls back to the flat v1 format)
+    pub codec: CodecId,
+    /// rate-controller tuning for the delta codec (quantisation ladder,
+    /// latency target, keyframe cadence)
+    pub rate: RateConfig,
     /// time source for pacing, shaping, and latency stamps (the clock
     /// seam, DESIGN.md §6); defaults to the wall clock. Keep it wall for
     /// a live client — socket reads still block in real time — and use
@@ -70,6 +78,8 @@ impl Default for ClientConfig {
             artifact_dir: crate::runtime::default_artifact_dir(),
             seed: 0,
             obs_x: None,
+            codec: CodecId::Flat,
+            rate: RateConfig::default(),
             clock: ClockHandle::wall(),
         }
     }
@@ -87,6 +97,14 @@ pub struct ClientReport {
     pub elapsed: f64,
     /// total request bytes put on the wire
     pub bytes_sent: u64,
+    /// codec keyframes sent (delta codec only)
+    pub keyframes: u64,
+    /// codec delta frames sent
+    pub deltas: u64,
+    /// server re-key demands observed (chain breaks it could not decode)
+    pub need_keyframes: u64,
+    /// rate controller's final quantisation ceiling (0 = flat codec)
+    pub final_qmax: u8,
 }
 
 impl ClientReport {
@@ -159,11 +177,39 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         };
     let mut device = cfg.device.clone().map(|spec| Device::new(spec, cfg.seed));
 
+    // delta-codec state for the split route: encoder + closed-loop rate
+    // controller. Dropped to `None` (flat v1 fallback) if the server's
+    // hello ack declines the codec.
+    let mut delta: Option<(Encoder, RateController)> = (cfg.mode == Route::Split
+        && cfg.codec == CodecId::Delta)
+        .then(|| (Encoder::new(), RateController::new(cfg.rate.clone())));
+
     send.send(&Msg::Hello(Hello {
         client: client_id,
         split: cfg.mode == Route::Split,
+        codec: if cfg.mode == Route::Split { cfg.codec.wire_id() } else { 0 },
         shard: None,
     }))?;
+
+    // negotiation barrier: the first frame's format depends on the
+    // server's verdict, so a delta client blocks on the hello ack before
+    // encoding anything (flat and raw clients keep the fire-and-forget
+    // handshake — their format needs no agreement)
+    if delta.is_some() {
+        loop {
+            match read_msg(&mut recv)? {
+                Some(Msg::Hello(ack)) => {
+                    if ack.codec != CODEC_DELTA {
+                        // server declined: fall back to the flat v1 format
+                        delta = None;
+                    }
+                    break;
+                }
+                Some(_) => continue, // stray traffic on a fresh connection
+                None => anyhow::bail!("server closed during codec negotiation"),
+            }
+        }
+    }
 
     let mut env = Pendulum::new();
     let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E37).wrapping_add(client_id as u64));
@@ -178,6 +224,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
     // per-frame scratch reused across decisions (steady-state: no growth)
     let mut feat = Chw::zeros(1, 1, 1);
     let mut flat: Vec<f32> = Vec::new();
+    let mut qbuf: Vec<u8> = Vec::new();
 
     for i in 0..cfg.decisions {
         if let Some(t) = tick {
@@ -220,20 +267,72 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
                         }
                     }
                 }
-                let (scale, q) = crate::net::quantize_features(&flat);
-                Payload::Features { c: c as u16, h: h as u16, w: w as u16, scale, data: q }
+                match &mut delta {
+                    Some((encoder, rate)) => {
+                        // negotiated codec: quantise at the controller's
+                        // ceiling, delta-encode against the previous frame
+                        // (keyframe when the controller demands one), ship
+                        // the packed payload with the chain header
+                        if rate.keyframe_due() {
+                            encoder.force_keyframe();
+                        }
+                        let qmax = rate.qmax();
+                        let scale = codec::quantize_into(&flat, qmax, &mut qbuf);
+                        let mut data = Vec::new();
+                        let (flags, seq) = encoder.encode_into(&qbuf, &mut data);
+                        let key = flags & codec::FLAG_KEYFRAME != 0;
+                        rate.frame_sent(key);
+                        if key {
+                            report.keyframes += 1;
+                        } else {
+                            report.deltas += 1;
+                        }
+                        Payload::FeaturesV2(FeatureFrame {
+                            c: c as u16,
+                            h: h as u16,
+                            w: w as u16,
+                            codec: CODEC_DELTA,
+                            flags,
+                            qmax,
+                            seq,
+                            scale,
+                            data,
+                        })
+                    }
+                    None => {
+                        let (scale, q) = crate::net::quantize_features(&flat);
+                        Payload::Features { c: c as u16, h: h as u16, w: w as u16, scale, data: q }
+                    }
+                }
             }
             (None, _) => Payload::RawRgba { x: serve_x as u16, data: pipeline.rgba_bytes() },
         };
-        report.bytes_sent += payload.wire_bytes() as u64;
+        let wire_b = payload.wire_bytes();
+        report.bytes_sent += wire_b as u64;
         send.send(&Msg::Request(Request { client: client_id, id: i as u64, payload }))?;
 
         // await our action
         let action = loop {
             match read_msg(&mut recv)? {
                 Some(Msg::Response(r)) if r.id == i as u64 => break r.action,
-                Some(Msg::Response(_)) => continue, // stale
-                Some(_) => continue,
+                Some(Msg::ResponseV2(r)) if r.id == i as u64 => {
+                    // the codec feedback that closes the rate-control loop
+                    if let Some((encoder, rate)) = &mut delta {
+                        let lat = cfg.clock.now().duration_since(t0).as_secs_f64();
+                        rate.on_ack(wire_b, lat, r.queue_wait_us as f64 * 1e-6);
+                        if r.need_keyframe() {
+                            rate.on_loss();
+                            encoder.force_keyframe();
+                            report.need_keyframes += 1;
+                        }
+                    }
+                    break r.action;
+                }
+                // the codec verdict was consumed at the negotiation
+                // barrier; a late/duplicate ack must not renegotiate a
+                // stream that is already flowing
+                Some(Msg::Hello(_)) => continue,
+                Some(_) => continue, // stale response
                 None => anyhow::bail!("server closed connection"),
             }
         };
@@ -262,6 +361,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         pipeline.observe(&env, &mut rng);
     }
     report.elapsed = cfg.clock.now().duration_since(t_run).as_secs_f64();
+    report.final_qmax = delta.as_ref().map(|(_, rate)| rate.qmax()).unwrap_or(0);
     if let Sender_::Plain(ref mut s) = send {
         let _ = s.flush();
     }

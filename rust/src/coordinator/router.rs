@@ -24,7 +24,7 @@ impl Route {
     pub fn of(payload: &Payload) -> Route {
         match payload {
             Payload::RawRgba { .. } => Route::Full,
-            Payload::Features { .. } => Route::Split,
+            Payload::Features { .. } | Payload::FeaturesV2(_) => Route::Split,
         }
     }
 
@@ -89,6 +89,20 @@ mod tests {
         );
         assert_eq!(
             Route::of(&Payload::Features { c: 4, h: 11, w: 11, scale: 1.0, data: vec![] }),
+            Route::Split
+        );
+        assert_eq!(
+            Route::of(&Payload::FeaturesV2(crate::net::framing::FeatureFrame {
+                c: 4,
+                h: 11,
+                w: 11,
+                codec: 1,
+                flags: 1,
+                qmax: 255,
+                seq: 1,
+                scale: 1.0,
+                data: vec![],
+            })),
             Route::Split
         );
         assert_eq!(Route::Full.name(), "server-only");

@@ -22,8 +22,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 use log::{debug, warn};
 
+use crate::codec::{CodecId, Decoders};
 use crate::net::framing::{
-    dequantize_features_into, encode_response_into, Hello, Msg, Payload, Response,
+    dequantize_features_into, encode_response_into, encode_response_v2_into, Hello, Msg, Payload,
+    Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
 };
 use crate::net::tcp::{read_msg, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
@@ -128,6 +130,49 @@ struct Work {
     reply: Arc<Mutex<TcpStream>>,
 }
 
+/// What reader threads feed the executor: requests, plus session
+/// lifecycle edges so the executor can invalidate per-client codec state
+/// on every (re)connect — a new session incarnation must keyframe before
+/// it can delta (DESIGN.md §7) — and free it when the connection ends
+/// (the decoder map must not grow with churning client ids).
+enum Ingress {
+    Work(Work),
+    Hello { client: u32 },
+    Disconnect { client: u32 },
+}
+
+/// One executor-thread event, dispatched through a single closure so
+/// batch execution and codec-state invalidation share the same mutable
+/// backend state (sessions, decoders, arena).
+enum ExecEvent<'a> {
+    /// a formed batch, borrowed from the executor's pooled batch buffer
+    Batch(Route, &'a [super::batcher::Item<Work>]),
+    /// a session's connect preamble reached this server
+    Hello(u32),
+    /// a session's connection closed
+    Disconnect(u32),
+}
+
+/// Back-pressure rejection reply: explicit empty action so the client
+/// never blocks on a dropped request. Sessions on the codec format also
+/// learn their frame never reached the decoder (`need_keyframe`), so the
+/// delta chain re-keys instead of desyncing.
+fn reject_work(w: Work) {
+    let msg = match &w.payload {
+        Payload::FeaturesV2(f) => Msg::ResponseV2(ResponseV2 {
+            client: w.client,
+            id: w.id,
+            seq: f.seq,
+            flags: RESP_FLAG_NEED_KEYFRAME,
+            queue_wait_us: 0,
+            action: vec![],
+        }),
+        _ => Msg::Response(Response { client: w.client, id: w.id, action: vec![] }),
+    };
+    let mut wtr = w.reply.lock().unwrap();
+    let _ = write_msg(&mut *wtr, &msg);
+}
+
 pub struct ServerHandle {
     pub addr: SocketAddr,
     pub metrics: Metrics,
@@ -153,7 +198,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     let addr = listener.local_addr()?;
     let metrics = Metrics::new();
     let shutdown = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = std::sync::mpsc::channel::<Work>();
+    let (tx, rx) = std::sync::mpsc::channel::<Ingress>();
 
     // executor thread (owns the PJRT runtime)
     let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
@@ -203,7 +248,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
 
 fn reader_main(
     stream: TcpStream,
-    tx: Sender<Work>,
+    tx: Sender<Ingress>,
     shutdown: Arc<AtomicBool>,
     shard_id: Option<u16>,
     clock: ClockHandle,
@@ -216,12 +261,16 @@ fn reader_main(
         }
     };
     let mut reader = stream;
+    // the session this connection carries (learned from its first frame),
+    // so its codec stream state can be freed when the connection ends
+    let mut session: Option<u32> = None;
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
         match read_msg(&mut reader) {
             Ok(Some(Msg::Request(r))) => {
+                session = Some(r.client);
                 let work = Work {
                     client: r.client,
                     id: r.id,
@@ -229,20 +278,29 @@ fn reader_main(
                     received: clock.now(),
                     reply: writer.clone(),
                 };
-                if tx.send(work).is_err() {
+                if tx.send(Ingress::Work(work)).is_err() {
                     break; // executor gone
                 }
             }
             Ok(Some(Msg::Hello(h))) => {
-                // ack the preamble so gateways and health probes get a round
-                // trip; the ack carries our shard identity
-                let ack = Msg::Hello(Hello { client: h.client, split: h.split, shard: shard_id });
+                session = Some(h.client);
+                // tell the executor first (channel order guarantees the
+                // invalidation lands before any request this connection
+                // sends), then ack the preamble so gateways and health
+                // probes get a round trip; the ack carries our shard
+                // identity and echoes the codec we accept
+                if tx.send(Ingress::Hello { client: h.client }).is_err() {
+                    break;
+                }
+                let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
+                let ack =
+                    Msg::Hello(Hello { client: h.client, split: h.split, codec, shard: shard_id });
                 let mut w = writer.lock().unwrap();
                 if write_msg(&mut *w, &ack).is_err() {
                     break;
                 }
             }
-            Ok(Some(Msg::Response(_))) => {
+            Ok(Some(Msg::Response(_) | Msg::ResponseV2(_))) => {
                 warn!("client sent a response; ignoring");
             }
             Ok(None) => break, // clean EOF
@@ -251,6 +309,13 @@ fn reader_main(
                 break;
             }
         }
+    }
+    // free the session's codec stream state. A reconnect's fresh Hello can
+    // race this (separate reader threads, one channel): at worst the new
+    // incarnation's state is evicted once, its next delta is refused with
+    // need_keyframe, and the chain re-keys — bounded memory wins
+    if let Some(client) = session {
+        let _ = tx.send(Ingress::Disconnect { client });
     }
 }
 
@@ -267,7 +332,7 @@ struct RouteExec {
 
 fn executor_main(
     cfg: ServerConfig,
-    rx: Receiver<Work>,
+    rx: Receiver<Ingress>,
     metrics: Metrics,
     shutdown: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
@@ -278,8 +343,9 @@ fn executor_main(
     }
 }
 
-/// The batching loop shared by every backend: pull work, honour the batch
-/// deadline, report drops, hand ready batches to `run`.
+/// The batching loop shared by every backend: pull ingress, honour the
+/// batch deadline, report drops, hand ready batches (and session
+/// preambles) to `run`.
 ///
 /// Batches are drained into one pooled `Vec<Item<Work>>` that lives for
 /// the executor's lifetime — `run` borrows the batch, it never owns it,
@@ -287,13 +353,13 @@ fn executor_main(
 fn executor_loop<F>(
     policy: BatchPolicy,
     max_depth: usize,
-    rx: Receiver<Work>,
+    rx: Receiver<Ingress>,
     metrics: &Metrics,
     shutdown: &AtomicBool,
     clock: &ClockHandle,
     mut run: F,
 ) where
-    F: FnMut(Route, &[super::batcher::Item<Work>]) -> Result<()>,
+    F: FnMut(ExecEvent) -> Result<()>,
 {
     let mut collector: BatchCollector<Work> = BatchCollector::new(policy, max_depth);
     let mut batch: Vec<super::batcher::Item<Work>> = Vec::new();
@@ -303,36 +369,39 @@ fn executor_loop<F>(
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // pull work: block briefly when idle, otherwise honour the batch
-        // deadline
+        // pull ingress: block briefly when idle, otherwise honour the
+        // batch deadline
         let timeout = collector
             .next_deadline(clock.now())
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(w) => {
+            Ok(first) => {
                 let now = clock.now();
-                // a saturated push hands the work back, so the reply handle
-                // is only touched (and never cloned) on the rejection path
-                let admit = |w: Work, collector: &mut BatchCollector<Work>| {
-                    let route = Route::of(&w.payload);
-                    if let Some(rejected) = collector.push(route, w, now) {
-                        // back-pressure: reject explicitly (empty action)
-                        // so the client never blocks on a dropped request
-                        let mut wtr = rejected.reply.lock().unwrap();
-                        let _ = write_msg(
-                            &mut *wtr,
-                            &Msg::Response(Response {
-                                client: rejected.client,
-                                id: rejected.id,
-                                action: vec![],
-                            }),
-                        );
+                // drain the first event and whatever else is queued
+                let mut next = Some(first);
+                while let Some(ing) = next {
+                    match ing {
+                        Ingress::Hello { client } => {
+                            if let Err(e) = run(ExecEvent::Hello(client)) {
+                                warn!("session preamble failed: {e:#}");
+                            }
+                        }
+                        Ingress::Disconnect { client } => {
+                            if let Err(e) = run(ExecEvent::Disconnect(client)) {
+                                warn!("session teardown failed: {e:#}");
+                            }
+                        }
+                        Ingress::Work(w) => {
+                            // a saturated push hands the work back, so the
+                            // reply handle is only touched (and never
+                            // cloned) on the rejection path
+                            let route = Route::of(&w.payload);
+                            if let Some(rejected) = collector.push(route, w, now) {
+                                reject_work(rejected);
+                            }
+                        }
                     }
-                };
-                admit(w, &mut collector);
-                // opportunistically drain whatever else is queued
-                while let Ok(w) = rx.try_recv() {
-                    admit(w, &mut collector);
+                    next = rx.try_recv().ok();
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -345,7 +414,7 @@ fn executor_loop<F>(
 
         while let Some(route) = collector.ready(clock.now()) {
             collector.take_into(route, &mut batch);
-            if let Err(e) = run(route, &batch) {
+            if let Err(e) = run(ExecEvent::Batch(route, &batch)) {
                 warn!("batch failed: {e:#}");
             }
             // drop the items now (payload buffers, reply-handle Arcs) so an
@@ -357,7 +426,7 @@ fn executor_loop<F>(
 
 fn executor_pjrt(
     cfg: ServerConfig,
-    rx: Receiver<Work>,
+    rx: Receiver<Ingress>,
     metrics: Metrics,
     shutdown: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
@@ -411,14 +480,36 @@ fn executor_pjrt(
     };
 
     let mut sessions = SessionManager::new();
+    let mut codecs = Decoders::new();
     let mut arena = BatchArena::new();
     let clock = cfg.clock.clone();
-    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |route, items| {
-        let exec = match route {
-            Route::Split => &mut split,
-            Route::Full => &mut full,
-        };
-        run_batch(&rt, exec, route, items, &mut sessions, &mut arena, &metrics, &cfg.clock)
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
+        ExecEvent::Hello(client) => {
+            // new session incarnation: its next codec frame must keyframe
+            codecs.invalidate(client);
+            Ok(())
+        }
+        ExecEvent::Disconnect(client) => {
+            codecs.disconnect(client);
+            Ok(())
+        }
+        ExecEvent::Batch(route, items) => {
+            let exec = match route {
+                Route::Split => &mut split,
+                Route::Full => &mut full,
+            };
+            run_batch(
+                &rt,
+                exec,
+                route,
+                items,
+                &mut sessions,
+                &mut codecs,
+                &mut arena,
+                &metrics,
+                &cfg.clock,
+            )
+        }
     });
 }
 
@@ -485,7 +576,7 @@ impl SimEncoder {
 fn executor_sim(
     spec: SimSpec,
     cfg: ServerConfig,
-    rx: Receiver<Work>,
+    rx: Receiver<Ingress>,
     metrics: Metrics,
     shutdown: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
@@ -493,20 +584,30 @@ fn executor_sim(
     // no artifacts to stage: ready immediately
     let _ = ready.send(Ok(()));
     let mut sessions = SessionManager::new();
+    let mut codecs = Decoders::new();
     let mut encoder = SimEncoder::new();
     let mut arena = BatchArena::new();
     let clock = cfg.clock.clone();
-    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |route, items| {
-        run_batch_sim(
+    executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
+        ExecEvent::Hello(client) => {
+            codecs.invalidate(client);
+            Ok(())
+        }
+        ExecEvent::Disconnect(client) => {
+            codecs.disconnect(client);
+            Ok(())
+        }
+        ExecEvent::Batch(route, items) => run_batch_sim(
             &spec,
             route,
             items,
             &mut sessions,
+            &mut codecs,
             &mut encoder,
             &mut arena,
             &metrics,
             &cfg.clock,
-        )
+        ),
     });
 }
 
@@ -520,6 +621,7 @@ fn run_batch_sim(
     route: Route,
     items: &[super::batcher::Item<Work>],
     sessions: &mut SessionManager,
+    codecs: &mut Decoders,
     encoder: &mut SimEncoder,
     arena: &mut BatchArena,
     metrics: &Metrics,
@@ -527,35 +629,52 @@ fn run_batch_sim(
 ) -> Result<()> {
     let n = items.len();
     let dequeue = clock.now();
-    arena.queue_waits.clear();
-    arena
-        .queue_waits
-        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
 
     // raw frames still flow through the per-client frame stack so shard-local
     // session state stays meaningful under the fleet gateway (outside the
     // modelled window, exactly as before this PR) — stacked observations
-    // now land directly in arena batch rows
+    // now land directly in arena batch rows. Codec frames run the real
+    // decoder so the delta chain (and its need-keyframe feedback) behaves
+    // identically on Sim and PJRT shards.
     let t_pack = clock.now();
     let feat_dim = items
         .iter()
         .map(|i| match &i.work.payload {
             Payload::RawRgba { x, .. } => 9 * (*x as usize) * (*x as usize),
             Payload::Features { .. } => 0,
+            Payload::FeaturesV2(f) => f.feat_len(),
         })
         .max()
         .unwrap_or(0);
+    // populate the queue-wait scratch only after `begin` (which clears it):
+    // the reply loop indexes it per item
     arena.begin(0, n, feat_dim);
+    arena
+        .queue_waits
+        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
     encoder.to_encode.clear();
     for (i, item) in items.iter().enumerate() {
-        if let Payload::RawRgba { x, data } = &item.work.payload {
-            let x = *x as usize;
-            let row = arena.row_mut(i);
-            sessions.ingest_rgba_into(item.work.client, x, data, &mut row[..9 * x * x])?;
-            // a zero-sized frame has nothing to encode (and a 0-pixel plan
-            // would be degenerate): fall back to the zero-action reply
-            if spec.encode && x > 0 {
-                encoder.to_encode.push((i, x));
+        match &item.work.payload {
+            Payload::RawRgba { x, data } => {
+                let x = *x as usize;
+                let row = arena.row_mut(i);
+                sessions.ingest_rgba_into(item.work.client, x, data, &mut row[..9 * x * x])?;
+                // a zero-sized frame has nothing to encode (and a 0-pixel
+                // plan would be degenerate): fall back to the zero-action
+                // reply
+                if spec.encode && x > 0 {
+                    encoder.to_encode.push((i, x));
+                }
+            }
+            Payload::Features { .. } => {}
+            Payload::FeaturesV2(f) => {
+                let flen = f.feat_len();
+                let row = arena.row_mut(i);
+                let failed = codecs.decode_into(item.work.client, f, &mut row[..flen]).is_err();
+                if failed {
+                    row[..flen].fill(0.0);
+                    arena.need_key[i] = true;
+                }
             }
         }
     }
@@ -598,9 +717,10 @@ fn run_batch_sim(
 
     for (i, item) in items.iter().enumerate() {
         let a0 = i * spec.action_dim;
-        encode_response_into(
-            item.work.client,
-            item.work.id,
+        encode_reply(
+            &item.work,
+            arena.need_key[i],
+            arena.queue_waits[i],
             &arena.actions[a0..a0 + spec.action_dim],
             &mut arena.frame,
         );
@@ -612,6 +732,29 @@ fn run_batch_sim(
     Ok(())
 }
 
+/// Encode one reply into the pooled `frame`: v1 responses for v1
+/// payloads, v2 responses (codec feedback: echoed seq, need-keyframe
+/// verdict, queue wait) for codec payloads. An undecodable codec frame
+/// replies with an empty action plus the re-key demand, mirroring the
+/// back-pressure rejection shape.
+fn encode_reply(
+    work: &Work,
+    need_key: bool,
+    queue_wait: Duration,
+    action: &[f32],
+    frame: &mut Vec<u8>,
+) {
+    match &work.payload {
+        Payload::FeaturesV2(f) => {
+            let (flags, act): (u8, &[f32]) =
+                if need_key { (RESP_FLAG_NEED_KEYFRAME, &[]) } else { (0, action) };
+            let qw = queue_wait.as_micros().min(u32::MAX as u128) as u32;
+            encode_response_v2_into(work.client, work.id, f.seq, flags, qw, act, frame);
+        }
+        _ => encode_response_into(work.client, work.id, action, frame),
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     rt: &Runtime,
@@ -619,6 +762,7 @@ fn run_batch(
     route: Route,
     items: &[super::batcher::Item<Work>],
     sessions: &mut SessionManager,
+    codecs: &mut Decoders,
     arena: &mut BatchArena,
     metrics: &Metrics,
     clock: &ClockHandle,
@@ -626,10 +770,6 @@ fn run_batch(
     let n = items.len();
     let b = pick_batch(n, &exec.ladder);
     let dequeue = clock.now();
-    arena.queue_waits.clear();
-    arena
-        .queue_waits
-        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
 
     // compile-on-first-use per ladder entry
     if !exec.exes.contains_key(&b) {
@@ -644,17 +784,51 @@ fn run_batch(
     let in_spec = &exe.spec.inputs[1];
     let per_item: usize = in_spec.shape[1..].iter().product();
     let t_pack = clock.now();
+    // populate the queue-wait scratch only after `begin` (which clears it):
+    // the reply loop indexes it per item
     arena.begin(n, b, per_item);
+    arena
+        .queue_waits
+        .extend(items.iter().map(|i| dequeue.duration_since(i.work.received)));
     for (i, item) in items.iter().enumerate() {
         let row = arena.row_mut(i);
-        match &item.work.payload {
+        let failed = match &item.work.payload {
             Payload::RawRgba { x, data: rgba } => {
                 sessions.ingest_rgba_into(item.work.client, *x as usize, rgba, row)?;
+                false
             }
             Payload::Features { scale, data: q, .. } => {
                 anyhow::ensure!(q.len() == per_item, "feat len {} != {per_item}", q.len());
                 dequantize_features_into(*scale, q, row);
+                false
             }
+            Payload::FeaturesV2(f) => {
+                // a frame this executor cannot decode (chain break after a
+                // reconnect, stale base, corrupt payload, wrong geometry)
+                // must not kill the batch: zero the row, flag the item, and
+                // let the v2 reply demand a keyframe
+                if f.feat_len() == per_item {
+                    match codecs.decode_into(item.work.client, f, row) {
+                        Ok(()) => false,
+                        Err(e) => {
+                            debug!("codec reject for client {}: {e:#}", item.work.client);
+                            row.fill(0.0);
+                            true
+                        }
+                    }
+                } else {
+                    debug!(
+                        "codec frame geometry {} != {per_item} from client {}",
+                        f.feat_len(),
+                        item.work.client
+                    );
+                    row.fill(0.0);
+                    true
+                }
+            }
+        };
+        if failed {
+            arena.need_key[i] = true;
         }
     }
     let pack_time = clock.now().duration_since(t_pack);
@@ -689,9 +863,10 @@ fn run_batch(
     // respond from the contiguous action matrix through the pooled reply
     // frame — no per-action `.to_vec()`, no per-reply encode allocation
     for (i, item) in items.iter().enumerate() {
-        encode_response_into(
-            item.work.client,
-            item.work.id,
+        encode_reply(
+            &item.work,
+            arena.need_key[i],
+            arena.queue_waits[i],
             &actions[i * adim..(i + 1) * adim],
             &mut arena.frame,
         );

@@ -51,6 +51,27 @@ pub trait Env {
     fn state(&self) -> Vec<f64>;
 }
 
+/// A deterministic pendulum raster stream: reset the real env from
+/// `seed`, render each step to a `side`×`side` RGB frame, and return the
+/// normalised CHW planes (`3·side²` floats per frame). The unactuated
+/// swing gives consecutive frames genuine temporal redundancy — the
+/// workload the feature codec (`crate::codec`, DESIGN.md §7) exploits;
+/// both the simnet codec scenarios and `benches/codec_wire.rs` draw from
+/// this one generator so their gates measure the same stream.
+pub fn pendulum_raster_stream(seed: u64, side: usize, frames: usize) -> Vec<Vec<f32>> {
+    let mut env = Pendulum::new();
+    let mut rng = Rng::new(seed);
+    env.reset(&mut rng);
+    let mut frame = FrameRgb::new(side, side);
+    let mut out = Vec::with_capacity(frames);
+    for _ in 0..frames {
+        env.render(&mut frame);
+        out.push(frame.to_chw_norm().data);
+        env.step(&[0.0]);
+    }
+    out
+}
+
 /// Construct a task by manifest name.
 pub fn make(task: &str) -> anyhow::Result<Box<dyn Env>> {
     match task {

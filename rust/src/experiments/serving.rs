@@ -350,6 +350,9 @@ pub fn run_batch_legacy(
                 let f = dequantize_features(*scale, q);
                 dst.copy_from_slice(&f);
             }
+            Payload::FeaturesV2(_) => {
+                anyhow::bail!("codec frames are decoded by the coordinator, not this bench")
+            }
         }
     }
     // per-item action vectors scattered through a HashMap (the seed Sim
@@ -385,6 +388,9 @@ pub fn run_batch_pooled(
             Payload::Features { scale, data: q, .. } => {
                 anyhow::ensure!(q.len() == feat_dim, "feat len {} != {feat_dim}", q.len());
                 dequantize_features_into(*scale, q, row);
+            }
+            Payload::FeaturesV2(_) => {
+                anyhow::bail!("codec frames are decoded by the coordinator, not this bench")
             }
         }
     }

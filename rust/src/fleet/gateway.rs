@@ -26,7 +26,8 @@ use anyhow::{bail, Context, Result};
 use log::{debug, warn};
 
 use crate::net::framing::{
-    Hello, Msg, MSG_HELLO, MSG_REQUEST_FEAT, MSG_REQUEST_RAW, MSG_RESPONSE,
+    Hello, Msg, MSG_HELLO, MSG_REQUEST_FEAT, MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE,
+    MSG_RESPONSE_V2,
 };
 use crate::net::tcp::{read_msg, read_raw_frame, write_msg, write_raw_frame};
 use crate::util::signal::Signal;
@@ -302,7 +303,7 @@ fn gw_conn(
     let session = match &first {
         Msg::Hello(h) => h.client,
         Msg::Request(r) => r.client,
-        Msg::Response(_) => bail!("client opened with a response frame"),
+        Msg::Response(_) | Msg::ResponseV2(_) => bail!("client opened with a response frame"),
     };
 
     // consistent-hash placement, re-routing around shards that refuse the
@@ -362,11 +363,21 @@ fn pump_session(
     shutdown: &Arc<AtomicBool>,
 ) -> Result<()> {
     // the gateway speaks for the fleet: ack the opening hello with the
-    // assigned shard before any traffic flows
+    // assigned shard before any traffic flows. Because the shard's own
+    // hello ack is filtered off the return path, the gateway must apply
+    // the same codec-negotiation rule the shard reader does (echo known
+    // ids, decline unknown ones to flat) — otherwise a shard's decline
+    // could never reach a fleet client
     if let Msg::Hello(h) = first {
+        let codec = if crate::codec::CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
         write_msg(
             client,
-            &Msg::Hello(Hello { client: h.client, split: h.split, shard: Some(shard_id.0) }),
+            &Msg::Hello(Hello {
+                client: h.client,
+                split: h.split,
+                codec,
+                shard: Some(shard_id.0),
+            }),
         )?;
     }
     write_msg(&mut upstream, first)?;
@@ -394,12 +405,12 @@ fn pump_session(
                         match frame[0] {
                             // shard-side hello acks stay internal to the fleet
                             MSG_HELLO => continue,
-                            MSG_RESPONSE => {
+                            MSG_RESPONSE | MSG_RESPONSE_V2 => {
                                 pump_counters
                                     .forwarded_responses
                                     .fetch_add(1, Ordering::SeqCst);
                             }
-                            MSG_REQUEST_RAW | MSG_REQUEST_FEAT => {}
+                            MSG_REQUEST_RAW | MSG_REQUEST_FEAT | MSG_REQUEST_FEAT_V2 => {}
                             // a corrupt/version-skewed shard must surface at
                             // the gateway boundary, not be relayed onward
                             other => {
@@ -428,8 +439,10 @@ fn pump_session(
                 break; // client done
             }
             match frame[0] {
-                MSG_REQUEST_RAW | MSG_REQUEST_FEAT => counters.count_request(shard_id),
-                MSG_HELLO | MSG_RESPONSE => {}
+                MSG_REQUEST_RAW | MSG_REQUEST_FEAT | MSG_REQUEST_FEAT_V2 => {
+                    counters.count_request(shard_id)
+                }
+                MSG_HELLO | MSG_RESPONSE | MSG_RESPONSE_V2 => {}
                 other => anyhow::bail!("client sent unknown frame type {other}"),
             }
             write_raw_frame(&mut upstream, &frame)
@@ -486,7 +499,7 @@ mod tests {
         let gw = gateway_over(&[&s0, &s1]);
 
         let mut conn = TcpStream::connect(gw.addr).unwrap();
-        write_msg(&mut conn, &Msg::Hello(Hello { client: 5, split: false, shard: None }))
+        write_msg(&mut conn, &Msg::Hello(Hello { client: 5, split: false, codec: 0, shard: None }))
             .unwrap();
         let ack = read_msg(&mut conn).unwrap().unwrap();
         let assigned = match ack {
@@ -532,7 +545,7 @@ mod tests {
         gw.set_shard_state(ShardId(0), ShardState::Down);
 
         let mut conn = TcpStream::connect(gw.addr).unwrap();
-        write_msg(&mut conn, &Msg::Hello(Hello { client: 1, split: false, shard: None }))
+        write_msg(&mut conn, &Msg::Hello(Hello { client: 1, split: false, codec: 0, shard: None }))
             .unwrap();
         // gateway closes without an ack
         assert!(matches!(read_msg(&mut conn), Ok(None) | Err(_)));
@@ -565,7 +578,7 @@ mod tests {
             let mut conn = TcpStream::connect(gw.addr).unwrap();
             write_msg(
                 &mut conn,
-                &Msg::Hello(Hello { client: session, split: false, shard: None }),
+                &Msg::Hello(Hello { client: session, split: false, codec: 0, shard: None }),
             )
             .unwrap();
             match read_msg(&mut conn).unwrap() {

@@ -10,7 +10,9 @@
 //!   the split-policy serving [`coordinator`], the sharded serving
 //!   [`fleet`] (consistent-hash gateway, shard health/draining, merged
 //!   fleet metrics), the OpenGL [`shader`] toolchain, simulated edge
-//!   [`device`]s, the shaped [`net`] stack, the deterministic [`sim`]
+//!   [`device`]s, the shaped [`net`] stack, the adaptive feature
+//!   [`codec`] (delta + entropy-packed wire format with closed-loop rate
+//!   control, DESIGN.md §7), the deterministic [`sim`]
 //!   substrate (virtual clock + chaos-scenario simnet, DESIGN.md §6),
 //!   pixel-observation [`envs`], and the generic [`rl`] trainer.
 //!
@@ -29,6 +31,7 @@ pub mod shader;
 pub mod envs;
 pub mod device;
 pub mod net;
+pub mod codec;
 pub mod sim;
 pub mod coordinator;
 pub mod fleet;

@@ -188,6 +188,8 @@ fn cmd_sharded(argv: Vec<String>) -> Result<()> {
         .opt("clients", "8", "simulated clients driven through the gateway")
         .opt("decisions", "50", "decisions per client")
         .opt("backend", "auto", "pjrt | sim | auto (pjrt when artifacts exist)")
+        .opt("mode", "server-only", "client route: server-only | split (split needs artifacts)")
+        .opt("codec", "flat", "split-route feature codec: flat | delta")
         .parse_from(argv)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let have_artifacts = default_artifact_dir().join("manifest.json").exists();
@@ -204,21 +206,34 @@ fn cmd_sharded(argv: Vec<String>) -> Result<()> {
         other => anyhow::bail!("bad backend {other} (pjrt|sim|auto)"),
     };
     let sim = matches!(backend, Backend::Sim(_));
+    let mode = match a.str("mode").as_str() {
+        "server-only" | "full" => Route::Full,
+        "split" => Route::Split,
+        other => anyhow::bail!("bad mode {other} (server-only|split)"),
+    };
+    let codec = miniconv::codec::CodecId::parse(&a.str("codec"))?;
+    anyhow::ensure!(
+        mode == Route::Full || !sim,
+        "split mode needs AOT artifacts (the sim backend serves raw frames only)"
+    );
     let fleet = launch_local(FleetConfig {
         shards: a.usize("shards"),
         server: ServerConfig { backend, ..ServerConfig::default() },
         ..FleetConfig::default()
     })?;
     println!(
-        "gateway on {} fronting {} shards ({})",
+        "gateway on {} fronting {} shards ({}, {} route, {} codec)",
         fleet.addr(),
         fleet.n_shards(),
-        if sim { "sim backend" } else { "pjrt backend" }
+        if sim { "sim backend" } else { "pjrt backend" },
+        mode.name(),
+        codec.name()
     );
     let cfg = ClientConfig {
-        mode: Route::Full,
+        mode,
         decisions: a.usize("decisions"),
         obs_x: if sim { Some(24) } else { None },
+        codec,
         ..ClientConfig::default()
     };
     let t0 = std::time::Instant::now();
@@ -230,6 +245,15 @@ fn cmd_sharded(argv: Vec<String>) -> Result<()> {
         reports.iter().map(|r| r.decisions).sum::<usize>(),
         lat.median() * 1e3,
         lat.p95() * 1e3
+    );
+    let bytes: u64 = reports.iter().map(|r| r.bytes_sent).sum();
+    let frames: usize = reports.iter().map(|r| r.decisions + r.errors).sum();
+    println!(
+        "wire: {bytes} B sent ({:.0} B/frame); codec: {} keyframes, {} deltas, {} re-keys",
+        bytes as f64 / frames.max(1) as f64,
+        reports.iter().map(|r| r.keyframes).sum::<u64>(),
+        reports.iter().map(|r| r.deltas).sum::<u64>(),
+        reports.iter().map(|r| r.need_keyframes).sum::<u64>(),
     );
     fleet.snapshot().table(elapsed).print();
     fleet.shutdown();

@@ -1,10 +1,19 @@
 //! Wire protocol for the split-policy client/server loop.
 //!
-//! Both observation formats are **uncompressed uint8 buffers**, exactly as
-//! the paper specifies (§4.2): a server-only request carries the full RGBA
-//! frame (4·X² bytes); a split request carries the K-channel feature map
-//! (K·(X/2ⁿ)² bytes) quantised to u8 with a per-message scale (features are
-//! post-ReLU, so [0, scale] covers them).
+//! The v1 observation formats are **uncompressed uint8 buffers**, exactly
+//! as the paper specifies (§4.2): a server-only request carries the full
+//! RGBA frame (4·X² bytes); a split request carries the K-channel feature
+//! map (K·(X/2ⁿ)² bytes) quantised to u8 with a per-message scale
+//! (features are post-ReLU, so [0, scale] covers them).
+//!
+//! Sessions that negotiate a codec in the `Hello` handshake (the `codec`
+//! byte, echoed by the server's ack) instead ship features as versioned
+//! [`Payload::FeaturesV2`] frames — codec id, mode flags, quantisation
+//! ceiling, and chain sequence number alongside the entropy-packed payload
+//! (`crate::codec`, DESIGN.md §7) — and receive [`ResponseV2`] acks
+//! carrying the codec feedback (need-keyframe + queue wait) that closes
+//! the rate-control loop. Raw-route and flat-codec clients keep the v1
+//! frames byte for byte.
 //!
 //! Frame layout: `[u32 len][u8 msg_type][payload…]`, little-endian.
 
@@ -14,16 +23,56 @@ pub const MSG_REQUEST_RAW: u8 = 1;
 pub const MSG_REQUEST_FEAT: u8 = 2;
 pub const MSG_RESPONSE: u8 = 3;
 pub const MSG_HELLO: u8 = 4;
+/// Versioned feature request (negotiated codec; see `crate::codec`).
+pub const MSG_REQUEST_FEAT_V2: u8 = 5;
+/// Response with codec feedback (ack of a [`MSG_REQUEST_FEAT_V2`] frame).
+pub const MSG_RESPONSE_V2: u8 = 6;
+
+/// [`ResponseV2::flags`] bit: the server could not decode the frame
+/// (chain break, stale base, corrupt payload) — the client must send a
+/// keyframe next.
+pub const RESP_FLAG_NEED_KEYFRAME: u8 = 1;
 
 /// Maximum accepted frame body (64 MB — a 4000² RGBA frame is 64 MB).
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// A versioned feature frame: the negotiated-codec wire format
+/// (DESIGN.md §7). `data` is the codec payload — a raw or entropy-packed
+/// keyframe, or packed residuals against the previous frame — and decodes
+/// through `crate::codec::Decoders` into the exact `[0, qmax]` quantised
+/// frame the client produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureFrame {
+    pub c: u16,
+    pub h: u16,
+    pub w: u16,
+    /// codec id (`crate::codec::{CODEC_FLAT, CODEC_DELTA}`)
+    pub codec: u8,
+    /// mode flags (`crate::codec::{FLAG_KEYFRAME, FLAG_RAW}`)
+    pub flags: u8,
+    /// quantisation ceiling: values live in `[0, qmax]`
+    pub qmax: u8,
+    /// chain sequence number (deltas must advance it by exactly one)
+    pub seq: u32,
+    pub scale: f32,
+    pub data: Vec<u8>,
+}
+
+impl FeatureFrame {
+    /// Flattened feature element count (`c·h·w`).
+    pub fn feat_len(&self) -> usize {
+        self.c as usize * self.h as usize * self.w as usize
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     /// Full RGBA observation, x·x·4 bytes (server-only pipeline).
     RawRgba { x: u16, data: Vec<u8> },
-    /// Quantised feature map (split pipeline).
+    /// Quantised feature map (split pipeline, flat v1 format).
     Features { c: u16, h: u16, w: u16, scale: f32, data: Vec<u8> },
+    /// Codec-encoded feature map (split pipeline, negotiated format).
+    FeaturesV2(FeatureFrame),
 }
 
 impl Payload {
@@ -33,6 +82,7 @@ impl Payload {
         match self {
             Payload::RawRgba { data, .. } => data.len(),
             Payload::Features { data, .. } => data.len(),
+            Payload::FeaturesV2(f) => f.data.len(),
         }
     }
 }
@@ -56,10 +106,37 @@ pub struct Hello {
     pub client: u32,
     /// "server-only" | "split"
     pub split: bool,
+    /// Feature-codec negotiation: the codec id the client requests for its
+    /// split-route frames; the server's ack echoes the id it accepts (a
+    /// server that does not know the id echoes `CODEC_FLAT`, and the
+    /// session falls back to the v1 format). Raw-route sessions leave it 0.
+    pub codec: u8,
     /// Shard this session was pinned to. `None` on a client's opening hello;
     /// set by the fleet gateway (and by shard servers in their hello acks)
     /// so clients and health probes can observe placement.
     pub shard: Option<u16>,
+}
+
+/// Response carrying codec feedback — the ack half of the rate-control
+/// loop. `seq` echoes the request frame's chain sequence number;
+/// `queue_wait_us` is the server-side queue wait (subtracted from the
+/// client's latency sample so server congestion never masquerades as link
+/// congestion).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseV2 {
+    pub client: u32,
+    pub id: u64,
+    pub seq: u32,
+    /// [`RESP_FLAG_NEED_KEYFRAME`]
+    pub flags: u8,
+    pub queue_wait_us: u32,
+    pub action: Vec<f32>,
+}
+
+impl ResponseV2 {
+    pub fn need_keyframe(&self) -> bool {
+        self.flags & RESP_FLAG_NEED_KEYFRAME != 0
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +144,7 @@ pub enum Msg {
     Hello(Hello),
     Request(Request),
     Response(Response),
+    ResponseV2(ResponseV2),
 }
 
 fn put_u16(v: &mut Vec<u8>, x: u16) {
@@ -130,6 +208,7 @@ impl Msg {
                 out.push(MSG_HELLO);
                 put_u32(out, h.client);
                 out.push(h.split as u8);
+                out.push(h.codec);
                 match h.shard {
                     Some(s) => {
                         out.push(1);
@@ -156,11 +235,38 @@ impl Msg {
                     put_f32(out, *scale);
                     out.extend_from_slice(data);
                 }
+                Payload::FeaturesV2(f) => {
+                    out.push(MSG_REQUEST_FEAT_V2);
+                    put_u32(out, r.client);
+                    put_u64(out, r.id);
+                    put_u16(out, f.c);
+                    put_u16(out, f.h);
+                    put_u16(out, f.w);
+                    out.push(f.codec);
+                    out.push(f.flags);
+                    out.push(f.qmax);
+                    put_u32(out, f.seq);
+                    put_f32(out, f.scale);
+                    put_u32(out, f.data.len() as u32);
+                    out.extend_from_slice(&f.data);
+                }
             },
             Msg::Response(r) => {
                 out.push(MSG_RESPONSE);
                 put_u32(out, r.client);
                 put_u64(out, r.id);
+                put_u16(out, r.action.len() as u16);
+                for a in &r.action {
+                    put_f32(out, *a);
+                }
+            }
+            Msg::ResponseV2(r) => {
+                out.push(MSG_RESPONSE_V2);
+                put_u32(out, r.client);
+                put_u64(out, r.id);
+                put_u32(out, r.seq);
+                out.push(r.flags);
+                put_u32(out, r.queue_wait_us);
                 put_u16(out, r.action.len() as u16);
                 for a in &r.action {
                     put_f32(out, *a);
@@ -187,12 +293,13 @@ impl Msg {
             MSG_HELLO => {
                 let client = r.u32()?;
                 let split = r.take(1)?[0] != 0;
+                let codec = r.take(1)?[0];
                 let shard = match r.take(1)?[0] {
                     0 => None,
                     1 => Some(r.u16()?),
                     other => bail!("bad shard tag {other}"),
                 };
-                Msg::Hello(Hello { client, split, shard })
+                Msg::Hello(Hello { client, split, codec, shard })
             }
             MSG_REQUEST_RAW => {
                 let client = r.u32()?;
@@ -217,6 +324,40 @@ impl Msg {
                     payload: Payload::Features { c, h, w, scale, data },
                 })
             }
+            MSG_REQUEST_FEAT_V2 => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let c = r.u16()?;
+                let h = r.u16()?;
+                let w = r.u16()?;
+                let codec = r.take(1)?[0];
+                let flags = r.take(1)?[0];
+                let qmax = r.take(1)?[0];
+                let seq = r.u32()?;
+                let scale = r.f32()?;
+                let dlen = r.u32()? as usize;
+                // a codec payload never exceeds the flat frame (the encoder
+                // falls back to a raw keyframe), so this bound also rejects
+                // forged lengths before the allocation
+                let feat_len = c as usize * h as usize * w as usize;
+                ensure!(dlen <= feat_len, "codec payload {dlen} > flat frame {feat_len}");
+                let data = r.take(dlen)?.to_vec();
+                Msg::Request(Request {
+                    client,
+                    id,
+                    payload: Payload::FeaturesV2(FeatureFrame {
+                        c,
+                        h,
+                        w,
+                        codec,
+                        flags,
+                        qmax,
+                        seq,
+                        scale,
+                        data,
+                    }),
+                })
+            }
             MSG_RESPONSE => {
                 let client = r.u32()?;
                 let id = r.u64()?;
@@ -226,6 +367,19 @@ impl Msg {
                     action.push(r.f32()?);
                 }
                 Msg::Response(Response { client, id, action })
+            }
+            MSG_RESPONSE_V2 => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let seq = r.u32()?;
+                let flags = r.take(1)?[0];
+                let queue_wait_us = r.u32()?;
+                let n = r.u16()? as usize;
+                let mut action = Vec::with_capacity(n);
+                for _ in 0..n {
+                    action.push(r.f32()?);
+                }
+                Msg::ResponseV2(ResponseV2 { client, id, seq, flags, queue_wait_us, action })
             }
             other => bail!("unknown message type {other}"),
         };
@@ -269,6 +423,34 @@ pub fn encode_response_into(client: u32, id: u64, action: &[f32], out: &mut Vec<
     out.push(MSG_RESPONSE);
     put_u32(out, client);
     put_u64(out, id);
+    put_u16(out, action.len() as u16);
+    for a in action {
+        put_f32(out, *a);
+    }
+    seal_frame(out);
+}
+
+/// Encode a codec-feedback response frame straight into a pooled buffer
+/// (the [`encode_response_into`] analogue for sessions on the v2 format).
+/// Byte-identical to `Msg::ResponseV2(ResponseV2 { .. }).encode()`.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_response_v2_into(
+    client: u32,
+    id: u64,
+    seq: u32,
+    flags: u8,
+    queue_wait_us: u32,
+    action: &[f32],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]);
+    out.push(MSG_RESPONSE_V2);
+    put_u32(out, client);
+    put_u64(out, id);
+    put_u32(out, seq);
+    out.push(flags);
+    put_u32(out, queue_wait_us);
     put_u16(out, action.len() as u16);
     for a in action {
         put_f32(out, *a);
@@ -348,14 +530,109 @@ mod tests {
     fn response_and_hello_roundtrip() {
         for msg in [
             Msg::Response(Response { client: 1, id: 9, action: vec![0.5, -1.25] }),
-            Msg::Hello(Hello { client: 12, split: true, shard: None }),
-            Msg::Hello(Hello { client: 12, split: false, shard: None }),
-            Msg::Hello(Hello { client: 7, split: true, shard: Some(3) }),
-            Msg::Hello(Hello { client: 7, split: false, shard: Some(u16::MAX) }),
+            Msg::Hello(Hello { client: 12, split: true, codec: 0, shard: None }),
+            Msg::Hello(Hello { client: 12, split: false, codec: 0, shard: None }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, shard: Some(3) }),
+            Msg::Hello(Hello { client: 7, split: false, codec: 0, shard: Some(u16::MAX) }),
         ] {
             let enc = msg.encode();
             assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn features_v2_roundtrip_and_wire_bytes() {
+        let frame = FeatureFrame {
+            c: 4,
+            h: 11,
+            w: 11,
+            codec: 1,
+            flags: 1,
+            qmax: 63,
+            seq: 42,
+            scale: 2.5,
+            data: vec![9; 37],
+        };
+        let msg = Msg::Request(Request { client: 3, id: 8, payload: Payload::FeaturesV2(frame) });
+        let enc = msg.encode();
+        // 4 len + 1 type + 4 client + 8 id + 6 dims + 3 codec/flags/qmax +
+        // 4 seq + 4 scale + 4 dlen + body
+        assert_eq!(enc.len(), 4 + 1 + 4 + 8 + 6 + 3 + 4 + 4 + 4 + 37);
+        let dec = Msg::decode(&enc[4..]).unwrap();
+        assert_eq!(dec, msg);
+        if let Msg::Request(r) = dec {
+            // only the codec payload counts against the bandwidth model
+            assert_eq!(r.payload.wire_bytes(), 37);
+        }
+    }
+
+    #[test]
+    fn features_v2_rejects_payload_longer_than_the_flat_frame() {
+        let frame = FeatureFrame {
+            c: 1,
+            h: 2,
+            w: 2,
+            codec: 1,
+            flags: 3,
+            qmax: 255,
+            seq: 1,
+            scale: 1.0,
+            data: vec![0; 5], // 5 > c·h·w = 4
+        };
+        let msg = Msg::Request(Request { client: 0, id: 0, payload: Payload::FeaturesV2(frame) });
+        let enc = msg.encode();
+        assert!(Msg::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn response_v2_roundtrip_and_flags() {
+        for msg in [
+            Msg::ResponseV2(ResponseV2 {
+                client: 5,
+                id: 77,
+                seq: 12,
+                flags: 0,
+                queue_wait_us: 340,
+                action: vec![0.25, -1.0],
+            }),
+            Msg::ResponseV2(ResponseV2 {
+                client: 5,
+                id: 78,
+                seq: 13,
+                flags: RESP_FLAG_NEED_KEYFRAME,
+                queue_wait_us: 0,
+                action: vec![],
+            }),
+        ] {
+            let enc = msg.encode();
+            assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
+        }
+        let r = ResponseV2 {
+            client: 0,
+            id: 0,
+            seq: 0,
+            flags: RESP_FLAG_NEED_KEYFRAME,
+            queue_wait_us: 0,
+            action: vec![],
+        };
+        assert!(r.need_keyframe());
+        assert!(!ResponseV2 { flags: 0, ..r }.need_keyframe());
+    }
+
+    #[test]
+    fn encode_response_v2_into_matches_msg_encode() {
+        let mut buf = vec![0x55; 9]; // stale content must be discarded
+        encode_response_v2_into(12, 99, 7, RESP_FLAG_NEED_KEYFRAME, 2500, &[0.5], &mut buf);
+        let via_msg = Msg::ResponseV2(ResponseV2 {
+            client: 12,
+            id: 99,
+            seq: 7,
+            flags: RESP_FLAG_NEED_KEYFRAME,
+            queue_wait_us: 2500,
+            action: vec![0.5],
+        })
+        .encode();
+        assert_eq!(buf, via_msg);
     }
 
     #[test]
@@ -405,7 +682,7 @@ mod tests {
     #[test]
     fn encode_into_reuses_buffer_and_matches_encode() {
         let msgs = [
-            Msg::Hello(Hello { client: 7, split: true, shard: Some(3) }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, shard: Some(3) }),
             Msg::Request(Request {
                 client: 1,
                 id: 2,
@@ -416,7 +693,30 @@ mod tests {
                 id: 3,
                 payload: Payload::RawRgba { x: 2, data: vec![9; 16] },
             }),
+            Msg::Request(Request {
+                client: 2,
+                id: 4,
+                payload: Payload::FeaturesV2(FeatureFrame {
+                    c: 2,
+                    h: 3,
+                    w: 3,
+                    codec: 1,
+                    flags: 0,
+                    qmax: 127,
+                    seq: 5,
+                    scale: 0.75,
+                    data: vec![3; 7],
+                }),
+            }),
             Msg::Response(Response { client: 4, id: 9, action: vec![0.5, -1.0, 2.0] }),
+            Msg::ResponseV2(ResponseV2 {
+                client: 4,
+                id: 10,
+                seq: 5,
+                flags: 0,
+                queue_wait_us: 12,
+                action: vec![1.5],
+            }),
         ];
         let mut buf = Vec::new();
         for m in &msgs {

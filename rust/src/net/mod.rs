@@ -8,8 +8,9 @@ pub mod shaped;
 pub mod tcp;
 
 pub use framing::{
-    dequantize_features, dequantize_features_into, encode_response_into, quantize_features,
-    quantize_features_into, Hello, Msg, Payload, Request, Response,
+    dequantize_features, dequantize_features_into, encode_response_into,
+    encode_response_v2_into, quantize_features, quantize_features_into, FeatureFrame, Hello, Msg,
+    Payload, Request, Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
 };
 pub use shaped::{LinkModel, ShapedWriter, TokenBucket};
 pub use tcp::{read_msg, read_raw_frame, write_frame, write_msg, write_raw_frame};

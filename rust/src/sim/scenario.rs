@@ -21,13 +21,16 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::codec::{self, CodecId, Decoders, Encoder, RateConfig, RateController, CODEC_DELTA};
 use crate::coordinator::batcher::{BatchCollector, BatchPolicy, Item};
 use crate::coordinator::router::Route;
 use crate::coordinator::session::SessionManager;
 use crate::device::thermal::{ClockedThermal, ThermalModel};
 use crate::fleet::health::{probe_transition, HealthConfig, ProbeStats};
 use crate::fleet::topology::{ShardId, ShardState, Topology};
-use crate::net::framing::{Hello, Msg, Payload, Request, Response};
+use crate::net::framing::{
+    FeatureFrame, Hello, Msg, Payload, Request, Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
+};
 use crate::util::simclock::EventQueue;
 use crate::util::stats::Samples;
 
@@ -84,6 +87,15 @@ pub struct ScenarioConfig {
     pub obs_x: usize,
     /// transmitted feature block for split clients: (c, h, w)
     pub feat: (usize, usize, usize),
+    /// feature-frame codec for split clients (raw clients ignore it)
+    pub codec: CodecId,
+    /// rate-controller tuning when `codec == Delta`
+    pub rate: RateConfig,
+    /// drive split-client payloads from a real pendulum raster stream
+    /// (`feat` must be `(3, p, p)`): the env renders, the frame crops to
+    /// p×p RGB planes, and consecutive decisions carry genuine temporal
+    /// redundancy for the codec. `false` keeps the synthetic per-id fill.
+    pub pendulum_stream: bool,
     /// modelled on-device encode time per split decision, seconds
     pub encode_j: f64,
     /// idle time between a response and the next decision
@@ -126,6 +138,9 @@ impl Default for ScenarioConfig {
             decisions: 8,
             obs_x: 4,
             feat: (4, 3, 3),
+            codec: CodecId::Flat,
+            rate: RateConfig::default(),
+            pendulum_stream: false,
             encode_j: 0.002,
             think: 0.0,
             req_timeout: 0.25,
@@ -165,6 +180,26 @@ pub struct ClientOutcome {
     pub hello_acks: Vec<u64>,
     /// end-to-end decision latencies, virtual seconds
     pub latencies: Samples,
+    /// total request payload bytes put on the wire (retransmits included)
+    pub bytes_sent: u64,
+    /// request frames put on the wire (retransmits included)
+    pub frames_sent: u64,
+    /// codec keyframes sent (delta codec only)
+    pub keyframes: u64,
+    /// codec delta frames sent
+    pub deltas: u64,
+    /// server re-key demands observed (frames the shard could not decode)
+    pub need_keyframes: u64,
+    /// v2 actions whose decoded-content checksum did not echo the sent
+    /// frame — the stale-base oracle; any nonzero value means a shard
+    /// decoded a delta against the wrong reference
+    pub payload_mismatches: u64,
+    /// rate controller's final quantisation ceiling (0 = flat codec)
+    pub final_qmax: u8,
+    /// quantisation steps taken toward coarser levels
+    pub quant_coarser: u64,
+    /// quantisation steps taken back toward finer levels
+    pub quant_finer: u64,
 }
 
 #[derive(Debug, Default)]
@@ -180,6 +215,11 @@ pub struct ShardOutcome {
     pub rejected: u64,
     /// torn/undecodable frames surfaced at this shard
     pub frame_errors: u64,
+    /// codec frames that reached the decoder
+    pub codec_frames: u64,
+    /// codec frames the decoder refused (chain break / stale base /
+    /// corrupt payload) — answered with `need_keyframe`
+    pub codec_rejects: u64,
     pub throttled_batches: u64,
     pub max_temp: f64,
     pub final_throttled: bool,
@@ -262,7 +302,7 @@ enum Ev {
     ShardWake(usize),
     /// modelled execution finished: replies go on the wire — but only if
     /// the shard incarnation that formed the batch is still the one alive
-    ExecDone { s: usize, incarnation: u64, replies: Vec<(u32, u64, f32)> },
+    ExecDone { s: usize, incarnation: u64, replies: Vec<SimReply> },
     Probe,
     /// index into cfg.faults
     Fault(usize),
@@ -271,6 +311,12 @@ enum Ev {
 struct Pending {
     id: u64,
     t0: f64,
+    /// payload bytes of this request's most recent transmission
+    wire_bytes: usize,
+    /// expected v2 action — the decoded-content checksum oracle: the shard
+    /// answers codec frames with a checksum of the quantised bytes it
+    /// reconstructed, so a stale-base decode is detectable end to end
+    expect: Option<f32>,
 }
 
 struct ClientSim {
@@ -282,6 +328,12 @@ struct ClientSim {
     pending: Option<Pending>,
     done: usize,
     finished: bool,
+    /// per-decision pendulum feature frames (empty = synthetic fill)
+    stream: Vec<Vec<f32>>,
+    /// delta-codec state (encoder + rate controller); None = flat v1
+    delta: Option<(Encoder, RateController)>,
+    /// pooled quantisation scratch
+    qbuf: Vec<u8>,
     out: ClientOutcome,
 }
 
@@ -289,6 +341,17 @@ struct SimWork {
     client: u32,
     id: u64,
     payload: Payload,
+}
+
+/// One shard reply scheduled for the end of a modelled execution window.
+#[derive(Debug)]
+struct SimReply {
+    client: u32,
+    id: u64,
+    action: f32,
+    /// `Some((seq, need_keyframe, queue_wait_us))` — answer as a v2
+    /// response with codec feedback; `None` — plain v1 response
+    v2: Option<(u32, bool, u32)>,
 }
 
 struct ShardSim {
@@ -300,6 +363,9 @@ struct ShardSim {
     incarnation: u64,
     collector: BatchCollector<SimWork>,
     sessions: SessionManager,
+    /// per-client codec decoder state; replaced wholesale on restart so a
+    /// fresh incarnation can never decode against a stale delta base
+    codecs: Decoders,
     obs_scratch: Vec<f32>,
     busy_until: f64,
     thermal: Option<ClockedThermal>,
@@ -337,6 +403,26 @@ fn msg_body(m: &Msg) -> Vec<u8> {
     framed[4..].to_vec()
 }
 
+/// The per-client pendulum raster stream: the shared generator
+/// (`envs::pendulum_raster_stream`) under a client-mixed seed, so every
+/// split client swings its own deterministic pendulum.
+fn pendulum_feature_stream(seed: u64, client: u64, side: usize, frames: usize) -> Vec<Vec<f32>> {
+    crate::envs::pendulum_raster_stream(
+        seed ^ client.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        side,
+        frames,
+    )
+}
+
+/// The sim shard's action for a decoded codec frame: a checksum of the
+/// reconstructed quantised bytes, folded into a value the client can
+/// predict from what it sent. A stale-base decode produces different
+/// bytes, a different checksum, and a `payload_mismatches` count.
+fn checksum_action(frame: &[u8]) -> f32 {
+    let sum: u32 = frame.iter().map(|&b| b as u32).sum();
+    0.25 + (sum % 251) as f32 * 1e-3
+}
+
 /// Run one scenario to completion. See the module docs for the model.
 pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
     let mut w = World::new(cfg.clone())?;
@@ -352,6 +438,12 @@ impl World {
         }
         if cfg.raw_clients + cfg.split_clients == 0 {
             bail!("a scenario needs at least one client");
+        }
+        if cfg.pendulum_stream && (cfg.feat.0 != 3 || cfg.feat.1 != cfg.feat.2) {
+            bail!(
+                "pendulum_stream ships 3 square RGB planes; feat {:?} must be (3, p, p)",
+                cfg.feat
+            );
         }
         let mut net = SimNet::new(cfg.seed);
         let mut owners = Vec::new();
@@ -374,6 +466,7 @@ impl World {
                 incarnation: 0,
                 collector: BatchCollector::new(cfg.policy, cfg.max_depth),
                 sessions: SessionManager::new(),
+                codecs: Decoders::new(),
                 obs_scratch: Vec::new(),
                 busy_until: 0.0,
                 thermal: None,
@@ -393,8 +486,16 @@ impl World {
             });
             let down = net.lane(&peer, &name, cfg.reply_link);
             owners.push(Owner::Client(c));
+            let split = c >= cfg.raw_clients;
+            let stream = if cfg.pendulum_stream && split {
+                pendulum_feature_stream(cfg.seed, c as u64, cfg.feat.1, cfg.decisions)
+            } else {
+                Vec::new()
+            };
+            let delta = (split && cfg.codec == CodecId::Delta)
+                .then(|| (Encoder::new(), RateController::new(cfg.rate.clone())));
             clients.push(ClientSim {
-                mode: if c < cfg.raw_clients { Route::Full } else { Route::Split },
+                mode: if split { Route::Split } else { Route::Full },
                 up,
                 down,
                 epoch: 0,
@@ -402,6 +503,9 @@ impl World {
                 pending: None,
                 done: 0,
                 finished: false,
+                stream,
+                delta,
+                qbuf: Vec::new(),
                 out: ClientOutcome { hello_acks: vec![0], ..ClientOutcome::default() },
             });
         }
@@ -481,7 +585,18 @@ impl World {
             .collect();
         ScenarioReport {
             log: self.log.render(),
-            clients: self.clients.into_iter().map(|c| c.out).collect(),
+            clients: self
+                .clients
+                .into_iter()
+                .map(|mut c| {
+                    if let Some((_, rate)) = &c.delta {
+                        c.out.final_qmax = rate.qmax();
+                        c.out.quant_coarser = rate.coarser_steps;
+                        c.out.quant_finer = rate.finer_steps;
+                    }
+                    c.out
+                })
+                .collect(),
             shards: self.shards.into_iter().map(|s| s.out).collect(),
             gateway: self.gw.out,
             shard_states,
@@ -527,7 +642,8 @@ impl World {
             return;
         }
         let (epoch, up, split) = (cl.epoch, cl.up, cl.mode == Route::Split);
-        let body = msg_body(&Msg::Hello(Hello { client: c as u32, split, shard: None }));
+        let codec = if cl.delta.is_some() { CODEC_DELTA } else { 0 };
+        let body = msg_body(&Msg::Hello(Hello { client: c as u32, split, codec, shard: None }));
         self.log.record(t, "hello", &format!("client={c} epoch={epoch}"));
         self.net.send(up, t, &body, &mut self.log);
         self.events
@@ -545,6 +661,12 @@ impl World {
         cl.epoch += 1;
         cl.out.hello_acks.push(0);
         cl.out.reconnects += 1;
+        // a new connection epoch is a new session incarnation: the codec
+        // chain restarts with a keyframe and the controller notes the loss
+        if let Some((encoder, rate)) = &mut cl.delta {
+            encoder.force_keyframe();
+            rate.on_loss();
+        }
         let (epoch, up, down) = (cl.epoch, cl.up, cl.down);
         self.net.flush(up);
         self.net.flush(down);
@@ -584,7 +706,7 @@ impl World {
         }
         let id = cl.next_id;
         cl.next_id += 1;
-        cl.pending = Some(Pending { id, t0: t });
+        cl.pending = Some(Pending { id, t0: t, wire_bytes: 0, expect: None });
         let delay = if cl.mode == Route::Split { self.cfg.encode_j } else { 0.0 };
         if delay > 0.0 {
             self.log
@@ -602,22 +724,92 @@ impl World {
             let Some(p) = &cl.pending else { return };
             let id = p.id;
             let fill = ((c as u64 * 131 + id * 17) % 251) as u8;
+            let (fc, fh, fw) = self.cfg.feat;
+            let mut expect = None;
             let payload = match cl.mode {
                 Route::Full => {
                     let x = self.cfg.obs_x;
                     Payload::RawRgba { x: x as u16, data: vec![fill; 4 * x * x] }
                 }
                 Route::Split => {
-                    let (fc, fh, fw) = self.cfg.feat;
-                    Payload::Features {
-                        c: fc as u16,
-                        h: fh as u16,
-                        w: fw as u16,
-                        scale: 1.0,
-                        data: vec![fill; fc * fh * fw],
+                    let n = fc * fh * fw;
+                    match &mut cl.delta {
+                        Some((encoder, rate)) => {
+                            // negotiated delta codec: quantise at the
+                            // controller's ceiling, encode against the
+                            // previous frame. A retransmit after a
+                            // reconnect re-encodes — the reconnect already
+                            // forced a keyframe, so the fresh incarnation
+                            // never receives a delta it cannot ground.
+                            if rate.keyframe_due() {
+                                encoder.force_keyframe();
+                            }
+                            let qmax = rate.qmax();
+                            let synth;
+                            let floats: &[f32] = match cl.stream.get(id as usize) {
+                                Some(fr) => fr.as_slice(),
+                                None => {
+                                    synth = vec![fill as f32 / 255.0; n];
+                                    &synth
+                                }
+                            };
+                            let scale = codec::quantize_into(floats, qmax, &mut cl.qbuf);
+                            let mut data = Vec::new();
+                            let (flags, seq) = encoder.encode_into(&cl.qbuf, &mut data);
+                            let key = flags & codec::FLAG_KEYFRAME != 0;
+                            rate.frame_sent(key);
+                            if key {
+                                cl.out.keyframes += 1;
+                            } else {
+                                cl.out.deltas += 1;
+                            }
+                            // the decoded-content oracle: the shard echoes
+                            // this checksum of the quantised bytes
+                            expect = Some(checksum_action(&cl.qbuf));
+                            Payload::FeaturesV2(FeatureFrame {
+                                c: fc as u16,
+                                h: fh as u16,
+                                w: fw as u16,
+                                codec: CODEC_DELTA,
+                                flags,
+                                qmax,
+                                seq,
+                                scale,
+                                data,
+                            })
+                        }
+                        None => match cl.stream.get(id as usize) {
+                            Some(fr) => {
+                                // flat codec over the same pendulum stream:
+                                // the apples-to-apples baseline the 1 Mb/s
+                                // acceptance scenario compares against
+                                let (scale, data) = crate::net::quantize_features(fr);
+                                Payload::Features {
+                                    c: fc as u16,
+                                    h: fh as u16,
+                                    w: fw as u16,
+                                    scale,
+                                    data,
+                                }
+                            }
+                            None => Payload::Features {
+                                c: fc as u16,
+                                h: fh as u16,
+                                w: fw as u16,
+                                scale: 1.0,
+                                data: vec![fill; n],
+                            },
+                        },
                     }
                 }
             };
+            let wire_b = payload.wire_bytes();
+            cl.out.bytes_sent += wire_b as u64;
+            cl.out.frames_sent += 1;
+            if let Some(p) = &mut cl.pending {
+                p.wire_bytes = wire_b;
+                p.expect = expect;
+            }
             (id, cl.up, cl.epoch, payload)
         };
         let body = msg_body(&Msg::Request(Request { client: c as u32, id, payload }));
@@ -683,38 +875,80 @@ impl World {
                 }
             }
             Msg::Response(r) => {
-                let think = self.cfg.think;
-                let cl = &mut self.clients[c];
-                if cl.finished {
-                    return;
-                }
-                let fresh = cl.pending.as_ref().is_some_and(|p| p.id == r.id);
-                if !fresh {
-                    cl.out.dup_responses += 1;
-                    self.log
-                        .record(t, "stale_response", &format!("client={c} id={}", r.id));
-                    return;
-                }
-                let t0 = cl.pending.take().unwrap().t0;
-                cl.done += 1;
-                if r.action.is_empty() {
-                    cl.out.rejected += 1;
-                    self.log.record(t, "rejected", &format!("client={c} id={}", r.id));
-                } else {
-                    cl.out.decisions += 1;
-                    cl.out.latencies.push(t - t0);
-                    self.log.record(
-                        t,
-                        "answer",
-                        &format!("client={c} id={} lat={:.6}", r.id, t - t0),
-                    );
-                }
-                self.events.push(t + think, Ev::Kick(c));
+                self.client_on_response(t, c, r.id, &r.action, None);
+            }
+            Msg::ResponseV2(r) => {
+                let feedback = (r.seq, r.need_keyframe(), r.queue_wait_us);
+                self.client_on_response(t, c, r.id, &r.action, Some(feedback));
             }
             Msg::Request(_) => {
                 self.log.record(t, "client_unexpected", &format!("client={c}"));
             }
         }
+    }
+
+    /// Shared response handling for v1 and v2 responses: id-level
+    /// de-duplication, rejection accounting, latency samples, and — for v2
+    /// acks — the codec feedback (rate-controller sample, re-key demands,
+    /// and the decoded-content checksum oracle).
+    fn client_on_response(
+        &mut self,
+        t: f64,
+        c: usize,
+        id: u64,
+        action: &[f32],
+        feedback: Option<(u32, bool, u32)>,
+    ) {
+        let think = self.cfg.think;
+        let cl = &mut self.clients[c];
+        if cl.finished {
+            return;
+        }
+        let fresh = cl.pending.as_ref().is_some_and(|p| p.id == id);
+        if !fresh {
+            cl.out.dup_responses += 1;
+            self.log
+                .record(t, "stale_response", &format!("client={c} id={id}"));
+            return;
+        }
+        let p = cl.pending.take().unwrap();
+        cl.done += 1;
+        if let Some((_seq, need_key, queue_wait_us)) = feedback {
+            // close the rate-control loop: one link-time sample per ack,
+            // and a forced keyframe whenever the shard lost the chain
+            if let Some((encoder, rate)) = &mut cl.delta {
+                rate.on_ack(p.wire_bytes, t - p.t0, queue_wait_us as f64 * 1e-6);
+                if need_key {
+                    encoder.force_keyframe();
+                    rate.on_loss();
+                }
+            }
+            if need_key {
+                cl.out.need_keyframes += 1;
+                self.log
+                    .record(t, "need_keyframe", &format!("client={c} id={id}"));
+            }
+        }
+        if action.is_empty() {
+            cl.out.rejected += 1;
+            self.log.record(t, "rejected", &format!("client={c} id={id}"));
+        } else {
+            if let (Some(exp), Some(_)) = (p.expect, feedback) {
+                if (action[0] - exp).abs() > 1e-4 {
+                    cl.out.payload_mismatches += 1;
+                    self.log.record(
+                        t,
+                        "payload_mismatch",
+                        &format!("client={c} id={id} got={:.6} want={exp:.6}", action[0]),
+                    );
+                }
+            }
+            cl.out.decisions += 1;
+            cl.out.latencies.push(t - p.t0);
+            self.log
+                .record(t, "answer", &format!("client={c} id={id} lat={:.6}", t - p.t0));
+        }
+        self.events.push(t + think, Ev::Kick(c));
     }
 
     // -- gateway ------------------------------------------------------------
@@ -753,10 +987,15 @@ impl World {
                 self.log.record(t, "pin", &format!("session={session} shard={s}"));
             }
         }
-        // the gateway speaks for the fleet: ack with the assigned shard
+        // the gateway speaks for the fleet: ack with the assigned shard,
+        // applying the same codec-negotiation rule the shard reader does
+        // (echo known ids, decline unknown ones to flat) — shard-side
+        // acks are filtered, so this ack IS the negotiation verdict
+        let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
         let ack = msg_body(&Msg::Hello(Hello {
             client: session,
             split: h.split,
+            codec,
             shard: Some(s as u16),
         }));
         let down = self.clients[session as usize].down;
@@ -764,7 +1003,12 @@ impl World {
         // forward the hello upstream; the shard's own ack must be filtered
         let up = self.shards[s].up;
         if self.shards[s].alive && self.net.is_open(up) {
-            let fwd = msg_body(&Msg::Hello(Hello { client: session, split: h.split, shard: None }));
+            let fwd = msg_body(&Msg::Hello(Hello {
+                client: session,
+                split: h.split,
+                codec: h.codec,
+                shard: None,
+            }));
             self.net.send(up, t, &fwd, &mut self.log);
         }
     }
@@ -840,16 +1084,23 @@ impl World {
         };
         match msg {
             Msg::Hello(h) => {
+                // a (re)connected session is a new incarnation: invalidate
+                // its cached codec base before any of its frames arrive;
+                // the ack echoes known codec ids and declines unknown ones,
+                // like the threaded reader
+                self.shards[s].codecs.invalidate(h.client);
+                let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
                 let ack = msg_body(&Msg::Hello(Hello {
                     client: h.client,
                     split: h.split,
+                    codec,
                     shard: Some(s as u16),
                 }));
                 let lane = self.reply_lane(s, h.client);
                 self.net.send(lane, t, &ack, &mut self.log);
             }
             Msg::Request(r) => self.shard_request(t, s, r),
-            Msg::Response(_) => {
+            Msg::Response(_) | Msg::ResponseV2(_) => {
                 self.log.record(t, "shard_unexpected", &format!("shard={s}"));
             }
         }
@@ -863,11 +1114,22 @@ impl World {
         let sh = &mut self.shards[s];
         sh.out.requests += 1;
         let work = SimWork { client, id, payload: r.payload };
-        if sh.collector.push(route, work, now_i).is_some() {
+        if let Some(wk) = sh.collector.push(route, work, now_i) {
             sh.out.rejected += 1;
-            // explicit empty-action rejection, like the executor's
-            // back-pressure path
-            let reply = msg_body(&Msg::Response(Response { client, id, action: vec![] }));
+            // explicit rejection, like the executor's back-pressure path:
+            // codec sessions additionally learn the frame never reached
+            // the decoder, so the chain re-keys instead of desyncing
+            let reply = match &wk.payload {
+                Payload::FeaturesV2(f) => msg_body(&Msg::ResponseV2(ResponseV2 {
+                    client,
+                    id,
+                    seq: f.seq,
+                    flags: RESP_FLAG_NEED_KEYFRAME,
+                    queue_wait_us: 0,
+                    action: vec![],
+                })),
+                _ => msg_body(&Msg::Response(Response { client, id, action: vec![] })),
+            };
             self.log
                 .record(t, "reject", &format!("shard={s} client={client} id={id}"));
             self.net.send(reply_lane, t, &reply, &mut self.log);
@@ -923,7 +1185,12 @@ impl World {
             let mut replies = Vec::with_capacity(n);
             for item in &batch {
                 let w = &item.work;
-                match &w.payload {
+                let qw_us = now_i
+                    .duration_since(item.enqueued)
+                    .as_micros()
+                    .min(u32::MAX as u128) as u32;
+                let default_action = (w.client as f32) * 1e-3 + (w.id as f32) * 1e-6 + 0.125;
+                let reply = match &w.payload {
                     Payload::RawRgba { x, data } => {
                         let x = *x as usize;
                         let sh = &mut self.shards[s];
@@ -932,13 +1199,51 @@ impl World {
                         let _ = sh
                             .sessions
                             .ingest_rgba_into(w.client, x, data, &mut sh.obs_scratch);
+                        SimReply { client: w.client, id: w.id, action: default_action, v2: None }
                     }
                     Payload::Features { scale, data, .. } => {
                         let _ = crate::net::framing::dequantize_features(*scale, data);
+                        SimReply { client: w.client, id: w.id, action: default_action, v2: None }
                     }
-                }
-                let action = (w.client as f32) * 1e-3 + (w.id as f32) * 1e-6 + 0.125;
-                replies.push((w.client, w.id, action));
+                    Payload::FeaturesV2(f) => {
+                        // the real decoder: reconstruct the quantised frame
+                        // (or refuse it) exactly as a live executor would
+                        let sh = &mut self.shards[s];
+                        sh.out.codec_frames += 1;
+                        sh.obs_scratch.clear();
+                        sh.obs_scratch.resize(f.feat_len(), 0.0);
+                        match sh.codecs.decode_into(w.client, f, &mut sh.obs_scratch) {
+                            Ok(()) => {
+                                let action = sh
+                                    .codecs
+                                    .frame(w.client)
+                                    .map(checksum_action)
+                                    .unwrap_or(default_action);
+                                SimReply {
+                                    client: w.client,
+                                    id: w.id,
+                                    action,
+                                    v2: Some((f.seq, false, qw_us)),
+                                }
+                            }
+                            Err(_) => {
+                                sh.out.codec_rejects += 1;
+                                self.log.record(
+                                    t,
+                                    "codec_reject",
+                                    &format!("shard={s} client={} id={}", w.client, w.id),
+                                );
+                                SimReply {
+                                    client: w.client,
+                                    id: w.id,
+                                    action: 0.0,
+                                    v2: Some((f.seq, true, qw_us)),
+                                }
+                            }
+                        }
+                    }
+                };
+                replies.push(reply);
             }
             {
                 let sh = &mut self.shards[s];
@@ -971,13 +1276,7 @@ impl World {
         }
     }
 
-    fn shard_exec_done(
-        &mut self,
-        t: f64,
-        s: usize,
-        incarnation: u64,
-        replies: Vec<(u32, u64, f32)>,
-    ) {
+    fn shard_exec_done(&mut self, t: f64, s: usize, incarnation: u64, replies: Vec<SimReply>) {
         if !self.shards[s].alive || self.shards[s].incarnation != incarnation {
             // crashed mid-exec (even if already restarted): the batch's
             // work died with the old incarnation
@@ -985,9 +1284,23 @@ impl World {
                 .record(t, "replies_lost", &format!("shard={s} n={}", replies.len()));
             return;
         }
-        for (client, id, action) in replies {
-            let lane = self.reply_lane(s, client);
-            let body = msg_body(&Msg::Response(Response { client, id, action: vec![action] }));
+        for r in replies {
+            let lane = self.reply_lane(s, r.client);
+            let body = match r.v2 {
+                Some((seq, need_key, queue_wait_us)) => msg_body(&Msg::ResponseV2(ResponseV2 {
+                    client: r.client,
+                    id: r.id,
+                    seq,
+                    flags: if need_key { RESP_FLAG_NEED_KEYFRAME } else { 0 },
+                    queue_wait_us,
+                    action: if need_key { vec![] } else { vec![r.action] },
+                })),
+                None => msg_body(&Msg::Response(Response {
+                    client: r.client,
+                    id: r.id,
+                    action: vec![r.action],
+                })),
+            };
             self.net.send(lane, t, &body, &mut self.log);
         }
     }
@@ -1053,6 +1366,10 @@ impl World {
                 sh.incarnation += 1;
                 sh.collector = BatchCollector::new(policy, max_depth);
                 sh.sessions = SessionManager::new();
+                // fresh incarnation, fresh decoder state: any delta built
+                // against the dead incarnation's base is refused, never
+                // decoded against stale bytes
+                sh.codecs = Decoders::new();
                 sh.busy_until = t;
                 let (up, down) = (sh.up, sh.down);
                 self.net.reopen(up, t, &mut self.log);
@@ -1120,7 +1437,7 @@ impl World {
                 Delivery::Frame(body) => match Msg::decode(&body) {
                     Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
                     Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
-                    Ok(Msg::Response(_)) => {
+                    Ok(Msg::Response(_) | Msg::ResponseV2(_)) => {
                         self.log.record(t, "gw_unexpected", &format!("client={c}"));
                     }
                     Err(_) => {
@@ -1142,6 +1459,13 @@ impl World {
                         self.log.record(t, "filter_ack", &format!("shard={s}"));
                     }
                     Ok(Msg::Response(r)) => {
+                        self.gw.out.forwarded_responses += 1;
+                        let down = self.clients[r.client as usize].down;
+                        self.net.send(down, t, &body, &mut self.log);
+                    }
+                    Ok(Msg::ResponseV2(r)) => {
+                        // codec acks forward verbatim, exactly like v1
+                        // responses — the gateway never decodes payloads
                         self.gw.out.forwarded_responses += 1;
                         let down = self.clients[r.client as usize].down;
                         self.net.send(down, t, &body, &mut self.log);

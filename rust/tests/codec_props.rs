@@ -1,0 +1,303 @@
+//! Property tests for the adaptive feature codec (`miniconv::codec`):
+//! encode/decode round-trip bit-exactness at every quantisation level,
+//! the flat-path oracle at qmax 255, payload-size bounds on constant and
+//! slowly-varying streams, and corrupt/truncated payload rejection
+//! without panics.
+
+use miniconv::codec::{
+    self, Decoder, Decoders, Encoder, CODEC_DELTA, FLAG_KEYFRAME,
+};
+use miniconv::net::framing::{FeatureFrame, Msg, Payload, Request};
+use miniconv::util::proptest::{check, prop_assert, Gen};
+
+const QMAX_LADDER: [u8; 4] = [255, 127, 63, 31];
+
+/// A random "feature stream": frame 0 is arbitrary, later frames perturb
+/// a random subset of values — the slowly-varying shape split features
+/// actually have.
+fn arb_stream(g: &mut Gen, frames: usize, n: usize, churn: f64) -> Vec<Vec<f32>> {
+    let mut cur: Vec<f32> = (0..n).map(|_| g.f64(0.0, 4.0) as f32).collect();
+    let mut out = vec![cur.clone()];
+    for _ in 1..frames {
+        let changes = ((n as f64 * churn) as usize).max(1);
+        for _ in 0..changes {
+            let i = g.usize(0, n - 1);
+            cur[i] = g.f64(0.0, 4.0) as f32;
+        }
+        out.push(cur.clone());
+    }
+    out
+}
+
+#[test]
+fn prop_roundtrip_is_bit_exact_at_every_quant_level() {
+    check(60, |g| {
+        let n = g.usize(1, 400);
+        let frames = g.usize(1, 8);
+        let stream = arb_stream(g, frames, n, 0.1);
+        let qmax = *g.choice(&QMAX_LADDER);
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut qbuf = Vec::new();
+        let mut wire = Vec::new();
+        for f in &stream {
+            let scale = codec::quantize_into(f, qmax, &mut qbuf);
+            let (flags, seq) = enc.encode_into(&qbuf, &mut wire);
+            prop_assert(
+                wire.len() <= n,
+                format!("payload {} exceeded flat frame {n}", wire.len()),
+            )?;
+            dec.apply(flags, qmax, seq, n, &wire)
+                .map_err(|e| format!("apply failed: {e}"))?;
+            prop_assert(dec.frame() == qbuf.as_slice(), "reconstruction not bit-exact")?;
+            // dequantisation error bounded by half a quant step
+            let mut back = vec![0.0f32; n];
+            codec::dequantize_into(scale, qmax, dec.frame(), &mut back);
+            let step = scale / qmax as f32;
+            for (a, b) in f.iter().zip(&back) {
+                prop_assert(
+                    (a - b).abs() <= step * 0.5 + scale * 1e-6,
+                    format!("qmax {qmax}: |{a} - {b}| > half step"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance oracle: at qmax 255 the codec's quantise → wire →
+/// reconstruct → dequantise pipeline is bit-identical to the flat v1 path
+/// (`quantize_features` + `dequantize_features_into`) on every frame.
+#[test]
+fn prop_qmax_255_is_bit_exact_with_the_flat_path() {
+    check(60, |g| {
+        let n = g.usize(1, 300);
+        let stream = arb_stream(g, g.usize(1, 6), n, 0.2);
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut qbuf = Vec::new();
+        let mut wire = Vec::new();
+        for f in &stream {
+            let (flat_scale, flat_q) = miniconv::net::quantize_features(f);
+            let scale = codec::quantize_into(f, 255, &mut qbuf);
+            prop_assert(scale.to_bits() == flat_scale.to_bits(), "scale diverged")?;
+            prop_assert(qbuf == flat_q, "quantised bytes diverged from the flat path")?;
+            let (flags, seq) = enc.encode_into(&qbuf, &mut wire);
+            dec.apply(flags, 255, seq, n, &wire)
+                .map_err(|e| format!("apply: {e}"))?;
+            prop_assert(dec.frame() == flat_q.as_slice(), "wire round trip diverged")?;
+            let mut via_codec = vec![0.0f32; n];
+            let mut via_flat = vec![0.0f32; n];
+            codec::dequantize_into(scale, 255, dec.frame(), &mut via_codec);
+            miniconv::net::dequantize_features_into(flat_scale, &flat_q, &mut via_flat);
+            for (a, b) in via_codec.iter().zip(&via_flat) {
+                prop_assert(a.to_bits() == b.to_bits(), "dequantised floats diverged")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_frames_survive_the_wire_protocol() {
+    check(80, |g| {
+        let n = g.usize(1, 200);
+        let stream = arb_stream(g, 2, n, 0.1);
+        let qmax = *g.choice(&QMAX_LADDER);
+        let mut enc = Encoder::new();
+        let mut qbuf = Vec::new();
+        for (i, f) in stream.iter().enumerate() {
+            let mut data = Vec::new();
+            let scale = codec::quantize_into(f, qmax, &mut qbuf);
+            let (flags, seq) = enc.encode_into(&qbuf, &mut data);
+            let msg = Msg::Request(Request {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: i as u64,
+                payload: Payload::FeaturesV2(FeatureFrame {
+                    c: 1,
+                    h: 1,
+                    w: n as u16,
+                    codec: CODEC_DELTA,
+                    flags,
+                    qmax,
+                    seq,
+                    scale,
+                    data,
+                }),
+            });
+            let encd = msg.encode();
+            let back = Msg::decode(&encd[4..]).map_err(|e| format!("decode: {e}"))?;
+            prop_assert(back == msg, "codec frame mutated on the wire")?;
+        }
+        Ok(())
+    });
+}
+
+/// Corrupt or truncated payloads must be rejected with an error — never a
+/// panic, never a silent half-decode — and the chain must recover with a
+/// keyframe.
+#[test]
+fn prop_corrupt_payloads_are_rejected_without_panic() {
+    check(120, |g| {
+        let n = g.usize(8, 300);
+        let stream = arb_stream(g, 3, n, 0.05);
+        let qmax = *g.choice(&QMAX_LADDER);
+        let mut enc = Encoder::new();
+        let mut dec = Decoder::new();
+        let mut qbuf = Vec::new();
+        let mut wire = Vec::new();
+        // prime the chain with the first two frames
+        for f in &stream[..2] {
+            codec::quantize_into(f, qmax, &mut qbuf);
+            let (flags, seq) = enc.encode_into(&qbuf, &mut wire);
+            dec.apply(flags, qmax, seq, n, &wire)
+                .map_err(|e| format!("prime: {e}"))?;
+        }
+        // mangle frame 3
+        codec::quantize_into(&stream[2], qmax, &mut qbuf);
+        let (flags, seq) = enc.encode_into(&qbuf, &mut wire);
+        let mut bent = wire.clone();
+        let verdict = match g.usize(0, 2) {
+            0 if !bent.is_empty() => {
+                // truncate
+                let cut = g.usize(0, bent.len() - 1);
+                bent.truncate(cut);
+                dec.apply(flags, qmax, seq, n, &bent)
+            }
+            1 => {
+                // append garbage
+                bent.push(g.usize(0, 255) as u8);
+                dec.apply(flags, qmax, seq, n, &bent)
+            }
+            _ => {
+                // wrong sequence number: a lost frame in the chain
+                dec.apply(flags, qmax, seq.wrapping_add(1 + g.u64(0, 100) as u32), n, &bent)
+            }
+        };
+        match verdict {
+            Err(_) => {
+                // after any rejection, the true delta is also refused (the
+                // base is poisoned) until a keyframe re-primes the chain
+                if flags & FLAG_KEYFRAME == 0 {
+                    prop_assert(
+                        dec.apply(flags, qmax, seq, n, &wire).is_err(),
+                        "poisoned chain accepted a delta",
+                    )?;
+                }
+                enc.force_keyframe();
+                codec::quantize_into(&stream[2], qmax, &mut qbuf);
+                let (kf, ks) = enc.encode_into(&qbuf, &mut wire);
+                dec.apply(kf, qmax, ks, n, &wire)
+                    .map_err(|e| format!("keyframe recovery: {e}"))?;
+                prop_assert(dec.frame() == qbuf.as_slice(), "recovery frame diverged")
+            }
+            Ok(()) => {
+                // a mangling that happens to decode must still be exact for
+                // keyframes (raw keyframes at unchanged length, or the
+                // wrong-seq case, which keyframes ignore by design)
+                Ok(())
+            }
+        }
+    });
+}
+
+/// Random byte soup into the unpacker: errors allowed, panics not.
+#[test]
+fn prop_unpack_never_panics_on_garbage() {
+    check(300, |g| {
+        let n = g.usize(0, 128);
+        let soup: Vec<u8> = (0..g.usize(0, 64)).map(|_| g.usize(0, 255) as u8).collect();
+        let mut base = vec![0u8; n];
+        let _ = codec::pack::unpack_residuals_into(&soup, &mut base, *g.choice(&QMAX_LADDER));
+        let mut dec = Decoder::new();
+        let flags = g.usize(0, 3) as u8;
+        let _ = dec.apply(flags, 255, g.u64(0, u32::MAX as u64) as u32, n, &soup);
+        Ok(())
+    });
+}
+
+/// Compression bound: on constant and slowly-varying streams the wire
+/// payload stays at or below the flat size on EVERY frame, and the mean
+/// over the stream is strictly smaller once deltas flow.
+#[test]
+fn prop_compressed_size_bounded_on_smooth_streams() {
+    check(60, |g| {
+        let n = g.usize(64, 512);
+        let frames = g.usize(4, 12);
+        // churn ≤ 2% of values per frame: "slowly varying"
+        let stream = arb_stream(g, frames, n, 0.02);
+        let qmax = *g.choice(&QMAX_LADDER);
+        let mut enc = Encoder::new();
+        let mut qbuf = Vec::new();
+        let mut wire = Vec::new();
+        let mut total = 0usize;
+        for f in &stream {
+            codec::quantize_into(f, qmax, &mut qbuf);
+            enc.encode_into(&qbuf, &mut wire);
+            prop_assert(
+                wire.len() <= n,
+                format!("frame cost {} > flat {n}", wire.len()),
+            )?;
+            total += wire.len();
+        }
+        prop_assert(
+            total < frames * n,
+            format!("stream cost {total} not below flat {}", frames * n),
+        )?;
+        // constant stream: mask-only deltas
+        let constant = vec![stream[0].clone(); 6];
+        let mut enc = Encoder::new();
+        let mut total_const = 0usize;
+        for f in &constant {
+            codec::quantize_into(f, qmax, &mut qbuf);
+            enc.encode_into(&qbuf, &mut wire);
+            total_const += wire.len();
+        }
+        let mask_bytes = n.div_ceil(codec::BLOCK).div_ceil(8);
+        prop_assert(
+            total_const <= n + 5 * mask_bytes,
+            format!("constant stream cost {total_const} (n={n})"),
+        )
+    });
+}
+
+/// The serving-side `Decoders` map isolates sessions: two interleaved
+/// chains never contaminate each other.
+#[test]
+fn prop_sessions_are_isolated_in_the_decoder_map() {
+    check(40, |g| {
+        let n = g.usize(16, 128);
+        let a = arb_stream(g, 4, n, 0.1);
+        let b = arb_stream(g, 4, n, 0.1);
+        let mut enc_a = Encoder::new();
+        let mut enc_b = Encoder::new();
+        let mut decs = Decoders::new();
+        let mut qbuf = Vec::new();
+        for (fa, fb) in a.iter().zip(&b) {
+            for (client, enc, f) in [(1u32, &mut enc_a, fa), (2u32, &mut enc_b, fb)] {
+                let mut data = Vec::new();
+                let scale = codec::quantize_into(f, 255, &mut qbuf);
+                let (flags, seq) = enc.encode_into(&qbuf, &mut data);
+                let frame = FeatureFrame {
+                    c: 1,
+                    h: 1,
+                    w: n as u16,
+                    codec: CODEC_DELTA,
+                    flags,
+                    qmax: 255,
+                    seq,
+                    scale,
+                    data,
+                };
+                let mut row = vec![0.0f32; n];
+                decs.decode_into(client, &frame, &mut row)
+                    .map_err(|e| format!("client {client}: {e}"))?;
+                prop_assert(
+                    decs.frame(client) == Some(qbuf.as_slice()),
+                    format!("client {client} frame diverged"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

@@ -7,7 +7,9 @@
 
 use std::io::Write;
 
-use miniconv::net::framing::{Hello, Msg, Payload, Request, Response, MAX_FRAME};
+use miniconv::net::framing::{
+    FeatureFrame, Hello, Msg, Payload, Request, Response, ResponseV2, MAX_FRAME,
+};
 use miniconv::net::tcp::{read_msg, write_msg};
 use miniconv::net::{dequantize_features, quantize_features, ShapedWriter, TokenBucket};
 use miniconv::sim::{Clock, SimClock};
@@ -15,12 +17,13 @@ use miniconv::util::proptest::{check, prop_assert, Gen};
 
 /// Draw an arbitrary message of any variant.
 fn arb_msg(g: &mut Gen) -> Msg {
-    match g.usize(0, 3) {
+    match g.usize(0, 5) {
         0 => {
             let shard = if g.bool() { Some(g.usize(0, u16::MAX as usize) as u16) } else { None };
             Msg::Hello(Hello {
                 client: g.u64(0, u32::MAX as u64) as u32,
                 split: g.bool(),
+                codec: g.usize(0, 1) as u8,
                 shard,
             })
         }
@@ -48,6 +51,39 @@ fn arb_msg(g: &mut Gen) -> Msg {
                     scale: g.f64(1e-6, 100.0) as f32,
                     data,
                 },
+            })
+        }
+        3 => {
+            // codec frame: the payload is opaque to the framing layer, but
+            // its length must respect the ≤ flat-frame bound the decoder
+            // enforces
+            let (c, h, w) = (g.usize(1, 4), g.usize(1, 8), g.usize(1, 8));
+            let dlen = g.usize(0, c * h * w);
+            Msg::Request(Request {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                payload: Payload::FeaturesV2(FeatureFrame {
+                    c: c as u16,
+                    h: h as u16,
+                    w: w as u16,
+                    codec: g.usize(0, 1) as u8,
+                    flags: g.usize(0, 3) as u8,
+                    qmax: g.usize(1, 255) as u8,
+                    seq: g.u64(0, u32::MAX as u64) as u32,
+                    scale: g.f64(1e-6, 100.0) as f32,
+                    data: (0..dlen).map(|_| g.usize(0, 255) as u8).collect(),
+                }),
+            })
+        }
+        4 => {
+            let n = g.usize(0, 8);
+            Msg::ResponseV2(ResponseV2 {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                seq: g.u64(0, u32::MAX as u64) as u32,
+                flags: g.usize(0, 1) as u8,
+                queue_wait_us: g.u64(0, u32::MAX as u64) as u32,
+                action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
             })
         }
         _ => {

@@ -9,6 +9,7 @@
 use std::time::Duration;
 
 use miniconv::analysis::breakeven::split_wins;
+use miniconv::codec::{CodecId, RateConfig};
 use miniconv::coordinator::BatchPolicy;
 use miniconv::device::ThermalModel;
 use miniconv::fleet::{ShardId, ShardState, Topology};
@@ -411,6 +412,233 @@ fn mid_frame_disconnect_is_a_clean_error_and_sessions_reroute() {
         assert!(r.gateway.reassigned >= 1, "seed {seed}");
         assert_eq!(r.shard_states[1], ShardState::Up, "seed {seed}");
         assert!(r.hello_acks_exactly_once(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 10: adaptive codec on the 1 Mb/s shaped link — the PR's
+// acceptance gate: ≥ 2x lower mean bytes/frame than the flat u8 format on
+// the pendulum raster stream AND strictly lower p50 decision latency,
+// deterministic across the seed matrix
+// ---------------------------------------------------------------------------
+
+/// One split client shipping the real pendulum raster stream over a
+/// shaped uplink, with either the flat v1 format or the delta codec.
+fn codec_cfg(seed: u64, codec: CodecId, bps: f64) -> ScenarioConfig {
+    ScenarioConfig {
+        seed,
+        gateway: false,
+        shards: 1,
+        raw_clients: 0,
+        split_clients: 1,
+        decisions: 12,
+        feat: (3, 48, 48),
+        pendulum_stream: true,
+        codec,
+        encode_j: 0.002,
+        req_timeout: 5.0,
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        exec_fixed: 0.003,
+        exec_per_item: 0.001,
+        client_link: LinkFaults::shaped(bps, 0.002),
+        reply_link: LinkFaults { latency: 0.002, ..LinkFaults::ideal() },
+        ..ScenarioConfig::default()
+    }
+}
+
+#[test]
+fn delta_codec_beats_flat_on_the_1mbps_shaped_pendulum_stream() {
+    for seed in SEEDS {
+        let mut flat = run_and_emit("codec_1mbps_flat", &codec_cfg(seed, CodecId::Flat, 1e6));
+        let mut delta = run_and_emit("codec_1mbps_delta", &codec_cfg(seed, CodecId::Delta, 1e6));
+        for (name, r) in [("flat", &flat), ("delta", &delta)] {
+            assert_eq!(r.clients[0].decisions, 12, "seed {seed} {name}: lost decisions");
+            assert_eq!(r.clients[0].payload_mismatches, 0, "seed {seed} {name}");
+            assert_eq!(r.total_give_ups(), 0, "seed {seed} {name}");
+            assert_eq!(r.clients[0].frames_sent, 12, "seed {seed} {name}");
+        }
+        // no chaos here: the chain never breaks, so exactly one keyframe
+        // amortises over the run and the shard decodes every frame
+        assert_eq!(delta.clients[0].keyframes, 1, "seed {seed}");
+        assert_eq!(delta.clients[0].deltas, 11, "seed {seed}");
+        assert_eq!(delta.shards[0].codec_frames, 12, "seed {seed}");
+        assert_eq!(delta.shards[0].codec_rejects, 0, "seed {seed}");
+
+        let flat_bpf = flat.clients[0].bytes_sent as f64 / flat.clients[0].frames_sent as f64;
+        let delta_bpf = delta.clients[0].bytes_sent as f64 / delta.clients[0].frames_sent as f64;
+        assert!(
+            flat_bpf >= 2.0 * delta_bpf,
+            "seed {seed}: mean bytes/frame flat {flat_bpf:.0} vs delta {delta_bpf:.0} \
+             — compression ratio {:.2} < 2.0",
+            flat_bpf / delta_bpf
+        );
+        let flat_p50 = flat.clients[0].latencies.median();
+        let delta_p50 = delta.clients[0].latencies.median();
+        assert!(
+            delta_p50 < flat_p50,
+            "seed {seed}: delta p50 {delta_p50:.4}s not strictly below flat {flat_p50:.4}s"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 11: rate-controller convergence under 1/5/20 Mb/s shaping — the
+// congested link walks the quantisation ladder coarser, the fast link
+// never leaves the finest rung, and no level ever corrupts a frame
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rate_controller_converges_per_link_bandwidth() {
+    for seed in SEEDS {
+        let run = |mbps: f64| {
+            let cfg = ScenarioConfig {
+                decisions: 24,
+                feat: (3, 24, 24),
+                rate: RateConfig { target_latency: 0.005, ..RateConfig::default() },
+                // keep the non-link latency terms (encode, exec, queue)
+                // well inside the hysteresis band, so only serialisation
+                // time separates the three bandwidths
+                encode_j: 0.0005,
+                exec_fixed: 0.0005,
+                exec_per_item: 0.0001,
+                client_link: LinkFaults::shaped(mbps * 1e6, 0.001),
+                reply_link: LinkFaults { latency: 0.001, ..LinkFaults::ideal() },
+                ..codec_cfg(seed, CodecId::Delta, mbps * 1e6)
+            };
+            run_and_emit(&format!("codec_rate_{mbps}mbps"), &cfg)
+        };
+        let slow = run(1.0);
+        let mid = run(5.0);
+        let fast = run(20.0);
+        for (name, r) in [("1", &slow), ("5", &mid), ("20", &fast)] {
+            assert_eq!(r.total_give_ups(), 0, "seed {seed} {name}Mb/s");
+            assert_eq!(r.clients[0].payload_mismatches, 0, "seed {seed} {name}Mb/s");
+            assert_eq!(r.shards[0].codec_rejects, 0, "seed {seed} {name}Mb/s");
+            assert_eq!(r.clients[0].decisions, 24, "seed {seed} {name}Mb/s");
+        }
+        // congestion drives the controller coarser; headroom holds it fine
+        assert!(
+            slow.clients[0].quant_coarser >= 1,
+            "seed {seed}: 1 Mb/s never stepped coarser"
+        );
+        assert!(
+            slow.clients[0].final_qmax < 255,
+            "seed {seed}: 1 Mb/s finished at the finest rung"
+        );
+        assert_eq!(
+            fast.clients[0].final_qmax, 255,
+            "seed {seed}: 20 Mb/s left the finest rung"
+        );
+        assert_eq!(fast.clients[0].quant_coarser, 0, "seed {seed}");
+        assert!(
+            mid.clients[0].final_qmax >= slow.clients[0].final_qmax,
+            "seed {seed}: 5 Mb/s ended coarser than 1 Mb/s"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 12: shard restart never decodes against a stale delta base —
+// the first delta to reach the fresh incarnation is refused (not silently
+// decoded), the client re-keys, and every decoded frame still echoes the
+// sent payload's checksum
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_restart_never_decodes_a_stale_delta_base() {
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            gateway: false,
+            shards: 1,
+            raw_clients: 0,
+            split_clients: 1,
+            decisions: 10,
+            feat: (3, 16, 16),
+            pendulum_stream: true,
+            codec: CodecId::Delta,
+            think: 0.1,
+            req_timeout: 1.0,
+            // crash + restart inside one think window: the client never
+            // times out, so its next frame is a DELTA built on the dead
+            // incarnation's base — the fresh decoder must refuse it
+            faults: vec![
+                (0.15, FaultCmd::CrashShard(0)),
+                (0.151, FaultCmd::RestartShard(0)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("codec_restart", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        let c = &r.clients[0];
+        // the stale-base delta was rejected, not decoded: exactly one
+        // codec reject, answered with need_keyframe, and the decision
+        // ledger still balances
+        assert_eq!(r.shards[0].codec_rejects, 1, "seed {seed}: {:#?}", r.shards[0]);
+        assert_eq!(c.need_keyframes, 1, "seed {seed}");
+        assert_eq!(c.rejected, 1, "seed {seed}");
+        assert_eq!(c.decisions as u64 + c.rejected, 10, "seed {seed}");
+        // recovery: the initial keyframe plus the forced re-key
+        assert_eq!(c.keyframes, 2, "seed {seed}");
+        // the oracle: no decoded frame ever disagreed with what was sent —
+        // a stale-base decode would have produced a checksum mismatch
+        assert_eq!(c.payload_mismatches, 0, "seed {seed}");
+        assert_eq!(c.reconnects, 0, "seed {seed}: restart was meant to be silent");
+        assert!(r.log.contains(" codec_reject "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 13: mid-frame cut under the delta codec — torn frames surface
+// as clean errors, victims re-key (reconnect or need_keyframe), and no
+// frame ever decodes against the wrong base
+// ---------------------------------------------------------------------------
+
+#[test]
+fn delta_chain_recovers_from_a_mid_frame_cut() {
+    let n_clients = 8;
+    let moved = sessions_on_shard1(n_clients, 2);
+    assert!(!moved.is_empty(), "hash placed nothing on shard 1; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 0,
+            split_clients: n_clients,
+            decisions: 6,
+            feat: (3, 16, 16),
+            pendulum_stream: true,
+            codec: CodecId::Delta,
+            think: 0.008,
+            req_timeout: 0.05,
+            probe_interval: Some(0.02),
+            faults: vec![
+                (0.008, FaultCmd::CutShardUplinkMidFrame(1)),
+                (0.1, FaultCmd::RestartShard(1)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("codec_midframe_cut", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        // every decision is accounted for: answered or explicitly rejected
+        let answered: usize = r.clients.iter().map(|c| c.decisions).sum();
+        let rejected: u64 = r.clients.iter().map(|c| c.rejected).sum();
+        assert_eq!(answered as u64 + rejected, (n_clients * 6) as u64, "seed {seed}");
+        // the torn frame was refused at the framing layer
+        assert!(r.shards[1].frame_errors >= 1, "seed {seed}: the cut never tore a frame");
+        assert!(r.log.contains(" cut_mid_frame "), "seed {seed}");
+        // chain integrity end to end: decoded content always echoed the
+        // sent frame, and every victim re-keyed
+        let mismatches: u64 = r.clients.iter().map(|c| c.payload_mismatches).sum();
+        assert_eq!(mismatches, 0, "seed {seed}: a stale delta base was silently decoded");
+        let keyframes: u64 = r.clients.iter().map(|c| c.keyframes).sum();
+        assert!(
+            keyframes > n_clients as u64,
+            "seed {seed}: no victim ever re-keyed ({keyframes} keyframes)"
+        );
+        let decoded: u64 = r.shards.iter().map(|s| s.codec_frames).sum();
+        assert!(decoded > 0, "seed {seed}: no codec frame reached a decoder");
+        assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
     }
 }
 
