@@ -1,16 +1,181 @@
-//! Tables 2–4 (smoke scale) — the learning-table machinery end to end:
-//! train every encoder on Pendulum for a few episodes through the real
-//! update artifacts and print the paper-format Best/Final/Mean table.
+//! Online-learning smoke gate (DESIGN.md §8): train the native PPO engine
+//! twice at the same seed — once offline (`rl::NativeTrainer`), once
+//! through the full serving stack (gateway + shard + experience codec in
+//! the deterministic simnet) — and compare final-100 mean returns.
 //!
-//! Paper-scale runs: `miniconv exp learning --task <t> --scale paper`.
+//! Gates, embedded in `BENCH_learn.json` (override the path with `--out`
+//! or the `BENCH_LEARN_OUT` env var) and enforced against the committed
+//! baseline by `scripts/bench_diff`:
+//!   * online final-100 within 10% of the offline baseline (the ideal-link
+//!     run is bit-identical, so the gap is 0 unless the loop regresses);
+//!   * zero actions applied beyond the staleness bound;
+//!   * policy-version adoption strictly monotonic.
+//!
+//! `--episodes N` caps the run — CI uses a tiny N; gate verdicts are only
+//! meaningful at the default. With artifacts present the legacy Tables 2–4
+//! smoke table (update/act artifacts for every encoder) also runs.
 
 use miniconv::experiments::{learning_table, LearningScale};
+use miniconv::learn::LearnerConfig;
+use miniconv::rl::native::NativeConfig;
+use miniconv::rl::{NativeTrainer, TrainConfig};
 use miniconv::runtime::{default_artifact_dir, Runtime};
+use miniconv::sim::{run_scenario, LearnSpec, ScenarioConfig};
+use miniconv::util::argparse::Parser;
+use miniconv::util::tables::Table;
+
+fn final_n_mean(returns: &[f64], n: usize) -> f64 {
+    if returns.is_empty() {
+        return 0.0;
+    }
+    let tail = &returns[returns.len().saturating_sub(n)..];
+    tail.iter().sum::<f64>() / tail.len() as f64
+}
 
 fn main() {
+    let args = Parser::new("learning smoke — online fleet loop vs offline PPO baseline")
+        .opt("episodes", "30", "pendulum episodes per run")
+        .opt("seed", "0", "environment + engine seed")
+        .opt("out", "", "output path (default BENCH_LEARN_OUT or BENCH_learn.json)")
+        .parse();
+    let episodes: usize = args.usize("episodes").max(1);
+    let seed = args.u64("seed");
+    let out_path = {
+        let o = args.str("out");
+        if o.is_empty() {
+            std::env::var("BENCH_LEARN_OUT").unwrap_or_else(|_| "BENCH_learn.json".into())
+        } else {
+            o
+        }
+    };
+
+    // offline baseline: the native trainer, 256-step segments
+    let mut offline = NativeTrainer::new(
+        TrainConfig {
+            episodes,
+            rollout_steps: 256,
+            ppo_epochs: 10,
+            gae_lambda: 0.95,
+            seed,
+            log_every: 0,
+            ..TrainConfig::default()
+        },
+        NativeConfig { seed, ..NativeConfig::default() },
+    );
+    offline.train().expect("offline train");
+    let off_final = offline.stats.final_100();
+
+    // online: the same engine and knobs behind the gateway + shard +
+    // experience-codec stack, one learning client replaying the trainer's
+    // per-episode environment streams
+    let cfg = ScenarioConfig {
+        seed,
+        shards: 1,
+        raw_clients: 0,
+        learning: Some(LearnSpec {
+            clients: 1,
+            episodes,
+            learner: LearnerConfig {
+                core: NativeConfig { seed, ..NativeConfig::default() },
+                rollout_steps: 256,
+                ppo_epochs: 10,
+                gae_lambda: 0.95,
+                publish_every: 1,
+            },
+            max_lag: 4,
+            update_cost: 0.002,
+        }),
+        ..ScenarioConfig::default()
+    };
+    let r = run_scenario(&cfg).expect("online scenario");
+    let c = &r.clients[0];
+    let s = &r.shards[0];
+    let on_final = final_n_mean(&c.returns, 100);
+
+    let parity_gap_pct = if off_final.abs() > f64::EPSILON {
+        (on_final - off_final).abs() / off_final.abs() * 100.0
+    } else {
+        0.0
+    };
+    let applied_stale = r.total_applied_stale();
+    let monotonic = s.adopted_versions.windows(2).all(|w| w[0] < w[1]);
+    let parity_pass = parity_gap_pct <= 10.0 && c.returns.len() == episodes;
+    let stale_pass = applied_stale == 0 && r.total_give_ups() == 0;
+
+    let mut t = Table::new(
+        &format!("learning smoke — pendulum, {episodes} episodes, seed {seed}"),
+        &["run", "final-100", "best", "episodes", "updates", "versions"],
+    );
+    t.row(&[
+        "offline".into(),
+        format!("{:.1}", off_final),
+        format!("{:.1}", offline.stats.best()),
+        offline.stats.episodes().to_string(),
+        offline.updates.to_string(),
+        "-".into(),
+    ]);
+    t.row(&[
+        "online".into(),
+        format!("{:.1}", on_final),
+        format!("{:.1}", c.returns.iter().copied().fold(f64::NEG_INFINITY, f64::max)),
+        c.returns.len().to_string(),
+        s.updates.to_string(),
+        s.final_version.to_string(),
+    ]);
+    t.print();
+    println!(
+        "parity gap {:.2}%  experience frames {}  stale rejections {}  resyncs {}",
+        parity_gap_pct,
+        s.exp_frames,
+        r.total_stale_rejections(),
+        r.gateway.policy_resyncs
+    );
+    println!(
+        "gates: parity <= 10% -> {}, zero applied-stale -> {}, monotonic versions -> {}",
+        if parity_pass { "PASS" } else { "FAIL" },
+        if stale_pass { "PASS" } else { "FAIL" },
+        if monotonic { "PASS" } else { "FAIL" },
+    );
+
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"bench\": \"learning_smoke\",\n");
+    j.push_str(&format!("  \"episodes\": {episodes},\n"));
+    j.push_str(&format!("  \"seed\": {seed},\n"));
+    j.push_str("  \"offline\": {\n");
+    j.push_str(&format!("    \"final_100\": {:.3},\n", off_final));
+    j.push_str(&format!("    \"best\": {:.3},\n", offline.stats.best()));
+    j.push_str(&format!("    \"mean\": {:.3},\n", offline.stats.mean()));
+    j.push_str(&format!("    \"updates\": {}\n", offline.updates));
+    j.push_str("  },\n");
+    j.push_str("  \"online\": {\n");
+    j.push_str(&format!("    \"final_100\": {:.3},\n", on_final));
+    j.push_str(&format!("    \"episodes\": {},\n", c.returns.len()));
+    j.push_str(&format!("    \"updates\": {},\n", s.updates));
+    j.push_str(&format!("    \"versions_published\": {},\n", r.gateway.policy_published));
+    j.push_str(&format!("    \"final_version\": {},\n", s.final_version));
+    j.push_str(&format!("    \"experience_frames\": {},\n", s.exp_frames));
+    j.push_str(&format!("    \"stale_rejections\": {},\n", r.total_stale_rejections()));
+    j.push_str(&format!("    \"applied_stale\": {applied_stale},\n"));
+    j.push_str(&format!("    \"policy_resyncs\": {}\n", r.gateway.policy_resyncs));
+    j.push_str("  },\n");
+    j.push_str(&format!("  \"parity_gap_pct\": {:.4},\n", parity_gap_pct));
+    j.push_str("  \"gates\": {\n");
+    j.push_str("    \"max_parity_gap_pct\": 10.0,\n");
+    j.push_str(&format!("    \"parity_pass\": {parity_pass},\n"));
+    j.push_str(&format!("    \"zero_applied_stale_pass\": {stale_pass},\n"));
+    j.push_str(&format!("    \"version_monotonic_pass\": {monotonic}\n"));
+    j.push_str("  }\n}\n");
+    if let Err(e) = std::fs::write(&out_path, &j) {
+        eprintln!("could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+
+    // legacy Tables 2–4 smoke (real update/act artifacts) when present
     let dir = default_artifact_dir();
     if !dir.join("manifest.json").exists() {
-        println!("learning_smoke: no artifacts — run `make artifacts`");
+        println!("learning_smoke: no artifacts — skipping the encoder table");
         return;
     }
     let rt = Runtime::new(&dir).expect("runtime");
@@ -23,9 +188,8 @@ fn main() {
     )
     .expect("learning table");
     t.print();
-    for r in &rows {
-        assert!(r.updates > 0, "{}: no updates ran", r.arch);
-        assert!(r.best.is_finite());
+    for row in &rows {
+        assert!(row.updates > 0, "{}: no updates ran", row.arch);
+        assert!(row.best.is_finite());
     }
-    println!("\n(smoke scale: {} episodes/encoder; Tables 2-4 shapes need --scale tiny/paper)", rows[0].episodes);
 }

@@ -19,9 +19,13 @@ use anyhow::{Context, Result};
 use crate::codec::{self, CodecId, Encoder, RateConfig, RateController, CODEC_DELTA};
 use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
 use crate::envs::{CropMode, Env, Pendulum, PixelPipeline};
-use crate::net::framing::{FeatureFrame, Hello, Msg, Payload, Request};
+use crate::net::framing::{
+    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE, EXP_DONE,
+    EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED,
+};
 use crate::net::shaped::ShapedWriter;
 use crate::net::tcp::{read_msg, write_msg};
+use crate::rl::native::{episode_rng, normalize_pendulum_obs};
 use crate::runtime::Manifest;
 use crate::sim::clock::ClockHandle;
 use crate::shader::{compiled_from_manifest, CompiledPipeline, TextureFormat};
@@ -132,7 +136,11 @@ impl Sender_ {
 }
 
 /// Run one client against the server at `addr`.
-pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig) -> Result<ClientReport> {
+pub fn run_client(
+    addr: std::net::SocketAddr,
+    client_id: u32,
+    cfg: &ClientConfig,
+) -> Result<ClientReport> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true).ok();
     let mut recv = stream.try_clone()?;
@@ -188,6 +196,7 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
         client: client_id,
         split: cfg.mode == Route::Split,
         codec: if cfg.mode == Route::Split { cfg.codec.wire_id() } else { 0 },
+        caps: 0,
         shard: None,
     }))?;
 
@@ -364,6 +373,219 @@ pub fn run_client(addr: std::net::SocketAddr, client_id: u32, cfg: &ClientConfig
     report.final_qmax = delta.as_ref().map(|(_, rate)| rate.qmax()).unwrap_or(0);
     if let Sender_::Plain(ref mut s) = send {
         let _ = s.flush();
+    }
+    Ok(report)
+}
+
+/// One on-policy learning client (DESIGN.md §8): drives Pendulum locally
+/// and streams experience frames — codec-compressed observations plus
+/// the previous action's reward/done — to a learn-capable server, which
+/// acts, trains, and versions the policy. Capability is negotiated in
+/// the `Hello` handshake; a cleared `CAP_EXPERIENCE` bit (or an explicit
+/// error frame mid-run) downgrades the session to inference-only frames.
+#[derive(Debug, Clone)]
+pub struct LearnClientConfig {
+    /// episodes to complete before the final flush frame
+    pub episodes: usize,
+    /// per-episode environment streams (`episode_rng(seed, ep)`) — client
+    /// 0 at seed s replays the offline `rl::NativeTrainer` at seed s
+    pub seed: u64,
+    /// staleness bound the client re-checks on every applied action
+    pub max_lag: u64,
+}
+
+impl Default for LearnClientConfig {
+    fn default() -> Self {
+        LearnClientConfig { episodes: 10, seed: 0, max_lag: 4 }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct LearnClientReport {
+    /// per-episode undiscounted returns, in completion order
+    pub returns: Vec<f64>,
+    pub experience_frames: u64,
+    pub bytes_sent: u64,
+    /// actions refused by the staleness gate (client re-kicked the frame)
+    pub stale_rejections: u64,
+    /// actions applied whose version lag exceeded `max_lag` (must be 0)
+    pub applied_stale: u64,
+    /// server re-key demands observed
+    pub need_keyframes: u64,
+    /// highest policy version observed in response stamps
+    pub latest_version: u64,
+    /// the session was downgraded to inference-only frames
+    pub fallback: bool,
+    pub errors: usize,
+}
+
+/// Run one learning client against the server at `addr`.
+pub fn run_learn_client(
+    addr: std::net::SocketAddr,
+    client_id: u32,
+    cfg: &LearnClientConfig,
+) -> Result<LearnClientReport> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut recv = stream.try_clone()?;
+    let mut send = stream;
+    let mut report = LearnClientReport::default();
+
+    write_msg(
+        &mut send,
+        &Msg::Hello(Hello {
+            client: client_id,
+            split: true,
+            codec: CODEC_DELTA,
+            caps: CAP_EXPERIENCE,
+            shard: None,
+        }),
+    )?;
+    // negotiation barrier: both the codec verdict and the capability mask
+    // decide the first frame's format
+    let mut experience = loop {
+        match read_msg(&mut recv)? {
+            Some(Msg::Hello(ack)) => {
+                anyhow::ensure!(ack.codec == CODEC_DELTA, "server declined the delta codec");
+                break ack.caps & CAP_EXPERIENCE != 0;
+            }
+            Some(_) => continue, // stray traffic on a fresh connection
+            None => anyhow::bail!("server closed during capability negotiation"),
+        }
+    };
+    report.fallback = !experience;
+
+    let mut env = Pendulum::new();
+    let mut env_rng = episode_rng(cfg.seed, 0);
+    env.reset(&mut env_rng);
+    let max_a = env.max_action();
+    let mut encoder = Encoder::new();
+    let mut obs = vec![0.0f32; 3];
+    let mut qbuf: Vec<u8> = Vec::new();
+
+    let (mut ep, mut step) = (0u32, 0u32);
+    let mut ep_return = 0.0f64;
+    // reward/done of the previous action, carried by the next frame
+    let (mut frame_flags, mut pending_reward) = (EXP_EP_START, 0.0f32);
+    let mut id = 0u64;
+
+    loop {
+        if !experience && ep as usize >= cfg.episodes {
+            // inference-only sessions have nothing to flush server-side
+            break;
+        }
+        // frame (ep, step): the observation at this step
+        normalize_pendulum_obs(&env.state(), &mut obs);
+        let scale = codec::quantize_into(&obs, 255, &mut qbuf);
+        let mut data = Vec::new();
+        let (cflags, seq) = encoder.encode_into(&qbuf, &mut data);
+        let feat = FeatureFrame {
+            c: 3,
+            h: 1,
+            w: 1,
+            codec: CODEC_DELTA,
+            flags: cflags,
+            qmax: 255,
+            seq,
+            scale,
+            data,
+        };
+        let payload = if experience {
+            Payload::Experience(ExperienceFrame {
+                feat,
+                ep,
+                step,
+                flags: frame_flags,
+                reward: pending_reward,
+            })
+        } else {
+            Payload::FeaturesV2(feat)
+        };
+        report.bytes_sent += payload.wire_bytes() as u64;
+        if experience {
+            report.experience_frames += 1;
+        }
+        write_msg(&mut send, &Msg::Request(Request { client: client_id, id, payload }))?;
+        let sent_id = id;
+        id += 1;
+
+        // await the verdict for this frame
+        let action = loop {
+            match read_msg(&mut recv)? {
+                Some(Msg::ResponseLearn(r)) if r.id == sent_id => {
+                    report.latest_version = report.latest_version.max(r.latest_version);
+                    if r.need_keyframe() {
+                        encoder.force_keyframe();
+                        report.need_keyframes += 1;
+                        break None; // resend the same (ep, step)
+                    }
+                    if r.stale() {
+                        // the gate refused the acting version: re-kick the
+                        // same decision point, never step on a stale action
+                        report.stale_rejections += 1;
+                        break None;
+                    }
+                    if r.latest_version.saturating_sub(r.acting_version) > cfg.max_lag {
+                        report.applied_stale += 1;
+                    }
+                    break Some(r.action);
+                }
+                Some(Msg::Response(r)) if r.id == sent_id => break Some(r.action),
+                Some(Msg::ResponseV2(r)) if r.id == sent_id => {
+                    if r.need_keyframe() {
+                        encoder.force_keyframe();
+                        report.need_keyframes += 1;
+                        break None;
+                    }
+                    break Some(r.action);
+                }
+                Some(Msg::Error(e)) => {
+                    // explicit capability rejection: downgrade to
+                    // inference-only and resend this observation
+                    debug_assert_eq!(e.client, client_id);
+                    experience = false;
+                    report.fallback = true;
+                    report.errors += 1;
+                    encoder.force_keyframe();
+                    break None;
+                }
+                Some(_) => continue, // stale traffic
+                None => anyhow::bail!("server closed connection"),
+            }
+        };
+        let Some(action) = action else { continue };
+
+        if experience && ep as usize >= cfg.episodes {
+            // that was the flush frame: the final transition's reward is
+            // consumed server-side; the extra action is never applied
+            break;
+        }
+        if action.is_empty() {
+            report.errors += 1;
+        }
+        let a64: Vec<f64> = if action.is_empty() {
+            vec![0.0; env.action_dim()]
+        } else {
+            action.iter().map(|&v| (v as f64).clamp(-max_a, max_a)).collect()
+        };
+        let out = env.step(&a64);
+        ep_return += out.reward;
+        pending_reward = out.reward as f32;
+        frame_flags = EXP_HAS_REWARD;
+        if out.done() {
+            report.returns.push(ep_return);
+            ep_return = 0.0;
+            ep += 1;
+            step = 0;
+            frame_flags |= EXP_DONE | EXP_EP_START;
+            if out.terminated {
+                frame_flags |= EXP_TERMINATED;
+            }
+            let mut r = episode_rng(cfg.seed, ep as u64);
+            env.reset(&mut r);
+        } else {
+            step += 1;
+        }
     }
     Ok(report)
 }

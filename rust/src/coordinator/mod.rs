@@ -13,7 +13,10 @@ pub mod session;
 
 pub use arena::BatchArena;
 pub use batcher::{BatchCollector, BatchPolicy};
-pub use client::{merged_latencies, run_client, run_fleet, ClientConfig, ClientReport};
+pub use client::{
+    merged_latencies, run_client, run_fleet, run_learn_client, ClientConfig, ClientReport,
+    LearnClientConfig, LearnClientReport,
+};
 pub use metrics::Metrics;
 pub use router::{chunk_batches, pick_batch, Route};
 pub use server::{serve, Backend, ServerConfig, ServerHandle, SimSpec};

@@ -24,7 +24,9 @@ impl Route {
     pub fn of(payload: &Payload) -> Route {
         match payload {
             Payload::RawRgba { .. } => Route::Full,
-            Payload::Features { .. } | Payload::FeaturesV2(_) => Route::Split,
+            Payload::Features { .. } | Payload::FeaturesV2(_) | Payload::Experience(_) => {
+                Route::Split
+            }
         }
     }
 
@@ -102,6 +104,26 @@ mod tests {
                 seq: 1,
                 scale: 1.0,
                 data: vec![],
+            })),
+            Route::Split
+        );
+        assert_eq!(
+            Route::of(&Payload::Experience(crate::net::framing::ExperienceFrame {
+                feat: crate::net::framing::FeatureFrame {
+                    c: 3,
+                    h: 1,
+                    w: 1,
+                    codec: 1,
+                    flags: 1,
+                    qmax: 255,
+                    seq: 1,
+                    scale: 1.0,
+                    data: vec![],
+                },
+                ep: 0,
+                step: 0,
+                flags: 0,
+                reward: 0.0,
             })),
             Route::Split
         );

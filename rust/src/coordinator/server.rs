@@ -23,9 +23,11 @@ use anyhow::{Context, Result};
 use log::{debug, warn};
 
 use crate::codec::{CodecId, Decoders};
+use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
-    dequantize_features_into, encode_response_into, encode_response_v2_into, Hello, Msg, Payload,
-    Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
+    dequantize_features_into, encode_response_into, encode_response_learn_into,
+    encode_response_v2_into, ErrorMsg, Hello, Msg, Payload, Response, ResponseV2, CAP_EXPERIENCE,
+    ERR_EXPERIENCE_UNSUPPORTED, RESP_FLAG_NEED_KEYFRAME,
 };
 use crate::net::tcp::{read_msg, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
@@ -52,6 +54,12 @@ pub struct ServerConfig {
     pub shard_id: Option<u16>,
     /// inference engine behind the batcher
     pub backend: Backend,
+    /// online learning (DESIGN.md §8): when set, sessions may negotiate
+    /// [`CAP_EXPERIENCE`] and stream experience frames; the executor
+    /// runs a shard-local [`Learner`] over them. `None` disables the
+    /// capability — experience frames are answered with an explicit
+    /// error frame so clients fall back to inference-only.
+    pub learn: Option<LearnerConfig>,
     /// time source for queue-wait stamps, batch deadlines, and the Sim
     /// backend's modelled waits (the clock seam, DESIGN.md §6). Keep this
     /// the wall clock for a live server: the executor blocks in real-time
@@ -72,6 +80,7 @@ impl Default for ServerConfig {
             artifact_dir: crate::runtime::default_artifact_dir(),
             shard_id: None,
             backend: Backend::Pjrt,
+            learn: None,
             clock: ClockHandle::wall(),
         }
     }
@@ -147,6 +156,11 @@ enum Ingress {
 enum ExecEvent<'a> {
     /// a formed batch, borrowed from the executor's pooled batch buffer
     Batch(Route, &'a [super::batcher::Item<Work>]),
+    /// an experience frame (handled in ingress order, never batched: the
+    /// per-client (ep, step) discipline wants strict ordering, and the
+    /// gradient work is already amortised by segment batching in the
+    /// [`crate::learn::ExperienceBuffer`])
+    Experience(Work),
     /// a session's connect preamble reached this server
     Hello(u32),
     /// a session's connection closed
@@ -216,6 +230,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     // accept thread
     let acc_shutdown = shutdown.clone();
     let shard_id = cfg.shard_id;
+    let caps_mask = if cfg.learn.is_some() { CAP_EXPERIENCE } else { 0 };
     let acc_clock = cfg.clock.clone();
     let acceptor = std::thread::Builder::new()
         .name("mc-accept".into())
@@ -231,7 +246,9 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                         let clock = acc_clock.clone();
                         std::thread::Builder::new()
                             .name("mc-reader".into())
-                            .spawn(move || reader_main(s, tx, shutdown, shard_id, clock))
+                            .spawn(move || {
+                                reader_main(s, tx, shutdown, shard_id, caps_mask, clock)
+                            })
                             .ok();
                     }
                     Err(e) => {
@@ -251,6 +268,7 @@ fn reader_main(
     tx: Sender<Ingress>,
     shutdown: Arc<AtomicBool>,
     shard_id: Option<u16>,
+    caps_mask: u8,
     clock: ClockHandle,
 ) {
     let writer = match stream.try_clone() {
@@ -264,6 +282,9 @@ fn reader_main(
     // the session this connection carries (learned from its first frame),
     // so its codec stream state can be freed when the connection ends
     let mut session: Option<u32> = None;
+    // capabilities granted to this connection by its hello (requested
+    // caps masked down to what the server supports)
+    let mut granted: u8 = 0;
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
@@ -271,6 +292,20 @@ fn reader_main(
         match read_msg(&mut reader) {
             Ok(Some(Msg::Request(r))) => {
                 session = Some(r.client);
+                if matches!(r.payload, Payload::Experience(_)) && granted & CAP_EXPERIENCE == 0 {
+                    // explicit rejection (never silence): the client sees
+                    // exactly why and falls back to inference-only frames
+                    let err = Msg::Error(ErrorMsg {
+                        client: r.client,
+                        code: ERR_EXPERIENCE_UNSUPPORTED,
+                        detail: "experience frames were not negotiated on this session".into(),
+                    });
+                    let mut w = writer.lock().unwrap();
+                    if write_msg(&mut *w, &err).is_err() {
+                        break;
+                    }
+                    continue;
+                }
                 let work = Work {
                     client: r.client,
                     id: r.id,
@@ -293,15 +328,24 @@ fn reader_main(
                     break;
                 }
                 let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
-                let ack =
-                    Msg::Hello(Hello { client: h.client, split: h.split, codec, shard: shard_id });
+                granted = h.caps & caps_mask;
+                let ack = Msg::Hello(Hello {
+                    client: h.client,
+                    split: h.split,
+                    codec,
+                    caps: granted,
+                    shard: shard_id,
+                });
                 let mut w = writer.lock().unwrap();
                 if write_msg(&mut *w, &ack).is_err() {
                     break;
                 }
             }
-            Ok(Some(Msg::Response(_) | Msg::ResponseV2(_))) => {
-                warn!("client sent a response; ignoring");
+            Ok(Some(
+                Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_)
+                | Msg::Policy(_),
+            )) => {
+                warn!("client sent a server-side frame; ignoring");
             }
             Ok(None) => break, // clean EOF
             Err(e) => {
@@ -328,6 +372,84 @@ struct RouteExec {
     prefix: String,
     /// preallocated output `Value` storage, reused across batches
     outs: Vec<Value>,
+}
+
+/// Shard-local online learning behind the executor (DESIGN.md §8): the
+/// [`Learner`] plus a local [`PolicyStore`] so direct-connected
+/// (non-gateway) deployments still hand out monotonically versioned
+/// snapshots. Published parameters are self-adopted immediately, so the
+/// acting policy lags the latest version by at most one publish and the
+/// staleness gate is trivially satisfied; gateway-coordinated fan-out
+/// (where real lag appears) is modelled by the simnet scenario runner.
+struct LearnExec {
+    learner: Learner,
+    store: PolicyStore,
+    /// pooled dequantised-observation scratch
+    obs: Vec<f32>,
+    /// pooled reply frame
+    frame: Vec<u8>,
+}
+
+impl LearnExec {
+    fn new(cfg: LearnerConfig) -> LearnExec {
+        LearnExec {
+            learner: Learner::new(cfg),
+            store: PolicyStore::new(),
+            obs: Vec::new(),
+            frame: Vec::new(),
+        }
+    }
+
+    /// Decode, learn, act, reply. An undecodable codec frame answers with
+    /// an empty need-keyframe reply, exactly like the inference path.
+    fn handle(&mut self, codecs: &mut Decoders, w: &Work) -> Result<()> {
+        let Payload::Experience(e) = &w.payload else { return Ok(()) };
+        let flen = e.feat.feat_len();
+        self.obs.clear();
+        self.obs.resize(flen, 0.0);
+        if codecs.decode_into(w.client, &e.feat, &mut self.obs).is_err() {
+            encode_response_learn_into(
+                w.client,
+                w.id,
+                e.feat.seq,
+                RESP_FLAG_NEED_KEYFRAME,
+                self.learner.acting_version,
+                self.store.version(),
+                &[],
+                &mut self.frame,
+            );
+        } else {
+            let step = self.learner.on_frame(
+                w.client,
+                &self.obs,
+                e.ep,
+                e.step,
+                e.has_reward(),
+                e.reward,
+                e.done(),
+                e.terminated(),
+            )?;
+            if let Some(params) = step.publish {
+                let v = self.store.publish(&params);
+                self.learner.adopt(v, &params)?;
+            }
+            encode_response_learn_into(
+                w.client,
+                w.id,
+                e.feat.seq,
+                0,
+                step.acting_version,
+                self.store.version(),
+                &step.action,
+                &mut self.frame,
+            );
+        }
+        let mut wtr = w.reply.lock().unwrap();
+        if let Err(e) = write_frame(&mut *wtr, &self.frame) {
+            debug!("learn reply to client {}: {e}", w.client);
+        }
+        Ok(())
+    }
 }
 
 fn executor_main(
@@ -392,12 +514,19 @@ fn executor_loop<F>(
                             }
                         }
                         Ingress::Work(w) => {
-                            // a saturated push hands the work back, so the
-                            // reply handle is only touched (and never
-                            // cloned) on the rejection path
-                            let route = Route::of(&w.payload);
-                            if let Some(rejected) = collector.push(route, w, now) {
-                                reject_work(rejected);
+                            if matches!(w.payload, Payload::Experience(_)) {
+                                // never batched: strict ingress order
+                                if let Err(e) = run(ExecEvent::Experience(w)) {
+                                    warn!("experience frame failed: {e:#}");
+                                }
+                            } else {
+                                // a saturated push hands the work back, so
+                                // the reply handle is only touched (and
+                                // never cloned) on the rejection path
+                                let route = Route::of(&w.payload);
+                                if let Some(rejected) = collector.push(route, w, now) {
+                                    reject_work(rejected);
+                                }
                             }
                         }
                     }
@@ -482,6 +611,7 @@ fn executor_pjrt(
     let mut sessions = SessionManager::new();
     let mut codecs = Decoders::new();
     let mut arena = BatchArena::new();
+    let mut learn = cfg.learn.clone().map(LearnExec::new);
     let clock = cfg.clock.clone();
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
         ExecEvent::Hello(client) => {
@@ -491,8 +621,16 @@ fn executor_pjrt(
         }
         ExecEvent::Disconnect(client) => {
             codecs.disconnect(client);
+            if let Some(l) = learn.as_mut() {
+                l.learner.buf.drop_client(client);
+            }
             Ok(())
         }
+        ExecEvent::Experience(w) => match learn.as_mut() {
+            Some(l) => l.handle(&mut codecs, &w),
+            // unreachable behind the reader's caps gate; drop defensively
+            None => Ok(()),
+        },
         ExecEvent::Batch(route, items) => {
             let exec = match route {
                 Route::Split => &mut split,
@@ -587,6 +725,7 @@ fn executor_sim(
     let mut codecs = Decoders::new();
     let mut encoder = SimEncoder::new();
     let mut arena = BatchArena::new();
+    let mut learn = cfg.learn.clone().map(LearnExec::new);
     let clock = cfg.clock.clone();
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
         ExecEvent::Hello(client) => {
@@ -595,8 +734,15 @@ fn executor_sim(
         }
         ExecEvent::Disconnect(client) => {
             codecs.disconnect(client);
+            if let Some(l) = learn.as_mut() {
+                l.learner.buf.drop_client(client);
+            }
             Ok(())
         }
+        ExecEvent::Experience(w) => match learn.as_mut() {
+            Some(l) => l.handle(&mut codecs, &w),
+            None => Ok(()),
+        },
         ExecEvent::Batch(route, items) => run_batch_sim(
             &spec,
             route,
@@ -643,6 +789,9 @@ fn run_batch_sim(
             Payload::RawRgba { x, .. } => 9 * (*x as usize) * (*x as usize),
             Payload::Features { .. } => 0,
             Payload::FeaturesV2(f) => f.feat_len(),
+            // experience frames never enter the batcher (executor_loop
+            // dispatches them in ingress order)
+            Payload::Experience(_) => 0,
         })
         .max()
         .unwrap_or(0);
@@ -666,7 +815,7 @@ fn run_batch_sim(
                     encoder.to_encode.push((i, x));
                 }
             }
-            Payload::Features { .. } => {}
+            Payload::Features { .. } | Payload::Experience(_) => {}
             Payload::FeaturesV2(f) => {
                 let flen = f.feat_len();
                 let row = arena.row_mut(i);
@@ -826,6 +975,8 @@ fn run_batch(
                     true
                 }
             }
+            // never batched (executor_loop handles experience directly)
+            Payload::Experience(_) => false,
         };
         if failed {
             arena.need_key[i] = true;

@@ -303,7 +303,8 @@ fn gw_conn(
     let session = match &first {
         Msg::Hello(h) => h.client,
         Msg::Request(r) => r.client,
-        Msg::Response(_) | Msg::ResponseV2(_) => bail!("client opened with a response frame"),
+        Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_)
+        | Msg::Policy(_) => bail!("client opened with a server-side frame"),
     };
 
     // consistent-hash placement, re-routing around shards that refuse the
@@ -376,6 +377,10 @@ fn pump_session(
                 client: h.client,
                 split: h.split,
                 codec,
+                // the threaded gateway does not negotiate experience
+                // streaming (learning clients connect shard-direct;
+                // the simnet gateway models versioned fan-out)
+                caps: 0,
                 shard: Some(shard_id.0),
             }),
         )?;
@@ -499,7 +504,10 @@ mod tests {
         let gw = gateway_over(&[&s0, &s1]);
 
         let mut conn = TcpStream::connect(gw.addr).unwrap();
-        write_msg(&mut conn, &Msg::Hello(Hello { client: 5, split: false, codec: 0, shard: None }))
+        write_msg(
+            &mut conn,
+            &Msg::Hello(Hello { client: 5, split: false, codec: 0, caps: 0, shard: None }),
+        )
             .unwrap();
         let ack = read_msg(&mut conn).unwrap().unwrap();
         let assigned = match ack {
@@ -545,7 +553,10 @@ mod tests {
         gw.set_shard_state(ShardId(0), ShardState::Down);
 
         let mut conn = TcpStream::connect(gw.addr).unwrap();
-        write_msg(&mut conn, &Msg::Hello(Hello { client: 1, split: false, codec: 0, shard: None }))
+        write_msg(
+            &mut conn,
+            &Msg::Hello(Hello { client: 1, split: false, codec: 0, caps: 0, shard: None }),
+        )
             .unwrap();
         // gateway closes without an ack
         assert!(matches!(read_msg(&mut conn), Ok(None) | Err(_)));
@@ -578,7 +589,13 @@ mod tests {
             let mut conn = TcpStream::connect(gw.addr).unwrap();
             write_msg(
                 &mut conn,
-                &Msg::Hello(Hello { client: session, split: false, codec: 0, shard: None }),
+                &Msg::Hello(Hello {
+                    client: session,
+                    split: false,
+                    codec: 0,
+                    caps: 0,
+                    shard: None,
+                }),
             )
             .unwrap();
             match read_msg(&mut conn).unwrap() {

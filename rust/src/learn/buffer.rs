@@ -1,0 +1,262 @@
+//! Per-shard experience ingestion (DESIGN.md §8): each client streaming
+//! experience frames gets its own pending decision + rollout track, so
+//! GAE chains never cross client trajectories, and the (episode, step)
+//! sequence discipline makes reward completion exactly-once under
+//! retransmits, reconnects, and mid-episode failover.
+//!
+//! Protocol recap: frame (ep, step) carries the observation *at* that
+//! step plus (when flagged) the reward/done of the *previous* action.
+//! The buffer completes the pending transition only when the frame is
+//! the pending step's direct successor — same episode next step, or
+//! step 0 of the next episode. Anything else (failover onto a shard
+//! that never saw the pending step, a stream restarting after a crash)
+//! drops the pending decision and cuts the GAE chain at the last pushed
+//! transition instead of corrupting it with a cross-gap bootstrap.
+
+use std::collections::BTreeMap;
+
+use crate::rl::Rollout;
+
+/// A decision handed out but not yet completed by its reward frame.
+#[derive(Debug, Clone)]
+pub struct PendingStep {
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub logp: f32,
+    pub value: f32,
+    pub ep: u32,
+    pub step: u32,
+    /// policy version the action was computed under
+    pub version: u64,
+}
+
+/// What an incoming experience frame meant for the client's track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameDisposition {
+    /// same (ep, step) as the live pending decision: a retransmit
+    Duplicate,
+    /// reward consumed, pending pushed; `full` = segment ready to train
+    Completed { full: bool },
+    /// no (or mismatched) pending — fresh decision point
+    Fresh,
+}
+
+#[derive(Debug, Default)]
+struct ClientTrack {
+    pending: Option<PendingStep>,
+    rollout: Option<Rollout>,
+}
+
+/// All learning state a shard keeps per connected client.
+#[derive(Debug)]
+pub struct ExperienceBuffer {
+    rollout_steps: usize,
+    obs_len: usize,
+    act_len: usize,
+    tracks: BTreeMap<u32, ClientTrack>,
+    /// transitions completed into rollouts
+    pub completed: u64,
+    /// reward-bearing frames that could not complete a pending decision
+    pub dropped_incomplete: u64,
+    /// GAE chains cut after a dropped pending decision
+    pub chain_cuts: u64,
+    /// retransmitted decision frames answered from the pending slot
+    pub duplicates: u64,
+}
+
+impl ExperienceBuffer {
+    pub fn new(rollout_steps: usize, obs_len: usize, act_len: usize) -> ExperienceBuffer {
+        ExperienceBuffer {
+            rollout_steps,
+            obs_len,
+            act_len,
+            tracks: BTreeMap::new(),
+            completed: 0,
+            dropped_incomplete: 0,
+            chain_cuts: 0,
+            duplicates: 0,
+        }
+    }
+
+    /// Classify frame (ep, step) against the client's pending decision,
+    /// consuming the carried reward when it is the direct successor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_frame(
+        &mut self,
+        client: u32,
+        ep: u32,
+        step: u32,
+        has_reward: bool,
+        reward: f32,
+        done: bool,
+        terminated: bool,
+    ) -> FrameDisposition {
+        let track = self.tracks.entry(client).or_default();
+        let Some(p) = track.pending.as_ref() else {
+            if has_reward {
+                self.dropped_incomplete += 1;
+            }
+            return FrameDisposition::Fresh;
+        };
+        if (ep, step) == (p.ep, p.step) {
+            self.duplicates += 1;
+            return FrameDisposition::Duplicate;
+        }
+        let successor = (ep == p.ep && step == p.step + 1) || (ep == p.ep + 1 && step == 0);
+        if has_reward && successor {
+            let p = track.pending.take().unwrap();
+            let ro = track.rollout.get_or_insert_with(|| {
+                Rollout::new(self.rollout_steps, self.obs_len, self.act_len)
+            });
+            ro.push(&p.obs, &p.act, p.logp, p.value, reward, done, terminated);
+            self.completed += 1;
+            return FrameDisposition::Completed { full: ro.full() };
+        }
+        // out-of-sequence frame: the pending decision's reward is lost.
+        // Drop it and cut the GAE chain so the gap never bootstraps.
+        track.pending = None;
+        self.dropped_incomplete += 1;
+        if let Some(ro) = track.rollout.as_mut() {
+            if !ro.is_empty() && *ro.done.last().unwrap() == 0.0 {
+                *ro.done.last_mut().unwrap() = 1.0;
+                self.chain_cuts += 1;
+            }
+        }
+        FrameDisposition::Fresh
+    }
+
+    pub fn set_pending(&mut self, client: u32, pending: PendingStep) {
+        self.tracks.entry(client).or_default().pending = Some(pending);
+    }
+
+    pub fn pending(&self, client: u32) -> Option<&PendingStep> {
+        self.tracks.get(&client).and_then(|t| t.pending.as_ref())
+    }
+
+    pub fn pending_mut(&mut self, client: u32) -> Option<&mut PendingStep> {
+        self.tracks.get_mut(&client).and_then(|t| t.pending.as_mut())
+    }
+
+    /// The client's rollout segment (created lazily on first completion).
+    pub fn rollout_mut(&mut self, client: u32) -> Option<&mut Rollout> {
+        self.tracks.get_mut(&client).and_then(|t| t.rollout.as_mut())
+    }
+
+    /// Forget a client entirely (disconnect / session eviction).
+    pub fn drop_client(&mut self, client: u32) {
+        self.tracks.remove(&client);
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.tracks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf() -> ExperienceBuffer {
+        ExperienceBuffer::new(4, 2, 1)
+    }
+
+    fn pend(ep: u32, step: u32) -> PendingStep {
+        PendingStep {
+            obs: vec![0.1, 0.2],
+            act: vec![0.5],
+            logp: -1.0,
+            value: 0.3,
+            ep,
+            step,
+            version: 7,
+        }
+    }
+
+    #[test]
+    fn first_frame_is_fresh_and_drops_nothing() {
+        let mut b = buf();
+        assert_eq!(b.on_frame(1, 0, 0, false, 0.0, false, false), FrameDisposition::Fresh);
+        assert_eq!(b.dropped_incomplete, 0);
+    }
+
+    #[test]
+    fn successor_frame_completes_within_episode_and_across_episodes() {
+        let mut b = buf();
+        b.set_pending(1, pend(0, 3));
+        assert_eq!(
+            b.on_frame(1, 0, 4, true, -1.5, false, false),
+            FrameDisposition::Completed { full: false }
+        );
+        assert_eq!(b.completed, 1);
+        // episode boundary: step 0 of the next episode completes too
+        b.set_pending(1, pend(0, 199));
+        assert_eq!(
+            b.on_frame(1, 1, 0, true, -2.0, true, false),
+            FrameDisposition::Completed { full: false }
+        );
+        let ro = b.rollout_mut(1).unwrap();
+        assert_eq!(ro.len(), 2);
+        assert_eq!(ro.rew, vec![-1.5, -2.0]);
+        assert_eq!(ro.done, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn duplicate_frame_is_flagged_not_double_pushed() {
+        let mut b = buf();
+        b.set_pending(1, pend(2, 5));
+        assert_eq!(b.on_frame(1, 2, 5, false, 0.0, false, false), FrameDisposition::Duplicate);
+        assert_eq!(
+            b.on_frame(1, 2, 6, true, -1.0, false, false),
+            FrameDisposition::Completed { full: false }
+        );
+        // a late retransmit of the *completed* frame no longer matches a
+        // pending decision; its stale reward is dropped, never re-pushed
+        assert_eq!(b.on_frame(1, 2, 6, true, -1.0, false, false), FrameDisposition::Fresh);
+        assert_eq!(b.completed, 1);
+        assert_eq!(b.duplicates, 1);
+        assert_eq!(b.dropped_incomplete, 1);
+    }
+
+    #[test]
+    fn gap_drops_pending_and_cuts_chain() {
+        let mut b = buf();
+        b.set_pending(1, pend(0, 0));
+        b.on_frame(1, 0, 1, true, -1.0, false, false);
+        b.set_pending(1, pend(0, 1));
+        // client skipped ahead (e.g. served elsewhere): gap
+        assert_eq!(b.on_frame(1, 0, 7, true, -9.0, false, false), FrameDisposition::Fresh);
+        assert_eq!(b.dropped_incomplete, 1);
+        assert_eq!(b.chain_cuts, 1);
+        let ro = b.rollout_mut(1).unwrap();
+        assert_eq!(ro.len(), 1);
+        assert_eq!(ro.done, vec![1.0]); // chain cut at the last push
+        assert_eq!(ro.terminated, vec![0.0]); // ...but not terminated
+    }
+
+    #[test]
+    fn tracks_are_per_client() {
+        let mut b = buf();
+        b.set_pending(1, pend(0, 0));
+        b.set_pending(2, pend(0, 0));
+        b.on_frame(1, 0, 1, true, -1.0, false, false);
+        assert!(b.pending(1).is_none());
+        assert!(b.pending(2).is_some());
+        assert_eq!(b.n_clients(), 2);
+        b.drop_client(2);
+        assert_eq!(b.n_clients(), 1);
+        assert!(b.pending(2).is_none());
+    }
+
+    #[test]
+    fn full_segment_is_reported() {
+        let mut b = buf();
+        for i in 0..4u32 {
+            b.set_pending(1, pend(0, i));
+            let full = matches!(
+                b.on_frame(1, 0, i + 1, true, -1.0, false, false),
+                FrameDisposition::Completed { full: true }
+            );
+            assert_eq!(full, i == 3, "step {i}");
+        }
+    }
+}

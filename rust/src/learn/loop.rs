@@ -1,0 +1,261 @@
+//! The shard-side online learning loop (DESIGN.md §8): one [`Learner`]
+//! per shard executor turns decoded experience frames into actions,
+//! PPO segment updates, and policy publications.
+//!
+//! Call-order contract (what makes an ideal-link fleet run bit-identical
+//! to the offline `rl::NativeTrainer` at the same seed): per frame —
+//! complete the pending transition, then on a full segment bootstrap
+//! with `value(obs)` *before* updating, run the PPO epochs, and only
+//! then `act(obs)` for the new decision. `act` and `run_ppo_epochs` are
+//! the only rng consumers, in exactly the offline order.
+
+use anyhow::Result;
+
+use crate::rl::native::{NativeConfig, NativeCore};
+
+use super::buffer::{ExperienceBuffer, FrameDisposition, PendingStep};
+
+/// Loop knobs layered over the core hyperparameters.
+#[derive(Debug, Clone)]
+pub struct LearnerConfig {
+    pub core: NativeConfig,
+    /// PPO segment length (per client track)
+    pub rollout_steps: usize,
+    pub ppo_epochs: usize,
+    pub gae_lambda: f64,
+    /// publish the policy every n segment updates (0 = never)
+    pub publish_every: usize,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        LearnerConfig {
+            core: NativeConfig::default(),
+            rollout_steps: 256,
+            ppo_epochs: 10,
+            gae_lambda: 0.95,
+            publish_every: 1,
+        }
+    }
+}
+
+/// What a frame produced: the action to send back, the policy version it
+/// was computed under, and (optionally) parameters to publish.
+#[derive(Debug)]
+pub struct LearnStep {
+    pub action: Vec<f32>,
+    pub acting_version: u64,
+    /// a PPO segment update ran on this frame
+    pub updated: bool,
+    /// parameters due for publication (gateway assigns the version)
+    pub publish: Option<Vec<f32>>,
+}
+
+#[derive(Debug)]
+pub struct Learner {
+    pub core: NativeCore,
+    pub buf: ExperienceBuffer,
+    cfg: LearnerConfig,
+    /// version of the policy currently acting (0 until first adoption)
+    pub acting_version: u64,
+    /// segment updates run
+    pub updates: u64,
+    /// parameter vectors handed out for publication
+    pub published: u64,
+    /// adoptions applied, in order (strictly increasing versions)
+    pub adopted_versions: Vec<u64>,
+    since_publish: usize,
+}
+
+impl Learner {
+    pub fn new(cfg: LearnerConfig) -> Learner {
+        let buf = ExperienceBuffer::new(cfg.rollout_steps, cfg.core.obs_len, cfg.core.act_len);
+        Learner {
+            core: NativeCore::new(cfg.core.clone()),
+            buf,
+            cfg,
+            acting_version: 0,
+            updates: 0,
+            published: 0,
+            adopted_versions: Vec::new(),
+            since_publish: 0,
+        }
+    }
+
+    /// Handle one decoded experience frame from `client`: `obs` is the
+    /// dequantised feature vector at (ep, step); the reward fields
+    /// describe the previous action when `has_reward`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_frame(
+        &mut self,
+        client: u32,
+        obs: &[f32],
+        ep: u32,
+        step: u32,
+        has_reward: bool,
+        reward: f32,
+        done: bool,
+        terminated: bool,
+    ) -> Result<LearnStep> {
+        let disp = self.buf.on_frame(client, ep, step, has_reward, reward, done, terminated);
+        if disp == FrameDisposition::Duplicate {
+            let acting = self.acting_version;
+            let p = self.buf.pending_mut(client).expect("duplicate implies pending");
+            if p.version == acting {
+                // retransmit: answer with the stored decision so the
+                // client can never apply an action the rollout disagrees
+                // with (exactly-once act() per (ep, step))
+                return Ok(LearnStep {
+                    action: p.act.clone(),
+                    acting_version: p.version,
+                    updated: false,
+                    publish: None,
+                });
+            }
+            // the pending decision predates an adopted policy (it was
+            // stale-rejected downstream): re-decide under the new policy
+            // and overwrite the slot — nothing was pushed yet
+            let (a, logp, v) = self.core.act(obs);
+            let p = self.buf.pending_mut(client).expect("still pending");
+            p.obs.clear();
+            p.obs.extend_from_slice(obs);
+            p.act.clone_from(&a);
+            p.logp = logp;
+            p.value = v;
+            p.version = acting;
+            return Ok(LearnStep {
+                action: a,
+                acting_version: acting,
+                updated: false,
+                publish: None,
+            });
+        }
+
+        let mut updated = false;
+        let mut publish = None;
+        if disp == (FrameDisposition::Completed { full: true }) {
+            // bootstrap with pre-update parameters, then learn
+            let last_v = self.core.value(obs);
+            let ro = self.buf.rollout_mut(client).expect("full implies rollout");
+            let (adv, ret) = ro.gae(self.cfg.core.gamma, self.cfg.gae_lambda, last_v);
+            self.core.run_ppo_epochs(ro, &adv, &ret, self.cfg.ppo_epochs)?;
+            ro.clear();
+            self.updates += 1;
+            self.since_publish += 1;
+            updated = true;
+            if self.cfg.publish_every > 0 && self.since_publish >= self.cfg.publish_every {
+                self.since_publish = 0;
+                self.published += 1;
+                publish = Some(self.core.params().to_vec());
+            }
+        }
+        let (a, logp, v) = self.core.act(obs);
+        self.buf.set_pending(
+            client,
+            PendingStep {
+                obs: obs.to_vec(),
+                act: a.clone(),
+                logp,
+                value: v,
+                ep,
+                step,
+                version: self.acting_version,
+            },
+        );
+        Ok(LearnStep { action: a, acting_version: self.acting_version, updated, publish })
+    }
+
+    /// Adopt a fanned-out policy version. Older or already-adopted
+    /// versions are ignored, so adoption is exactly-once per version and
+    /// `adopted_versions` is strictly increasing by construction.
+    pub fn adopt(&mut self, version: u64, params: &[f32]) -> Result<bool> {
+        if version <= self.acting_version {
+            return Ok(false);
+        }
+        self.core.set_params(params)?;
+        self.acting_version = version;
+        self.adopted_versions.push(version);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn learner() -> Learner {
+        Learner::new(LearnerConfig {
+            core: NativeConfig { hidden: 8, minibatch: 4, seed: 5, ..NativeConfig::default() },
+            rollout_steps: 8,
+            ppo_epochs: 2,
+            gae_lambda: 0.95,
+            publish_every: 1,
+        })
+    }
+
+    fn obs(i: u32) -> Vec<f32> {
+        vec![0.1 + i as f32 * 1e-3, 0.5, 0.9 - i as f32 * 1e-3]
+    }
+
+    #[test]
+    fn stream_trains_and_publishes_on_segment_boundary() {
+        let mut l = learner();
+        let s0 = l.on_frame(1, &obs(0), 0, 0, false, 0.0, false, false).unwrap();
+        assert!(!s0.updated);
+        assert_eq!(s0.acting_version, 0);
+        let mut updates = 0;
+        for i in 1..=9u32 {
+            let s = l.on_frame(1, &obs(i), 0, i, true, -1.0, false, false).unwrap();
+            if s.updated {
+                updates += 1;
+                assert!(s.publish.is_some(), "publish_every=1 publishes on update");
+            }
+        }
+        // 9 completions over an 8-step segment: exactly one update
+        assert_eq!(updates, 1);
+        assert_eq!(l.updates, 1);
+        assert_eq!(l.published, 1);
+        assert_eq!(l.buf.completed, 9);
+    }
+
+    #[test]
+    fn duplicate_frame_replays_the_stored_action() {
+        let mut l = learner();
+        let s0 = l.on_frame(1, &obs(0), 0, 0, false, 0.0, false, false).unwrap();
+        let dup = l.on_frame(1, &obs(0), 0, 0, false, 0.0, false, false).unwrap();
+        assert_eq!(dup.action, s0.action);
+        assert_eq!(l.buf.duplicates, 1);
+    }
+
+    #[test]
+    fn duplicate_after_adoption_redecides_under_new_policy() {
+        let mut l = learner();
+        let s0 = l.on_frame(1, &obs(0), 0, 0, false, 0.0, false, false).unwrap();
+        let fresh = NativeCore::new(NativeConfig {
+            hidden: 8,
+            minibatch: 4,
+            seed: 99,
+            ..NativeConfig::default()
+        });
+        assert!(l.adopt(3, &fresh.params().to_vec()).unwrap());
+        let dup = l.on_frame(1, &obs(0), 0, 0, false, 0.0, false, false).unwrap();
+        assert_eq!(dup.acting_version, 3);
+        assert_ne!(dup.action, s0.action);
+        // and the pending slot now agrees with what the client applies
+        assert_eq!(l.buf.pending(1).unwrap().act, dup.action);
+    }
+
+    #[test]
+    fn adoption_is_monotonic_exactly_once() {
+        let mut l = learner();
+        let p = l.core.params().to_vec();
+        assert!(l.adopt(2, &p).unwrap());
+        assert!(!l.adopt(2, &p).unwrap());
+        assert!(!l.adopt(1, &p).unwrap());
+        assert!(l.adopt(5, &p).unwrap());
+        assert_eq!(l.adopted_versions, vec![2, 5]);
+        // stale adoptions skip the size check; fresh ones enforce it
+        assert!(!l.adopt(5, &p[1..]).unwrap());
+        assert!(l.adopt(6, &p[1..]).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Fleet-scale online learning (DESIGN.md §8): train through the serving
+//! stack instead of beside it. Split clients stream codec-compressed
+//! features plus rewards over experience frames (`net::framing`), shard
+//! executors feed per-client rollout tracks in an [`ExperienceBuffer`]
+//! and run PPO segment updates on the shared `rl::native` engine
+//! ([`Learner`]), and a versioned [`PolicyStore`] fans policy snapshots
+//! out through the gateway with a staleness bound (`max_lag`).
+
+pub mod buffer;
+#[path = "loop.rs"]
+pub mod online;
+pub mod policy_store;
+
+pub use buffer::{ExperienceBuffer, FrameDisposition, PendingStep};
+pub use online::{LearnStep, Learner, LearnerConfig};
+pub use policy_store::{PolicySnapshot, PolicyStore};

@@ -14,7 +14,9 @@
 //!   [`codec`] (delta + entropy-packed wire format with closed-loop rate
 //!   control, DESIGN.md §7), the deterministic [`sim`]
 //!   substrate (virtual clock + chaos-scenario simnet, DESIGN.md §6),
-//!   pixel-observation [`envs`], and the generic [`rl`] trainer.
+//!   pixel-observation [`envs`], the generic [`rl`] trainer plus the
+//!   native PPO engine, and the online [`learn`] subsystem (experience
+//!   streaming + versioned policy fan-out, DESIGN.md §8).
 //!
 //! Scale-out path: `coordinator::serve` is one shard; `fleet::launch_local`
 //! (or an out-of-process gateway via `fleet::serve_gateway`) runs N of them
@@ -36,6 +38,7 @@ pub mod sim;
 pub mod coordinator;
 pub mod fleet;
 pub mod rl;
+pub mod learn;
 pub mod analysis;
 pub mod telemetry;
 pub mod experiments;

@@ -27,11 +27,48 @@ pub const MSG_HELLO: u8 = 4;
 pub const MSG_REQUEST_FEAT_V2: u8 = 5;
 /// Response with codec feedback (ack of a [`MSG_REQUEST_FEAT_V2`] frame).
 pub const MSG_RESPONSE_V2: u8 = 6;
+/// Experience frame: a v2 feature frame plus reward/done telemetry for
+/// the online learning loop (`crate::learn`, DESIGN.md §8). Requires the
+/// [`CAP_EXPERIENCE`] capability negotiated in the `Hello` handshake.
+pub const MSG_EXPERIENCE: u8 = 7;
+/// Response to an experience frame: action + policy version stamps.
+pub const MSG_RESPONSE_LEARN: u8 = 8;
+/// Explicit protocol error (e.g. an experience frame on a session that
+/// never negotiated [`CAP_EXPERIENCE`]).
+pub const MSG_ERROR: u8 = 9;
+/// Policy fan-out: a versioned flat parameter vector.
+pub const MSG_POLICY: u8 = 10;
 
 /// [`ResponseV2::flags`] bit: the server could not decode the frame
 /// (chain break, stale base, corrupt payload) — the client must send a
 /// keyframe next.
 pub const RESP_FLAG_NEED_KEYFRAME: u8 = 1;
+/// [`ResponseLearn::flags`] bit: the action was rejected because the
+/// acting policy version trailed the latest published version by more
+/// than the fleet's staleness bound (`max_lag`). The action vector is
+/// empty; the client must retry once the shard resyncs.
+pub const RESP_FLAG_STALE: u8 = 2;
+
+/// [`Hello::caps`] bit: the session may carry [`MSG_EXPERIENCE`] frames.
+/// The server's ack masks the request down to what it supports; a client
+/// whose bit comes back cleared falls back to inference-only frames.
+pub const CAP_EXPERIENCE: u8 = 1;
+
+/// [`ErrorMsg::code`]: experience frame on a session without the
+/// negotiated [`CAP_EXPERIENCE`] capability.
+pub const ERR_EXPERIENCE_UNSUPPORTED: u8 = 1;
+
+/// [`ExperienceFrame::flags`] bit: the frame carries the reward/done of
+/// the previous action (absent only on the first frame of a stream).
+pub const EXP_HAS_REWARD: u8 = 1;
+/// [`ExperienceFrame::flags`] bit: the previous action ended its episode.
+pub const EXP_DONE: u8 = 2;
+/// [`ExperienceFrame::flags`] bit: the episode ended by termination (not
+/// time-limit truncation) — the GAE bootstrap distinction.
+pub const EXP_TERMINATED: u8 = 4;
+/// [`ExperienceFrame::flags`] bit: this observation opens a new episode
+/// (step must be 0).
+pub const EXP_EP_START: u8 = 8;
 
 /// Maximum accepted frame body (64 MB — a 4000² RGBA frame is 64 MB).
 pub const MAX_FRAME: usize = 64 << 20;
@@ -65,6 +102,36 @@ impl FeatureFrame {
     }
 }
 
+/// An experience frame: a codec feature frame (the observation at
+/// (`ep`, `step`)) plus the reward/done outcome of the *previous* action
+/// (DESIGN.md §8). The (episode, step) pair is the exactly-once sequence
+/// key the shard's `learn::ExperienceBuffer` completes transitions by.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperienceFrame {
+    pub feat: FeatureFrame,
+    pub ep: u32,
+    pub step: u32,
+    /// `EXP_*` bits
+    pub flags: u8,
+    /// reward of the previous action (valid when [`EXP_HAS_REWARD`])
+    pub reward: f32,
+}
+
+impl ExperienceFrame {
+    pub fn has_reward(&self) -> bool {
+        self.flags & EXP_HAS_REWARD != 0
+    }
+    pub fn done(&self) -> bool {
+        self.flags & EXP_DONE != 0
+    }
+    pub fn terminated(&self) -> bool {
+        self.flags & EXP_TERMINATED != 0
+    }
+    pub fn ep_start(&self) -> bool {
+        self.flags & EXP_EP_START != 0
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     /// Full RGBA observation, x·x·4 bytes (server-only pipeline).
@@ -73,16 +140,20 @@ pub enum Payload {
     Features { c: u16, h: u16, w: u16, scale: f32, data: Vec<u8> },
     /// Codec-encoded feature map (split pipeline, negotiated format).
     FeaturesV2(FeatureFrame),
+    /// Feature frame + reward telemetry (online learning loop).
+    Experience(ExperienceFrame),
 }
 
 impl Payload {
     /// Bytes this payload puts on the wire (body only) — the quantity the
-    /// paper's bandwidth model counts.
+    /// paper's bandwidth model counts. Experience frames also count their
+    /// reward telemetry (ep + step + flags + reward = 13 bytes).
     pub fn wire_bytes(&self) -> usize {
         match self {
             Payload::RawRgba { data, .. } => data.len(),
             Payload::Features { data, .. } => data.len(),
             Payload::FeaturesV2(f) => f.data.len(),
+            Payload::Experience(e) => e.feat.data.len() + 13,
         }
     }
 }
@@ -111,6 +182,12 @@ pub struct Hello {
     /// server that does not know the id echoes `CODEC_FLAT`, and the
     /// session falls back to the v1 format). Raw-route sessions leave it 0.
     pub codec: u8,
+    /// Capability negotiation bits (`CAP_*`): the client requests, the
+    /// server's ack masks down to the intersection it supports. A
+    /// capability the ack clears must not appear on the session — servers
+    /// answer violations with an explicit [`ErrorMsg`] rather than
+    /// silently dropping fields.
+    pub caps: u8,
     /// Shard this session was pinned to. `None` on a client's opening hello;
     /// set by the fleet gateway (and by shard servers in their hello acks)
     /// so clients and health probes can observe placement.
@@ -139,12 +216,63 @@ impl ResponseV2 {
     }
 }
 
+/// Ack of an experience frame: the action plus policy version stamps.
+/// `acting_version` is the version that computed the action;
+/// `latest_version` is the newest version published fleet-wide (stamped
+/// by the gateway on the way back, so clients observe their lag). A
+/// stale-rejected action arrives with [`RESP_FLAG_STALE`] and an empty
+/// action vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseLearn {
+    pub client: u32,
+    pub id: u64,
+    /// echoes the request frame's codec chain sequence number
+    pub seq: u32,
+    /// `RESP_FLAG_NEED_KEYFRAME` | `RESP_FLAG_STALE`
+    pub flags: u8,
+    pub acting_version: u64,
+    pub latest_version: u64,
+    pub action: Vec<f32>,
+}
+
+impl ResponseLearn {
+    pub fn need_keyframe(&self) -> bool {
+        self.flags & RESP_FLAG_NEED_KEYFRAME != 0
+    }
+    pub fn stale(&self) -> bool {
+        self.flags & RESP_FLAG_STALE != 0
+    }
+}
+
+/// Explicit protocol error frame (clean rejection instead of a silent
+/// drop; the satellite contract for capability mismatches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorMsg {
+    pub client: u32,
+    /// `ERR_*` code
+    pub code: u8,
+    pub detail: String,
+}
+
+/// Versioned policy fan-out: the flat parameter vector of
+/// `rl::native::NativeCore`, stamped with its `learn::PolicyStore`
+/// version. Shards publish (gateway assigns the version) and the
+/// gateway broadcasts adoptions back down every shard trunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySync {
+    pub version: u64,
+    pub params: Vec<f32>,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
     Hello(Hello),
     Request(Request),
     Response(Response),
     ResponseV2(ResponseV2),
+    ResponseLearn(ResponseLearn),
+    Error(ErrorMsg),
+    Policy(PolicySync),
 }
 
 fn put_u16(v: &mut Vec<u8>, x: u16) {
@@ -209,6 +337,7 @@ impl Msg {
                 put_u32(out, h.client);
                 out.push(h.split as u8);
                 out.push(h.codec);
+                out.push(h.caps);
                 match h.shard {
                     Some(s) => {
                         out.push(1);
@@ -250,6 +379,26 @@ impl Msg {
                     put_u32(out, f.data.len() as u32);
                     out.extend_from_slice(&f.data);
                 }
+                Payload::Experience(e) => {
+                    out.push(MSG_EXPERIENCE);
+                    put_u32(out, r.client);
+                    put_u64(out, r.id);
+                    put_u32(out, e.ep);
+                    put_u32(out, e.step);
+                    out.push(e.flags);
+                    put_f32(out, e.reward);
+                    let f = &e.feat;
+                    put_u16(out, f.c);
+                    put_u16(out, f.h);
+                    put_u16(out, f.w);
+                    out.push(f.codec);
+                    out.push(f.flags);
+                    out.push(f.qmax);
+                    put_u32(out, f.seq);
+                    put_f32(out, f.scale);
+                    put_u32(out, f.data.len() as u32);
+                    out.extend_from_slice(&f.data);
+                }
             },
             Msg::Response(r) => {
                 out.push(MSG_RESPONSE);
@@ -270,6 +419,34 @@ impl Msg {
                 put_u16(out, r.action.len() as u16);
                 for a in &r.action {
                     put_f32(out, *a);
+                }
+            }
+            Msg::ResponseLearn(r) => {
+                out.push(MSG_RESPONSE_LEARN);
+                put_u32(out, r.client);
+                put_u64(out, r.id);
+                put_u32(out, r.seq);
+                out.push(r.flags);
+                put_u64(out, r.acting_version);
+                put_u64(out, r.latest_version);
+                put_u16(out, r.action.len() as u16);
+                for a in &r.action {
+                    put_f32(out, *a);
+                }
+            }
+            Msg::Error(e) => {
+                out.push(MSG_ERROR);
+                put_u32(out, e.client);
+                out.push(e.code);
+                put_u16(out, e.detail.len() as u16);
+                out.extend_from_slice(e.detail.as_bytes());
+            }
+            Msg::Policy(p) => {
+                out.push(MSG_POLICY);
+                put_u64(out, p.version);
+                put_u32(out, p.params.len() as u32);
+                for w in &p.params {
+                    put_f32(out, *w);
                 }
             }
         }
@@ -294,12 +471,13 @@ impl Msg {
                 let client = r.u32()?;
                 let split = r.take(1)?[0] != 0;
                 let codec = r.take(1)?[0];
+                let caps = r.take(1)?[0];
                 let shard = match r.take(1)?[0] {
                     0 => None,
                     1 => Some(r.u16()?),
                     other => bail!("bad shard tag {other}"),
                 };
-                Msg::Hello(Hello { client, split, codec, shard })
+                Msg::Hello(Hello { client, split, codec, caps, shard })
             }
             MSG_REQUEST_RAW => {
                 let client = r.u32()?;
@@ -381,6 +559,91 @@ impl Msg {
                 }
                 Msg::ResponseV2(ResponseV2 { client, id, seq, flags, queue_wait_us, action })
             }
+            MSG_EXPERIENCE => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let ep = r.u32()?;
+                let step = r.u32()?;
+                let flags = r.take(1)?[0];
+                let reward = r.f32()?;
+                let c = r.u16()?;
+                let h = r.u16()?;
+                let w = r.u16()?;
+                let codec = r.take(1)?[0];
+                let fflags = r.take(1)?[0];
+                let qmax = r.take(1)?[0];
+                let seq = r.u32()?;
+                let scale = r.f32()?;
+                let dlen = r.u32()? as usize;
+                let feat_len = c as usize * h as usize * w as usize;
+                ensure!(dlen <= feat_len, "codec payload {dlen} > flat frame {feat_len}");
+                ensure!(
+                    flags & EXP_EP_START == 0 || step == 0,
+                    "episode-start frame at step {step}"
+                );
+                let data = r.take(dlen)?.to_vec();
+                Msg::Request(Request {
+                    client,
+                    id,
+                    payload: Payload::Experience(ExperienceFrame {
+                        feat: FeatureFrame {
+                            c,
+                            h,
+                            w,
+                            codec,
+                            flags: fflags,
+                            qmax,
+                            seq,
+                            scale,
+                            data,
+                        },
+                        ep,
+                        step,
+                        flags,
+                        reward,
+                    }),
+                })
+            }
+            MSG_RESPONSE_LEARN => {
+                let client = r.u32()?;
+                let id = r.u64()?;
+                let seq = r.u32()?;
+                let flags = r.take(1)?[0];
+                let acting_version = r.u64()?;
+                let latest_version = r.u64()?;
+                let n = r.u16()? as usize;
+                let mut action = Vec::with_capacity(n);
+                for _ in 0..n {
+                    action.push(r.f32()?);
+                }
+                Msg::ResponseLearn(ResponseLearn {
+                    client,
+                    id,
+                    seq,
+                    flags,
+                    acting_version,
+                    latest_version,
+                    action,
+                })
+            }
+            MSG_ERROR => {
+                let client = r.u32()?;
+                let code = r.take(1)?[0];
+                let n = r.u16()? as usize;
+                let detail = String::from_utf8(r.take(n)?.to_vec())
+                    .map_err(|_| anyhow::anyhow!("error detail is not utf-8"))?;
+                Msg::Error(ErrorMsg { client, code, detail })
+            }
+            MSG_POLICY => {
+                let version = r.u64()?;
+                let n = r.u32()? as usize;
+                ensure!(n * 4 == r.b.len() - r.pos, "policy frame length mismatch");
+                let mut params = Vec::with_capacity(n);
+                for _ in 0..n {
+                    params.push(r.f32()?);
+                }
+                Msg::Policy(PolicySync { version, params })
+            }
             other => bail!("unknown message type {other}"),
         };
         ensure!(r.done(), "trailing bytes in frame");
@@ -451,6 +714,36 @@ pub fn encode_response_v2_into(
     put_u32(out, seq);
     out.push(flags);
     put_u32(out, queue_wait_us);
+    put_u16(out, action.len() as u16);
+    for a in action {
+        put_f32(out, *a);
+    }
+    seal_frame(out);
+}
+
+/// Encode a learning response straight into a pooled buffer (the
+/// [`encode_response_v2_into`] analogue for experience sessions).
+/// Byte-identical to `Msg::ResponseLearn(ResponseLearn { .. }).encode()`.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_response_learn_into(
+    client: u32,
+    id: u64,
+    seq: u32,
+    flags: u8,
+    acting_version: u64,
+    latest_version: u64,
+    action: &[f32],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]);
+    out.push(MSG_RESPONSE_LEARN);
+    put_u32(out, client);
+    put_u64(out, id);
+    put_u32(out, seq);
+    out.push(flags);
+    put_u64(out, acting_version);
+    put_u64(out, latest_version);
     put_u16(out, action.len() as u16);
     for a in action {
         put_f32(out, *a);
@@ -530,10 +823,23 @@ mod tests {
     fn response_and_hello_roundtrip() {
         for msg in [
             Msg::Response(Response { client: 1, id: 9, action: vec![0.5, -1.25] }),
-            Msg::Hello(Hello { client: 12, split: true, codec: 0, shard: None }),
-            Msg::Hello(Hello { client: 12, split: false, codec: 0, shard: None }),
-            Msg::Hello(Hello { client: 7, split: true, codec: 1, shard: Some(3) }),
-            Msg::Hello(Hello { client: 7, split: false, codec: 0, shard: Some(u16::MAX) }),
+            Msg::Hello(Hello { client: 12, split: true, codec: 0, caps: 0, shard: None }),
+            Msg::Hello(Hello { client: 12, split: false, codec: 0, caps: 0, shard: None }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3) }),
+            Msg::Hello(Hello {
+                client: 7,
+                split: true,
+                codec: 1,
+                caps: CAP_EXPERIENCE,
+                shard: None,
+            }),
+            Msg::Hello(Hello {
+                client: 7,
+                split: false,
+                codec: 0,
+                caps: 0,
+                shard: Some(u16::MAX),
+            }),
         ] {
             let enc = msg.encode();
             assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
@@ -682,7 +988,7 @@ mod tests {
     #[test]
     fn encode_into_reuses_buffer_and_matches_encode() {
         let msgs = [
-            Msg::Hello(Hello { client: 7, split: true, codec: 1, shard: Some(3) }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3) }),
             Msg::Request(Request {
                 client: 1,
                 id: 2,
@@ -728,6 +1034,112 @@ mod tests {
         let cap = buf.capacity();
         msgs[0].encode_into(&mut buf);
         assert!(buf.capacity() >= cap);
+    }
+
+    fn sample_experience(flags: u8, dlen: usize) -> Msg {
+        Msg::Request(Request {
+            client: 9,
+            id: 1001,
+            payload: Payload::Experience(ExperienceFrame {
+                feat: FeatureFrame {
+                    c: 3,
+                    h: 1,
+                    w: 1,
+                    codec: 1,
+                    flags: 1,
+                    qmax: 255,
+                    seq: 17,
+                    scale: 0.97,
+                    data: vec![4; dlen],
+                },
+                ep: 6,
+                step: if flags & EXP_EP_START != 0 { 0 } else { 42 },
+                flags,
+                reward: -7.25,
+            }),
+        })
+    }
+
+    #[test]
+    fn experience_roundtrip_size_and_flags() {
+        let msg = sample_experience(EXP_HAS_REWARD | EXP_DONE, 3);
+        let enc = msg.encode();
+        // 4 len + 1 type + 4 client + 8 id + 13 exp (ep/step/flags/reward)
+        // + 6 dims + 3 codec/flags/qmax + 4 seq + 4 scale + 4 dlen + body
+        assert_eq!(enc.len(), 4 + 1 + 4 + 8 + 13 + 6 + 3 + 4 + 4 + 4 + 3);
+        let dec = Msg::decode(&enc[4..]).unwrap();
+        assert_eq!(dec, msg);
+        let Msg::Request(r) = dec else { panic!("not a request") };
+        // telemetry counts against the bandwidth model
+        assert_eq!(r.payload.wire_bytes(), 3 + 13);
+        let Payload::Experience(e) = r.payload else { panic!("not experience") };
+        assert!(e.has_reward() && e.done());
+        assert!(!e.terminated() && !e.ep_start());
+    }
+
+    #[test]
+    fn experience_rejects_oversize_payload_and_bad_ep_start() {
+        let over = sample_experience(EXP_HAS_REWARD, 4); // 4 > c·h·w = 3
+        let enc = over.encode();
+        assert!(Msg::decode(&enc[4..]).is_err());
+        // EP_START at a nonzero step is forged: flip the flag on the wire
+        let ok = sample_experience(EXP_HAS_REWARD, 3);
+        let mut enc = ok.encode();
+        // flags byte sits after len(4) + type(1) + client(4) + id(8) + ep(4) + step(4)
+        enc[4 + 1 + 4 + 8 + 4 + 4] |= EXP_EP_START;
+        assert!(Msg::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn response_learn_roundtrip_flags_and_pooled_writer() {
+        let msg = Msg::ResponseLearn(ResponseLearn {
+            client: 3,
+            id: 55,
+            seq: 9,
+            flags: 0,
+            acting_version: 41,
+            latest_version: 42,
+            action: vec![0.5, -0.25],
+        });
+        let enc = msg.encode();
+        assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
+        let stale = ResponseLearn {
+            client: 3,
+            id: 56,
+            seq: 10,
+            flags: RESP_FLAG_STALE,
+            acting_version: 1,
+            latest_version: 42,
+            action: vec![],
+        };
+        assert!(stale.stale() && !stale.need_keyframe());
+        let kf = ResponseLearn { flags: RESP_FLAG_NEED_KEYFRAME, ..stale.clone() };
+        assert!(kf.need_keyframe() && !kf.stale());
+        let enc2 = Msg::ResponseLearn(stale.clone()).encode();
+        assert_eq!(Msg::decode(&enc2[4..]).unwrap(), Msg::ResponseLearn(stale.clone()));
+        let mut buf = vec![0x77; 5];
+        encode_response_learn_into(3, 56, 10, RESP_FLAG_STALE, 1, 42, &[], &mut buf);
+        assert_eq!(buf, enc2);
+    }
+
+    #[test]
+    fn error_and_policy_roundtrip() {
+        let err = Msg::Error(ErrorMsg {
+            client: 11,
+            code: ERR_EXPERIENCE_UNSUPPORTED,
+            detail: "experience frames not negotiated".into(),
+        });
+        let enc = err.encode();
+        assert_eq!(Msg::decode(&enc[4..]).unwrap(), err);
+        let pol = Msg::Policy(PolicySync { version: 17, params: vec![0.5, -1.5, 3.25] });
+        let enc = pol.encode();
+        // 4 len + 1 type + 8 version + 4 count + 12 params
+        assert_eq!(enc.len(), 4 + 1 + 8 + 4 + 12);
+        assert_eq!(Msg::decode(&enc[4..]).unwrap(), pol);
+        // forged count must be rejected, not mis-sliced
+        let mut bad = enc[4..].to_vec();
+        bad[9] = 99;
+        assert!(Msg::decode(&bad).is_err());
     }
 
     #[test]

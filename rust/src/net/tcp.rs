@@ -70,7 +70,7 @@ mod tests {
     #[test]
     fn roundtrip_over_a_buffer() {
         let msgs = vec![
-            Msg::Hello(Hello { client: 1, split: true, codec: 0, shard: None }),
+            Msg::Hello(Hello { client: 1, split: true, codec: 0, caps: 0, shard: None }),
             Msg::Request(Request {
                 client: 1,
                 id: 1,
@@ -123,7 +123,7 @@ mod tests {
 
     #[test]
     fn write_frame_matches_write_msg() {
-        let msg = Msg::Hello(Hello { client: 2, split: true, codec: 1, shard: Some(1) });
+        let msg = Msg::Hello(Hello { client: 2, split: true, codec: 1, caps: 0, shard: Some(1) });
         let mut a = Vec::new();
         write_msg(&mut a, &msg).unwrap();
         let mut b = Vec::new();

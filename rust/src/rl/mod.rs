@@ -1,13 +1,17 @@
 //! RL substrate: episodic [`stats`] (Best/Mean/Final-100, Tables 2-4),
-//! off-policy [`replay`], on-policy [`rollout`] with GAE(λ), and the
-//! generic artifact-driven [`trainer`].
+//! off-policy [`replay`], on-policy [`rollout`] with GAE(λ), the generic
+//! artifact-driven [`trainer`], and the pure-Rust [`native`] PPO engine
+//! shared by the offline baseline and the fleet learning loop
+//! (`learn::`, DESIGN.md §8).
 
+pub mod native;
 pub mod replay;
 pub mod rollout;
 pub mod stats;
 pub mod trainer;
 
+pub use native::{NativeConfig, NativeCore};
 pub use replay::Replay;
 pub use rollout::Rollout;
 pub use stats::EpisodeStats;
-pub use trainer::{TrainConfig, TrainReport, Trainer};
+pub use trainer::{NativeTrainer, TrainConfig, TrainReport, Trainer};

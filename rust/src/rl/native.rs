@@ -1,0 +1,478 @@
+//! Native PPO engine: a pure-Rust actor-critic that trains without the
+//! AOT artifact path (DESIGN.md §8). The artifact trainer needs real PJRT
+//! bindings; this engine is the offline-capable counterpart the online
+//! learning loop (`learn::`) drives through the serving fleet, and the
+//! offline baseline the fleet run is gated against.
+//!
+//! Determinism contract: all randomness (exploration noise + minibatch
+//! permutations) flows through one internal [`Rng`] stream, and
+//! [`NativeCore::value`] / [`NativeCore::act_det`] never touch it. The
+//! online loop replays the exact offline call order (`act` → push →
+//! `value` + `run_ppo_epochs` on segment boundary → `act`), so an
+//! ideal-link fleet run is bit-identical to [`super::trainer`]'s native
+//! offline loop at the same seed.
+
+use anyhow::{ensure, Result};
+
+use crate::codec;
+use crate::util::rng::Rng;
+
+use super::rollout::Rollout;
+
+/// ln(2π) as f32, shared by sampling and gradient paths.
+const LN_2PI: f32 = 1.837_877_1;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Hyperparameters for the native actor-critic (Gaussian policy over a
+/// one-hidden-layer tanh MLP with a separate value head).
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    pub obs_len: usize,
+    pub act_len: usize,
+    pub hidden: usize,
+    pub lr: f32,
+    /// PPO clip range ε
+    pub clip: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    /// global gradient-norm clip (0 disables)
+    pub max_grad_norm: f32,
+    /// initial per-dim log σ of the Gaussian policy
+    pub init_log_std: f32,
+    /// PPO minibatch size (must divide the rollout segment length)
+    pub minibatch: usize,
+    pub gamma: f64,
+    pub seed: u64,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        NativeConfig {
+            obs_len: 3,
+            act_len: 1,
+            hidden: 32,
+            lr: 1e-3,
+            clip: 0.2,
+            vf_coef: 0.5,
+            ent_coef: 0.0,
+            max_grad_norm: 0.5,
+            init_log_std: 0.0,
+            minibatch: 64,
+            gamma: 0.9,
+            seed: 0,
+        }
+    }
+}
+
+/// Flat-parameter actor-critic with manual PPO gradients and Adam.
+///
+/// Parameter layout (one contiguous `Vec<f32>`, the unit the
+/// `learn::PolicyStore` snapshots and the wire `PolicySync` carries):
+/// `W1[h·o] | b1[h] | Wmu[a·h] | bmu[a] | Wv[h] | bv[1] | log_std[a]`.
+#[derive(Debug, Clone)]
+pub struct NativeCore {
+    pub cfg: NativeConfig,
+    params: Vec<f32>,
+    /// Adam first/second moments + step counter (never snapshotted: an
+    /// adopting learner keeps its own optimiser state)
+    m: Vec<f32>,
+    v: Vec<f32>,
+    adam_t: i32,
+    rng: Rng,
+    /// total PPO minibatch gradient steps taken
+    pub gradient_steps: u64,
+    /// scratch: hidden activations + per-minibatch gradient accumulator
+    h_buf: Vec<f32>,
+    grad: Vec<f32>,
+}
+
+impl NativeCore {
+    pub fn n_params(cfg: &NativeConfig) -> usize {
+        let (o, a, h) = (cfg.obs_len, cfg.act_len, cfg.hidden);
+        h * o + h + a * h + a + h + 1 + a
+    }
+
+    pub fn new(cfg: NativeConfig) -> NativeCore {
+        let n = Self::n_params(&cfg);
+        let mut rng = Rng::new(cfg.seed);
+        let (o, a, h) = (cfg.obs_len, cfg.act_len, cfg.hidden);
+        let mut params = vec![0.0f32; n];
+        let s1 = 1.0 / (o as f64).sqrt();
+        let s2 = 1.0 / (h as f64).sqrt();
+        for w in params[..h * o].iter_mut() {
+            *w = rng.range(-s1, s1) as f32;
+        }
+        let mu_w = h * o + h;
+        for w in params[mu_w..mu_w + a * h].iter_mut() {
+            *w = rng.range(-s2, s2) as f32;
+        }
+        let v_w = mu_w + a * h + a;
+        for w in params[v_w..v_w + h].iter_mut() {
+            *w = rng.range(-s2, s2) as f32;
+        }
+        let ls = v_w + h + 1;
+        for w in params[ls..ls + a].iter_mut() {
+            *w = cfg.init_log_std;
+        }
+        NativeCore {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            adam_t: 0,
+            rng,
+            gradient_steps: 0,
+            h_buf: vec![0.0; h],
+            grad: vec![0.0; n],
+            params,
+            cfg,
+        }
+    }
+
+    #[inline]
+    fn offsets(&self) -> (usize, usize, usize, usize, usize, usize, usize) {
+        let (o, a, h) = (self.cfg.obs_len, self.cfg.act_len, self.cfg.hidden);
+        let w1 = 0;
+        let b1 = w1 + h * o;
+        let wmu = b1 + h;
+        let bmu = wmu + a * h;
+        let wv = bmu + a;
+        let bv = wv + h;
+        let ls = bv + 1;
+        (w1, b1, wmu, bmu, wv, bv, ls)
+    }
+
+    /// Forward pass writing hidden activations into `h_out`; returns
+    /// (μ, value).
+    fn forward_into(&self, obs: &[f32], h_out: &mut [f32]) -> (Vec<f32>, f32) {
+        let (o, a, h) = (self.cfg.obs_len, self.cfg.act_len, self.cfg.hidden);
+        debug_assert_eq!(obs.len(), o);
+        let (w1, b1, wmu, bmu, wv, bv, _) = self.offsets();
+        let p = &self.params;
+        for k in 0..h {
+            let mut acc = p[b1 + k];
+            let row = &p[w1 + k * o..w1 + (k + 1) * o];
+            for (wx, x) in row.iter().zip(obs) {
+                acc += wx * x;
+            }
+            h_out[k] = acc.tanh();
+        }
+        let mut mu = vec![0.0f32; a];
+        for (j, mu_j) in mu.iter_mut().enumerate() {
+            let mut acc = p[bmu + j];
+            let row = &p[wmu + j * h..wmu + (j + 1) * h];
+            for (wx, x) in row.iter().zip(h_out.iter()) {
+                acc += wx * x;
+            }
+            *mu_j = acc;
+        }
+        let mut val = p[bv];
+        for (wx, x) in p[wv..wv + h].iter().zip(h_out.iter()) {
+            val += wx * x;
+        }
+        (mu, val)
+    }
+
+    /// Stochastic action for rollouts: draws Gaussian noise from the
+    /// internal rng stream. Returns (action, log-prob, value).
+    pub fn act(&mut self, obs: &[f32]) -> (Vec<f32>, f32, f32) {
+        let mut h = std::mem::take(&mut self.h_buf);
+        let (mu, val) = self.forward_into(obs, &mut h);
+        self.h_buf = h;
+        let (_, _, _, _, _, _, ls) = self.offsets();
+        let mut a = vec![0.0f32; self.cfg.act_len];
+        let mut logp = 0.0f32;
+        for (j, a_j) in a.iter_mut().enumerate() {
+            let log_std = self.params[ls + j];
+            let std = log_std.exp();
+            *a_j = mu[j] + std * self.rng.normal_f32();
+            let z = (*a_j - mu[j]) / std;
+            logp += -0.5 * z * z - log_std - 0.5 * LN_2PI;
+        }
+        (a, logp, val)
+    }
+
+    /// Deterministic (mean) action + value; rng-free.
+    pub fn act_det(&mut self, obs: &[f32]) -> (Vec<f32>, f32) {
+        let mut h = std::mem::take(&mut self.h_buf);
+        let out = self.forward_into(obs, &mut h);
+        self.h_buf = h;
+        out
+    }
+
+    /// Value estimate; rng-free (safe for GAE bootstrap).
+    pub fn value(&mut self, obs: &[f32]) -> f32 {
+        self.act_det(obs).1
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// Replace the parameter vector (policy adoption). Optimiser moments
+    /// are deliberately kept: each learner owns its Adam state.
+    pub fn set_params(&mut self, p: &[f32]) -> Result<()> {
+        ensure!(
+            p.len() == self.params.len(),
+            "policy size mismatch: got {}, core has {}",
+            p.len(),
+            self.params.len()
+        );
+        self.params.copy_from_slice(p);
+        Ok(())
+    }
+
+    /// PPO update over a full rollout segment: `epochs` shuffled passes of
+    /// `cfg.minibatch`-sized clipped-surrogate steps. Consumes the rng
+    /// (one permutation per epoch) — call order must match between the
+    /// offline and online loops.
+    pub fn run_ppo_epochs(
+        &mut self,
+        ro: &Rollout,
+        adv: &[f32],
+        ret: &[f32],
+        epochs: usize,
+    ) -> Result<()> {
+        let n = ro.len();
+        let mb = self.cfg.minibatch;
+        ensure!(n > 0, "empty rollout");
+        ensure!(
+            n % mb == 0,
+            "rollout length {n} must be a multiple of minibatch {mb}"
+        );
+        // advantage normalisation over the whole segment
+        let mean = adv.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var =
+            adv.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        let inv_std = (1.0 / (var.sqrt() + 1e-8)) as f32;
+        let mean = mean as f32;
+        let adv_n: Vec<f32> = adv.iter().map(|&x| (x - mean) * inv_std).collect();
+
+        for _ in 0..epochs {
+            let perm = self.rng.permutation(n);
+            for c in 0..n / mb {
+                self.minibatch_step(ro, &adv_n, ret, &perm[c * mb..(c + 1) * mb]);
+            }
+        }
+        Ok(())
+    }
+
+    fn minibatch_step(&mut self, ro: &Rollout, adv: &[f32], ret: &[f32], idx: &[usize]) {
+        let (o, a_len, h_len) = (self.cfg.obs_len, self.cfg.act_len, self.cfg.hidden);
+        let (w1, b1, wmu, bmu, wv, bv, ls) = self.offsets();
+        let clip = self.cfg.clip;
+        let mut grad = std::mem::take(&mut self.grad);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut h = std::mem::take(&mut self.h_buf);
+
+        for &i in idx {
+            let obs = &ro.obs[i * o..(i + 1) * o];
+            let act = &ro.act[i * a_len..(i + 1) * a_len];
+            let (mu, val) = self.forward_into(obs, &mut h);
+            let p = &self.params;
+
+            let mut logp = 0.0f32;
+            for j in 0..a_len {
+                let log_std = p[ls + j];
+                let z = (act[j] - mu[j]) / log_std.exp();
+                logp += -0.5 * z * z - log_std - 0.5 * LN_2PI;
+            }
+            let ratio = (logp - ro.logp[i]).exp();
+            let u1 = ratio * adv[i];
+            let u2 = ratio.clamp(1.0 - clip, 1.0 + clip) * adv[i];
+            // clipped surrogate: gradient flows only through the
+            // unclipped branch when it is the active minimum
+            let g_logp = if u1 <= u2 { -adv[i] * ratio } else { 0.0 };
+            let g_val = self.cfg.vf_coef * 2.0 * (val - ret[i]);
+
+            // backprop through the heads into shared hidden activations
+            let mut gh = vec![0.0f32; h_len];
+            for j in 0..a_len {
+                let log_std = p[ls + j];
+                let std = log_std.exp();
+                let z = (act[j] - mu[j]) / std;
+                let d_mu = g_logp * z / std;
+                for k in 0..h_len {
+                    grad[wmu + j * h_len + k] += d_mu * h[k];
+                    gh[k] += d_mu * p[wmu + j * h_len + k];
+                }
+                grad[bmu + j] += d_mu;
+                grad[ls + j] += g_logp * (z * z - 1.0) - self.cfg.ent_coef;
+            }
+            for k in 0..h_len {
+                grad[wv + k] += g_val * h[k];
+                gh[k] += g_val * p[wv + k];
+            }
+            grad[bv] += g_val;
+            for k in 0..h_len {
+                let gp = gh[k] * (1.0 - h[k] * h[k]);
+                for (gx, x) in grad[w1 + k * o..w1 + (k + 1) * o].iter_mut().zip(obs) {
+                    *gx += gp * x;
+                }
+                grad[b1 + k] += gp;
+            }
+        }
+
+        let inv = 1.0 / idx.len() as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        if self.cfg.max_grad_norm > 0.0 {
+            let norm =
+                grad.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>().sqrt() as f32;
+            if norm > self.cfg.max_grad_norm {
+                let scale = self.cfg.max_grad_norm / norm;
+                grad.iter_mut().for_each(|g| *g *= scale);
+            }
+        }
+
+        self.adam_t += 1;
+        let bc1 = 1.0 - ADAM_B1.powi(self.adam_t);
+        let bc2 = 1.0 - ADAM_B2.powi(self.adam_t);
+        let lr = self.cfg.lr;
+        for i in 0..self.params.len() {
+            let g = grad[i];
+            self.m[i] = ADAM_B1 * self.m[i] + (1.0 - ADAM_B1) * g;
+            self.v[i] = ADAM_B2 * self.v[i] + (1.0 - ADAM_B2) * g * g;
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            self.params[i] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+        }
+        self.gradient_steps += 1;
+        self.h_buf = h;
+        self.grad = grad;
+    }
+}
+
+/// Map a raw pendulum state `[cosθ, sinθ, θ̇]` into the non-negative
+/// unit-range feature vector the wire codec quantises: `(cosθ+1)/2`,
+/// `(sinθ+1)/2`, `(θ̇+8)/16`.
+pub fn normalize_pendulum_obs(state: &[f64], out: &mut [f32]) {
+    debug_assert_eq!(state.len(), 3);
+    out[0] = ((state[0] + 1.0) * 0.5) as f32;
+    out[1] = ((state[1] + 1.0) * 0.5) as f32;
+    out[2] = ((state[2] + 8.0) / 16.0) as f32;
+}
+
+/// Quantise + dequantise `obs` in place through the codec's u8 domain —
+/// exactly what a feature frame experiences on the wire, so the offline
+/// trainer sees bit-identical observations to a fleet client's shard.
+pub fn quantize_roundtrip(obs: &mut [f32], qmax: u8, qbuf: &mut Vec<u8>) {
+    let scale = codec::quantize_into(obs, qmax, qbuf);
+    codec::dequantize_into(scale, qmax, qbuf, obs);
+}
+
+/// Per-episode environment rng, shared by the offline trainer and the
+/// fleet clients so both sides replay identical episode streams.
+pub fn episode_rng(seed: u64, episode: u64) -> Rng {
+    Rng::new(seed ^ episode.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> NativeConfig {
+        NativeConfig { hidden: 8, minibatch: 4, seed: 3, ..NativeConfig::default() }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_sized() {
+        let a = NativeCore::new(tiny_cfg());
+        let b = NativeCore::new(tiny_cfg());
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.params().len(), NativeCore::n_params(&tiny_cfg()));
+        let c = NativeCore::new(NativeConfig { seed: 4, ..tiny_cfg() });
+        assert_ne!(a.params(), c.params());
+    }
+
+    #[test]
+    fn value_and_act_det_are_rng_free() {
+        let mut core = NativeCore::new(tiny_cfg());
+        let obs = [0.3f32, 0.7, 0.5];
+        let v1 = core.value(&obs);
+        let (mu1, _) = core.act_det(&obs);
+        // an rng-consuming call in between must not change them
+        let mut probe = NativeCore::new(tiny_cfg());
+        let _ = probe.act(&obs);
+        assert_eq!(v1, probe.value(&obs));
+        assert_eq!(mu1, probe.act_det(&obs).0);
+    }
+
+    #[test]
+    fn act_logp_matches_gaussian_density() {
+        let mut core = NativeCore::new(tiny_cfg());
+        let obs = [0.1f32, 0.9, 0.4];
+        let (a, logp, _) = core.act(&obs);
+        let (mu, _) = core.act_det(&obs);
+        let (_, _, _, _, _, _, ls) = core.offsets();
+        let log_std = core.params()[ls];
+        let z = (a[0] - mu[0]) / log_std.exp();
+        let want = -0.5 * z * z - log_std - 0.5 * LN_2PI;
+        assert!((logp - want).abs() < 1e-5, "{logp} vs {want}");
+    }
+
+    #[test]
+    fn set_params_roundtrip_and_size_check() {
+        let mut core = NativeCore::new(tiny_cfg());
+        let snap = core.params().to_vec();
+        let mut other = NativeCore::new(NativeConfig { seed: 9, ..tiny_cfg() });
+        other.set_params(&snap).unwrap();
+        assert_eq!(other.params(), snap.as_slice());
+        assert!(other.set_params(&snap[1..]).is_err());
+    }
+
+    #[test]
+    fn ppo_update_moves_params_finitely() {
+        let cfg = tiny_cfg();
+        let mut core = NativeCore::new(cfg.clone());
+        let mut ro = Rollout::new(8, cfg.obs_len, cfg.act_len);
+        let mut obs = vec![0.0f32; cfg.obs_len];
+        for i in 0..8 {
+            obs.iter_mut().enumerate().for_each(|(j, x)| {
+                *x = ((i + j) as f32 * 0.11).fract();
+            });
+            let (a, logp, v) = core.act(&obs);
+            ro.push(&obs, &a, logp, v, -1.0 - i as f32 * 0.1, i == 7, false);
+        }
+        let (adv, ret) = ro.gae(0.9, 0.95, 0.0);
+        let before = core.params().to_vec();
+        core.run_ppo_epochs(&ro, &adv, &ret, 2).unwrap();
+        assert_ne!(core.params(), before.as_slice());
+        assert!(core.params().iter().all(|p| p.is_finite()));
+        assert_eq!(core.gradient_steps, 2 * 2); // 2 epochs x (8/4) minibatches
+    }
+
+    #[test]
+    fn ppo_update_rejects_bad_minibatch() {
+        let cfg = NativeConfig { minibatch: 5, ..tiny_cfg() };
+        let mut core = NativeCore::new(cfg.clone());
+        let mut ro = Rollout::new(8, cfg.obs_len, cfg.act_len);
+        let obs = vec![0.1f32; cfg.obs_len];
+        let act = vec![0.0f32; cfg.act_len];
+        for _ in 0..8 {
+            ro.push(&obs, &act, 0.0, 0.0, -1.0, false, false);
+        }
+        let (adv, ret) = ro.gae(0.9, 0.95, 0.0);
+        assert!(core.run_ppo_epochs(&ro, &adv, &ret, 1).is_err());
+    }
+
+    #[test]
+    fn normalized_obs_in_unit_range_and_roundtrip_is_stable() {
+        let mut qbuf = Vec::new();
+        let mut obs = [0.0f32; 3];
+        for (c, s, td) in [(1.0, 0.0, 8.0), (-1.0, -1.0, -8.0), (0.2, -0.4, 3.5)] {
+            normalize_pendulum_obs(&[c, s, td], &mut obs);
+            assert!(obs.iter().all(|&x| (0.0..=1.0).contains(&x)), "{obs:?}");
+            quantize_roundtrip(&mut obs, 255, &mut qbuf);
+            let once = obs;
+            // a second trip through the u8 domain is a fixed point
+            quantize_roundtrip(&mut obs, 255, &mut qbuf);
+            assert_eq!(once, obs);
+        }
+    }
+
+    #[test]
+    fn episode_rng_streams_differ_by_episode_and_match_by_seed() {
+        assert_eq!(episode_rng(7, 3).next_u64(), episode_rng(7, 3).next_u64());
+        assert_ne!(episode_rng(7, 3).next_u64(), episode_rng(7, 4).next_u64());
+    }
+}

@@ -17,6 +17,11 @@ use crate::envs::{make, CropMode, Env, PixelPipeline};
 use crate::runtime::{DType, Exe, Runtime, TrainStateSpec, Value};
 use crate::util::rng::Rng;
 
+use crate::envs::pendulum::Pendulum;
+
+use super::native::{
+    episode_rng, normalize_pendulum_obs, quantize_roundtrip, NativeConfig, NativeCore,
+};
 use super::replay::Replay;
 use super::rollout::Rollout;
 use super::stats::EpisodeStats;
@@ -417,6 +422,106 @@ impl<'a> Trainer<'a> {
             }
         }
         Ok(total / episodes as f64)
+    }
+}
+
+/// Offline native PPO baseline on Pendulum (DESIGN.md §8): the
+/// artifact-free counterpart to the PJRT [`Trainer`], built on
+/// [`NativeCore`]. Observations take the same normalise → quantise →
+/// dequantise trip a fleet client's features take over the wire, and the
+/// core-call order (`act` → push → `value` + `run_ppo_epochs` at segment
+/// boundaries) matches the online learning loop exactly, so an
+/// ideal-link fleet run at the same seed reproduces this loop
+/// bit-for-bit. That parity is what the `learning_smoke` e2e gate pins.
+pub struct NativeTrainer {
+    pub core: NativeCore,
+    env: Pendulum,
+    cfg: TrainConfig,
+    pub stats: EpisodeStats,
+    pub updates: usize,
+    pub env_steps: usize,
+}
+
+impl NativeTrainer {
+    /// `cfg.seed` drives the per-episode environment streams; the core's
+    /// own seed (exploration + minibatch shuffles) comes from `native`.
+    pub fn new(cfg: TrainConfig, native: NativeConfig) -> NativeTrainer {
+        NativeTrainer {
+            core: NativeCore::new(native),
+            env: Pendulum::new(),
+            cfg,
+            stats: EpisodeStats::default(),
+            updates: 0,
+            env_steps: 0,
+        }
+    }
+
+    pub fn train(&mut self) -> Result<()> {
+        let obs_len = self.core.cfg.obs_len;
+        let gamma = self.core.cfg.gamma;
+        anyhow::ensure!(
+            self.cfg.rollout_steps % self.core.cfg.minibatch == 0,
+            "rollout_steps {} must be a multiple of minibatch {}",
+            self.cfg.rollout_steps,
+            self.core.cfg.minibatch
+        );
+        if self.cfg.episodes == 0 {
+            return Ok(());
+        }
+        let mut rollout =
+            Rollout::new(self.cfg.rollout_steps, obs_len, self.core.cfg.act_len);
+        let mut qbuf = Vec::new();
+        let mut obs = vec![0.0f32; obs_len];
+        let mut next_obs = vec![0.0f32; obs_len];
+        let mut ep = 0u64;
+        let mut ep_return = 0.0f64;
+        let max_a = self.env.max_action();
+
+        let mut env_rng = episode_rng(self.cfg.seed, 0);
+        self.env.reset(&mut env_rng);
+        normalize_pendulum_obs(&self.env.state(), &mut obs);
+        quantize_roundtrip(&mut obs, 255, &mut qbuf);
+
+        loop {
+            let (a, logp, v) = self.core.act(&obs);
+            let a64: Vec<f64> =
+                a.iter().map(|&x| (x as f64).clamp(-max_a, max_a)).collect();
+            let out = self.env.step(&a64);
+            ep_return += out.reward;
+            self.env_steps += 1;
+            let done = out.done();
+            if done {
+                self.stats.push(ep_return);
+                ep_return = 0.0;
+                ep += 1;
+                let mut r = episode_rng(self.cfg.seed, ep);
+                self.env.reset(&mut r);
+                if self.cfg.log_every > 0 && ep as usize % self.cfg.log_every == 0 {
+                    info!(
+                        "[native] ep {:>4}  return {:>9.1}  (final100 {:>9.1})  updates {}",
+                        ep,
+                        self.stats.returns().last().unwrap(),
+                        self.stats.final_100(),
+                        self.updates
+                    );
+                }
+            }
+            normalize_pendulum_obs(&self.env.state(), &mut next_obs);
+            quantize_roundtrip(&mut next_obs, 255, &mut qbuf);
+            rollout.push(&obs, &a, logp, v, out.reward as f32, done, out.terminated);
+            if rollout.full() {
+                // bootstrap with pre-update parameters, then learn
+                let last_v = self.core.value(&next_obs);
+                let (adv, ret) = rollout.gae(gamma, self.cfg.gae_lambda, last_v);
+                self.core.run_ppo_epochs(&rollout, &adv, &ret, self.cfg.ppo_epochs)?;
+                rollout.clear();
+                self.updates += 1;
+            }
+            obs.copy_from_slice(&next_obs);
+            if ep as usize >= self.cfg.episodes {
+                return Ok(());
+            }
+        }
     }
 }
 

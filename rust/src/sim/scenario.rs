@@ -26,11 +26,16 @@ use crate::coordinator::batcher::{BatchCollector, BatchPolicy, Item};
 use crate::coordinator::router::Route;
 use crate::coordinator::session::SessionManager;
 use crate::device::thermal::{ClockedThermal, ThermalModel};
+use crate::envs::{Env, Pendulum};
 use crate::fleet::health::{probe_transition, HealthConfig, ProbeStats};
 use crate::fleet::topology::{ShardId, ShardState, Topology};
+use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
-    FeatureFrame, Hello, Msg, Payload, Request, Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
+    ErrorMsg, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, PolicySync, Request, Response,
+    ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_EXPERIENCE_UNSUPPORTED, EXP_DONE, EXP_EP_START,
+    EXP_HAS_REWARD, EXP_TERMINATED, RESP_FLAG_NEED_KEYFRAME, RESP_FLAG_STALE,
 };
+use crate::rl::native::{episode_rng, normalize_pendulum_obs};
 use crate::util::simclock::EventQueue;
 use crate::util::stats::Samples;
 
@@ -68,6 +73,38 @@ pub enum FaultCmd {
     CutShardUplinkMidFrame(usize),
     /// integrate the shard's thermal model to now and log temp/throttle
     SampleThermal(usize),
+}
+
+/// Online-learning mode (DESIGN.md §8): appended learning clients stream
+/// pendulum experience frames through the fleet while every shard
+/// executor trains a [`Learner`] in place. In gateway mode the gateway
+/// owns the authoritative [`PolicyStore`], assigns versions to shard
+/// publications, broadcasts adoptions down every trunk, and stale-rejects
+/// actions whose version lags the latest by more than `max_lag`.
+#[derive(Debug, Clone)]
+pub struct LearnSpec {
+    /// learning split clients, appended after raw + split clients
+    pub clients: usize,
+    /// episodes per learning client
+    pub episodes: usize,
+    /// shard-side learner configuration (engine + loop knobs)
+    pub learner: LearnerConfig,
+    /// staleness bound: highest tolerated `latest - acting` version lag
+    pub max_lag: u64,
+    /// modelled seconds per segment update (added to the batch window)
+    pub update_cost: f64,
+}
+
+impl Default for LearnSpec {
+    fn default() -> Self {
+        LearnSpec {
+            clients: 1,
+            episodes: 10,
+            learner: LearnerConfig::default(),
+            max_lag: 4,
+            update_cost: 0.002,
+        }
+    }
 }
 
 /// Everything a scenario is: fleet shape, link fault models, batch policy,
@@ -123,6 +160,8 @@ pub struct ScenarioConfig {
     /// thresholds for [`probe_transition`]
     pub health: HealthConfig,
     pub thermal: Option<ThermalSpec>,
+    /// online-learning mode (None = pure inference fleet)
+    pub learning: Option<LearnSpec>,
     pub faults: Vec<(f64, FaultCmd)>,
     /// livelock safety valve
     pub max_events: usize,
@@ -156,6 +195,7 @@ impl Default for ScenarioConfig {
             probe_interval: None,
             health: HealthConfig::default(),
             thermal: None,
+            learning: None,
             faults: Vec::new(),
             max_events: 2_000_000,
         }
@@ -200,6 +240,17 @@ pub struct ClientOutcome {
     pub quant_coarser: u64,
     /// quantisation steps taken back toward finer levels
     pub quant_finer: u64,
+    /// completed episode returns, in order (learning clients)
+    pub returns: Vec<f64>,
+    /// episodes completed (learning clients)
+    pub episodes: usize,
+    /// actions refused at the staleness bound (gateway-enforced)
+    pub stale_rejections: u64,
+    /// actions applied whose version lag exceeded `max_lag` — the
+    /// staleness oracle; any nonzero value means the bound leaked
+    pub applied_stale: u64,
+    /// highest `latest_version` stamp observed in acks
+    pub latest_version_seen: u64,
 }
 
 #[derive(Debug, Default)]
@@ -223,6 +274,19 @@ pub struct ShardOutcome {
     pub throttled_batches: u64,
     pub max_temp: f64,
     pub final_throttled: bool,
+    /// experience frames that reached this shard (learning mode)
+    pub exp_frames: u64,
+    /// PPO segment updates run by the live learner incarnation
+    pub updates: u64,
+    /// parameter vectors handed out for publication
+    pub published: u64,
+    /// policy versions adopted by the live learner, in order (strictly
+    /// increasing by construction)
+    pub adopted_versions: Vec<u64>,
+    /// reward frames dropped for want of a matching pending decision
+    pub dropped_incomplete: u64,
+    /// the live learner's final acting policy version
+    pub final_version: u64,
 }
 
 #[derive(Debug, Default)]
@@ -239,6 +303,12 @@ pub struct GatewayOutcome {
     pub no_route: u64,
     /// trunk closures observed (crash detection)
     pub crash_detected: u64,
+    /// policy versions assigned by the gateway's store
+    pub policy_published: u64,
+    /// learn replies rejected at the staleness bound
+    pub policy_stale_rejects: u64,
+    /// on-demand policy resyncs pushed to lagging shards
+    pub policy_resyncs: u64,
 }
 
 #[derive(Debug)]
@@ -273,6 +343,21 @@ impl ScenarioReport {
             .iter()
             .all(|c| c.hello_acks.iter().all(|&n| n == 1))
     }
+
+    /// Stale-rejected actions across every learning client.
+    pub fn total_stale_rejections(&self) -> u64 {
+        self.clients.iter().map(|c| c.stale_rejections).sum()
+    }
+
+    /// Actions applied beyond the staleness bound — must stay 0.
+    pub fn total_applied_stale(&self) -> u64 {
+        self.clients.iter().map(|c| c.applied_stale).sum()
+    }
+
+    /// Episodes completed across every learning client.
+    pub fn total_episodes(&self) -> usize {
+        self.clients.iter().map(|c| c.episodes).sum()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -300,9 +385,11 @@ enum Ev {
     ReqTimeout { c: usize, id: u64, epoch: u64 },
     /// batch-deadline check
     ShardWake(usize),
-    /// modelled execution finished: replies go on the wire — but only if
-    /// the shard incarnation that formed the batch is still the one alive
-    ExecDone { s: usize, incarnation: u64, replies: Vec<SimReply> },
+    /// modelled execution finished: replies (and any policy publications
+    /// produced by segment updates in the batch) go on the wire — but only
+    /// if the shard incarnation that formed the batch is still the one
+    /// alive
+    ExecDone { s: usize, incarnation: u64, replies: Vec<SimReply>, published: Vec<Vec<f32>> },
     Probe,
     /// index into cfg.faults
     Fault(usize),
@@ -317,6 +404,24 @@ struct Pending {
     /// answers codec frames with a checksum of the quantised bytes it
     /// reconstructed, so a stale-base decode is detectable end to end
     expect: Option<f32>,
+}
+
+/// Per-client state for a learning (experience-streaming) client: a live
+/// pendulum whose normalised observation rides the delta codec up to the
+/// shard, with the episode/step cursor and reward of the *previous*
+/// transition carried on each frame.
+struct LearnClientSim {
+    env: Pendulum,
+    env_seed: u64,
+    /// current normalised observation (what the next frame will carry)
+    obs: Vec<f32>,
+    ep: u32,
+    step: u32,
+    ep_return: f64,
+    /// experience flags for the next frame (EXP_* bits)
+    flags: u8,
+    /// reward of the transition the next frame completes
+    reward: f32,
 }
 
 struct ClientSim {
@@ -334,6 +439,8 @@ struct ClientSim {
     delta: Option<(Encoder, RateController)>,
     /// pooled quantisation scratch
     qbuf: Vec<u8>,
+    /// online-learning state; None = pure inference client
+    learn: Option<LearnClientSim>,
     out: ClientOutcome,
 }
 
@@ -341,6 +448,18 @@ struct SimWork {
     client: u32,
     id: u64,
     payload: Payload,
+}
+
+/// The learning half of a shard reply: what becomes a `ResponseLearn`
+/// frame (or an `ErrorMsg` when the session never negotiated experience).
+#[derive(Debug)]
+struct LearnReply {
+    seq: u32,
+    flags: u8,
+    acting_version: u64,
+    action: Vec<f32>,
+    /// experience frame arrived on a shard with no learner configured
+    unsupported: bool,
 }
 
 /// One shard reply scheduled for the end of a modelled execution window.
@@ -352,6 +471,8 @@ struct SimReply {
     /// `Some((seq, need_keyframe, queue_wait_us))` — answer as a v2
     /// response with codec feedback; `None` — plain v1 response
     v2: Option<(u32, bool, u32)>,
+    /// `Some` — answer as a learn response (experience path)
+    learn: Option<LearnReply>,
 }
 
 struct ShardSim {
@@ -369,6 +490,10 @@ struct ShardSim {
     obs_scratch: Vec<f32>,
     busy_until: f64,
     thermal: Option<ClockedThermal>,
+    /// online learner (experience buffer + PPO core); replaced wholesale on
+    /// restart — a fresh incarnation starts from policy version 0 and is
+    /// re-synced by the gateway
+    learn: Option<Learner>,
     out: ShardOutcome,
 }
 
@@ -378,6 +503,12 @@ struct GatewaySim {
     pins: BTreeMap<u32, usize>,
     /// last placement per session, for the reassignment counter
     last_assign: BTreeMap<u32, usize>,
+    /// versioned policy store: shard publications land here and fan back
+    /// out to every live shard
+    store: PolicyStore,
+    /// exactly-once re-sync guard: the latest store version each lagging
+    /// shard has already been sent a snapshot for
+    resynced: BTreeMap<usize, u64>,
     out: GatewayOutcome,
 }
 
@@ -436,8 +567,25 @@ impl World {
         if cfg.shards == 0 {
             bail!("a scenario needs at least one shard");
         }
-        if cfg.raw_clients + cfg.split_clients == 0 {
+        let n_learn = cfg.learning.as_ref().map(|sp| sp.clients).unwrap_or(0);
+        if cfg.raw_clients + cfg.split_clients + n_learn == 0 {
             bail!("a scenario needs at least one client");
+        }
+        if let Some(spec) = &cfg.learning {
+            if spec.clients == 0 {
+                bail!("a learning scenario needs at least one learning client");
+            }
+            let core = &spec.learner.core;
+            if spec.learner.rollout_steps % core.minibatch != 0 {
+                bail!(
+                    "rollout_steps {} must be a multiple of minibatch {}",
+                    spec.learner.rollout_steps,
+                    core.minibatch
+                );
+            }
+            if core.obs_len != 3 || core.act_len != 1 {
+                bail!("the sim learning loop drives a pendulum: obs_len must be 3, act_len 1");
+            }
         }
         if cfg.pendulum_stream && (cfg.feat.0 != 3 || cfg.feat.1 != cfg.feat.2) {
             bail!(
@@ -470,11 +618,12 @@ impl World {
                 obs_scratch: Vec::new(),
                 busy_until: 0.0,
                 thermal: None,
+                learn: cfg.learning.as_ref().map(|sp| Learner::new(sp.learner.clone())),
                 out: ShardOutcome::default(),
             });
         }
         let peer = if cfg.gateway { "gw".to_string() } else { "shard-0".to_string() };
-        let n_clients = cfg.raw_clients + cfg.split_clients;
+        let n_clients = cfg.raw_clients + cfg.split_clients + n_learn;
         let mut clients = Vec::with_capacity(n_clients);
         for c in 0..n_clients {
             let name = format!("client-{c}");
@@ -486,14 +635,46 @@ impl World {
             });
             let down = net.lane(&peer, &name, cfg.reply_link);
             owners.push(Owner::Client(c));
+            // client ordering: raw, then split, then learning
+            let learning = c >= cfg.raw_clients + cfg.split_clients;
             let split = c >= cfg.raw_clients;
-            let stream = if cfg.pendulum_stream && split {
+            let stream = if cfg.pendulum_stream && split && !learning {
                 pendulum_feature_stream(cfg.seed, c as u64, cfg.feat.1, cfg.decisions)
             } else {
                 Vec::new()
             };
-            let delta = (split && cfg.codec == CodecId::Delta)
-                .then(|| (Encoder::new(), RateController::new(cfg.rate.clone())));
+            // learning clients always ride the delta codec at full precision
+            // (qmax pinned to 255): the frame must survive round-trip
+            // bit-for-bit for offline/online training parity
+            let delta = if learning {
+                Some((Encoder::new(), RateController::new(RateConfig::default())))
+            } else {
+                (split && cfg.codec == CodecId::Delta)
+                    .then(|| (Encoder::new(), RateController::new(cfg.rate.clone())))
+            };
+            let learn = learning.then(|| {
+                // decorrelate env seeds across learning clients with a
+                // different odd constant than `episode_rng`'s golden ratio
+                // so the two mixes can't collide; learning client 0 keeps
+                // the raw scenario seed, matching the offline trainer
+                let l = (c - cfg.raw_clients - cfg.split_clients) as u64;
+                let env_seed = cfg.seed ^ l.wrapping_mul(0xD1B5_4A32_D192_ED03);
+                let mut env = Pendulum::new();
+                let mut rng = episode_rng(env_seed, 0);
+                env.reset(&mut rng);
+                let mut obs = vec![0.0f32; 3];
+                normalize_pendulum_obs(&env.state(), &mut obs);
+                LearnClientSim {
+                    env,
+                    env_seed,
+                    obs,
+                    ep: 0,
+                    step: 0,
+                    ep_return: 0.0,
+                    flags: EXP_EP_START,
+                    reward: 0.0,
+                }
+            });
             clients.push(ClientSim {
                 mode: if split { Route::Split } else { Route::Full },
                 up,
@@ -506,6 +687,7 @@ impl World {
                 stream,
                 delta,
                 qbuf: Vec::new(),
+                learn,
                 out: ClientOutcome { hello_acks: vec![0], ..ClientOutcome::default() },
             });
         }
@@ -523,6 +705,8 @@ impl World {
                 topology,
                 pins: BTreeMap::new(),
                 last_assign: BTreeMap::new(),
+                store: PolicyStore::new(),
+                resynced: BTreeMap::new(),
                 out: GatewayOutcome::default(),
             },
             probe_stats: vec![ProbeStats::default(); n_shards],
@@ -597,7 +781,20 @@ impl World {
                     c.out
                 })
                 .collect(),
-            shards: self.shards.into_iter().map(|s| s.out).collect(),
+            shards: self
+                .shards
+                .into_iter()
+                .map(|mut s| {
+                    if let Some(l) = &s.learn {
+                        s.out.updates = l.updates;
+                        s.out.published = l.published;
+                        s.out.adopted_versions = l.adopted_versions.clone();
+                        s.out.dropped_incomplete = l.buf.dropped_incomplete;
+                        s.out.final_version = l.acting_version;
+                    }
+                    s.out
+                })
+                .collect(),
             gateway: self.gw.out,
             shard_states,
             drained,
@@ -628,8 +825,8 @@ impl World {
             Ev::HelloTimeout { c, epoch } => self.client_hello_timeout(t, c, epoch),
             Ev::ReqTimeout { c, id, epoch } => self.client_req_timeout(t, c, id, epoch),
             Ev::ShardWake(s) => self.shard_pump(t, s),
-            Ev::ExecDone { s, incarnation, replies } => {
-                self.shard_exec_done(t, s, incarnation, replies)
+            Ev::ExecDone { s, incarnation, replies, published } => {
+                self.shard_exec_done(t, s, incarnation, replies, published)
             }
             Ev::Probe => self.probe_round(t),
             Ev::Fault(k) => self.apply_fault(t, k),
@@ -643,7 +840,14 @@ impl World {
         }
         let (epoch, up, split) = (cl.epoch, cl.up, cl.mode == Route::Split);
         let codec = if cl.delta.is_some() { CODEC_DELTA } else { 0 };
-        let body = msg_body(&Msg::Hello(Hello { client: c as u32, split, codec, shard: None }));
+        let caps = if cl.learn.is_some() { CAP_EXPERIENCE } else { 0 };
+        let body = msg_body(&Msg::Hello(Hello {
+            client: c as u32,
+            split,
+            codec,
+            caps,
+            shard: None,
+        }));
         self.log.record(t, "hello", &format!("client={c} epoch={epoch}"));
         self.net.send(up, t, &body, &mut self.log);
         self.events
@@ -695,7 +899,9 @@ impl World {
         if cl.finished {
             return;
         }
-        if cl.done >= self.cfg.decisions {
+        // learning clients finish on episode count (checked in the response
+        // path), not on the decision budget
+        if cl.learn.is_none() && cl.done >= self.cfg.decisions {
             cl.finished = true;
             self.log.record(t, "client_done", &format!("client={c}"));
             self.gateway_unpin(t, c as u32);
@@ -716,6 +922,9 @@ impl World {
     }
 
     fn client_send(&mut self, t: f64, c: usize) {
+        if self.clients[c].learn.is_some() {
+            return self.learn_client_send(t, c);
+        }
         let (id, up, epoch, payload) = {
             let cl = &mut self.clients[c];
             if cl.finished {
@@ -820,6 +1029,75 @@ impl World {
             .push(t + self.cfg.req_timeout, Ev::ReqTimeout { c, id, epoch });
     }
 
+    /// Send the pending experience frame: the current normalised pendulum
+    /// observation, delta-encoded at full precision, stamped with the
+    /// episode/step cursor and the reward completing the previous
+    /// transition. A retransmit re-encodes; the reconnect path already
+    /// forced a keyframe so a fresh shard incarnation can always ground it.
+    fn learn_client_send(&mut self, t: f64, c: usize) {
+        let (id, up, epoch, ep, step, payload) = {
+            let cl = &mut self.clients[c];
+            if cl.finished {
+                return;
+            }
+            let Some(p) = &cl.pending else { return };
+            let id = p.id;
+            let lrn = cl.learn.as_ref().unwrap();
+            let (ep, step, eflags, reward) = (lrn.ep, lrn.step, lrn.flags, lrn.reward);
+            let (encoder, rate) = cl.delta.as_mut().unwrap();
+            if rate.keyframe_due() {
+                encoder.force_keyframe();
+            }
+            // qmax pinned at 255: the learning path never acks the rate
+            // controller, so the ladder never coarsens — full precision
+            // keeps the shard's dequantised observation bit-identical to
+            // the offline trainer's quantise round-trip
+            let scale = codec::quantize_into(&cl.learn.as_ref().unwrap().obs, 255, &mut cl.qbuf);
+            let mut data = Vec::new();
+            let (fflags, seq) = encoder.encode_into(&cl.qbuf, &mut data);
+            let key = fflags & codec::FLAG_KEYFRAME != 0;
+            rate.frame_sent(key);
+            if key {
+                cl.out.keyframes += 1;
+            } else {
+                cl.out.deltas += 1;
+            }
+            let payload = Payload::Experience(ExperienceFrame {
+                feat: FeatureFrame {
+                    c: 3,
+                    h: 1,
+                    w: 1,
+                    codec: CODEC_DELTA,
+                    flags: fflags,
+                    qmax: 255,
+                    seq,
+                    scale,
+                    data,
+                },
+                ep,
+                step,
+                flags: eflags,
+                reward,
+            });
+            let wire_b = payload.wire_bytes();
+            cl.out.bytes_sent += wire_b as u64;
+            cl.out.frames_sent += 1;
+            if let Some(p) = &mut cl.pending {
+                p.wire_bytes = wire_b;
+            }
+            (id, cl.up, cl.epoch, ep, step, payload)
+        };
+        let body = msg_body(&Msg::Request(Request { client: c as u32, id, payload }));
+        self.log.record(
+            t,
+            "experience",
+            &format!("client={c} id={id} ep={ep} step={step} bytes={}", body.len()),
+        );
+        self.net.send(up, t, &body, &mut self.log);
+        self.events
+            .push(t + self.cfg.req_timeout, Ev::ReqTimeout { c, id, epoch });
+    }
+
     fn client_hello_timeout(&mut self, t: f64, c: usize, epoch: u64) {
         let cl = &self.clients[c];
         if cl.finished || cl.epoch != epoch || cl.out.hello_acks[epoch as usize] > 0 {
@@ -881,7 +1159,19 @@ impl World {
                 let feedback = (r.seq, r.need_keyframe(), r.queue_wait_us);
                 self.client_on_response(t, c, r.id, &r.action, Some(feedback));
             }
-            Msg::Request(_) => {
+            Msg::ResponseLearn(r) => self.learn_on_response(t, c, r),
+            Msg::Error(e) => {
+                // the server refused the experience capability: a real
+                // client would fall back to inference-only; the sim client
+                // has nothing to infer, so it retires cleanly
+                self.log
+                    .record(t, "client_error", &format!("client={c} code={}", e.code));
+                let cl = &mut self.clients[c];
+                cl.pending = None;
+                cl.finished = true;
+                self.gateway_unpin(t, c as u32);
+            }
+            Msg::Request(_) | Msg::Policy(_) => {
                 self.log.record(t, "client_unexpected", &format!("client={c}"));
             }
         }
@@ -951,6 +1241,109 @@ impl World {
         self.events.push(t + think, Ev::Kick(c));
     }
 
+    /// A learn response closes one experience round-trip: apply the action
+    /// to the local pendulum, advance the episode cursor, and kick the next
+    /// frame. Re-key, staleness, and back-pressure answers re-send the SAME
+    /// cursor without stepping the environment, so the shard's sequence
+    /// discipline sees the retry as a duplicate or a fresh frame — never a
+    /// hole in the trajectory.
+    fn learn_on_response(&mut self, t: f64, c: usize, r: ResponseLearn) {
+        let think = self.cfg.think;
+        let spec = self.cfg.learning.as_ref();
+        let max_lag = spec.map(|sp| sp.max_lag).unwrap_or(0);
+        let episodes = spec.map(|sp| sp.episodes).unwrap_or(0) as u32;
+        let cl = &mut self.clients[c];
+        if cl.finished || cl.learn.is_none() {
+            return;
+        }
+        let fresh = cl.pending.as_ref().is_some_and(|p| p.id == r.id);
+        if !fresh {
+            cl.out.dup_responses += 1;
+            self.log
+                .record(t, "stale_response", &format!("client={c} id={}", r.id));
+            return;
+        }
+        let p = cl.pending.take().unwrap();
+        cl.done += 1;
+        if r.latest_version > cl.out.latest_version_seen {
+            cl.out.latest_version_seen = r.latest_version;
+        }
+        if r.need_keyframe() {
+            // the shard lost the delta chain (restart or back-pressure):
+            // re-key and re-send the same cursor — the env does not move
+            cl.out.need_keyframes += 1;
+            if let Some((encoder, rate)) = &mut cl.delta {
+                encoder.force_keyframe();
+                rate.on_loss();
+            }
+            self.log
+                .record(t, "need_keyframe", &format!("client={c} id={}", r.id));
+            self.events.push(t + think, Ev::Kick(c));
+            return;
+        }
+        if r.stale() {
+            // the gateway vetoed the action: the answering shard lagged the
+            // fleet policy beyond max_lag; retry once the re-sync lands
+            cl.out.stale_rejections += 1;
+            self.log
+                .record(t, "stale_rejected", &format!("client={c} id={}", r.id));
+            self.events.push(t + think, Ev::Kick(c));
+            return;
+        }
+        if r.action.is_empty() {
+            cl.out.rejected += 1;
+            self.log.record(t, "rejected", &format!("client={c} id={}", r.id));
+            self.events.push(t + think, Ev::Kick(c));
+            return;
+        }
+        // staleness oracle: an action the gateway let through must never
+        // lag the newest version this client has observed beyond max_lag
+        if cl.out.latest_version_seen.saturating_sub(r.acting_version) > max_lag {
+            cl.out.applied_stale += 1;
+        }
+        let lrn = cl.learn.as_mut().unwrap();
+        if lrn.ep >= episodes {
+            // the flush frame is answered: the final transition has been
+            // delivered; the action itself is discarded
+            cl.finished = true;
+            self.log.record(t, "client_done", &format!("client={c}"));
+            self.gateway_unpin(t, c as u32);
+            return;
+        }
+        // apply the action exactly as the offline trainer does: clamp to
+        // the torque bound, step, accumulate the return
+        let bound = lrn.env.max_action();
+        let a = (r.action[0] as f64).clamp(-bound, bound);
+        let out = lrn.env.step(&[a]);
+        lrn.ep_return += out.reward;
+        lrn.reward = out.reward as f32;
+        if out.done() {
+            cl.out.returns.push(lrn.ep_return);
+            cl.out.episodes += 1;
+            self.log.record(
+                t,
+                "episode",
+                &format!("client={c} ep={} return={:.3}", lrn.ep, lrn.ep_return),
+            );
+            lrn.ep += 1;
+            lrn.step = 0;
+            lrn.ep_return = 0.0;
+            lrn.flags = EXP_HAS_REWARD
+                | EXP_DONE
+                | EXP_EP_START
+                | if out.terminated { EXP_TERMINATED } else { 0 };
+            let mut rng = episode_rng(lrn.env_seed, lrn.ep as u64);
+            lrn.env.reset(&mut rng);
+        } else {
+            lrn.step += 1;
+            lrn.flags = EXP_HAS_REWARD;
+        }
+        normalize_pendulum_obs(&lrn.env.state(), &mut lrn.obs);
+        cl.out.decisions += 1;
+        cl.out.latencies.push(t - p.t0);
+        self.events.push(t + think, Ev::Kick(c));
+    }
+
     // -- gateway ------------------------------------------------------------
 
     /// Close a session's live pin (client finished or gave up).
@@ -992,10 +1385,14 @@ impl World {
         // (echo known ids, decline unknown ones to flat) — shard-side
         // acks are filtered, so this ack IS the negotiation verdict
         let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
+        // capability negotiation mirrors the server reader: experience is
+        // granted only when the fleet actually runs a learning loop
+        let caps = if self.cfg.learning.is_some() { h.caps & CAP_EXPERIENCE } else { 0 };
         let ack = msg_body(&Msg::Hello(Hello {
             client: session,
             split: h.split,
             codec,
+            caps,
             shard: Some(s as u16),
         }));
         let down = self.clients[session as usize].down;
@@ -1007,6 +1404,7 @@ impl World {
                 client: session,
                 split: h.split,
                 codec: h.codec,
+                caps: h.caps,
                 shard: None,
             }));
             self.net.send(up, t, &fwd, &mut self.log);
@@ -1067,6 +1465,66 @@ impl World {
         self.log.record(t, "trunk_lost", &format!("shard={s}"));
     }
 
+    /// A shard published a policy up its trunk: assign the fleet-wide
+    /// version and fan the snapshot back out to every reachable shard —
+    /// including the publisher, whose adopt records the assigned number.
+    fn gateway_publish(&mut self, t: f64, s: usize, p: PolicySync) {
+        let v = self.gw.store.publish(&p.params);
+        self.gw.out.policy_published += 1;
+        self.log.record(t, "publish", &format!("shard={s} version={v}"));
+        let body = msg_body(&Msg::Policy(PolicySync { version: v, params: p.params }));
+        for i in 0..self.shards.len() {
+            let up = self.shards[i].up;
+            if self.shards[i].alive && self.net.is_open(up) {
+                self.net.send(up, t, &body, &mut self.log);
+            }
+        }
+    }
+
+    /// A learn response passes the staleness gate on its way down: the
+    /// gateway stamps the fleet-latest version, vetoes any action from a
+    /// shard lagging beyond `max_lag`, and re-syncs the laggard exactly
+    /// once per fleet version.
+    fn gateway_learn_response(&mut self, t: f64, s: usize, mut r: ResponseLearn) {
+        let latest = self.gw.store.version();
+        r.latest_version = latest;
+        let max_lag = self.cfg.learning.as_ref().map(|sp| sp.max_lag).unwrap_or(0);
+        if !r.action.is_empty() && latest.saturating_sub(r.acting_version) > max_lag {
+            self.gw.out.policy_stale_rejects += 1;
+            r.flags |= RESP_FLAG_STALE;
+            r.action.clear();
+            self.log.record(
+                t,
+                "gw_stale_reject",
+                &format!(
+                    "shard={s} client={} acting={} latest={latest}",
+                    r.client, r.acting_version
+                ),
+            );
+            if self.gw.resynced.get(&s) != Some(&latest) {
+                self.gw.resynced.insert(s, latest);
+                let snap = self.gw.store.snapshot();
+                if !snap.params.is_empty() {
+                    self.gw.out.policy_resyncs += 1;
+                    let body = msg_body(&Msg::Policy(PolicySync {
+                        version: snap.version,
+                        params: snap.params.clone(),
+                    }));
+                    let up = self.shards[s].up;
+                    if self.shards[s].alive && self.net.is_open(up) {
+                        self.net.send(up, t, &body, &mut self.log);
+                    }
+                    self.log
+                        .record(t, "resync", &format!("shard={s} version={}", snap.version));
+                }
+            }
+        }
+        self.gw.out.forwarded_responses += 1;
+        let down = self.clients[r.client as usize].down;
+        let body = msg_body(&Msg::ResponseLearn(r));
+        self.net.send(down, t, &body, &mut self.log);
+    }
+
     // -- shards -------------------------------------------------------------
 
     fn shard_on_frame(&mut self, t: f64, s: usize, body: &[u8]) {
@@ -1090,18 +1548,47 @@ impl World {
                 // like the threaded reader
                 self.shards[s].codecs.invalidate(h.client);
                 let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
+                let caps =
+                    if self.shards[s].learn.is_some() { h.caps & CAP_EXPERIENCE } else { 0 };
                 let ack = msg_body(&Msg::Hello(Hello {
                     client: h.client,
                     split: h.split,
                     codec,
+                    caps,
                     shard: Some(s as u16),
                 }));
                 let lane = self.reply_lane(s, h.client);
                 self.net.send(lane, t, &ack, &mut self.log);
             }
             Msg::Request(r) => self.shard_request(t, s, r),
-            Msg::Response(_) | Msg::ResponseV2(_) => {
+            Msg::Policy(p) => self.shard_adopt(t, s, p),
+            Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_) => {
                 self.log.record(t, "shard_unexpected", &format!("shard={s}"));
+            }
+        }
+    }
+
+    /// A policy fan-out from the gateway: adopt iff it is newer than the
+    /// version this shard is already acting on (the learner's own
+    /// publication comes back numbered — the adopt is then a no-op on the
+    /// parameters but records the assigned version).
+    fn shard_adopt(&mut self, t: f64, s: usize, p: PolicySync) {
+        let Some(l) = &mut self.shards[s].learn else {
+            self.log.record(t, "adopt_skip", &format!("shard={s} no_learner"));
+            return;
+        };
+        match l.adopt(p.version, &p.params) {
+            Ok(true) => {
+                self.log
+                    .record(t, "adopt", &format!("shard={s} version={}", p.version));
+            }
+            Ok(false) => {
+                self.log
+                    .record(t, "adopt_skip", &format!("shard={s} version={}", p.version));
+            }
+            Err(_) => {
+                self.log
+                    .record(t, "adopt_error", &format!("shard={s} version={}", p.version));
             }
         }
     }
@@ -1128,6 +1615,15 @@ impl World {
                     queue_wait_us: 0,
                     action: vec![],
                 })),
+                Payload::Experience(e) => msg_body(&Msg::ResponseLearn(ResponseLearn {
+                    client,
+                    id,
+                    seq: e.feat.seq,
+                    flags: RESP_FLAG_NEED_KEYFRAME,
+                    acting_version: 0,
+                    latest_version: 0,
+                    action: vec![],
+                })),
                 _ => msg_body(&Msg::Response(Response { client, id, action: vec![] })),
             };
             self.log
@@ -1148,6 +1644,7 @@ impl World {
             .thermal
             .as_ref()
             .map(|sp| (sp.idle_watts, sp.active_watts, sp.throttle_factor));
+        let update_cost = self.cfg.learning.as_ref().map(|sp| sp.update_cost).unwrap_or(0.0);
         let now_i = self.clock.instant_at(t);
         loop {
             let Some(route) = self.shards[s].collector.ready(now_i) else { break };
@@ -1170,19 +1667,12 @@ impl World {
                     }
                 }
             }
-            let cost = (self.cfg.exec_fixed + self.cfg.exec_per_item * n as f64) * factor;
-            let done = start + cost;
-            self.shards[s].busy_until = done;
-            if let Some((_, active_w, _)) = thermal_cfg {
-                let at = self.clock.instant_at(done);
-                let sh = &mut self.shards[s];
-                if let Some(th) = sh.thermal.as_mut() {
-                    th.update(active_w, at);
-                    sh.out.max_temp = sh.out.max_temp.max(th.model().temp());
-                }
-            }
-            // real ingest machinery, modelled compute
+            // real ingest machinery, modelled compute; gradient updates
+            // triggered inside the batch extend its execution window, so
+            // the cost is settled after the items are processed
             let mut replies = Vec::with_capacity(n);
+            let mut published: Vec<Vec<f32>> = Vec::new();
+            let mut updates_ran = 0usize;
             for item in &batch {
                 let w = &item.work;
                 let qw_us = now_i
@@ -1199,11 +1689,23 @@ impl World {
                         let _ = sh
                             .sessions
                             .ingest_rgba_into(w.client, x, data, &mut sh.obs_scratch);
-                        SimReply { client: w.client, id: w.id, action: default_action, v2: None }
+                        SimReply {
+                            client: w.client,
+                            id: w.id,
+                            action: default_action,
+                            v2: None,
+                            learn: None,
+                        }
                     }
                     Payload::Features { scale, data, .. } => {
                         let _ = crate::net::framing::dequantize_features(*scale, data);
-                        SimReply { client: w.client, id: w.id, action: default_action, v2: None }
+                        SimReply {
+                            client: w.client,
+                            id: w.id,
+                            action: default_action,
+                            v2: None,
+                            learn: None,
+                        }
                     }
                     Payload::FeaturesV2(f) => {
                         // the real decoder: reconstruct the quantised frame
@@ -1224,6 +1726,7 @@ impl World {
                                     id: w.id,
                                     action,
                                     v2: Some((f.seq, false, qw_us)),
+                                    learn: None,
                                 }
                             }
                             Err(_) => {
@@ -1238,12 +1741,103 @@ impl World {
                                     id: w.id,
                                     action: 0.0,
                                     v2: Some((f.seq, true, qw_us)),
+                                    learn: None,
                                 }
                             }
                         }
                     }
+                    Payload::Experience(e) => {
+                        // the same real decoder feeds the experience buffer:
+                        // a refused frame re-keys the chain, a decoded one
+                        // advances the learner (and may trigger an update)
+                        let sh = &mut self.shards[s];
+                        sh.out.codec_frames += 1;
+                        sh.out.exp_frames += 1;
+                        sh.obs_scratch.clear();
+                        sh.obs_scratch.resize(e.feat.feat_len(), 0.0);
+                        let empty = |seq, flags, unsupported| LearnReply {
+                            seq,
+                            flags,
+                            acting_version: 0,
+                            action: vec![],
+                            unsupported,
+                        };
+                        let learn = match sh
+                            .codecs
+                            .decode_into(w.client, &e.feat, &mut sh.obs_scratch)
+                        {
+                            Ok(()) => match &mut sh.learn {
+                                Some(learner) => match learner.on_frame(
+                                    w.client,
+                                    &sh.obs_scratch,
+                                    e.ep,
+                                    e.step,
+                                    e.has_reward(),
+                                    e.reward,
+                                    e.done(),
+                                    e.terminated(),
+                                ) {
+                                    Ok(step) => {
+                                        if step.updated {
+                                            updates_ran += 1;
+                                        }
+                                        if let Some(params) = step.publish {
+                                            published.push(params);
+                                        }
+                                        LearnReply {
+                                            seq: e.feat.seq,
+                                            flags: 0,
+                                            acting_version: step.acting_version,
+                                            action: step.action,
+                                            unsupported: false,
+                                        }
+                                    }
+                                    Err(_) => {
+                                        self.log.record(
+                                            t,
+                                            "learn_error",
+                                            &format!(
+                                                "shard={s} client={} id={}",
+                                                w.client, w.id
+                                            ),
+                                        );
+                                        empty(e.feat.seq, 0, false)
+                                    }
+                                },
+                                None => empty(e.feat.seq, 0, true),
+                            },
+                            Err(_) => {
+                                sh.out.codec_rejects += 1;
+                                self.log.record(
+                                    t,
+                                    "codec_reject",
+                                    &format!("shard={s} client={} id={}", w.client, w.id),
+                                );
+                                empty(e.feat.seq, RESP_FLAG_NEED_KEYFRAME, false)
+                            }
+                        };
+                        SimReply {
+                            client: w.client,
+                            id: w.id,
+                            action: 0.0,
+                            v2: None,
+                            learn: Some(learn),
+                        }
+                    }
                 };
                 replies.push(reply);
+            }
+            let cost = (self.cfg.exec_fixed + self.cfg.exec_per_item * n as f64) * factor
+                + updates_ran as f64 * update_cost;
+            let done = start + cost;
+            self.shards[s].busy_until = done;
+            if let Some((_, active_w, _)) = thermal_cfg {
+                let at = self.clock.instant_at(done);
+                let sh = &mut self.shards[s];
+                if let Some(th) = sh.thermal.as_mut() {
+                    th.update(active_w, at);
+                    sh.out.max_temp = sh.out.max_temp.max(th.model().temp());
+                }
             }
             {
                 let sh = &mut self.shards[s];
@@ -1266,7 +1860,8 @@ impl World {
                 ),
             );
             let incarnation = self.shards[s].incarnation;
-            self.events.push(done, Ev::ExecDone { s, incarnation, replies });
+            self.events
+                .push(done, Ev::ExecDone { s, incarnation, replies, published });
         }
         if let Some(d) = self.shards[s].collector.next_deadline(now_i) {
             if !self.shards[s].collector.is_empty() {
@@ -1276,26 +1871,76 @@ impl World {
         }
     }
 
-    fn shard_exec_done(&mut self, t: f64, s: usize, incarnation: u64, replies: Vec<SimReply>) {
+    fn shard_exec_done(
+        &mut self,
+        t: f64,
+        s: usize,
+        incarnation: u64,
+        replies: Vec<SimReply>,
+        published: Vec<Vec<f32>>,
+    ) {
         if !self.shards[s].alive || self.shards[s].incarnation != incarnation {
             // crashed mid-exec (even if already restarted): the batch's
-            // work died with the old incarnation
+            // work — replies AND policy publications — died with the old
+            // incarnation
             self.log
                 .record(t, "replies_lost", &format!("shard={s} n={}", replies.len()));
             return;
         }
+        // publications first: a policy produced in this batch is visible to
+        // the fleet no later than the actions the same batch emitted
+        for params in published {
+            if self.cfg.gateway {
+                // version 0 = unversioned: the gateway's store assigns the
+                // fleet-wide number when the publication lands
+                let body = msg_body(&Msg::Policy(PolicySync { version: 0, params }));
+                self.log.record(t, "publish_tx", &format!("shard={s}"));
+                let down = self.shards[s].down;
+                self.net.send(down, t, &body, &mut self.log);
+            } else {
+                // direct mode: the store and the only learner live on this
+                // process; publish and self-adopt are immediate
+                let v = self.gw.store.publish(&params);
+                self.gw.out.policy_published += 1;
+                if let Some(l) = &mut self.shards[s].learn {
+                    let _ = l.adopt(v, &params);
+                }
+                self.log.record(t, "publish", &format!("shard={s} version={v}"));
+            }
+        }
         for r in replies {
             let lane = self.reply_lane(s, r.client);
-            let body = match r.v2 {
-                Some((seq, need_key, queue_wait_us)) => msg_body(&Msg::ResponseV2(ResponseV2 {
+            let body = match (r.learn, r.v2) {
+                (Some(lr), _) if lr.unsupported => msg_body(&Msg::Error(ErrorMsg {
                     client: r.client,
-                    id: r.id,
-                    seq,
-                    flags: if need_key { RESP_FLAG_NEED_KEYFRAME } else { 0 },
-                    queue_wait_us,
-                    action: if need_key { vec![] } else { vec![r.action] },
+                    code: ERR_EXPERIENCE_UNSUPPORTED,
+                    detail: "experience frames were not negotiated on this session".into(),
                 })),
-                None => msg_body(&Msg::Response(Response {
+                (Some(lr), _) => {
+                    // direct mode stamps the live store version; gateway
+                    // mode stamps 0 and the gateway overwrites it in flight
+                    let latest = if self.cfg.gateway { 0 } else { self.gw.store.version() };
+                    msg_body(&Msg::ResponseLearn(ResponseLearn {
+                        client: r.client,
+                        id: r.id,
+                        seq: lr.seq,
+                        flags: lr.flags,
+                        acting_version: lr.acting_version,
+                        latest_version: latest,
+                        action: lr.action,
+                    }))
+                }
+                (None, Some((seq, need_key, queue_wait_us))) => {
+                    msg_body(&Msg::ResponseV2(ResponseV2 {
+                        client: r.client,
+                        id: r.id,
+                        seq,
+                        flags: if need_key { RESP_FLAG_NEED_KEYFRAME } else { 0 },
+                        queue_wait_us,
+                        action: if need_key { vec![] } else { vec![r.action] },
+                    }))
+                }
+                (None, None) => msg_body(&Msg::Response(Response {
                     client: r.client,
                     id: r.id,
                     action: vec![r.action],
@@ -1361,6 +2006,7 @@ impl World {
                 self.log.record(t, "fault_restart", &format!("shard={s}"));
                 let policy = self.cfg.policy;
                 let max_depth = self.cfg.max_depth;
+                let learn_spec = self.cfg.learning.as_ref().map(|sp| sp.learner.clone());
                 let sh = &mut self.shards[s];
                 sh.alive = true;
                 sh.incarnation += 1;
@@ -1370,6 +2016,10 @@ impl World {
                 // against the dead incarnation's base is refused, never
                 // decoded against stale bytes
                 sh.codecs = Decoders::new();
+                // the learner restarts at policy version 0 with an empty
+                // buffer: the gateway's staleness gate catches its first
+                // stale action and re-syncs it to the fleet version
+                sh.learn = learn_spec.map(Learner::new);
                 sh.busy_until = t;
                 let (up, down) = (sh.up, sh.down);
                 self.net.reopen(up, t, &mut self.log);
@@ -1437,7 +2087,13 @@ impl World {
                 Delivery::Frame(body) => match Msg::decode(&body) {
                     Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
                     Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
-                    Ok(Msg::Response(_) | Msg::ResponseV2(_)) => {
+                    Ok(
+                        Msg::Response(_)
+                        | Msg::ResponseV2(_)
+                        | Msg::ResponseLearn(_)
+                        | Msg::Error(_)
+                        | Msg::Policy(_),
+                    ) => {
                         self.log.record(t, "gw_unexpected", &format!("client={c}"));
                     }
                     Err(_) => {
@@ -1470,6 +2126,14 @@ impl World {
                         let down = self.clients[r.client as usize].down;
                         self.net.send(down, t, &body, &mut self.log);
                     }
+                    Ok(Msg::ResponseLearn(r)) => self.gateway_learn_response(t, s, r),
+                    Ok(Msg::Policy(p)) => self.gateway_publish(t, s, p),
+                    Ok(Msg::Error(e)) => {
+                        // capability errors forward verbatim to the client
+                        self.gw.out.forwarded_responses += 1;
+                        let down = self.clients[e.client as usize].down;
+                        self.net.send(down, t, &body, &mut self.log);
+                    }
                     Ok(Msg::Request(_)) => {
                         self.log.record(t, "gw_unexpected", &format!("shard={s}"));
                     }
@@ -1500,6 +2164,7 @@ impl World {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rl::native::NativeConfig;
 
     fn base(seed: u64) -> ScenarioConfig {
         ScenarioConfig { seed, ..ScenarioConfig::default() }
@@ -1562,6 +2227,56 @@ mod tests {
             "latency must include j: {}",
             r.clients[0].latencies.median()
         );
+    }
+
+    #[test]
+    fn learning_direct_mode_trains_and_completes() {
+        let learner = LearnerConfig {
+            core: NativeConfig { hidden: 8, minibatch: 8, ..NativeConfig::default() },
+            rollout_steps: 32,
+            ppo_epochs: 2,
+            gae_lambda: 0.95,
+            publish_every: 1,
+        };
+        let cfg = ScenarioConfig {
+            gateway: false,
+            shards: 1,
+            raw_clients: 0,
+            split_clients: 0,
+            learning: Some(LearnSpec { clients: 1, episodes: 2, learner, ..LearnSpec::default() }),
+            ..base(5)
+        };
+        let r = run_scenario(&cfg).unwrap();
+        assert_eq!(r.total_give_ups(), 0);
+        assert_eq!(r.total_episodes(), 2);
+        assert_eq!(r.clients[0].returns.len(), 2);
+        assert!(r.clients[0].returns.iter().all(|&g| g < 0.0 && g > -4000.0));
+        assert!(r.shards[0].exp_frames > 0);
+        // 2 episodes x 200 steps across 32-step segments: updates must run
+        // and every one publishes + self-adopts in direct mode
+        assert!(r.shards[0].updates >= 10, "updates={}", r.shards[0].updates);
+        assert_eq!(r.gateway.policy_published, r.shards[0].published);
+        assert!(r.shards[0].final_version > 0);
+        let vs = &r.shards[0].adopted_versions;
+        assert!(vs.windows(2).all(|w| w[0] < w[1]), "{vs:?}");
+        assert_eq!(r.total_applied_stale(), 0);
+        assert_eq!(r.clients[0].final_qmax, 255, "learning path must stay full-precision");
+    }
+
+    #[test]
+    fn rejects_misaligned_learning_configs() {
+        let learner = LearnerConfig {
+            core: NativeConfig { minibatch: 48, ..NativeConfig::default() },
+            rollout_steps: 100,
+            ..LearnerConfig::default()
+        };
+        let cfg = ScenarioConfig {
+            raw_clients: 0,
+            split_clients: 0,
+            learning: Some(LearnSpec { learner, ..LearnSpec::default() }),
+            ..base(1)
+        };
+        assert!(run_scenario(&cfg).is_err());
     }
 
     #[test]

@@ -8,7 +8,8 @@
 use std::io::Write;
 
 use miniconv::net::framing::{
-    FeatureFrame, Hello, Msg, Payload, Request, Response, ResponseV2, MAX_FRAME,
+    ErrorMsg, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, PolicySync, Request, Response,
+    ResponseLearn, ResponseV2, MAX_FRAME,
 };
 use miniconv::net::tcp::{read_msg, write_msg};
 use miniconv::net::{dequantize_features, quantize_features, ShapedWriter, TokenBucket};
@@ -17,13 +18,14 @@ use miniconv::util::proptest::{check, prop_assert, Gen};
 
 /// Draw an arbitrary message of any variant.
 fn arb_msg(g: &mut Gen) -> Msg {
-    match g.usize(0, 5) {
+    match g.usize(0, 9) {
         0 => {
             let shard = if g.bool() { Some(g.usize(0, u16::MAX as usize) as u16) } else { None };
             Msg::Hello(Hello {
                 client: g.u64(0, u32::MAX as u64) as u32,
                 split: g.bool(),
                 codec: g.usize(0, 1) as u8,
+                caps: g.usize(0, 1) as u8,
                 shard,
             })
         }
@@ -86,12 +88,66 @@ fn arb_msg(g: &mut Gen) -> Msg {
                 action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
             })
         }
-        _ => {
+        5 => {
             let n = g.usize(0, 8);
             Msg::Response(Response {
                 client: g.u64(0, u32::MAX as u64) as u32,
                 id: g.u64(0, 1 << 40),
                 action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
+            })
+        }
+        6 => {
+            // experience frame: a codec feature frame plus the episode
+            // cursor and reward flags of the online-learning extension
+            let (c, h, w) = (g.usize(1, 4), g.usize(1, 4), g.usize(1, 4));
+            let dlen = g.usize(0, c * h * w);
+            Msg::Request(Request {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                payload: Payload::Experience(ExperienceFrame {
+                    feat: FeatureFrame {
+                        c: c as u16,
+                        h: h as u16,
+                        w: w as u16,
+                        codec: g.usize(0, 1) as u8,
+                        flags: g.usize(0, 3) as u8,
+                        qmax: g.usize(1, 255) as u8,
+                        seq: g.u64(0, u32::MAX as u64) as u32,
+                        scale: g.f64(1e-6, 100.0) as f32,
+                        data: (0..dlen).map(|_| g.usize(0, 255) as u8).collect(),
+                    },
+                    ep: g.u64(0, u32::MAX as u64) as u32,
+                    step: g.u64(0, u32::MAX as u64) as u32,
+                    flags: g.usize(0, 15) as u8,
+                    reward: g.f64(-20.0, 0.0) as f32,
+                }),
+            })
+        }
+        7 => {
+            let n = g.usize(0, 8);
+            Msg::ResponseLearn(ResponseLearn {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                id: g.u64(0, 1 << 40),
+                seq: g.u64(0, u32::MAX as u64) as u32,
+                flags: g.usize(0, 3) as u8,
+                acting_version: g.u64(0, 1 << 40),
+                latest_version: g.u64(0, 1 << 40),
+                action: (0..n).map(|_| g.f64(-10.0, 10.0) as f32).collect(),
+            })
+        }
+        8 => {
+            let n = g.usize(0, 32);
+            Msg::Policy(PolicySync {
+                version: g.u64(0, 1 << 40),
+                params: (0..n).map(|_| g.f64(-2.0, 2.0) as f32).collect(),
+            })
+        }
+        _ => {
+            let n = g.usize(0, 40);
+            Msg::Error(ErrorMsg {
+                client: g.u64(0, u32::MAX as u64) as u32,
+                code: g.usize(0, 255) as u8,
+                detail: (0..n).map(|_| char::from(g.usize(97, 122) as u8)).collect(),
             })
         }
     }

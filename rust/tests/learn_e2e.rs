@@ -1,0 +1,200 @@
+//! Online-learning loopback e2e (DESIGN.md §8): a real TCP server with a
+//! shard-local learner behind it, driven by `run_learn_client` over the
+//! experience wire format. Uses `Backend::Sim`, so no artifacts are
+//! required — the learner itself is the native PPO core. Also pins the
+//! capability negotiation: a server without a learner clears
+//! `CAP_EXPERIENCE` in its hello ack, and an un-negotiated experience
+//! frame is answered with an explicit error frame, never silence.
+
+use std::net::TcpStream;
+
+use miniconv::codec::{self, Encoder, CODEC_DELTA};
+use miniconv::coordinator::{
+    run_learn_client, serve, Backend, LearnClientConfig, ServerConfig, ServerHandle, SimSpec,
+};
+use miniconv::learn::LearnerConfig;
+use miniconv::net::framing::{
+    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE,
+    ERR_EXPERIENCE_UNSUPPORTED, EXP_EP_START,
+};
+use miniconv::net::tcp::{read_msg, write_msg};
+use miniconv::rl::native::NativeConfig;
+
+/// A tiny learner so tier-1 debug builds stay fast: 8 hidden units,
+/// 32-step segments, 2 PPO epochs.
+fn small_learner(seed: u64) -> LearnerConfig {
+    LearnerConfig {
+        core: NativeConfig { hidden: 8, minibatch: 8, seed, ..NativeConfig::default() },
+        rollout_steps: 32,
+        ppo_epochs: 2,
+        gae_lambda: 0.95,
+        publish_every: 1,
+    }
+}
+
+fn start_server(learn: Option<LearnerConfig>) -> ServerHandle {
+    serve(ServerConfig {
+        backend: Backend::Sim(SimSpec::default()),
+        learn,
+        ..ServerConfig::default()
+    })
+    .expect("serve")
+}
+
+#[test]
+fn learn_client_trains_through_the_serving_stack() {
+    let server = start_server(Some(small_learner(0)));
+    let cfg = LearnClientConfig { episodes: 2, seed: 0, max_lag: 4 };
+    let report = run_learn_client(server.addr, 0, &cfg).expect("learn client");
+    server.shutdown();
+
+    assert!(!report.fallback, "capability must be granted by a learn server");
+    assert_eq!(report.errors, 0, "no error frames expected: {report:?}");
+    assert_eq!(report.returns.len(), 2, "episodes completed: {report:?}");
+    for &r in &report.returns {
+        assert!((-4000.0..=0.0).contains(&r), "pendulum return {r}");
+    }
+    // 2 episodes x 200 steps, +1 flush frame, + any keyframe resends
+    assert!(report.experience_frames >= 401, "frames {}", report.experience_frames);
+    assert!(report.bytes_sent > 0);
+    // 400 steps in 32-step segments with publish_every=1: the version
+    // stamp must have advanced well past the first update
+    assert!(report.latest_version >= 10, "latest version {}", report.latest_version);
+    // the shard-local store self-adopts on publish, so lag stays 0
+    assert_eq!(report.applied_stale, 0, "stale actions applied: {report:?}");
+    assert_eq!(report.stale_rejections, 0);
+}
+
+#[test]
+fn learn_run_is_deterministic_for_a_seed() {
+    let run = |seed: u64| {
+        let server = start_server(Some(small_learner(seed)));
+        let cfg = LearnClientConfig { episodes: 1, seed, max_lag: 4 };
+        let report = run_learn_client(server.addr, 0, &cfg).expect("learn client");
+        server.shutdown();
+        report
+    };
+    let a = run(3);
+    let b = run(3);
+    assert_eq!(a.returns, b.returns, "same seed must replay bit-identically");
+    assert_eq!(a.latest_version, b.latest_version);
+    let c = run(4);
+    assert_ne!(a.returns, c.returns, "seed must matter");
+}
+
+#[test]
+fn server_without_learner_downgrades_client_to_inference() {
+    let server = start_server(None);
+    let cfg = LearnClientConfig { episodes: 1, seed: 0, max_lag: 4 };
+    let report = run_learn_client(server.addr, 0, &cfg).expect("client");
+    server.shutdown();
+
+    assert!(report.fallback, "hello ack must clear CAP_EXPERIENCE");
+    assert_eq!(report.experience_frames, 0, "no experience frames after downgrade");
+    assert_eq!(report.returns.len(), 1, "inference-only episodes still complete");
+    assert_eq!(report.latest_version, 0, "no policy versions without a learner");
+}
+
+/// Hand-rolled socket: negotiate nothing, send an experience frame
+/// anyway, and require the explicit `ERR_EXPERIENCE_UNSUPPORTED` error
+/// frame — then confirm the same session still serves inference frames.
+#[test]
+fn unnegotiated_experience_frame_gets_explicit_error() {
+    let server = start_server(None);
+    let stream = TcpStream::connect(server.addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    let mut recv = stream.try_clone().expect("clone");
+    let mut send = stream;
+
+    write_msg(
+        &mut send,
+        &Msg::Hello(Hello {
+            client: 7,
+            split: true,
+            codec: CODEC_DELTA,
+            caps: CAP_EXPERIENCE,
+            shard: None,
+        }),
+    )
+    .expect("hello");
+    let ack = loop {
+        match read_msg(&mut recv).expect("read ack") {
+            Some(Msg::Hello(h)) => break h,
+            Some(_) => continue,
+            None => panic!("server closed during negotiation"),
+        }
+    };
+    assert_eq!(ack.caps & CAP_EXPERIENCE, 0, "no-learn server must clear the capability");
+
+    // send the experience frame the ack just refused
+    let mut encoder = Encoder::new();
+    let obs = [0.5f32, 0.5, 0.25];
+    let mut qbuf = Vec::new();
+    let scale = codec::quantize_into(&obs, 255, &mut qbuf);
+    let mut data = Vec::new();
+    let (flags, seq) = encoder.encode_into(&qbuf, &mut data);
+    let feat = FeatureFrame {
+        c: 3,
+        h: 1,
+        w: 1,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 255,
+        seq,
+        scale,
+        data,
+    };
+    let payload = Payload::Experience(ExperienceFrame {
+        feat,
+        ep: 0,
+        step: 0,
+        flags: EXP_EP_START,
+        reward: 0.0,
+    });
+    write_msg(&mut send, &Msg::Request(Request { client: 7, id: 0, payload })).expect("send");
+
+    let err = loop {
+        match read_msg(&mut recv).expect("read error") {
+            Some(Msg::Error(e)) => break e,
+            Some(_) => continue,
+            None => panic!("server closed instead of rejecting"),
+        }
+    };
+    assert_eq!(err.client, 7);
+    assert_eq!(err.code, ERR_EXPERIENCE_UNSUPPORTED);
+    assert!(!err.detail.is_empty(), "rejection must say why");
+
+    // the session survives the rejection: a plain inference frame on the
+    // same connection is still answered
+    encoder.force_keyframe();
+    let mut data = Vec::new();
+    let (flags, seq) = encoder.encode_into(&qbuf, &mut data);
+    let feat = FeatureFrame {
+        c: 3,
+        h: 1,
+        w: 1,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 255,
+        seq,
+        scale,
+        data,
+    };
+    write_msg(
+        &mut send,
+        &Msg::Request(Request { client: 7, id: 1, payload: Payload::FeaturesV2(feat) }),
+    )
+    .expect("send v2");
+    loop {
+        match read_msg(&mut recv).expect("read v2") {
+            Some(Msg::ResponseV2(r)) => {
+                assert_eq!(r.id, 1);
+                break;
+            }
+            Some(Msg::Error(e)) => panic!("inference frame rejected: {e:?}"),
+            Some(_) => continue,
+            None => panic!("server closed on inference frame"),
+        }
+    }
+    server.shutdown();
+}

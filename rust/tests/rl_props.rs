@@ -1,0 +1,224 @@
+//! Property tests for the RL primitives the online learning loop leans
+//! on: `rl::replay` eviction order under ring wraparound, and
+//! `rl::rollout` GAE(λ) boundary semantics — truncation bootstraps the
+//! last value, termination suppresses it, and an episode cut never leaks
+//! advantage mass across the boundary.
+
+use miniconv::rl::{Replay, Rollout};
+use miniconv::util::proptest::{check, prop_assert, Gen};
+use miniconv::util::rng::Rng;
+
+// -- replay eviction ---------------------------------------------------------
+
+/// Tag each pushed transition with a unique reward so samples reveal
+/// exactly which transitions the ring still holds.
+fn fill_replay(cap: usize, pushes: usize) -> Replay {
+    let mut rp = Replay::new(cap, 1, 1);
+    for i in 0..pushes {
+        rp.push(&[0.5], &[0.0], i as f32, &[0.5], false);
+    }
+    rp
+}
+
+/// Drain every distinct reward currently sampleable out of the buffer.
+fn sampled_rewards(rp: &Replay, seed: u64, draws: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let (mut obs, mut act, mut nobs) = (vec![0.0f32; 1], vec![0.0f32; 1], vec![0.0f32; 1]);
+    let mut rew = vec![0.0f32; 1];
+    let mut done = vec![0.0f32; 1];
+    let mut seen = Vec::new();
+    for _ in 0..draws {
+        assert!(rp.sample(&mut rng, 1, &mut obs, &mut act, &mut rew, &mut nobs, &mut done));
+        if !seen.contains(&rew[0]) {
+            seen.push(rew[0]);
+        }
+    }
+    seen.sort_by(f32::total_cmp);
+    seen
+}
+
+#[test]
+fn prop_replay_evicts_oldest_first() {
+    check(60, |g| {
+        let cap = g.usize(1, 24);
+        let pushes = g.usize(0, 3 * cap);
+        let rp = fill_replay(cap, pushes);
+        prop_assert(rp.len() == pushes.min(cap), format!("len {} cap {cap}", rp.len()))?;
+        if pushes == 0 {
+            return Ok(());
+        }
+        // after wraparound the ring must hold exactly the newest `cap`
+        // transitions: rewards [pushes - len, pushes)
+        let lo = pushes - rp.len();
+        let seen = sampled_rewards(&rp, 7, 64 * cap);
+        for &r in &seen {
+            prop_assert(
+                (r as usize) >= lo && (r as usize) < pushes,
+                format!("sampled evicted transition {r} (live range {lo}..{pushes})"),
+            )?;
+        }
+        // with 64·cap draws, missing a live slot is ~(1-1/cap)^(64·cap)
+        // ≈ e^-64 — a deterministic seed makes this exact, not flaky
+        prop_assert(
+            seen.len() == rp.len(),
+            format!("sampled {} distinct of {} live", seen.len(), rp.len()),
+        )
+    });
+}
+
+#[test]
+fn prop_replay_sample_needs_enough_data() {
+    check(40, |g| {
+        let cap = g.usize(2, 16);
+        let pushes = g.usize(0, cap - 1);
+        let rp = fill_replay(cap, pushes);
+        let batch = pushes + 1;
+        let mut rng = Rng::new(1);
+        let (mut obs, mut act, mut nobs) =
+            (vec![0.0f32; batch], vec![0.0f32; batch], vec![0.0f32; batch]);
+        let mut rew = vec![0.0f32; batch];
+        let mut done = vec![0.0f32; batch];
+        prop_assert(
+            !rp.sample(&mut rng, batch, &mut obs, &mut act, &mut rew, &mut nobs, &mut done),
+            "sample must refuse batches larger than the stored count",
+        )
+    });
+}
+
+// -- GAE boundary semantics --------------------------------------------------
+
+/// A random rollout whose final step ends an episode; `terminated`
+/// selects MDP termination vs time-limit truncation for that step.
+fn arb_final_done_rollout(g: &mut Gen, terminated: bool) -> Rollout {
+    let n = g.usize(1, 12);
+    let mut r = Rollout::new(n, 1, 1);
+    for t in 0..n {
+        let last = t == n - 1;
+        r.push(
+            &[g.f64(0.0, 1.0) as f32],
+            &[g.f64(-1.0, 1.0) as f32],
+            g.f64(-2.0, 0.0) as f32,
+            g.f64(-1.0, 1.0) as f32,
+            g.f64(-16.0, 0.0) as f32,
+            last,
+            last && terminated,
+        );
+    }
+    r
+}
+
+/// Clone a rollout's stored tensors (Rollout is plain data).
+fn clone_rollout(r: &Rollout) -> Rollout {
+    let mut c = Rollout::new(r.capacity, r.obs_len, r.act_len);
+    for t in 0..r.len() {
+        c.push(
+            &r.obs[t..t + 1],
+            &r.act[t..t + 1],
+            r.logp[t],
+            r.value[t],
+            r.rew[t],
+            r.done[t] > 0.5,
+            r.terminated[t] > 0.5,
+        );
+    }
+    c
+}
+
+#[test]
+fn prop_gae_truncation_bootstraps_termination_does_not() {
+    check(120, |g| {
+        let gamma = g.f64(0.5, 0.999);
+        let lam = g.f64(0.0, 1.0);
+        let last_value = g.f64(-5.0, 5.0) as f32;
+        // identical rollouts, only the final terminated flag differs
+        let trunc = arb_final_done_rollout(g, false);
+        let mut term = clone_rollout(&trunc);
+        let n = term.len();
+        term.terminated[n - 1] = 1.0;
+        let (adv_tr, _) = trunc.gae(gamma, lam, last_value);
+        let (adv_te, _) = term.gae(gamma, lam, last_value);
+        // at the boundary the only difference is the bootstrap term
+        let want = gamma * last_value as f64;
+        let got = adv_tr[n - 1] as f64 - adv_te[n - 1] as f64;
+        prop_assert(
+            (got - want).abs() < 1e-4,
+            format!("boundary bootstrap: got {got}, want γ·last_v = {want}"),
+        )?;
+        // the final step is `done` in both runs, so the chain cut stops
+        // the bootstrap difference from propagating backwards: every
+        // pre-boundary advantage must be bit-identical
+        for t in 0..n - 1 {
+            prop_assert(
+                (adv_tr[t] - adv_te[t]).abs() < 1e-6,
+                format!("pre-boundary advantage moved at step {t}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gae_terminated_boundary_blocks_all_leakage() {
+    check(80, |g| {
+        let gamma = g.f64(0.5, 0.999);
+        let lam = g.f64(0.0, 1.0);
+        // episode A (terminated at tc), then episode B with arbitrary data
+        let a_len = g.usize(1, 6);
+        let b_len = g.usize(1, 6);
+        let n = a_len + b_len;
+        let mut r = Rollout::new(n, 1, 1);
+        for t in 0..a_len {
+            let done = t == a_len - 1;
+            r.push(&[0.0], &[0.0], 0.0, g.f64(-1.0, 1.0) as f32, -1.0, done, done);
+        }
+        for _ in 0..b_len {
+            let act = g.f64(-1.0, 1.0) as f32;
+            let rew = g.f64(-16.0, 0.0) as f32;
+            r.push(&[0.0], &[0.0], 0.0, act, rew, false, false);
+        }
+        let (base, _) = r.gae(gamma, lam, g.f64(-5.0, 5.0) as f32);
+        // mutate everything after the terminated boundary: episode A's
+        // advantages must not move at all
+        let mut m = clone_rollout(&r);
+        for t in a_len..n {
+            m.rew[t] = g.f64(-16.0, 0.0) as f32;
+            m.value[t] = g.f64(-1.0, 1.0) as f32;
+        }
+        let (mutated, _) = m.gae(gamma, lam, g.f64(-5.0, 5.0) as f32);
+        for t in 0..a_len {
+            prop_assert(
+                (base[t] - mutated[t]).abs() < 1e-6,
+                format!("advantage leaked across termination at step {t}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gae_lambda_zero_is_one_step_td() {
+    check(80, |g| {
+        let gamma = g.f64(0.5, 0.999);
+        let last_value = g.f64(-5.0, 5.0) as f32;
+        let r = arb_final_done_rollout(g, g.bool());
+        let n = r.len();
+        let (adv, ret) = r.gae(gamma, 0.0, last_value);
+        for t in 0..n {
+            let (next_v, nonterm) = if t == n - 1 {
+                (last_value as f64, if r.terminated[t] > 0.5 { 0.0 } else { 1.0 })
+            } else {
+                (r.value[t + 1] as f64, if r.terminated[t] > 0.5 { 0.0 } else { 1.0 })
+            };
+            let delta = r.rew[t] as f64 + gamma * next_v * nonterm - r.value[t] as f64;
+            prop_assert(
+                (adv[t] as f64 - delta).abs() < 1e-4,
+                format!("λ=0 advantage at {t}: {} vs TD {delta}", adv[t]),
+            )?;
+            prop_assert(
+                (ret[t] - (adv[t] + r.value[t])).abs() < 1e-5,
+                "returns must be advantages + values",
+            )?;
+        }
+        Ok(())
+    });
+}

@@ -13,9 +13,12 @@ use miniconv::codec::{CodecId, RateConfig};
 use miniconv::coordinator::BatchPolicy;
 use miniconv::device::ThermalModel;
 use miniconv::fleet::{ShardId, ShardState, Topology};
+use miniconv::learn::LearnerConfig;
 use miniconv::net::LinkModel;
+use miniconv::rl::native::NativeConfig;
+use miniconv::rl::{NativeTrainer, TrainConfig};
 use miniconv::sim::{
-    run_scenario, FaultCmd, LinkFaults, ScenarioConfig, ScenarioReport, ThermalSpec,
+    run_scenario, FaultCmd, LearnSpec, LinkFaults, ScenarioConfig, ScenarioReport, ThermalSpec,
 };
 
 const SEEDS: [u64; 3] = [11, 23, 47];
@@ -639,6 +642,252 @@ fn delta_chain_recovers_from_a_mid_frame_cut() {
         let decoded: u64 = r.shards.iter().map(|s| s.codec_frames).sum();
         assert!(decoded > 0, "seed {seed}: no codec frame reached a decoder");
         assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 14: online/offline parity — the fleet-scale learning loop over
+// ideal links reproduces the offline `rl::NativeTrainer` bit for bit at
+// the same seed, which subsumes the ≤10% final-return acceptance gate
+// ---------------------------------------------------------------------------
+
+/// Small-but-real PPO engine shared by every learning scenario: the tier-1
+/// suite trains it in debug builds, so keep the per-update cost tiny.
+fn small_learner(seed: u64) -> LearnerConfig {
+    LearnerConfig {
+        core: NativeConfig { hidden: 8, minibatch: 8, seed, ..NativeConfig::default() },
+        rollout_steps: 32,
+        ppo_epochs: 2,
+        gae_lambda: 0.95,
+        publish_every: 1,
+    }
+}
+
+#[test]
+fn online_learning_matches_the_offline_trainer_bit_for_bit() {
+    for seed in SEEDS {
+        let episodes = 12;
+        let core = NativeConfig { hidden: 16, minibatch: 32, seed, ..NativeConfig::default() };
+        // offline reference: the native trainer at the same seed and knobs
+        let mut offline = NativeTrainer::new(
+            TrainConfig {
+                episodes,
+                rollout_steps: 128,
+                ppo_epochs: 4,
+                gae_lambda: 0.95,
+                seed,
+                log_every: 0,
+                ..TrainConfig::default()
+            },
+            core.clone(),
+        );
+        offline.train().expect("offline train");
+
+        // online: the same engine behind the full gateway + shard + codec
+        // stack, one learning client whose env stream replays the trainer's
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 1,
+            raw_clients: 0,
+            learning: Some(LearnSpec {
+                clients: 1,
+                episodes,
+                learner: LearnerConfig {
+                    core,
+                    rollout_steps: 128,
+                    ppo_epochs: 4,
+                    gae_lambda: 0.95,
+                    publish_every: 1,
+                },
+                max_lag: 4,
+                update_cost: 0.002,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("learn_parity", &cfg);
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        let c = &r.clients[0];
+        assert_eq!(c.returns.len(), episodes, "seed {seed}: episodes lost");
+        // the parity oracle (DESIGN.md §8): same quantisation (qmax 255
+        // end to end), same rng consumers in the same order — every
+        // episode return is identical, not merely close
+        assert_eq!(
+            c.returns,
+            offline.stats.returns(),
+            "seed {seed}: online returns diverged from the offline trainer"
+        );
+        // and therefore the paper-facing gate holds with margin: online
+        // final-100 within 10% of the offline baseline
+        let final_on = c.returns.iter().sum::<f64>() / c.returns.len() as f64;
+        let final_off = offline.stats.final_100();
+        assert!(
+            (final_on - final_off).abs() <= 0.10 * final_off.abs(),
+            "seed {seed}: online final {final_on:.1} vs offline {final_off:.1}"
+        );
+        // the serving stack did real work to get there
+        let s = &r.shards[0];
+        assert_eq!(s.updates as usize, offline.updates, "seed {seed}: update count");
+        assert!(s.exp_frames as usize >= episodes * 200, "seed {seed}: {}", s.exp_frames);
+        assert_eq!(r.gateway.policy_published, s.published, "seed {seed}");
+        assert!(s.final_version > 0, "seed {seed}: no version ever adopted");
+        // ideal links + one shard: the staleness machinery stays silent
+        assert_eq!(r.total_applied_stale(), 0, "seed {seed}");
+        assert_eq!(r.total_stale_rejections(), 0, "seed {seed}");
+        assert_eq!(r.gateway.policy_stale_rejects, 0, "seed {seed}");
+        assert_eq!(c.final_qmax, 255, "seed {seed}: rate controller left the parity rung");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 15: training during shard crash + restart — a shard (and its
+// learner state) dies mid-training and restarts inside the clients'
+// retransmit window, so its sessions resume on a fresh version-0 learner
+// that the staleness gate vetoes and the resync path re-arms in place
+// ---------------------------------------------------------------------------
+
+#[test]
+fn training_survives_shard_crash_and_restart() {
+    let n_learn = 6;
+    let episodes = 3;
+    let moved = sessions_on_shard1(n_learn, 2);
+    assert!(
+        !moved.is_empty() && moved.len() < n_learn,
+        "hash must place learning clients on both shards, got {moved:?}"
+    );
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 0,
+            probe_interval: Some(0.02),
+            // restart 0.2s after the crash: with the default 0.25s request
+            // timeout every victim's retransmit lands on the restarted
+            // shard, so the run exercises learner-state loss rather than
+            // session migration (the pin survives a fast restart)
+            faults: vec![
+                (0.35, FaultCmd::CrashShard(1)),
+                (0.55, FaultCmd::RestartShard(1)),
+            ],
+            learning: Some(LearnSpec {
+                clients: n_learn,
+                episodes,
+                learner: small_learner(seed),
+                ..LearnSpec::default()
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("learn_shard_restart", &cfg);
+        let b = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, b.log, "seed {seed}: same-seed learning logs diverged");
+
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a learning client gave up");
+        assert_eq!(r.total_episodes(), n_learn * episodes, "seed {seed}: episodes lost");
+        for (i, c) in r.clients.iter().enumerate() {
+            assert_eq!(c.returns.len(), episodes, "seed {seed} client {i}");
+            for &ret in &c.returns {
+                assert!((-4000.0..=0.0).contains(&ret), "seed {seed} client {i}: {ret}");
+            }
+        }
+        // the ISSUE's acceptance gate: zero stale-version actions applied
+        assert_eq!(r.total_applied_stale(), 0, "seed {seed}");
+        // the fresh incarnation came back acting at version 0 while the
+        // fleet had trained far past it: the gateway vetoed its first
+        // decisions and re-armed it with the latest snapshot
+        assert!(r.gateway.policy_stale_rejects >= 1, "seed {seed}: veto never fired");
+        assert!(r.gateway.policy_resyncs >= 1, "seed {seed}: resync never fired");
+        assert!(r.shards[1].final_version > 0, "seed {seed}: shard 1 never re-armed");
+        // mid-episode retransmits against the fresh buffer surface as
+        // dropped-incomplete transitions, never as corrupt rollouts
+        let dropped: u64 = r.shards.iter().map(|s| s.dropped_incomplete).sum();
+        assert!(dropped >= 1, "seed {seed}: restart never dropped a pending step");
+        // training continued end to end and versions stayed monotonic
+        assert!(r.gateway.policy_published >= 10, "seed {seed}: {:?}", r.gateway);
+        for (si, s) in r.shards.iter().enumerate() {
+            assert!(
+                s.adopted_versions.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed} shard {si}: adoption not strictly increasing: {:?}",
+                s.adopted_versions
+            );
+        }
+        assert!(r.shards[0].updates >= 10, "seed {seed}: {}", r.shards[0].updates);
+        assert!(r.gateway.crash_detected >= 1, "seed {seed}: crash never detected");
+        assert_eq!(r.shard_states[1], ShardState::Up, "seed {seed}");
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+        assert!(r.log.contains(" fault_crash "), "seed {seed}");
+        assert!(r.log.contains(" fault_restart "), "seed {seed}");
+        assert!(r.log.contains(" resync "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 16: policy-version flap under partition — a partitioned shard
+// keeps acting on a frozen policy while the fleet trains past it; on heal
+// the staleness gate vetoes its lagging actions, the resync path re-arms
+// it, and no client ever applies an action beyond the lag bound
+// ---------------------------------------------------------------------------
+
+#[test]
+fn version_flap_under_partition_is_vetoed_and_resynced() {
+    let n_learn = 4;
+    let episodes = 3;
+    let moved = sessions_on_shard1(n_learn, 2);
+    assert!(
+        !moved.is_empty() && moved.len() < n_learn,
+        "hash must place learning clients on both shards, got {moved:?}"
+    );
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 0,
+            req_timeout: 0.25,
+            // no probes: sessions stay pinned through the partition, so
+            // heal replays the frozen shard's stale decisions through the
+            // gateway's veto instead of migrating them away
+            probe_interval: None,
+            faults: vec![
+                (0.4, FaultCmd::PartitionShard(1)),
+                (1.0, FaultCmd::HealShard(1)),
+                (1.4, FaultCmd::PartitionShard(1)),
+                (1.8, FaultCmd::HealShard(1)),
+            ],
+            learning: Some(LearnSpec {
+                clients: n_learn,
+                episodes,
+                learner: small_learner(seed),
+                max_lag: 2,
+                ..LearnSpec::default()
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("learn_version_flap", &cfg);
+        let b = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, b.log, "seed {seed}: same-seed learning logs diverged");
+
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a learning client gave up");
+        assert_eq!(r.total_episodes(), n_learn * episodes, "seed {seed}: episodes lost");
+        // the heart of the scenario: lagging actions were vetoed at the
+        // gateway, the clients re-kicked them, and not one action beyond
+        // the lag bound was ever applied
+        assert!(r.gateway.policy_stale_rejects >= 1, "seed {seed}: veto never fired");
+        assert!(r.total_stale_rejections() >= 1, "seed {seed}: no client saw a veto");
+        assert_eq!(r.total_applied_stale(), 0, "seed {seed}: stale action applied");
+        // the frozen shard was re-armed in place: resynced to the latest
+        // version, adoptions strictly increasing, and it finished current
+        assert!(r.gateway.policy_resyncs >= 1, "seed {seed}: resync never fired");
+        for (si, s) in r.shards.iter().enumerate() {
+            assert!(
+                s.adopted_versions.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed} shard {si}: adoption not strictly increasing: {:?}",
+                s.adopted_versions
+            );
+        }
+        assert!(r.shards[1].final_version > 0, "seed {seed}: shard 1 never re-armed");
+        assert!(r.gateway.policy_published >= 10, "seed {seed}: {:?}", r.gateway);
+        assert!(r.log.contains(" partition "), "seed {seed}");
+        assert!(r.log.contains(" gw_stale_reject "), "seed {seed}");
+        assert!(r.log.contains(" resync "), "seed {seed}");
+        assert!(r.log.contains(" adopt "), "seed {seed}");
     }
 }
 

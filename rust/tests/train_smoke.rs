@@ -1,8 +1,12 @@
 //! Training-loop integration: the generic trainer drives real update/act
 //! artifacts for all three (algorithm, task) pairs at tiny budgets and
 //! produces finite losses and episodic returns. Requires `make artifacts`.
+//! The native PPO baseline (`NativeTrainer`) needs no artifacts and always
+//! runs — it is the offline reference the online learning loop is gated
+//! against.
 
-use miniconv::rl::{TrainConfig, Trainer};
+use miniconv::rl::native::NativeConfig;
+use miniconv::rl::{NativeTrainer, TrainConfig, Trainer};
 use miniconv::runtime::Runtime;
 
 fn runtime() -> Option<Runtime> {
@@ -91,4 +95,54 @@ fn evaluation_runs_deterministically() {
 fn unknown_trainstate_is_error() {
     let Some(rt) = runtime() else { return };
     assert!(Trainer::new(&rt, "nope", TrainConfig::default()).is_err());
+}
+
+// -- native (artifact-free) baseline ----------------------------------------
+
+fn native_run(episodes: usize, seed: u64) -> NativeTrainer {
+    let cfg = TrainConfig {
+        episodes,
+        rollout_steps: 256,
+        ppo_epochs: 10,
+        gae_lambda: 0.95,
+        seed,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let native = NativeConfig { seed, ..NativeConfig::default() };
+    let mut t = NativeTrainer::new(cfg, native);
+    t.train().expect("native train");
+    t
+}
+
+#[test]
+fn native_ppo_is_deterministic_across_runs() {
+    let a = native_run(4, 9);
+    let b = native_run(4, 9);
+    assert_eq!(a.stats.returns(), b.stats.returns());
+    assert_eq!(a.updates, b.updates);
+    assert_eq!(a.core.params(), b.core.params());
+    let c = native_run(4, 10);
+    assert_ne!(a.stats.returns(), c.stats.returns(), "seed must matter");
+}
+
+#[test]
+fn native_ppo_pendulum_final_stats_stay_in_band() {
+    let t = native_run(30, 0);
+    assert_eq!(t.stats.episodes(), 30);
+    // 30 episodes x 200 steps in 256-step segments
+    assert_eq!(t.updates, 30 * 200 / 256);
+    for &r in t.stats.returns() {
+        assert!((-4000.0..=0.0).contains(&r), "return {r} out of pendulum range");
+        assert!(r.is_finite());
+    }
+    // pinned final-100 band: a random pendulum policy sits near -1200;
+    // catastrophic divergence (NaN params, saturated torque spins) lands
+    // below -2800. The band is deliberately loose — the tight 10% parity
+    // gate lives in the learning_smoke e2e, not here.
+    let final_100 = t.stats.final_100();
+    assert!(
+        (-2800.0..0.0).contains(&final_100),
+        "final-100 mean {final_100} outside the pinned band"
+    );
 }
