@@ -1,0 +1,100 @@
+//! Fuzz target: [`Decoders::decode_into`] fed attacker-controlled frame
+//! headers and payloads while an honest delta chain shares the same
+//! `Decoders` table.
+//!
+//! cargo-fuzz layout (see `msg_decode.rs`); driven deterministically by
+//! `rust/tests/fuzz_smoke.rs`.
+//!
+//! Invariants enforced on every input (DESIGN.md §9):
+//!
+//!   * the decoder never panics, whatever the header claims — dims,
+//!     codec id, flags, qmax, seq, and payload are all hostile here;
+//!   * per-session isolation: an attacker's frame never mutates another
+//!     session's reconstructed frame, and the honest chain keeps
+//!     decoding deltas after the attack (the cross-session poisoning
+//!     the quarantine design assumes away must actually be absent);
+//!   * a rejected frame raises the attacker's consecutive-reject count,
+//!     never the honest session's.
+
+use miniconv::codec::{quantize_into, Decoders, Encoder, CODEC_DELTA};
+use miniconv::net::framing::FeatureFrame;
+
+const HONEST: u32 = 1;
+const ATTACKER: u32 = 2;
+
+/// 4·4·4 quantised feature block for the honest session.
+const N: usize = 64;
+
+fn honest_frame(flags: u8, seq: u32, scale: f32, wire: &[u8]) -> FeatureFrame {
+    FeatureFrame {
+        c: 4,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 200,
+        seq,
+        scale,
+        data: wire.to_vec(),
+    }
+}
+
+pub fn fuzz_target(data: &[u8]) {
+    let g = |i: usize| data.get(i).copied().unwrap_or(0);
+
+    // honest session first: establish chain state worth poisoning
+    let feats: Vec<f32> = (0..N).map(|i| (i % 7) as f32 * 0.25).collect();
+    let mut q = Vec::new();
+    let scale = quantize_into(&feats, 200, &mut q);
+    let mut enc = Encoder::new();
+    let mut wire = Vec::new();
+    let (flags, seq) = enc.encode_into(&q, &mut wire);
+    let mut decs = Decoders::new();
+    let mut row = vec![0.0f32; N];
+    decs.decode_into(HONEST, &honest_frame(flags, seq, scale, &wire), &mut row)
+        .expect("honest keyframe must decode");
+    let honest_before = decs.frame(HONEST).map(<[u8]>::to_vec);
+
+    // attacker frame: header fields and payload straight from the input
+    // (dims bounded so the harness-side row allocation stays small; the
+    // decoder itself sees the claims unclamped)
+    let c = (g(0) % 9) as u16;
+    let h = (g(1) % 9) as u16;
+    let w = (g(2) % 9) as u16;
+    let af = FeatureFrame {
+        c,
+        h,
+        w,
+        codec: g(3),
+        flags: g(4),
+        qmax: g(5),
+        seq: u32::from_le_bytes([g(6), g(7), g(8), g(9)]),
+        scale: f32::from_le_bytes([g(10), g(11), g(12), g(13)]),
+        data: data.get(14..).map_or_else(Vec::new, <[u8]>::to_vec),
+    };
+    // header short-circuits (unknown codec id, zero qmax) bail before
+    // the payload machinery and leave the reject streak untouched; a
+    // frame that clears the header and still fails must be counted
+    let header_ok = af.codec == CODEC_DELTA && af.qmax > 0;
+    let mut arow = vec![0.0f32; af.feat_len()];
+    match decs.decode_into(ATTACKER, &af, &mut arow) {
+        Ok(()) => assert_eq!(decs.consecutive_rejects(ATTACKER), 0, "accept left a streak"),
+        Err(_) => assert_eq!(
+            decs.consecutive_rejects(ATTACKER),
+            u32::from(header_ok),
+            "reject miscounted"
+        ),
+    }
+    assert_eq!(decs.consecutive_rejects(HONEST), 0, "reject charged to the wrong session");
+
+    // isolation: the attacker's bytes never touched the honest stream…
+    assert_eq!(
+        decs.frame(HONEST).map(<[u8]>::to_vec),
+        honest_before,
+        "attacker frame mutated another session's decoder state"
+    );
+    // …and the honest chain still advances with a plain delta
+    let (flags, seq) = enc.encode_into(&q, &mut wire);
+    decs.decode_into(HONEST, &honest_frame(flags, seq, scale, &wire), &mut row)
+        .expect("honest delta must still decode after the attack");
+}

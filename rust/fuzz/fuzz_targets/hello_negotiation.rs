@@ -1,0 +1,91 @@
+//! Fuzz target: the [`SessionGate`] admission state machine driven by an
+//! arbitrary op sequence — hellos with hostile codec/capability claims,
+//! frame admissions, decode errors, capability probes — in any order.
+//!
+//! cargo-fuzz layout (see `msg_decode.rs`); driven deterministically by
+//! `rust/tests/fuzz_smoke.rs`.
+//!
+//! Invariants enforced after every op (DESIGN.md §9):
+//!
+//!   * the gate never panics, whatever order the ops arrive in;
+//!   * a hello ack only ever grants capabilities the client requested
+//!     AND the server masks in, and only echoes codec ids the server
+//!     knows (everything else declines to flat);
+//!   * quarantine is sticky: once entered, no hello is acked, no frame
+//!     is admitted, and no capability is granted, ever;
+//!   * an admitted frame always fits its per-type cap, and experience
+//!     frames are only ever admitted with `CAP_EXPERIENCE` negotiated.
+
+use miniconv::codec::CodecId;
+use miniconv::net::framing::{Hello, CAP_EXPERIENCE, MSG_EXPERIENCE};
+use miniconv::net::limits::{LimitsConfig, SessionGate};
+
+pub fn fuzz_target(data: &[u8]) {
+    // tight budgets so short op sequences can reach every state
+    let mut gate = SessionGate::new(LimitsConfig {
+        pre_hello_frame: 4096,
+        max_pre_hello_bytes: 16 << 10,
+        max_decode_errors: 4,
+        ..LimitsConfig::default()
+    });
+    let mut quarantined = false;
+    for op in data.chunks_exact(6) {
+        match op[0] % 4 {
+            0 => {
+                let h = Hello {
+                    client: op[1] as u32,
+                    split: op[2] & 1 != 0,
+                    codec: op[3],
+                    caps: op[4],
+                    shard: None,
+                };
+                let mask = op[5];
+                match gate.on_hello(&h, mask, None) {
+                    Some(ack) => {
+                        assert!(!quarantined, "quarantined session got a hello ack");
+                        assert_eq!(ack.caps, h.caps & mask, "ack granted unrequested caps");
+                        if CodecId::from_wire(h.codec).is_some() {
+                            assert_eq!(ack.codec, h.codec, "known codec id not echoed");
+                        } else {
+                            assert_eq!(ack.codec, 0, "unknown codec id not declined to flat");
+                        }
+                        assert_eq!(gate.grants(CAP_EXPERIENCE), ack.caps & CAP_EXPERIENCE != 0);
+                    }
+                    None => assert!(quarantined, "ready session refused a hello"),
+                }
+            }
+            1 => {
+                let ty = op[1];
+                let len = u16::from_le_bytes([op[2], op[3]]) as usize * op[4] as usize;
+                if gate.admit(ty, len).is_ok() {
+                    assert!(!quarantined, "quarantined session admitted a frame");
+                    let cap = gate.limits().cap(ty);
+                    assert!(cap > 0 && len <= cap, "admitted {len} bytes past cap {cap}");
+                    if ty == MSG_EXPERIENCE {
+                        assert!(
+                            gate.grants(CAP_EXPERIENCE),
+                            "experience frame admitted without the capability"
+                        );
+                    }
+                }
+            }
+            2 => {
+                if gate.on_decode_error() {
+                    assert!(gate.quarantined(), "budget exhausted without quarantine");
+                }
+            }
+            _ => {
+                // a capability is only ever granted by a hello ack
+                let granted = gate.grants(op[1]);
+                if quarantined {
+                    assert!(!granted, "quarantined session granted a capability");
+                }
+            }
+        }
+        // stickiness: quarantine never clears until disconnect
+        if quarantined {
+            assert!(gate.quarantined(), "quarantine was not sticky");
+        }
+        quarantined = gate.quarantined();
+    }
+}

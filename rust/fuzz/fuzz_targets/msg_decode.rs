@@ -1,0 +1,59 @@
+//! Fuzz target: [`Msg::decode`] over arbitrary frame bodies.
+//!
+//! cargo-fuzz layout: the entry point is `fuzz_target(data: &[u8])`, so
+//! with a nightly toolchain the body drops unchanged into a
+//! `libfuzzer_sys::fuzz_target!` wrapper. In this tree it is driven
+//! deterministically by `rust/tests/fuzz_smoke.rs` (seeded corpus +
+//! structured mutation + raw bytes) so the smoke run needs nothing
+//! beyond `cargo test`.
+//!
+//! Invariants enforced on every input (DESIGN.md §9):
+//!
+//!   * decode never panics — a hostile frame is an `Err`, not an abort;
+//!   * decode never retains more bytes than the frame delivered — every
+//!     wire-claimed element count is validated against the bytes
+//!     actually present before it sizes an allocation;
+//!   * decode ∘ encode is a fixed point: anything decode accepts
+//!     re-encodes to a frame of the same length that decodes to the
+//!     same message (compared byte-wise after a second encode, so NaN
+//!     float payloads cannot hide a mismatch).
+
+use miniconv::net::framing::Msg;
+
+/// Heap bytes the decoded message retains — the quantity the
+/// claimed-count validation must bound by the input length.
+fn retained_bytes(msg: &Msg) -> usize {
+    match msg {
+        Msg::Hello(_) => 0,
+        Msg::Request(r) => r.payload.wire_bytes(),
+        Msg::Response(r) => 4 * r.action.len(),
+        Msg::ResponseV2(r) => 4 * r.action.len(),
+        Msg::ResponseLearn(r) => 4 * r.action.len(),
+        Msg::Error(e) => e.detail.len(),
+        Msg::Policy(p) => 4 * p.params.len(),
+    }
+}
+
+pub fn fuzz_target(data: &[u8]) {
+    let msg = match Msg::decode(data) {
+        Ok(msg) => msg,
+        // rejection is the expected outcome for hostile bytes; the bug
+        // class this target hunts is panics and oversized allocations
+        Err(_) => return,
+    };
+    assert!(
+        retained_bytes(&msg) <= data.len(),
+        "decode retained more bytes than the {}-byte frame delivered",
+        data.len()
+    );
+    // fixed point: the accepted message re-encodes to a same-length
+    // frame (no invented bytes) that decodes and re-encodes identically
+    let enc = msg.encode();
+    assert_eq!(
+        enc.len() - 4,
+        data.len(),
+        "re-encoded frame changed length (non-canonical accept)"
+    );
+    let again = Msg::decode(&enc[4..]).expect("re-encoded frame failed to decode");
+    assert_eq!(again.encode(), enc, "encode/decode fixed point violated");
+}

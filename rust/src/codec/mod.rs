@@ -114,6 +114,12 @@ pub fn dequantize_into(scale: f32, qmax: u8, data: &[u8], out: &mut [f32]) {
 #[derive(Debug, Default)]
 pub struct Decoders {
     streams: BTreeMap<u32, Decoder>,
+    /// consecutive rejects per session, reset by any accepted frame — the
+    /// quarantine signal of `net::limits` (DESIGN.md §9): a healthy delta
+    /// client takes at most one reject per chain break before its
+    /// recovery keyframe lands, while a session feeding garbage climbs
+    /// without bound
+    consecutive: BTreeMap<u32, u32>,
     /// frames rejected across all sessions (chain breaks, corrupt payloads)
     pub rejects: u64,
     /// frames decoded across all sessions
@@ -140,6 +146,15 @@ impl Decoders {
     /// Session gone: free its stream state entirely.
     pub fn disconnect(&mut self, client: u32) {
         self.streams.remove(&client);
+        self.consecutive.remove(&client);
+    }
+
+    /// Consecutive rejected frames from this session since its last
+    /// accepted one. Executors compare this against
+    /// `LimitsConfig::max_codec_rejects` to quarantine codec abusers
+    /// without touching any other session's stream.
+    pub fn consecutive_rejects(&self, client: u32) -> u32 {
+        self.consecutive.get(&client).copied().unwrap_or(0)
     }
 
     /// The most recently reconstructed quantised frame for a session
@@ -171,11 +186,13 @@ impl Decoders {
         match r {
             Ok(()) => {
                 self.accepted += 1;
+                self.consecutive.remove(&client);
                 dequantize_into(f.scale, f.qmax, dec.frame(), row);
                 Ok(())
             }
             Err(e) => {
                 self.rejects += 1;
+                *self.consecutive.entry(client).or_insert(0) += 1;
                 Err(e)
             }
         }
@@ -270,6 +287,43 @@ mod tests {
         assert_eq!(decs.n_streams(), 1);
         decs.disconnect(7);
         assert_eq!(decs.n_streams(), 0);
+    }
+
+    #[test]
+    fn consecutive_rejects_climb_for_garbage_and_reset_on_recovery() {
+        let mut decs = Decoders::new();
+        let mut row = vec![0.0f32; 8];
+        // garbage payloads that pass frame validation but fail the codec
+        let junk = FeatureFrame {
+            c: 1,
+            h: 1,
+            w: 8,
+            codec: CODEC_DELTA,
+            flags: 0, // a delta with no primed base can never decode
+            qmax: 255,
+            seq: 3,
+            scale: 1.0,
+            data: vec![0xFF; 8],
+        };
+        for i in 1..=5u32 {
+            assert!(decs.decode_into(66, &junk, &mut row).is_err());
+            assert_eq!(decs.consecutive_rejects(66), i);
+        }
+        // an unrelated healthy session is unaffected
+        assert_eq!(decs.consecutive_rejects(7), 0);
+        let mut enc = Encoder::new();
+        let good = frame_of(&mut enc, &[3u8; 8], 255, 1.0);
+        decs.decode_into(7, &good, &mut row).unwrap();
+        assert_eq!(decs.consecutive_rejects(7), 0);
+        assert_eq!(decs.consecutive_rejects(66), 5);
+        // recovery (a keyframe that decodes) resets the abuser's count
+        let mut enc2 = Encoder::new();
+        let kf = frame_of(&mut enc2, &[1u8; 8], 255, 1.0);
+        decs.decode_into(66, &kf, &mut row).unwrap();
+        assert_eq!(decs.consecutive_rejects(66), 0);
+        // disconnect drops the bookkeeping entirely
+        decs.disconnect(66);
+        assert_eq!(decs.consecutive_rejects(66), 0);
     }
 
     #[test]

@@ -20,9 +20,10 @@ use crate::codec::{self, CodecId, Encoder, RateConfig, RateController, CODEC_DEL
 use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
 use crate::envs::{CropMode, Env, Pendulum, PixelPipeline};
 use crate::net::framing::{
-    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE, EXP_DONE,
-    EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED,
+    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE,
+    ERR_OVERLOADED, EXP_DONE, EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED,
 };
+use crate::net::limits::backoff_delay;
 use crate::net::shaped::ShapedWriter;
 use crate::net::tcp::{read_msg, write_msg};
 use crate::rl::native::{episode_rng, normalize_pendulum_obs};
@@ -107,6 +108,9 @@ pub struct ClientReport {
     pub deltas: u64,
     /// server re-key demands observed (chain breaks it could not decode)
     pub need_keyframes: u64,
+    /// requests explicitly shed with an [`ERR_OVERLOADED`] frame (the
+    /// client backed off with jittered retry delays, DESIGN.md §9)
+    pub overloaded: u64,
     /// rate controller's final quantisation ceiling (0 = flat codec)
     pub final_qmax: u8,
 }
@@ -222,6 +226,10 @@ pub fn run_client(
 
     let mut env = Pendulum::new();
     let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E37).wrapping_add(client_id as u64));
+    // the backoff jitter draws from its own stream so an overload event
+    // never perturbs the environment's episode determinism
+    let mut backoff_rng = Rng::new(cfg.seed ^ 0xBACC0FF ^ client_id as u64);
+    let mut overload_attempts = 0u32;
     env.reset(&mut rng);
     let mut pipeline = PixelPipeline::new(100, serve_x, CropMode::Center);
     pipeline.observe(&env, &mut rng);
@@ -337,6 +345,18 @@ pub fn run_client(
                     }
                     break r.action;
                 }
+                Some(Msg::Error(e)) if e.code == ERR_OVERLOADED => {
+                    // explicit load-shed (DESIGN.md §9): the request was
+                    // refused outright, so there is no response to wait
+                    // for. Back off with full jitter — decorrelating a
+                    // thundering herd of retries — and take the zero
+                    // action for this decision.
+                    report.overloaded += 1;
+                    overload_attempts += 1;
+                    let d = backoff_delay(0.010, overload_attempts, 0.5, &mut backoff_rng);
+                    cfg.clock.sleep(Duration::from_secs_f64(d));
+                    break vec![];
+                }
                 // the codec verdict was consumed at the negotiation
                 // barrier; a late/duplicate ack must not renegotiate a
                 // stream that is already flowing
@@ -349,6 +369,7 @@ pub fn run_client(
             // explicit server rejection (back-pressure): count and move on
             report.errors += 1;
         } else {
+            overload_attempts = 0; // served again: reset the backoff ladder
             report
                 .latencies
                 .push(cfg.clock.now().duration_since(t0).as_secs_f64());
@@ -416,6 +437,8 @@ pub struct LearnClientReport {
     pub latest_version: u64,
     /// the session was downgraded to inference-only frames
     pub fallback: bool,
+    /// requests explicitly shed with an [`ERR_OVERLOADED`] frame
+    pub overloaded: u64,
     pub errors: usize,
 }
 
@@ -459,6 +482,10 @@ pub fn run_learn_client(
     let mut env_rng = episode_rng(cfg.seed, 0);
     env.reset(&mut env_rng);
     let max_a = env.max_action();
+    // jittered-backoff state for explicit load-shed frames; a separate
+    // stream so overload never perturbs the episode determinism
+    let mut backoff_rng = Rng::new(cfg.seed ^ 0xBACC0FF ^ client_id as u64);
+    let mut overload_attempts = 0u32;
     let mut encoder = Encoder::new();
     let mut obs = vec![0.0f32; 3];
     let mut qbuf: Vec<u8> = Vec::new();
@@ -539,6 +566,20 @@ pub fn run_learn_client(
                     }
                     break Some(r.action);
                 }
+                Some(Msg::Error(e)) if e.code == ERR_OVERLOADED => {
+                    // load-shed, not a capability verdict: keep the
+                    // session mode, back off with full jitter, re-key
+                    // (the shed frame never reached the decoder, so the
+                    // delta chain must restart) and resend this (ep, step)
+                    debug_assert_eq!(e.client, client_id);
+                    report.overloaded += 1;
+                    report.errors += 1;
+                    overload_attempts += 1;
+                    let d = backoff_delay(0.010, overload_attempts, 0.5, &mut backoff_rng);
+                    std::thread::sleep(Duration::from_secs_f64(d));
+                    encoder.force_keyframe();
+                    break None;
+                }
                 Some(Msg::Error(e)) => {
                     // explicit capability rejection: downgrade to
                     // inference-only and resend this observation
@@ -554,6 +595,7 @@ pub fn run_learn_client(
             }
         };
         let Some(action) = action else { continue };
+        overload_attempts = 0; // served again: reset the backoff ladder
 
         if experience && ep as usize >= cfg.episodes {
             // that was the flush frame: the final transition's reward is

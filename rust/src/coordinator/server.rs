@@ -22,14 +22,15 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 use log::{debug, warn};
 
-use crate::codec::{CodecId, Decoders};
+use crate::codec::Decoders;
 use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
     dequantize_features_into, encode_response_into, encode_response_learn_into,
-    encode_response_v2_into, ErrorMsg, Hello, Msg, Payload, Response, ResponseV2, CAP_EXPERIENCE,
+    encode_response_v2_into, ErrorMsg, Msg, Payload, Response, ResponseV2, CAP_EXPERIENCE,
     ERR_EXPERIENCE_UNSUPPORTED, RESP_FLAG_NEED_KEYFRAME,
 };
-use crate::net::tcp::{read_msg, write_frame, write_msg};
+use crate::net::limits::{LimitsConfig, SessionGate};
+use crate::net::tcp::{read_msg_limited, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
 use crate::sim::clock::ClockHandle;
 
@@ -68,6 +69,11 @@ pub struct ServerConfig {
     /// single-threaded `sim::scenario` runner instead, which drives the
     /// same batcher/session components event by event.
     pub clock: ClockHandle,
+    /// hostile-input resource budgets (DESIGN.md §9): per-type frame-size
+    /// caps negotiated at Hello, per-connection malformed-frame budgets
+    /// with quarantine, and the reader idle timeout that reaps half-open
+    /// clients together with their session + codec state
+    pub limits: LimitsConfig,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +88,7 @@ impl Default for ServerConfig {
             backend: Backend::Pjrt,
             learn: None,
             clock: ClockHandle::wall(),
+            limits: LimitsConfig::default(),
         }
     }
 }
@@ -232,6 +239,7 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     let shard_id = cfg.shard_id;
     let caps_mask = if cfg.learn.is_some() { CAP_EXPERIENCE } else { 0 };
     let acc_clock = cfg.clock.clone();
+    let acc_limits = cfg.limits.clone();
     let acceptor = std::thread::Builder::new()
         .name("mc-accept".into())
         .spawn(move || {
@@ -244,10 +252,11 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                         let tx = tx.clone();
                         let shutdown = acc_shutdown.clone();
                         let clock = acc_clock.clone();
+                        let limits = acc_limits.clone();
                         std::thread::Builder::new()
                             .name("mc-reader".into())
                             .spawn(move || {
-                                reader_main(s, tx, shutdown, shard_id, caps_mask, clock)
+                                reader_main(s, tx, shutdown, shard_id, caps_mask, clock, limits)
                             })
                             .ok();
                     }
@@ -270,6 +279,7 @@ fn reader_main(
     shard_id: Option<u16>,
     caps_mask: u8,
     clock: ClockHandle,
+    limits: LimitsConfig,
 ) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
@@ -278,21 +288,30 @@ fn reader_main(
             return;
         }
     };
+    // a half-open client (sends nothing, never closes) must not pin this
+    // OS thread forever: the read timeout doubles as the idle reaper —
+    // on expiry the connection is dropped and its session + codec state
+    // freed through the normal Disconnect path
+    if let Err(e) = stream.set_read_timeout(Some(limits.idle_timeout)) {
+        warn!("set read timeout: {e}");
+    }
     let mut reader = stream;
     // the session this connection carries (learned from its first frame),
     // so its codec stream state can be freed when the connection ends
     let mut session: Option<u32> = None;
-    // capabilities granted to this connection by its hello (requested
-    // caps masked down to what the server supports)
-    let mut granted: u8 = 0;
+    // admission state machine (DESIGN.md §9): pre-Hello frame caps, the
+    // negotiated route/codec/caps after the Hello, and the per-connection
+    // malformed-frame budget
+    let mut gate = SessionGate::new(limits);
+    let mut buf = Vec::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        match read_msg(&mut reader) {
-            Ok(Some(Msg::Request(r))) => {
+        match read_msg_limited(&mut reader, &mut buf, gate.limits()) {
+            Ok(Some(Ok(Msg::Request(r)))) => {
                 session = Some(r.client);
-                if matches!(r.payload, Payload::Experience(_)) && granted & CAP_EXPERIENCE == 0 {
+                if matches!(r.payload, Payload::Experience(_)) && !gate.grants(CAP_EXPERIENCE) {
                     // explicit rejection (never silence): the client sees
                     // exactly why and falls back to inference-only frames
                     let err = Msg::Error(ErrorMsg {
@@ -306,6 +325,13 @@ fn reader_main(
                     }
                     continue;
                 }
+                // the transport already enforced the per-type size cap;
+                // this meters the pre-Hello byte budget (a peer streaming
+                // requests without ever negotiating is bounded)
+                if let Err(e) = gate.admit(buf[0], buf.len()) {
+                    warn!("client {}: {e:#}; disconnecting", r.client);
+                    break;
+                }
                 let work = Work {
                     client: r.client,
                     id: r.id,
@@ -317,39 +343,62 @@ fn reader_main(
                     break; // executor gone
                 }
             }
-            Ok(Some(Msg::Hello(h))) => {
+            Ok(Some(Ok(Msg::Hello(h)))) => {
                 session = Some(h.client);
                 // tell the executor first (channel order guarantees the
                 // invalidation lands before any request this connection
                 // sends), then ack the preamble so gateways and health
                 // probes get a round trip; the ack carries our shard
-                // identity and echoes the codec we accept
+                // identity, echoes the codec we accept, and masks the
+                // requested capability bits — and fixes the per-type
+                // frame caps to the negotiated route
                 if tx.send(Ingress::Hello { client: h.client }).is_err() {
                     break;
                 }
-                let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
-                granted = h.caps & caps_mask;
-                let ack = Msg::Hello(Hello {
-                    client: h.client,
-                    split: h.split,
-                    codec,
-                    caps: granted,
-                    shard: shard_id,
-                });
+                let Some(ack) = gate.on_hello(&h, caps_mask, shard_id) else {
+                    break; // quarantined sessions get no ack
+                };
                 let mut w = writer.lock().unwrap();
-                if write_msg(&mut *w, &ack).is_err() {
+                if write_msg(&mut *w, &Msg::Hello(ack)).is_err() {
                     break;
                 }
             }
-            Ok(Some(
+            Ok(Some(Ok(
                 Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_)
                 | Msg::Policy(_),
-            )) => {
+            ))) => {
                 warn!("client sent a server-side frame; ignoring");
+            }
+            Ok(Some(Err(e))) => {
+                // well-framed but undecodable: framing is still
+                // synchronized, so spend the malformed-frame budget
+                // instead of tearing the session down on one bad frame
+                if gate.on_decode_error() {
+                    warn!(
+                        "client {:?}: malformed-frame budget exhausted ({e:#}); quarantining",
+                        session
+                    );
+                    break;
+                }
+                debug!("reader: malformed frame ({e:#}); budget remaining");
             }
             Ok(None) => break, // clean EOF
             Err(e) => {
-                debug!("reader: {e}");
+                let timed_out = e
+                    .root_cause()
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if timed_out {
+                    debug!("reader: idle timeout; reaping session {session:?}");
+                } else {
+                    debug!("reader: {e}");
+                }
                 break;
             }
         }
@@ -402,12 +451,13 @@ impl LearnExec {
 
     /// Decode, learn, act, reply. An undecodable codec frame answers with
     /// an empty need-keyframe reply, exactly like the inference path.
-    fn handle(&mut self, codecs: &mut Decoders, w: &Work) -> Result<()> {
+    fn handle(&mut self, codecs: &mut Decoders, w: &Work, max_rejects: u32) -> Result<()> {
         let Payload::Experience(e) = &w.payload else { return Ok(()) };
         let flen = e.feat.feat_len();
         self.obs.clear();
         self.obs.resize(flen, 0.0);
         if codecs.decode_into(w.client, &e.feat, &mut self.obs).is_err() {
+            quarantine_codec_abuser(codecs, w, max_rejects);
             encode_response_learn_into(
                 w.client,
                 w.id,
@@ -449,6 +499,23 @@ impl LearnExec {
             debug!("learn reply to client {}: {e}", w.client);
         }
         Ok(())
+    }
+}
+
+/// Codec-abuser quarantine (DESIGN.md §9): a session whose frames keep
+/// failing the stream decoder past the consecutive-reject budget is cut
+/// off at the socket. The counter resets on any accepted frame, so a
+/// healthy delta client that takes a chain break recovers on its next
+/// keyframe with at most one reject — only a peer that ignores the
+/// need-keyframe feedback ever reaches the budget. Shutting the stream
+/// down trips that connection's reader, which frees the session's codec
+/// and stacking state through the normal Disconnect path; other
+/// sessions' decoder state is never touched.
+fn quarantine_codec_abuser(codecs: &Decoders, work: &Work, max_rejects: u32) {
+    if codecs.consecutive_rejects(work.client) > max_rejects {
+        warn!("client {}: codec-reject budget exhausted; quarantining", work.client);
+        let w = work.reply.lock().unwrap();
+        let _ = w.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -613,6 +680,7 @@ fn executor_pjrt(
     let mut arena = BatchArena::new();
     let mut learn = cfg.learn.clone().map(LearnExec::new);
     let clock = cfg.clock.clone();
+    let max_rejects = cfg.limits.max_codec_rejects;
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
         ExecEvent::Hello(client) => {
             // new session incarnation: its next codec frame must keyframe
@@ -620,14 +688,17 @@ fn executor_pjrt(
             Ok(())
         }
         ExecEvent::Disconnect(client) => {
+            // reap everything the session pinned: codec stream state,
+            // frame-stacking state, and buffered experience segments
             codecs.disconnect(client);
+            sessions.disconnect(client);
             if let Some(l) = learn.as_mut() {
                 l.learner.buf.drop_client(client);
             }
             Ok(())
         }
         ExecEvent::Experience(w) => match learn.as_mut() {
-            Some(l) => l.handle(&mut codecs, &w),
+            Some(l) => l.handle(&mut codecs, &w, max_rejects),
             // unreachable behind the reader's caps gate; drop defensively
             None => Ok(()),
         },
@@ -646,6 +717,7 @@ fn executor_pjrt(
                 &mut arena,
                 &metrics,
                 &cfg.clock,
+                max_rejects,
             )
         }
     });
@@ -727,6 +799,7 @@ fn executor_sim(
     let mut arena = BatchArena::new();
     let mut learn = cfg.learn.clone().map(LearnExec::new);
     let clock = cfg.clock.clone();
+    let max_rejects = cfg.limits.max_codec_rejects;
     executor_loop(cfg.policy, cfg.max_depth, rx, &metrics, &shutdown, &clock, |ev| match ev {
         ExecEvent::Hello(client) => {
             codecs.invalidate(client);
@@ -734,13 +807,14 @@ fn executor_sim(
         }
         ExecEvent::Disconnect(client) => {
             codecs.disconnect(client);
+            sessions.disconnect(client);
             if let Some(l) = learn.as_mut() {
                 l.learner.buf.drop_client(client);
             }
             Ok(())
         }
         ExecEvent::Experience(w) => match learn.as_mut() {
-            Some(l) => l.handle(&mut codecs, &w),
+            Some(l) => l.handle(&mut codecs, &w, max_rejects),
             None => Ok(()),
         },
         ExecEvent::Batch(route, items) => run_batch_sim(
@@ -753,6 +827,7 @@ fn executor_sim(
             &mut arena,
             &metrics,
             &cfg.clock,
+            max_rejects,
         ),
     });
 }
@@ -772,6 +847,7 @@ fn run_batch_sim(
     arena: &mut BatchArena,
     metrics: &Metrics,
     clock: &ClockHandle,
+    max_rejects: u32,
 ) -> Result<()> {
     let n = items.len();
     let dequeue = clock.now();
@@ -823,6 +899,7 @@ fn run_batch_sim(
                 if failed {
                     row[..flen].fill(0.0);
                     arena.need_key[i] = true;
+                    quarantine_codec_abuser(codecs, &item.work, max_rejects);
                 }
             }
         }
@@ -915,6 +992,7 @@ fn run_batch(
     arena: &mut BatchArena,
     metrics: &Metrics,
     clock: &ClockHandle,
+    max_rejects: u32,
 ) -> Result<()> {
     let n = items.len();
     let b = pick_batch(n, &exec.ladder);
@@ -961,6 +1039,7 @@ fn run_batch(
                         Ok(()) => false,
                         Err(e) => {
                             debug!("codec reject for client {}: {e:#}", item.work.client);
+                            quarantine_codec_abuser(codecs, &item.work, max_rejects);
                             row.fill(0.0);
                             true
                         }

@@ -18,18 +18,22 @@
 
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use log::{debug, warn};
 
 use crate::net::framing::{
-    Hello, Msg, MSG_HELLO, MSG_REQUEST_FEAT, MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE,
-    MSG_RESPONSE_V2,
+    ErrorMsg, Hello, Msg, ERR_OVERLOADED, MSG_ERROR, MSG_HELLO, MSG_REQUEST_FEAT,
+    MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE, MSG_RESPONSE_V2,
 };
-use crate::net::tcp::{read_msg, read_raw_frame, write_msg, write_raw_frame};
+use crate::net::limits::{FrameLimits, LimitsConfig, RateCap};
+use crate::net::tcp::{
+    read_msg, read_msg_limited, read_raw_frame, read_raw_frame_limited, write_msg,
+    write_raw_frame,
+};
 use crate::util::signal::Signal;
 
 use super::health::{HealthConfig, HealthMonitor};
@@ -50,6 +54,18 @@ pub struct GatewayConfig {
     /// monitor (or an explicit `set_shard_state`) can bring it back up —
     /// prefer `Some` unless states are managed externally
     pub health: Option<HealthConfig>,
+    /// hostile-input resource budgets (DESIGN.md §9): per-type frame-size
+    /// caps applied to every client→shard pump read
+    pub limits: LimitsConfig,
+    /// bounded accept queue: connections past this many live sessions are
+    /// shed with an explicit [`ERR_OVERLOADED`] frame instead of queueing
+    /// behind the batcher (clients back off with jittered retries)
+    pub max_conns: usize,
+    /// per-session request rate cap in requests/s (0.0 disables); excess
+    /// requests are answered with [`ERR_OVERLOADED`], the session survives
+    pub rate_hz: f64,
+    /// token-bucket burst allowance for the rate cap
+    pub rate_burst: f64,
 }
 
 impl Default for GatewayConfig {
@@ -60,7 +76,31 @@ impl Default for GatewayConfig {
             vnodes: 64,
             connect_timeout: Duration::from_secs(1),
             health: None,
+            limits: LimitsConfig::default(),
+            max_conns: 1024,
+            rate_hz: 0.0,
+            rate_burst: 32.0,
         }
+    }
+}
+
+/// Admission-control state shared by every gateway connection
+/// (DESIGN.md §9): the config knobs plus the live-connection gauge the
+/// bounded accept queue is enforced against.
+struct Admission {
+    limits: LimitsConfig,
+    max_conns: usize,
+    rate_hz: f64,
+    rate_burst: f64,
+    live: AtomicUsize,
+}
+
+/// Releases the live-connection gauge however the connection ends.
+struct LiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -70,6 +110,9 @@ impl Default for GatewayConfig {
 struct Counters {
     forwarded_requests: AtomicU64,
     forwarded_responses: AtomicU64,
+    /// requests refused by the per-session rate cap (frame-rate, so it
+    /// lives with the lock-free counters, not the mutexed stats)
+    rate_limited: AtomicU64,
     per_shard_requests: HashMap<ShardId, AtomicU64>,
 }
 
@@ -102,6 +145,11 @@ pub struct GatewayStats {
     /// sessions whose placement changed between connections — stays 0 while
     /// the routable set is stable (the session-affinity invariant)
     pub reassigned: u64,
+    /// connections shed by the bounded accept queue (answered with an
+    /// explicit [`ERR_OVERLOADED`] frame, DESIGN.md §9)
+    pub shed_connections: u64,
+    /// requests refused by the per-session rate cap (the session survives)
+    pub rate_limited: u64,
 }
 
 pub struct GatewayHandle {
@@ -122,6 +170,7 @@ impl GatewayHandle {
         let mut s = self.stats.lock().unwrap().clone();
         s.forwarded_requests = self.counters.forwarded_requests.load(Ordering::SeqCst);
         s.forwarded_responses = self.counters.forwarded_responses.load(Ordering::SeqCst);
+        s.rate_limited = self.counters.rate_limited.load(Ordering::SeqCst);
         s.per_shard_requests = self
             .counters
             .per_shard_requests
@@ -208,6 +257,7 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
     let counters = Arc::new(Counters {
         forwarded_requests: AtomicU64::new(0),
         forwarded_responses: AtomicU64::new(0),
+        rate_limited: AtomicU64::new(0),
         per_shard_requests: cfg
             .shards
             .iter()
@@ -227,6 +277,13 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
     let acc_counters = counters.clone();
     let acc_signal = signal.clone();
     let connect_timeout = cfg.connect_timeout;
+    let admission = Arc::new(Admission {
+        limits: cfg.limits.clone(),
+        max_conns: cfg.max_conns,
+        rate_hz: cfg.rate_hz,
+        rate_burst: cfg.rate_burst,
+        live: AtomicUsize::new(0),
+    });
     let acceptor = std::thread::Builder::new()
         .name("gw-accept".into())
         .spawn(move || {
@@ -241,6 +298,7 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
                         let counters = acc_counters.clone();
                         let shutdown = acc_shutdown.clone();
                         let signal = acc_signal.clone();
+                        let admission = admission.clone();
                         std::thread::Builder::new()
                             .name("gw-conn".into())
                             .spawn(move || {
@@ -251,6 +309,7 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
                                     counters,
                                     shutdown,
                                     connect_timeout,
+                                    &admission,
                                     &signal,
                                 );
                                 if let Err(e) = r {
@@ -284,6 +343,7 @@ pub fn serve_gateway(cfg: GatewayConfig) -> Result<GatewayHandle> {
 }
 
 /// Serve one client connection end to end.
+#[allow(clippy::too_many_arguments)]
 fn gw_conn(
     mut client: TcpStream,
     topology: Arc<Mutex<Topology>>,
@@ -291,13 +351,21 @@ fn gw_conn(
     counters: Arc<Counters>,
     shutdown: Arc<AtomicBool>,
     connect_timeout: Duration,
+    admission: &Admission,
     signal: &Signal,
 ) -> Result<()> {
     client.set_nodelay(true).ok();
+    let admitted = admission.live.fetch_add(1, Ordering::SeqCst) < admission.max_conns;
+    let _live = LiveGuard(&admission.live);
 
-    // the first frame names the session this connection belongs to
-    let first = match read_msg(&mut client)? {
-        Some(m) => m,
+    // the first frame names the session this connection belongs to; it is
+    // read under the pre-Hello caps — an unnegotiated peer never buys a
+    // large allocation (DESIGN.md §9)
+    let pre_hello = FrameLimits::pre_hello(&admission.limits);
+    let mut first_buf = Vec::new();
+    let first = match read_msg_limited(&mut client, &mut first_buf, &pre_hello)? {
+        Some(Ok(m)) => m,
+        Some(Err(e)) => bail!("client opened with an undecodable frame: {e:#}"),
         None => return Ok(()), // connected and left (e.g. the shutdown poke)
     };
     let session = match &first {
@@ -305,6 +373,29 @@ fn gw_conn(
         Msg::Request(r) => r.client,
         Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_)
         | Msg::Policy(_) => bail!("client opened with a server-side frame"),
+    };
+
+    // bounded accept queue: past capacity, shed with an explicit overload
+    // frame instead of stalling the batcher — the client backs off with a
+    // jittered retry and the fleet degrades gracefully
+    if !admitted {
+        let err = Msg::Error(ErrorMsg {
+            client: session,
+            code: ERR_OVERLOADED,
+            detail: "gateway at connection capacity; retry with backoff".into(),
+        });
+        let _ = write_msg(&mut client, &err);
+        stats.lock().unwrap().shed_connections += 1;
+        signal.notify();
+        debug!("shed session {session}: gateway at connection capacity");
+        return Ok(());
+    }
+
+    // fix the per-type frame caps for the pump: a Hello pins them to the
+    // negotiated route; a bare request keeps the pre-Hello union
+    let pump_limits = match &first {
+        Msg::Hello(h) => FrameLimits::negotiated(h.split, &admission.limits),
+        _ => pre_hello,
     };
 
     // consistent-hash placement, re-routing around shards that refuse the
@@ -347,13 +438,23 @@ fn gw_conn(
     }
     signal.notify();
 
-    let result =
-        pump_session(&mut client, upstream, &first, session, shard_id, &counters, &shutdown);
+    let result = pump_session(
+        &mut client,
+        upstream,
+        &first,
+        session,
+        shard_id,
+        &counters,
+        &shutdown,
+        &pump_limits,
+        admission,
+    );
     topology.lock().unwrap().conn_closed(shard_id);
     signal.notify();
     result
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pump_session(
     client: &mut TcpStream,
     mut upstream: TcpStream,
@@ -362,6 +463,8 @@ fn pump_session(
     shard_id: ShardId,
     counters: &Arc<Counters>,
     shutdown: &Arc<AtomicBool>,
+    limits: &FrameLimits,
+    admission: &Admission,
 ) -> Result<()> {
     // the gateway speaks for the fleet: ack the opening hello with the
     // assigned shard before any traffic flows. Because the shard's own
@@ -396,9 +499,14 @@ fn pump_session(
     // branch, and a write (DistrEdge's partitioned-serving lesson: data
     // movement, not compute, dominates the proxy path).
 
+    // the client writer is shared between the return pump and the forward
+    // pump's overload replies, so shed frames never interleave mid-frame
+    // with a response copy
+    let client_write = Arc::new(Mutex::new(client.try_clone().context("clone client stream")?));
+
     // shard -> client pump (hello acks already handled above)
     let mut up_read = upstream.try_clone().context("clone upstream")?;
-    let mut client_write = client.try_clone().context("clone client stream")?;
+    let back_write = client_write.clone();
     let pump_counters = counters.clone();
     let back = std::thread::Builder::new()
         .name("gw-pump".into())
@@ -415,6 +523,10 @@ fn pump_session(
                                     .forwarded_responses
                                     .fetch_add(1, Ordering::SeqCst);
                             }
+                            // the shard's explicit rejection frames must
+                            // reach fleet clients (capability refusals,
+                            // overload sheds)
+                            MSG_ERROR => {}
                             MSG_REQUEST_RAW | MSG_REQUEST_FEAT | MSG_REQUEST_FEAT_V2 => {}
                             // a corrupt/version-skewed shard must surface at
                             // the gateway boundary, not be relayed onward
@@ -423,7 +535,8 @@ fn pump_session(
                                 break;
                             }
                         }
-                        if write_raw_frame(&mut client_write, &frame).is_err() {
+                        let mut w = back_write.lock().unwrap();
+                        if write_raw_frame(&mut *w, &frame).is_err() {
                             break;
                         }
                     }
@@ -433,18 +546,44 @@ fn pump_session(
         })
         .context("spawn return pump")?;
 
-    // client -> shard pump, inline
+    // client -> shard pump, inline. Reads run under the session's per-type
+    // frame caps: an oversize claim or unknown type is a transport
+    // violation (the body is unread, framing is desynced) and drops the
+    // connection — the gateway never buys a hostile allocation
+    let mut rate = (admission.rate_hz > 0.0)
+        .then(|| RateCap::new(admission.rate_hz, admission.rate_burst));
+    let t0 = Instant::now();
     let forward = (|| -> Result<()> {
         let mut frame = Vec::new();
         loop {
             if shutdown.load(Ordering::SeqCst) {
                 break;
             }
-            if !read_raw_frame(client, &mut frame)? {
+            if !read_raw_frame_limited(client, &mut frame, limits)? {
                 break; // client done
             }
             match frame[0] {
                 MSG_REQUEST_RAW | MSG_REQUEST_FEAT | MSG_REQUEST_FEAT_V2 => {
+                    // per-session rate cap: excess requests are shed with
+                    // an explicit overload frame, never forwarded — the
+                    // batcher's queue stays owned by compliant traffic,
+                    // and the session itself survives
+                    if let Some(rc) = rate.as_mut() {
+                        if !rc.allow(t0.elapsed().as_secs_f64()) {
+                            counters.rate_limited.fetch_add(1, Ordering::SeqCst);
+                            let err = Msg::Error(ErrorMsg {
+                                client: session,
+                                code: ERR_OVERLOADED,
+                                detail: "per-session rate cap exceeded; retry with backoff"
+                                    .into(),
+                            });
+                            let mut w = client_write.lock().unwrap();
+                            if write_msg(&mut *w, &err).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                    }
                     counters.count_request(shard_id)
                 }
                 MSG_HELLO | MSG_RESPONSE | MSG_RESPONSE_V2 => {}
@@ -565,6 +704,102 @@ mod tests {
             gw.wait_stats(Duration::from_secs(2), |s| s.rejected > 0),
             "rejection never counted"
         );
+        gw.shutdown();
+        s0.shutdown();
+    }
+
+    /// Bounded accept queue: a gateway at capacity sheds the connection
+    /// with an explicit overload frame instead of silently hanging or
+    /// queueing behind the batcher.
+    #[test]
+    fn over_capacity_connections_are_shed_with_an_explicit_overload_frame() {
+        let s0 = sim_shard(0);
+        let gw = serve_gateway(GatewayConfig {
+            shards: vec![(ShardId(0), s0.addr)],
+            max_conns: 0, // everything is over capacity
+            ..GatewayConfig::default()
+        })
+        .expect("gateway");
+
+        let mut conn = TcpStream::connect(gw.addr).unwrap();
+        write_msg(
+            &mut conn,
+            &Msg::Hello(Hello { client: 9, split: false, codec: 0, caps: 0, shard: None }),
+        )
+        .unwrap();
+        match read_msg(&mut conn).unwrap() {
+            Some(Msg::Error(e)) => {
+                assert_eq!(e.code, ERR_OVERLOADED);
+                assert_eq!(e.client, 9);
+            }
+            other => panic!("expected an overload frame, got {other:?}"),
+        }
+        // and the connection is closed after the shed frame
+        assert!(matches!(read_msg(&mut conn), Ok(None) | Err(_)));
+        assert!(
+            gw.wait_stats(Duration::from_secs(2), |s| s.shed_connections > 0),
+            "shed never counted"
+        );
+        gw.shutdown();
+        s0.shutdown();
+    }
+
+    /// Per-session rate cap: past the burst, requests are answered with
+    /// an overload frame and never forwarded — but the session survives,
+    /// so compliant traffic keeps flowing after backoff.
+    #[test]
+    fn rate_capped_requests_are_shed_without_killing_the_session() {
+        let s0 = sim_shard(0);
+        let gw = serve_gateway(GatewayConfig {
+            shards: vec![(ShardId(0), s0.addr)],
+            // one request of burst, then a refill far slower than the test
+            rate_hz: 0.001,
+            rate_burst: 1.0,
+            ..GatewayConfig::default()
+        })
+        .expect("gateway");
+
+        let mut conn = TcpStream::connect(gw.addr).unwrap();
+        write_msg(
+            &mut conn,
+            &Msg::Hello(Hello { client: 3, split: false, codec: 0, caps: 0, shard: None }),
+        )
+        .unwrap();
+        assert!(matches!(read_msg(&mut conn).unwrap().unwrap(), Msg::Hello(_)));
+
+        let req = |id: u64| {
+            Msg::Request(Request {
+                client: 3,
+                id,
+                payload: Payload::RawRgba { x: 4, data: vec![1; 4 * 16] },
+            })
+        };
+        // the burst token buys the first request a real response…
+        write_msg(&mut conn, &req(1)).unwrap();
+        loop {
+            match read_msg(&mut conn).unwrap().unwrap() {
+                Msg::Response(r) => {
+                    assert_eq!(r.id, 1);
+                    break;
+                }
+                _ => continue,
+            }
+        }
+        // …and the second is shed with an explicit overload frame
+        write_msg(&mut conn, &req(2)).unwrap();
+        loop {
+            match read_msg(&mut conn).unwrap().unwrap() {
+                Msg::Error(e) => {
+                    assert_eq!(e.code, ERR_OVERLOADED);
+                    assert_eq!(e.client, 3);
+                    break;
+                }
+                other => panic!("expected an overload frame, got {other:?}"),
+            }
+        }
+        let st = gw.stats();
+        assert_eq!(st.rate_limited, 1);
+        assert_eq!(st.forwarded_requests, 1, "the shed request must not reach the shard");
         gw.shutdown();
         s0.shutdown();
     }

@@ -58,6 +58,12 @@ pub const CAP_EXPERIENCE: u8 = 1;
 /// negotiated [`CAP_EXPERIENCE`] capability.
 pub const ERR_EXPERIENCE_UNSUPPORTED: u8 = 1;
 
+/// [`ErrorMsg::code`]: the endpoint is shedding load (admission cap or
+/// per-client rate cap exceeded — `net::limits`, DESIGN.md §9). The
+/// request was *not* processed; the client must back off with jittered
+/// retry ([`crate::net::limits::backoff_delay`]) instead of hammering.
+pub const ERR_OVERLOADED: u8 = 2;
+
 /// [`ExperienceFrame::flags`] bit: the frame carries the reward/done of
 /// the previous action (absent only on the first frame of a stream).
 pub const EXP_HAS_REWARD: u8 = 1;
@@ -312,6 +318,20 @@ impl<'a> Reader<'a> {
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
+    /// Bytes left in the frame — the bound every wire-claimed element
+    /// count must clear *before* it buys an allocation (DESIGN.md §9).
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+    /// Validate a claimed element count against the bytes actually left,
+    /// overflow-safe, so `Vec::with_capacity(n)` can never allocate more
+    /// than the frame itself delivered.
+    fn claimed(&self, n: usize, elem_bytes: usize) -> Result<usize> {
+        match n.checked_mul(elem_bytes) {
+            Some(need) if need <= self.remaining() => Ok(n),
+            _ => bail!("claimed count {n} exceeds the {} bytes remaining", self.remaining()),
+        }
+    }
     fn done(&self) -> bool {
         self.pos == self.b.len()
     }
@@ -540,6 +560,7 @@ impl Msg {
                 let client = r.u32()?;
                 let id = r.u64()?;
                 let n = r.u16()? as usize;
+                let n = r.claimed(n, 4)?;
                 let mut action = Vec::with_capacity(n);
                 for _ in 0..n {
                     action.push(r.f32()?);
@@ -553,6 +574,7 @@ impl Msg {
                 let flags = r.take(1)?[0];
                 let queue_wait_us = r.u32()?;
                 let n = r.u16()? as usize;
+                let n = r.claimed(n, 4)?;
                 let mut action = Vec::with_capacity(n);
                 for _ in 0..n {
                     action.push(r.f32()?);
@@ -612,6 +634,7 @@ impl Msg {
                 let acting_version = r.u64()?;
                 let latest_version = r.u64()?;
                 let n = r.u16()? as usize;
+                let n = r.claimed(n, 4)?;
                 let mut action = Vec::with_capacity(n);
                 for _ in 0..n {
                     action.push(r.f32()?);
@@ -637,7 +660,12 @@ impl Msg {
             MSG_POLICY => {
                 let version = r.u64()?;
                 let n = r.u32()? as usize;
-                ensure!(n * 4 == r.b.len() - r.pos, "policy frame length mismatch");
+                // exact-length contract, overflow-safe: the claimed count
+                // is validated before it sizes the allocation
+                ensure!(
+                    n.checked_mul(4) == Some(r.remaining()),
+                    "policy frame length mismatch"
+                );
                 let mut params = Vec::with_capacity(n);
                 for _ in 0..n {
                     params.push(r.f32()?);
@@ -957,6 +985,32 @@ mod tests {
         let mut extended = enc[4..].to_vec();
         extended.push(0);
         assert!(Msg::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn responses_reject_forged_action_counts_before_allocating() {
+        // a response claiming 65535 actions but delivering none must be
+        // rejected by the remaining-bytes bound, not by running off the
+        // end after a 256 KiB allocation
+        for ty in [MSG_RESPONSE, MSG_RESPONSE_V2, MSG_RESPONSE_LEARN] {
+            let mut body = vec![ty];
+            body.extend_from_slice(&7u32.to_le_bytes()); // client
+            body.extend_from_slice(&9u64.to_le_bytes()); // id
+            if ty != MSG_RESPONSE {
+                body.extend_from_slice(&1u32.to_le_bytes()); // seq
+                body.push(0); // flags
+            }
+            match ty {
+                MSG_RESPONSE_V2 => body.extend_from_slice(&0u32.to_le_bytes()), // queue wait
+                MSG_RESPONSE_LEARN => {
+                    body.extend_from_slice(&1u64.to_le_bytes()); // acting
+                    body.extend_from_slice(&1u64.to_le_bytes()); // latest
+                }
+                _ => {}
+            }
+            body.extend_from_slice(&u16::MAX.to_le_bytes()); // forged count
+            assert!(Msg::decode(&body).is_err(), "type {ty} accepted a forged count");
+        }
     }
 
     #[test]

@@ -1,0 +1,561 @@
+//! Resource budgets for the hostile edge of the wire (DESIGN.md §9).
+//!
+//! `net::framing` parses bytes that arrive from the open internet, so
+//! every quantity a peer *claims* — frame lengths, element counts,
+//! capability bits, codec ids — must be bounded here before it buys an
+//! allocation or a state change. The module provides:
+//!
+//!   * [`LimitsConfig`] — the knobs: maximum observation/feature/action/
+//!     parameter dimensions, the pre-Hello frame ceiling, per-connection
+//!     malformed-frame and byte budgets, and the reader idle timeout;
+//!   * [`FrameLimits`] — per-message-type frame-size caps, derived from
+//!     the config. [`FrameLimits::pre_hello`] admits any legitimate
+//!     opening frame but stays far below the blanket [`MAX_FRAME`];
+//!     [`FrameLimits::negotiated`] tightens further once the Hello fixes
+//!     the session's route (a split session has no business shipping
+//!     4·X² raw observations, and vice versa);
+//!   * [`SessionGate`] — the per-connection admission state machine:
+//!     Hello negotiation (echo known codec ids, mask capability bits),
+//!     pre-Hello byte metering, a malformed-frame budget, and a sticky
+//!     `Quarantined` state. A quarantined session is disconnected
+//!     without touching shard state or any other session;
+//!   * [`RateCap`] — a time-agnostic token bucket (caller supplies the
+//!     clock as `f64` seconds) shared by the threaded gateway and the
+//!     deterministic simnet, unlike [`super::shaped::TokenBucket`] which
+//!     paces *bytes* against the wall clock;
+//!   * [`backoff_delay`] — the jittered exponential backoff clients use
+//!     after an [`ERR_OVERLOADED`](super::framing) rejection.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::framing::{
+    Hello, CAP_EXPERIENCE, MAX_FRAME, MSG_ERROR, MSG_EXPERIENCE, MSG_HELLO, MSG_POLICY,
+    MSG_REQUEST_FEAT, MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE, MSG_RESPONSE_LEARN,
+    MSG_RESPONSE_V2,
+};
+
+/// Resource-budget knobs for one listening endpoint. The defaults admit
+/// everything the experiments and benches legitimately send while staying
+/// an order of magnitude under the blanket 64 MiB [`MAX_FRAME`].
+#[derive(Debug, Clone)]
+pub struct LimitsConfig {
+    /// largest observation edge (pixels) a raw-route request may claim
+    /// (the frame body is 4·x² bytes)
+    pub max_obs_x: u16,
+    /// largest flattened feature map (c·h·w elements) a split-route
+    /// request may claim
+    pub max_feat_elems: usize,
+    /// largest action vector a response frame may carry
+    pub max_action_dim: usize,
+    /// largest parameter vector a policy fan-out frame may carry
+    pub max_policy_params: usize,
+    /// largest error-frame detail string
+    pub max_error_detail: usize,
+    /// hard byte ceiling for any single frame before the Hello fixes the
+    /// session's route (must still admit a legitimate opening request —
+    /// raw-route sessions may open with a request instead of a Hello)
+    pub pre_hello_frame: usize,
+    /// undecodable frames a connection may send over its lifetime before
+    /// it is quarantined (framing stays synchronized across a failed
+    /// `Msg::decode`, so counting is exact). Healthy clients produce
+    /// zero: TCP is checksummed, and codec chain breaks are handled one
+    /// level up as need-keyframe feedback, not decode errors.
+    pub max_decode_errors: u32,
+    /// bytes a connection may send before completing its Hello (bounds a
+    /// peer that streams request frames but never negotiates)
+    pub max_pre_hello_bytes: u64,
+    /// *consecutive* codec rejects (per client) before the session is
+    /// quarantined. Consecutive, not absolute: a legitimate delta client
+    /// takes one reject per chain break and recovers with the next
+    /// keyframe, which resets the counter.
+    pub max_codec_rejects: u32,
+    /// reader-side idle timeout: a half-open client is reaped (and its
+    /// session + codec state dropped) after this long without a frame
+    pub idle_timeout: Duration,
+}
+
+impl Default for LimitsConfig {
+    fn default() -> Self {
+        LimitsConfig {
+            max_obs_x: 1024,            // 4 MiB raw frame
+            max_feat_elems: 1 << 20,    // 1 MiB flat feature map
+            max_action_dim: 4096,
+            max_policy_params: 1 << 22, // 16 MiB of f32 parameters
+            max_error_detail: 4096,
+            pre_hello_frame: 8 << 20,
+            max_decode_errors: 8,
+            max_pre_hello_bytes: 16 << 20,
+            max_codec_rejects: 16,
+            idle_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl LimitsConfig {
+    // Frame-body sizes (type byte + payload — the `len` the transport
+    // checks) for each message type at this config's maxima. Layouts
+    // mirror `Msg::encode_into` exactly.
+    fn hello_cap(&self) -> usize {
+        1 + 4 + 1 + 1 + 1 + 1 + 2
+    }
+    fn raw_cap(&self) -> usize {
+        1 + 4 + 8 + 2 + 4 * self.max_obs_x as usize * self.max_obs_x as usize
+    }
+    fn feat_cap(&self) -> usize {
+        1 + 4 + 8 + 6 + 4 + self.max_feat_elems
+    }
+    fn feat_v2_cap(&self) -> usize {
+        1 + 4 + 8 + 6 + 3 + 4 + 4 + 4 + self.max_feat_elems
+    }
+    fn experience_cap(&self) -> usize {
+        self.feat_v2_cap() + 13
+    }
+    fn response_cap(&self) -> usize {
+        1 + 4 + 8 + 2 + 4 * self.max_action_dim
+    }
+    fn response_v2_cap(&self) -> usize {
+        1 + 4 + 8 + 4 + 1 + 4 + 2 + 4 * self.max_action_dim
+    }
+    fn response_learn_cap(&self) -> usize {
+        1 + 4 + 8 + 4 + 1 + 8 + 8 + 2 + 4 * self.max_action_dim
+    }
+    fn error_cap(&self) -> usize {
+        1 + 4 + 1 + 2 + self.max_error_detail
+    }
+    fn policy_cap(&self) -> usize {
+        1 + 8 + 4 + 4 * self.max_policy_params
+    }
+}
+
+/// Per-message-type frame-size caps: the transport reads the type byte
+/// first and checks the claimed length against `cap(ty)` *before*
+/// allocating the body (`super::tcp::read_raw_frame_limited`). A type
+/// with cap 0 (unknown ids, or a route the session did not negotiate) is
+/// rejected outright.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameLimits {
+    /// indexed by message type id (0 unused; ids are 1..=10)
+    caps: [usize; 11],
+    hard_max: usize,
+}
+
+impl FrameLimits {
+    /// Legacy behavior: every known type up to [`MAX_FRAME`]. Used where
+    /// the peer is trusted (client reading its own server, loopback
+    /// benches) and by the compatibility wrappers in `super::tcp`.
+    pub fn permissive() -> Self {
+        let mut caps = [MAX_FRAME; 11];
+        caps[0] = 0;
+        FrameLimits { caps, hard_max: MAX_FRAME }
+    }
+
+    /// Caps for a connection that has not completed its Hello: every
+    /// type at its config-derived maximum, clamped to
+    /// [`LimitsConfig::pre_hello_frame`].
+    pub fn pre_hello(cfg: &LimitsConfig) -> Self {
+        let mut l = Self::negotiated_union(cfg);
+        for c in l.caps.iter_mut() {
+            *c = (*c).min(cfg.pre_hello_frame);
+        }
+        l.hard_max = l.caps.iter().copied().max().unwrap_or(0);
+        l
+    }
+
+    /// Caps once the Hello has fixed the session's route: the other
+    /// route's request types collapse to 0 (a split session never ships
+    /// raw observations; a raw session never ships feature frames).
+    pub fn negotiated(split: bool, cfg: &LimitsConfig) -> Self {
+        let mut l = Self::negotiated_union(cfg);
+        if split {
+            l.caps[MSG_REQUEST_RAW as usize] = 0;
+        } else {
+            l.caps[MSG_REQUEST_FEAT as usize] = 0;
+            l.caps[MSG_REQUEST_FEAT_V2 as usize] = 0;
+            l.caps[MSG_EXPERIENCE as usize] = 0;
+        }
+        l.hard_max = l.caps.iter().copied().max().unwrap_or(0);
+        l
+    }
+
+    /// Both routes admitted at their config-derived maxima.
+    fn negotiated_union(cfg: &LimitsConfig) -> Self {
+        let mut caps = [0usize; 11];
+        caps[MSG_HELLO as usize] = cfg.hello_cap();
+        caps[MSG_REQUEST_RAW as usize] = cfg.raw_cap();
+        caps[MSG_REQUEST_FEAT as usize] = cfg.feat_cap();
+        caps[MSG_REQUEST_FEAT_V2 as usize] = cfg.feat_v2_cap();
+        caps[MSG_EXPERIENCE as usize] = cfg.experience_cap();
+        caps[MSG_RESPONSE as usize] = cfg.response_cap();
+        caps[MSG_RESPONSE_V2 as usize] = cfg.response_v2_cap();
+        caps[MSG_RESPONSE_LEARN as usize] = cfg.response_learn_cap();
+        caps[MSG_ERROR as usize] = cfg.error_cap();
+        caps[MSG_POLICY as usize] = cfg.policy_cap();
+        let hard_max = caps.iter().copied().max().unwrap_or(0);
+        FrameLimits { caps, hard_max }
+    }
+
+    /// Size cap for one message type (0 = not admitted at all).
+    pub fn cap(&self, ty: u8) -> usize {
+        self.caps.get(ty as usize).copied().unwrap_or(0)
+    }
+
+    /// Largest frame any admitted type may claim — checked before the
+    /// type byte is even read.
+    pub fn hard_max(&self) -> usize {
+        self.hard_max
+    }
+}
+
+/// Admission state of one connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GateState {
+    /// no Hello yet: tight caps, byte-metered
+    PreHello,
+    /// negotiated: the Hello fixed the route, codec, and capability set
+    Ready { split: bool, codec: u8, caps: u8 },
+    /// a budget was exhausted: nothing is admitted until disconnect
+    Quarantined,
+}
+
+/// Per-connection admission state machine: Hello negotiation plus the
+/// byte/decode-error budgets. Pure (no I/O, no clocks), so the fuzz
+/// harness drives it directly and the threaded server and simnet share
+/// the exact semantics.
+#[derive(Debug, Clone)]
+pub struct SessionGate {
+    cfg: LimitsConfig,
+    state: GateState,
+    limits: FrameLimits,
+    /// bytes admitted before the Hello completed
+    pub pre_hello_bytes: u64,
+    /// undecodable frames over the connection lifetime
+    pub decode_errors: u32,
+}
+
+impl SessionGate {
+    pub fn new(cfg: LimitsConfig) -> Self {
+        let limits = FrameLimits::pre_hello(&cfg);
+        SessionGate {
+            cfg,
+            state: GateState::PreHello,
+            limits,
+            pre_hello_bytes: 0,
+            decode_errors: 0,
+        }
+    }
+
+    pub fn state(&self) -> &GateState {
+        &self.state
+    }
+
+    /// The frame-size caps the transport must currently enforce.
+    pub fn limits(&self) -> &FrameLimits {
+        &self.limits
+    }
+
+    pub fn quarantined(&self) -> bool {
+        self.state == GateState::Quarantined
+    }
+
+    /// Negotiate (or re-negotiate — a repeated Hello resets the codec
+    /// chain, mirroring the executor's `Decoders::invalidate`) and return
+    /// the ack to send: the codec id is echoed only if the server knows
+    /// it (unknown ids decline to flat), and the capability bits are
+    /// masked down to `caps_mask`. A quarantined session gets no ack.
+    pub fn on_hello(&mut self, h: &Hello, caps_mask: u8, shard: Option<u16>) -> Option<Hello> {
+        if self.quarantined() {
+            return None;
+        }
+        let codec = if crate::codec::CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
+        let caps = h.caps & caps_mask;
+        self.state = GateState::Ready { split: h.split, codec, caps };
+        self.limits = FrameLimits::negotiated(h.split, &self.cfg);
+        Some(Hello { client: h.client, split: h.split, codec, caps, shard })
+    }
+
+    /// True if the negotiated capability set includes `cap` (always false
+    /// before the Hello and under quarantine).
+    pub fn grants(&self, cap: u8) -> bool {
+        matches!(self.state, GateState::Ready { caps, .. } if caps & cap != 0)
+    }
+
+    /// Gate one frame of `len` body bytes of type `ty` before it is
+    /// decoded. Checks quarantine, the per-type cap, the experience
+    /// capability, and (pre-Hello) the byte budget — a budget violation
+    /// quarantines the session.
+    pub fn admit(&mut self, ty: u8, len: usize) -> Result<()> {
+        ensure!(!self.quarantined(), "session is quarantined");
+        let cap = self.limits.cap(ty);
+        ensure!(cap > 0, "frame type {ty} not admitted on this session");
+        ensure!(len <= cap, "frame type {ty} length {len} exceeds cap {cap}");
+        if ty == MSG_EXPERIENCE && !self.grants(CAP_EXPERIENCE) {
+            // not a quarantine offense: the server answers with an
+            // explicit ErrorMsg and the client downgrades (DESIGN.md §8)
+            bail!("experience frame without the negotiated CAP_EXPERIENCE");
+        }
+        if self.state == GateState::PreHello {
+            self.pre_hello_bytes += len as u64;
+            if self.pre_hello_bytes > self.cfg.max_pre_hello_bytes {
+                self.state = GateState::Quarantined;
+                bail!("pre-hello byte budget exhausted");
+            }
+        }
+        Ok(())
+    }
+
+    /// Count one undecodable frame. Returns true when the budget is
+    /// exhausted — the session is now quarantined and must be
+    /// disconnected (without touching any other session's state).
+    pub fn on_decode_error(&mut self) -> bool {
+        self.decode_errors = self.decode_errors.saturating_add(1);
+        if self.decode_errors > self.cfg.max_decode_errors {
+            self.state = GateState::Quarantined;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-client request-rate cap: a token bucket over an externally
+/// supplied clock (`f64` seconds), so the threaded gateway feeds it wall
+/// time and the deterministic simnet feeds it virtual time.
+#[derive(Debug, Clone)]
+pub struct RateCap {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: f64,
+}
+
+impl RateCap {
+    /// `rate_hz` requests per second sustained, `burst` admitted at once.
+    pub fn new(rate_hz: f64, burst: f64) -> Self {
+        RateCap { rate: rate_hz.max(0.0), burst: burst.max(1.0), tokens: burst.max(1.0), last: 0.0 }
+    }
+
+    /// Admit one request at time `now` (seconds, monotone per caller).
+    pub fn allow(&mut self, now: f64) -> bool {
+        let dt = (now - self.last).max(0.0);
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Jittered exponential backoff (seconds) for the `attempt`-th retry
+/// after an overload rejection: `base·2^attempt` capped at `cap`, with
+/// full jitter in `[d/2, d)` so a shed flash crowd does not re-arrive in
+/// lockstep.
+pub fn backoff_delay(base: f64, attempt: u32, cap: f64, rng: &mut Rng) -> f64 {
+    let exp = base * (1u64 << attempt.min(16)) as f64;
+    let d = exp.min(cap);
+    d * (0.5 + 0.5 * rng.uniform())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::{
+        ErrorMsg, FeatureFrame, Msg, Payload, PolicySync, Request, Response,
+    };
+
+    #[test]
+    fn derived_caps_admit_maximal_legitimate_frames() {
+        let cfg = LimitsConfig { max_obs_x: 8, max_feat_elems: 12, max_action_dim: 3, ..LimitsConfig::default() };
+        let l = FrameLimits::pre_hello(&cfg);
+        let cases = [
+            Msg::Hello(Hello { client: 1, split: true, codec: 1, caps: 1, shard: Some(3) }),
+            Msg::Request(Request {
+                client: 1,
+                id: 1,
+                payload: Payload::RawRgba { x: 8, data: vec![0; 4 * 64] },
+            }),
+            Msg::Request(Request {
+                client: 1,
+                id: 2,
+                payload: Payload::Features { c: 3, h: 2, w: 2, scale: 1.0, data: vec![0; 12] },
+            }),
+            Msg::Request(Request {
+                client: 1,
+                id: 3,
+                payload: Payload::FeaturesV2(FeatureFrame {
+                    c: 3,
+                    h: 2,
+                    w: 2,
+                    codec: 1,
+                    flags: 2,
+                    qmax: 255,
+                    seq: 0,
+                    scale: 1.0,
+                    data: vec![0; 12],
+                }),
+            }),
+            Msg::Response(Response { client: 1, id: 1, action: vec![0.0; 3] }),
+            Msg::Error(ErrorMsg { client: 1, code: 1, detail: "x".into() }),
+        ];
+        for m in cases {
+            let enc = m.encode();
+            let body = &enc[4..];
+            assert!(
+                body.len() <= l.cap(body[0]),
+                "cap {} too small for {} bytes of type {}",
+                l.cap(body[0]),
+                body.len(),
+                body[0]
+            );
+        }
+    }
+
+    #[test]
+    fn pre_hello_caps_stay_far_below_max_frame_and_unknown_types_get_zero() {
+        let l = FrameLimits::pre_hello(&LimitsConfig::default());
+        for ty in 1..=10u8 {
+            assert!(l.cap(ty) > 0, "type {ty} must stay admitted pre-hello");
+            assert!(l.cap(ty) <= 8 << 20, "type {ty} cap escapes the pre-hello ceiling");
+        }
+        assert_eq!(l.cap(0), 0);
+        assert_eq!(l.cap(11), 0);
+        assert_eq!(l.cap(255), 0);
+        assert!(l.hard_max() <= 8 << 20);
+        assert!(l.hard_max() < MAX_FRAME);
+    }
+
+    #[test]
+    fn negotiation_collapses_the_other_route() {
+        let cfg = LimitsConfig::default();
+        let split = FrameLimits::negotiated(true, &cfg);
+        assert_eq!(split.cap(MSG_REQUEST_RAW), 0);
+        assert!(split.cap(MSG_REQUEST_FEAT_V2) > 0);
+        assert!(split.cap(MSG_EXPERIENCE) > 0);
+        let raw = FrameLimits::negotiated(false, &cfg);
+        assert!(raw.cap(MSG_REQUEST_RAW) > 0);
+        assert_eq!(raw.cap(MSG_REQUEST_FEAT), 0);
+        assert_eq!(raw.cap(MSG_REQUEST_FEAT_V2), 0);
+        assert_eq!(raw.cap(MSG_EXPERIENCE), 0);
+    }
+
+    #[test]
+    fn policy_cap_bounds_the_biggest_admitted_frame() {
+        let cfg = LimitsConfig::default();
+        let l = FrameLimits::negotiated(true, &cfg);
+        let pol = Msg::Policy(PolicySync { version: 1, params: vec![0.0; 16] }).encode();
+        assert!(pol.len() - 4 <= l.cap(MSG_POLICY));
+        assert_eq!(l.hard_max(), l.cap(MSG_POLICY).max(l.cap(MSG_EXPERIENCE)));
+    }
+
+    #[test]
+    fn gate_negotiation_echoes_known_codecs_and_masks_caps() {
+        let mut g = SessionGate::new(LimitsConfig::default());
+        assert_eq!(*g.state(), GateState::PreHello);
+        let h = Hello { client: 9, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None };
+        let ack = g.on_hello(&h, CAP_EXPERIENCE, Some(2)).unwrap();
+        assert_eq!(ack.codec, 1);
+        assert_eq!(ack.caps, CAP_EXPERIENCE);
+        assert_eq!(ack.shard, Some(2));
+        assert!(g.grants(CAP_EXPERIENCE));
+
+        // unknown codec id declines to flat; a zero mask clears the caps
+        let mut g = SessionGate::new(LimitsConfig::default());
+        let h = Hello { client: 9, split: true, codec: 77, caps: CAP_EXPERIENCE, shard: None };
+        let ack = g.on_hello(&h, 0, None).unwrap();
+        assert_eq!(ack.codec, 0);
+        assert_eq!(ack.caps, 0);
+        assert!(!g.grants(CAP_EXPERIENCE));
+    }
+
+    #[test]
+    fn gate_renegotiation_flips_routes_and_capability_bits() {
+        let cfg = LimitsConfig::default();
+        let mut g = SessionGate::new(cfg.clone());
+        g.on_hello(
+            &Hello { client: 1, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None },
+            CAP_EXPERIENCE,
+            None,
+        )
+        .unwrap();
+        assert!(g.admit(MSG_EXPERIENCE, 64).is_ok());
+        assert!(g.admit(MSG_REQUEST_RAW, 64).is_err(), "split session must not ship raw frames");
+        // a mid-session capability flip takes effect immediately
+        g.on_hello(
+            &Hello { client: 1, split: true, codec: 1, caps: 0, shard: None },
+            CAP_EXPERIENCE,
+            None,
+        )
+        .unwrap();
+        assert!(g.admit(MSG_EXPERIENCE, 64).is_err(), "flipped-off capability must not admit");
+        assert!(g.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
+    }
+
+    #[test]
+    fn gate_admits_within_caps_and_rejects_oversize_without_quarantining() {
+        let mut g = SessionGate::new(LimitsConfig::default());
+        assert!(g.admit(MSG_HELLO, 11).is_ok());
+        assert!(g.admit(MSG_HELLO, 4096).is_err());
+        assert!(!g.quarantined(), "an oversize claim alone is rejected, not quarantined");
+        assert!(g.admit(99, 1).is_err(), "unknown type");
+    }
+
+    #[test]
+    fn pre_hello_byte_budget_quarantines() {
+        let cfg = LimitsConfig { max_pre_hello_bytes: 100, ..LimitsConfig::default() };
+        let mut g = SessionGate::new(cfg);
+        assert!(g.admit(MSG_REQUEST_RAW, 60).is_ok());
+        assert!(g.admit(MSG_REQUEST_RAW, 60).is_err(), "budget exhausted");
+        assert!(g.quarantined());
+        // quarantine is sticky: no frames, no hello, no ack
+        assert!(g.admit(MSG_HELLO, 11).is_err());
+        assert!(g
+            .on_hello(&Hello { client: 1, split: false, codec: 0, caps: 0, shard: None }, 0, None)
+            .is_none());
+    }
+
+    #[test]
+    fn decode_error_budget_quarantines_at_threshold() {
+        let cfg = LimitsConfig { max_decode_errors: 3, ..LimitsConfig::default() };
+        let mut g = SessionGate::new(cfg);
+        assert!(!g.on_decode_error());
+        assert!(!g.on_decode_error());
+        assert!(!g.on_decode_error());
+        assert!(g.on_decode_error(), "fourth malformed frame exceeds a budget of 3");
+        assert!(g.quarantined());
+        assert!(g.admit(MSG_HELLO, 11).is_err());
+    }
+
+    #[test]
+    fn rate_cap_denies_past_burst_and_refills_with_time() {
+        let mut r = RateCap::new(10.0, 2.0);
+        assert!(r.allow(0.0));
+        assert!(r.allow(0.0));
+        assert!(!r.allow(0.0), "burst of 2 exhausted");
+        assert!(r.allow(0.1), "0.1 s at 10 Hz refills one token");
+        assert!(!r.allow(0.1));
+        // time never flows backwards into extra tokens
+        assert!(!r.allow(0.05));
+    }
+
+    #[test]
+    fn backoff_is_jittered_bounded_and_grows() {
+        let mut rng = Rng::new(7);
+        let mut prev_cap = 0.0f64;
+        for attempt in 0..10 {
+            let d = backoff_delay(0.01, attempt, 1.0, &mut rng);
+            let full = (0.01 * (1u64 << attempt.min(16)) as f64).min(1.0);
+            assert!(d >= full * 0.5 && d < full, "attempt {attempt}: {d} outside [{}, {full})", full * 0.5);
+            assert!(full >= prev_cap, "envelope must be monotone");
+            prev_cap = full;
+        }
+        // huge attempt counts must not overflow the shift
+        let d = backoff_delay(0.01, u32::MAX, 1.0, &mut rng);
+        assert!(d <= 1.0);
+    }
+}

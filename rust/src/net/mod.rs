@@ -1,16 +1,22 @@
 //! Network stack: wire [`framing`] for the split-policy protocol (uint8
 //! observation/feature buffers, per the paper §4.2), bandwidth [`shaped`]
-//! links (token-bucket pacing over real sockets + analytic model), and the
-//! length-prefixed [`tcp`] transport.
+//! links (token-bucket pacing over real sockets + analytic model), the
+//! length-prefixed [`tcp`] transport, and the hostile-input resource
+//! budgets in [`limits`] (DESIGN.md §9).
 
 pub mod framing;
+pub mod limits;
 pub mod shaped;
 pub mod tcp;
 
 pub use framing::{
     dequantize_features, dequantize_features_into, encode_response_into,
     encode_response_v2_into, quantize_features, quantize_features_into, FeatureFrame, Hello, Msg,
-    Payload, Request, Response, ResponseV2, RESP_FLAG_NEED_KEYFRAME,
+    Payload, Request, Response, ResponseV2, ERR_OVERLOADED, RESP_FLAG_NEED_KEYFRAME,
 };
+pub use limits::{backoff_delay, FrameLimits, GateState, LimitsConfig, RateCap, SessionGate};
 pub use shaped::{LinkModel, ShapedWriter, TokenBucket};
-pub use tcp::{read_msg, read_raw_frame, write_frame, write_msg, write_raw_frame};
+pub use tcp::{
+    read_msg, read_msg_limited, read_raw_frame, read_raw_frame_limited, write_frame, write_msg,
+    write_raw_frame,
+};

@@ -7,6 +7,7 @@ use std::io::{Read, Write};
 use anyhow::{ensure, Context, Result};
 
 use super::framing::{Msg, MAX_FRAME};
+use super::limits::FrameLimits;
 
 /// Write one message (blocking).
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
@@ -42,6 +43,41 @@ pub fn read_raw_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
     Ok(true)
 }
 
+/// [`read_raw_frame`] with per-message-type size caps (`net::limits`,
+/// DESIGN.md §9): the claimed length is checked against the hard ceiling,
+/// then the one type byte is read and the length re-checked against that
+/// type's cap — all *before* the body buys an allocation. A violation is
+/// an error, and the caller must treat it as fatal for the connection
+/// (the body bytes are unread, so framing is out of sync); untrusted
+/// readers (server, gateway) disconnect, which is the point.
+pub fn read_raw_frame_limited<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    limits: &FrameLimits,
+) -> Result<bool> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(false),
+        Err(e) => return Err(e).context("reading frame length"),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(len > 0 && len <= limits.hard_max(), "bad frame length {len}");
+    let mut ty = [0u8; 1];
+    r.read_exact(&mut ty).context("reading frame type")?;
+    let cap = limits.cap(ty[0]);
+    ensure!(
+        len <= cap,
+        "frame type {} claims {len} bytes (cap {cap})",
+        ty[0]
+    );
+    buf.clear();
+    buf.resize(len, 0);
+    buf[0] = ty[0];
+    r.read_exact(&mut buf[1..]).context("reading frame body")?;
+    Ok(true)
+}
+
 /// Write a frame body previously read by [`read_raw_frame`] (re-adds the
 /// length prefix; the body bytes are never re-encoded).
 pub fn write_raw_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
@@ -60,6 +96,27 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
         return Ok(None);
     }
     Ok(Some(Msg::decode(&body)?))
+}
+
+/// [`read_msg`] under per-type frame caps, split into transport and
+/// decode outcomes so callers can budget malformed frames separately
+/// from framing violations:
+///
+///   * `Ok(None)` — clean EOF;
+///   * `Ok(Some(Err(_)))` — the frame was admitted and fully read but
+///     does not decode. Framing is still synchronized: the caller may
+///     count it against the session's decode-error budget and continue;
+///   * `Err(_)` — a transport-level violation (oversize claim, unknown
+///     type, torn read): the connection must be dropped.
+pub fn read_msg_limited<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    limits: &FrameLimits,
+) -> Result<Option<Result<Msg>>> {
+    if !read_raw_frame_limited(r, buf, limits)? {
+        return Ok(None);
+    }
+    Ok(Some(Msg::decode(buf)))
 }
 
 #[cfg(test)]
@@ -140,6 +197,65 @@ mod tests {
         wire.push(1);
         let mut cursor = std::io::Cursor::new(wire);
         assert!(read_msg(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn limited_reader_enforces_per_type_caps_before_allocating() {
+        use crate::net::limits::{FrameLimits, LimitsConfig};
+        let cfg = LimitsConfig { max_obs_x: 4, ..LimitsConfig::default() };
+        let limits = FrameLimits::pre_hello(&cfg);
+        // a 6×6 raw request exceeds the 4-pixel cap…
+        let over = Msg::Request(Request {
+            client: 1,
+            id: 1,
+            payload: Payload::RawRgba { x: 6, data: vec![0; 4 * 36] },
+        })
+        .encode();
+        let mut buf = Vec::new();
+        assert!(read_raw_frame_limited(&mut std::io::Cursor::new(&over), &mut buf, &limits)
+            .is_err());
+        // …while a 4×4 one passes and round-trips byte-identically
+        let ok = Msg::Request(Request {
+            client: 1,
+            id: 2,
+            payload: Payload::RawRgba { x: 4, data: vec![7; 4 * 16] },
+        })
+        .encode();
+        assert!(read_raw_frame_limited(&mut std::io::Cursor::new(&ok), &mut buf, &limits)
+            .unwrap());
+        assert_eq!(buf, ok[4..]);
+        // unknown type ids are rejected before any body read
+        let mut junk = Vec::new();
+        junk.extend_from_slice(&2u32.to_le_bytes());
+        junk.extend_from_slice(&[200, 0]);
+        assert!(read_raw_frame_limited(&mut std::io::Cursor::new(&junk), &mut buf, &limits)
+            .is_err());
+    }
+
+    #[test]
+    fn limited_read_msg_separates_framing_violations_from_decode_errors() {
+        use crate::net::limits::{FrameLimits, LimitsConfig};
+        let limits = FrameLimits::pre_hello(&LimitsConfig::default());
+        let mut buf = Vec::new();
+        // well-framed hello with a torn payload: admitted, fails decode,
+        // and the stream stays synchronized for the next frame
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&3u32.to_le_bytes());
+        wire.extend_from_slice(&[crate::net::framing::MSG_HELLO, 1, 2]);
+        write_msg(&mut wire, &Msg::Response(Response { client: 1, id: 7, action: vec![] }))
+            .unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let first = read_msg_limited(&mut cursor, &mut buf, &limits).unwrap().unwrap();
+        assert!(first.is_err(), "torn hello must fail decode, not framing");
+        let second = read_msg_limited(&mut cursor, &mut buf, &limits).unwrap().unwrap();
+        assert!(matches!(second.unwrap(), Msg::Response(r) if r.id == 7));
+        assert!(read_msg_limited(&mut cursor, &mut buf, &limits).unwrap().is_none());
+        // a 64 MiB claim the permissive reader tolerates is a transport
+        // error here
+        let mut big = Vec::new();
+        big.extend_from_slice(&(crate::net::framing::MAX_FRAME as u32).to_le_bytes());
+        big.push(crate::net::framing::MSG_REQUEST_RAW);
+        assert!(read_msg_limited(&mut std::io::Cursor::new(big), &mut buf, &limits).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! and no wall-clock read exists on this path — two runs with the same
 //! [`ScenarioConfig`] render byte-identical logs. See DESIGN.md §6.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -32,10 +32,13 @@ use crate::fleet::topology::{ShardId, ShardState, Topology};
 use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
     ErrorMsg, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, PolicySync, Request, Response,
-    ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_EXPERIENCE_UNSUPPORTED, EXP_DONE, EXP_EP_START,
-    EXP_HAS_REWARD, EXP_TERMINATED, RESP_FLAG_NEED_KEYFRAME, RESP_FLAG_STALE,
+    ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_EXPERIENCE_UNSUPPORTED, ERR_OVERLOADED,
+    EXP_DONE, EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED, RESP_FLAG_NEED_KEYFRAME,
+    RESP_FLAG_STALE,
 };
+use crate::net::limits::backoff_delay;
 use crate::rl::native::{episode_rng, normalize_pendulum_obs};
+use crate::util::rng::Rng;
 use crate::util::simclock::EventQueue;
 use crate::util::stats::Samples;
 
@@ -162,6 +165,25 @@ pub struct ScenarioConfig {
     pub thermal: Option<ThermalSpec>,
     /// online-learning mode (None = pure inference fleet)
     pub learning: Option<LearnSpec>,
+    /// hostile clients, appended after every healthy cohort. Even relative
+    /// indices spray undecodable junk at the gateway's frame parser; odd
+    /// ones stream well-formed codec frames with corrupt payloads so the
+    /// shard's decoder (not the framing layer) has to refuse them.
+    pub malicious_clients: usize,
+    /// attack frames each malicious client sends before retiring
+    pub attack_frames: u64,
+    /// gap between attack frames, seconds
+    pub attack_interval: f64,
+    /// gateway per-connection undecodable-frame budget before quarantine
+    /// (mirrors `LimitsConfig::max_decode_errors` on the threaded path)
+    pub gw_error_budget: u32,
+    /// per-session consecutive codec-reject budget before a shard cuts the
+    /// session off (mirrors `LimitsConfig::max_codec_rejects`)
+    pub codec_reject_budget: u32,
+    /// admission bound on concurrently pinned gateway sessions (0 = off);
+    /// hellos beyond it are shed with an explicit `ERR_OVERLOADED` frame
+    /// and the client retries with jittered exponential backoff
+    pub gw_max_sessions: usize,
     pub faults: Vec<(f64, FaultCmd)>,
     /// livelock safety valve
     pub max_events: usize,
@@ -196,6 +218,12 @@ impl Default for ScenarioConfig {
             health: HealthConfig::default(),
             thermal: None,
             learning: None,
+            malicious_clients: 0,
+            attack_frames: 64,
+            attack_interval: 0.002,
+            gw_error_budget: 8,
+            codec_reject_budget: 16,
+            gw_max_sessions: 0,
             faults: Vec::new(),
             max_events: 2_000_000,
         }
@@ -251,6 +279,8 @@ pub struct ClientOutcome {
     pub applied_stale: u64,
     /// highest `latest_version` stamp observed in acks
     pub latest_version_seen: u64,
+    /// explicit `ERR_OVERLOADED` sheds observed (admission or rate caps)
+    pub overload_rejections: u64,
 }
 
 #[derive(Debug, Default)]
@@ -287,6 +317,10 @@ pub struct ShardOutcome {
     pub dropped_incomplete: u64,
     /// the live learner's final acting policy version
     pub final_version: u64,
+    /// sessions cut off after exhausting the consecutive-reject budget
+    pub quarantined_sessions: u64,
+    /// frames from quarantined sessions dropped without processing
+    pub quarantine_drops: u64,
 }
 
 #[derive(Debug, Default)]
@@ -309,6 +343,12 @@ pub struct GatewayOutcome {
     pub policy_stale_rejects: u64,
     /// on-demand policy resyncs pushed to lagging shards
     pub policy_resyncs: u64,
+    /// hellos shed at the admission bound with `ERR_OVERLOADED`
+    pub shed_hellos: u64,
+    /// connections cut off after exhausting the frame-error budget
+    pub quarantined_sessions: u64,
+    /// frames from quarantined connections dropped unread
+    pub quarantine_drops: u64,
 }
 
 #[derive(Debug)]
@@ -358,6 +398,18 @@ impl ScenarioReport {
     pub fn total_episodes(&self) -> usize {
         self.clients.iter().map(|c| c.episodes).sum()
     }
+
+    /// `ERR_OVERLOADED` sheds observed across every client.
+    pub fn total_overload_rejections(&self) -> u64 {
+        self.clients.iter().map(|c| c.overload_rejections).sum()
+    }
+
+    /// Sessions quarantined anywhere: gateway frame-error budgets plus
+    /// shard codec-reject budgets.
+    pub fn total_quarantined(&self) -> u64 {
+        self.gateway.quarantined_sessions
+            + self.shards.iter().map(|s| s.quarantined_sessions).sum::<u64>()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -393,6 +445,8 @@ enum Ev {
     Probe,
     /// index into cfg.faults
     Fault(usize),
+    /// a malicious client's next hostile frame goes on the wire
+    Attack(usize),
 }
 
 struct Pending {
@@ -424,6 +478,18 @@ struct LearnClientSim {
     reward: f32,
 }
 
+/// What a malicious client puts on the wire each attack tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum AttackKind {
+    /// bytes that fail `Msg::decode` — burned against the gateway's
+    /// per-connection frame-error budget
+    JunkFrames,
+    /// structurally valid `FeaturesV2` frames whose payload the shard's
+    /// delta decoder must refuse — burned against its consecutive-reject
+    /// budget without touching the framing layer
+    CorruptCodec,
+}
+
 struct ClientSim {
     mode: Route,
     up: LaneId,
@@ -433,6 +499,12 @@ struct ClientSim {
     pending: Option<Pending>,
     done: usize,
     finished: bool,
+    /// hostile behaviour; None = honest client
+    attack: Option<AttackKind>,
+    attacks_sent: u64,
+    /// consecutive `ERR_OVERLOADED` sheds since the last accepted hello,
+    /// driving the exponential backoff ladder
+    overload_attempts: u32,
     /// per-decision pendulum feature frames (empty = synthetic fill)
     stream: Vec<Vec<f32>>,
     /// delta-codec state (encoder + rate controller); None = flat v1
@@ -494,6 +566,10 @@ struct ShardSim {
     /// restart — a fresh incarnation starts from policy version 0 and is
     /// re-synced by the gateway
     learn: Option<Learner>,
+    /// sessions cut off for exhausting the codec-reject budget; their
+    /// frames drop unprocessed, exactly like the executor's socket
+    /// shutdown, and a restart forgets them with the rest of the state
+    quarantined: BTreeSet<u32>,
     out: ShardOutcome,
 }
 
@@ -509,6 +585,11 @@ struct GatewaySim {
     /// exactly-once re-sync guard: the latest store version each lagging
     /// shard has already been sent a snapshot for
     resynced: BTreeMap<usize, u64>,
+    /// undecodable frames per client connection (`net::limits` analogue:
+    /// an absolute budget — honest clients never produce any)
+    errors: BTreeMap<usize, u32>,
+    /// connections cut off for exhausting the frame-error budget
+    quarantined: BTreeSet<usize>,
     out: GatewayOutcome,
 }
 
@@ -525,6 +606,9 @@ struct World {
     probe_stats: Vec<ProbeStats>,
     partitioned: Vec<bool>,
     n_events: usize,
+    /// seeded jitter source for overload backoff — the only random draw
+    /// outside the transport, consumed in deterministic delivery order
+    rng: Rng,
 }
 
 /// Encode a message to its frame body (length prefix stripped): the byte
@@ -619,11 +703,13 @@ impl World {
                 busy_until: 0.0,
                 thermal: None,
                 learn: cfg.learning.as_ref().map(|sp| Learner::new(sp.learner.clone())),
+                quarantined: BTreeSet::new(),
                 out: ShardOutcome::default(),
             });
         }
         let peer = if cfg.gateway { "gw".to_string() } else { "shard-0".to_string() };
-        let n_clients = cfg.raw_clients + cfg.split_clients + n_learn;
+        let n_honest = cfg.raw_clients + cfg.split_clients + n_learn;
+        let n_clients = n_honest + cfg.malicious_clients;
         let mut clients = Vec::with_capacity(n_clients);
         for c in 0..n_clients {
             let name = format!("client-{c}");
@@ -635,10 +721,19 @@ impl World {
             });
             let down = net.lane(&peer, &name, cfg.reply_link);
             owners.push(Owner::Client(c));
-            // client ordering: raw, then split, then learning
-            let learning = c >= cfg.raw_clients + cfg.split_clients;
-            let split = c >= cfg.raw_clients;
-            let stream = if cfg.pendulum_stream && split && !learning {
+            // client ordering: raw, then split, then learning, then
+            // malicious (alternating junk-byte and corrupt-codec attackers)
+            let attack = (c >= n_honest).then(|| {
+                if (c - n_honest) % 2 == 0 {
+                    AttackKind::JunkFrames
+                } else {
+                    AttackKind::CorruptCodec
+                }
+            });
+            let learning = attack.is_none() && c >= cfg.raw_clients + cfg.split_clients;
+            let split = attack.is_none() && c >= cfg.raw_clients
+                || attack == Some(AttackKind::CorruptCodec);
+            let stream = if cfg.pendulum_stream && split && !learning && attack.is_none() {
                 pendulum_feature_stream(cfg.seed, c as u64, cfg.feat.1, cfg.decisions)
             } else {
                 Vec::new()
@@ -649,7 +744,8 @@ impl World {
             let delta = if learning {
                 Some((Encoder::new(), RateController::new(RateConfig::default())))
             } else {
-                (split && cfg.codec == CodecId::Delta)
+                // attackers carry no real encoder: their frames are forged
+                (attack.is_none() && split && cfg.codec == CodecId::Delta)
                     .then(|| (Encoder::new(), RateController::new(cfg.rate.clone())))
             };
             let learn = learning.then(|| {
@@ -684,6 +780,9 @@ impl World {
                 pending: None,
                 done: 0,
                 finished: false,
+                attack,
+                attacks_sent: 0,
+                overload_attempts: 0,
                 stream,
                 delta,
                 qbuf: Vec::new(),
@@ -692,6 +791,10 @@ impl World {
             });
         }
         let n_shards = cfg.shards;
+        // a constant-mixed fork of the scenario seed: the backoff jitter
+        // stream is independent of the transport's, so enabling admission
+        // control never perturbs link-level draws
+        let rng = Rng::new(cfg.seed ^ 0xB0FF_5E77_ED0C_4A11);
         Ok(World {
             cfg,
             clock: SimClock::new(),
@@ -707,11 +810,14 @@ impl World {
                 last_assign: BTreeMap::new(),
                 store: PolicyStore::new(),
                 resynced: BTreeMap::new(),
+                errors: BTreeMap::new(),
+                quarantined: BTreeSet::new(),
                 out: GatewayOutcome::default(),
             },
             probe_stats: vec![ProbeStats::default(); n_shards],
             partitioned: vec![false; n_shards],
             n_events: 0,
+            rng,
         })
     }
 
@@ -830,6 +936,7 @@ impl World {
             }
             Ev::Probe => self.probe_round(t),
             Ev::Fault(k) => self.apply_fault(t, k),
+            Ev::Attack(c) => self.client_attack(t, c),
         }
     }
 
@@ -839,7 +946,13 @@ impl World {
             return;
         }
         let (epoch, up, split) = (cl.epoch, cl.up, cl.mode == Route::Split);
-        let codec = if cl.delta.is_some() { CODEC_DELTA } else { 0 };
+        // a corrupt-codec attacker negotiates delta like an honest split
+        // client — its abuse must reach the decoder, not die at the hello
+        let codec = if cl.delta.is_some() || cl.attack == Some(AttackKind::CorruptCodec) {
+            CODEC_DELTA
+        } else {
+            0
+        };
         let caps = if cl.learn.is_some() { CAP_EXPERIENCE } else { 0 };
         let body = msg_body(&Msg::Hello(Hello {
             client: c as u32,
@@ -1122,6 +1235,97 @@ impl World {
         }
     }
 
+    /// An explicit `ERR_OVERLOADED` shed: bump the epoch (the old hello
+    /// will never be acked), walk the jittered exponential backoff ladder,
+    /// and re-hello after the delay. A pending request survives — the next
+    /// accepted hello retransmits it.
+    fn client_overloaded(&mut self, t: f64, c: usize) {
+        {
+            let cl = &mut self.clients[c];
+            if cl.finished {
+                return;
+            }
+            cl.out.overload_rejections += 1;
+            cl.overload_attempts += 1;
+        }
+        self.log.record(t, "overloaded", &format!("client={c}"));
+        if !self.client_spend_retry(t, c) {
+            return;
+        }
+        let cl = &mut self.clients[c];
+        cl.epoch += 1;
+        cl.out.hello_acks.push(0);
+        cl.out.reconnects += 1;
+        if let Some((encoder, rate)) = &mut cl.delta {
+            encoder.force_keyframe();
+            rate.on_loss();
+        }
+        let (epoch, up, down, attempt) = (cl.epoch, cl.up, cl.down, cl.overload_attempts);
+        self.net.flush(up);
+        self.net.flush(down);
+        // base well under req_timeout, capped at half of it: the retry
+        // always lands before the hello-timeout machinery would fire
+        let d = backoff_delay(0.005, attempt, 0.5 * self.cfg.req_timeout, &mut self.rng);
+        self.log.record(
+            t,
+            "backoff",
+            &format!("client={c} epoch={epoch} attempt={attempt} delay={d:.6}"),
+        );
+        self.events.push(t + d, Ev::Connect(c));
+    }
+
+    /// One hostile frame goes on the wire. Junk attackers ship bytes that
+    /// fail `Msg::decode` at the gateway; corrupt-codec attackers ship
+    /// structurally valid delta frames whose payload the shard's decoder
+    /// must refuse (baseless deltas — they pass every framing and
+    /// geometry check and die inside the codec, where the consecutive-
+    /// reject budget counts them).
+    fn client_attack(&mut self, t: f64, c: usize) {
+        let interval = self.cfg.attack_interval;
+        let cl = &mut self.clients[c];
+        if cl.finished {
+            return;
+        }
+        if cl.attacks_sent >= self.cfg.attack_frames {
+            cl.finished = true;
+            self.log.record(t, "attacker_done", &format!("client={c}"));
+            self.gateway_unpin(t, c as u32);
+            return;
+        }
+        cl.attacks_sent += 1;
+        let seq = cl.attacks_sent as u32;
+        let id = cl.next_id;
+        cl.next_id += 1;
+        let up = cl.up;
+        let body = match cl.attack {
+            Some(AttackKind::JunkFrames) => vec![0xEE; 48],
+            Some(AttackKind::CorruptCodec) => {
+                let (fc, fh, fw) = self.cfg.feat;
+                let n = fc * fh * fw;
+                msg_body(&Msg::Request(Request {
+                    client: c as u32,
+                    id,
+                    payload: Payload::FeaturesV2(FeatureFrame {
+                        c: fc as u16,
+                        h: fh as u16,
+                        w: fw as u16,
+                        codec: CODEC_DELTA,
+                        flags: 0, // delta, but no base was ever established
+                        qmax: 255,
+                        seq,
+                        scale: 1.0,
+                        data: vec![0xFF; n],
+                    }),
+                }))
+            }
+            None => return,
+        };
+        self.log
+            .record(t, "attack", &format!("client={c} n={seq} bytes={}", body.len()));
+        self.net.send(up, t, &body, &mut self.log);
+        self.events.push(t + interval, Ev::Attack(c));
+    }
+
     fn client_on_frame(&mut self, t: f64, c: usize, body: &[u8]) {
         let msg = match Msg::decode(body) {
             Ok(m) => m,
@@ -1130,6 +1334,11 @@ impl World {
                 return;
             }
         };
+        // attackers never parse the return path; only the hello ack
+        // matters to them (it starts the attack)
+        if self.clients[c].attack.is_some() && !matches!(msg, Msg::Hello(_)) {
+            return;
+        }
         match msg {
             Msg::Hello(h) => {
                 let cl = &mut self.clients[c];
@@ -1139,11 +1348,16 @@ impl World {
                 let e = cl.epoch as usize;
                 cl.out.hello_acks[e] += 1;
                 if cl.out.hello_acks[e] == 1 {
+                    // an accepted hello resets the overload backoff ladder
+                    cl.overload_attempts = 0;
+                    let malicious = cl.attack.is_some();
                     let shard = h.shard.map(|s| s as i32).unwrap_or(-1);
                     let resend = cl.pending.is_some();
                     self.log
                         .record(t, "ack", &format!("client={c} epoch={e} shard={shard}"));
-                    if resend {
+                    if malicious {
+                        self.events.push(t, Ev::Attack(c));
+                    } else if resend {
                         self.events.push(t, Ev::Send(c));
                     } else {
                         self.events.push(t, Ev::Kick(c));
@@ -1160,6 +1374,12 @@ impl World {
                 self.client_on_response(t, c, r.id, &r.action, Some(feedback));
             }
             Msg::ResponseLearn(r) => self.learn_on_response(t, c, r),
+            Msg::Error(e) if e.code == ERR_OVERLOADED => {
+                // the fleet shed this session at the admission bound:
+                // back off with jitter and re-hello, exactly like the
+                // threaded client's retry loop
+                self.client_overloaded(t, c);
+            }
             Msg::Error(e) => {
                 // the server refused the experience capability: a real
                 // client would fall back to inference-only; the sim client
@@ -1346,6 +1566,20 @@ impl World {
 
     // -- gateway ------------------------------------------------------------
 
+    /// One undecodable frame on a client connection: burn the absolute
+    /// per-connection budget (`net::limits` analogue — honest clients
+    /// produce zero of these) and quarantine past it: unpin the session
+    /// and drop everything it sends from here on.
+    fn gateway_frame_error(&mut self, t: f64, c: usize) {
+        let n = self.gw.errors.entry(c).or_insert(0);
+        *n += 1;
+        if *n > self.cfg.gw_error_budget && self.gw.quarantined.insert(c) {
+            self.gw.out.quarantined_sessions += 1;
+            self.log.record(t, "quarantine", &format!("gw client={c}"));
+            self.gateway_unpin(t, c as u32);
+        }
+    }
+
     /// Close a session's live pin (client finished or gave up).
     fn gateway_unpin(&mut self, t: f64, session: u32) {
         if let Some(s) = self.gw.pins.remove(&session) {
@@ -1359,6 +1593,22 @@ impl World {
         let session = h.client;
         if let Some(prev) = self.gw.pins.remove(&session) {
             self.gw.topology.conn_closed(ShardId(prev as u16));
+        }
+        // admission control: past the session bound the hello is shed with
+        // an explicit ERR_OVERLOADED frame instead of stalling the fleet —
+        // the client backs off and retries (a re-hello from a pinned
+        // session re-admits itself: its old pin was just released above)
+        if self.cfg.gw_max_sessions > 0 && self.gw.pins.len() >= self.cfg.gw_max_sessions {
+            self.gw.out.shed_hellos += 1;
+            self.log.record(t, "shed", &format!("session={session}"));
+            let body = msg_body(&Msg::Error(ErrorMsg {
+                client: session,
+                code: ERR_OVERLOADED,
+                detail: "gateway at session capacity; retry with backoff".into(),
+            }));
+            let down = self.clients[session as usize].down;
+            self.net.send(down, t, &body, &mut self.log);
+            return;
         }
         let pick = self.gw.topology.route(session).map(|sh| sh.id.0 as usize);
         let Some(s) = pick else {
@@ -1595,6 +1845,12 @@ impl World {
 
     fn shard_request(&mut self, t: f64, s: usize, r: Request) {
         let (client, id) = (r.client, r.id);
+        if self.shards[s].quarantined.contains(&client) {
+            // the executor shut this session's socket: its frames die
+            // before touching the collector or any decoder state
+            self.shards[s].out.quarantine_drops += 1;
+            return;
+        }
         let route = Route::of(&r.payload);
         let reply_lane = self.reply_lane(s, client);
         let now_i = self.clock.instant_at(t);
@@ -1645,6 +1901,7 @@ impl World {
             .as_ref()
             .map(|sp| (sp.idle_watts, sp.active_watts, sp.throttle_factor));
         let update_cost = self.cfg.learning.as_ref().map(|sp| sp.update_cost).unwrap_or(0.0);
+        let reject_budget = self.cfg.codec_reject_budget;
         let now_i = self.clock.instant_at(t);
         loop {
             let Some(route) = self.shards[s].collector.ready(now_i) else { break };
@@ -1731,11 +1988,24 @@ impl World {
                             }
                             Err(_) => {
                                 sh.out.codec_rejects += 1;
+                                let abusive =
+                                    sh.codecs.consecutive_rejects(w.client) > reject_budget;
                                 self.log.record(
                                     t,
                                     "codec_reject",
                                     &format!("shard={s} client={} id={}", w.client, w.id),
                                 );
+                                // the executor's quarantine: a session past
+                                // its consecutive-reject budget is cut off
+                                // without touching any other stream
+                                if abusive && self.shards[s].quarantined.insert(w.client) {
+                                    self.shards[s].out.quarantined_sessions += 1;
+                                    self.log.record(
+                                        t,
+                                        "quarantine",
+                                        &format!("shard={s} client={}", w.client),
+                                    );
+                                }
                                 SimReply {
                                     client: w.client,
                                     id: w.id,
@@ -1808,11 +2078,21 @@ impl World {
                             },
                             Err(_) => {
                                 sh.out.codec_rejects += 1;
+                                let abusive =
+                                    sh.codecs.consecutive_rejects(w.client) > reject_budget;
                                 self.log.record(
                                     t,
                                     "codec_reject",
                                     &format!("shard={s} client={} id={}", w.client, w.id),
                                 );
+                                if abusive && self.shards[s].quarantined.insert(w.client) {
+                                    self.shards[s].out.quarantined_sessions += 1;
+                                    self.log.record(
+                                        t,
+                                        "quarantine",
+                                        &format!("shard={s} client={}", w.client),
+                                    );
+                                }
                                 empty(e.feat.seq, RESP_FLAG_NEED_KEYFRAME, false)
                             }
                         };
@@ -2020,6 +2300,9 @@ impl World {
                 // buffer: the gateway's staleness gate catches its first
                 // stale action and re-syncs it to the fleet version
                 sh.learn = learn_spec.map(Learner::new);
+                // quarantine verdicts die with the incarnation, like every
+                // other per-session judgement the old process held
+                sh.quarantined.clear();
                 sh.busy_until = t;
                 let (up, down) = (sh.up, sh.down);
                 self.net.reopen(up, t, &mut self.log);
@@ -2084,22 +2367,31 @@ impl World {
                 }
             },
             Owner::GatewayFromClient(c) => match d {
-                Delivery::Frame(body) => match Msg::decode(&body) {
-                    Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
-                    Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
-                    Ok(
-                        Msg::Response(_)
-                        | Msg::ResponseV2(_)
-                        | Msg::ResponseLearn(_)
-                        | Msg::Error(_)
-                        | Msg::Policy(_),
-                    ) => {
-                        self.log.record(t, "gw_unexpected", &format!("client={c}"));
+                Delivery::Frame(body) => {
+                    if self.gw.quarantined.contains(&c) {
+                        // the threaded gateway shut this socket: frames
+                        // die unread, shard state untouched
+                        self.gw.out.quarantine_drops += 1;
+                        return;
                     }
-                    Err(_) => {
-                        self.log.record(t, "gw_frame_error", &format!("client={c}"));
+                    match Msg::decode(&body) {
+                        Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
+                        Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
+                        Ok(
+                            Msg::Response(_)
+                            | Msg::ResponseV2(_)
+                            | Msg::ResponseLearn(_)
+                            | Msg::Error(_)
+                            | Msg::Policy(_),
+                        ) => {
+                            self.log.record(t, "gw_unexpected", &format!("client={c}"));
+                        }
+                        Err(_) => {
+                            self.log.record(t, "gw_frame_error", &format!("client={c}"));
+                            self.gateway_frame_error(t, c);
+                        }
                     }
-                },
+                }
                 Delivery::Truncated(_) => {
                     self.log.record(t, "gw_torn_frame", &format!("client={c}"));
                 }

@@ -1,0 +1,219 @@
+//! Fuzz smoke suite (DESIGN.md §9): drives the three cargo-fuzz-style
+//! targets in `rust/fuzz/fuzz_targets/` from plain `cargo test` — no
+//! nightly toolchain, no external fuzzer binary. The corpus is built
+//! from the real encoders, the mutation engine is seeded, and nothing
+//! reads a clock, so a CI failure reproduces locally byte for byte.
+//!
+//! An input that crashes a target here (or under a real libFuzzer run
+//! of the same files) graduates to a named regression test in
+//! `rust/tests/wire_hostile.rs` — see DESIGN.md §9 for the procedure.
+//!
+//! Volume: the three tests below push ≥ 16 000 inputs through the
+//! targets, comfortably past the 10 000-iteration smoke floor the CI
+//! job pins.
+
+#[path = "../fuzz/fuzz_targets/codec_decode.rs"]
+mod codec_decode;
+#[path = "../fuzz/fuzz_targets/hello_negotiation.rs"]
+mod hello_negotiation;
+#[path = "../fuzz/fuzz_targets/msg_decode.rs"]
+mod msg_decode;
+
+use miniconv::codec::{Encoder, CODEC_DELTA};
+use miniconv::net::framing::{
+    quantize_features, ErrorMsg, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, PolicySync,
+    Request, Response, ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_OVERLOADED, EXP_HAS_REWARD,
+    RESP_FLAG_NEED_KEYFRAME,
+};
+use miniconv::util::rng::Rng;
+
+/// One valid frame body per wire construct, built through the real
+/// encoders (so the corpus exercises every decode arm, including a live
+/// delta-codec chain). Bodies, not framed bytes: `Msg::decode` takes
+/// the type byte + payload the transport hands it.
+fn corpus() -> Vec<Vec<u8>> {
+    let feats: Vec<f32> = (0..48).map(|i| (i % 5) as f32 * 0.3).collect();
+    let (scale, q) = quantize_features(&feats);
+    let mut enc = Encoder::new();
+    let mut key_wire = Vec::new();
+    let (kflags, kseq) = enc.encode_into(&q, &mut key_wire);
+    let keyframe = FeatureFrame {
+        c: 3,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags: kflags,
+        qmax: 255,
+        seq: kseq,
+        scale,
+        data: key_wire,
+    };
+    let mut delta_wire = Vec::new();
+    let (dflags, dseq) = enc.encode_into(&q, &mut delta_wire);
+    let delta = FeatureFrame { flags: dflags, seq: dseq, data: delta_wire, ..keyframe.clone() };
+    let msgs = [
+        Msg::Hello(Hello {
+            client: 7,
+            split: true,
+            codec: CODEC_DELTA,
+            caps: CAP_EXPERIENCE,
+            shard: None,
+        }),
+        Msg::Hello(Hello { client: 7, split: false, codec: 0, caps: 0, shard: Some(3) }),
+        Msg::Request(Request {
+            client: 7,
+            id: 1,
+            payload: Payload::RawRgba { x: 4, data: vec![9; 64] },
+        }),
+        Msg::Request(Request {
+            client: 7,
+            id: 2,
+            payload: Payload::Features { c: 3, h: 4, w: 4, scale, data: q },
+        }),
+        Msg::Request(Request { client: 7, id: 3, payload: Payload::FeaturesV2(keyframe) }),
+        Msg::Request(Request {
+            client: 7,
+            id: 4,
+            payload: Payload::Experience(ExperienceFrame {
+                feat: delta,
+                ep: 2,
+                step: 5,
+                flags: EXP_HAS_REWARD,
+                reward: 0.5,
+            }),
+        }),
+        Msg::Response(Response { client: 7, id: 1, action: vec![0.1, -0.2] }),
+        Msg::ResponseV2(ResponseV2 {
+            client: 7,
+            id: 3,
+            seq: kseq,
+            flags: RESP_FLAG_NEED_KEYFRAME,
+            queue_wait_us: 120,
+            action: vec![0.3; 4],
+        }),
+        Msg::ResponseLearn(ResponseLearn {
+            client: 7,
+            id: 4,
+            seq: dseq,
+            flags: 0,
+            acting_version: 9,
+            latest_version: 11,
+            action: vec![-0.5; 3],
+        }),
+        Msg::Error(ErrorMsg {
+            client: 7,
+            code: ERR_OVERLOADED,
+            detail: "retry with backoff".into(),
+        }),
+        Msg::Policy(PolicySync { version: 3, params: vec![0.25; 17] }),
+    ];
+    msgs.iter().map(|m| m.encode()[4..].to_vec()).collect()
+}
+
+/// Structured mutation: start from a corpus entry and apply 1–3 random
+/// edits — bit flips, interesting-byte overwrites, tail truncation,
+/// 4-byte length-field blasts, cross-entry splices. The classic
+/// coverage mix of a byte-level fuzzer, minus the coverage feedback.
+fn mutate(rng: &mut Rng, corpus: &[Vec<u8>], scratch: &mut Vec<u8>) {
+    const INTERESTING: [u8; 6] = [0x00, 0x01, 0x7F, 0x80, 0xFE, 0xFF];
+    let base = &corpus[rng.below(corpus.len())];
+    scratch.clear();
+    scratch.extend_from_slice(base);
+    for _ in 0..=rng.below(3) {
+        match rng.below(5) {
+            0 if !scratch.is_empty() => {
+                let i = rng.below(scratch.len());
+                scratch[i] ^= 1 << rng.below(8);
+            }
+            1 if !scratch.is_empty() => {
+                let i = rng.below(scratch.len());
+                scratch[i] = INTERESTING[rng.below(INTERESTING.len())];
+            }
+            2 if !scratch.is_empty() => {
+                scratch.truncate(rng.below(scratch.len()));
+            }
+            3 if scratch.len() >= 4 => {
+                // blast a plausible count/length field
+                let i = rng.below(scratch.len() - 3);
+                let v = [0u32, 1, 0xFFFF, 0xFFFF_FFFF][rng.below(4)];
+                scratch[i..i + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            4 if !scratch.is_empty() => {
+                let other = &corpus[rng.below(corpus.len())];
+                let i = rng.below(scratch.len());
+                let j = rng.below(other.len());
+                let n = rng.below((scratch.len() - i).min(other.len() - j)) + 1;
+                scratch[i..i + n].copy_from_slice(&other[j..j + n]);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn noise(rng: &mut Rng, max_len: usize, buf: &mut Vec<u8>) {
+    let n = rng.below(max_len);
+    buf.clear();
+    buf.extend((0..n).map(|_| rng.next_u64() as u8));
+}
+
+#[test]
+fn msg_decode_survives_truncation_mutation_and_noise() {
+    let corpus = corpus();
+    // the pristine corpus must decode — a corpus that rots stops
+    // reaching the deep arms and the fuzz run goes quietly blind
+    for entry in &corpus {
+        assert!(Msg::decode(entry).is_ok(), "corpus entry no longer decodes");
+        msg_decode::fuzz_target(entry);
+    }
+    // every truncation prefix of every entry (the off-by-one sweep)
+    for entry in &corpus {
+        for cut in 0..entry.len() {
+            msg_decode::fuzz_target(&entry[..cut]);
+        }
+    }
+    // seeded structured mutation + raw noise
+    let mut rng = Rng::new(0xF0CC_5EED);
+    let mut buf = Vec::new();
+    for _ in 0..6000 {
+        mutate(&mut rng, &corpus, &mut buf);
+        msg_decode::fuzz_target(&buf);
+    }
+    for _ in 0..2000 {
+        noise(&mut rng, 96, &mut buf);
+        msg_decode::fuzz_target(&buf);
+    }
+}
+
+#[test]
+fn codec_decode_survives_hostile_headers_and_payloads() {
+    let mut rng = Rng::new(0xC0DE_C5ED);
+    let mut buf = Vec::new();
+    // unbiased noise: headers and payload both arbitrary
+    for _ in 0..3000 {
+        noise(&mut rng, 160, &mut buf);
+        codec_decode::fuzz_target(&buf);
+    }
+    // biased noise: force a known codec id and positive qmax so every
+    // run gets past the header checks into the unpack/apply machinery
+    for _ in 0..1500 {
+        noise(&mut rng, 160, &mut buf);
+        if buf.len() >= 6 {
+            buf[3] = CODEC_DELTA;
+            buf[5] = buf[5].max(1);
+        }
+        codec_decode::fuzz_target(&buf);
+    }
+}
+
+#[test]
+fn hello_negotiation_state_machine_holds_its_invariants() {
+    let mut rng = Rng::new(0x48E1_1057);
+    let mut ops = Vec::new();
+    for _ in 0..3000 {
+        noise(&mut rng, 20 * 6, &mut ops);
+        hello_negotiation::fuzz_target(&ops);
+    }
+    // directed: enough decode errors must always end in quarantine
+    let burn: Vec<u8> = std::iter::repeat([2u8, 0, 0, 0, 0, 0]).take(8).flatten().collect();
+    hello_negotiation::fuzz_target(&burn);
+}

@@ -892,6 +892,132 @@ fn version_flap_under_partition_is_vetoed_and_resynced() {
 }
 
 // ---------------------------------------------------------------------------
+// scenario 17: hostile clients — one sprays undecodable junk at the
+// gateway, one streams well-formed codec frames with corrupt payloads at
+// its shard. Both are quarantined by their budget (frame errors at the
+// gateway, consecutive codec rejects at the shard), and the healthy
+// cohort's p50 latency is unaffected by the attack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malicious_clients_are_quarantined_without_hurting_healthy_latency() {
+    let healthy = 4;
+    let decisions = 8;
+    for seed in SEEDS {
+        let baseline = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: healthy,
+            decisions,
+            ..ScenarioConfig::default()
+        };
+        let attacked = ScenarioConfig {
+            // clients 4 and 5: a junk-byte attacker and a corrupt-codec one
+            malicious_clients: 2,
+            attack_frames: 48,
+            attack_interval: 0.001,
+            gw_error_budget: 4,
+            codec_reject_budget: 4,
+            ..baseline.clone()
+        };
+        let b = run_and_emit("hostile_baseline", &baseline);
+        let r = run_and_emit("hostile_quarantine", &attacked);
+        let rerun = run_scenario(&attacked).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed hostile logs diverged");
+
+        // the healthy cohort is whole: every decision, no give-ups, no
+        // retries forced by the attack
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), healthy * decisions, "seed {seed}");
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+        for (i, c) in r.clients.iter().take(healthy).enumerate() {
+            assert_eq!(c.retries, 0, "seed {seed} client {i}: attack forced a retry");
+        }
+        // the junk attacker died at the gateway's frame-error budget: one
+        // quarantine, the overflow dropped unread, and not one junk frame
+        // ever reached a shard's framing layer
+        assert_eq!(r.gateway.quarantined_sessions, 1, "seed {seed}");
+        assert!(r.gateway.quarantine_drops > 0, "seed {seed}");
+        assert_eq!(r.shards.iter().map(|s| s.frame_errors).sum::<u64>(), 0, "seed {seed}");
+        // the codec attacker died at its shard's consecutive-reject budget:
+        // rejects stop well short of the 48 frames it sent
+        let shard_quarantines: u64 = r.shards.iter().map(|s| s.quarantined_sessions).sum();
+        let shard_drops: u64 = r.shards.iter().map(|s| s.quarantine_drops).sum();
+        let rejects: u64 = r.shards.iter().map(|s| s.codec_rejects).sum();
+        assert_eq!(shard_quarantines, 1, "seed {seed}");
+        assert!(shard_drops > 0, "seed {seed}");
+        assert!(
+            rejects > 4 && rejects < attacked.attack_frames,
+            "seed {seed}: {rejects} rejects for {} hostile frames",
+            attacked.attack_frames
+        );
+        assert_eq!(r.total_quarantined(), 2, "seed {seed}");
+        assert!(r.log.contains(" quarantine "), "seed {seed}");
+        assert!(r.log.contains(" gw_frame_error "), "seed {seed}");
+        assert!(r.log.contains(" attack "), "seed {seed}");
+
+        // the acceptance gate: healthy p50 with the attack running stays
+        // within noise of the attack-free baseline (deadline-fired batches
+        // dominate both, so the bound is generous yet meaningful)
+        let worst_p50 = |rep: &ScenarioReport| {
+            rep.clients
+                .iter()
+                .take(healthy)
+                .map(|c| c.latencies.median())
+                .fold(0.0_f64, f64::max)
+        };
+        let (base_p50, attacked_p50) = (worst_p50(&b), worst_p50(&r));
+        assert!(
+            attacked_p50 <= 1.5 * base_p50 + 2e-3,
+            "seed {seed}: healthy p50 {attacked_p50:.4}s vs baseline {base_p50:.4}s"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 18: flash crowd — 3x more sessions than the admission bound
+// arrive at once; the gateway sheds the overflow with explicit
+// ERR_OVERLOADED frames, the shed clients back off with jittered retries,
+// and every one of them eventually completes every decision
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flash_crowd_is_shed_gracefully_and_every_client_finishes() {
+    let n_clients = 24;
+    let decisions = 4;
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: n_clients,
+            decisions,
+            gw_max_sessions: 8,
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("flash_crowd", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed flash-crowd logs diverged");
+
+        // graceful degradation, not collapse: the overflow was shed with
+        // explicit overload frames, never by stalling or dropping silently
+        assert!(r.gateway.shed_hellos > 0, "seed {seed}: admission never shed");
+        assert_eq!(
+            r.gateway.shed_hellos,
+            r.total_overload_rejections(),
+            "seed {seed}: a shed was not answered with an explicit frame"
+        );
+        assert!(r.log.contains(" shed "), "seed {seed}");
+        assert!(r.log.contains(" backoff "), "seed {seed}");
+        // and liveness: backoff + retry admitted everyone in the end
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a shed client starved");
+        assert_eq!(r.completed_decisions(), n_clients * decisions, "seed {seed}");
+        assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0);
+        assert_eq!(r.total_quarantined(), 0, "seed {seed}: shedding is not quarantine");
+        assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
 // scenario 9: jitter + reorder everywhere — liveness with zero retries
 // ---------------------------------------------------------------------------
 

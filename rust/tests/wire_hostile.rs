@@ -1,0 +1,314 @@
+//! Hostile-wire regression corpus (DESIGN.md §9): named malformed
+//! inputs — truncated varints, forged element counts, bad codec
+//! headers, mid-negotiation capability flips — pinned as plain tests.
+//!
+//! This is where fuzz findings come to rest: an input that crashes a
+//! target in `rust/fuzz/fuzz_targets/` (via the smoke driver
+//! `rust/tests/fuzz_smoke.rs` or a real fuzzer run) gets minimized,
+//! named, and added here so the crash can never quietly return.
+//! Every case asserts the clean-rejection contract: hostile bytes come
+//! back as `Err`, never as a panic, an oversized allocation, or a
+//! mutation of another session's decoder state.
+
+use miniconv::codec::pack::get_varint;
+use miniconv::codec::{quantize_into, Decoders, Encoder, CODEC_DELTA, FLAG_KEYFRAME, FLAG_RAW};
+use miniconv::net::framing::{
+    quantize_features, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request,
+    CAP_EXPERIENCE, EXP_HAS_REWARD, MSG_EXPERIENCE, MSG_POLICY, MSG_REQUEST_FEAT,
+    MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE,
+};
+use miniconv::net::limits::{LimitsConfig, SessionGate};
+
+// -- Msg::decode: framing-level hostility -----------------------------------
+
+/// Valid frame bodies covering the request-side decode arms, built
+/// through the real encoders.
+fn valid_bodies() -> Vec<Vec<u8>> {
+    let feats: Vec<f32> = (0..48).map(|i| (i % 5) as f32 * 0.3).collect();
+    let (scale, q) = quantize_features(&feats);
+    let mut enc = Encoder::new();
+    let mut wire = Vec::new();
+    let (flags, seq) = enc.encode_into(&q, &mut wire);
+    let v2 = FeatureFrame {
+        c: 3,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 255,
+        seq,
+        scale,
+        data: wire,
+    };
+    let exp = ExperienceFrame {
+        feat: v2.clone(),
+        ep: 1,
+        step: 3,
+        flags: EXP_HAS_REWARD,
+        reward: -0.25,
+    };
+    let msgs = [
+        Msg::Hello(Hello {
+            client: 9,
+            split: true,
+            codec: CODEC_DELTA,
+            caps: CAP_EXPERIENCE,
+            shard: Some(1),
+        }),
+        Msg::Request(Request {
+            client: 9,
+            id: 1,
+            payload: Payload::RawRgba { x: 4, data: vec![7; 64] },
+        }),
+        Msg::Request(Request { client: 9, id: 2, payload: Payload::FeaturesV2(v2) }),
+        Msg::Request(Request { client: 9, id: 3, payload: Payload::Experience(exp) }),
+    ];
+    msgs.iter().map(|m| m.encode()[4..].to_vec()).collect()
+}
+
+#[test]
+fn every_truncation_of_every_valid_frame_is_rejected() {
+    // the wire format is fully length-determined, so no strict prefix of
+    // a valid body may decode — a frame torn anywhere must be an Err
+    for body in valid_bodies() {
+        assert!(Msg::decode(&body).is_ok());
+        for cut in 0..body.len() {
+            assert!(
+                Msg::decode(&body[..cut]).is_err(),
+                "prefix {cut}/{} of type {} decoded",
+                body.len(),
+                body[0]
+            );
+        }
+    }
+}
+
+/// Assemble a frame body by hand: type byte + payload bytes.
+fn body(ty: u8, payload: &[u8]) -> Vec<u8> {
+    let mut b = vec![ty];
+    b.extend_from_slice(payload);
+    b
+}
+
+#[test]
+fn forged_element_counts_are_rejected_before_they_buy_an_allocation() {
+    // MSG_RESPONSE claiming 65 535 action floats over a 4-byte body
+    let mut p = Vec::new();
+    p.extend_from_slice(&9u32.to_le_bytes());
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&0xFFFFu16.to_le_bytes());
+    p.extend_from_slice(&[0; 4]);
+    assert!(Msg::decode(&body(MSG_RESPONSE, &p)).is_err());
+
+    // MSG_POLICY claiming u32::MAX parameters — the count·4 product must
+    // be rejected overflow-safe, not wrapped into a small allocation
+    let mut p = Vec::new();
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&u32::MAX.to_le_bytes());
+    p.extend_from_slice(&[0; 8]);
+    assert!(Msg::decode(&body(MSG_POLICY, &p)).is_err());
+
+    // MSG_POLICY claiming one float more than the frame carries
+    let mut p = Vec::new();
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&3u32.to_le_bytes());
+    p.extend_from_slice(&[0; 8]);
+    assert!(Msg::decode(&body(MSG_POLICY, &p)).is_err());
+
+    // MSG_REQUEST_RAW claiming a 65 535-pixel edge (a 16 GiB frame)
+    let mut p = Vec::new();
+    p.extend_from_slice(&9u32.to_le_bytes());
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&0xFFFFu16.to_le_bytes());
+    p.extend_from_slice(&[0; 8]);
+    assert!(Msg::decode(&body(MSG_REQUEST_RAW, &p)).is_err());
+
+    // MSG_REQUEST_FEAT with dims that multiply to ~2.8e14 elements
+    let mut p = Vec::new();
+    p.extend_from_slice(&9u32.to_le_bytes());
+    p.extend_from_slice(&1u64.to_le_bytes());
+    for d in [0xFFFFu16, 0xFFFF, 0xFFFF] {
+        p.extend_from_slice(&d.to_le_bytes());
+    }
+    p.extend_from_slice(&1.0f32.to_le_bytes());
+    p.extend_from_slice(&[0; 16]);
+    assert!(Msg::decode(&body(MSG_REQUEST_FEAT, &p)).is_err());
+
+    // MSG_REQUEST_FEAT_V2 whose payload length outruns the flat frame
+    let mut p = Vec::new();
+    p.extend_from_slice(&9u32.to_le_bytes());
+    p.extend_from_slice(&1u64.to_le_bytes());
+    for d in [2u16, 2, 2] {
+        p.extend_from_slice(&d.to_le_bytes());
+    }
+    p.extend_from_slice(&[CODEC_DELTA, FLAG_KEYFRAME, 255]);
+    p.extend_from_slice(&1u32.to_le_bytes());
+    p.extend_from_slice(&1.0f32.to_le_bytes());
+    p.extend_from_slice(&u32::MAX.to_le_bytes());
+    p.extend_from_slice(&[0; 32]);
+    assert!(Msg::decode(&body(MSG_REQUEST_FEAT_V2, &p)).is_err());
+}
+
+// -- codec layer: varint and header hostility -------------------------------
+
+#[test]
+fn truncated_and_overflowing_varints_are_rejected() {
+    // every prefix of a pure continuation run is a truncated varint
+    let run = [0x80u8; 4];
+    for cut in 0..=run.len() {
+        let mut pos = 0;
+        assert!(get_varint(&run[..cut], &mut pos).is_err(), "prefix {cut} decoded");
+    }
+    // a 5th byte carrying more than the 4 bits a u32 has left
+    let mut pos = 0;
+    assert!(get_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x7F], &mut pos).is_err());
+    // …while the canonical 5-byte maximum still decodes
+    let mut pos = 0;
+    assert_eq!(get_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F], &mut pos).unwrap(), u32::MAX);
+}
+
+const HONEST: u32 = 1;
+const ATTACKER: u32 = 2;
+
+/// Prime an honest 64-element delta chain, fire one attacker frame that
+/// must be rejected, then prove the honest chain neither changed nor
+/// stopped decoding. `counted` says whether the rejection happens deep
+/// enough to charge the attacker's consecutive-reject streak (header
+/// short-circuits — unknown codec id, zero qmax — bail before the
+/// payload machinery and leave the streak untouched).
+fn assert_rejected_without_poison(attack: &FeatureFrame, counted: bool) {
+    let feats: Vec<f32> = (0..64).map(|i| (i % 9) as f32 * 0.5).collect();
+    let mut q = Vec::new();
+    let scale = quantize_into(&feats, 200, &mut q);
+    let mut enc = Encoder::new();
+    let mut wire = Vec::new();
+    let mut decs = Decoders::new();
+    let mut row = vec![0.0f32; 64];
+    let hf = |flags, seq, data: Vec<u8>| FeatureFrame {
+        c: 4,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 200,
+        seq,
+        scale,
+        data,
+    };
+    let (flags, seq) = enc.encode_into(&q, &mut wire);
+    decs.decode_into(HONEST, &hf(flags, seq, wire.clone()), &mut row).unwrap();
+    let before = decs.frame(HONEST).unwrap().to_vec();
+
+    let mut arow = vec![0.0f32; attack.feat_len()];
+    assert!(decs.decode_into(ATTACKER, attack, &mut arow).is_err(), "hostile frame decoded");
+    assert_eq!(decs.consecutive_rejects(ATTACKER), u32::from(counted));
+    assert_eq!(decs.consecutive_rejects(HONEST), 0, "reject charged to the honest session");
+    assert_eq!(decs.frame(HONEST).unwrap(), &before[..], "honest state mutated");
+
+    let (flags, seq) = enc.encode_into(&q, &mut wire);
+    decs.decode_into(HONEST, &hf(flags, seq, wire.clone()), &mut row)
+        .expect("honest delta chain broken by a rejected neighbor");
+}
+
+#[test]
+fn bad_codec_headers_are_rejected_without_poisoning_neighbors() {
+    let n = 64usize;
+    let base = FeatureFrame {
+        c: 4,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags: FLAG_KEYFRAME | FLAG_RAW,
+        qmax: 200,
+        seq: 1,
+        scale: 1.0,
+        data: vec![0; n],
+    };
+    // unknown codec id (header short-circuit)
+    assert_rejected_without_poison(&FeatureFrame { codec: 7, ..base.clone() }, false);
+    // zero quantisation ceiling (header short-circuit)
+    assert_rejected_without_poison(&FeatureFrame { qmax: 0, ..base.clone() }, false);
+    // raw keyframe whose values exceed its own qmax
+    assert_rejected_without_poison(&FeatureFrame { data: vec![255; n], ..base.clone() }, true);
+    // raw keyframe lying about its length
+    assert_rejected_without_poison(&FeatureFrame { data: vec![0; n - 1], ..base.clone() }, true);
+    // delta against a base that was never decoded
+    let junk = FeatureFrame { flags: 0, data: vec![0xFF; n], ..base.clone() };
+    assert_rejected_without_poison(&junk, true);
+    // packed keyframe with nonzero padding bits in its block mask
+    let pad = FeatureFrame { flags: FLAG_KEYFRAME, data: vec![0xF0], ..base.clone() };
+    assert_rejected_without_poison(&pad, true);
+    // packed keyframe with trailing bytes after its residual stream
+    let trail = FeatureFrame { flags: FLAG_KEYFRAME, data: vec![0x00, 0xAA, 0xBB], ..base };
+    assert_rejected_without_poison(&trail, true);
+}
+
+#[test]
+fn delta_seq_jumps_poison_the_chain_until_a_keyframe() {
+    let n = 64usize;
+    let mut decs = Decoders::new();
+    let mut row = vec![0.0f32; n];
+    let f = |flags, seq, data: Vec<u8>| FeatureFrame {
+        c: 4,
+        h: 4,
+        w: 4,
+        codec: CODEC_DELTA,
+        flags,
+        qmax: 200,
+        seq,
+        scale: 1.0,
+        data,
+    };
+    decs.decode_into(5, &f(FLAG_KEYFRAME | FLAG_RAW, 10, vec![5; n]), &mut row).unwrap();
+    // a delta that skips a sequence number is a chain break
+    assert!(decs.decode_into(5, &f(0, 12, vec![0x00]), &mut row).is_err());
+    // the poisoned chain rejects even a well-formed next delta
+    assert!(decs.decode_into(5, &f(0, 11, vec![0x00]), &mut row).is_err());
+    assert_eq!(decs.consecutive_rejects(5), 2);
+    // a keyframe at any sequence number re-primes and clears the streak
+    decs.decode_into(5, &f(FLAG_KEYFRAME | FLAG_RAW, 20, vec![5; n]), &mut row).unwrap();
+    assert_eq!(decs.consecutive_rejects(5), 0);
+    // …and the chain continues from the new base
+    assert!(decs.decode_into(5, &f(0, 21, vec![0x00]), &mut row).is_ok());
+}
+
+// -- admission gate: mid-negotiation flips arriving by wire -----------------
+
+#[test]
+fn mid_negotiation_capability_flips_arrive_by_wire_and_are_contained() {
+    let mut gate = SessionGate::new(LimitsConfig::default());
+    // hellos go through the actual wire bytes, as an attacker would
+    let hello = |split, codec, caps| {
+        let b = Msg::Hello(Hello { client: 3, split, codec, caps, shard: None }).encode();
+        match Msg::decode(&b[4..]).unwrap() {
+            Msg::Hello(h) => h,
+            other => panic!("hello decoded as {other:?}"),
+        }
+    };
+    // negotiate a split session with the experience capability
+    let ack = gate.on_hello(&hello(true, CODEC_DELTA, CAP_EXPERIENCE), CAP_EXPERIENCE, Some(0));
+    assert_eq!(ack.unwrap().caps, CAP_EXPERIENCE);
+    assert!(gate.admit(MSG_EXPERIENCE, 64).is_ok());
+    // mid-session flip: a re-hello dropping the capability must stop
+    // experience admission immediately, not at the next reconnect
+    let ack = gate.on_hello(&hello(true, CODEC_DELTA, 0), CAP_EXPERIENCE, Some(0));
+    assert_eq!(ack.unwrap().caps, 0);
+    assert!(gate.admit(MSG_EXPERIENCE, 64).is_err());
+    assert!(gate.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
+    // route flip: the feature route collapses to zero on a raw re-hello
+    gate.on_hello(&hello(false, 0, 0), CAP_EXPERIENCE, Some(0)).unwrap();
+    assert!(gate.admit(MSG_REQUEST_FEAT_V2, 64).is_err());
+    assert!(gate.admit(MSG_REQUEST_RAW, 64).is_ok());
+    // hostile codec ids decline to flat rather than echo
+    assert_eq!(gate.on_hello(&hello(true, 9, 0), 0, None).unwrap().codec, 0);
+    // after all that churn the decode-error budget still quarantines
+    let budget = LimitsConfig::default().max_decode_errors;
+    for _ in 0..budget {
+        assert!(!gate.on_decode_error());
+    }
+    assert!(gate.on_decode_error());
+    assert!(gate.quarantined());
+    assert!(gate.admit(MSG_REQUEST_RAW, 64).is_err());
+    let h = hello(true, CODEC_DELTA, CAP_EXPERIENCE);
+    assert!(gate.on_hello(&h, CAP_EXPERIENCE, None).is_none());
+}
