@@ -1,18 +1,26 @@
 //! Fuzz target: the [`SessionGate`] admission state machine driven by an
 //! arbitrary op sequence — hellos with hostile codec/capability claims,
-//! frame admissions, decode errors, capability probes — in any order.
+//! frame admissions, decode errors, capability probes, and topology-epoch
+//! chaos (stale epochs, forged future epochs, epoch regression replays,
+//! mid-sequence migrations) — in any order.
 //!
 //! cargo-fuzz layout (see `msg_decode.rs`); driven deterministically by
 //! `rust/tests/fuzz_smoke.rs`.
 //!
-//! Invariants enforced after every op (DESIGN.md §9):
+//! Invariants enforced after every op (DESIGN.md §9–10):
 //!
 //!   * the gate never panics, whatever order the ops arrive in;
 //!   * a hello ack only ever grants capabilities the client requested
 //!     AND the server masks in, and only echoes codec ids the server
 //!     knows (everything else declines to flat);
+//!   * an epoch-carrying hello is acked only when its epoch matches the
+//!     server's topology epoch (when one is set) and never regresses the
+//!     session's own watermark; refusals count `epoch_rejects` and never
+//!     quarantine;
 //!   * quarantine is sticky: once entered, no hello is acked, no frame
-//!     is admitted, and no capability is granted, ever;
+//!     is admitted, and no capability is granted, ever — until the
+//!     session migrates, which is a fresh gate on a new shard (budgets
+//!     reset, epoch watermarks carried);
 //!   * an admitted frame always fits its per-type cap, and experience
 //!     frames are only ever admitted with `CAP_EXPERIENCE` negotiated.
 
@@ -29,8 +37,11 @@ pub fn fuzz_target(data: &[u8]) {
         ..LimitsConfig::default()
     });
     let mut quarantined = false;
+    // mirror of the gate's epoch state, updated only on observed acks
+    let mut topo: u64 = 0;
+    let mut watermark: u64 = 0;
     for op in data.chunks_exact(6) {
-        match op[0] % 4 {
+        match op[0] % 5 {
             0 => {
                 let h = Hello {
                     client: op[1] as u32,
@@ -38,6 +49,7 @@ pub fn fuzz_target(data: &[u8]) {
                     codec: op[3],
                     caps: op[4],
                     shard: None,
+                    epoch: None,
                 };
                 let mask = op[5];
                 match gate.on_hello(&h, mask, None) {
@@ -51,6 +63,8 @@ pub fn fuzz_target(data: &[u8]) {
                         }
                         assert_eq!(gate.grants(CAP_EXPERIENCE), ack.caps & CAP_EXPERIENCE != 0);
                     }
+                    // an epoch-less hello skips epoch validation entirely:
+                    // only quarantine can refuse it
                     None => assert!(quarantined, "ready session refused a hello"),
                 }
             }
@@ -74,15 +88,83 @@ pub fn fuzz_target(data: &[u8]) {
                     assert!(gate.quarantined(), "budget exhausted without quarantine");
                 }
             }
-            _ => {
+            3 => {
                 // a capability is only ever granted by a hello ack
                 let granted = gate.grants(op[1]);
                 if quarantined {
                     assert!(!granted, "quarantined session granted a capability");
                 }
             }
+            _ => {
+                // topology-epoch chaos: a small epoch domain so stale,
+                // current, forged-future, and regressed values all collide
+                let e = u32::from_le_bytes([op[1], op[2], op[3], op[4]]) as u64 % 9;
+                match op[5] % 3 {
+                    0 => {
+                        // the fleet moved: shards joined/left under us
+                        gate.set_topology_epoch(e);
+                        topo = e;
+                    }
+                    1 => {
+                        // an epoch-carrying hello: a re-route claim that
+                        // may be stale, current, forged, or a replay
+                        let h = Hello {
+                            client: op[1] as u32,
+                            split: op[2] & 2 != 0,
+                            codec: 1,
+                            caps: 0,
+                            shard: None,
+                            epoch: Some(e),
+                        };
+                        let rejects_before = gate.epoch_rejects;
+                        match gate.on_hello(&h, 0xff, Some(3)) {
+                            Some(ack) => {
+                                assert!(!quarantined, "quarantined session got an epoch ack");
+                                assert!(
+                                    topo == 0 || e == topo,
+                                    "stale/forged epoch {e} acked at topology {topo}"
+                                );
+                                assert!(e >= watermark, "regressed epoch {e} acked");
+                                watermark = e;
+                                let expect = (topo > 0).then_some(topo);
+                                assert_eq!(ack.epoch, expect, "ack stamped the wrong epoch");
+                            }
+                            None => {
+                                let stale_or_forged = topo > 0 && e != topo;
+                                assert!(
+                                    quarantined || stale_or_forged || e < watermark,
+                                    "valid epoch {e} refused (topology {topo}, \
+                                     watermark {watermark})"
+                                );
+                                if !quarantined {
+                                    assert_eq!(
+                                        gate.epoch_rejects,
+                                        rejects_before + 1,
+                                        "epoch refusal not counted"
+                                    );
+                                    assert!(
+                                        !gate.quarantined(),
+                                        "an epoch refusal must never quarantine"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        // the session migrates to a fresh shard: budgets
+                        // and quarantine verdicts stay behind, the epoch
+                        // watermarks follow
+                        gate = gate.migrate();
+                        assert!(!gate.quarantined(), "quarantine followed the migration");
+                        assert_eq!(gate.decode_errors, 0, "decode budget followed the migration");
+                        assert_eq!(gate.pre_hello_bytes, 0);
+                        quarantined = false;
+                    }
+                }
+            }
         }
-        // stickiness: quarantine never clears until disconnect
+        // stickiness: quarantine never clears until disconnect (the
+        // migrate op models a disconnect-and-rejoin, and resets the flag)
         if quarantined {
             assert!(gate.quarantined(), "quarantine was not sticky");
         }

@@ -113,6 +113,10 @@ pub struct ClientReport {
     pub overloaded: u64,
     /// rate controller's final quantisation ceiling (0 = flat codec)
     pub final_qmax: u8,
+    /// topology epoch stamped into the hello ack (0 = server not
+    /// fleet-fronted, or the ack was never read — raw/flat sessions use a
+    /// fire-and-forget handshake)
+    pub topology_epoch: u64,
 }
 
 impl ClientReport {
@@ -202,12 +206,14 @@ pub fn run_client(
         codec: if cfg.mode == Route::Split { cfg.codec.wire_id() } else { 0 },
         caps: 0,
         shard: None,
+        epoch: None,
     }))?;
 
     // negotiation barrier: the first frame's format depends on the
     // server's verdict, so a delta client blocks on the hello ack before
     // encoding anything (flat and raw clients keep the fire-and-forget
     // handshake — their format needs no agreement)
+    let mut topology_epoch = 0u64;
     if delta.is_some() {
         loop {
             match read_msg(&mut recv)? {
@@ -216,6 +222,10 @@ pub fn run_client(
                         // server declined: fall back to the flat v1 format
                         delta = None;
                     }
+                    // a fleet-fronted ack carries the topology epoch the
+                    // placement was computed under; reconnects echo it so
+                    // stale re-routes are refused server-side
+                    topology_epoch = ack.epoch.unwrap_or(0);
                     break;
                 }
                 Some(_) => continue, // stray traffic on a fresh connection
@@ -391,6 +401,7 @@ pub fn run_client(
         pipeline.observe(&env, &mut rng);
     }
     report.elapsed = cfg.clock.now().duration_since(t_run).as_secs_f64();
+    report.topology_epoch = topology_epoch;
     report.final_qmax = delta.as_ref().map(|(_, rate)| rate.qmax()).unwrap_or(0);
     if let Sender_::Plain(ref mut s) = send {
         let _ = s.flush();
@@ -440,6 +451,8 @@ pub struct LearnClientReport {
     /// requests explicitly shed with an [`ERR_OVERLOADED`] frame
     pub overloaded: u64,
     pub errors: usize,
+    /// topology epoch stamped into the hello ack (0 = not fleet-fronted)
+    pub topology_epoch: u64,
 }
 
 /// Run one learning client against the server at `addr`.
@@ -462,6 +475,7 @@ pub fn run_learn_client(
             codec: CODEC_DELTA,
             caps: CAP_EXPERIENCE,
             shard: None,
+            epoch: None,
         }),
     )?;
     // negotiation barrier: both the codec verdict and the capability mask
@@ -470,6 +484,7 @@ pub fn run_learn_client(
         match read_msg(&mut recv)? {
             Some(Msg::Hello(ack)) => {
                 anyhow::ensure!(ack.codec == CODEC_DELTA, "server declined the delta codec");
+                report.topology_epoch = ack.epoch.unwrap_or(0);
                 break ack.caps & CAP_EXPERIENCE != 0;
             }
             Some(_) => continue, // stray traffic on a fresh connection

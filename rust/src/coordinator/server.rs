@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -198,10 +198,19 @@ pub struct ServerHandle {
     pub addr: SocketAddr,
     pub metrics: Metrics,
     shutdown: Arc<AtomicBool>,
+    /// fleet topology epoch this shard currently serves under; readers
+    /// adopt it per-hello, so a gateway pushing an update here makes
+    /// every subsequent stale/forged epoch hello refuse (DESIGN.md §10)
+    topology_epoch: Arc<AtomicU64>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// Propagate a fleet topology epoch to this shard's admission gates.
+    pub fn set_topology_epoch(&self, epoch: u64) {
+        self.topology_epoch.store(epoch, Ordering::SeqCst);
+    }
+
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // poke the accept loop
@@ -240,6 +249,8 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     let caps_mask = if cfg.learn.is_some() { CAP_EXPERIENCE } else { 0 };
     let acc_clock = cfg.clock.clone();
     let acc_limits = cfg.limits.clone();
+    let topology_epoch = Arc::new(AtomicU64::new(0));
+    let acc_epoch = topology_epoch.clone();
     let acceptor = std::thread::Builder::new()
         .name("mc-accept".into())
         .spawn(move || {
@@ -253,10 +264,13 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
                         let shutdown = acc_shutdown.clone();
                         let clock = acc_clock.clone();
                         let limits = acc_limits.clone();
+                        let epoch = acc_epoch.clone();
                         std::thread::Builder::new()
                             .name("mc-reader".into())
                             .spawn(move || {
-                                reader_main(s, tx, shutdown, shard_id, caps_mask, clock, limits)
+                                reader_main(
+                                    s, tx, shutdown, shard_id, caps_mask, clock, limits, epoch,
+                                )
                             })
                             .ok();
                     }
@@ -269,9 +283,10 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
         })
         .context("spawn acceptor")?;
 
-    Ok(ServerHandle { addr, metrics, shutdown, threads: vec![executor, acceptor] })
+    Ok(ServerHandle { addr, metrics, shutdown, topology_epoch, threads: vec![executor, acceptor] })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn reader_main(
     stream: TcpStream,
     tx: Sender<Ingress>,
@@ -280,6 +295,7 @@ fn reader_main(
     caps_mask: u8,
     clock: ClockHandle,
     limits: LimitsConfig,
+    topology_epoch: Arc<AtomicU64>,
 ) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
@@ -355,8 +371,11 @@ fn reader_main(
                 if tx.send(Ingress::Hello { client: h.client }).is_err() {
                     break;
                 }
+                // adopt the fleet's current epoch so a hello carrying a
+                // stale or forged topology epoch refuses (DESIGN.md §10)
+                gate.set_topology_epoch(topology_epoch.load(Ordering::SeqCst));
                 let Some(ack) = gate.on_hello(&h, caps_mask, shard_id) else {
-                    break; // quarantined sessions get no ack
+                    break; // quarantined or epoch-refused: no ack
                 };
                 let mut w = writer.lock().unwrap();
                 if write_msg(&mut *w, &Msg::Hello(ack)).is_err() {

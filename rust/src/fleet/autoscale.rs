@@ -1,0 +1,272 @@
+//! Histogram-driven fleet autoscaling: shard add/remove decisions from
+//! the merged fleet metrics (DESIGN.md §10).
+//!
+//! The policy reads two fleet-wide signals — queue-wait p95 from the
+//! merged latency histogram ([`super::aggregate`]) and the gateway's shed
+//! rate — and answers one question per observation window: grow, shrink,
+//! or hold. Three mechanisms keep it from flapping when a flash crowd
+//! arrives or recedes:
+//!
+//!   * **hysteresis** — the scale-up threshold sits strictly above the
+//!     scale-down threshold, so load oscillating inside the band produces
+//!     no action at all;
+//!   * **confirmation streaks** — pressure must persist for `confirm`
+//!     consecutive samples before it becomes an action, so a single noisy
+//!     histogram window cannot add a shard;
+//!   * **cooldown** — after any action the policy holds for `cooldown`
+//!     seconds, giving migration (and the forced-keyframe re-sync it
+//!     triggers) time to settle before load is judged again.
+//!
+//! Like [`super::health::probe_transition`] and `net::limits::RateCap`,
+//! the decision core is pure and time-agnostic: the caller supplies the
+//! clock as `f64` seconds, so the threaded fleet feeds it wall time and
+//! the deterministic simnet feeds it virtual time and gets byte-identical
+//! decisions per seed.
+
+/// One observation window's fleet-wide load signals.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadSample {
+    /// queue-wait p95 in nanoseconds, from the merged fleet histogram
+    /// (never from averaging per-shard percentiles)
+    pub queue_p95_ns: u64,
+    /// fraction of admission attempts shed by the gateway in the window,
+    /// in `[0, 1]` (session sheds + quarantine drops over total attempts)
+    pub shed_rate: f64,
+    /// routable shards at sampling time — bounds the decision
+    pub shards: usize,
+}
+
+/// What the fleet should do after one observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// load is inside the hysteresis band (or pressure is unconfirmed,
+    /// or the cooldown is still running)
+    Hold,
+    /// add one shard: queue-wait p95 or shed rate persisted above the
+    /// high watermark
+    ScaleUp,
+    /// drain and remove one shard: the fleet persisted below the low
+    /// watermark with nothing shed
+    ScaleDown,
+}
+
+/// Watermarks and damping for the autoscaler.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// never scale below this many shards
+    pub min_shards: usize,
+    /// never scale above this many shards
+    pub max_shards: usize,
+    /// queue-wait p95 above this sustains up-pressure
+    pub queue_high_ns: u64,
+    /// queue-wait p95 below this (with zero shed) sustains down-pressure;
+    /// must sit strictly below `queue_high_ns` — the gap is the
+    /// hysteresis band
+    pub queue_low_ns: u64,
+    /// shed rate above this sustains up-pressure regardless of queue wait
+    /// (a fully shedding gateway can show an idle queue)
+    pub shed_high: f64,
+    /// consecutive pressured samples required before acting
+    pub confirm: u32,
+    /// seconds after any action before the next may fire
+    pub cooldown: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 16,
+            queue_high_ns: 5_000_000, // 5 ms of queue wait at p95
+            queue_low_ns: 500_000,    // 0.5 ms
+            shed_high: 0.01,          // shedding >1% of admissions
+            confirm: 3,
+            cooldown: 30.0,
+        }
+    }
+}
+
+/// The damped decision state machine over [`LoadSample`]s.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    up_streak: u32,
+    down_streak: u32,
+    last_action_at: Option<f64>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        assert!(cfg.queue_low_ns < cfg.queue_high_ns, "hysteresis band must be non-empty");
+        assert!(cfg.min_shards >= 1, "a fleet needs at least one shard");
+        assert!(cfg.min_shards <= cfg.max_shards, "min_shards exceeds max_shards");
+        assert!(cfg.confirm >= 1, "confirm must require at least one sample");
+        Autoscaler { cfg, up_streak: 0, down_streak: 0, last_action_at: None }
+    }
+
+    /// Current confirmation streaks `(up, down)` — for operator dashboards
+    /// and scenario assertions.
+    pub fn streaks(&self) -> (u32, u32) {
+        (self.up_streak, self.down_streak)
+    }
+
+    /// Feed one observation window; `now` is seconds on any monotone
+    /// clock. Streaks keep accumulating during the cooldown so pressure
+    /// that persists across it acts immediately once the cooldown ends.
+    pub fn observe(&mut self, now: f64, s: LoadSample) -> ScaleAction {
+        let up_pressure = s.queue_p95_ns > self.cfg.queue_high_ns || s.shed_rate > self.cfg.shed_high;
+        let down_pressure = s.queue_p95_ns < self.cfg.queue_low_ns && s.shed_rate <= 0.0;
+        if up_pressure {
+            self.up_streak = self.up_streak.saturating_add(1);
+            self.down_streak = 0;
+        } else if down_pressure {
+            self.down_streak = self.down_streak.saturating_add(1);
+            self.up_streak = 0;
+        } else {
+            // inside the hysteresis band: decay both directions
+            self.up_streak = 0;
+            self.down_streak = 0;
+        }
+        if let Some(t) = self.last_action_at {
+            if now - t < self.cfg.cooldown {
+                return ScaleAction::Hold;
+            }
+        }
+        if self.up_streak >= self.cfg.confirm && s.shards < self.cfg.max_shards {
+            self.up_streak = 0;
+            self.down_streak = 0;
+            self.last_action_at = Some(now);
+            return ScaleAction::ScaleUp;
+        }
+        if self.down_streak >= self.cfg.confirm && s.shards > self.cfg.min_shards {
+            self.up_streak = 0;
+            self.down_streak = 0;
+            self.last_action_at = Some(now);
+            return ScaleAction::ScaleDown;
+        }
+        ScaleAction::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            queue_high_ns: 1_000_000,
+            queue_low_ns: 100_000,
+            shed_high: 0.05,
+            confirm: 3,
+            cooldown: 10.0,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    fn hot(shards: usize) -> LoadSample {
+        LoadSample { queue_p95_ns: 5_000_000, shed_rate: 0.0, shards }
+    }
+
+    fn idle(shards: usize) -> LoadSample {
+        LoadSample { queue_p95_ns: 10_000, shed_rate: 0.0, shards }
+    }
+
+    fn banded(shards: usize) -> LoadSample {
+        LoadSample { queue_p95_ns: 500_000, shed_rate: 0.0, shards }
+    }
+
+    #[test]
+    fn sustained_queue_pressure_scales_up_after_confirmation() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(0.0, hot(2)), ScaleAction::Hold);
+        assert_eq!(a.observe(1.0, hot(2)), ScaleAction::Hold);
+        assert_eq!(a.observe(2.0, hot(2)), ScaleAction::ScaleUp, "third confirmed sample acts");
+    }
+
+    #[test]
+    fn shed_rate_alone_scales_up_even_with_an_idle_queue() {
+        // a gateway shedding everything shows no queue wait at all — the
+        // shed signal must carry the decision by itself
+        let mut a = Autoscaler::new(cfg());
+        let shedding = LoadSample { queue_p95_ns: 0, shed_rate: 0.5, shards: 2 };
+        assert_eq!(a.observe(0.0, shedding), ScaleAction::Hold);
+        assert_eq!(a.observe(1.0, shedding), ScaleAction::Hold);
+        assert_eq!(a.observe(2.0, shedding), ScaleAction::ScaleUp);
+    }
+
+    #[test]
+    fn quiet_fleet_scales_down_after_confirmation() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.observe(0.0, idle(3)), ScaleAction::Hold);
+        assert_eq!(a.observe(1.0, idle(3)), ScaleAction::Hold);
+        assert_eq!(a.observe(2.0, idle(3)), ScaleAction::ScaleDown);
+    }
+
+    #[test]
+    fn shedding_vetoes_scale_down_even_below_the_low_watermark() {
+        let mut a = Autoscaler::new(cfg());
+        let deceptive = LoadSample { queue_p95_ns: 10_000, shed_rate: 0.2, shards: 3 };
+        for i in 0..10 {
+            assert_ne!(a.observe(i as f64, deceptive), ScaleAction::ScaleDown);
+        }
+    }
+
+    #[test]
+    fn hysteresis_band_never_acts_and_resets_streaks() {
+        let mut a = Autoscaler::new(cfg());
+        // two hot samples, then back in band: the streak must not survive
+        a.observe(0.0, hot(2));
+        a.observe(1.0, hot(2));
+        assert_eq!(a.observe(2.0, banded(2)), ScaleAction::Hold);
+        assert_eq!(a.streaks(), (0, 0));
+        assert_eq!(a.observe(3.0, hot(2)), ScaleAction::Hold, "streak restarted from zero");
+        // oscillation across the band edges without persistence: no action
+        let mut b = Autoscaler::new(cfg());
+        for i in 0..20 {
+            let s = if i % 2 == 0 { hot(2) } else { idle(2) };
+            assert_eq!(b.observe(i as f64, s), ScaleAction::Hold, "flapping load acted at {i}");
+        }
+    }
+
+    #[test]
+    fn cooldown_defers_the_next_action_but_keeps_the_streak() {
+        let mut a = Autoscaler::new(cfg());
+        a.observe(0.0, hot(2));
+        a.observe(1.0, hot(2));
+        assert_eq!(a.observe(2.0, hot(2)), ScaleAction::ScaleUp);
+        // still hot, but inside the 10 s cooldown: hold
+        for t in 3..12 {
+            assert_eq!(a.observe(t as f64, hot(3)), ScaleAction::Hold, "acted inside cooldown");
+        }
+        // pressure persisted across the cooldown (streak ≥ confirm), so
+        // the first sample past it acts immediately
+        assert_eq!(a.observe(12.5, hot(3)), ScaleAction::ScaleUp);
+    }
+
+    #[test]
+    fn shard_bounds_clamp_both_directions() {
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(a.observe(t as f64, hot(4)), ScaleAction::Hold, "grew past max_shards");
+        }
+        let mut a = Autoscaler::new(cfg());
+        for t in 0..10 {
+            assert_eq!(a.observe(t as f64, idle(1)), ScaleAction::Hold, "shrank below min_shards");
+        }
+    }
+
+    #[test]
+    fn decisions_are_a_pure_function_of_the_sample_sequence() {
+        // same samples, same clock -> same decisions (the determinism
+        // contract the simnet relies on)
+        let samples: Vec<LoadSample> =
+            (0..30).map(|i| if i % 7 < 4 { hot(2) } else { idle(2) }).collect();
+        let run = || {
+            let mut a = Autoscaler::new(cfg());
+            samples.iter().enumerate().map(|(i, s)| a.observe(i as f64, *s)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

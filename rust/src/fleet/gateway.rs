@@ -152,6 +152,23 @@ pub struct GatewayStats {
     pub rate_limited: u64,
 }
 
+impl GatewayStats {
+    /// Fold this gateway's admission counters into the fleet-snapshot form
+    /// (`fleet::aggregate`), so shed/quarantine pressure is visible next to
+    /// the merged latency histograms. The threaded gateway quarantines
+    /// nothing itself — hostile-budget quarantine lives in the shard
+    /// readers — so those fields stay zero here; the simnet gateway fills
+    /// them from its own outcome counters.
+    pub fn counters(&self) -> super::aggregate::GatewayCounters {
+        super::aggregate::GatewayCounters {
+            shed_sessions: self.shed_connections,
+            rate_limited: self.rate_limited,
+            quarantined_sessions: 0,
+            quarantine_drops: 0,
+        }
+    }
+}
+
 pub struct GatewayHandle {
     pub addr: SocketAddr,
     topology: Arc<Mutex<Topology>>,
@@ -166,6 +183,13 @@ pub struct GatewayHandle {
 }
 
 impl GatewayHandle {
+    /// The topology's current epoch (bumped by every add/remove/state
+    /// change — probe verdicts included). Stamped into hello acks so
+    /// clients can detect stale re-routes (DESIGN.md §10).
+    pub fn topology_epoch(&self) -> u64 {
+        self.topology.lock().unwrap().epoch()
+    }
+
     pub fn stats(&self) -> GatewayStats {
         let mut s = self.stats.lock().unwrap().clone();
         s.forwarded_requests = self.counters.forwarded_requests.load(Ordering::SeqCst);
@@ -401,18 +425,18 @@ fn gw_conn(
     // consistent-hash placement, re-routing around shards that refuse the
     // pin (each refusal marks the shard Down for everyone)
     let mut attempts = 0usize;
-    let (shard_id, upstream) = loop {
+    let (shard_id, upstream, epoch) = loop {
         let pick = {
             let top = topology.lock().unwrap();
-            top.route(session).map(|s| (s.id, s.addr))
+            top.route(session).map(|s| (s.id, s.addr, top.epoch()))
         };
-        let Some((id, saddr)) = pick else {
+        let Some((id, saddr, epoch)) = pick else {
             stats.lock().unwrap().rejected += 1;
             signal.notify();
             bail!("no routable shard for session {session}");
         };
         match TcpStream::connect_timeout(&saddr, connect_timeout) {
-            Ok(s) => break (id, s),
+            Ok(s) => break (id, s, epoch),
             Err(e) => {
                 warn!("gateway: {id} refused pin ({e}); marking down and re-routing");
                 topology.lock().unwrap().set_state(id, ShardState::Down);
@@ -444,6 +468,7 @@ fn gw_conn(
         &first,
         session,
         shard_id,
+        epoch,
         &counters,
         &shutdown,
         &pump_limits,
@@ -461,6 +486,7 @@ fn pump_session(
     first: &Msg,
     session: u32,
     shard_id: ShardId,
+    epoch: u64,
     counters: &Arc<Counters>,
     shutdown: &Arc<AtomicBool>,
     limits: &FrameLimits,
@@ -485,6 +511,10 @@ fn pump_session(
                 // the simnet gateway models versioned fan-out)
                 caps: 0,
                 shard: Some(shard_id.0),
+                // the topology epoch this placement was computed under:
+                // the client echoes it on reconnect, and shards refuse
+                // hellos whose epoch went stale mid-migration
+                epoch: Some(epoch),
             }),
         )?;
     }
@@ -645,15 +675,21 @@ mod tests {
         let mut conn = TcpStream::connect(gw.addr).unwrap();
         write_msg(
             &mut conn,
-            &Msg::Hello(Hello { client: 5, split: false, codec: 0, caps: 0, shard: None }),
+            &Msg::Hello(Hello { client: 5, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
         )
             .unwrap();
         let ack = read_msg(&mut conn).unwrap().unwrap();
         let assigned = match ack {
-            Msg::Hello(h) => h.shard.expect("gateway must stamp a shard"),
+            Msg::Hello(h) => {
+                // two add_shard calls built this topology: the ack stamps
+                // the epoch the placement was computed under
+                assert_eq!(h.epoch, Some(2), "ack must carry the topology epoch");
+                h.shard.expect("gateway must stamp a shard")
+            }
             other => panic!("expected hello ack, got {other:?}"),
         };
         assert!(assigned < 2);
+        assert_eq!(gw.topology_epoch(), 2);
 
         let x = 8u16;
         write_msg(
@@ -694,7 +730,7 @@ mod tests {
         let mut conn = TcpStream::connect(gw.addr).unwrap();
         write_msg(
             &mut conn,
-            &Msg::Hello(Hello { client: 1, split: false, codec: 0, caps: 0, shard: None }),
+            &Msg::Hello(Hello { client: 1, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
         )
             .unwrap();
         // gateway closes without an ack
@@ -724,7 +760,7 @@ mod tests {
         let mut conn = TcpStream::connect(gw.addr).unwrap();
         write_msg(
             &mut conn,
-            &Msg::Hello(Hello { client: 9, split: false, codec: 0, caps: 0, shard: None }),
+            &Msg::Hello(Hello { client: 9, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
         )
         .unwrap();
         match read_msg(&mut conn).unwrap() {
@@ -762,7 +798,7 @@ mod tests {
         let mut conn = TcpStream::connect(gw.addr).unwrap();
         write_msg(
             &mut conn,
-            &Msg::Hello(Hello { client: 3, split: false, codec: 0, caps: 0, shard: None }),
+            &Msg::Hello(Hello { client: 3, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
         )
         .unwrap();
         assert!(matches!(read_msg(&mut conn).unwrap().unwrap(), Msg::Hello(_)));
@@ -830,6 +866,7 @@ mod tests {
                     codec: 0,
                     caps: 0,
                     shard: None,
+                    epoch: None,
                 }),
             )
             .unwrap();

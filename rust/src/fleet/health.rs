@@ -106,7 +106,7 @@ pub fn probe_shard(addr: SocketAddr, timeout: Duration) -> Result<(Duration, Opt
     stream.set_read_timeout(Some(timeout)).ok();
     write_msg(
         &mut stream,
-        &Msg::Hello(Hello { client: PROBE_CLIENT, split: false, codec: 0, caps: 0, shard: None }),
+        &Msg::Hello(Hello { client: PROBE_CLIENT, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
     )?;
     loop {
         match read_msg(&mut stream)? {

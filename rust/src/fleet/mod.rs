@@ -13,6 +13,9 @@
 //! * [`aggregate`] — merges per-shard `coordinator::Metrics` snapshots;
 //!   fleet percentiles come from the combined histogram, never from
 //!   averaging per-shard percentiles.
+//! * [`autoscale`] — histogram-driven shard add/remove decisions (queue-wait
+//!   p95 + gateway shed rate) with hysteresis and cooldown, pure over a
+//!   caller-supplied clock so the simnet replays it deterministically.
 //!
 //! Shards are stock `coordinator::serve` instances (PJRT- or Sim-backed);
 //! the gateway composes them rather than forking the server. The
@@ -20,11 +23,13 @@
 //! benches, and the `serve_sharded` example.
 
 pub mod aggregate;
+pub mod autoscale;
 pub mod gateway;
 pub mod health;
 pub mod topology;
 
-pub use aggregate::{aggregate, FleetSnapshot, ShardSnapshot};
+pub use aggregate::{aggregate, FleetSnapshot, GatewayCounters, ShardSnapshot};
+pub use autoscale::{Autoscaler, AutoscaleConfig, LoadSample, ScaleAction};
 pub use gateway::{serve_gateway, GatewayConfig, GatewayHandle, GatewayStats};
 pub use health::{probe_shard, probe_transition, HealthConfig, HealthMonitor, ProbeStats};
 pub use topology::{HashRing, Shard, ShardId, ShardState, Topology};
@@ -115,9 +120,22 @@ impl LocalFleet {
             .map(|(_, h)| h.metrics.snapshot())
     }
 
-    /// Merged fleet snapshot across all live shards.
+    /// Merged fleet snapshot across all live shards, including the
+    /// gateway's admission counters (shed/rate-capped sessions) so the
+    /// autoscaler sees refusal pressure next to the latency histograms.
     pub fn snapshot(&self) -> FleetSnapshot {
         aggregate(self.shards.iter().map(|(id, h)| (*id, h.metrics.snapshot())))
+            .with_gateway(self.gateway.stats().counters())
+    }
+
+    /// Push the gateway's current topology epoch down to every shard's
+    /// admission gates, so stale or forged epoch-carrying hellos refuse
+    /// fleet-wide (DESIGN.md §10).
+    pub fn propagate_epoch(&self) {
+        let epoch = self.gateway.topology_epoch();
+        for (_, h) in &self.shards {
+            h.set_topology_epoch(epoch);
+        }
     }
 
     /// Hard-stop one shard (simulates a crash); the gateway discovers the

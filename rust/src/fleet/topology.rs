@@ -128,21 +128,34 @@ impl HashRing {
 
 /// Authoritative fleet view: shard table + ring, shared (behind a mutex)
 /// between the gateway's connection threads and the health monitor.
+///
+/// Every mutation that can change routing (add/remove/state) bumps the
+/// topology `epoch`, a monotone u64 the gateway stamps into Hello acks so
+/// clients and fuzzers can detect stale or forged re-route instructions
+/// (DESIGN.md §10).
 #[derive(Debug, Clone)]
 pub struct Topology {
     shards: BTreeMap<ShardId, Shard>,
     ring: HashRing,
+    epoch: u64,
 }
 
 impl Topology {
     pub fn new(vnodes: usize) -> Self {
-        Topology { shards: BTreeMap::new(), ring: HashRing::new(vnodes) }
+        Topology { shards: BTreeMap::new(), ring: HashRing::new(vnodes), epoch: 0 }
+    }
+
+    /// Monotone routing-change counter: bumped by every add/remove/state
+    /// mutation, never by connection accounting.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn add_shard(&mut self, id: ShardId, addr: SocketAddr) {
         self.shards
             .insert(id, Shard { id, addr, state: ShardState::Up, connections: 0 });
         self.ring.add(id);
+        self.epoch += 1;
     }
 
     /// Drop a shard from the table and the ring entirely (use [`Self::drain`]
@@ -150,11 +163,15 @@ impl Topology {
     pub fn remove_shard(&mut self, id: ShardId) {
         self.shards.remove(&id);
         self.ring.remove(id);
+        self.epoch += 1;
     }
 
     pub fn set_state(&mut self, id: ShardId, state: ShardState) {
         if let Some(s) = self.shards.get_mut(&id) {
-            s.state = state;
+            if s.state != state {
+                s.state = state;
+                self.epoch += 1;
+            }
         }
     }
 
@@ -271,6 +288,64 @@ mod tests {
             }
         }
         assert!(moved > 0, "shard 3 owned no sessions?");
+    }
+
+    #[test]
+    fn adding_a_shard_only_steals_its_own_keyspace() {
+        // consistent-hashing property, add direction: growing the fleet
+        // moves exactly the keys the new shard's ring points claim — every
+        // other session keeps its assignment (no global reshuffle)
+        let t4 = topo(4);
+        let mut t5 = t4.clone();
+        t5.add_shard(ShardId(4), addr(9004));
+        let mut moved = 0;
+        for session in 0..2000u32 {
+            let before = t4.route(session).unwrap().id;
+            let after = t5.route(session).unwrap().id;
+            if after == ShardId(4) {
+                moved += 1;
+            } else {
+                assert_eq!(before, after, "session {session} moved to a pre-existing shard");
+            }
+        }
+        assert!(moved > 0, "new shard claimed no keyspace?");
+        // with 5 shards the newcomer should take roughly 1/5th, not half
+        assert!(moved < 1000, "new shard stole too much keyspace: {moved}/2000");
+    }
+
+    #[test]
+    fn add_then_remove_restores_every_assignment() {
+        // the ring has no hidden history: removing the shard that was just
+        // added lands every key exactly where it started
+        let t4 = topo(4);
+        let mut t = t4.clone();
+        t.add_shard(ShardId(9), addr(9009));
+        t.remove_shard(ShardId(9));
+        for session in 0..2000u32 {
+            assert_eq!(t4.route(session).unwrap().id, t.route(session).unwrap().id);
+        }
+    }
+
+    #[test]
+    fn epoch_bumps_on_routing_changes_only() {
+        let mut t = topo(2);
+        let e0 = t.epoch();
+        // connection accounting never moves the epoch
+        t.conn_opened(ShardId(0));
+        t.conn_closed(ShardId(0));
+        assert_eq!(t.epoch(), e0);
+        // a no-op state set (Up -> Up) is not a routing change
+        t.set_state(ShardId(0), ShardState::Up);
+        assert_eq!(t.epoch(), e0);
+        t.drain(ShardId(0));
+        assert_eq!(t.epoch(), e0 + 1);
+        t.add_shard(ShardId(7), addr(9007));
+        assert_eq!(t.epoch(), e0 + 2);
+        t.remove_shard(ShardId(7));
+        assert_eq!(t.epoch(), e0 + 3);
+        // unknown shard ids are ignored, epoch included
+        t.set_state(ShardId(42), ShardState::Down);
+        assert_eq!(t.epoch(), e0 + 3);
     }
 
     #[test]

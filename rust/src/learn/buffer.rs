@@ -147,6 +147,23 @@ impl ExperienceBuffer {
         self.tracks.remove(&client);
     }
 
+    /// Hand a client's live track (pending decision + partial rollout) to
+    /// a peer buffer — the planned-migration path (DESIGN.md §10): at a
+    /// quiescent point the new shard continues the trajectory exactly
+    /// where the old one answered last, so a clean scale-down handoff
+    /// completes every transition exactly once instead of dropping the
+    /// pending step at the seam. Returns false when the client has no
+    /// track to move.
+    pub fn transfer_client_to(&mut self, client: u32, dst: &mut ExperienceBuffer) -> bool {
+        match self.tracks.remove(&client) {
+            Some(track) => {
+                dst.tracks.insert(client, track);
+                true
+            }
+            None => false,
+        }
+    }
+
     pub fn n_clients(&self) -> usize {
         self.tracks.len()
     }
@@ -245,6 +262,32 @@ mod tests {
         b.drop_client(2);
         assert_eq!(b.n_clients(), 1);
         assert!(b.pending(2).is_none());
+    }
+
+    #[test]
+    fn transferred_track_completes_on_the_destination_buffer() {
+        let mut a = buf();
+        let mut b = buf();
+        // one completed transition and a live pending decision on `a`
+        a.set_pending(1, pend(0, 0));
+        a.on_frame(1, 0, 1, true, -1.0, false, false);
+        a.set_pending(1, pend(0, 1));
+        assert!(a.transfer_client_to(1, &mut b));
+        assert_eq!(a.n_clients(), 0);
+        assert!(b.pending(1).is_some());
+        // the successor frame lands on `b` and completes the migrated
+        // pending step — nothing dropped, no chain cut, on either side
+        assert_eq!(
+            b.on_frame(1, 0, 2, true, -2.0, false, false),
+            FrameDisposition::Completed { full: false }
+        );
+        assert_eq!(b.completed, 1);
+        assert_eq!(a.dropped_incomplete + b.dropped_incomplete, 0);
+        assert_eq!(a.chain_cuts + b.chain_cuts, 0);
+        let ro = b.rollout_mut(1).unwrap();
+        assert_eq!(ro.rew, vec![-1.0, -2.0]);
+        // no track, nothing to move
+        assert!(!a.transfer_client_to(9, &mut b));
     }
 
     #[test]

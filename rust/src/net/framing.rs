@@ -198,6 +198,13 @@ pub struct Hello {
     /// set by the fleet gateway (and by shard servers in their hello acks)
     /// so clients and health probes can observe placement.
     pub shard: Option<u16>,
+    /// Topology epoch this placement was computed under (DESIGN.md §10).
+    /// `None` on a client's first hello; the gateway stamps its current
+    /// epoch into every ack and re-route, and a client echoes the last
+    /// epoch it saw so servers can refuse stale or forged re-route
+    /// instructions. Encodes as extended shard tags (2/3), so a hello
+    /// without an epoch is byte-identical to the pre-epoch format.
+    pub epoch: Option<u64>,
 }
 
 /// Response carrying codec feedback — the ack half of the rate-control
@@ -358,12 +365,23 @@ impl Msg {
                 out.push(h.split as u8);
                 out.push(h.codec);
                 out.push(h.caps);
-                match h.shard {
-                    Some(s) => {
+                // tag 0/1: the pre-epoch layout, byte-for-byte; tags 2/3
+                // extend it with the topology epoch (DESIGN.md §10)
+                match (h.shard, h.epoch) {
+                    (None, None) => out.push(0),
+                    (Some(s), None) => {
                         out.push(1);
                         put_u16(out, s);
                     }
-                    None => out.push(0),
+                    (Some(s), Some(e)) => {
+                        out.push(2);
+                        put_u16(out, s);
+                        put_u64(out, e);
+                    }
+                    (None, Some(e)) => {
+                        out.push(3);
+                        put_u64(out, e);
+                    }
                 }
             }
             Msg::Request(r) => match &r.payload {
@@ -492,12 +510,17 @@ impl Msg {
                 let split = r.take(1)?[0] != 0;
                 let codec = r.take(1)?[0];
                 let caps = r.take(1)?[0];
-                let shard = match r.take(1)?[0] {
-                    0 => None,
-                    1 => Some(r.u16()?),
+                let (shard, epoch) = match r.take(1)?[0] {
+                    0 => (None, None),
+                    1 => (Some(r.u16()?), None),
+                    2 => {
+                        let s = r.u16()?;
+                        (Some(s), Some(r.u64()?))
+                    }
+                    3 => (None, Some(r.u64()?)),
                     other => bail!("bad shard tag {other}"),
                 };
-                Msg::Hello(Hello { client, split, codec, caps, shard })
+                Msg::Hello(Hello { client, split, codec, caps, shard, epoch })
             }
             MSG_REQUEST_RAW => {
                 let client = r.u32()?;
@@ -851,15 +874,16 @@ mod tests {
     fn response_and_hello_roundtrip() {
         for msg in [
             Msg::Response(Response { client: 1, id: 9, action: vec![0.5, -1.25] }),
-            Msg::Hello(Hello { client: 12, split: true, codec: 0, caps: 0, shard: None }),
-            Msg::Hello(Hello { client: 12, split: false, codec: 0, caps: 0, shard: None }),
-            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3) }),
+            Msg::Hello(Hello { client: 12, split: true, codec: 0, caps: 0, shard: None, epoch: None }),
+            Msg::Hello(Hello { client: 12, split: false, codec: 0, caps: 0, shard: None, epoch: None }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3), epoch: None }),
             Msg::Hello(Hello {
                 client: 7,
                 split: true,
                 codec: 1,
                 caps: CAP_EXPERIENCE,
                 shard: None,
+                epoch: None,
             }),
             Msg::Hello(Hello {
                 client: 7,
@@ -867,11 +891,69 @@ mod tests {
                 codec: 0,
                 caps: 0,
                 shard: Some(u16::MAX),
+                epoch: None,
+            }),
+            // tag 2: shard + topology epoch (a gateway re-route ack)
+            Msg::Hello(Hello {
+                client: 9,
+                split: true,
+                codec: 1,
+                caps: 0,
+                shard: Some(4),
+                epoch: Some(17),
+            }),
+            Msg::Hello(Hello {
+                client: 9,
+                split: true,
+                codec: 1,
+                caps: 0,
+                shard: Some(0),
+                epoch: Some(u64::MAX),
+            }),
+            // tag 3: epoch only (a client echoing its last-seen epoch)
+            Msg::Hello(Hello {
+                client: 9,
+                split: false,
+                codec: 0,
+                caps: 0,
+                shard: None,
+                epoch: Some(1),
             }),
         ] {
             let enc = msg.encode();
             assert_eq!(Msg::decode(&enc[4..]).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn epochless_hello_keeps_the_pre_epoch_wire_layout() {
+        // tags 0 and 1 must stay byte-identical to the format before the
+        // epoch extension, so mixed-version fleets interoperate
+        let none = Msg::Hello(Hello {
+            client: 0x0403_0201,
+            split: true,
+            codec: 1,
+            caps: 2,
+            shard: None,
+            epoch: None,
+        })
+        .encode();
+        assert_eq!(&none[4..], &[MSG_HELLO, 1, 2, 3, 4, 1, 1, 2, 0]);
+        let pinned = Msg::Hello(Hello {
+            client: 0x0403_0201,
+            split: true,
+            codec: 1,
+            caps: 2,
+            shard: Some(0x0605),
+            epoch: None,
+        })
+        .encode();
+        assert_eq!(&pinned[4..], &[MSG_HELLO, 1, 2, 3, 4, 1, 1, 2, 1, 5, 6]);
+        // and a truncated epoch body (tag 2 without the 8 epoch bytes)
+        // must reject, not under-read
+        let mut bad = pinned[4..].to_vec();
+        bad[8] = 2; // claim tag 2, supply no epoch
+        assert!(Msg::decode(&bad).is_err());
     }
 
     #[test]
@@ -1042,7 +1124,7 @@ mod tests {
     #[test]
     fn encode_into_reuses_buffer_and_matches_encode() {
         let msgs = [
-            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3) }),
+            Msg::Hello(Hello { client: 7, split: true, codec: 1, caps: 0, shard: Some(3), epoch: None }),
             Msg::Request(Request {
                 client: 1,
                 id: 2,

@@ -100,7 +100,9 @@ impl LimitsConfig {
     // checks) for each message type at this config's maxima. Layouts
     // mirror `Msg::encode_into` exactly.
     fn hello_cap(&self) -> usize {
-        1 + 4 + 1 + 1 + 1 + 1 + 2
+        // type + client + split + codec + caps + shard tag + shard id
+        // + topology epoch (tag 2, the largest Hello layout)
+        1 + 4 + 1 + 1 + 1 + 1 + 2 + 8
     }
     fn raw_cap(&self) -> usize {
         1 + 4 + 8 + 2 + 4 * self.max_obs_x as usize * self.max_obs_x as usize
@@ -234,6 +236,16 @@ pub struct SessionGate {
     pub pre_hello_bytes: u64,
     /// undecodable frames over the connection lifetime
     pub decode_errors: u32,
+    /// the server's current topology epoch (0 = not fleet-fronted; epoch
+    /// validation of client hellos is disabled and acks carry no epoch)
+    topology_epoch: u64,
+    /// highest epoch this session has presented and had accepted — the
+    /// watermark a replayed pre-migration hello cannot regress below
+    session_epoch: u64,
+    /// hellos refused for a stale, regressed, or forged topology epoch
+    /// (refused, not quarantined: a client racing a migration retries
+    /// with the fresh epoch from its re-route ack)
+    pub epoch_rejects: u32,
 }
 
 impl SessionGate {
@@ -245,7 +257,30 @@ impl SessionGate {
             limits,
             pre_hello_bytes: 0,
             decode_errors: 0,
+            topology_epoch: 0,
+            session_epoch: 0,
+            epoch_rejects: 0,
         }
+    }
+
+    /// Adopt the fleet's current topology epoch (bumped on every shard
+    /// add/remove/state change). Once nonzero, epoch-carrying hellos are
+    /// validated against it and acks stamp it back to the client.
+    pub fn set_topology_epoch(&mut self, epoch: u64) {
+        self.topology_epoch = epoch;
+    }
+
+    /// The gate a migrated session starts with on its new shard
+    /// (DESIGN.md §10): budgets and negotiation state reset — the new
+    /// shard saw none of the old shard's frames, so the old shard's
+    /// decode-error budget must not follow the session — but the epoch
+    /// watermarks carry, so a replayed pre-migration hello cannot
+    /// re-route the session backwards.
+    pub fn migrate(&self) -> SessionGate {
+        let mut g = SessionGate::new(self.cfg.clone());
+        g.topology_epoch = self.topology_epoch;
+        g.session_epoch = self.session_epoch;
+        g
     }
 
     pub fn state(&self) -> &GateState {
@@ -266,15 +301,29 @@ impl SessionGate {
     /// the ack to send: the codec id is echoed only if the server knows
     /// it (unknown ids decline to flat), and the capability bits are
     /// masked down to `caps_mask`. A quarantined session gets no ack.
+    ///
+    /// A hello carrying a topology epoch is validated first (DESIGN.md
+    /// §10): an epoch behind the server's, ahead of the server's (a
+    /// forged mid-migration re-route), or behind the session's own
+    /// watermark is refused — no ack, no state change, no quarantine.
     pub fn on_hello(&mut self, h: &Hello, caps_mask: u8, shard: Option<u16>) -> Option<Hello> {
         if self.quarantined() {
             return None;
+        }
+        if let Some(e) = h.epoch {
+            let stale_or_forged = self.topology_epoch > 0 && e != self.topology_epoch;
+            if stale_or_forged || e < self.session_epoch {
+                self.epoch_rejects = self.epoch_rejects.saturating_add(1);
+                return None;
+            }
+            self.session_epoch = e;
         }
         let codec = if crate::codec::CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
         let caps = h.caps & caps_mask;
         self.state = GateState::Ready { split: h.split, codec, caps };
         self.limits = FrameLimits::negotiated(h.split, &self.cfg);
-        Some(Hello { client: h.client, split: h.split, codec, caps, shard })
+        let epoch = (self.topology_epoch > 0).then_some(self.topology_epoch);
+        Some(Hello { client: h.client, split: h.split, codec, caps, shard, epoch })
     }
 
     /// True if the negotiated capability set includes `cap` (always false
@@ -374,7 +423,7 @@ mod tests {
         let cfg = LimitsConfig { max_obs_x: 8, max_feat_elems: 12, max_action_dim: 3, ..LimitsConfig::default() };
         let l = FrameLimits::pre_hello(&cfg);
         let cases = [
-            Msg::Hello(Hello { client: 1, split: true, codec: 1, caps: 1, shard: Some(3) }),
+            Msg::Hello(Hello { client: 1, split: true, codec: 1, caps: 1, shard: Some(3), epoch: None }),
             Msg::Request(Request {
                 client: 1,
                 id: 1,
@@ -457,7 +506,7 @@ mod tests {
     fn gate_negotiation_echoes_known_codecs_and_masks_caps() {
         let mut g = SessionGate::new(LimitsConfig::default());
         assert_eq!(*g.state(), GateState::PreHello);
-        let h = Hello { client: 9, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None };
+        let h = Hello { client: 9, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None, epoch: None };
         let ack = g.on_hello(&h, CAP_EXPERIENCE, Some(2)).unwrap();
         assert_eq!(ack.codec, 1);
         assert_eq!(ack.caps, CAP_EXPERIENCE);
@@ -466,7 +515,7 @@ mod tests {
 
         // unknown codec id declines to flat; a zero mask clears the caps
         let mut g = SessionGate::new(LimitsConfig::default());
-        let h = Hello { client: 9, split: true, codec: 77, caps: CAP_EXPERIENCE, shard: None };
+        let h = Hello { client: 9, split: true, codec: 77, caps: CAP_EXPERIENCE, shard: None, epoch: None };
         let ack = g.on_hello(&h, 0, None).unwrap();
         assert_eq!(ack.codec, 0);
         assert_eq!(ack.caps, 0);
@@ -478,7 +527,7 @@ mod tests {
         let cfg = LimitsConfig::default();
         let mut g = SessionGate::new(cfg.clone());
         g.on_hello(
-            &Hello { client: 1, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None },
+            &Hello { client: 1, split: true, codec: 1, caps: CAP_EXPERIENCE, shard: None, epoch: None },
             CAP_EXPERIENCE,
             None,
         )
@@ -487,7 +536,7 @@ mod tests {
         assert!(g.admit(MSG_REQUEST_RAW, 64).is_err(), "split session must not ship raw frames");
         // a mid-session capability flip takes effect immediately
         g.on_hello(
-            &Hello { client: 1, split: true, codec: 1, caps: 0, shard: None },
+            &Hello { client: 1, split: true, codec: 1, caps: 0, shard: None, epoch: None },
             CAP_EXPERIENCE,
             None,
         )
@@ -515,7 +564,7 @@ mod tests {
         // quarantine is sticky: no frames, no hello, no ack
         assert!(g.admit(MSG_HELLO, 11).is_err());
         assert!(g
-            .on_hello(&Hello { client: 1, split: false, codec: 0, caps: 0, shard: None }, 0, None)
+            .on_hello(&Hello { client: 1, split: false, codec: 0, caps: 0, shard: None, epoch: None }, 0, None)
             .is_none());
     }
 
@@ -529,6 +578,119 @@ mod tests {
         assert!(g.on_decode_error(), "fourth malformed frame exceeds a budget of 3");
         assert!(g.quarantined());
         assert!(g.admit(MSG_HELLO, 11).is_err());
+    }
+
+    #[test]
+    fn epoch_carrying_hellos_validate_against_the_topology_epoch() {
+        let mut g = SessionGate::new(LimitsConfig::default());
+        g.set_topology_epoch(5);
+        let hello = |e: Option<u64>| Hello {
+            client: 1,
+            split: true,
+            codec: 1,
+            caps: 0,
+            shard: None,
+            epoch: e,
+        };
+        // matching epoch negotiates and the ack stamps the server's epoch
+        let ack = g.on_hello(&hello(Some(5)), 0, Some(2)).expect("current epoch must ack");
+        assert_eq!(ack.epoch, Some(5));
+        assert_eq!(ack.shard, Some(2));
+        // a stale epoch (behind the topology) is refused without quarantine
+        assert!(g.on_hello(&hello(Some(4)), 0, None).is_none());
+        assert_eq!(g.epoch_rejects, 1);
+        assert!(!g.quarantined(), "epoch refusal must not quarantine");
+        // a forged future epoch (mid-migration re-route) is refused too
+        assert!(g.on_hello(&hello(Some(9)), 0, None).is_none());
+        assert_eq!(g.epoch_rejects, 2);
+        // an epoch-less hello still negotiates (legacy clients) and the
+        // ack carries the fleet epoch forward
+        let ack = g.on_hello(&hello(None), 0, None).expect("legacy hello must ack");
+        assert_eq!(ack.epoch, Some(5));
+    }
+
+    #[test]
+    fn session_epoch_watermark_refuses_regression_even_without_a_fleet() {
+        // topology_epoch 0 (shard-direct server): stale/forged checks are
+        // off, but a session that presented epoch 7 can never present a
+        // smaller one — a replayed pre-migration hello must not re-route
+        // the session backwards
+        let mut g = SessionGate::new(LimitsConfig::default());
+        let hello = |e: u64| Hello {
+            client: 1,
+            split: false,
+            codec: 0,
+            caps: 0,
+            shard: None,
+            epoch: Some(e),
+        };
+        assert!(g.on_hello(&hello(7), 0, None).is_some());
+        // the ack carries no epoch when the server is not fleet-fronted
+        assert_eq!(g.on_hello(&hello(7), 0, None).unwrap().epoch, None);
+        assert!(g.on_hello(&hello(3), 0, None).is_none(), "regressed epoch accepted");
+        assert_eq!(g.epoch_rejects, 1);
+        assert!(!g.quarantined());
+        assert!(g.on_hello(&hello(8), 0, None).is_some(), "advancing epoch must recover");
+    }
+
+    #[test]
+    fn migrated_gate_resets_budgets_but_keeps_the_epoch_watermark() {
+        // the satellite-2 regression: decode-error budgets must NOT follow
+        // a session across a migration — the new shard saw none of the old
+        // shard's frames
+        let cfg = LimitsConfig { max_decode_errors: 3, ..LimitsConfig::default() };
+        let mut g = SessionGate::new(cfg);
+        g.set_topology_epoch(2);
+        assert!(g
+            .on_hello(
+                &Hello {
+                    client: 4,
+                    split: true,
+                    codec: 1,
+                    caps: 0,
+                    shard: None,
+                    epoch: Some(2)
+                },
+                0,
+                Some(0),
+            )
+            .is_some());
+        for _ in 0..3 {
+            assert!(!g.on_decode_error());
+        }
+        assert_eq!(g.decode_errors, 3, "one error away from quarantine");
+
+        // migrate: fresh budgets, fresh negotiation state...
+        let mut m = g.migrate();
+        assert_eq!(m.decode_errors, 0, "decode-error budget carried over the migration");
+        assert_eq!(m.pre_hello_bytes, 0);
+        assert_eq!(*m.state(), GateState::PreHello, "the new shard renegotiates from scratch");
+        assert!(!m.on_decode_error(), "a fresh budget must absorb a chain-break error");
+        // ...but the epoch watermark survives: the old shard's accepted
+        // epoch still bounds what the session may present
+        assert!(
+            m.on_hello(
+                &Hello {
+                    client: 4,
+                    split: true,
+                    codec: 1,
+                    caps: 0,
+                    shard: None,
+                    epoch: Some(1)
+                },
+                0,
+                Some(1),
+            )
+            .is_none(),
+            "pre-migration epoch replay accepted on the new shard"
+        );
+        assert_eq!(m.epoch_rejects, 1);
+        // and a quarantined gate migrates into a *serving* gate — the
+        // quarantine was the old shard's verdict on the old budget
+        assert!(g.on_decode_error());
+        assert!(g.quarantined());
+        let m2 = g.migrate();
+        assert!(!m2.quarantined());
     }
 
     #[test]

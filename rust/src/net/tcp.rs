@@ -127,7 +127,7 @@ mod tests {
     #[test]
     fn roundtrip_over_a_buffer() {
         let msgs = vec![
-            Msg::Hello(Hello { client: 1, split: true, codec: 0, caps: 0, shard: None }),
+            Msg::Hello(Hello { client: 1, split: true, codec: 0, caps: 0, shard: None, epoch: None }),
             Msg::Request(Request {
                 client: 1,
                 id: 1,
@@ -180,7 +180,7 @@ mod tests {
 
     #[test]
     fn write_frame_matches_write_msg() {
-        let msg = Msg::Hello(Hello { client: 2, split: true, codec: 1, caps: 0, shard: Some(1) });
+        let msg = Msg::Hello(Hello { client: 2, split: true, codec: 1, caps: 0, shard: Some(1), epoch: None });
         let mut a = Vec::new();
         write_msg(&mut a, &msg).unwrap();
         let mut b = Vec::new();

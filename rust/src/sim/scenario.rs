@@ -76,6 +76,13 @@ pub enum FaultCmd {
     CutShardUplinkMidFrame(usize),
     /// integrate the shard's thermal model to now and log temp/throttle
     SampleThermal(usize),
+    /// elastic scale-up: a pre-provisioned spare joins the ring with
+    /// fresh state and the moved keyspace migrates onto it
+    AddShard(usize),
+    /// elastic scale-down: the shard leaves the ring, its pinned sessions
+    /// drain through the migration state machine, and it keeps answering
+    /// in-flight work until every handoff completes
+    RemoveShard(usize),
 }
 
 /// Online-learning mode (DESIGN.md §8): appended learning clients stream
@@ -281,6 +288,8 @@ pub struct ClientOutcome {
     pub latest_version_seen: u64,
     /// explicit `ERR_OVERLOADED` sheds observed (admission or rate caps)
     pub overload_rejections: u64,
+    /// highest topology epoch stamped on an accepted hello ack
+    pub topology_epoch: u64,
 }
 
 #[derive(Debug, Default)]
@@ -349,6 +358,11 @@ pub struct GatewayOutcome {
     pub quarantined_sessions: u64,
     /// frames from quarantined connections dropped unread
     pub quarantine_drops: u64,
+    /// completed session handoffs (exactly one per migration entry)
+    pub migrations: u64,
+    /// handoffs that completed via a quiescent drain (state transferred);
+    /// the remainder were forced by a crash or cut mid-migration
+    pub drained_handoffs: u64,
 }
 
 #[derive(Debug)]
@@ -402,6 +416,14 @@ impl ScenarioReport {
     /// `ERR_OVERLOADED` sheds observed across every client.
     pub fn total_overload_rejections(&self) -> u64 {
         self.clients.iter().map(|c| c.overload_rejections).sum()
+    }
+
+    /// Experience transitions lost anywhere in the fleet: reward-bearing
+    /// frames that found no matching pending decision. A planned
+    /// scale-down must keep this at zero — the migration handoff moves
+    /// the pending track instead of dropping it at the seam.
+    pub fn total_dropped_transitions(&self) -> u64 {
+        self.shards.iter().map(|s| s.dropped_incomplete).sum()
     }
 
     /// Sessions quarantined anywhere: gateway frame-error budgets plus
@@ -573,10 +595,26 @@ struct ShardSim {
     out: ShardOutcome,
 }
 
+/// One session mid-handoff (DESIGN.md §10): requests keep draining
+/// through `from` until its last in-flight reply lands (or it dies),
+/// then the pin moves to `to` and every per-session layer is
+/// re-established there under the recorded topology epoch.
+#[derive(Debug, Clone, Copy)]
+struct MigrationSim {
+    from: usize,
+    to: usize,
+    epoch: u64,
+}
+
 struct GatewaySim {
     topology: Topology,
     /// live pin per session (hello-established, request-consulted)
     pins: BTreeMap<u32, usize>,
+    /// outstanding forwarded-but-unanswered requests per session — the
+    /// quiescence ledger the migration state machine drains against
+    inflight: BTreeMap<u32, u32>,
+    /// sessions mid-handoff, keyed by session id
+    migrations: BTreeMap<u32, MigrationSim>,
     /// last placement per session, for the reassignment counter
     last_assign: BTreeMap<u32, usize>,
     /// versioned policy store: shard publications land here and fan back
@@ -638,6 +676,19 @@ fn checksum_action(frame: &[u8]) -> f32 {
     0.25 + (sum % 251) as f32 * 1e-3
 }
 
+/// Disjoint mutable borrows of two distinct shard slots, for the
+/// migration handoff's old→new state transfer.
+fn two_shards(shards: &mut [ShardSim], a: usize, b: usize) -> (&mut ShardSim, &mut ShardSim) {
+    assert_ne!(a, b, "a handoff needs two distinct shards");
+    if a < b {
+        let (l, r) = shards.split_at_mut(b);
+        (&mut l[a], &mut r[0])
+    } else {
+        let (l, r) = shards.split_at_mut(a);
+        (&mut r[0], &mut l[b])
+    }
+}
+
 /// Run one scenario to completion. See the module docs for the model.
 pub fn run_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
     let mut w = World::new(cfg.clone())?;
@@ -680,21 +731,39 @@ impl World {
         let mut net = SimNet::new(cfg.seed);
         let mut owners = Vec::new();
         let mut topology = Topology::new(32);
-        let mut shards = Vec::with_capacity(cfg.shards);
-        for s in 0..cfg.shards {
+        // spare capacity is provisioned up front (lanes, slots) so the
+        // owner table and lane ids are identical whether or not a timed
+        // AddShard ever fires: spares start dead and outside the ring,
+        // and joining later is a state change, not a topology-of-the-sim
+        // change — determinism never depends on the fault plan's timing
+        let provisioned = cfg
+            .faults
+            .iter()
+            .filter_map(|(_, f)| match f {
+                FaultCmd::AddShard(s) => Some(*s + 1),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+            .max(cfg.shards);
+        let mut shards = Vec::with_capacity(provisioned);
+        for s in 0..provisioned {
+            let live = s < cfg.shards;
             let name = format!("shard-{s}");
             let up = net.lane("gw", &name, cfg.shard_link);
             owners.push(Owner::Shard(s));
             let down = net.lane(&name, "gw", cfg.shard_link);
             owners.push(Owner::GatewayFromShard(s));
-            topology.add_shard(
-                ShardId(s as u16),
-                format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
-            );
+            if live {
+                topology.add_shard(
+                    ShardId(s as u16),
+                    format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
+                );
+            }
             shards.push(ShardSim {
                 up,
                 down,
-                alive: true,
+                alive: live,
                 incarnation: 0,
                 collector: BatchCollector::new(cfg.policy, cfg.max_depth),
                 sessions: SessionManager::new(),
@@ -790,7 +859,6 @@ impl World {
                 out: ClientOutcome { hello_acks: vec![0], ..ClientOutcome::default() },
             });
         }
-        let n_shards = cfg.shards;
         // a constant-mixed fork of the scenario seed: the backoff jitter
         // stream is independent of the transport's, so enabling admission
         // control never perturbs link-level draws
@@ -807,6 +875,8 @@ impl World {
             gw: GatewaySim {
                 topology,
                 pins: BTreeMap::new(),
+                inflight: BTreeMap::new(),
+                migrations: BTreeMap::new(),
                 last_assign: BTreeMap::new(),
                 store: PolicyStore::new(),
                 resynced: BTreeMap::new(),
@@ -814,8 +884,8 @@ impl World {
                 quarantined: BTreeSet::new(),
                 out: GatewayOutcome::default(),
             },
-            probe_stats: vec![ProbeStats::default(); n_shards],
-            partitioned: vec![false; n_shards],
+            probe_stats: vec![ProbeStats::default(); provisioned],
+            partitioned: vec![false; provisioned],
             n_events: 0,
             rng,
         })
@@ -867,8 +937,10 @@ impl World {
     }
 
     fn finish(self) -> ScenarioReport {
+        // spares never added and shards removed mid-run are outside the
+        // ring: report them Down rather than panicking on the lookup
         let shard_states = (0..self.shards.len())
-            .map(|s| self.gw.topology.state(ShardId(s as u16)).unwrap())
+            .map(|s| self.gw.topology.state(ShardId(s as u16)).unwrap_or(ShardState::Down))
             .collect();
         let drained = (0..self.shards.len())
             .map(|s| self.gw.topology.drained(ShardId(s as u16)))
@@ -960,6 +1032,7 @@ impl World {
             codec,
             caps,
             shard: None,
+            epoch: None,
         }));
         self.log.record(t, "hello", &format!("client={c} epoch={epoch}"));
         self.net.send(up, t, &body, &mut self.log);
@@ -1347,6 +1420,14 @@ impl World {
                 }
                 let e = cl.epoch as usize;
                 cl.out.hello_acks[e] += 1;
+                // the gateway stamps its topology epoch into every ack;
+                // clients track the high-water mark so scenarios can prove
+                // scale events actually propagated to the edge
+                if let Some(te) = h.epoch {
+                    if te > cl.out.topology_epoch {
+                        cl.out.topology_epoch = te;
+                    }
+                }
                 if cl.out.hello_acks[e] == 1 {
                     // an accepted hello resets the overload backoff ladder
                     cl.overload_attempts = 0;
@@ -1582,6 +1663,8 @@ impl World {
 
     /// Close a session's live pin (client finished or gave up).
     fn gateway_unpin(&mut self, t: f64, session: u32) {
+        self.gw.migrations.remove(&session);
+        self.gw.inflight.remove(&session);
         if let Some(s) = self.gw.pins.remove(&session) {
             self.gw.topology.conn_closed(ShardId(s as u16));
             self.log
@@ -1594,6 +1677,12 @@ impl World {
         if let Some(prev) = self.gw.pins.remove(&session) {
             self.gw.topology.conn_closed(ShardId(prev as u16));
         }
+        // a re-hello supersedes any in-flight drain: the old socket (and
+        // every reply it owed) is gone, and fresh placement under the
+        // current epoch IS the handoff — the shard-side hello invalidates
+        // the decoder base exactly as a drained migration would
+        self.gw.migrations.remove(&session);
+        self.gw.inflight.remove(&session);
         // admission control: past the session bound the hello is shed with
         // an explicit ERR_OVERLOADED frame instead of stalling the fleet —
         // the client backs off and retries (a re-hello from a pinned
@@ -1644,6 +1733,9 @@ impl World {
             codec,
             caps,
             shard: Some(s as u16),
+            // the placement's epoch rides the ack (DESIGN.md §10): a
+            // client holding this ack can prove which topology assigned it
+            epoch: Some(self.gw.topology.epoch()),
         }));
         let down = self.clients[session as usize].down;
         self.net.send(down, t, &ack, &mut self.log);
@@ -1656,17 +1748,35 @@ impl World {
                 codec: h.codec,
                 caps: h.caps,
                 shard: None,
+                epoch: None,
             }));
             self.net.send(up, t, &fwd, &mut self.log);
         }
     }
 
     fn gateway_request(&mut self, t: f64, session: u32, body: &[u8]) {
+        // a migrating session keeps draining through its old shard until
+        // the last in-flight reply lands; if the old shard died or lost
+        // its trunk first, the handoff is forced and the request follows
+        // the new pin below
+        if let Some(from) = self.gw.migrations.get(&session).map(|m| m.from) {
+            if self.shards[from].alive && self.net.is_open(self.shards[from].up) {
+                self.gw.out.forwarded_requests += 1;
+                *self.gw.inflight.entry(session).or_insert(0) += 1;
+                let up = self.shards[from].up;
+                self.net.send(up, t, body, &mut self.log);
+                return;
+            }
+            self.finish_migration(t, session, false);
+        }
         let pinned = self.gw.pins.get(&session).copied();
         let usable = |w: &World, s: usize| {
             w.shards[s].alive
                 && w.net.is_open(w.shards[s].up)
-                && w.gw.topology.state(ShardId(s as u16)) != Some(ShardState::Down)
+                && w.gw
+                    .topology
+                    .state(ShardId(s as u16))
+                    .is_some_and(|st| st != ShardState::Down)
         };
         let s = match pinned {
             Some(s) if usable(self, s) => s,
@@ -1692,6 +1802,7 @@ impl World {
             }
         };
         self.gw.out.forwarded_requests += 1;
+        *self.gw.inflight.entry(session).or_insert(0) += 1;
         let up = self.shards[s].up;
         self.net.send(up, t, body, &mut self.log);
     }
@@ -1713,6 +1824,20 @@ impl World {
             self.gw.topology.conn_closed(ShardId(s as u16));
         }
         self.log.record(t, "trunk_lost", &format!("shard={s}"));
+        // crash mid-drain: replies owed by the old shard will never land,
+        // so every handoff draining through it completes now, forced — a
+        // migrating session ends up pinned to exactly one live shard, and
+        // the sequence discipline re-grounds its stream there
+        let stuck: Vec<u32> = self
+            .gw
+            .migrations
+            .iter()
+            .filter(|(_, m)| m.from == s)
+            .map(|(&k, _)| k)
+            .collect();
+        for session in stuck {
+            self.finish_migration(t, session, false);
+        }
     }
 
     /// A shard published a policy up its trunk: assign the fleet-wide
@@ -1770,9 +1895,125 @@ impl World {
             }
         }
         self.gw.out.forwarded_responses += 1;
+        let session = r.client;
         let down = self.clients[r.client as usize].down;
         let body = msg_body(&Msg::ResponseLearn(r));
         self.net.send(down, t, &body, &mut self.log);
+        self.gateway_response_landed(t, session);
+    }
+
+    // -- migration (DESIGN.md §10) ------------------------------------------
+
+    /// The epoch-versioned migration sweep: after a topology change,
+    /// re-route every pinned session through the new ring. Sessions whose
+    /// placement moved enter the per-session drain state machine; already
+    /// quiescent sessions hand off immediately. Consistent hashing keeps
+    /// the sweep surgical — only the changed shard's keyspace moves.
+    fn migrate_sessions(&mut self, t: f64, why: &str) {
+        let epoch = self.gw.topology.epoch();
+        let sessions: Vec<u32> = self.gw.pins.keys().copied().collect();
+        let mut moved = 0usize;
+        for session in sessions {
+            let cur = self.gw.pins[&session];
+            let Some(to) = self.gw.topology.route(session).map(|sh| sh.id.0 as usize) else {
+                // nothing routable: drop the pin; the client's timeout
+                // path re-hellos once capacity returns
+                self.gw.out.no_route += 1;
+                self.gateway_unpin(t, session);
+                continue;
+            };
+            if let Some(m) = self.gw.migrations.get_mut(&session) {
+                // already draining: retarget under the newer epoch
+                m.to = to;
+                m.epoch = epoch;
+                continue;
+            }
+            if to == cur {
+                continue;
+            }
+            moved += 1;
+            self.gw.migrations.insert(session, MigrationSim { from: cur, to, epoch });
+            self.log.record(
+                t,
+                "migrate_start",
+                &format!("session={session} {cur}->{to} epoch={epoch} why={why}"),
+            );
+            if self.gw.inflight.get(&session).copied().unwrap_or(0) == 0 {
+                self.finish_migration(t, session, true);
+            }
+        }
+        self.log
+            .record(t, "migration_sweep", &format!("moved={moved} epoch={epoch} why={why}"));
+    }
+
+    /// Complete one session handoff: re-pin to the target shard and
+    /// re-establish every per-session layer there — the decoder base is
+    /// invalidated (the next frame is refused, forcing exactly one
+    /// keyframe re-sync), the gateway frame-error budget starts fresh
+    /// (the `SessionGate::migrate` rule: budgets never survive the move),
+    /// and on a clean drain the learning track (pending transition +
+    /// partial rollout) transfers so no experience is lost. The old
+    /// shard releases whatever it still holds for the session.
+    fn finish_migration(&mut self, t: f64, session: u32, drained: bool) {
+        let Some(m) = self.gw.migrations.remove(&session) else { return };
+        self.gw.inflight.remove(&session);
+        let (from, to) = (m.from, m.to);
+        let mut track = false;
+        if from != to && self.shards[from].alive {
+            if drained {
+                let (src, dst) = two_shards(&mut self.shards, from, to);
+                if let (Some(a), Some(b)) = (src.learn.as_mut(), dst.learn.as_mut()) {
+                    track = a.buf.transfer_client_to(session, &mut b.buf);
+                }
+            } else if let Some(l) = self.shards[from].learn.as_mut() {
+                // forced handoff: the old shard's view of the trajectory
+                // is no longer trustworthy — drop it rather than migrate
+                // it; the stream re-grounds via the sequence discipline
+                l.buf.drop_client(session);
+            }
+            self.shards[from].codecs.disconnect(session);
+            self.shards[from].sessions.disconnect(session);
+            self.shards[from].quarantined.remove(&session);
+        }
+        // the new shard must never ground a delta on a base it never saw:
+        // invalidate → next frame refused → need_keyframe → exactly one
+        // forced keyframe per handoff (the bounded re-sync storm)
+        self.shards[to].codecs.invalidate(session);
+        self.gw.errors.remove(&(session as usize));
+        if self.gw.pins.get(&session) == Some(&from) {
+            self.gw.topology.conn_closed(ShardId(from as u16));
+        }
+        self.gw.topology.conn_opened(ShardId(to as u16));
+        self.gw.pins.insert(session, to);
+        if self.gw.last_assign.insert(session, to) != Some(to) {
+            self.gw.out.reassigned += 1;
+        }
+        self.gw.out.migrations += 1;
+        if drained {
+            self.gw.out.drained_handoffs += 1;
+        }
+        self.log.record(
+            t,
+            "migrate",
+            &format!(
+                "session={session} {from}->{to} epoch={} drained={drained} track={track}",
+                m.epoch
+            ),
+        );
+    }
+
+    /// A reply crossed back down to its client: settle the per-session
+    /// in-flight ledger. A migrating session whose ledger hits zero is
+    /// quiescent — its drain is over and the handoff completes cleanly.
+    fn gateway_response_landed(&mut self, t: f64, session: u32) {
+        let Some(n) = self.gw.inflight.get_mut(&session) else { return };
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            self.gw.inflight.remove(&session);
+            if self.gw.migrations.contains_key(&session) {
+                self.finish_migration(t, session, true);
+            }
+        }
     }
 
     // -- shards -------------------------------------------------------------
@@ -1806,6 +2047,7 @@ impl World {
                     codec,
                     caps,
                     shard: Some(s as u16),
+                    epoch: None,
                 }));
                 let lane = self.reply_lane(s, h.client);
                 self.net.send(lane, t, &ack, &mut self.log);
@@ -2235,6 +2477,12 @@ impl World {
     fn probe_round(&mut self, t: f64) {
         if self.cfg.gateway {
             for s in 0..self.shards.len() {
+                let id = ShardId(s as u16);
+                // spares not yet joined and shards removed from the ring
+                // are outside the fleet: the prober has nothing to drive
+                let Some(cur) = self.gw.topology.state(id) else {
+                    continue;
+                };
                 let reachable = self.shards[s].alive
                     && !self.partitioned[s]
                     && self.net.is_open(self.shards[s].up)
@@ -2254,8 +2502,6 @@ impl World {
                     }
                 }
                 let consecutive = st.consecutive_failures;
-                let id = ShardId(s as u16);
-                let cur = self.gw.topology.state(id).unwrap();
                 if let Some(next) = probe_transition(cur, rtt, consecutive, &self.cfg.health) {
                     self.gw.topology.set_state(id, next);
                     self.log.record(
@@ -2332,6 +2578,77 @@ impl World {
             FaultCmd::CutShardUplinkMidFrame(s) => {
                 let up = self.shards[s].up;
                 self.net.cut(up, true, t, &mut self.log);
+            }
+            FaultCmd::AddShard(s) => {
+                if self.gw.topology.state(ShardId(s as u16)).is_some() {
+                    // already in the ring: joining is not re-entrant
+                    self.log.record(t, "add_shard_noop", &format!("shard={s}"));
+                    return;
+                }
+                let policy = self.cfg.policy;
+                let max_depth = self.cfg.max_depth;
+                let learn_spec = self.cfg.learning.as_ref().map(|sp| sp.learner.clone());
+                // the pre-provisioned spare boots with fresh state, exactly
+                // like a restart: nothing from any earlier incarnation
+                // (decoder bases, sessions, quarantine verdicts) survives
+                let sh = &mut self.shards[s];
+                sh.alive = true;
+                sh.incarnation += 1;
+                sh.collector = BatchCollector::new(policy, max_depth);
+                sh.sessions = SessionManager::new();
+                sh.codecs = Decoders::new();
+                sh.learn = learn_spec.map(Learner::new);
+                sh.quarantined.clear();
+                sh.busy_until = t;
+                let (up, down) = (sh.up, sh.down);
+                self.net.reopen(up, t, &mut self.log);
+                self.net.reopen(down, t, &mut self.log);
+                self.gw.topology.add_shard(
+                    ShardId(s as u16),
+                    format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
+                );
+                self.log.record(
+                    t,
+                    "fault_add_shard",
+                    &format!("shard={s} epoch={}", self.gw.topology.epoch()),
+                );
+                if self.cfg.gateway {
+                    // a joining shard acts at policy version 0: push the
+                    // fleet-latest snapshot down its trunk immediately so
+                    // it never serves archaic actions to migrated sessions
+                    let snap = self.gw.store.snapshot();
+                    if !snap.params.is_empty() {
+                        self.gw.out.policy_resyncs += 1;
+                        let body = msg_body(&Msg::Policy(PolicySync {
+                            version: snap.version,
+                            params: snap.params.clone(),
+                        }));
+                        let up = self.shards[s].up;
+                        self.net.send(up, t, &body, &mut self.log);
+                        self.log
+                            .record(t, "resync", &format!("shard={s} version={}", snap.version));
+                    }
+                    self.migrate_sessions(t, "scale_up");
+                }
+            }
+            FaultCmd::RemoveShard(s) => {
+                if self.gw.topology.state(ShardId(s as u16)).is_none() {
+                    self.log.record(t, "remove_shard_noop", &format!("shard={s}"));
+                    return;
+                }
+                // planned scale-down: the shard leaves the ring (epoch
+                // bump), its sessions enter the drain state machine, and
+                // the process itself stays up to answer everything still
+                // in flight — nothing new routes to it once its pins move
+                self.gw.topology.remove_shard(ShardId(s as u16));
+                self.log.record(
+                    t,
+                    "fault_remove_shard",
+                    &format!("shard={s} epoch={}", self.gw.topology.epoch()),
+                );
+                if self.cfg.gateway {
+                    self.migrate_sessions(t, "scale_down");
+                }
             }
             FaultCmd::SampleThermal(s) => {
                 let idle_w = self.cfg.thermal.as_ref().map(|sp| sp.idle_watts).unwrap_or(0.0);
@@ -2410,6 +2727,7 @@ impl World {
                         self.gw.out.forwarded_responses += 1;
                         let down = self.clients[r.client as usize].down;
                         self.net.send(down, t, &body, &mut self.log);
+                        self.gateway_response_landed(t, r.client);
                     }
                     Ok(Msg::ResponseV2(r)) => {
                         // codec acks forward verbatim, exactly like v1
@@ -2417,6 +2735,7 @@ impl World {
                         self.gw.out.forwarded_responses += 1;
                         let down = self.clients[r.client as usize].down;
                         self.net.send(down, t, &body, &mut self.log);
+                        self.gateway_response_landed(t, r.client);
                     }
                     Ok(Msg::ResponseLearn(r)) => self.gateway_learn_response(t, s, r),
                     Ok(Msg::Policy(p)) => self.gateway_publish(t, s, p),
@@ -2425,6 +2744,7 @@ impl World {
                         self.gw.out.forwarded_responses += 1;
                         let down = self.clients[e.client as usize].down;
                         self.net.send(down, t, &body, &mut self.log);
+                        self.gateway_response_landed(t, e.client);
                     }
                     Ok(Msg::Request(_)) => {
                         self.log.record(t, "gw_unexpected", &format!("shard={s}"));

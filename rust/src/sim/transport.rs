@@ -542,7 +542,7 @@ mod tests {
     use crate::net::tcp::{read_msg, write_msg};
 
     fn hello(client: u32) -> Msg {
-        Msg::Hello(Hello { client, split: false, codec: 0, caps: 0, shard: None })
+        Msg::Hello(Hello { client, split: false, codec: 0, caps: 0, shard: None, epoch: None })
     }
 
     fn request(client: u32, id: u64, n: usize) -> Msg {

@@ -58,8 +58,9 @@ fn corpus() -> Vec<Vec<u8>> {
             codec: CODEC_DELTA,
             caps: CAP_EXPERIENCE,
             shard: None,
+            epoch: None,
         }),
-        Msg::Hello(Hello { client: 7, split: false, codec: 0, caps: 0, shard: Some(3) }),
+        Msg::Hello(Hello { client: 7, split: false, codec: 0, caps: 0, shard: Some(3), epoch: None }),
         Msg::Request(Request {
             client: 7,
             id: 1,

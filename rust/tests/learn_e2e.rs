@@ -114,6 +114,7 @@ fn unnegotiated_experience_frame_gets_explicit_error() {
             codec: CODEC_DELTA,
             caps: CAP_EXPERIENCE,
             shard: None,
+            epoch: None,
         }),
     )
     .expect("hello");

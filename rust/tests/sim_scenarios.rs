@@ -6,6 +6,7 @@
 //! seed/replay contract. Zero `std::thread::sleep` anywhere on this path:
 //! the whole suite is pure event-queue arithmetic.
 
+use std::collections::BTreeSet;
 use std::time::Duration;
 
 use miniconv::analysis::breakeven::split_wins;
@@ -37,8 +38,8 @@ fn run_and_emit(name: &str, cfg: &ScenarioConfig) -> ScenarioReport {
 
 /// Replicate the scenario runner's consistent-hash placement (the ring is
 /// a pure function of shard ids + vnodes, independent of the seed) to
-/// know which sessions start on shard 1.
-fn sessions_on_shard1(n_clients: usize, shards: usize) -> Vec<u32> {
+/// know which sessions start on `target`.
+fn sessions_on_shard(n_clients: usize, shards: usize, target: u16) -> Vec<u32> {
     let mut t = Topology::new(32);
     for s in 0..shards {
         t.add_shard(
@@ -47,7 +48,47 @@ fn sessions_on_shard1(n_clients: usize, shards: usize) -> Vec<u32> {
         );
     }
     (0..n_clients as u32)
-        .filter(|&s| t.route(s).unwrap().id == ShardId(1))
+        .filter(|&s| t.route(s).unwrap().id == ShardId(target))
+        .collect()
+}
+
+fn sessions_on_shard1(n_clients: usize, shards: usize) -> Vec<u32> {
+    sessions_on_shard(n_clients, shards, 1)
+}
+
+/// Sessions whose placement changes when shard `added` joins a
+/// `shards`-wide ring — the keyspace the newcomer steals, and nothing
+/// else (consistent hashing leaves every other assignment alone).
+fn moved_by_adding_shard(n_clients: usize, shards: usize, added: usize) -> Vec<u32> {
+    let mut before = Topology::new(32);
+    let mut after = Topology::new(32);
+    for s in 0..shards {
+        let addr: std::net::SocketAddr =
+            format!("127.0.0.1:{}", 9000 + s).parse().unwrap();
+        before.add_shard(ShardId(s as u16), addr);
+        after.add_shard(ShardId(s as u16), addr);
+    }
+    after.add_shard(
+        ShardId(added as u16),
+        format!("127.0.0.1:{}", 9000 + added).parse().unwrap(),
+    );
+    (0..n_clients as u32)
+        .filter(|&c| before.route(c).unwrap().id != after.route(c).unwrap().id)
+        .collect()
+}
+
+/// Pull the `session=` ids off every `{tag}` line of the canonical log
+/// (e.g. `migrate_start` / `migrate`), in emission order.
+fn migration_log_sessions(log: &str, tag: &str) -> Vec<u32> {
+    let marker = format!(" {tag} session=");
+    log.lines()
+        .filter_map(|l| l.split_once(marker.as_str()).map(|(_, rest)| rest))
+        .map(|rest| {
+            rest.split_whitespace()
+                .next()
+                .and_then(|tok| tok.parse().ok())
+                .expect("malformed migration log line")
+        })
         .collect()
 }
 
@@ -1050,5 +1091,283 @@ fn jittered_reordering_links_stay_exactly_once_without_retries() {
         assert_eq!(r.clients.iter().map(|c| c.reconnects).sum::<u64>(), 0, "seed {seed}");
         assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0);
         assert!(r.hello_acks_exactly_once(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 19: live scale-up under a flash crowd — a pre-provisioned spare
+// joins the ring mid-crowd (epoch bump), only the keyspace the ring hands
+// it migrates, every drained handoff forces exactly one keyframe re-sync
+// (the bounded storm), and the shed overflow re-admits under the new epoch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scale_up_under_flash_crowd_bounds_the_keyframe_storm() {
+    let n_clients = 32;
+    let decisions = 10;
+    let moved = moved_by_adding_shard(n_clients, 2, 2);
+    assert!(!moved.is_empty(), "adding shard 2 moved no keyspace; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 0,
+            split_clients: n_clients,
+            decisions,
+            feat: (3, 16, 16),
+            pendulum_stream: true,
+            codec: CodecId::Delta,
+            think: 0.05,
+            // the crowd outnumbers admission: 4 sessions shed at t=0 and
+            // re-hello into the grown fleet once capacity frees up
+            gw_max_sessions: 28,
+            faults: vec![(0.25, FaultCmd::AddShard(2))],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("scale_up_flash_crowd", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed scale-up logs diverged");
+
+        // flash crowd half: the overflow was shed explicitly, and backoff
+        // plus the scale-up admitted every client in the end
+        assert!(r.gateway.shed_hellos > 0, "seed {seed}: admission never shed");
+        assert_eq!(r.gateway.shed_hellos, r.total_overload_rejections(), "seed {seed}");
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a shed client starved");
+        let answered: usize = r.clients.iter().map(|c| c.decisions).sum();
+        let rejected: u64 = r.clients.iter().map(|c| c.rejected).sum();
+        assert_eq!(
+            answered as u64 + rejected,
+            (n_clients * decisions) as u64,
+            "seed {seed}: the decision ledger does not balance"
+        );
+
+        // surgical migration: sessions moved exactly once, all of them
+        // inside the keyspace the ring handed to the new shard
+        let started = migration_log_sessions(&r.log, "migrate_start");
+        let finished = migration_log_sessions(&r.log, "migrate");
+        assert!(!finished.is_empty(), "seed {seed}: no session ever migrated");
+        assert_eq!(r.gateway.migrations, finished.len() as u64, "seed {seed}");
+        let unique: BTreeSet<u32> = finished.iter().copied().collect();
+        assert_eq!(unique.len(), finished.len(), "seed {seed}: a session migrated twice");
+        assert_eq!(
+            started.iter().copied().collect::<BTreeSet<u32>>(),
+            unique,
+            "seed {seed}: a migration started without finishing (or vice versa)"
+        );
+        for s in &unique {
+            assert!(
+                moved.contains(s),
+                "seed {seed}: session {s} migrated outside the moved keyspace"
+            );
+        }
+        assert!(r.gateway.migrations as usize <= moved.len(), "seed {seed}");
+        assert_eq!(r.gateway.reassigned, r.gateway.migrations, "seed {seed}");
+        // no crash, no cut: every handoff completed as a quiescent drain
+        assert_eq!(r.gateway.drained_handoffs, r.gateway.migrations, "seed {seed}");
+
+        // the bounded keyframe storm: exactly one initial keyframe per
+        // client plus exactly one forced re-key per handoff — nothing else
+        let keyframes: u64 = r.clients.iter().map(|c| c.keyframes).sum();
+        let need: u64 = r.clients.iter().map(|c| c.need_keyframes).sum();
+        let codec_rejects: u64 = r.shards.iter().map(|s| s.codec_rejects).sum();
+        assert_eq!(need, r.gateway.migrations, "seed {seed}: re-sync storm unbounded");
+        assert_eq!(codec_rejects, need, "seed {seed}");
+        assert_eq!(rejected, need, "seed {seed}");
+        assert_eq!(
+            keyframes,
+            n_clients as u64 + need,
+            "seed {seed}: keyframes beyond one per client + one per handoff"
+        );
+        let mismatches: u64 = r.clients.iter().map(|c| c.payload_mismatches).sum();
+        assert_eq!(mismatches, 0, "seed {seed}: a stale base was silently decoded");
+
+        // the epoch protocol: pre-join placements carry epoch 2, and the
+        // shed clients re-admitted after the join prove epoch 3 reached
+        // the wire
+        assert!(r.clients.iter().all(|c| c.topology_epoch >= 2), "seed {seed}");
+        let max_epoch = r.clients.iter().map(|c| c.topology_epoch).max().unwrap();
+        assert_eq!(max_epoch, 3, "seed {seed}: no hello ack carried the post-join epoch");
+
+        // the newcomer did real work and finished routable
+        assert!(r.shards[2].requests > 0, "seed {seed}: the new shard never served");
+        assert_eq!(r.shard_states[2], ShardState::Up, "seed {seed}");
+        assert_eq!(r.gateway.no_route, 0, "seed {seed}");
+        assert_eq!(r.total_quarantined(), 0, "seed {seed}");
+        assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
+        assert!(r.log.contains(" fault_add_shard "), "seed {seed}");
+        assert!(r.log.contains("why=scale_up"), "seed {seed}");
+        assert!(r.log.contains(" migration_sweep "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 20: planned scale-down with in-flight learning clients — the
+// leaving shard drains through the per-session state machine, live learner
+// tracks (pending transition + partial rollout) transfer at the quiescent
+// point, and not one experience transition is lost at the seam
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_scale_down_drains_learning_sessions_with_zero_lost_transitions() {
+    let n_learn = 12;
+    let episodes = 3;
+    let moved = sessions_on_shard(n_learn, 3, 2);
+    assert!(
+        !moved.is_empty() && moved.len() < n_learn,
+        "hash must place learning clients on shard 2 and elsewhere, got {moved:?}"
+    );
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 3,
+            raw_clients: 0,
+            faults: vec![(0.4, FaultCmd::RemoveShard(2))],
+            learning: Some(LearnSpec {
+                clients: n_learn,
+                episodes,
+                learner: small_learner(seed),
+                ..LearnSpec::default()
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("scale_down_drain", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed scale-down logs diverged");
+
+        // zero dropped sessions: nobody gave up, nobody even reconnected —
+        // the drain is invisible to the client protocol
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a learning client gave up");
+        assert_eq!(r.clients.iter().map(|c| c.reconnects).sum::<u64>(), 0, "seed {seed}");
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+        assert_eq!(r.total_episodes(), n_learn * episodes, "seed {seed}: episodes lost");
+        for (i, c) in r.clients.iter().enumerate() {
+            assert_eq!(c.returns.len(), episodes, "seed {seed} client {i}");
+            for &ret in &c.returns {
+                assert!((-4000.0..=0.0).contains(&ret), "seed {seed} client {i}: {ret}");
+            }
+        }
+
+        // the headline gate: a planned scale-down loses NO experience —
+        // every pending transition crossed the seam via the track transfer
+        assert_eq!(
+            r.total_dropped_transitions(),
+            0,
+            "seed {seed}: a transition died at the migration seam"
+        );
+        // every session pinned to the leaving shard drained off exactly
+        // once, at a quiescent point, with its learner track in hand
+        assert_eq!(r.gateway.migrations as usize, moved.len(), "seed {seed}");
+        assert_eq!(
+            r.gateway.drained_handoffs, r.gateway.migrations,
+            "seed {seed}: a planned drain was forced"
+        );
+        assert!(r.log.contains("drained=true track=true"), "seed {seed}: no track moved");
+        assert!(!r.log.contains("drained=false"), "seed {seed}: a forced handoff leaked in");
+
+        // codec re-sync across the seam: exactly one refused delta and one
+        // forced keyframe per handoff, and the checksum oracle stays clean
+        let need: u64 = r.clients.iter().map(|c| c.need_keyframes).sum();
+        let rejects: u64 = r.shards.iter().map(|s| s.codec_rejects).sum();
+        assert_eq!(need, r.gateway.migrations, "seed {seed}");
+        assert_eq!(rejects, r.gateway.migrations, "seed {seed}");
+        let mismatches: u64 = r.clients.iter().map(|c| c.payload_mismatches).sum();
+        assert_eq!(mismatches, 0, "seed {seed}: a stale base was silently decoded");
+
+        // training stayed sound end to end: no stale action ever applied,
+        // adoption strictly monotone everywhere (the leaving shard keeps
+        // adopting fan-outs while it drains)
+        assert_eq!(r.total_applied_stale(), 0, "seed {seed}");
+        for (si, s) in r.shards.iter().enumerate() {
+            assert!(
+                s.adopted_versions.windows(2).all(|w| w[0] < w[1]),
+                "seed {seed} shard {si}: adoption not strictly increasing: {:?}",
+                s.adopted_versions
+            );
+        }
+        // the leaving shard did real learning work before handing off, and
+        // finished outside the ring (reported Down = not routable)
+        assert!(r.shards[2].exp_frames > 0, "seed {seed}: shard 2 never ingested");
+        assert_eq!(r.shard_states[2], ShardState::Down, "seed {seed}");
+        assert_eq!(r.gateway.no_route, 0, "seed {seed}");
+        assert!(r.log.contains(" fault_remove_shard "), "seed {seed}");
+        assert!(r.log.contains("why=scale_down"), "seed {seed}");
+        assert!(r.log.contains(" migration_sweep "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 21: shard crash during migration — the shard leaves the ring
+// and dies 0.2 ms later, mid-drain. In-flight replies are lost, the stuck
+// handoffs complete forced, and every session still lands on exactly one
+// live shard with every decision answered exactly once
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_mid_migration_lands_every_session_on_exactly_one_live_shard() {
+    let n_clients = 12;
+    let decisions = 24;
+    let moved = sessions_on_shard1(n_clients, 2);
+    assert!(
+        !moved.is_empty() && moved.len() < n_clients,
+        "hash must place sessions on both shards, got {moved:?}"
+    );
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: n_clients,
+            decisions,
+            req_timeout: 0.03,
+            // zero think keeps a request in flight for nearly every
+            // session, so the crash 0.2 ms after the removal catches the
+            // drains mid-flight instead of finding them already quiesced
+            faults: vec![
+                (0.02, FaultCmd::RemoveShard(1)),
+                (0.0202, FaultCmd::CrashShard(1)),
+            ],
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("migration_crash", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed crash logs diverged");
+
+        // exactly-once handoff: every session that started on the leaving
+        // shard migrated once — never zero times, never twice
+        let started = migration_log_sessions(&r.log, "migrate_start");
+        let finished = migration_log_sessions(&r.log, "migrate");
+        let unique: BTreeSet<u32> = finished.iter().copied().collect();
+        assert_eq!(unique.len(), finished.len(), "seed {seed}: a session handed off twice");
+        assert_eq!(
+            unique,
+            moved.iter().copied().collect::<BTreeSet<u32>>(),
+            "seed {seed}: handoffs != the leaving shard's sessions"
+        );
+        assert_eq!(started.len(), finished.len(), "seed {seed}: a migration never completed");
+        assert_eq!(r.gateway.migrations as usize, moved.len(), "seed {seed}");
+        assert_eq!(r.gateway.reassigned, r.gateway.migrations, "seed {seed}");
+        // the crash caught at least one drain in flight and forced it
+        assert!(
+            r.gateway.drained_handoffs < r.gateway.migrations,
+            "seed {seed}: the crash never caught a drain mid-flight"
+        );
+        assert!(r.log.contains("drained=false"), "seed {seed}: no forced handoff logged");
+        assert!(r.gateway.crash_detected >= 1, "seed {seed}: crash never detected");
+
+        // ...and still: liveness plus exactly-once delivery on the
+        // surviving shard, with the lost in-flight replies recovered by
+        // timeout + retransmit, never duplicated
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a client gave up");
+        assert_eq!(r.completed_decisions(), n_clients * decisions, "seed {seed}");
+        assert_eq!(r.clients.iter().map(|c| c.dup_responses).sum::<u64>(), 0, "seed {seed}");
+        assert!(
+            r.clients.iter().map(|c| c.retries).sum::<u64>() >= 1,
+            "seed {seed}: the lost in-flight replies never forced a retry"
+        );
+        assert!(r.hello_acks_exactly_once(), "seed {seed}");
+        assert_eq!(r.gateway.no_route, 0, "seed {seed}");
+        assert_eq!(r.shard_states[1], ShardState::Down, "seed {seed}");
+        assert!(r.log.contains(" fault_remove_shard "), "seed {seed}");
+        assert!(r.log.contains(" fault_crash "), "seed {seed}");
+        assert!(r.log.contains(" trunk_lost "), "seed {seed}");
     }
 }

@@ -54,6 +54,7 @@ fn valid_bodies() -> Vec<Vec<u8>> {
             codec: CODEC_DELTA,
             caps: CAP_EXPERIENCE,
             shard: Some(1),
+            epoch: None,
         }),
         Msg::Request(Request {
             client: 9,
@@ -279,7 +280,7 @@ fn mid_negotiation_capability_flips_arrive_by_wire_and_are_contained() {
     let mut gate = SessionGate::new(LimitsConfig::default());
     // hellos go through the actual wire bytes, as an attacker would
     let hello = |split, codec, caps| {
-        let b = Msg::Hello(Hello { client: 3, split, codec, caps, shard: None }).encode();
+        let b = Msg::Hello(Hello { client: 3, split, codec, caps, shard: None, epoch: None }).encode();
         match Msg::decode(&b[4..]).unwrap() {
             Msg::Hello(h) => h,
             other => panic!("hello decoded as {other:?}"),
@@ -311,4 +312,88 @@ fn mid_negotiation_capability_flips_arrive_by_wire_and_are_contained() {
     assert!(gate.admit(MSG_REQUEST_RAW, 64).is_err());
     let h = hello(true, CODEC_DELTA, CAP_EXPERIENCE);
     assert!(gate.on_hello(&h, CAP_EXPERIENCE, None).is_none());
+}
+
+// -- admission gate: topology-epoch frames arriving by wire -----------------
+
+/// Round-trip an epoch-carrying hello through the real wire bytes, as a
+/// replaying or forging attacker would deliver it.
+fn wire_hello(client: u32, shard: Option<u16>, epoch: Option<u64>) -> Hello {
+    let b = Msg::Hello(Hello {
+        client,
+        split: true,
+        codec: CODEC_DELTA,
+        caps: 0,
+        shard,
+        epoch,
+    })
+    .encode();
+    match Msg::decode(&b[4..]).unwrap() {
+        Msg::Hello(h) => h,
+        other => panic!("hello decoded as {other:?}"),
+    }
+}
+
+#[test]
+fn stale_epoch_hellos_are_refused_without_quarantine_or_state_change() {
+    let mut gate = SessionGate::new(LimitsConfig::default());
+    gate.set_topology_epoch(5);
+    // negotiate at the current epoch; the ack stamps it back
+    let ack = gate.on_hello(&wire_hello(3, None, Some(5)), CAP_EXPERIENCE, Some(1)).unwrap();
+    assert_eq!(ack.epoch, Some(5));
+    assert!(gate.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
+    // a hello replayed from before the last shard add is refused — no
+    // ack, no quarantine, and the live negotiation keeps serving
+    assert!(gate.on_hello(&wire_hello(3, None, Some(3)), CAP_EXPERIENCE, Some(1)).is_none());
+    assert_eq!(gate.epoch_rejects, 1);
+    assert!(!gate.quarantined());
+    assert!(gate.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
+    // a forged epoch from a future the fleet never reached is refused too
+    assert!(gate.on_hello(&wire_hello(3, Some(1), Some(9)), CAP_EXPERIENCE, Some(1)).is_none());
+    assert_eq!(gate.epoch_rejects, 2);
+    // the current epoch still negotiates after the hostile churn
+    assert!(gate.on_hello(&wire_hello(3, None, Some(5)), CAP_EXPERIENCE, Some(1)).is_some());
+}
+
+#[test]
+fn epoch_regression_replays_are_refused_even_without_a_fleet_epoch() {
+    // a gate that never learned a topology epoch still enforces the
+    // session's own watermark: a captured older hello cannot roll the
+    // session back to a pre-migration route
+    let mut gate = SessionGate::new(LimitsConfig::default());
+    let ack = gate.on_hello(&wire_hello(7, None, Some(7)), 0, None).unwrap();
+    assert_eq!(ack.epoch, None); // no fleet epoch to stamp
+    assert!(gate.on_hello(&wire_hello(7, None, Some(3)), 0, None).is_none());
+    assert_eq!(gate.epoch_rejects, 1);
+    assert!(!gate.quarantined());
+    // epoch-less hellos predate the protocol and still negotiate
+    assert!(gate.on_hello(&wire_hello(7, None, None), 0, None).is_some());
+    // ...without resetting the watermark the replay is judged against
+    assert!(gate.on_hello(&wire_hello(7, None, Some(6)), 0, None).is_none());
+    assert_eq!(gate.epoch_rejects, 2);
+}
+
+#[test]
+fn forged_mid_migration_reroute_cannot_hijack_the_fresh_gate() {
+    // old shard: session negotiated at topology epoch 3, then the fleet
+    // scales and the session migrates at epoch 4
+    let mut old = SessionGate::new(LimitsConfig::default());
+    old.set_topology_epoch(3);
+    old.on_hello(&wire_hello(11, Some(0), Some(3)), CAP_EXPERIENCE, Some(0)).unwrap();
+    old.set_topology_epoch(4);
+    let mut fresh = old.migrate();
+    // a captured pre-migration hello (epoch 3) replayed at the new shard
+    // is refused: the watermark followed the session across the seam
+    assert!(fresh.on_hello(&wire_hello(11, Some(0), Some(3)), CAP_EXPERIENCE, Some(2)).is_none());
+    assert_eq!(fresh.epoch_rejects, 1);
+    // a forged re-route claiming an epoch the fleet never published
+    assert!(fresh.on_hello(&wire_hello(11, Some(2), Some(8)), CAP_EXPERIENCE, Some(2)).is_none());
+    assert_eq!(fresh.epoch_rejects, 2);
+    assert!(!fresh.quarantined());
+    // only the genuine post-migration hello lands, and its ack pins the
+    // session to the new epoch and shard
+    let ack = fresh.on_hello(&wire_hello(11, None, Some(4)), CAP_EXPERIENCE, Some(2)).unwrap();
+    assert_eq!(ack.epoch, Some(4));
+    assert_eq!(ack.shard, Some(2));
+    assert!(fresh.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
 }
