@@ -19,12 +19,15 @@ use miniconv::codec::CodecId;
 use miniconv::coordinator::{
     run_fleet, Backend, BatchPolicy, ClientConfig, Route, ServerConfig, SimSpec,
 };
-use miniconv::fleet::{launch_local, FleetConfig, ShardId};
+use miniconv::fleet::{
+    launch_local, AutoscaleConfig, FleetAutoscaleConfig, FleetConfig, ScaleAction, ShardId,
+};
 use miniconv::util::argparse::Parser;
 
 fn main() -> Result<()> {
     let args = Parser::new("sharded serving demo")
         .opt("codec", "flat", "split-route feature codec: flat | delta")
+        .flag("autoscale", "run the closed autoscaling loop (DESIGN.md §11) during the demo")
         .parse();
     let codec = CodecId::parse(&args.str("codec"))?;
     let have_artifacts = miniconv::runtime::default_artifact_dir()
@@ -44,7 +47,7 @@ fn main() -> Result<()> {
     };
 
     println!("launching 4 shards + gateway…");
-    let fleet = launch_local(FleetConfig {
+    let mut fleet = launch_local(FleetConfig {
         shards: 4,
         server: ServerConfig {
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
@@ -54,6 +57,23 @@ fn main() -> Result<()> {
         ..FleetConfig::default()
     })?;
     println!("gateway on {} fronting {} shards", fleet.addr(), fleet.n_shards());
+
+    if args.flag("autoscale") {
+        fleet.start_autoscale(FleetAutoscaleConfig {
+            policy: AutoscaleConfig {
+                min_shards: 2,
+                max_shards: 6,
+                queue_high_ns: 2_000_000,
+                queue_low_ns: 200_000,
+                shed_high: 0.05,
+                shed_low: 0.005,
+                confirm: 2,
+                cooldown: 0.5,
+            },
+            interval: Duration::from_millis(100),
+        })?;
+        println!("autoscaler on: windowed samples every 100 ms, 2..=6 shards");
+    }
 
     // with artifacts the fleet serves the split route, so the negotiated
     // codec actually carries the feature frames; the Sim fallback serves
@@ -120,6 +140,28 @@ fn main() -> Result<()> {
 
     for (id, state, conns) in fleet.gateway.shard_states() {
         println!("  {id}: {} ({conns} live connections)", state.name());
+    }
+
+    if args.flag("autoscale") {
+        // idle now: give the sampler a few empty windows so confirmed
+        // down-pressure can park the surplus shards before we report
+        fleet.wait_scale(Duration::from_secs(4), |ev| {
+            let ups = ev.iter().filter(|e| e.action == ScaleAction::ScaleUp).count();
+            let downs = ev.iter().filter(|e| e.action == ScaleAction::ScaleDown).count();
+            !ev.is_empty() && downs >= ups
+        });
+        let events = fleet.scale_events();
+        println!("\nautoscale events: {} ({} routable shards now)", events.len(), fleet.gateway.n_routable());
+        for e in &events {
+            println!(
+                "  t={:.2}s {:?} {} (window p95 {:.2} ms, shed {:.3})",
+                e.at,
+                e.action,
+                e.shard,
+                e.sample.queue_p95_ns as f64 / 1e6,
+                e.sample.shed_rate
+            );
+        }
     }
 
     fleet.shutdown();

@@ -7,7 +7,9 @@
 //! the tail whenever shards are imbalanced; the tests pin this down.
 
 use crate::coordinator::metrics::{MetricsInner, RouteMetrics};
+use crate::fleet::autoscale::LoadSample;
 use crate::fleet::topology::ShardId;
+use crate::util::stats::LatencyHist;
 use crate::util::tables::Table;
 
 /// One shard's contribution to a fleet snapshot.
@@ -42,6 +44,76 @@ impl GatewayCounters {
             0.0
         } else {
             refused as f64 / total as f64
+        }
+    }
+
+    /// Counters accumulated since `prev` was captured — saturating, so a
+    /// `prev` that is not actually an earlier reading of the same gateway
+    /// clamps at zero instead of underflowing.
+    pub fn delta(&self, prev: &GatewayCounters) -> GatewayCounters {
+        GatewayCounters {
+            shed_sessions: self.shed_sessions.saturating_sub(prev.shed_sessions),
+            rate_limited: self.rate_limited.saturating_sub(prev.rate_limited),
+            quarantined_sessions: self
+                .quarantined_sessions
+                .saturating_sub(prev.quarantined_sessions),
+            quarantine_drops: self.quarantine_drops.saturating_sub(prev.quarantine_drops),
+        }
+    }
+}
+
+/// Windowed load sampler for the autoscaler (DESIGN.md §11).
+///
+/// All fleet counters and histograms are *lifetime-cumulative*: the merged
+/// queue histogram keeps every wait ever recorded and the gateway counters
+/// never reset. Deriving [`LoadSample`]s straight from them is the bug this
+/// type fixes — one historical shed storm pins `shed_rate > 0` forever and
+/// the lifetime histogram dominates p95, so down-pressure can never
+/// re-engage. A `LoadWindow` holds the previous sampling tick's cumulative
+/// state and subtracts it, so each emitted sample describes only the
+/// interval since the last call. An empty window (no new requests) reads
+/// as idle: p95 0, shed rate 0.
+#[derive(Debug, Clone, Default)]
+pub struct LoadWindow {
+    prev_queue: LatencyHist,
+    prev_gateway: GatewayCounters,
+    prev_requests: u64,
+}
+
+impl LoadWindow {
+    pub fn new() -> Self {
+        LoadWindow::default()
+    }
+
+    /// Windowed sample from a full fleet snapshot (the threaded sampler's
+    /// path): merges both routes' queue histograms, then subtracts the
+    /// previous tick.
+    pub fn sample(&mut self, snap: &FleetSnapshot, routable_shards: usize) -> LoadSample {
+        let mut queue = snap.merged.full.queue_wait.clone();
+        queue.merge(&snap.merged.split.queue_wait);
+        self.sample_parts(&queue, snap.gateway, snap.total_requests(), routable_shards)
+    }
+
+    /// Windowed sample from already-merged cumulative inputs — the sim
+    /// feeds its own queue histogram and gateway counters here without
+    /// materialising a `FleetSnapshot` per tick.
+    pub fn sample_parts(
+        &mut self,
+        queue: &LatencyHist,
+        gateway: GatewayCounters,
+        requests: u64,
+        routable_shards: usize,
+    ) -> LoadSample {
+        let window_queue = queue.delta(&self.prev_queue);
+        let window_gateway = gateway.delta(&self.prev_gateway);
+        let window_requests = requests.saturating_sub(self.prev_requests);
+        self.prev_queue = queue.clone();
+        self.prev_gateway = gateway;
+        self.prev_requests = requests;
+        LoadSample {
+            queue_p95_ns: window_queue.quantile_ns(0.95) as u64,
+            shed_rate: window_gateway.shed_rate(window_requests),
+            shards: routable_shards,
         }
     }
 }
@@ -99,19 +171,6 @@ impl FleetSnapshot {
 
     pub fn total_dropped(&self) -> u64 {
         self.merged.dropped
-    }
-
-    /// The autoscaler's observation window over this snapshot: queue-wait
-    /// p95 from the **merged** histogram (both routes), shed rate from the
-    /// gateway counters, bounded by `routable_shards`.
-    pub fn load_sample(&self, routable_shards: usize) -> crate::fleet::autoscale::LoadSample {
-        let mut queue = self.merged.full.queue_wait.clone();
-        queue.merge(&self.merged.split.queue_wait);
-        crate::fleet::autoscale::LoadSample {
-            queue_p95_ns: queue.quantile_ns(0.95) as u64,
-            shed_rate: self.gateway.shed_rate(self.total_requests()),
-            shards: routable_shards,
-        }
     }
 
     /// Fleet table: one row per (shard, route) plus merged fleet rows.
@@ -259,18 +318,104 @@ mod tests {
     }
 
     #[test]
-    fn load_sample_reads_the_merged_queue_histogram_and_gateway_shed() {
+    fn gateway_counter_delta_is_saturating_and_windowed() {
+        let prev = GatewayCounters {
+            shed_sessions: 5,
+            rate_limited: 2,
+            quarantined_sessions: 1,
+            quarantine_drops: 0,
+        };
+        let now = GatewayCounters {
+            shed_sessions: 9,
+            rate_limited: 2,
+            quarantined_sessions: 1,
+            quarantine_drops: 3,
+        };
+        let d = now.delta(&prev);
+        assert_eq!(
+            d,
+            GatewayCounters {
+                shed_sessions: 4,
+                rate_limited: 0,
+                quarantined_sessions: 0,
+                quarantine_drops: 3,
+            }
+        );
+        // a non-prefix prev clamps to zero instead of wrapping
+        assert_eq!(prev.delta(&now), GatewayCounters::default());
+    }
+
+    #[test]
+    fn load_window_samples_reflect_only_the_observation_window() {
+        let mut w = LoadWindow::new();
+        // first window: 6 requests (1 ms queue wait each) and 6 sheds
         let snap = aggregate(vec![
             (ShardId(0), shard_with(&[10; 3])),
             (ShardId(1), shard_with(&[10; 3])),
         ])
         .with_gateway(GatewayCounters { shed_sessions: 6, ..GatewayCounters::default() });
-        let s = snap.load_sample(2);
+        let s = w.sample(&snap, 2);
         assert_eq!(s.shards, 2);
         assert!((s.shed_rate - 0.5).abs() < 1e-9, "6 sheds vs 6 requests: {}", s.shed_rate);
-        // queue-wait samples were recorded (1 ms each) — the p95 must come
-        // from the merged histogram, not read zero
+        // the p95 must come from the merged queue histogram, not read zero
         assert!(s.queue_p95_ns > 0);
+        // second window: 6 more clean requests, no new sheds — the window
+        // must read shed-free even though the cumulative counter still
+        // says 6
+        let snap2 = aggregate(vec![
+            (ShardId(0), shard_with(&[10; 6])),
+            (ShardId(1), shard_with(&[10; 6])),
+        ])
+        .with_gateway(GatewayCounters { shed_sessions: 6, ..GatewayCounters::default() });
+        let s2 = w.sample(&snap2, 2);
+        assert_eq!(s2.shed_rate, 0.0, "cumulative sheds leaked into the window");
+        assert!(s2.queue_p95_ns > 0, "the window's own queue waits must register");
+        // third window: nothing happened at all — reads idle
+        let s3 = w.sample(&snap2, 2);
+        assert_eq!(s3.queue_p95_ns, 0);
+        assert_eq!(s3.shed_rate, 0.0);
+    }
+
+    /// Regression (ISSUE 9): one historical shed event must not pin the
+    /// shed rate above zero forever. The pre-fix cumulative
+    /// `load_sample` computed `shed_rate(total_requests())` over process
+    /// lifetime, so after the storm below every later sample still read
+    /// `shed_rate ≈ 0.87` and `queue_p95 ≈ 1 ms` — both above the
+    /// down-pressure gates — and the autoscaler could never scale back
+    /// down. Windowed sampling must re-engage it.
+    #[test]
+    fn scale_down_re_engages_after_a_historical_shed_event() {
+        use crate::fleet::autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
+        let mut scaler = Autoscaler::new(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            queue_high_ns: 5_000_000,
+            queue_low_ns: 500_000,
+            shed_high: 0.05,
+            confirm: 2,
+            cooldown: 1.0,
+            ..AutoscaleConfig::default()
+        });
+        let mut w = LoadWindow::new();
+        // the storm: 6 requests forwarded, 40 admission attempts shed
+        let storm = aggregate(vec![(ShardId(0), shard_with(&[10; 6]))])
+            .with_gateway(GatewayCounters { shed_sessions: 40, ..GatewayCounters::default() });
+        let s = w.sample(&storm, 2);
+        assert!(s.shed_rate > 0.5, "the storm window must read hot: {}", s.shed_rate);
+        assert_eq!(scaler.observe(0.0, s), ScaleAction::Hold);
+        // the storm ends. Cumulative counters stop moving but never reset;
+        // every subsequent window must read idle and scale-down must fire
+        // once the confirmation streak completes.
+        let mut saw_down = false;
+        for i in 1..=4u32 {
+            let s = w.sample(&storm, 2);
+            assert_eq!(s.shed_rate, 0.0, "historical shed leaked into window {i}");
+            assert_eq!(s.queue_p95_ns, 0, "historical queue wait leaked into window {i}");
+            if scaler.observe(f64::from(i) * 2.0, s) == ScaleAction::ScaleDown {
+                saw_down = true;
+            }
+        }
+        assert!(saw_down, "down-pressure never re-engaged after a past shed event");
     }
 
     #[test]

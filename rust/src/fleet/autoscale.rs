@@ -66,6 +66,11 @@ pub struct AutoscaleConfig {
     /// shed rate above this sustains up-pressure regardless of queue wait
     /// (a fully shedding gateway can show an idle queue)
     pub shed_high: f64,
+    /// shed rate at or below this counts as shed-free for down-pressure.
+    /// Windowed rates are float quotients, so an exact-zero comparison
+    /// would let one shed event in a million-request window latch
+    /// scale-down off; must sit strictly below `shed_high`
+    pub shed_low: f64,
     /// consecutive pressured samples required before acting
     pub confirm: u32,
     /// seconds after any action before the next may fire
@@ -80,6 +85,7 @@ impl Default for AutoscaleConfig {
             queue_high_ns: 5_000_000, // 5 ms of queue wait at p95
             queue_low_ns: 500_000,    // 0.5 ms
             shed_high: 0.01,          // shedding >1% of admissions
+            shed_low: 0.001,          // ≤0.1% reads as shed-free
             confirm: 3,
             cooldown: 30.0,
         }
@@ -98,6 +104,7 @@ pub struct Autoscaler {
 impl Autoscaler {
     pub fn new(cfg: AutoscaleConfig) -> Self {
         assert!(cfg.queue_low_ns < cfg.queue_high_ns, "hysteresis band must be non-empty");
+        assert!(cfg.shed_low < cfg.shed_high, "shed hysteresis band must be non-empty");
         assert!(cfg.min_shards >= 1, "a fleet needs at least one shard");
         assert!(cfg.min_shards <= cfg.max_shards, "min_shards exceeds max_shards");
         assert!(cfg.confirm >= 1, "confirm must require at least one sample");
@@ -115,7 +122,8 @@ impl Autoscaler {
     /// that persists across it acts immediately once the cooldown ends.
     pub fn observe(&mut self, now: f64, s: LoadSample) -> ScaleAction {
         let up_pressure = s.queue_p95_ns > self.cfg.queue_high_ns || s.shed_rate > self.cfg.shed_high;
-        let down_pressure = s.queue_p95_ns < self.cfg.queue_low_ns && s.shed_rate <= 0.0;
+        let down_pressure =
+            s.queue_p95_ns < self.cfg.queue_low_ns && s.shed_rate <= self.cfg.shed_low;
         if up_pressure {
             self.up_streak = self.up_streak.saturating_add(1);
             self.down_streak = 0;
@@ -255,6 +263,86 @@ mod tests {
         for t in 0..10 {
             assert_eq!(a.observe(t as f64, idle(1)), ScaleAction::Hold, "shrank below min_shards");
         }
+    }
+
+    #[test]
+    fn float_residue_below_shed_low_does_not_latch_scale_down_off() {
+        // one shed in a large window leaves a tiny nonzero rate; the old
+        // exact-zero comparison held scale-down off forever on it
+        let mut a = Autoscaler::new(cfg());
+        let residue = LoadSample { queue_p95_ns: 10_000, shed_rate: 1e-4, shards: 3 };
+        assert_eq!(a.observe(0.0, residue), ScaleAction::Hold);
+        assert_eq!(a.observe(1.0, residue), ScaleAction::Hold);
+        assert_eq!(a.observe(2.0, residue), ScaleAction::ScaleDown);
+    }
+
+    #[test]
+    #[should_panic(expected = "shed hysteresis")]
+    fn shed_band_must_be_non_empty() {
+        Autoscaler::new(AutoscaleConfig { shed_low: 0.01, shed_high: 0.01, ..cfg() });
+    }
+
+    /// Property (ISSUE 9 satellite): over seeded random load traces, the
+    /// closed loop never emits a `ScaleUp` followed by a `ScaleDown` (or
+    /// vice versa) within one cooldown — in fact no two actions land
+    /// closer than the cooldown — and the simulated shard count stays
+    /// inside `[min_shards, max_shards]` when every verdict is applied.
+    #[test]
+    fn anti_oscillation_property_over_random_load_traces() {
+        use crate::util::proptest::{check, prop_assert};
+        check(150, |g| {
+            let cfg = AutoscaleConfig {
+                min_shards: g.usize(1, 3),
+                max_shards: g.usize(4, 8),
+                queue_high_ns: 1_000_000,
+                queue_low_ns: 100_000,
+                shed_high: 0.05,
+                shed_low: 0.001,
+                confirm: g.usize(1, 4) as u32,
+                cooldown: g.f64(1.0, 20.0),
+            };
+            let cooldown = cfg.cooldown;
+            let (min_s, max_s) = (cfg.min_shards, cfg.max_shards);
+            let mut a = Autoscaler::new(cfg);
+            let mut shards = g.usize(min_s, max_s);
+            let mut now = 0.0;
+            let mut last: Option<(f64, ScaleAction)> = None;
+            for _ in 0..200 {
+                now += g.f64(0.1, 3.0);
+                let s = LoadSample {
+                    queue_p95_ns: g.u64(0, 3_000_000),
+                    shed_rate: if g.bool() { 0.0 } else { g.f64(0.0, 0.2) },
+                    shards,
+                };
+                let action = a.observe(now, s);
+                match action {
+                    ScaleAction::Hold => {}
+                    ScaleAction::ScaleUp | ScaleAction::ScaleDown => {
+                        if let Some((t, prev)) = last {
+                            prop_assert(
+                                now - t >= cooldown,
+                                format!(
+                                    "{action:?} at {now:.2} only {:.2}s after {prev:?} \
+                                     (cooldown {cooldown:.2})",
+                                    now - t
+                                ),
+                            )?;
+                        }
+                        last = Some((now, action));
+                        if action == ScaleAction::ScaleUp {
+                            shards += 1;
+                        } else {
+                            shards -= 1;
+                        }
+                    }
+                }
+                prop_assert(
+                    (min_s..=max_s).contains(&shards),
+                    format!("shard count {shards} escaped [{min_s}, {max_s}]"),
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -253,6 +253,44 @@ impl GatewayHandle {
         self.health.as_ref().map(|h| h.stats())
     }
 
+    /// Add a shard to the live ring (scale-up): new sessions start hashing
+    /// to it immediately and the topology epoch bumps. The shard must
+    /// already be listening on `addr`. Runtime joiners are not in the
+    /// fixed per-shard request map, so `per_shard_requests` simply has no
+    /// entry for them — the aggregate counters still see every frame.
+    pub fn add_shard(&self, id: ShardId, addr: SocketAddr) {
+        self.topology.lock().unwrap().add_shard(id, addr);
+        self.signal.notify();
+    }
+
+    /// Remove a shard from the ring (planned scale-down): the epoch bumps
+    /// and no new session routes to it, while connections already pinned
+    /// keep flowing until they close — keep the shard process up until
+    /// `drained` (or connection counts) say it is quiescent.
+    pub fn remove_shard(&self, id: ShardId) {
+        self.topology.lock().unwrap().remove_shard(id);
+        self.signal.notify();
+    }
+
+    /// Shards currently routable (`Up` and not draining) — the fleet size
+    /// an autoscaler verdict is judged against.
+    pub fn n_routable(&self) -> usize {
+        self.topology.lock().unwrap().n_routable()
+    }
+
+    /// A clonable, thread-safe view of the gateway's shared state for
+    /// background samplers (the autoscaling loop): admission counters,
+    /// topology edits, and the event signal — everything a sampler needs
+    /// without owning the handle (which the fleet keeps for shutdown).
+    pub fn control(&self) -> GatewayControl {
+        GatewayControl {
+            topology: self.topology.clone(),
+            stats: self.stats.clone(),
+            counters: self.counters.clone(),
+            signal: self.signal.clone(),
+        }
+    }
+
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(h) = self.health.take() {
@@ -263,6 +301,65 @@ impl GatewayHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+/// Detached view of a running gateway's shared state — see
+/// [`GatewayHandle::control`]. Clonable and `Send`, so the autoscaling
+/// sampler thread can watch counters and edit the ring while the handle
+/// itself stays with the fleet for shutdown.
+#[derive(Clone)]
+pub struct GatewayControl {
+    topology: Arc<Mutex<Topology>>,
+    stats: Arc<Mutex<GatewayStats>>,
+    counters: Arc<Counters>,
+    signal: Arc<Signal>,
+}
+
+impl GatewayControl {
+    /// Cumulative admission counters in the fleet-snapshot form. Like
+    /// [`GatewayStats::counters`], quarantine fields stay zero on the
+    /// threaded path (hostile-budget quarantine lives in the shard
+    /// readers).
+    pub fn admission_counters(&self) -> super::aggregate::GatewayCounters {
+        let shed = self.stats.lock().unwrap().shed_connections;
+        super::aggregate::GatewayCounters {
+            shed_sessions: shed,
+            rate_limited: self.counters.rate_limited.load(Ordering::SeqCst),
+            quarantined_sessions: 0,
+            quarantine_drops: 0,
+        }
+    }
+
+    /// Cumulative request frames forwarded client→shard.
+    pub fn total_requests(&self) -> u64 {
+        self.counters.forwarded_requests.load(Ordering::SeqCst)
+    }
+
+    pub fn n_routable(&self) -> usize {
+        self.topology.lock().unwrap().n_routable()
+    }
+
+    pub fn topology_epoch(&self) -> u64 {
+        self.topology.lock().unwrap().epoch()
+    }
+
+    /// `(id, state, addr)` per shard currently in the table, in id order.
+    pub fn shard_states(&self) -> Vec<(ShardId, ShardState, SocketAddr)> {
+        let top = self.topology.lock().unwrap();
+        top.shards().map(|s| (s.id, s.state, s.addr)).collect()
+    }
+
+    /// See [`GatewayHandle::add_shard`].
+    pub fn add_shard(&self, id: ShardId, addr: SocketAddr) {
+        self.topology.lock().unwrap().add_shard(id, addr);
+        self.signal.notify();
+    }
+
+    /// See [`GatewayHandle::remove_shard`].
+    pub fn remove_shard(&self, id: ShardId) {
+        self.topology.lock().unwrap().remove_shard(id);
+        self.signal.notify();
     }
 }
 

@@ -28,16 +28,23 @@ pub mod gateway;
 pub mod health;
 pub mod topology;
 
-pub use aggregate::{aggregate, FleetSnapshot, GatewayCounters, ShardSnapshot};
+pub use aggregate::{aggregate, FleetSnapshot, GatewayCounters, LoadWindow, ShardSnapshot};
 pub use autoscale::{Autoscaler, AutoscaleConfig, LoadSample, ScaleAction};
-pub use gateway::{serve_gateway, GatewayConfig, GatewayHandle, GatewayStats};
+pub use gateway::{serve_gateway, GatewayConfig, GatewayControl, GatewayHandle, GatewayStats};
 pub use health::{probe_shard, probe_transition, HealthConfig, HealthMonitor, ProbeStats};
 pub use topology::{HashRing, Shard, ShardId, ShardState, Topology};
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
 use anyhow::{Context, Result};
+use log::warn;
 
 use crate::coordinator::metrics::MetricsInner;
 use crate::coordinator::{serve, ServerConfig, ServerHandle};
+use crate::util::signal::Signal;
 
 /// Configuration for a single-process local fleet.
 #[derive(Debug, Clone)]
@@ -69,10 +76,63 @@ impl Default for FleetConfig {
     }
 }
 
+/// Wall-clock autoscaling for a [`LocalFleet`]: the same windowed sampler
+/// and hysteresis policy the sim drives on virtual time (DESIGN.md §11),
+/// run from a background thread against the live gateway.
+#[derive(Debug, Clone)]
+pub struct FleetAutoscaleConfig {
+    /// watermarks, confirmation streaks, and cooldown; `cooldown` is in
+    /// seconds of wall time on this path
+    pub policy: AutoscaleConfig,
+    /// sampling cadence of the background thread
+    pub interval: Duration,
+}
+
+impl Default for FleetAutoscaleConfig {
+    fn default() -> Self {
+        FleetAutoscaleConfig {
+            policy: AutoscaleConfig::default(),
+            interval: Duration::from_millis(250),
+        }
+    }
+}
+
+/// One autoscaler verdict that actually changed the ring.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// seconds since the sampler thread started
+    pub at: f64,
+    /// `ScaleUp` or `ScaleDown` — `Hold` verdicts are not recorded
+    pub action: ScaleAction,
+    /// the shard added to / removed from the ring
+    pub shard: ShardId,
+    /// the windowed load sample that confirmed the verdict
+    pub sample: LoadSample,
+}
+
+/// The live shard process table, shared between the fleet handle and the
+/// optional autoscale sampler thread.
+type ShardTable = Arc<Mutex<Vec<(ShardId, ServerHandle)>>>;
+
+/// The background sampler behind [`LocalFleet::start_autoscale`].
+struct AutoscaleWorker {
+    stop: Arc<AtomicBool>,
+    signal: Arc<Signal>,
+    events: Arc<Mutex<Vec<ScaleEvent>>>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
 /// A running fleet: the gateway plus its shard servers, all in-process.
+///
+/// The shard table lives behind a mutex so the optional autoscaling
+/// thread can park, revive, and launch shards while the owner keeps using
+/// the fleet handle.
 pub struct LocalFleet {
     pub gateway: GatewayHandle,
-    shards: Vec<(ShardId, ServerHandle)>,
+    shards: ShardTable,
+    /// template the autoscaler launches fresh shards from
+    server_template: ServerConfig,
+    auto: Option<AutoscaleWorker>,
 }
 
 /// Launch `cfg.shards` coordinator shards on ephemeral ports and a gateway
@@ -95,7 +155,12 @@ pub fn launch_local(cfg: FleetConfig) -> Result<LocalFleet> {
         health: cfg.health,
         ..GatewayConfig::default()
     })?;
-    Ok(LocalFleet { gateway, shards })
+    Ok(LocalFleet {
+        gateway,
+        shards: Arc::new(Mutex::new(shards)),
+        server_template: cfg.server,
+        auto: None,
+    })
 }
 
 impl LocalFleet {
@@ -105,16 +170,18 @@ impl LocalFleet {
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.shards.lock().unwrap().len()
     }
 
     pub fn shard_ids(&self) -> Vec<ShardId> {
-        self.shards.iter().map(|(id, _)| *id).collect()
+        self.shards.lock().unwrap().iter().map(|(id, _)| *id).collect()
     }
 
     /// One shard's raw metrics snapshot.
     pub fn shard_metrics(&self, id: ShardId) -> Option<MetricsInner> {
         self.shards
+            .lock()
+            .unwrap()
             .iter()
             .find(|(sid, _)| *sid == id)
             .map(|(_, h)| h.metrics.snapshot())
@@ -124,7 +191,8 @@ impl LocalFleet {
     /// gateway's admission counters (shed/rate-capped sessions) so the
     /// autoscaler sees refusal pressure next to the latency histograms.
     pub fn snapshot(&self) -> FleetSnapshot {
-        aggregate(self.shards.iter().map(|(id, h)| (*id, h.metrics.snapshot())))
+        let shards = self.shards.lock().unwrap();
+        aggregate(shards.iter().map(|(id, h)| (*id, h.metrics.snapshot())))
             .with_gateway(self.gateway.stats().counters())
     }
 
@@ -133,7 +201,7 @@ impl LocalFleet {
     /// fleet-wide (DESIGN.md §10).
     pub fn propagate_epoch(&self) {
         let epoch = self.gateway.topology_epoch();
-        for (_, h) in &self.shards {
+        for (_, h) in self.shards.lock().unwrap().iter() {
             h.set_topology_epoch(epoch);
         }
     }
@@ -142,19 +210,183 @@ impl LocalFleet {
     /// loss via connect failures or health probes and routes around it.
     /// Returns false if the shard id is unknown.
     pub fn stop_shard(&mut self, id: ShardId) -> bool {
-        if let Some(pos) = self.shards.iter().position(|(sid, _)| *sid == id) {
-            let (_, handle) = self.shards.remove(pos);
-            handle.shutdown();
-            true
-        } else {
-            false
+        let handle = {
+            let mut shards = self.shards.lock().unwrap();
+            match shards.iter().position(|(sid, _)| *sid == id) {
+                Some(pos) => shards.remove(pos).1,
+                None => return false,
+            }
+        };
+        handle.shutdown();
+        true
+    }
+
+    /// Close the autoscaling loop over this fleet: a background thread
+    /// samples the windowed load view every `cfg.interval` and applies the
+    /// hysteresis policy's verdicts to the live ring. Scale-down parks the
+    /// shard — it leaves the ring (pinned connections keep flowing) but
+    /// the process stays up, so a later scale-up revives it without a
+    /// relaunch; scale-up beyond the parked set boots fresh shards from
+    /// the launch template. Panics if `cfg.policy` is inconsistent (same
+    /// validation as [`Autoscaler::new`]); errors if already running.
+    pub fn start_autoscale(&mut self, cfg: FleetAutoscaleConfig) -> Result<()> {
+        anyhow::ensure!(self.auto.is_none(), "autoscale loop already running");
+        anyhow::ensure!(!cfg.interval.is_zero(), "autoscale interval must be positive");
+        let scaler = Autoscaler::new(cfg.policy.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        let signal = Arc::new(Signal::new());
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let control = self.gateway.control();
+        let shards = self.shards.clone();
+        let template = self.server_template.clone();
+        let (t_stop, t_signal, t_events) = (stop.clone(), signal.clone(), events.clone());
+        let thread = thread::Builder::new()
+            .name("fleet-autoscale".into())
+            .spawn(move || {
+                autoscale_loop(
+                    cfg.interval,
+                    scaler,
+                    control,
+                    shards,
+                    template,
+                    t_stop,
+                    t_signal,
+                    t_events,
+                )
+            })
+            .context("spawn autoscale sampler")?;
+        self.auto = Some(AutoscaleWorker { stop, signal, events, thread: Some(thread) });
+        Ok(())
+    }
+
+    /// Every ring edit the autoscaler has made so far, oldest first.
+    /// Empty when the loop was never started.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        self.auto
+            .as_ref()
+            .map(|w| w.events.lock().unwrap().clone())
+            .unwrap_or_default()
+    }
+
+    /// Block until `pred` holds over the scale-event log (re-checked after
+    /// every ring edit) or `timeout` elapses; returns the final verdict.
+    /// Immediately false when the loop was never started.
+    pub fn wait_scale<F: Fn(&[ScaleEvent]) -> bool>(&self, timeout: Duration, pred: F) -> bool {
+        match &self.auto {
+            Some(w) => w.signal.wait_until(timeout, || pred(&w.events.lock().unwrap())),
+            None => false,
         }
     }
 
-    pub fn shutdown(self) {
+    pub fn shutdown(mut self) {
+        if let Some(mut w) = self.auto.take() {
+            w.stop.store(true, Ordering::SeqCst);
+            w.signal.notify();
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
         self.gateway.shutdown();
-        for (_, h) in self.shards {
+        let shards = std::mem::take(&mut *self.shards.lock().unwrap());
+        for (_, h) in shards {
             h.shutdown();
         }
     }
+}
+
+/// Body of the `fleet-autoscale` sampler thread: interruptible sleep, one
+/// windowed sample per tick, ring edits on confirmed verdicts.
+#[allow(clippy::too_many_arguments)]
+fn autoscale_loop(
+    interval: Duration,
+    mut scaler: Autoscaler,
+    control: GatewayControl,
+    shards: ShardTable,
+    template: ServerConfig,
+    stop: Arc<AtomicBool>,
+    signal: Arc<Signal>,
+    events: Arc<Mutex<Vec<ScaleEvent>>>,
+) {
+    let mut window = LoadWindow::new();
+    let origin = Instant::now();
+    loop {
+        // wakes early only when `stop` flips (shutdown notifies the signal)
+        if signal.wait_until(interval, || stop.load(Ordering::SeqCst)) {
+            return;
+        }
+        let now = origin.elapsed().as_secs_f64();
+        let snap = {
+            let shards = shards.lock().unwrap();
+            aggregate(shards.iter().map(|(id, h)| (*id, h.metrics.snapshot())))
+        }
+        .with_gateway(control.admission_counters());
+        let sample = window.sample(&snap, control.n_routable());
+        let action = scaler.observe(now, sample);
+        let shard = match action {
+            ScaleAction::Hold => continue,
+            ScaleAction::ScaleUp => scale_up(&control, &shards, &template),
+            ScaleAction::ScaleDown => scale_down(&control),
+        };
+        let Some(shard) = shard else { continue };
+        // the ring edit bumped the topology epoch; push it to every
+        // shard's admission gate so epoch-stamped hellos stay coherent
+        let epoch = control.topology_epoch();
+        for (_, h) in shards.lock().unwrap().iter() {
+            h.set_topology_epoch(epoch);
+        }
+        events.lock().unwrap().push(ScaleEvent { at: now, action, shard, sample });
+        signal.notify();
+    }
+}
+
+/// Scale up by one shard: revive the lowest-id parked shard (in the
+/// process table but out of the ring) if there is one, otherwise boot a
+/// fresh shard from the launch template. Returns the shard that joined,
+/// or None when launching failed (the verdict is dropped; pressure will
+/// re-confirm).
+fn scale_up(
+    control: &GatewayControl,
+    shards: &ShardTable,
+    template: &ServerConfig,
+) -> Option<ShardId> {
+    let in_ring: Vec<ShardId> =
+        control.shard_states().iter().map(|(id, _, _)| *id).collect();
+    let mut shards = shards.lock().unwrap();
+    if let Some((id, h)) = shards
+        .iter()
+        .filter(|(id, _)| !in_ring.contains(id))
+        .min_by_key(|(id, _)| *id)
+    {
+        control.add_shard(*id, h.addr);
+        return Some(*id);
+    }
+    let id = ShardId(shards.iter().map(|(sid, _)| sid.0 + 1).max().unwrap_or(0));
+    let mut sc = template.clone();
+    sc.addr = "127.0.0.1:0".into();
+    sc.shard_id = Some(id.0);
+    match serve(sc) {
+        Ok(h) => {
+            control.add_shard(id, h.addr);
+            shards.push((id, h));
+            Some(id)
+        }
+        Err(e) => {
+            warn!("autoscale: failed to launch {id}: {e:#}");
+            None
+        }
+    }
+}
+
+/// Scale down by one shard: pull the highest-id routable shard out of the
+/// ring. Pinned connections keep flowing and the process stays up
+/// (parked) so a later scale-up revives it without a relaunch.
+fn scale_down(control: &GatewayControl) -> Option<ShardId> {
+    let id = control
+        .shard_states()
+        .iter()
+        .filter(|(_, state, _)| state.routable())
+        .map(|(id, _, _)| *id)
+        .max()?;
+    control.remove_shard(id);
+    Some(id)
 }

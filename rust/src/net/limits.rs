@@ -405,9 +405,17 @@ impl RateCap {
 /// after an overload rejection: `base·2^attempt` capped at `cap`, with
 /// full jitter in `[d/2, d)` so a shed flash crowd does not re-arrive in
 /// lockstep.
+///
+/// Total over degenerate inputs: any `attempt` saturates at `cap` (the
+/// exponential is computed in `f64` and overflow collapses to the cap),
+/// and inf/NaN/negative `base` or `cap` still yield a finite non-negative
+/// delay — retry schedulers sleep on this value, so it must never be
+/// inf or NaN. The jitter stream advances exactly once per call on every
+/// path, keeping seeded replay byte-stable.
 pub fn backoff_delay(base: f64, attempt: u32, cap: f64, rng: &mut Rng) -> f64 {
-    let exp = base * (1u64 << attempt.min(16)) as f64;
-    let d = exp.min(cap);
+    let cap = if cap.is_finite() { cap.max(0.0) } else { f64::MAX };
+    let exp = base.max(0.0) * 2f64.powi(attempt.min(1024) as i32);
+    let d = if exp.is_finite() { exp.min(cap) } else { cap };
     d * (0.5 + 0.5 * rng.uniform())
 }
 
@@ -719,5 +727,43 @@ mod tests {
         // huge attempt counts must not overflow the shift
         let d = backoff_delay(0.01, u32::MAX, 1.0, &mut rng);
         assert!(d <= 1.0);
+    }
+
+    /// Property (ISSUE 9 satellite): `backoff_delay` is total — finite,
+    /// non-negative, and at most `cap` for every attempt count, including
+    /// ones whose exponential overflows `f64`.
+    #[test]
+    fn backoff_delay_saturates_at_cap_and_stays_finite() {
+        use crate::util::proptest::{check, prop_assert};
+        check(300, |g| {
+            let base = g.f64(1e-6, 10.0);
+            let cap = g.f64(1e-3, 60.0);
+            let attempt = match g.usize(0, 3) {
+                0 => g.u64(0, 20) as u32,
+                1 => g.u64(21, 2_000) as u32,
+                2 => u32::MAX,
+                _ => 0,
+            };
+            let d = backoff_delay(base, attempt, cap, g.rng());
+            prop_assert(
+                d.is_finite() && d >= 0.0,
+                format!("backoff({base}, {attempt}, {cap}) = {d}"),
+            )?;
+            prop_assert(d <= cap, format!("delay {d} above cap {cap}"))?;
+            Ok(())
+        });
+        // degenerate scalars must still come back finite and non-negative
+        let mut rng = Rng::new(7);
+        for (base, cap) in [
+            (f64::NAN, 1.0),
+            (1.0, f64::NAN),
+            (f64::INFINITY, 1.0),
+            (1.0, f64::INFINITY),
+            (-1.0, 1.0),
+            (1.0, -1.0),
+        ] {
+            let d = backoff_delay(base, u32::MAX, cap, &mut rng);
+            assert!(d.is_finite() && d >= 0.0, "backoff({base}, u32::MAX, {cap}) = {d}");
+        }
     }
 }

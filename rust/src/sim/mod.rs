@@ -31,7 +31,7 @@ pub mod transport;
 pub use clock::{Clock, ClockHandle, SimClock, WallClock};
 pub use log::EventLog;
 pub use scenario::{
-    run_scenario, ClientOutcome, FaultCmd, GatewayOutcome, LearnSpec, ScenarioConfig,
-    ScenarioReport, ShardOutcome, ThermalSpec,
+    run_scenario, AutoscaleOutcome, AutoscaleSpec, ClientOutcome, FaultCmd, GatewayOutcome,
+    LearnSpec, ScenarioConfig, ScenarioReport, ShardOutcome, ThermalSpec,
 };
 pub use transport::{Delivery, LaneId, LinkFaults, SimDuplex, SimEndpoint, SimNet, Transport};

@@ -27,6 +27,8 @@ use crate::coordinator::router::Route;
 use crate::coordinator::session::SessionManager;
 use crate::device::thermal::{ClockedThermal, ThermalModel};
 use crate::envs::{Env, Pendulum};
+use crate::fleet::aggregate::{GatewayCounters, LoadWindow};
+use crate::fleet::autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 use crate::fleet::health::{probe_transition, HealthConfig, ProbeStats};
 use crate::fleet::topology::{ShardId, ShardState, Topology};
 use crate::learn::{Learner, LearnerConfig, PolicyStore};
@@ -40,7 +42,7 @@ use crate::net::limits::backoff_delay;
 use crate::rl::native::{episode_rng, normalize_pendulum_obs};
 use crate::util::rng::Rng;
 use crate::util::simclock::EventQueue;
-use crate::util::stats::Samples;
+use crate::util::stats::{LatencyHist, Samples};
 
 use super::clock::SimClock;
 use super::log::EventLog;
@@ -192,8 +194,31 @@ pub struct ScenarioConfig {
     /// and the client retries with jittered exponential backoff
     pub gw_max_sessions: usize,
     pub faults: Vec<(f64, FaultCmd)>,
+    /// closed-loop autoscaling on a virtual-time sampling cadence
+    /// (None = the topology only changes through timed faults)
+    pub autoscale: Option<AutoscaleSpec>,
+    /// diurnal load curve `(period_s, idle_factor)`: the think gap between
+    /// decisions follows a triangle wave from `think * idle_factor` at the
+    /// trough (phase 0) down to `think` at the peak (phase 0.5). Piecewise
+    /// linear on purpose — no transcendentals, so the produced virtual
+    /// timestamps are bit-reproducible across platforms.
+    pub diurnal: Option<(f64, f64)>,
     /// livelock safety valve
     pub max_events: usize,
+}
+
+/// Closed-loop autoscaling (DESIGN.md §11): on a fixed virtual-time cadence
+/// the sim feeds its queue-wait histogram and gateway admission counters
+/// through a windowed [`LoadWindow`] into an [`Autoscaler`], and the
+/// verdicts drive the same join/leave machinery the timed
+/// `AddShard`/`RemoveShard` faults use — drain → cut-over migration,
+/// exactly-once learning handoff, forced-keyframe codec re-sync.
+#[derive(Debug, Clone)]
+pub struct AutoscaleSpec {
+    /// watermarks, confirmation streaks, cooldown, shard bounds
+    pub cfg: AutoscaleConfig,
+    /// virtual seconds between load samples
+    pub interval: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -232,6 +257,8 @@ impl Default for ScenarioConfig {
             codec_reject_budget: 16,
             gw_max_sessions: 0,
             faults: Vec::new(),
+            autoscale: None,
+            diurnal: None,
             max_events: 2_000_000,
         }
     }
@@ -365,6 +392,18 @@ pub struct GatewayOutcome {
     pub drained_handoffs: u64,
 }
 
+/// What the closed autoscaling loop did over the run (all zero when
+/// [`ScenarioConfig::autoscale`] is `None`).
+#[derive(Debug, Default)]
+pub struct AutoscaleOutcome {
+    /// windowed load samples taken
+    pub samples: u64,
+    /// shard joins driven by an autoscaler verdict (not a timed fault)
+    pub scale_ups: u64,
+    /// shard leaves driven by an autoscaler verdict
+    pub scale_downs: u64,
+}
+
 #[derive(Debug)]
 pub struct ScenarioReport {
     /// the canonical event log (byte-identical across same-seed runs)
@@ -372,6 +411,7 @@ pub struct ScenarioReport {
     pub clients: Vec<ClientOutcome>,
     pub shards: Vec<ShardOutcome>,
     pub gateway: GatewayOutcome,
+    pub autoscale: AutoscaleOutcome,
     /// final topology state per shard (gateway mode)
     pub shard_states: Vec<ShardState>,
     /// final `Topology::drained` verdict per shard (gateway mode)
@@ -465,6 +505,8 @@ enum Ev {
     /// alive
     ExecDone { s: usize, incarnation: u64, replies: Vec<SimReply>, published: Vec<Vec<f32>> },
     Probe,
+    /// closed-loop autoscaler takes a windowed load sample
+    AutoscaleTick,
     /// index into cfg.faults
     Fault(usize),
     /// a malicious client's next hostile frame goes on the wire
@@ -643,10 +685,24 @@ struct World {
     gw: GatewaySim,
     probe_stats: Vec<ProbeStats>,
     partitioned: Vec<bool>,
+    auto: Option<AutoSim>,
     n_events: usize,
     /// seeded jitter source for overload backoff — the only random draw
     /// outside the transport, consumed in deterministic delivery order
     rng: Rng,
+}
+
+/// Closed-loop autoscaling state: the policy, the windowed sampler, and the
+/// cumulative queue-wait histogram it samples. The histogram records fill
+/// wait *plus* executor backlog per batched item — the sim analogue of the
+/// threaded metrics' queue_wait — kept separate from the protocol-visible
+/// `qw_us` (which deliberately excludes backlog because it feeds the client
+/// rate controllers).
+struct AutoSim {
+    scaler: Autoscaler,
+    window: LoadWindow,
+    queue: LatencyHist,
+    out: AutoscaleOutcome,
 }
 
 /// Encode a message to its frame body (length prefix stripped): the byte
@@ -728,14 +784,28 @@ impl World {
                 cfg.feat
             );
         }
+        if let Some(spec) = &cfg.autoscale {
+            if !(spec.interval > 0.0) || !spec.interval.is_finite() {
+                bail!("autoscale sampling interval must be a positive finite number of seconds");
+            }
+            if !cfg.gateway {
+                bail!("closed-loop autoscaling needs the gateway (it drives migrations)");
+            }
+        }
+        if let Some((period, idle_factor)) = cfg.diurnal {
+            if !(period > 0.0) || !period.is_finite() || !(idle_factor >= 1.0) {
+                bail!("diurnal curve needs period > 0 and idle_factor >= 1");
+            }
+        }
         let mut net = SimNet::new(cfg.seed);
         let mut owners = Vec::new();
         let mut topology = Topology::new(32);
         // spare capacity is provisioned up front (lanes, slots) so the
         // owner table and lane ids are identical whether or not a timed
-        // AddShard ever fires: spares start dead and outside the ring,
-        // and joining later is a state change, not a topology-of-the-sim
-        // change — determinism never depends on the fault plan's timing
+        // AddShard (or an autoscaler verdict) ever fires: spares start dead
+        // and outside the ring, and joining later is a state change, not a
+        // topology-of-the-sim change — determinism never depends on the
+        // fault plan's timing or on when the autoscaler chooses to act
         let provisioned = cfg
             .faults
             .iter()
@@ -745,6 +815,7 @@ impl World {
             })
             .max()
             .unwrap_or(0)
+            .max(cfg.autoscale.as_ref().map(|a| a.cfg.max_shards).unwrap_or(0))
             .max(cfg.shards);
         let mut shards = Vec::with_capacity(provisioned);
         for s in 0..provisioned {
@@ -863,6 +934,14 @@ impl World {
         // stream is independent of the transport's, so enabling admission
         // control never perturbs link-level draws
         let rng = Rng::new(cfg.seed ^ 0xB0FF_5E77_ED0C_4A11);
+        // Autoscaler::new asserts its watermark bands are non-empty; a sim
+        // config that violates them should fail loudly at construction too
+        let auto = cfg.autoscale.as_ref().map(|spec| AutoSim {
+            scaler: Autoscaler::new(spec.cfg.clone()),
+            window: LoadWindow::new(),
+            queue: LatencyHist::default(),
+            out: AutoscaleOutcome::default(),
+        });
         Ok(World {
             cfg,
             clock: SimClock::new(),
@@ -886,6 +965,7 @@ impl World {
             },
             probe_stats: vec![ProbeStats::default(); provisioned],
             partitioned: vec![false; provisioned],
+            auto,
             n_events: 0,
             rng,
         })
@@ -906,6 +986,9 @@ impl World {
         }
         if let Some(p) = self.cfg.probe_interval {
             self.events.push(p, Ev::Probe);
+        }
+        if let Some(spec) = &self.cfg.autoscale {
+            self.events.push(spec.interval, Ev::AutoscaleTick);
         }
     }
 
@@ -974,6 +1057,7 @@ impl World {
                 })
                 .collect(),
             gateway: self.gw.out,
+            autoscale: self.auto.map(|a| a.out).unwrap_or_default(),
             shard_states,
             drained,
             elapsed: self.clock.now_secs(),
@@ -993,6 +1077,22 @@ impl World {
         }
     }
 
+    /// The idle gap before a client's next decision at virtual time `t`:
+    /// the configured `think`, optionally stretched by the diurnal curve.
+    /// The curve is a triangle wave — `think * idle_factor` in the trough
+    /// (phase 0), shrinking linearly to `think` at the peak (phase 0.5) and
+    /// back — so demand ramps into a mid-period rush hour and drains out of
+    /// it, with no transcendental functions anywhere near the timeline.
+    fn think_gap(&self, t: f64) -> f64 {
+        let think = self.cfg.think;
+        let Some((period, idle_factor)) = self.cfg.diurnal else {
+            return think;
+        };
+        let phase = (t / period).fract();
+        let tri = 1.0 - (2.0 * phase - 1.0).abs();
+        think * (idle_factor + (1.0 - idle_factor) * tri)
+    }
+
     // -- event handlers -----------------------------------------------------
 
     fn on_event(&mut self, t: f64, ev: Ev) {
@@ -1007,6 +1107,7 @@ impl World {
                 self.shard_exec_done(t, s, incarnation, replies, published)
             }
             Ev::Probe => self.probe_round(t),
+            Ev::AutoscaleTick => self.autoscale_tick(t),
             Ev::Fault(k) => self.apply_fault(t, k),
             Ev::Attack(c) => self.client_attack(t, c),
         }
@@ -1490,7 +1591,7 @@ impl World {
         action: &[f32],
         feedback: Option<(u32, bool, u32)>,
     ) {
-        let think = self.cfg.think;
+        let think = self.think_gap(t);
         let cl = &mut self.clients[c];
         if cl.finished {
             return;
@@ -1549,7 +1650,7 @@ impl World {
     /// discipline sees the retry as a duplicate or a fresh frame — never a
     /// hole in the trajectory.
     fn learn_on_response(&mut self, t: f64, c: usize, r: ResponseLearn) {
-        let think = self.cfg.think;
+        let think = self.think_gap(t);
         let spec = self.cfg.learning.as_ref();
         let max_lag = spec.map(|sp| sp.max_lag).unwrap_or(0);
         let episodes = spec.map(|sp| sp.episodes).unwrap_or(0) as u32;
@@ -2153,6 +2254,18 @@ impl World {
             self.shards[s].collector.take_into(route, &mut batch);
             let n = batch.len();
             let start = t.max(self.shards[s].busy_until);
+            // the autoscaler's queue signal: enqueue → actual execution
+            // start, i.e. fill wait plus executor backlog. The
+            // protocol-visible qw_us below deliberately excludes backlog
+            // (it feeds the client rate controllers), so the loop samples
+            // its own histogram without touching the wire format
+            if let Some(auto) = self.auto.as_mut() {
+                let backlog = start - t;
+                for item in &batch {
+                    let waited = now_i.duration_since(item.enqueued).as_secs_f64() + backlog;
+                    auto.queue.record_ns(waited * 1e9);
+                }
+            }
             // thermal: integrate the idle stretch, read the throttle state
             let mut factor = 1.0;
             if let Some((idle_w, _, throttle_factor)) = thermal_cfg {
@@ -2580,74 +2693,14 @@ impl World {
                 self.net.cut(up, true, t, &mut self.log);
             }
             FaultCmd::AddShard(s) => {
-                if self.gw.topology.state(ShardId(s as u16)).is_some() {
+                if !self.join_shard(t, s, "fault_add_shard", "scale_up") {
                     // already in the ring: joining is not re-entrant
                     self.log.record(t, "add_shard_noop", &format!("shard={s}"));
-                    return;
-                }
-                let policy = self.cfg.policy;
-                let max_depth = self.cfg.max_depth;
-                let learn_spec = self.cfg.learning.as_ref().map(|sp| sp.learner.clone());
-                // the pre-provisioned spare boots with fresh state, exactly
-                // like a restart: nothing from any earlier incarnation
-                // (decoder bases, sessions, quarantine verdicts) survives
-                let sh = &mut self.shards[s];
-                sh.alive = true;
-                sh.incarnation += 1;
-                sh.collector = BatchCollector::new(policy, max_depth);
-                sh.sessions = SessionManager::new();
-                sh.codecs = Decoders::new();
-                sh.learn = learn_spec.map(Learner::new);
-                sh.quarantined.clear();
-                sh.busy_until = t;
-                let (up, down) = (sh.up, sh.down);
-                self.net.reopen(up, t, &mut self.log);
-                self.net.reopen(down, t, &mut self.log);
-                self.gw.topology.add_shard(
-                    ShardId(s as u16),
-                    format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
-                );
-                self.log.record(
-                    t,
-                    "fault_add_shard",
-                    &format!("shard={s} epoch={}", self.gw.topology.epoch()),
-                );
-                if self.cfg.gateway {
-                    // a joining shard acts at policy version 0: push the
-                    // fleet-latest snapshot down its trunk immediately so
-                    // it never serves archaic actions to migrated sessions
-                    let snap = self.gw.store.snapshot();
-                    if !snap.params.is_empty() {
-                        self.gw.out.policy_resyncs += 1;
-                        let body = msg_body(&Msg::Policy(PolicySync {
-                            version: snap.version,
-                            params: snap.params.clone(),
-                        }));
-                        let up = self.shards[s].up;
-                        self.net.send(up, t, &body, &mut self.log);
-                        self.log
-                            .record(t, "resync", &format!("shard={s} version={}", snap.version));
-                    }
-                    self.migrate_sessions(t, "scale_up");
                 }
             }
             FaultCmd::RemoveShard(s) => {
-                if self.gw.topology.state(ShardId(s as u16)).is_none() {
+                if !self.leave_shard(t, s, "fault_remove_shard", "scale_down") {
                     self.log.record(t, "remove_shard_noop", &format!("shard={s}"));
-                    return;
-                }
-                // planned scale-down: the shard leaves the ring (epoch
-                // bump), its sessions enter the drain state machine, and
-                // the process itself stays up to answer everything still
-                // in flight — nothing new routes to it once its pins move
-                self.gw.topology.remove_shard(ShardId(s as u16));
-                self.log.record(
-                    t,
-                    "fault_remove_shard",
-                    &format!("shard={s} epoch={}", self.gw.topology.epoch()),
-                );
-                if self.cfg.gateway {
-                    self.migrate_sessions(t, "scale_down");
                 }
             }
             FaultCmd::SampleThermal(s) => {
@@ -2667,6 +2720,141 @@ impl World {
                     );
                 }
             }
+        }
+    }
+
+    /// A pre-provisioned shard joins the ring — by timed fault or by
+    /// autoscaler verdict; `tag` names the log line and `why` labels the
+    /// migration sweep. Returns false (and does nothing) when the shard is
+    /// already in the ring.
+    fn join_shard(&mut self, t: f64, s: usize, tag: &str, why: &str) -> bool {
+        if self.gw.topology.state(ShardId(s as u16)).is_some() {
+            return false;
+        }
+        let policy = self.cfg.policy;
+        let max_depth = self.cfg.max_depth;
+        let learn_spec = self.cfg.learning.as_ref().map(|sp| sp.learner.clone());
+        // the pre-provisioned spare boots with fresh state, exactly
+        // like a restart: nothing from any earlier incarnation
+        // (decoder bases, sessions, quarantine verdicts) survives
+        let sh = &mut self.shards[s];
+        sh.alive = true;
+        sh.incarnation += 1;
+        sh.collector = BatchCollector::new(policy, max_depth);
+        sh.sessions = SessionManager::new();
+        sh.codecs = Decoders::new();
+        sh.learn = learn_spec.map(Learner::new);
+        sh.quarantined.clear();
+        sh.busy_until = t;
+        let (up, down) = (sh.up, sh.down);
+        self.net.reopen(up, t, &mut self.log);
+        self.net.reopen(down, t, &mut self.log);
+        self.gw.topology.add_shard(
+            ShardId(s as u16),
+            format!("127.0.0.1:{}", 9000 + s).parse().unwrap(),
+        );
+        self.log.record(t, tag, &format!("shard={s} epoch={}", self.gw.topology.epoch()));
+        if self.cfg.gateway {
+            // a joining shard acts at policy version 0: push the
+            // fleet-latest snapshot down its trunk immediately so
+            // it never serves archaic actions to migrated sessions
+            let snap = self.gw.store.snapshot();
+            if !snap.params.is_empty() {
+                self.gw.out.policy_resyncs += 1;
+                let body = msg_body(&Msg::Policy(PolicySync {
+                    version: snap.version,
+                    params: snap.params.clone(),
+                }));
+                let up = self.shards[s].up;
+                self.net.send(up, t, &body, &mut self.log);
+                self.log.record(t, "resync", &format!("shard={s} version={}", snap.version));
+            }
+            self.migrate_sessions(t, why);
+        }
+        true
+    }
+
+    /// A shard leaves the ring — by timed fault or by autoscaler verdict.
+    /// Planned scale-down: the topology epoch bumps, its sessions enter the
+    /// drain state machine, and the process itself stays up to answer
+    /// everything still in flight — nothing new routes to it once its pins
+    /// move. Returns false when the shard is not in the ring.
+    fn leave_shard(&mut self, t: f64, s: usize, tag: &str, why: &str) -> bool {
+        if self.gw.topology.state(ShardId(s as u16)).is_none() {
+            return false;
+        }
+        self.gw.topology.remove_shard(ShardId(s as u16));
+        self.log.record(t, tag, &format!("shard={s} epoch={}", self.gw.topology.epoch()));
+        if self.cfg.gateway {
+            self.migrate_sessions(t, why);
+        }
+        true
+    }
+
+    /// One closed-loop autoscaling observation (DESIGN.md §11): subtract
+    /// the previous tick's cumulative state from the queue-wait histogram
+    /// and the gateway admission counters, feed the windowed sample to the
+    /// autoscaler on the virtual clock, and apply its verdict through the
+    /// same join/leave machinery the timed faults use. Spares join lowest
+    /// index first and the highest-index ring member leaves first, so the
+    /// shard chosen is a pure function of ring state.
+    fn autoscale_tick(&mut self, t: f64) {
+        let Some(interval) = self.cfg.autoscale.as_ref().map(|sp| sp.interval) else {
+            return;
+        };
+        let routable = self.gw.topology.n_routable();
+        let gateway = GatewayCounters {
+            shed_sessions: self.gw.out.shed_hellos,
+            rate_limited: 0,
+            quarantined_sessions: self.gw.out.quarantined_sessions,
+            quarantine_drops: self.gw.out.quarantine_drops,
+        };
+        let requests = self.gw.out.forwarded_requests;
+        let auto = self.auto.as_mut().expect("autoscale spec without AutoSim state");
+        let sample = auto.window.sample_parts(&auto.queue, gateway, requests, routable);
+        let action = auto.scaler.observe(t, sample);
+        auto.out.samples += 1;
+        self.log.record(
+            t,
+            "autoscale_sample",
+            &format!(
+                "p95_us={} shed={:.4} shards={} verdict={:?}",
+                sample.queue_p95_ns / 1000,
+                sample.shed_rate,
+                sample.shards,
+                action
+            ),
+        );
+        match action {
+            ScaleAction::ScaleUp => {
+                // lowest-index provisioned spare outside the ring
+                let target = (0..self.shards.len())
+                    .find(|&s| self.gw.topology.state(ShardId(s as u16)).is_none());
+                if let Some(s) = target {
+                    if self.join_shard(t, s, "autoscale_add_shard", "autoscale_up") {
+                        if let Some(a) = self.auto.as_mut() {
+                            a.out.scale_ups += 1;
+                        }
+                    }
+                }
+            }
+            ScaleAction::ScaleDown => {
+                // highest-index ring member leaves first
+                let target = (0..self.shards.len())
+                    .rev()
+                    .find(|&s| self.gw.topology.state(ShardId(s as u16)).is_some());
+                if let Some(s) = target {
+                    if self.leave_shard(t, s, "autoscale_remove_shard", "autoscale_down") {
+                        if let Some(a) = self.auto.as_mut() {
+                            a.out.scale_downs += 1;
+                        }
+                    }
+                }
+            }
+            ScaleAction::Hold => {}
+        }
+        if !self.all_done() {
+            self.events.push(t + interval, Ev::AutoscaleTick);
         }
     }
 
@@ -2889,6 +3077,65 @@ mod tests {
             ..base(1)
         };
         assert!(run_scenario(&cfg).is_err());
+    }
+
+    #[test]
+    fn diurnal_think_gap_is_a_bounded_periodic_triangle() {
+        let cfg = ScenarioConfig { think: 0.01, diurnal: Some((10.0, 5.0)), ..base(1) };
+        let w = World::new(cfg).unwrap();
+        // trough at phase 0 stretches think by idle_factor; peak at
+        // phase 0.5 is the configured think; one full period later the
+        // curve repeats exactly
+        assert!((w.think_gap(0.0) - 0.05).abs() < 1e-12);
+        assert!((w.think_gap(5.0) - 0.01).abs() < 1e-12);
+        assert!((w.think_gap(15.0) - 0.01).abs() < 1e-12);
+        for i in 0..200 {
+            let g = w.think_gap(i as f64 * 0.37);
+            assert!((0.01 - 1e-12..=0.05 + 1e-12).contains(&g), "gap {g} escaped the band");
+        }
+        // no curve configured: the gap is flat
+        let flat = World::new(ScenarioConfig { think: 0.02, ..base(1) }).unwrap();
+        assert_eq!(flat.think_gap(123.4), 0.02);
+    }
+
+    #[test]
+    fn idle_autoscaled_scenario_samples_but_never_acts() {
+        // a light run far below every watermark: the loop must observe on
+        // its cadence and hold — scaling on noise would churn migrations
+        let cfg = ScenarioConfig {
+            think: 0.001,
+            decisions: 32,
+            autoscale: Some(AutoscaleSpec {
+                cfg: AutoscaleConfig { min_shards: 1, max_shards: 4, ..AutoscaleConfig::default() },
+                interval: 0.005,
+            }),
+            ..base(6)
+        };
+        let r = run_scenario(&cfg).unwrap();
+        assert_eq!(r.total_give_ups(), 0);
+        assert!(r.autoscale.samples >= 2, "samples={}", r.autoscale.samples);
+        assert_eq!(r.autoscale.scale_ups, 0);
+        assert_eq!(r.autoscale.scale_downs, 0);
+        assert!(r.log.contains(" autoscale_sample "), "sample lines must be in the log");
+        assert_eq!(r.gateway.migrations, 0);
+    }
+
+    #[test]
+    fn rejects_autoscale_without_gateway_and_bad_diurnal_curves() {
+        assert!(run_scenario(&ScenarioConfig {
+            gateway: false,
+            shards: 1,
+            autoscale: Some(AutoscaleSpec { cfg: AutoscaleConfig::default(), interval: 1.0 }),
+            ..base(1)
+        })
+        .is_err());
+        assert!(run_scenario(&ScenarioConfig {
+            autoscale: Some(AutoscaleSpec { cfg: AutoscaleConfig::default(), interval: 0.0 }),
+            ..base(1)
+        })
+        .is_err());
+        assert!(run_scenario(&ScenarioConfig { diurnal: Some((0.0, 2.0)), ..base(1) }).is_err());
+        assert!(run_scenario(&ScenarioConfig { diurnal: Some((10.0, 0.5)), ..base(1) }).is_err());
     }
 
     #[test]

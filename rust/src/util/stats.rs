@@ -187,7 +187,11 @@ impl LatencyHist {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        // Degenerate q must never poison the result: ±inf and any finite
+        // value outside [0,1] clamp to the endpoints, NaN reads as the
+        // median. The return value is always a finite bucket midpoint.
+        let q = if q.is_nan() { 0.5 } else { q.clamp(0.0, 1.0) };
+        let target = (q * self.count as f64).ceil() as u64;
         let mut seen = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
@@ -204,6 +208,24 @@ impl LatencyHist {
         }
         self.count += other.count;
         self.sum += other.sum;
+    }
+
+    /// The histogram of only the events recorded since `prev` was cloned
+    /// off this recorder: saturating bucket-wise subtraction, so quantiles
+    /// of the result describe the observation *window* rather than the
+    /// process lifetime. `count` is recomputed from the subtracted buckets
+    /// (and `sum` floored at zero), so a `prev` that is not actually an
+    /// earlier snapshot of `self` still yields a self-consistent — if
+    /// meaningless — histogram instead of underflowing.
+    pub fn delta(&self, prev: &LatencyHist) -> LatencyHist {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .zip(&prev.buckets)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let count = buckets.iter().sum();
+        LatencyHist { buckets, count, sum: (self.sum - prev.sum).max(0.0) }
     }
 }
 
@@ -284,5 +306,79 @@ mod tests {
         h.record_ns(1000.0);
         h.record_ns(3000.0);
         assert!((h.mean_ns() - 2000.0).abs() < 1e-9);
+    }
+
+    /// `delta` must describe only the window between two snapshots: a slow
+    /// event before the snapshot cannot leak into the window's quantiles.
+    #[test]
+    fn hist_delta_isolates_the_observation_window() {
+        let mut h = LatencyHist::new();
+        h.record_ns(500e6); // historical 500 ms outlier
+        let snap = h.clone();
+        for _ in 0..100 {
+            h.record_ns(1e6); // the window: all 1 ms
+        }
+        let w = h.delta(&snap);
+        assert_eq!(w.count(), 100);
+        let p95 = w.quantile_ns(0.95);
+        assert!(p95 < 2e6, "window p95 {p95} still sees the pre-window outlier");
+        // the lifetime histogram, by contrast, keeps the outlier at p100
+        assert!(h.quantile_ns(1.0) > 400e6);
+        // delta against an equal snapshot is empty
+        let empty = h.delta(&h);
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.quantile_ns(0.95), 0.0);
+    }
+
+    /// A `prev` that is not an earlier snapshot must saturate, not
+    /// underflow: counts recompute from the subtracted buckets.
+    #[test]
+    fn hist_delta_saturates_on_non_prefix_prev() {
+        let mut a = LatencyHist::new();
+        a.record_ns(1e6);
+        let mut b = LatencyHist::new();
+        b.record_ns(1e6);
+        b.record_ns(1e6);
+        b.record_ns(9e6);
+        let d = a.delta(&b);
+        assert_eq!(d.count(), 0);
+        assert_eq!(d.mean_ns(), 0.0);
+        assert!(d.sum >= 0.0);
+    }
+
+    /// Property: quantile_ns stays finite and within the bucket range for
+    /// every q, including NaN, ±inf, and values far outside [0,1].
+    #[test]
+    fn hist_quantile_finite_for_degenerate_q() {
+        use crate::util::proptest::{check, prop_assert};
+        check(300, |g| {
+            let mut h = LatencyHist::new();
+            for _ in 0..g.usize(1, 50) {
+                h.record_ns(g.f64(0.0, 1e9));
+            }
+            let q = match g.usize(0, 5) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => g.f64(-100.0, 0.0),
+                4 => g.f64(1.0, 100.0),
+                _ => g.f64(0.0, 1.0),
+            };
+            let v = h.quantile_ns(q);
+            prop_assert(v.is_finite(), format!("quantile_ns({q}) = {v} not finite"))?;
+            prop_assert(v >= 0.0, format!("quantile_ns({q}) = {v} negative"))?;
+            prop_assert(
+                v <= LatencyHist::bucket_value(HIST_BUCKETS - 1),
+                format!("quantile_ns({q}) = {v} above the top bucket"),
+            )?;
+            // clamping puts every out-of-range q at an endpoint
+            if q > 1.0 {
+                prop_assert(v == h.quantile_ns(1.0), "q>1 must clamp to q=1")?;
+            }
+            if q < 0.0 {
+                prop_assert(v == h.quantile_ns(0.0), "q<0 must clamp to q=0")?;
+            }
+            Ok(())
+        });
     }
 }

@@ -13,13 +13,14 @@ use miniconv::analysis::breakeven::split_wins;
 use miniconv::codec::{CodecId, RateConfig};
 use miniconv::coordinator::BatchPolicy;
 use miniconv::device::ThermalModel;
-use miniconv::fleet::{ShardId, ShardState, Topology};
+use miniconv::fleet::{AutoscaleConfig, ShardId, ShardState, Topology};
 use miniconv::learn::LearnerConfig;
 use miniconv::net::LinkModel;
 use miniconv::rl::native::NativeConfig;
 use miniconv::rl::{NativeTrainer, TrainConfig};
 use miniconv::sim::{
-    run_scenario, FaultCmd, LearnSpec, LinkFaults, ScenarioConfig, ScenarioReport, ThermalSpec,
+    run_scenario, AutoscaleSpec, FaultCmd, LearnSpec, LinkFaults, ScenarioConfig, ScenarioReport,
+    ThermalSpec,
 };
 
 const SEEDS: [u64; 3] = [11, 23, 47];
@@ -1369,5 +1370,156 @@ fn crash_mid_migration_lands_every_session_on_exactly_one_live_shard() {
         assert!(r.log.contains(" fault_remove_shard "), "seed {seed}");
         assert!(r.log.contains(" fault_crash "), "seed {seed}");
         assert!(r.log.contains(" trunk_lost "), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 22: diurnal breathing — no scripted topology faults at all. The
+// closed autoscaling loop samples windowed queue pressure on a virtual-time
+// cadence and drives the same drain/cut-over migration machinery the timed
+// faults use: the fleet grows into the rush-hour peak and shrinks back in
+// the trough, sessions (learning ones included) migrate with zero lost
+// transitions and exactly one forced keyframe per handoff, and the whole
+// breathing pattern is byte-identical per seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diurnal_load_breathes_the_fleet_through_the_autoscaler() {
+    let n_split = 14;
+    let n_learn = 2;
+    let n_clients = n_split + n_learn;
+    let decisions = 200;
+    let cooldown = 12.0;
+    // growing 2 -> 3 must hand the newcomer a non-empty keyspace,
+    // otherwise a scale-up is unobservable through the migration ledger
+    let moved = moved_by_adding_shard(n_clients, 2, 2);
+    assert!(!moved.is_empty(), "adding shard 2 moved no keyspace; grow the client count");
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            shards: 2,
+            raw_clients: 0,
+            split_clients: n_split,
+            decisions,
+            feat: (3, 16, 16),
+            pendulum_stream: true,
+            codec: CodecId::Delta,
+            // rush hour by arithmetic: the 20 ms peak think stretches 400x
+            // in the trough, so demand sweeps from ~0 to well past what two
+            // shards can serve and back, twice over the run
+            think: 0.02,
+            diurnal: Some((240.0, 400.0)),
+            // small batches against a slow executor: at the peak every
+            // shard runs a deep backlog (the windowed p95 the scaler sees),
+            // in the trough lone items fire on the 0.5 ms deadline
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(500) },
+            exec_fixed: 0.02,
+            exec_per_item: 0.01,
+            learning: Some(LearnSpec {
+                clients: n_learn,
+                episodes: 1,
+                learner: small_learner(seed),
+                ..LearnSpec::default()
+            }),
+            autoscale: Some(AutoscaleSpec {
+                cfg: AutoscaleConfig {
+                    min_shards: 2,
+                    max_shards: 4,
+                    queue_high_ns: 20_000_000, // 20 ms of windowed p95
+                    queue_low_ns: 5_000_000,   // 5 ms
+                    shed_high: 0.05,
+                    shed_low: 0.005,
+                    confirm: 3,
+                    cooldown,
+                },
+                interval: 2.0,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("diurnal_breathing", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed breathing logs diverged");
+
+        // the headline: the autoscaler — not a scripted fault — moved the
+        // topology both ways
+        assert!(r.autoscale.samples > 0, "seed {seed}: the loop never sampled");
+        assert!(r.autoscale.scale_ups >= 1, "seed {seed}: never grew into the peak");
+        assert!(r.autoscale.scale_downs >= 1, "seed {seed}: never shrank after the peak");
+        assert!(r.log.contains(" autoscale_sample "), "seed {seed}");
+        assert!(r.log.contains(" autoscale_add_shard "), "seed {seed}");
+        assert!(r.log.contains(" autoscale_remove_shard "), "seed {seed}");
+        assert!(r.log.contains("why=autoscale_up"), "seed {seed}");
+        assert!(r.log.contains("why=autoscale_down"), "seed {seed}");
+        assert!(!r.log.contains(" fault_add_shard "), "seed {seed}: a scripted fault leaked in");
+        assert!(!r.log.contains(" fault_remove_shard "), "seed {seed}");
+
+        // damping: the cooldown bounds topology churn per simulated hour —
+        // actions can never outnumber elapsed/cooldown, however hairy the
+        // load curve gets
+        let actions = r.autoscale.scale_ups + r.autoscale.scale_downs;
+        assert!(
+            (actions as f64) <= r.elapsed / cooldown + 1.0,
+            "seed {seed}: {actions} actions in {:.0}s breaks the cooldown bound",
+            r.elapsed
+        );
+        assert!(
+            r.gateway.migrations <= actions * n_clients as u64,
+            "seed {seed}: more migrations than scale actions can explain"
+        );
+
+        // every scale action migrated through the drain state machine:
+        // planned handoffs only, zero lost learning transitions, exactly
+        // one forced keyframe (and one refused delta) per migrated session
+        assert!(r.gateway.migrations > 0, "seed {seed}: scaling never migrated a session");
+        assert_eq!(r.gateway.drained_handoffs, r.gateway.migrations, "seed {seed}");
+        assert!(r.log.contains("drained=true"), "seed {seed}");
+        assert!(!r.log.contains("drained=false"), "seed {seed}: a forced handoff leaked in");
+        assert_eq!(r.gateway.reassigned, r.gateway.migrations, "seed {seed}");
+        assert_eq!(r.total_dropped_transitions(), 0, "seed {seed}: a transition died");
+        let need: u64 = r.clients.iter().map(|c| c.need_keyframes).sum();
+        let rejects: u64 = r.shards.iter().map(|s| s.codec_rejects).sum();
+        assert_eq!(need, r.gateway.migrations, "seed {seed}: re-sync storm unbounded");
+        assert_eq!(rejects, r.gateway.migrations, "seed {seed}");
+        let mismatches: u64 = r.clients.iter().map(|c| c.payload_mismatches).sum();
+        assert_eq!(mismatches, 0, "seed {seed}: a stale base was silently decoded");
+        let started = migration_log_sessions(&r.log, "migrate_start");
+        let finished = migration_log_sessions(&r.log, "migrate");
+        assert_eq!(started.len(), finished.len(), "seed {seed}: a migration never completed");
+        assert_eq!(r.gateway.migrations, finished.len() as u64, "seed {seed}");
+
+        // client-side liveness through both breaths: nobody starved, the
+        // split-side decision ledger balances, and the learning episodes
+        // all completed with sane returns
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}: a client starved");
+        let answered: usize = r.clients[..n_split].iter().map(|c| c.decisions).sum();
+        let rejected: u64 = r.clients[..n_split].iter().map(|c| c.rejected).sum();
+        assert_eq!(
+            answered as u64 + rejected,
+            (n_split * decisions) as u64,
+            "seed {seed}: the split decision ledger does not balance"
+        );
+        assert_eq!(r.total_episodes(), n_learn, "seed {seed}: episodes lost");
+        for (i, c) in r.clients[n_split..].iter().enumerate() {
+            assert_eq!(c.returns.len(), 1, "seed {seed} learner {i}");
+            assert!(
+                (-4000.0..=0.0).contains(&c.returns[0]),
+                "seed {seed} learner {i}: {}",
+                c.returns[0]
+            );
+        }
+        assert_eq!(r.total_applied_stale(), 0, "seed {seed}");
+        assert_eq!(r.gateway.no_route, 0, "seed {seed}");
+        assert_eq!(r.total_quarantined(), 0, "seed {seed}");
+        assert!(at_most_one_ack_per_epoch(&r), "seed {seed}");
+        // the fleet ends inside its configured bounds, with every breath
+        // sampled on the virtual clock (two samples per cooldown at least)
+        let up_now = r.shard_states.iter().filter(|&&s| s == ShardState::Up).count();
+        assert!((2..=4).contains(&up_now), "seed {seed}: {up_now} shards outside [2, 4]");
+        // (stale timeouts scheduled before the last decision can trail the
+        // final tick, so give the cadence a few windows of slack)
+        assert!(
+            r.autoscale.samples as f64 >= r.elapsed / 2.0 - 4.0,
+            "seed {seed}: sampling cadence drifted"
+        );
     }
 }
