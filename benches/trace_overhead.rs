@@ -1,0 +1,242 @@
+//! Tracing overhead harness (DESIGN.md §12): the per-decision span layer
+//! must be cheap enough to leave on.
+//!
+//! Two measurements, two gates (both embedded in the JSON):
+//!   * end-to-end: identical loopback fleets (Sim backend, 8 clients)
+//!     with tracing off vs on — traced throughput may lose at most 5% of
+//!     untraced requests/sec;
+//!   * trace layer in isolation: the full per-decision op chain (mint →
+//!     client stamps → trailer append → gateway in-place stamp → shard
+//!     peel/stamp/re-append → client peel → ring push) over preallocated
+//!     buffers must do 0 heap allocations per decision, measured by the
+//!     counting global allocator (shared impl: `util::alloc_counter`).
+//!
+//! Results land in `BENCH_trace.json` (override with `--out` or the
+//! `BENCH_TRACE_OUT` env var). `--iters N` sets decisions per client — CI
+//! runs a cheap smoke pass with a tiny N, where loopback throughput is
+//! noise; below 100 iters the throughput metrics and the overhead gate
+//! are emitted as `null` (the alloc count is deterministic and always
+//! reported). Gate verdicts are only meaningful at the default.
+
+use std::time::{Duration, Instant};
+
+use miniconv::coordinator::{
+    run_fleet, serve, Backend, BatchPolicy, ClientConfig, Route, ServerConfig, SimSpec,
+};
+use miniconv::net::framing::{Msg, Payload, Request};
+use miniconv::trace::{
+    append_trailer, split_trailer, stamp_body_tail, Ring, TraceCtx, STAGE_DEQUEUE, STAGE_ENCODE,
+    STAGE_ENQUEUE, STAGE_EXECUTE, STAGE_GW_FORWARD, STAGE_PACK, STAGE_RECV, STAGE_REPLY,
+    STAGE_SEND, TRACE_WIRE_BYTES,
+};
+use miniconv::util::alloc_counter::CountingAlloc;
+use miniconv::util::argparse::Parser;
+use miniconv::util::tables::Table;
+
+// counts heap allocations so the zero-allocation claim is measured, not
+// asserted by inspection
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const CLIENTS: usize = 8;
+const MAX_BATCH: usize = 8;
+const OBS_X: usize = 24;
+const RING_CAP: usize = 1024;
+/// Below this many decisions per client, loopback req/s is noise: the
+/// throughput metrics and the overhead verdict are withheld (null).
+const MEANINGFUL_ITERS: usize = 100;
+
+fn server_config(trace: bool) -> ServerConfig {
+    ServerConfig {
+        policy: BatchPolicy { max_batch: MAX_BATCH, max_wait: Duration::from_millis(1) },
+        backend: Backend::Sim(SimSpec {
+            fixed: Duration::from_micros(300),
+            per_item: Duration::from_micros(100),
+            action_dim: 1,
+            encode: false,
+        }),
+        trace,
+        ..ServerConfig::default()
+    }
+}
+
+fn client_config(trace: bool, decisions: usize) -> ClientConfig {
+    ClientConfig {
+        mode: Route::Full,
+        decisions,
+        obs_x: Some(OBS_X),
+        trace,
+        ..ClientConfig::default()
+    }
+}
+
+/// One loopback cell: a fresh server, `CLIENTS` concurrent clients,
+/// `decisions` each. Returns end-to-end requests/sec.
+fn loopback_req_s(trace: bool, decisions: usize) -> f64 {
+    let server = serve(server_config(trace)).expect("loopback server");
+    let t0 = Instant::now();
+    let reports =
+        run_fleet(server.addr, CLIENTS, &client_config(trace, decisions)).expect("fleet run");
+    let secs = t0.elapsed().as_secs_f64();
+    for (c, r) in reports.iter().enumerate() {
+        assert_eq!(r.decisions, decisions, "client {c} lost decisions");
+        assert_eq!(r.errors, 0, "client {c} saw rejections");
+        // the traced cell must actually trace, or the comparison is a lie
+        let want = if trace { decisions } else { 0 };
+        assert_eq!(r.traces.len(), want, "client {c}: unexpected span count");
+    }
+    server.shutdown();
+    (CLIENTS * decisions) as f64 / secs.max(1e-9)
+}
+
+/// The complete trace-layer op chain for one decision, client to client,
+/// over preallocated buffers. Timestamps come from a counter — the chain
+/// under test is the span plumbing, not the clock.
+fn one_decision(proto: &[u8], body: &mut Vec<u8>, ring: &mut Ring, t: &mut u64, id: u64) {
+    let tick = |t: &mut u64| {
+        *t += 1;
+        *t
+    };
+    // client: encode into the reused wire buffer, open + stamp the span
+    body.clear();
+    body.extend_from_slice(proto);
+    let mut ctx = TraceCtx::mint(id, tick(t));
+    ctx.stamp(STAGE_ENCODE, tick(t));
+    ctx.stamp(STAGE_SEND, tick(t));
+    append_trailer(body, &ctx);
+    // gateway: forward-pump stamp, in place, no decode
+    assert!(stamp_body_tail(body, STAGE_GW_FORWARD, tick(t)), "gateway stamp refused");
+    // shard: peel (ctx is Copy — extract it, end the borrow), stamp the
+    // batching hops, re-append onto the reply
+    let (inner_len, mut shard) = {
+        let (inner, c) = split_trailer(body).expect("request trailer peels");
+        (inner.len(), c)
+    };
+    for stage in [STAGE_ENQUEUE, STAGE_DEQUEUE, STAGE_PACK, STAGE_EXECUTE, STAGE_REPLY] {
+        shard.stamp(stage, tick(t));
+    }
+    body.truncate(inner_len);
+    append_trailer(body, &shard);
+    // client: peel the reply, close the span, land it in the recorder
+    let (_, mut closed) = split_trailer(body).expect("reply trailer peels");
+    closed.stamp(STAGE_RECV, tick(t));
+    ring.push(closed);
+}
+
+/// Heap allocations per decision across the isolated trace layer,
+/// counted after buffers are warm. Ceiling division: even one allocation
+/// per few hundred decisions must show as nonzero, not round green.
+fn trace_layer_allocs_per_decision(iters: usize) -> u64 {
+    let frame = Msg::Request(Request {
+        client: 1,
+        id: 0,
+        payload: Payload::RawRgba { x: 8, data: vec![7; 8 * 8 * 4] },
+    })
+    .encode();
+    let proto = frame[4..].to_vec();
+    let mut body = Vec::with_capacity(proto.len() + TRACE_WIRE_BYTES);
+    let mut ring = Ring::with_capacity(RING_CAP);
+    let mut t: u64 = 0;
+    for d in 0..16u64 {
+        one_decision(&proto, &mut body, &mut ring, &mut t, d);
+    }
+    let before = CountingAlloc::count();
+    for d in 0..iters as u64 {
+        one_decision(&proto, &mut body, &mut ring, &mut t, d);
+    }
+    let allocs = CountingAlloc::count() - before;
+    std::hint::black_box((ring.len(), body.len(), t));
+    allocs.div_ceil(iters.max(1) as u64)
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map_or("null".into(), |x| format!("{x:.4}"))
+}
+
+fn main() {
+    let args = Parser::new("per-decision tracing overhead — traced vs untraced loopback + alloc count")
+        .opt("iters", "400", "decisions per client per cell")
+        .opt("out", "", "output path (default BENCH_TRACE_OUT or BENCH_trace.json)")
+        .parse();
+    let iters: usize = args.usize("iters");
+    let out_path = {
+        let o = args.str("out");
+        if o.is_empty() {
+            std::env::var("BENCH_TRACE_OUT").unwrap_or_else(|_| "BENCH_trace.json".into())
+        } else {
+            o
+        }
+    };
+
+    let untraced = loopback_req_s(false, iters.max(1));
+    let traced = loopback_req_s(true, iters.max(1));
+    let overhead_pct = (untraced - traced) / untraced.max(1e-9) * 100.0;
+    let allocs = trace_layer_allocs_per_decision(200.min(iters.max(1)) * 4);
+
+    let mut table = Table::new(
+        "per-decision tracing — loopback fleet, Sim backend",
+        &["cell", "clients", "decisions", "req/s"],
+    );
+    table.row(&["untraced".into(), CLIENTS.to_string(), iters.to_string(), format!("{untraced:.0}")]);
+    table.row(&["traced".into(), CLIENTS.to_string(), iters.to_string(), format!("{traced:.0}")]);
+    table.print();
+    println!("tracing overhead: {overhead_pct:.2}% of untraced req/s");
+    println!("trace-layer allocations per decision: {allocs}");
+
+    let meaningful = iters >= MEANINGFUL_ITERS;
+    let overhead_pass = meaningful.then_some(overhead_pct <= 5.0);
+    let alloc_pass = allocs == 0;
+    println!(
+        "gates: overhead <= 5% -> {}, allocs == 0 -> {}",
+        overhead_pass.map_or("SKIP (smoke iters)".into(), |p| {
+            String::from(if p { "PASS" } else { "FAIL" })
+        }),
+        if alloc_pass { "PASS" } else { "FAIL" },
+    );
+
+    // throughput fields go null on smoke runs so bench_diff (which skips
+    // nulls) never judges loopback noise
+    let (j_untraced, j_traced, j_overhead) = if meaningful {
+        (Some(untraced), Some(traced), Some(overhead_pct))
+    } else {
+        (None, None, None)
+    };
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"bench\": \"trace_overhead\",\n",
+            "  \"iters\": {},\n",
+            "  \"clients\": {},\n",
+            "  \"max_batch\": {},\n",
+            "  \"obs_x\": {},\n",
+            "  \"ring_cap\": {},\n",
+            "  \"untraced_req_s\": {},\n",
+            "  \"traced_req_s\": {},\n",
+            "  \"overhead_pct\": {},\n",
+            "  \"trace_layer_allocs_per_decision\": {},\n",
+            "  \"gates\": {{\n",
+            "    \"max_overhead_pct\": 5.0,\n",
+            "    \"max_trace_layer_allocs_per_decision\": 0,\n",
+            "    \"overhead_pass\": {},\n",
+            "    \"alloc_pass\": {}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        iters,
+        CLIENTS,
+        MAX_BATCH,
+        OBS_X,
+        RING_CAP,
+        fmt_opt(j_untraced),
+        fmt_opt(j_traced),
+        fmt_opt(j_overhead),
+        allocs,
+        overhead_pass.map_or("null".into(), |p| p.to_string()),
+        alloc_pass,
+    );
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("could not write {out_path}: {e}");
+    } else {
+        println!("wrote {out_path}");
+    }
+}

@@ -28,7 +28,10 @@ fn main() -> Result<()> {
     let args = Parser::new("sharded serving demo")
         .opt("codec", "flat", "split-route feature codec: flat | delta")
         .flag("autoscale", "run the closed autoscaling loop (DESIGN.md §11) during the demo")
+        .flag("trace", "negotiate CAP_TRACE fleet-wide and dump per-decision spans (DESIGN.md §12)")
+        .opt("trace-out", "traces.jsonl", "JSONL span dump path (with --trace)")
         .parse();
+    let traced = args.flag("trace");
     let codec = CodecId::parse(&args.str("codec"))?;
     let have_artifacts = miniconv::runtime::default_artifact_dir()
         .join("manifest.json")
@@ -52,6 +55,7 @@ fn main() -> Result<()> {
         server: ServerConfig {
             policy: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
             backend,
+            trace: traced,
             ..ServerConfig::default()
         },
         ..FleetConfig::default()
@@ -85,6 +89,7 @@ fn main() -> Result<()> {
         decisions: 30,
         obs_x: if have_artifacts { None } else { Some(24) },
         codec,
+        trace: traced,
         ..ClientConfig::default()
     };
     let n_clients = 16;
@@ -104,6 +109,20 @@ fn main() -> Result<()> {
         reports.iter().map(|r| r.keyframes).sum::<u64>(),
         reports.iter().map(|r| r.deltas).sum::<u64>(),
     );
+
+    // per-decision span export: the client-held spans are the complete
+    // ones (every server hop echoed on the reply plus the client's own
+    // recv stamp), so the dump and the exemplar table come from them
+    if traced {
+        let spans: Vec<miniconv::trace::TraceCtx> =
+            reports.iter().flat_map(|r| r.traces.iter().copied()).collect();
+        let mut jsonl = String::new();
+        miniconv::trace::write_jsonl(&spans, &mut jsonl);
+        let out = args.str("trace-out");
+        std::fs::write(&out, jsonl)?;
+        println!("\ntrace: {} spans -> {out}", spans.len());
+        print!("{}", miniconv::trace::exemplar_table(&spans, 5));
+    }
 
     fleet.snapshot().table(elapsed).print();
 

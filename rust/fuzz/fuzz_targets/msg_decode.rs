@@ -16,9 +16,16 @@
 //!   * decode ∘ encode is a fixed point: anything decode accepts
 //!     re-encodes to a frame of the same length that decodes to the
 //!     same message (compared byte-wise after a second encode, so NaN
-//!     float payloads cannot hide a mismatch).
+//!     float payloads cannot hide a mismatch);
+//!   * the trace-trailer layer (DESIGN.md §12) never panics either: the
+//!     peel and the no-decode tail stamp agree byte-for-byte on whether
+//!     a trailer is present, a refused stamp never mutates the frame,
+//!     and peel ∘ append is the identity.
 
 use miniconv::net::framing::Msg;
+use miniconv::trace::{
+    append_trailer, split_trailer, stamp_body_tail, STAGE_GW_FORWARD, TRACE_WIRE_BYTES,
+};
 
 /// Heap bytes the decoded message retains — the quantity the
 /// claimed-count validation must bound by the input length.
@@ -35,6 +42,31 @@ fn retained_bytes(msg: &Msg) -> usize {
 }
 
 pub fn fuzz_target(data: &[u8]) {
+    // trace-trailer layer first, exactly as a CAP_TRACE session would
+    // see these bytes: the peel must reject hostile tails with an `Err`
+    // (never a panic), and an accepted peel round-trips byte-for-byte
+    if let Ok((inner, ctx)) = split_trailer(data) {
+        assert_eq!(inner.len() + TRACE_WIRE_BYTES, data.len());
+        let mut re = inner.to_vec();
+        append_trailer(&mut re, &ctx);
+        assert_eq!(re, data, "trailer peel/append is not the identity");
+    }
+    // the gateway's no-decode stamp hook must agree with the peel on
+    // whether a trailer is present, and leave refused frames untouched
+    let mut stamped = data.to_vec();
+    let did = stamp_body_tail(&mut stamped, STAGE_GW_FORWARD, 77);
+    assert_eq!(
+        did,
+        split_trailer(data).is_ok(),
+        "stamp and peel disagree on trailer presence"
+    );
+    if !did {
+        assert_eq!(stamped, data, "refused stamp mutated the frame");
+    } else {
+        let (_, ctx) = split_trailer(&stamped).expect("stamped trailer no longer peels");
+        assert_eq!(ctx.stamps[STAGE_GW_FORWARD], 77, "stamp landed outside its slot");
+    }
+
     let msg = match Msg::decode(data) {
         Ok(msg) => msg,
         // rejection is the expected outcome for hostile bytes; the bug

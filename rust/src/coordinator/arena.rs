@@ -10,6 +10,8 @@
 
 use std::time::Duration;
 
+use crate::trace::TraceCtx;
+
 /// Pooled batch-assembly buffers owned by one executor thread.
 ///
 /// Buffer lifetime rules (DESIGN.md §5):
@@ -39,6 +41,11 @@ pub struct BatchArena {
     pub need_key: Vec<bool>,
     /// encoded reply-frame scratch (one reply at a time)
     pub frame: Vec<u8>,
+    /// per-batch scratch of server-side spans for traced items (stamped
+    /// through the reply hop, flushed to the metrics flight recorder once
+    /// per batch — `TraceCtx` is `Copy`, so this never allocates at
+    /// steady state)
+    pub traces: Vec<TraceCtx>,
 }
 
 impl BatchArena {
@@ -67,6 +74,7 @@ impl BatchArena {
         self.services.clear();
         self.need_key.clear();
         self.need_key.resize(rows, false);
+        self.traces.clear();
     }
 
     pub fn feat_dim(&self) -> usize {

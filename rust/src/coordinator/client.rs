@@ -20,12 +20,13 @@ use crate::codec::{self, CodecId, Encoder, RateConfig, RateController, CODEC_DEL
 use crate::device::{Device, DeviceSpec, ExecPath, FrameCost};
 use crate::envs::{CropMode, Env, Pendulum, PixelPipeline};
 use crate::net::framing::{
-    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE,
+    ExperienceFrame, FeatureFrame, Hello, Msg, Payload, Request, CAP_EXPERIENCE, CAP_TRACE,
     ERR_OVERLOADED, EXP_DONE, EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED,
 };
 use crate::net::limits::backoff_delay;
 use crate::net::shaped::ShapedWriter;
-use crate::net::tcp::{read_msg, write_msg};
+use crate::net::tcp::{read_msg, read_raw_frame, write_frame, write_msg};
+use crate::trace::{self, TraceCtx};
 use crate::rl::native::{episode_rng, normalize_pendulum_obs};
 use crate::runtime::Manifest;
 use crate::sim::clock::ClockHandle;
@@ -69,6 +70,12 @@ pub struct ClientConfig {
     /// shaped-link property tests drive `ShapedWriter` alone under a
     /// `SimClock` through this same seam.
     pub clock: ClockHandle,
+    /// per-decision distributed tracing (DESIGN.md §12): request
+    /// [`CAP_TRACE`] in the Hello and, when the server grants it, mint a
+    /// span per decision, stamp the client hops (mint/encode/send/recv),
+    /// carry it on the wire, and keep the closed spans in
+    /// [`ClientReport::traces`]
+    pub trace: bool,
 }
 
 impl Default for ClientConfig {
@@ -86,6 +93,7 @@ impl Default for ClientConfig {
             codec: CodecId::Flat,
             rate: RateConfig::default(),
             clock: ClockHandle::wall(),
+            trace: false,
         }
     }
 }
@@ -117,6 +125,9 @@ pub struct ClientReport {
     /// fleet-fronted, or the ack was never read — raw/flat sessions use a
     /// fire-and-forget handshake)
     pub topology_epoch: u64,
+    /// closed per-decision spans (trace-negotiated sessions only; bounded
+    /// by the client's flight-recorder ring, most recent decisions)
+    pub traces: Vec<TraceCtx>,
 }
 
 impl ClientReport {
@@ -141,6 +152,31 @@ impl Sender_ {
             Sender_::Shaped(s) => write_msg(s, msg),
         }
     }
+
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        match self {
+            Sender_::Plain(s) => write_frame(s, frame),
+            Sender_::Shaped(s) => write_frame(s, frame),
+        }
+    }
+}
+
+/// Client-side read: permissive framing (the client trusts its server) but
+/// trace-aware — on a trace-negotiated session every eligible frame ends in
+/// a trailer to peel before the canonical decode (DESIGN.md §12).
+fn read_reply(
+    recv: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    traced: bool,
+) -> Result<Option<(Msg, Option<TraceCtx>)>> {
+    if !read_raw_frame(recv, buf)? {
+        return Ok(None);
+    }
+    if traced && !buf.is_empty() && trace::trace_eligible(buf[0]) {
+        let (inner, ctx) = trace::split_trailer(buf)?;
+        return Ok(Some((Msg::decode(inner)?, Some(ctx))));
+    }
+    Ok(Some((Msg::decode(buf)?, None)))
 }
 
 /// Run one client against the server at `addr`.
@@ -204,17 +240,20 @@ pub fn run_client(
         client: client_id,
         split: cfg.mode == Route::Split,
         codec: if cfg.mode == Route::Split { cfg.codec.wire_id() } else { 0 },
-        caps: 0,
+        caps: if cfg.trace { CAP_TRACE } else { 0 },
         shard: None,
         epoch: None,
     }))?;
 
     // negotiation barrier: the first frame's format depends on the
     // server's verdict, so a delta client blocks on the hello ack before
-    // encoding anything (flat and raw clients keep the fire-and-forget
-    // handshake — their format needs no agreement)
+    // encoding anything, and a trace-requesting client blocks for the
+    // capability verdict — attaching a trailer the server never granted
+    // would be an undecodable frame (flat/raw untraced clients keep the
+    // fire-and-forget handshake — their format needs no agreement)
     let mut topology_epoch = 0u64;
-    if delta.is_some() {
+    let mut traced = false;
+    if delta.is_some() || cfg.trace {
         loop {
             match read_msg(&mut recv)? {
                 Some(Msg::Hello(ack)) => {
@@ -222,6 +261,7 @@ pub fn run_client(
                         // server declined: fall back to the flat v1 format
                         delta = None;
                     }
+                    traced = ack.caps & CAP_TRACE != 0;
                     // a fleet-fronted ack carries the topology epoch the
                     // placement was computed under; reconnects echo it so
                     // stale re-routes are refused server-side
@@ -252,6 +292,11 @@ pub fn run_client(
     let mut feat = Chw::zeros(1, 1, 1);
     let mut flat: Vec<f32> = Vec::new();
     let mut qbuf: Vec<u8> = Vec::new();
+    // trace-session scratch: pooled request frame, pooled read buffer, and
+    // the client's flight-recorder ring of closed spans
+    let mut tframe: Vec<u8> = Vec::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut ring = trace::Ring::with_capacity(1024);
 
     for i in 0..cfg.decisions {
         if let Some(t) = tick {
@@ -336,13 +381,29 @@ pub fn run_client(
         };
         let wire_b = payload.wire_bytes();
         report.bytes_sent += wire_b as u64;
-        send.send(&Msg::Request(Request { client: client_id, id: i as u64, payload }))?;
+        let msg = Msg::Request(Request { client: client_id, id: i as u64, payload });
+        if traced {
+            // span id: client in the high half, decision index in the low,
+            // unique across a fleet run. Stamps ride the wire, so the
+            // send-side hops are stamped before the trailer is appended.
+            let mut t = TraceCtx::mint(
+                ((client_id as u64) << 32) | i as u64,
+                trace::ns_since_epoch(t0),
+            );
+            t.stamp(trace::STAGE_ENCODE, trace::now_ns(&cfg.clock));
+            msg.encode_into(&mut tframe);
+            t.stamp(trace::STAGE_SEND, trace::now_ns(&cfg.clock));
+            trace::append_trace(&mut tframe, &t);
+            send.send_frame(&tframe)?;
+        } else {
+            send.send(&msg)?;
+        }
 
-        // await our action
-        let action = loop {
-            match read_msg(&mut recv)? {
-                Some(Msg::Response(r)) if r.id == i as u64 => break r.action,
-                Some(Msg::ResponseV2(r)) if r.id == i as u64 => {
+        // await our action (plus the echoed span on traced sessions)
+        let (action, rctx) = loop {
+            match read_reply(&mut recv, &mut rbuf, traced)? {
+                Some((Msg::Response(r), ctx)) if r.id == i as u64 => break (r.action, ctx),
+                Some((Msg::ResponseV2(r), ctx)) if r.id == i as u64 => {
                     // the codec feedback that closes the rate-control loop
                     if let Some((encoder, rate)) = &mut delta {
                         let lat = cfg.clock.now().duration_since(t0).as_secs_f64();
@@ -353,9 +414,9 @@ pub fn run_client(
                             report.need_keyframes += 1;
                         }
                     }
-                    break r.action;
+                    break (r.action, ctx);
                 }
-                Some(Msg::Error(e)) if e.code == ERR_OVERLOADED => {
+                Some((Msg::Error(e), _)) if e.code == ERR_OVERLOADED => {
                     // explicit load-shed (DESIGN.md §9): the request was
                     // refused outright, so there is no response to wait
                     // for. Back off with full jitter — decorrelating a
@@ -365,16 +426,21 @@ pub fn run_client(
                     overload_attempts += 1;
                     let d = backoff_delay(0.010, overload_attempts, 0.5, &mut backoff_rng);
                     cfg.clock.sleep(Duration::from_secs_f64(d));
-                    break vec![];
+                    break (vec![], None);
                 }
                 // the codec verdict was consumed at the negotiation
                 // barrier; a late/duplicate ack must not renegotiate a
                 // stream that is already flowing
-                Some(Msg::Hello(_)) => continue,
+                Some((Msg::Hello(_), _)) => continue,
                 Some(_) => continue, // stale response
                 None => anyhow::bail!("server closed connection"),
             }
         };
+        // close the span: the action is back where the pixels started
+        if let Some(mut t) = rctx {
+            t.stamp(trace::STAGE_RECV, trace::now_ns(&cfg.clock));
+            ring.push(t);
+        }
         if action.is_empty() {
             // explicit server rejection (back-pressure): count and move on
             report.errors += 1;
@@ -401,6 +467,7 @@ pub fn run_client(
         pipeline.observe(&env, &mut rng);
     }
     report.elapsed = cfg.clock.now().duration_since(t_run).as_secs_f64();
+    report.traces = ring.to_vec();
     report.topology_epoch = topology_epoch;
     report.final_qmax = delta.as_ref().map(|(_, rate)| rate.qmax()).unwrap_or(0);
     if let Sender_::Plain(ref mut s) = send {

@@ -5,9 +5,15 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::trace::{Ring, TraceCtx};
 use crate::util::stats::LatencyHist;
 
 use super::router::Route;
+
+/// Capacity of the per-server trace flight recorder (DESIGN.md §12):
+/// enough to hold the recent tail at serving rates without the ring
+/// itself becoming a memory consumer.
+pub const TRACE_RING_CAP: usize = 1024;
 
 #[derive(Debug, Default, Clone)]
 pub struct RouteMetrics {
@@ -101,17 +107,54 @@ impl MetricsInner {
     }
 }
 
-/// Shared handle.
-#[derive(Debug, Clone, Default)]
-pub struct Metrics(Arc<Mutex<MetricsInner>>);
+/// Shared handle. Alongside the histograms it carries the server-side
+/// trace flight recorder (DESIGN.md §12): a bounded [`Ring`] of the most
+/// recent per-decision spans as stamped through the reply hop, recorded
+/// once per batch (one lock, no per-item locking) on traced sessions.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    inner: Arc<Mutex<MetricsInner>>,
+    traces: Arc<Mutex<Ring>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics(Arc::new(Mutex::new(MetricsInner {
-            full: RouteMetrics::new(),
-            split: RouteMetrics::new(),
-            dropped: 0,
-        })))
+        Metrics {
+            inner: Arc::new(Mutex::new(MetricsInner {
+                full: RouteMetrics::new(),
+                split: RouteMetrics::new(),
+                dropped: 0,
+            })),
+            traces: Arc::new(Mutex::new(Ring::with_capacity(TRACE_RING_CAP))),
+        }
+    }
+
+    /// Record one batch's server-side spans into the flight recorder
+    /// (no-op for empty batches; one lock per batch).
+    pub fn record_traces(&self, spans: &[TraceCtx]) {
+        if spans.is_empty() {
+            return;
+        }
+        let mut r = self.traces.lock().unwrap();
+        for s in spans {
+            r.push(*s);
+        }
+    }
+
+    /// Snapshot of the retained spans, oldest first.
+    pub fn traces(&self) -> Vec<TraceCtx> {
+        self.traces.lock().unwrap().to_vec()
+    }
+
+    /// The `n` slowest retained spans (exemplar dump feed).
+    pub fn trace_exemplars(&self, n: usize) -> Vec<TraceCtx> {
+        self.traces.lock().unwrap().slowest(n)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -125,7 +168,7 @@ impl Metrics {
         execute: Duration,
         service: &[Duration],
     ) {
-        let mut m = self.0.lock().unwrap();
+        let mut m = self.inner.lock().unwrap();
         let rm = m.route(route);
         rm.requests += n_items as u64;
         rm.batches += 1;
@@ -142,11 +185,11 @@ impl Metrics {
     }
 
     pub fn add_dropped(&self, n: u64) {
-        self.0.lock().unwrap().dropped += n;
+        self.inner.lock().unwrap().dropped += n;
     }
 
     pub fn snapshot(&self) -> MetricsInner {
-        self.0.lock().unwrap().clone()
+        self.inner.lock().unwrap().clone()
     }
 }
 
@@ -206,6 +249,29 @@ mod tests {
         assert!(p95 > 9.0, "p95={p95}ms");
         let p99 = s.full.service.quantile_ns(0.99) / 1e6;
         assert!(p99 > 150.0, "p99={p99}ms");
+    }
+
+    #[test]
+    fn trace_ring_is_shared_bounded_and_sorted_by_span_length() {
+        use crate::trace::{STAGE_ENQUEUE, STAGE_REPLY};
+        let m = Metrics::new();
+        let m2 = m.clone();
+        let span = |id: u64, len: u64| {
+            let mut t = TraceCtx::mint(id, 100);
+            t.stamp(STAGE_ENQUEUE, 110);
+            t.stamp(STAGE_REPLY, 100 + len);
+            t
+        };
+        m2.record_traces(&[span(1, 50), span(2, 500), span(3, 5)]);
+        m2.record_traces(&[]); // no-op
+        assert_eq!(m.traces().len(), 3, "clones share the recorder");
+        let top = m.trace_exemplars(2);
+        assert_eq!(top.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2, 1]);
+        // bounded: the ring never exceeds its capacity
+        for i in 0..(TRACE_RING_CAP as u64 + 100) {
+            m.record_traces(&[span(i + 10, i)]);
+        }
+        assert_eq!(m.traces().len(), TRACE_RING_CAP);
     }
 
     #[test]

@@ -27,12 +27,13 @@ use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
     dequantize_features_into, encode_response_into, encode_response_learn_into,
     encode_response_v2_into, ErrorMsg, Msg, Payload, Response, ResponseV2, CAP_EXPERIENCE,
-    ERR_EXPERIENCE_UNSUPPORTED, RESP_FLAG_NEED_KEYFRAME,
+    CAP_TRACE, ERR_EXPERIENCE_UNSUPPORTED, RESP_FLAG_NEED_KEYFRAME,
 };
 use crate::net::limits::{LimitsConfig, SessionGate};
-use crate::net::tcp::{read_msg_limited, write_frame, write_msg};
+use crate::net::tcp::{read_msg_traced, write_frame, write_msg};
 use crate::runtime::{DeviceTensor, Exe, Runtime, Value};
 use crate::sim::clock::ClockHandle;
+use crate::trace::{self, TraceCtx};
 
 use super::arena::BatchArena;
 use super::batcher::{BatchCollector, BatchPolicy};
@@ -74,6 +75,13 @@ pub struct ServerConfig {
     /// with quarantine, and the reader idle timeout that reaps half-open
     /// clients together with their session + codec state
     pub limits: LimitsConfig,
+    /// per-decision distributed tracing (DESIGN.md §12): when set, sessions
+    /// may negotiate [`CAP_TRACE`] and carry a trace trailer on every
+    /// decision frame; the server stamps its enqueue/dequeue/pack/execute/
+    /// reply hops, echoes the trailer on replies, and retains the recent
+    /// spans in the metrics flight recorder. Off by default: untraced
+    /// deployments pay nothing, not even the capability grant.
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -89,6 +97,7 @@ impl Default for ServerConfig {
             learn: None,
             clock: ClockHandle::wall(),
             limits: LimitsConfig::default(),
+            trace: false,
         }
     }
 }
@@ -139,6 +148,10 @@ struct Work {
     id: u64,
     payload: Payload,
     received: Instant,
+    /// the decision's trace span when its session negotiated [`CAP_TRACE`]:
+    /// peeled off the request frame by the reader (enqueue hop already
+    /// stamped), completed by the executor, echoed on the reply
+    trace: Option<TraceCtx>,
     /// the connection's shared writer: wrapped in an `Arc` once per
     /// connection by the reader and shared across every work item queued
     /// from it — enqueueing and replying never clone the stream, and the
@@ -178,7 +191,7 @@ enum ExecEvent<'a> {
 /// never blocks on a dropped request. Sessions on the codec format also
 /// learn their frame never reached the decoder (`need_keyframe`), so the
 /// delta chain re-keys instead of desyncing.
-fn reject_work(w: Work) {
+fn reject_work(w: Work, clock: &ClockHandle) {
     let msg = match &w.payload {
         Payload::FeaturesV2(f) => Msg::ResponseV2(ResponseV2 {
             client: w.client,
@@ -191,7 +204,16 @@ fn reject_work(w: Work) {
         _ => Msg::Response(Response { client: w.client, id: w.id, action: vec![] }),
     };
     let mut wtr = w.reply.lock().unwrap();
-    let _ = write_msg(&mut *wtr, &msg);
+    // a traced session must get its trailer back even on the rejection
+    // path — a contract the client's strict split relies on
+    if let Some(mut t) = w.trace {
+        t.stamp(trace::STAGE_REPLY, trace::now_ns(clock));
+        let mut frame = msg.encode();
+        trace::append_trace(&mut frame, &t);
+        let _ = write_frame(&mut *wtr, &frame);
+    } else {
+        let _ = write_msg(&mut *wtr, &msg);
+    }
 }
 
 pub struct ServerHandle {
@@ -246,7 +268,8 @@ pub fn serve(cfg: ServerConfig) -> Result<ServerHandle> {
     // accept thread
     let acc_shutdown = shutdown.clone();
     let shard_id = cfg.shard_id;
-    let caps_mask = if cfg.learn.is_some() { CAP_EXPERIENCE } else { 0 };
+    let caps_mask = (if cfg.learn.is_some() { CAP_EXPERIENCE } else { 0 })
+        | (if cfg.trace { CAP_TRACE } else { 0 });
     let acc_clock = cfg.clock.clone();
     let acc_limits = cfg.limits.clone();
     let topology_epoch = Arc::new(AtomicU64::new(0));
@@ -324,8 +347,8 @@ fn reader_main(
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        match read_msg_limited(&mut reader, &mut buf, gate.limits()) {
-            Ok(Some(Ok(Msg::Request(r)))) => {
+        match read_msg_traced(&mut reader, &mut buf, gate.limits(), gate.grants(CAP_TRACE)) {
+            Ok(Some(Ok((Msg::Request(r), ctx)))) => {
                 session = Some(r.client);
                 if matches!(r.payload, Payload::Experience(_)) && !gate.grants(CAP_EXPERIENCE) {
                     // explicit rejection (never silence): the client sees
@@ -348,18 +371,23 @@ fn reader_main(
                     warn!("client {}: {e:#}; disconnecting", r.client);
                     break;
                 }
+                let received = clock.now();
                 let work = Work {
                     client: r.client,
                     id: r.id,
                     payload: r.payload,
-                    received: clock.now(),
+                    received,
+                    trace: ctx.map(|mut t| {
+                        t.stamp(trace::STAGE_ENQUEUE, trace::ns_since_epoch(received));
+                        t
+                    }),
                     reply: writer.clone(),
                 };
                 if tx.send(Ingress::Work(work)).is_err() {
                     break; // executor gone
                 }
             }
-            Ok(Some(Ok(Msg::Hello(h)))) => {
+            Ok(Some(Ok((Msg::Hello(h), _)))) => {
                 session = Some(h.client);
                 // tell the executor first (channel order guarantees the
                 // invalidation lands before any request this connection
@@ -382,10 +410,11 @@ fn reader_main(
                     break;
                 }
             }
-            Ok(Some(Ok(
+            Ok(Some(Ok((
                 Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_)
                 | Msg::Policy(_),
-            ))) => {
+                _,
+            )))) => {
                 warn!("client sent a server-side frame; ignoring");
             }
             Ok(Some(Err(e))) => {
@@ -470,8 +499,16 @@ impl LearnExec {
 
     /// Decode, learn, act, reply. An undecodable codec frame answers with
     /// an empty need-keyframe reply, exactly like the inference path.
-    fn handle(&mut self, codecs: &mut Decoders, w: &Work, max_rejects: u32) -> Result<()> {
+    fn handle(
+        &mut self,
+        codecs: &mut Decoders,
+        w: &Work,
+        max_rejects: u32,
+        clock: &ClockHandle,
+    ) -> Result<()> {
         let Payload::Experience(e) = &w.payload else { return Ok(()) };
+        // experience frames are never batched: dequeue is now
+        let dequeue_ns = trace::now_ns(clock);
         let flen = e.feat.feat_len();
         self.obs.clear();
         self.obs.resize(flen, 0.0);
@@ -512,6 +549,11 @@ impl LearnExec {
                 &step.action,
                 &mut self.frame,
             );
+        }
+        if let Some(mut t) = w.trace {
+            t.stamp(trace::STAGE_DEQUEUE, dequeue_ns);
+            t.stamp(trace::STAGE_REPLY, trace::now_ns(clock));
+            trace::append_trace(&mut self.frame, &t);
         }
         let mut wtr = w.reply.lock().unwrap();
         if let Err(e) = write_frame(&mut *wtr, &self.frame) {
@@ -611,7 +653,7 @@ fn executor_loop<F>(
                                 // never cloned) on the rejection path
                                 let route = Route::of(&w.payload);
                                 if let Some(rejected) = collector.push(route, w, now) {
-                                    reject_work(rejected);
+                                    reject_work(rejected, clock);
                                 }
                             }
                         }
@@ -717,7 +759,7 @@ fn executor_pjrt(
             Ok(())
         }
         ExecEvent::Experience(w) => match learn.as_mut() {
-            Some(l) => l.handle(&mut codecs, &w, max_rejects),
+            Some(l) => l.handle(&mut codecs, &w, max_rejects, &clock),
             // unreachable behind the reader's caps gate; drop defensively
             None => Ok(()),
         },
@@ -833,7 +875,7 @@ fn executor_sim(
             Ok(())
         }
         ExecEvent::Experience(w) => match learn.as_mut() {
-            Some(l) => l.handle(&mut codecs, &w, max_rejects),
+            Some(l) => l.handle(&mut codecs, &w, max_rejects, &clock),
             None => Ok(()),
         },
         ExecEvent::Batch(route, items) => run_batch_sim(
@@ -923,7 +965,8 @@ fn run_batch_sim(
             }
         }
     }
-    let pack_time = clock.now().duration_since(t_pack);
+    let packed = clock.now();
+    let pack_time = packed.duration_since(t_pack);
 
     // the modelled accelerator: launch overhead + linear per-item cost.
     // Real compiled-shader encodes run inside the window and only their
@@ -943,7 +986,8 @@ fn run_batch_sim(
     if modelled > spent {
         clock.sleep(modelled - spent);
     }
-    let exec_time = clock.now().duration_since(t_exec);
+    let executed = clock.now();
+    let exec_time = executed.duration_since(t_exec);
 
     let done = clock.now();
     arena.services.clear();
@@ -969,12 +1013,46 @@ fn run_batch_sim(
             &arena.actions[a0..a0 + spec.action_dim],
             &mut arena.frame,
         );
+        stamp_reply_trace(
+            &item.work,
+            dequeue,
+            packed,
+            executed,
+            clock,
+            &mut arena.frame,
+            &mut arena.traces,
+        );
         let mut w = item.work.reply.lock().unwrap();
         if let Err(e) = write_frame(&mut *w, &arena.frame) {
             debug!("reply to client {}: {e}", item.work.client);
         }
     }
+    metrics.record_traces(&arena.traces);
     Ok(())
+}
+
+/// Complete a traced item's server-side span and echo it on the reply:
+/// dequeue/pack/execute come from the batch's shared instants, the reply
+/// hop is stamped now, the trailer is appended to the pooled reply frame
+/// (re-sealing its length prefix), and the span is retained in the
+/// arena's per-batch scratch for the metrics flight recorder. Untraced
+/// items return immediately.
+fn stamp_reply_trace(
+    work: &Work,
+    dequeue: Instant,
+    packed: Instant,
+    executed: Instant,
+    clock: &ClockHandle,
+    frame: &mut Vec<u8>,
+    traces: &mut Vec<TraceCtx>,
+) {
+    let Some(mut t) = work.trace else { return };
+    t.stamp(trace::STAGE_DEQUEUE, trace::ns_since_epoch(dequeue));
+    t.stamp(trace::STAGE_PACK, trace::ns_since_epoch(packed));
+    t.stamp(trace::STAGE_EXECUTE, trace::ns_since_epoch(executed));
+    t.stamp(trace::STAGE_REPLY, trace::now_ns(clock));
+    trace::append_trace(frame, &t);
+    traces.push(t);
 }
 
 /// Encode one reply into the pooled `frame`: v1 responses for v1
@@ -1080,14 +1158,16 @@ fn run_batch(
             arena.need_key[i] = true;
         }
     }
-    let pack_time = clock.now().duration_since(t_pack);
+    let packed = clock.now();
+    let pack_time = packed.duration_since(t_pack);
 
     // execute with device-resident params; the arena matrix is staged
     // directly and outputs decode into the route's pooled `Value`s
     let t_exec = clock.now();
     let batch_dev = rt.to_device_f32(&in_spec.shape, arena.matrix())?;
     exe.run_device_into(&[&exec.params, &batch_dev], &mut exec.outs)?;
-    let exec_time = clock.now().duration_since(t_exec);
+    let executed = clock.now();
+    let exec_time = executed.duration_since(t_exec);
 
     let actions = exec.outs[0].as_f32()?;
     let adim = exe.spec.outputs[0].shape[1];
@@ -1119,10 +1199,20 @@ fn run_batch(
             &actions[i * adim..(i + 1) * adim],
             &mut arena.frame,
         );
+        stamp_reply_trace(
+            &item.work,
+            dequeue,
+            packed,
+            executed,
+            clock,
+            &mut arena.frame,
+            &mut arena.traces,
+        );
         let mut w = item.work.reply.lock().unwrap();
         if let Err(e) = write_frame(&mut *w, &arena.frame) {
             debug!("reply to client {}: {e}", item.work.client);
         }
     }
+    metrics.record_traces(&arena.traces);
     Ok(())
 }

@@ -9,6 +9,7 @@
 use crate::coordinator::metrics::{MetricsInner, RouteMetrics};
 use crate::fleet::autoscale::LoadSample;
 use crate::fleet::topology::ShardId;
+use crate::trace::StageNs;
 use crate::util::stats::LatencyHist;
 use crate::util::tables::Table;
 
@@ -78,6 +79,7 @@ pub struct LoadWindow {
     prev_queue: LatencyHist,
     prev_gateway: GatewayCounters,
     prev_requests: u64,
+    prev_stages: StageNs,
 }
 
 impl LoadWindow {
@@ -115,6 +117,17 @@ impl LoadWindow {
             shed_rate: window_gateway.shed_rate(window_requests),
             shards: routable_shards,
         }
+    }
+
+    /// Windowed per-stage attribution from cumulative span-stage totals
+    /// (DESIGN.md §12): the delta since the previous call, so a scale
+    /// verdict can cite the stage that dominated *this* interval rather
+    /// than process history. Same saturating contract as the counter
+    /// windows above.
+    pub fn stage_window(&mut self, totals: &StageNs) -> StageNs {
+        let window = totals.delta(&self.prev_stages);
+        self.prev_stages = *totals;
+        window
     }
 }
 
@@ -430,5 +443,71 @@ mod tests {
         let md = t.to_markdown();
         assert!(md.contains("fleet split"), "{md}");
         assert!(md.contains("shard-0 split"), "{md}");
+    }
+
+    /// The table's derived columns must actually be the arithmetic they
+    /// claim: req/s is requests over the elapsed window, percentiles are
+    /// read off the merged service histogram, and a zero-length window
+    /// renders a throughput of 0 instead of dividing by zero.
+    #[test]
+    fn table_column_math_holds_up() {
+        let snap = aggregate(vec![(ShardId(0), shard_with(&[10; 8]))]);
+        // 8 requests over a 4 s window -> 2 req/s, printed without decimals
+        let md = snap.table(4.0).to_markdown();
+        let fleet_row = md.lines().find(|l| l.contains("fleet split")).expect("fleet row");
+        let cells: Vec<&str> = fleet_row.split('|').map(str::trim).collect();
+        let requests: f64 = cells[2].parse().expect("requests cell");
+        let req_s: f64 = cells[7].parse().expect("req/s cell");
+        assert_eq!(requests, 8.0, "{fleet_row}");
+        assert_eq!(req_s, (requests / 4.0).round(), "{fleet_row}");
+        // every service sample was 10 ms, so all three percentiles print
+        // the same value the histogram reports, in milliseconds at 2 dp
+        let p50 = format!("{:.2}", snap.merged.split.service.quantile_ns(0.5) / 1e6);
+        for col in [4, 5, 6] {
+            assert_eq!(cells[col], p50, "{fleet_row}");
+        }
+        // zero elapsed must not divide by zero
+        let md0 = snap.table(0.0).to_markdown();
+        let row0 = md0.lines().find(|l| l.contains("fleet split")).expect("fleet row");
+        let cells0: Vec<&str> = row0.split('|').map(str::trim).collect();
+        assert_eq!(cells0[7], "0", "{row0}");
+    }
+
+    /// An empty fleet (and shards that served nothing) must render an
+    /// empty table — no phantom rows of zeros — and no gateway table.
+    #[test]
+    fn empty_fleet_renders_no_rows_and_no_gateway_table() {
+        let empty = aggregate(Vec::<(ShardId, MetricsInner)>::new());
+        assert_eq!(empty.total_requests(), 0);
+        assert_eq!(empty.table(1.0).n_rows(), 0);
+        assert!(empty.gateway_table().is_none());
+        // a shard with zero traffic contributes no row either
+        let idle = aggregate(vec![(ShardId(0), shard_with(&[]))]);
+        assert_eq!(idle.table(1.0).n_rows(), 0);
+    }
+
+    /// `stage_window` is the per-stage analogue of the counter windows:
+    /// each call returns only the attribution accumulated since the last
+    /// one, and a reset (non-prefix) input saturates to zero.
+    #[test]
+    fn stage_window_deltas_cumulative_attribution() {
+        let mut w = LoadWindow::new();
+        let mut totals = StageNs::default();
+        totals.ns[2] = 10_000; // queue
+        totals.ns[4] = 4_000; // execute
+        let first = w.stage_window(&totals);
+        assert_eq!(first, totals, "first window is the whole history");
+        assert_eq!(first.dominant(), Some("queue"));
+        // the next interval adds mostly execute time: the window must see
+        // only the increment and flip the dominant verdict
+        totals.ns[4] += 20_000;
+        totals.ns[2] += 1_000;
+        let second = w.stage_window(&totals);
+        assert_eq!(second.queue(), 1_000);
+        assert_eq!(second.ns[4], 20_000);
+        assert_eq!(second.dominant(), Some("execute"));
+        // idle interval reads empty; a reset saturates instead of wrapping
+        assert_eq!(w.stage_window(&totals).total(), 0);
+        assert_eq!(w.stage_window(&StageNs::default()).total(), 0);
     }
 }

@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 use log::{debug, warn};
 
 use crate::net::framing::{
-    ErrorMsg, Hello, Msg, ERR_OVERLOADED, MSG_ERROR, MSG_HELLO, MSG_REQUEST_FEAT,
+    ErrorMsg, Hello, Msg, CAP_TRACE, ERR_OVERLOADED, MSG_ERROR, MSG_HELLO, MSG_REQUEST_FEAT,
     MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE, MSG_RESPONSE_V2,
 };
 use crate::net::limits::{FrameLimits, LimitsConfig, RateCap};
@@ -34,6 +34,7 @@ use crate::net::tcp::{
     read_msg, read_msg_limited, read_raw_frame, read_raw_frame_limited, write_msg,
     write_raw_frame,
 };
+use crate::trace;
 use crate::util::signal::Signal;
 
 use super::health::{HealthConfig, HealthMonitor};
@@ -513,9 +514,16 @@ fn gw_conn(
     }
 
     // fix the per-type frame caps for the pump: a Hello pins them to the
-    // negotiated route; a bare request keeps the pre-Hello union
+    // negotiated route (widened by the fixed trace-trailer allowance on
+    // trace-negotiated sessions); a bare request keeps the pre-Hello union
     let pump_limits = match &first {
-        Msg::Hello(h) => FrameLimits::negotiated(h.split, &admission.limits),
+        Msg::Hello(h) => {
+            let mut l = FrameLimits::negotiated(h.split, &admission.limits);
+            if h.caps & CAP_TRACE != 0 {
+                l.allow_trace();
+            }
+            l
+        }
         _ => pre_hello,
     };
 
@@ -589,6 +597,9 @@ fn pump_session(
     limits: &FrameLimits,
     admission: &Admission,
 ) -> Result<()> {
+    // tracing rides the session's negotiated capability: the forward pump
+    // stamps its hop only for sessions that asked for it
+    let traced = matches!(first, Msg::Hello(h) if h.caps & CAP_TRACE != 0);
     // the gateway speaks for the fleet: ack the opening hello with the
     // assigned shard before any traffic flows. Because the shard's own
     // hello ack is filtered off the return path, the gateway must apply
@@ -605,8 +616,11 @@ fn pump_session(
                 codec,
                 // the threaded gateway does not negotiate experience
                 // streaming (learning clients connect shard-direct;
-                // the simnet gateway models versioned fan-out)
-                caps: 0,
+                // the simnet gateway models versioned fan-out), but it
+                // passes the tracing grant through: the hello is forwarded
+                // verbatim, so trace-enabled shards make the same verdict
+                // (a fleet is deployed with tracing on or off as a whole)
+                caps: h.caps & CAP_TRACE,
                 shard: Some(shard_id.0),
                 // the topology epoch this placement was computed under:
                 // the client echoes it on reconnect, and shards refuse
@@ -710,6 +724,16 @@ fn pump_session(
                             }
                             continue;
                         }
+                    }
+                    // stamp the forward hop into the trace trailer in
+                    // place: a byte patch at a fixed tail offset, never a
+                    // decode — the pump stays a verbatim copy otherwise
+                    if traced {
+                        trace::stamp_body_tail(
+                            &mut frame,
+                            trace::STAGE_GW_FORWARD,
+                            trace::ns_since_epoch(Instant::now()),
+                        );
                     }
                     counters.count_request(shard_id)
                 }

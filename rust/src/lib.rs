@@ -15,8 +15,10 @@
 //!   control, DESIGN.md §7), the deterministic [`sim`]
 //!   substrate (virtual clock + chaos-scenario simnet, DESIGN.md §6),
 //!   pixel-observation [`envs`], the generic [`rl`] trainer plus the
-//!   native PPO engine, and the online [`learn`] subsystem (experience
-//!   streaming + versioned policy fan-out, DESIGN.md §8).
+//!   native PPO engine, the online [`learn`] subsystem (experience
+//!   streaming + versioned policy fan-out, DESIGN.md §8), and the
+//!   per-decision [`trace`] layer (wire-propagated spans + flight-recorder
+//!   rings on both clocks, DESIGN.md §12).
 //!
 //! Scale-out path: `coordinator::serve` is one shard; `fleet::launch_local`
 //! (or an out-of-process gateway via `fleet::serve_gateway`) runs N of them
@@ -35,6 +37,7 @@ pub mod device;
 pub mod net;
 pub mod codec;
 pub mod sim;
+pub mod trace;
 pub mod coordinator;
 pub mod fleet;
 pub mod rl;

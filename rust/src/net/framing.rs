@@ -54,6 +54,14 @@ pub const RESP_FLAG_STALE: u8 = 2;
 /// whose bit comes back cleared falls back to inference-only frames.
 pub const CAP_EXPERIENCE: u8 = 1;
 
+/// [`Hello::caps`] bit: every trace-eligible frame on the session (both
+/// directions) carries the fixed-size per-decision trace trailer
+/// (`crate::trace`, DESIGN.md §12). Negotiated exactly like
+/// [`CAP_EXPERIENCE`]: the client requests, the ack masks, and
+/// `net::limits` widens the per-type caps by the trailer size only after
+/// the grant — a hostile length can never buy the allowance unnegotiated.
+pub const CAP_TRACE: u8 = 2;
+
 /// [`ErrorMsg::code`]: experience frame on a session without the
 /// negotiated [`CAP_EXPERIENCE`] capability.
 pub const ERR_EXPERIENCE_UNSUPPORTED: u8 = 1;

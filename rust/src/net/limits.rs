@@ -33,10 +33,11 @@ use anyhow::{bail, ensure, Result};
 use crate::util::rng::Rng;
 
 use super::framing::{
-    Hello, CAP_EXPERIENCE, MAX_FRAME, MSG_ERROR, MSG_EXPERIENCE, MSG_HELLO, MSG_POLICY,
+    Hello, CAP_EXPERIENCE, CAP_TRACE, MAX_FRAME, MSG_ERROR, MSG_EXPERIENCE, MSG_HELLO, MSG_POLICY,
     MSG_REQUEST_FEAT, MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE, MSG_RESPONSE_LEARN,
     MSG_RESPONSE_V2,
 };
+use crate::trace::{TRACE_ELIGIBLE, TRACE_WIRE_BYTES};
 
 /// Resource-budget knobs for one listening endpoint. The defaults admit
 /// everything the experiments and benches legitimately send while staying
@@ -200,6 +201,22 @@ impl FrameLimits {
         FrameLimits { caps, hard_max }
     }
 
+    /// Widen the caps for a session that negotiated
+    /// [`CAP_TRACE`]: every *admitted* trace-eligible type
+    /// (request payloads and response kinds — never Hello/Error/Policy)
+    /// gains exactly [`TRACE_WIRE_BYTES`] for its trailer. Applied only
+    /// after the Hello grants the capability, so a hostile pre-Hello
+    /// length can never buy the allowance (DESIGN.md §12).
+    pub fn allow_trace(&mut self) {
+        for &ty in TRACE_ELIGIBLE.iter() {
+            let c = &mut self.caps[ty as usize];
+            if *c > 0 {
+                *c += TRACE_WIRE_BYTES;
+            }
+        }
+        self.hard_max = self.caps.iter().copied().max().unwrap_or(0);
+    }
+
     /// Size cap for one message type (0 = not admitted at all).
     pub fn cap(&self, ty: u8) -> usize {
         self.caps.get(ty as usize).copied().unwrap_or(0)
@@ -322,6 +339,11 @@ impl SessionGate {
         let caps = h.caps & caps_mask;
         self.state = GateState::Ready { split: h.split, codec, caps };
         self.limits = FrameLimits::negotiated(h.split, &self.cfg);
+        if caps & CAP_TRACE != 0 {
+            // the session's frames now carry the fixed trace trailer; the
+            // allowance is exact, per type, and only post-negotiation
+            self.limits.allow_trace();
+        }
         let epoch = (self.topology_epoch > 0).then_some(self.topology_epoch);
         Some(Hello { client: h.client, split: h.split, codec, caps, shard, epoch })
     }
@@ -699,6 +721,57 @@ mod tests {
         assert!(g.quarantined());
         let m2 = g.migrate();
         assert!(!m2.quarantined());
+    }
+
+    #[test]
+    fn allow_trace_widens_only_admitted_eligible_types_by_the_trailer() {
+        let cfg = LimitsConfig::default();
+        let base = FrameLimits::negotiated(true, &cfg);
+        let mut traced = base.clone();
+        traced.allow_trace();
+        for ty in 0..=11u8 {
+            let (b, t) = (base.cap(ty), traced.cap(ty));
+            if TRACE_ELIGIBLE.contains(&ty) && b > 0 {
+                assert_eq!(t, b + TRACE_WIRE_BYTES, "type {ty} must gain exactly the trailer");
+            } else {
+                assert_eq!(t, b, "type {ty} must not gain a trace allowance");
+            }
+        }
+        // the collapsed route stays collapsed: no trailer resurrects raw
+        assert_eq!(traced.cap(MSG_REQUEST_RAW), 0);
+        // control traffic never widens
+        assert_eq!(traced.cap(MSG_HELLO), base.cap(MSG_HELLO));
+        assert_eq!(traced.cap(MSG_ERROR), base.cap(MSG_ERROR));
+        assert_eq!(traced.cap(MSG_POLICY), base.cap(MSG_POLICY));
+        assert_eq!(traced.hard_max(), base.hard_max().max(traced.cap(MSG_EXPERIENCE)));
+    }
+
+    #[test]
+    fn gate_grants_trace_allowance_only_after_the_hello_grants_the_cap() {
+        use crate::net::framing::CAP_TRACE;
+        let cfg = LimitsConfig::default();
+        let feat_cap = FrameLimits::negotiated(true, &cfg).cap(MSG_REQUEST_FEAT_V2);
+        let hello = |caps: u8| Hello { client: 1, split: true, codec: 1, caps, shard: None, epoch: None };
+
+        // granted: eligible frames get exactly the trailer allowance
+        let mut g = SessionGate::new(cfg.clone());
+        let ack = g.on_hello(&hello(CAP_TRACE), CAP_TRACE, None).unwrap();
+        assert_eq!(ack.caps, CAP_TRACE);
+        assert!(g.grants(CAP_TRACE));
+        assert!(g.admit(MSG_REQUEST_FEAT_V2, feat_cap + TRACE_WIRE_BYTES).is_ok());
+        assert!(g.admit(MSG_REQUEST_FEAT_V2, feat_cap + TRACE_WIRE_BYTES + 1).is_err());
+        assert!(g.admit(MSG_HELLO, cfg.hello_cap() + TRACE_WIRE_BYTES).is_err(), "hello never widens");
+
+        // requested but masked off: no allowance
+        let mut g = SessionGate::new(cfg.clone());
+        let ack = g.on_hello(&hello(CAP_TRACE), 0, None).unwrap();
+        assert_eq!(ack.caps, 0);
+        assert!(!g.grants(CAP_TRACE));
+        assert!(g.admit(MSG_REQUEST_FEAT_V2, feat_cap + TRACE_WIRE_BYTES).is_err());
+
+        // never requested: no allowance either, and pre-hello is untouched
+        let g = SessionGate::new(cfg);
+        assert_eq!(g.limits().cap(MSG_REQUEST_FEAT_V2), feat_cap.min(g.limits().hard_max()));
     }
 
     #[test]

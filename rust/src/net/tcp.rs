@@ -119,6 +119,31 @@ pub fn read_msg_limited<R: Read>(
     Ok(Some(Msg::decode(buf)))
 }
 
+/// [`read_msg_limited`] for sessions that may have negotiated `CAP_TRACE`
+/// (DESIGN.md §12). With `traced` set, every trace-eligible frame MUST end
+/// in the fixed per-decision trace trailer, which is peeled off before the
+/// canonical decode and handed back alongside the message; a missing or
+/// malformed trailer is a decode error (budgeted against the session like
+/// any other undecodable body — framing stays synchronized). Ineligible
+/// types, and every frame on an untraced session, decode exactly as
+/// [`read_msg_limited`] with `None` for the context.
+pub fn read_msg_traced<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    limits: &FrameLimits,
+    traced: bool,
+) -> Result<Option<Result<(Msg, Option<crate::trace::TraceCtx>)>>> {
+    if !read_raw_frame_limited(r, buf, limits)? {
+        return Ok(None);
+    }
+    if traced && !buf.is_empty() && crate::trace::trace_eligible(buf[0]) {
+        let res = crate::trace::split_trailer(buf)
+            .and_then(|(inner, ctx)| Msg::decode(inner).map(|m| (m, Some(ctx))));
+        return Ok(Some(res));
+    }
+    Ok(Some(Msg::decode(buf).map(|m| (m, None))))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +281,53 @@ mod tests {
         big.extend_from_slice(&(crate::net::framing::MAX_FRAME as u32).to_le_bytes());
         big.push(crate::net::framing::MSG_REQUEST_RAW);
         assert!(read_msg_limited(&mut std::io::Cursor::new(big), &mut buf, &limits).is_err());
+    }
+
+    #[test]
+    fn traced_reader_peels_trailers_and_budgets_missing_ones() {
+        use crate::net::limits::{FrameLimits, LimitsConfig};
+        use crate::trace::{TraceCtx, STAGE_SEND};
+        let mut limits = FrameLimits::negotiated(false, &LimitsConfig::default());
+        limits.allow_trace();
+        let msg = Msg::Request(Request {
+            client: 2,
+            id: 5,
+            payload: Payload::RawRgba { x: 2, data: vec![1; 16] },
+        });
+        let mut ctx = TraceCtx::mint(0xbeef, 100);
+        ctx.stamp(STAGE_SEND, 140);
+        let mut frame = msg.encode();
+        crate::trace::append_trace(&mut frame, &ctx);
+        let hello = Msg::Hello(Hello { client: 2, split: false, codec: 0, caps: 0, shard: None, epoch: None });
+        let mut wire = frame.clone();
+        write_msg(&mut wire, &hello).unwrap(); // ineligible: never carries a trailer
+        write_msg(&mut wire, &msg).unwrap(); // eligible but traceless: decode error when traced
+
+        let mut cursor = std::io::Cursor::new(&wire);
+        let mut buf = Vec::new();
+        let (got, t) =
+            read_msg_traced(&mut cursor, &mut buf, &limits, true).unwrap().unwrap().unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(t, Some(ctx));
+        let (got, t) =
+            read_msg_traced(&mut cursor, &mut buf, &limits, true).unwrap().unwrap().unwrap();
+        assert_eq!(got, hello);
+        assert_eq!(t, None);
+        let missing = read_msg_traced(&mut cursor, &mut buf, &limits, true).unwrap().unwrap();
+        assert!(missing.is_err(), "traceless eligible frame on a traced session must not decode");
+        assert!(read_msg_traced(&mut cursor, &mut buf, &limits, true).unwrap().is_none());
+
+        // untraced sessions decode the plain stream as before — and reject
+        // the traced frame (trailing bytes), which the size caps already
+        // stopped earlier anyway
+        let mut cursor = std::io::Cursor::new(&wire[frame.len()..]);
+        let (got, t) =
+            read_msg_traced(&mut cursor, &mut buf, &FrameLimits::permissive(), false)
+                .unwrap()
+                .unwrap()
+                .unwrap();
+        assert_eq!(got, hello);
+        assert_eq!(t, None);
     }
 
     #[test]

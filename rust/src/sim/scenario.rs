@@ -34,11 +34,12 @@ use crate::fleet::topology::{ShardId, ShardState, Topology};
 use crate::learn::{Learner, LearnerConfig, PolicyStore};
 use crate::net::framing::{
     ErrorMsg, ExperienceFrame, FeatureFrame, Hello, Msg, Payload, PolicySync, Request, Response,
-    ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_EXPERIENCE_UNSUPPORTED, ERR_OVERLOADED,
-    EXP_DONE, EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED, RESP_FLAG_NEED_KEYFRAME,
-    RESP_FLAG_STALE,
+    ResponseLearn, ResponseV2, CAP_EXPERIENCE, CAP_TRACE, ERR_EXPERIENCE_UNSUPPORTED,
+    ERR_OVERLOADED, EXP_DONE, EXP_EP_START, EXP_HAS_REWARD, EXP_TERMINATED,
+    RESP_FLAG_NEED_KEYFRAME, RESP_FLAG_STALE,
 };
 use crate::net::limits::backoff_delay;
+use crate::trace::{self, StageNs, TraceCtx};
 use crate::rl::native::{episode_rng, normalize_pendulum_obs};
 use crate::util::rng::Rng;
 use crate::util::simclock::EventQueue;
@@ -193,6 +194,13 @@ pub struct ScenarioConfig {
     /// hellos beyond it are shed with an explicit `ERR_OVERLOADED` frame
     /// and the client retries with jittered exponential backoff
     pub gw_max_sessions: usize,
+    /// negotiate CAP_TRACE fleet-wide (DESIGN.md §12): honest inference
+    /// clients append a per-decision trace trailer to every request, each
+    /// hop stamps its virtual-clock instant into the same bytes, and the
+    /// closed span comes back on the reply. Off by default — an untraced
+    /// run's event log is byte-identical to one from before this knob
+    /// existed.
+    pub trace: bool,
     pub faults: Vec<(f64, FaultCmd)>,
     /// closed-loop autoscaling on a virtual-time sampling cadence
     /// (None = the topology only changes through timed faults)
@@ -256,6 +264,7 @@ impl Default for ScenarioConfig {
             gw_error_budget: 8,
             codec_reject_budget: 16,
             gw_max_sessions: 0,
+            trace: false,
             faults: Vec::new(),
             autoscale: None,
             diurnal: None,
@@ -317,6 +326,9 @@ pub struct ClientOutcome {
     pub overload_rejections: u64,
     /// highest topology epoch stamped on an accepted hello ack
     pub topology_epoch: u64,
+    /// closed per-decision spans, one per accepted decision
+    /// ([`ScenarioConfig::trace`] mode; virtual-clock nanosecond stamps)
+    pub traces: Vec<TraceCtx>,
 }
 
 #[derive(Debug, Default)]
@@ -420,6 +432,9 @@ pub struct ScenarioReport {
     pub elapsed: f64,
     /// events processed
     pub events: usize,
+    /// fleet-wide per-stage attribution summed over every closed span
+    /// (zero when [`ScenarioConfig::trace`] is off)
+    pub stage_totals: StageNs,
 }
 
 impl ScenarioReport {
@@ -584,6 +599,8 @@ struct SimWork {
     client: u32,
     id: u64,
     payload: Payload,
+    /// wire-propagated span (enqueue stamped), carried across the batch
+    trace: Option<TraceCtx>,
 }
 
 /// The learning half of a shard reply: what becomes a `ResponseLearn`
@@ -609,6 +626,9 @@ struct SimReply {
     v2: Option<(u32, bool, u32)>,
     /// `Some` — answer as a learn response (experience path)
     learn: Option<LearnReply>,
+    /// the request's span, dequeue/pack stamped; execute/reply stamp at
+    /// the modelled completion instant before the trailer goes back out
+    trace: Option<TraceCtx>,
 }
 
 struct ShardSim {
@@ -690,6 +710,9 @@ struct World {
     /// seeded jitter source for overload backoff — the only random draw
     /// outside the transport, consumed in deterministic delivery order
     rng: Rng,
+    /// cumulative per-stage attribution over every closed span, the
+    /// autoscaler's `stage_window` feed
+    stage_totals: StageNs,
 }
 
 /// Closed-loop autoscaling state: the policy, the windowed sampler, and the
@@ -968,6 +991,7 @@ impl World {
             auto,
             n_events: 0,
             rng,
+            stage_totals: StageNs::default(),
         })
     }
 
@@ -1062,6 +1086,7 @@ impl World {
             drained,
             elapsed: self.clock.now_secs(),
             events: self.n_events,
+            stage_totals: self.stage_totals,
         }
     }
 
@@ -1075,6 +1100,28 @@ impl World {
         } else {
             self.clients[client as usize].down
         }
+    }
+
+    /// Whether client `c` runs traced: honest inference clients only.
+    /// Learning clients keep their experience stream untraced and
+    /// attackers forge frames without trailers by definition.
+    fn traced(&self, c: usize) -> bool {
+        self.cfg.trace && self.clients[c].attack.is_none() && self.clients[c].learn.is_none()
+    }
+
+    /// Opportunistic trailer peel at a frame boundary: in a traced run,
+    /// a trace-eligible frame is *expected* to carry a trailer, but
+    /// attackers forge eligible-typed bodies without one and untraced
+    /// cohorts coexist with traced ones — so a failed peel falls back to
+    /// the plain body instead of erroring. Deterministic either way: the
+    /// split is a pure function of the bytes.
+    fn peel_trace<'a>(&self, body: &'a [u8]) -> (&'a [u8], Option<TraceCtx>) {
+        if self.cfg.trace && !body.is_empty() && trace::trace_eligible(body[0]) {
+            if let Ok((inner, ctx)) = trace::split_trailer(body) {
+                return (inner, Some(ctx));
+            }
+        }
+        (body, None)
     }
 
     /// The idle gap before a client's next decision at virtual time `t`:
@@ -1126,7 +1173,12 @@ impl World {
         } else {
             0
         };
-        let caps = if cl.learn.is_some() { CAP_EXPERIENCE } else { 0 };
+        let caps = (if cl.learn.is_some() { CAP_EXPERIENCE } else { 0 })
+            | (if self.cfg.trace && cl.attack.is_none() && cl.learn.is_none() {
+                CAP_TRACE
+            } else {
+                0
+            });
         let body = msg_body(&Msg::Hello(Hello {
             client: c as u32,
             split,
@@ -1212,13 +1264,14 @@ impl World {
         if self.clients[c].learn.is_some() {
             return self.learn_client_send(t, c);
         }
-        let (id, up, epoch, payload) = {
+        let (id, up, epoch, t0, payload) = {
             let cl = &mut self.clients[c];
             if cl.finished {
                 return;
             }
             let Some(p) = &cl.pending else { return };
             let id = p.id;
+            let t0 = p.t0;
             let fill = ((c as u64 * 131 + id * 17) % 251) as u8;
             let (fc, fh, fw) = self.cfg.feat;
             let mut expect = None;
@@ -1306,9 +1359,19 @@ impl World {
                 p.wire_bytes = wire_b;
                 p.expect = expect;
             }
-            (id, cl.up, cl.epoch, payload)
+            (id, cl.up, cl.epoch, t0, payload)
         };
-        let body = msg_body(&Msg::Request(Request { client: c as u32, id, payload }));
+        let mut body = msg_body(&Msg::Request(Request { client: c as u32, id, payload }));
+        if self.traced(c) {
+            // span id mirrors the threaded convention — client in the high
+            // word, per-client decision counter in the low. Mint is the
+            // kick instant (observation ready); a retransmit re-stamps
+            // encode/send but the span still opens at the original t0.
+            let mut ctx = TraceCtx::mint(((c as u64) << 32) | id, trace::virtual_ns(t0));
+            ctx.stamp(trace::STAGE_ENCODE, trace::virtual_ns(t));
+            ctx.stamp(trace::STAGE_SEND, trace::virtual_ns(t));
+            trace::append_trailer(&mut body, &ctx);
+        }
         self.log
             .record(t, "request", &format!("client={c} id={id} bytes={}", body.len()));
         self.net.send(up, t, &body, &mut self.log);
@@ -1501,7 +1564,8 @@ impl World {
     }
 
     fn client_on_frame(&mut self, t: f64, c: usize, body: &[u8]) {
-        let msg = match Msg::decode(body) {
+        let (view, tctx) = self.peel_trace(body);
+        let msg = match Msg::decode(view) {
             Ok(m) => m,
             Err(_) => {
                 self.log.record(t, "client_frame_error", &format!("client={c}"));
@@ -1549,11 +1613,11 @@ impl World {
                 }
             }
             Msg::Response(r) => {
-                self.client_on_response(t, c, r.id, &r.action, None);
+                self.client_on_response(t, c, r.id, &r.action, None, tctx);
             }
             Msg::ResponseV2(r) => {
                 let feedback = (r.seq, r.need_keyframe(), r.queue_wait_us);
-                self.client_on_response(t, c, r.id, &r.action, Some(feedback));
+                self.client_on_response(t, c, r.id, &r.action, Some(feedback), tctx);
             }
             Msg::ResponseLearn(r) => self.learn_on_response(t, c, r),
             Msg::Error(e) if e.code == ERR_OVERLOADED => {
@@ -1590,6 +1654,7 @@ impl World {
         id: u64,
         action: &[f32],
         feedback: Option<(u32, bool, u32)>,
+        tctx: Option<TraceCtx>,
     ) {
         let think = self.think_gap(t);
         let cl = &mut self.clients[c];
@@ -1639,6 +1704,23 @@ impl World {
             cl.out.latencies.push(t - p.t0);
             self.log
                 .record(t, "answer", &format!("client={c} id={id} lat={:.6}", t - p.t0));
+            if let Some(mut ctx) = tctx {
+                // the span closes here; its decomposition feeds the
+                // fleet-wide attribution totals and one canonical log line
+                ctx.stamp(trace::STAGE_RECV, trace::virtual_ns(t));
+                let stages = ctx.stages();
+                cl.out.traces.push(ctx);
+                self.stage_totals.add(&stages);
+                self.log.record(
+                    t,
+                    "trace",
+                    &format!(
+                        "client={c} id={id} total_ns={} dominant={}",
+                        ctx.total_ns(),
+                        stages.dominant().unwrap_or("none")
+                    ),
+                );
+            }
         }
         self.events.push(t + think, Ev::Kick(c));
     }
@@ -1826,8 +1908,12 @@ impl World {
         // acks are filtered, so this ack IS the negotiation verdict
         let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
         // capability negotiation mirrors the server reader: experience is
-        // granted only when the fleet actually runs a learning loop
-        let caps = if self.cfg.learning.is_some() { h.caps & CAP_EXPERIENCE } else { 0 };
+        // granted only when the fleet actually runs a learning loop, and
+        // tracing only when the scenario turned the subsystem on
+        let mut caps = if self.cfg.learning.is_some() { h.caps & CAP_EXPERIENCE } else { 0 };
+        if self.cfg.trace {
+            caps |= h.caps & CAP_TRACE;
+        }
         let ack = msg_body(&Msg::Hello(Hello {
             client: session,
             split: h.split,
@@ -2124,7 +2210,8 @@ impl World {
             self.log.record(t, "dead_shard_rx", &format!("shard={s}"));
             return;
         }
-        let msg = match Msg::decode(body) {
+        let (view, tctx) = self.peel_trace(body);
+        let msg = match Msg::decode(view) {
             Ok(m) => m,
             Err(_) => {
                 self.shards[s].out.frame_errors += 1;
@@ -2140,8 +2227,11 @@ impl World {
                 // like the threaded reader
                 self.shards[s].codecs.invalidate(h.client);
                 let codec = if CodecId::from_wire(h.codec).is_some() { h.codec } else { 0 };
-                let caps =
+                let mut caps =
                     if self.shards[s].learn.is_some() { h.caps & CAP_EXPERIENCE } else { 0 };
+                if self.cfg.trace {
+                    caps |= h.caps & CAP_TRACE;
+                }
                 let ack = msg_body(&Msg::Hello(Hello {
                     client: h.client,
                     split: h.split,
@@ -2153,7 +2243,7 @@ impl World {
                 let lane = self.reply_lane(s, h.client);
                 self.net.send(lane, t, &ack, &mut self.log);
             }
-            Msg::Request(r) => self.shard_request(t, s, r),
+            Msg::Request(r) => self.shard_request(t, s, r, tctx),
             Msg::Policy(p) => self.shard_adopt(t, s, p),
             Msg::Response(_) | Msg::ResponseV2(_) | Msg::ResponseLearn(_) | Msg::Error(_) => {
                 self.log.record(t, "shard_unexpected", &format!("shard={s}"));
@@ -2186,7 +2276,7 @@ impl World {
         }
     }
 
-    fn shard_request(&mut self, t: f64, s: usize, r: Request) {
+    fn shard_request(&mut self, t: f64, s: usize, r: Request, tctx: Option<TraceCtx>) {
         let (client, id) = (r.client, r.id);
         if self.shards[s].quarantined.contains(&client) {
             // the executor shut this session's socket: its frames die
@@ -2199,13 +2289,21 @@ impl World {
         let now_i = self.clock.instant_at(t);
         let sh = &mut self.shards[s];
         sh.out.requests += 1;
-        let work = SimWork { client, id, payload: r.payload };
+        let work = SimWork {
+            client,
+            id,
+            payload: r.payload,
+            trace: tctx.map(|mut ctx| {
+                ctx.stamp(trace::STAGE_ENQUEUE, trace::virtual_ns(t));
+                ctx
+            }),
+        };
         if let Some(wk) = sh.collector.push(route, work, now_i) {
             sh.out.rejected += 1;
             // explicit rejection, like the executor's back-pressure path:
             // codec sessions additionally learn the frame never reached
             // the decoder, so the chain re-keys instead of desyncing
-            let reply = match &wk.payload {
+            let mut reply = match &wk.payload {
                 Payload::FeaturesV2(f) => msg_body(&Msg::ResponseV2(ResponseV2 {
                     client,
                     id,
@@ -2225,6 +2323,16 @@ impl World {
                 })),
                 _ => msg_body(&Msg::Response(Response { client, id, action: vec![] })),
             };
+            if let Some(mut ctx) = wk.trace {
+                // a shed decision still closes its span — every shard
+                // stage collapses onto the rejection instant
+                for stage in
+                    [trace::STAGE_DEQUEUE, trace::STAGE_PACK, trace::STAGE_EXECUTE, trace::STAGE_REPLY]
+                {
+                    ctx.stamp(stage, trace::virtual_ns(t));
+                }
+                trace::append_trailer(&mut reply, &ctx);
+            }
             self.log
                 .record(t, "reject", &format!("shard={s} client={client} id={id}"));
             self.net.send(reply_lane, t, &reply, &mut self.log);
@@ -2292,7 +2400,7 @@ impl World {
                     .as_micros()
                     .min(u32::MAX as u128) as u32;
                 let default_action = (w.client as f32) * 1e-3 + (w.id as f32) * 1e-6 + 0.125;
-                let reply = match &w.payload {
+                let mut reply = match &w.payload {
                     Payload::RawRgba { x, data } => {
                         let x = *x as usize;
                         let sh = &mut self.shards[s];
@@ -2307,6 +2415,7 @@ impl World {
                             action: default_action,
                             v2: None,
                             learn: None,
+                            trace: None,
                         }
                     }
                     Payload::Features { scale, data, .. } => {
@@ -2317,6 +2426,7 @@ impl World {
                             action: default_action,
                             v2: None,
                             learn: None,
+                            trace: None,
                         }
                     }
                     Payload::FeaturesV2(f) => {
@@ -2339,6 +2449,7 @@ impl World {
                                     action,
                                     v2: Some((f.seq, false, qw_us)),
                                     learn: None,
+                                    trace: None,
                                 }
                             }
                             Err(_) => {
@@ -2367,6 +2478,7 @@ impl World {
                                     action: 0.0,
                                     v2: Some((f.seq, true, qw_us)),
                                     learn: None,
+                                    trace: None,
                                 }
                             }
                         }
@@ -2457,9 +2569,19 @@ impl World {
                             action: 0.0,
                             v2: None,
                             learn: Some(learn),
+                            trace: None,
                         }
                     }
                 };
+                // dequeue and pack land on the batch's actual execution
+                // start (fill wait plus backlog behind it), so the span's
+                // queue stage equals the autoscaler's queue-wait sample
+                // for the same item, exactly
+                reply.trace = w.trace.map(|mut ctx| {
+                    ctx.stamp(trace::STAGE_DEQUEUE, trace::virtual_ns(start));
+                    ctx.stamp(trace::STAGE_PACK, trace::virtual_ns(start));
+                    ctx
+                });
                 replies.push(reply);
             }
             let cost = (self.cfg.exec_fixed + self.cfg.exec_per_item * n as f64) * factor
@@ -2545,7 +2667,7 @@ impl World {
         }
         for r in replies {
             let lane = self.reply_lane(s, r.client);
-            let body = match (r.learn, r.v2) {
+            let mut body = match (r.learn, r.v2) {
                 (Some(lr), _) if lr.unsupported => msg_body(&Msg::Error(ErrorMsg {
                     client: r.client,
                     code: ERR_EXPERIENCE_UNSUPPORTED,
@@ -2581,6 +2703,17 @@ impl World {
                     action: vec![r.action],
                 })),
             };
+            if let Some(mut ctx) = r.trace {
+                // execute and reply land on the modelled completion
+                // instant; capability errors are not trace-eligible, so
+                // the guard keeps a span off any frame the client-side
+                // peel would refuse to split
+                ctx.stamp(trace::STAGE_EXECUTE, trace::virtual_ns(t));
+                ctx.stamp(trace::STAGE_REPLY, trace::virtual_ns(t));
+                if !body.is_empty() && trace::trace_eligible(body[0]) {
+                    trace::append_trailer(&mut body, &ctx);
+                }
+            }
             self.net.send(lane, t, &body, &mut self.log);
         }
     }
@@ -2814,11 +2947,20 @@ impl World {
         let sample = auto.window.sample_parts(&auto.queue, gateway, requests, routable);
         let action = auto.scaler.observe(t, sample);
         auto.out.samples += 1;
+        // traced fleets attribute the verdict: the window's per-stage
+        // delta names the stage that dominated this interval (untraced
+        // runs keep the log line byte-identical to before)
+        let dominant = if self.cfg.trace {
+            let w = auto.window.stage_window(&self.stage_totals);
+            format!(" dominant={}", w.dominant().unwrap_or("none"))
+        } else {
+            String::new()
+        };
         self.log.record(
             t,
             "autoscale_sample",
             &format!(
-                "p95_us={} shed={:.4} shards={} verdict={:?}",
+                "p95_us={} shed={:.4} shards={} verdict={:?}{dominant}",
                 sample.queue_p95_ns / 1000,
                 sample.shed_rate,
                 sample.shards,
@@ -2872,16 +3014,29 @@ impl World {
                 }
             },
             Owner::GatewayFromClient(c) => match d {
-                Delivery::Frame(body) => {
+                Delivery::Frame(mut body) => {
                     if self.gw.quarantined.contains(&c) {
                         // the threaded gateway shut this socket: frames
                         // die unread, shard state untouched
                         self.gw.out.quarantine_drops += 1;
                         return;
                     }
-                    match Msg::decode(&body) {
+                    let (view, tctx) = self.peel_trace(&body);
+                    match Msg::decode(view) {
                         Ok(Msg::Hello(h)) => self.gateway_hello(t, h),
-                        Ok(Msg::Request(r)) => self.gateway_request(t, r.client, &body),
+                        Ok(Msg::Request(r)) => {
+                            if tctx.is_some() {
+                                // stamp the forward hop into the same bytes
+                                // the shard will receive: the trailer rides
+                                // the wire, not gateway state
+                                trace::stamp_body_tail(
+                                    &mut body,
+                                    trace::STAGE_GW_FORWARD,
+                                    trace::virtual_ns(t),
+                                );
+                            }
+                            self.gateway_request(t, r.client, &body)
+                        }
                         Ok(
                             Msg::Response(_)
                             | Msg::ResponseV2(_)
@@ -2905,7 +3060,10 @@ impl World {
                 }
             },
             Owner::GatewayFromShard(s) => match d {
-                Delivery::Frame(body) => match Msg::decode(&body) {
+                // classification peels the trailer; the body (trailer and
+                // all) still forwards verbatim — the gateway never rewrites
+                // reply bytes on the way down
+                Delivery::Frame(body) => match Msg::decode(self.peel_trace(&body).0) {
                     Ok(Msg::Hello(_)) => {
                         // shard-side hello acks stay internal to the fleet
                         self.gw.out.filtered_shard_acks += 1;
@@ -3118,6 +3276,30 @@ mod tests {
         assert_eq!(r.autoscale.scale_downs, 0);
         assert!(r.log.contains(" autoscale_sample "), "sample lines must be in the log");
         assert_eq!(r.gateway.migrations, 0);
+    }
+
+    #[test]
+    fn traced_run_closes_every_span_and_untraced_stays_silent() {
+        let cfg = ScenarioConfig { trace: true, ..base(7) };
+        let r = run_scenario(&cfg).expect("traced scenario");
+        assert_eq!(r.total_give_ups(), 0);
+        assert_eq!(r.completed_decisions(), 4 * 8);
+        for (c, cl) in r.clients.iter().enumerate() {
+            assert_eq!(cl.traces.len(), cl.decisions, "client {c}: one span per decision");
+            for tr in &cl.traces {
+                assert_eq!((tr.id >> 32) as usize, c, "span id carries the client");
+                assert!(tr.total_ns() > 0, "client {c}: open span {:#x}", tr.id);
+            }
+        }
+        assert!(r.stage_totals.total() > 0);
+        assert!(r.log.contains(" trace "), "traced runs must log span closures");
+
+        // same seed, trace off: no spans, no trace log lines, no totals —
+        // the observability layer must be invisible when not negotiated
+        let u = run_scenario(&base(7)).expect("untraced scenario");
+        assert!(!u.log.contains(" trace "));
+        assert!(u.clients.iter().all(|c| c.traces.is_empty()));
+        assert_eq!(u.stage_totals.total(), 0);
     }
 
     #[test]

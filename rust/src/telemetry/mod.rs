@@ -17,16 +17,26 @@ impl Recorder {
         Recorder::default()
     }
 
-    /// Record one sample row. All series must be present in every row.
+    /// Record one sample row. Every column stays exactly `xs`-aligned no
+    /// matter when a series first appears or which rows omit it: missing
+    /// cells become explicit NaN gaps (CSV consumers see empty-ish cells,
+    /// `downsample`/`to_csv` never index out of bounds). A key repeated
+    /// within one row keeps its last value.
     pub fn record(&mut self, x: f64, values: &[(&str, f64)]) {
         self.xs.push(x);
         for (k, v) in values {
-            self.series.entry(k.to_string()).or_default().push(*v);
+            let s = self.series.entry(k.to_string()).or_default();
+            // backfill rows from before this series existed (and drop a
+            // duplicate entry from this same row, so last-wins holds)
+            s.resize(self.xs.len() - 1, f64::NAN);
+            s.push(*v);
         }
-        debug_assert!(
-            self.series.values().all(|s| s.len() == self.xs.len()),
-            "ragged series"
-        );
+        // series absent from this row get a gap, not a shorter column
+        for s in self.series.values_mut() {
+            if s.len() < self.xs.len() {
+                s.push(f64::NAN);
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -133,6 +143,31 @@ mod tests {
         assert_eq!(r.len(), 10);
         assert_eq!(r.get("t").unwrap()[3], 6.0);
         assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn ragged_rows_are_backfilled_not_misaligned() {
+        // regression: a series that appears late, one that vanishes, and a
+        // duplicated key used to leave ragged columns that only a
+        // debug_assert noticed — release builds then misindexed in
+        // downsample/to_csv. Every column must stay xs-aligned, with NaN
+        // marking the gaps.
+        let mut r = Recorder::new();
+        r.record(0.0, &[("a", 1.0)]);
+        r.record(1.0, &[("a", 2.0), ("late", 10.0)]);
+        r.record(2.0, &[("late", 20.0), ("dup", 7.0), ("dup", 8.0)]);
+        assert_eq!(r.len(), 3);
+        for (k, s) in &r.series {
+            assert_eq!(s.len(), r.len(), "series {k} ragged");
+        }
+        assert_eq!(r.get("a").unwrap()[1], 2.0);
+        assert!(r.get("a").unwrap()[2].is_nan(), "vanished series must gap");
+        assert!(r.get("late").unwrap()[0].is_nan(), "late series must backfill");
+        assert_eq!(r.get("late").unwrap()[2], 20.0);
+        assert_eq!(r.get("dup").unwrap()[2], 8.0, "duplicate key is last-wins");
+        // and the consumers that used to misindex now traverse cleanly
+        assert_eq!(r.to_csv().lines().count(), 4);
+        assert_eq!(r.downsample(2).series.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,685 @@
+//! Per-decision distributed tracing (DESIGN.md §12): a compact trace
+//! context — one `u64` id plus ten stage timestamps — minted by the client
+//! when an observation is ready, carried on the wire through every hop of
+//! the serving stack, and completed when the action arrives back.
+//!
+//! ## Wire format
+//!
+//! The context rides as a fixed [`TRACE_WIRE_BYTES`]-byte **trailer**
+//! appended after the canonical message body:
+//!
+//! ```text
+//! [tag u8 = TRACE_TAG][trace_id u64 LE][stamp[0] u64 LE]…[stamp[9] u64 LE]
+//! ```
+//!
+//! The canonical `Msg` encoding is untouched: `Msg::decode` still rejects
+//! trailing bytes, so every hostile-wire and fuzz invariant over the base
+//! format holds verbatim. Trace-aware endpoints peel the trailer with
+//! [`split_trailer`] *before* decoding and append it with [`append_trace`]
+//! / [`append_trailer`] *after* encoding. The trailer only appears on
+//! sessions that negotiated the `CAP_TRACE` Hello capability, and only on
+//! trace-eligible types ([`trace_eligible`]: the four request payloads and
+//! the three response kinds — never Hello/Error/Policy). `net::limits`
+//! widens the per-type caps by exactly [`TRACE_WIRE_BYTES`] on such
+//! sessions, so a hostile length still cannot buy an oversized allocation.
+//!
+//! Intermediaries (the fleet gateway) never decode: [`stamp_body_tail`]
+//! patches one stamp in place at a fixed offset from the end of the body.
+//!
+//! ## Clocks
+//!
+//! Stamps are nanoseconds. Threaded runs stamp through the process-wide
+//! monotonic epoch ([`now_ns`] over the `Clock` seam); sim runs stamp
+//! virtual time directly ([`virtual_ns`]), so same-seed scenario runs
+//! produce byte-identical traces.
+//!
+//! ## Recording
+//!
+//! [`Ring`] is a preallocated flight recorder: fixed capacity, overwrite
+//! oldest, zero steady-state allocations (`TraceCtx` is `Copy`). Export —
+//! [`write_jsonl`], [`exemplar_table`] — is pull-based and allocates only
+//! at dump time.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::net::framing::{
+    MSG_EXPERIENCE, MSG_REQUEST_FEAT, MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE,
+    MSG_RESPONSE_LEARN, MSG_RESPONSE_V2,
+};
+use crate::sim::clock::ClockHandle;
+
+/// Stage indices into [`TraceCtx::stamps`], in causal order.
+pub const STAGE_MINT: usize = 0; // client: observation ready, span opened
+pub const STAGE_ENCODE: usize = 1; // client: payload encoded
+pub const STAGE_SEND: usize = 2; // client: frame handed to the wire
+pub const STAGE_GW_FORWARD: usize = 3; // gateway: request forwarded upstream
+pub const STAGE_ENQUEUE: usize = 4; // shard reader: work enqueued
+pub const STAGE_DEQUEUE: usize = 5; // shard executor: batch formed
+pub const STAGE_PACK: usize = 6; // arena packed
+pub const STAGE_EXECUTE: usize = 7; // policy executed
+pub const STAGE_REPLY: usize = 8; // reply frame written
+pub const STAGE_RECV: usize = 9; // client: response received, span closed
+/// Number of stamp slots in a trace context.
+pub const N_STAGES: usize = 10;
+
+/// Stamp-slot names, indexed by the `STAGE_*` constants.
+pub const STAGE_NAMES: [&str; N_STAGES] = [
+    "mint", "encode", "send", "gw_forward", "enqueue", "dequeue", "pack", "execute", "reply",
+    "recv",
+];
+
+/// First byte of the wire trailer. Anything else at the trailer offset on
+/// a trace-negotiated session is a protocol error.
+pub const TRACE_TAG: u8 = 1;
+
+/// Exact wire size of the trailer: tag + id + `N_STAGES` stamps.
+pub const TRACE_WIRE_BYTES: usize = 1 + 8 + 8 * N_STAGES;
+
+/// Message types that may carry a trace trailer: the four request payload
+/// types and the three response kinds. Hello, Error and Policy frames
+/// never carry one (negotiation and control traffic is not a decision).
+pub const TRACE_ELIGIBLE: [u8; 7] = [
+    MSG_REQUEST_RAW,
+    MSG_REQUEST_FEAT,
+    MSG_REQUEST_FEAT_V2,
+    MSG_EXPERIENCE,
+    MSG_RESPONSE,
+    MSG_RESPONSE_V2,
+    MSG_RESPONSE_LEARN,
+];
+
+/// Whether a message type may carry a trace trailer.
+pub fn trace_eligible(ty: u8) -> bool {
+    TRACE_ELIGIBLE.contains(&ty)
+}
+
+/// One decision's span: a trace id plus one nanosecond stamp per stage.
+/// `Copy` and fixed-size by design — it moves through channels, rings and
+/// the wire without touching the allocator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    pub id: u64,
+    /// Nanosecond stamps indexed by the `STAGE_*` constants; 0 = unset.
+    pub stamps: [u64; N_STAGES],
+}
+
+impl TraceCtx {
+    /// Open a span: stamp [`STAGE_MINT`] at `ns`.
+    pub fn mint(id: u64, ns: u64) -> TraceCtx {
+        let mut c = TraceCtx { id, stamps: [0; N_STAGES] };
+        c.stamps[STAGE_MINT] = ns;
+        c
+    }
+
+    /// Record `ns` into `stage` (last writer wins — a retransmitted frame
+    /// re-stamps its send-side stages).
+    pub fn stamp(&mut self, stage: usize, ns: u64) {
+        self.stamps[stage] = ns;
+    }
+
+    /// Append the wire trailer ([`TRACE_WIRE_BYTES`] bytes) to `out`.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        out.push(TRACE_TAG);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        for s in &self.stamps {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+
+    /// Parse a trailer from exactly [`TRACE_WIRE_BYTES`] bytes.
+    pub fn read_wire(b: &[u8]) -> Result<TraceCtx> {
+        ensure!(b.len() == TRACE_WIRE_BYTES, "trace trailer is {} bytes, want {TRACE_WIRE_BYTES}", b.len());
+        ensure!(b[0] == TRACE_TAG, "trace trailer tag {} (want {TRACE_TAG})", b[0]);
+        let id = u64::from_le_bytes(b[1..9].try_into().unwrap());
+        let mut stamps = [0u64; N_STAGES];
+        for (i, s) in stamps.iter_mut().enumerate() {
+            let off = 9 + 8 * i;
+            *s = u64::from_le_bytes(b[off..off + 8].try_into().unwrap());
+        }
+        Ok(TraceCtx { id, stamps })
+    }
+
+    /// Span length so far: latest stamp − mint. For a closed span this is
+    /// the end-to-end latency (recv − mint); for a server-side view (whose
+    /// last stamp is reply) it is the span up to that hop, so partial
+    /// recordings still sort meaningfully in exemplar dumps.
+    pub fn total_ns(&self) -> u64 {
+        let last = self.stamps.iter().copied().max().unwrap_or(0);
+        last.saturating_sub(self.stamps[STAGE_MINT])
+    }
+
+    /// Decompose a *closed* span into the seven per-stage durations.
+    /// Saturating throughout, so a hop that never stamped (e.g. no gateway
+    /// in the path) degrades to zero rather than wrapping.
+    pub fn stages(&self) -> StageNs {
+        let s = &self.stamps;
+        let d = |a: usize, b: usize| s[b].saturating_sub(s[a]);
+        StageNs {
+            ns: [
+                d(STAGE_MINT, STAGE_ENCODE),
+                d(STAGE_SEND, STAGE_ENQUEUE),
+                d(STAGE_ENQUEUE, STAGE_DEQUEUE),
+                d(STAGE_DEQUEUE, STAGE_PACK),
+                d(STAGE_PACK, STAGE_EXECUTE),
+                d(STAGE_EXECUTE, STAGE_REPLY),
+                d(STAGE_REPLY, STAGE_RECV),
+            ],
+        }
+    }
+}
+
+/// Number of derived stage durations a span decomposes into.
+pub const N_STAGE_KINDS: usize = 7;
+
+/// Names of the derived durations, indexed like [`StageNs::ns`].
+pub const STAGE_KIND_NAMES: [&str; N_STAGE_KINDS] =
+    ["encode", "wire_up", "queue", "pack", "execute", "reply", "wire_down"];
+
+/// Per-stage nanosecond totals — one span's decomposition, or an
+/// accumulator over many (the autoscaler's attribution feed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageNs {
+    /// Indexed by [`STAGE_KIND_NAMES`].
+    pub ns: [u64; N_STAGE_KINDS],
+}
+
+impl StageNs {
+    /// Accumulate another decomposition (saturating).
+    pub fn add(&mut self, other: &StageNs) {
+        for (a, b) in self.ns.iter_mut().zip(other.ns.iter()) {
+            *a = a.saturating_add(*b);
+        }
+    }
+
+    /// Accumulate one closed span.
+    pub fn accumulate(&mut self, ctx: &TraceCtx) {
+        self.add(&ctx.stages());
+    }
+
+    /// Sum of all stages.
+    pub fn total(&self) -> u64 {
+        self.ns.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// Combined wire time (both directions).
+    pub fn wire(&self) -> u64 {
+        self.ns[1].saturating_add(self.ns[6])
+    }
+
+    /// Shard queue wait.
+    pub fn queue(&self) -> u64 {
+        self.ns[2]
+    }
+
+    /// The stage holding the largest share, by name (`None` when empty).
+    /// Ties resolve to the earliest stage, deterministically.
+    pub fn dominant(&self) -> Option<&'static str> {
+        let (mut best, mut at) = (0u64, None);
+        for (i, &v) in self.ns.iter().enumerate() {
+            if v > best {
+                best = v;
+                at = Some(STAGE_KIND_NAMES[i]);
+            }
+        }
+        at
+    }
+
+    /// Windowed delta against an earlier cumulative snapshot (saturating,
+    /// so a counter reset degrades to zero instead of wrapping).
+    pub fn delta(&self, prev: &StageNs) -> StageNs {
+        let mut out = StageNs::default();
+        for (i, o) in out.ns.iter_mut().enumerate() {
+            *o = self.ns[i].saturating_sub(prev.ns[i]);
+        }
+        out
+    }
+}
+
+/// Peel a trace trailer off a message body: `(canonical body, ctx)`.
+///
+/// Strict by contract — callers invoke this only on sessions that
+/// negotiated `CAP_TRACE`, where every trace-eligible frame MUST carry a
+/// trailer; a missing or malformed one is a protocol error, exactly like
+/// an undecodable body.
+pub fn split_trailer(body: &[u8]) -> Result<(&[u8], TraceCtx)> {
+    ensure!(!body.is_empty(), "empty frame cannot carry a trace trailer");
+    ensure!(trace_eligible(body[0]), "message type {} is not trace-eligible", body[0]);
+    if body.len() <= TRACE_WIRE_BYTES {
+        bail!("frame too short ({} bytes) for a trace trailer", body.len());
+    }
+    let base = body.len() - TRACE_WIRE_BYTES;
+    let ctx = TraceCtx::read_wire(&body[base..])?;
+    Ok((&body[..base], ctx))
+}
+
+/// Append a trailer to a prefix-less message body (the sim's frame
+/// currency).
+pub fn append_trailer(body: &mut Vec<u8>, ctx: &TraceCtx) {
+    debug_assert!(body.first().is_some_and(|&t| trace_eligible(t)));
+    ctx.write_wire(body);
+}
+
+/// Append a trailer to a full length-prefixed frame (the threaded stack's
+/// currency: `[u32 len][type][payload…]`) and re-seal the prefix. Works on
+/// the pooled reply buffers unchanged — steady-state capacity absorbs the
+/// extra [`TRACE_WIRE_BYTES`], so the hot path stays allocation-free.
+pub fn append_trace(frame: &mut Vec<u8>, ctx: &TraceCtx) {
+    debug_assert!(frame.len() > 4 && trace_eligible(frame[4]));
+    ctx.write_wire(frame);
+    let len = (frame.len() - 4) as u32;
+    frame[0..4].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Patch one stamp in place at the tail of a message body, without
+/// decoding — the gateway's forward-pump hook. Returns `false` (leaving
+/// the body untouched) when the body cannot be carrying a trailer.
+///
+/// Callers gate this on sessions that negotiated `CAP_TRACE`, where
+/// honest clients always attach a trailer; the residual false-positive (a
+/// trace-negotiated client sending a traceless eligible frame whose
+/// payload happens to end in [`TRACE_TAG`] at the trailer offset) can only
+/// corrupt that client's own payload, never another session's.
+pub fn stamp_body_tail(body: &mut [u8], stage: usize, ns: u64) -> bool {
+    debug_assert!(stage < N_STAGES);
+    if body.len() <= TRACE_WIRE_BYTES || !trace_eligible(body[0]) {
+        return false;
+    }
+    let base = body.len() - TRACE_WIRE_BYTES;
+    if body[base] != TRACE_TAG {
+        return false;
+    }
+    let off = base + 1 + 8 + 8 * stage;
+    body[off..off + 8].copy_from_slice(&ns.to_le_bytes());
+    true
+}
+
+/// Like [`stamp_body_tail`] but over a full length-prefixed frame.
+pub fn stamp_frame_tail(frame: &mut [u8], stage: usize, ns: u64) -> bool {
+    if frame.len() <= 4 {
+        return false;
+    }
+    stamp_body_tail(&mut frame[4..], stage, ns)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds of `at` since the process-wide trace epoch (the first
+/// instant this function ever saw). Saturates to zero for instants that
+/// race the epoch's initialisation.
+pub fn ns_since_epoch(at: Instant) -> u64 {
+    let e = *EPOCH.get_or_init(|| at);
+    at.saturating_duration_since(e).as_nanos() as u64
+}
+
+/// Current trace timestamp through the `Clock` seam (threaded stamps).
+pub fn now_ns(clock: &ClockHandle) -> u64 {
+    ns_since_epoch(clock.now())
+}
+
+/// Virtual-time trace timestamp (sim stamps): seconds of virtual time,
+/// rounded to whole nanoseconds — a pure function of the event time, so
+/// same-seed runs reproduce stamps bit-for-bit.
+pub fn virtual_ns(t_secs: f64) -> u64 {
+    (t_secs * 1e9).round() as u64
+}
+
+/// Flight-recorder ring: preallocated, overwrite-oldest, `Copy` entries —
+/// recording never allocates after construction. "Always on, sampled
+/// export": every decision is recorded, the ring's capacity bounds what is
+/// exportable, and dumps ([`Ring::to_vec`], [`Ring::slowest`]) allocate
+/// only when asked.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    buf: Vec<TraceCtx>,
+    cap: usize,
+    next: usize,
+    len: usize,
+}
+
+impl Ring {
+    /// A ring retaining the last `cap` spans (`cap` ≥ 1), fully
+    /// preallocated up front.
+    pub fn with_capacity(cap: usize) -> Ring {
+        let cap = cap.max(1);
+        Ring { buf: vec![TraceCtx::default(); cap], cap, next: 0, len: 0 }
+    }
+
+    /// Record a span, overwriting the oldest once full. Never allocates.
+    pub fn push(&mut self, ctx: TraceCtx) {
+        self.buf[self.next] = ctx;
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Retained spans, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceCtx> {
+        let start = (self.next + self.cap - self.len) % self.cap;
+        (0..self.len).map(move |i| &self.buf[(start + i) % self.cap])
+    }
+
+    /// Retained spans, oldest first, as an owned vector (export only).
+    pub fn to_vec(&self) -> Vec<TraceCtx> {
+        self.iter().copied().collect()
+    }
+
+    /// The `n` slowest retained spans by total latency, slowest first;
+    /// ties break on trace id so the dump is deterministic.
+    pub fn slowest(&self, n: usize) -> Vec<TraceCtx> {
+        slowest(&self.to_vec(), n)
+    }
+}
+
+/// The `n` slowest spans by total latency, slowest first (deterministic:
+/// ties break on trace id).
+pub fn slowest(traces: &[TraceCtx], n: usize) -> Vec<TraceCtx> {
+    let mut v = traces.to_vec();
+    v.sort_by(|a, b| b.total_ns().cmp(&a.total_ns()).then(a.id.cmp(&b.id)));
+    v.truncate(n);
+    v
+}
+
+/// One span as a single JSON line (fixed key order, no trailing newline).
+pub fn span_json(ctx: &TraceCtx) -> String {
+    use std::fmt::Write;
+    let st = ctx.stages();
+    let mut s = String::with_capacity(256);
+    let _ = write!(s, "{{\"trace_id\":{},\"total_ns\":{}", ctx.id, ctx.total_ns());
+    for (i, name) in STAGE_KIND_NAMES.iter().enumerate() {
+        let _ = write!(s, ",\"{name}_ns\":{}", st.ns[i]);
+    }
+    s.push_str(",\"stamps_ns\":[");
+    for (i, v) in ctx.stamps.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{v}");
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Render spans as JSONL (one [`span_json`] line per span).
+pub fn write_jsonl(traces: &[TraceCtx], out: &mut String) {
+    for t in traces {
+        out.push_str(&span_json(t));
+        out.push('\n');
+    }
+}
+
+/// Human-readable exemplar dump: the `n` slowest spans with their full
+/// stage breakdowns, in milliseconds.
+pub fn exemplar_table(traces: &[TraceCtx], n: usize) -> String {
+    use std::fmt::Write;
+    let picks = slowest(traces, n);
+    let mut s = String::new();
+    let _ = write!(s, "{:>16} {:>9}", "trace", "total");
+    for name in STAGE_KIND_NAMES {
+        let _ = write!(s, " {name:>9}");
+    }
+    s.push('\n');
+    for t in &picks {
+        let st = t.stages();
+        let _ = write!(s, "{:>16x} {:>9.3}", t.id, t.total_ns() as f64 / 1e6);
+        for v in st.ns {
+            let _ = write!(s, " {:>9.3}", v as f64 / 1e6);
+        }
+        s.push('\n');
+    }
+    if picks.is_empty() {
+        s.push_str("(no closed spans recorded)\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::framing::{Msg, Payload, Request, Response, MSG_HELLO};
+    use crate::sim::clock::SimClock;
+
+    fn closed_span() -> TraceCtx {
+        // monotone stamps: mint=10, encode=30, send=35, gw=60, enqueue=100,
+        // dequeue=400, pack=420, execute=520, reply=530, recv=600
+        let mut c = TraceCtx::mint(0xfeed, 10);
+        for (stage, ns) in
+            [(STAGE_ENCODE, 30), (STAGE_SEND, 35), (STAGE_GW_FORWARD, 60), (STAGE_ENQUEUE, 100), (STAGE_DEQUEUE, 400), (STAGE_PACK, 420), (STAGE_EXECUTE, 520), (STAGE_REPLY, 530), (STAGE_RECV, 600)]
+        {
+            c.stamp(stage, ns);
+        }
+        c
+    }
+
+    fn body_of(m: &Msg) -> Vec<u8> {
+        m.encode()[4..].to_vec()
+    }
+
+    #[test]
+    fn wire_roundtrip_is_exact() {
+        let c = closed_span();
+        let mut w = Vec::new();
+        c.write_wire(&mut w);
+        assert_eq!(w.len(), TRACE_WIRE_BYTES);
+        assert_eq!(w[0], TRACE_TAG);
+        assert_eq!(TraceCtx::read_wire(&w).unwrap(), c);
+    }
+
+    #[test]
+    fn read_wire_rejects_bad_sizes_and_tag() {
+        let c = closed_span();
+        let mut w = Vec::new();
+        c.write_wire(&mut w);
+        assert!(TraceCtx::read_wire(&w[..TRACE_WIRE_BYTES - 1]).is_err());
+        let mut long = w.clone();
+        long.push(0);
+        assert!(TraceCtx::read_wire(&long).is_err());
+        let mut forged = w.clone();
+        forged[0] = TRACE_TAG.wrapping_add(1);
+        assert!(TraceCtx::read_wire(&forged).is_err());
+    }
+
+    #[test]
+    fn split_trailer_peels_the_canonical_body() {
+        let msg = Msg::Response(Response { client: 7, id: 42, action: vec![0.5, -0.5] });
+        let canonical = body_of(&msg);
+        let ctx = closed_span();
+        let mut body = canonical.clone();
+        append_trailer(&mut body, &ctx);
+        assert_eq!(body.len(), canonical.len() + TRACE_WIRE_BYTES);
+        let (inner, got) = split_trailer(&body).unwrap();
+        assert_eq!(inner, &canonical[..]);
+        assert_eq!(got, ctx);
+        // and the peeled body decodes as the original message
+        assert_eq!(Msg::decode(inner).unwrap(), msg);
+    }
+
+    #[test]
+    fn split_trailer_rejects_ineligible_short_and_forged() {
+        // ineligible type (hello)
+        let hello = [MSG_HELLO, 0, 0, 0, 0, 0, 0, 0, 0];
+        let mut h = hello.to_vec();
+        h.extend_from_slice(&[0u8; TRACE_WIRE_BYTES]);
+        assert!(split_trailer(&h).is_err());
+        // empty + too short
+        assert!(split_trailer(&[]).is_err());
+        assert!(split_trailer(&[crate::net::framing::MSG_RESPONSE; TRACE_WIRE_BYTES]).is_err());
+        // forged tag
+        let msg = Msg::Response(Response { client: 1, id: 2, action: vec![] });
+        let mut body = body_of(&msg);
+        let ctx = closed_span();
+        append_trailer(&mut body, &ctx);
+        let base = body.len() - TRACE_WIRE_BYTES;
+        body[base] = 0xaa;
+        assert!(split_trailer(&body).is_err());
+    }
+
+    #[test]
+    fn stamp_body_tail_patches_exactly_one_stamp() {
+        let msg = Msg::Request(Request {
+            client: 3,
+            id: 9,
+            payload: Payload::RawRgba { x: 2, data: vec![1; 16] },
+        });
+        let mut body = body_of(&msg);
+        let ctx = TraceCtx::mint(0xabcd, 5);
+        append_trailer(&mut body, &ctx);
+        assert!(stamp_body_tail(&mut body, STAGE_GW_FORWARD, 777));
+        let (_, got) = split_trailer(&body).unwrap();
+        let mut want = ctx;
+        want.stamp(STAGE_GW_FORWARD, 777);
+        assert_eq!(got, want);
+        // refuses traceless, ineligible and short bodies, leaving bytes alone
+        let mut plain = body_of(&msg); // 31 bytes: shorter than any trailer
+        let before = plain.clone();
+        assert!(!stamp_body_tail(&mut plain, STAGE_GW_FORWARD, 1));
+        assert_eq!(plain, before);
+        let mut tiny = vec![MSG_REQUEST_RAW; 4];
+        assert!(!stamp_body_tail(&mut tiny, STAGE_GW_FORWARD, 1));
+        let mut hello = vec![MSG_HELLO; TRACE_WIRE_BYTES + 20];
+        assert!(!stamp_body_tail(&mut hello, STAGE_GW_FORWARD, 1));
+    }
+
+    #[test]
+    fn append_trace_reseals_the_length_prefix() {
+        let msg = Msg::Response(Response { client: 1, id: 2, action: vec![1.0] });
+        let mut frame = msg.encode();
+        let body_len = frame.len() - 4;
+        let ctx = closed_span();
+        append_trace(&mut frame, &ctx);
+        let sealed = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        assert_eq!(sealed, body_len + TRACE_WIRE_BYTES);
+        assert_eq!(frame.len(), 4 + sealed);
+        let (inner, got) = split_trailer(&frame[4..]).unwrap();
+        assert_eq!(Msg::decode(inner).unwrap(), msg);
+        assert_eq!(got, ctx);
+        // and the frame-level stamp helper hits the same trailer
+        assert!(stamp_frame_tail(&mut frame, STAGE_RECV, 999));
+        let (_, got) = split_trailer(&frame[4..]).unwrap();
+        assert_eq!(got.stamps[STAGE_RECV], 999);
+    }
+
+    #[test]
+    fn stage_decomposition_matches_hand_math() {
+        let c = closed_span();
+        let st = c.stages();
+        assert_eq!(st.ns, [20, 65, 300, 20, 100, 10, 70]);
+        assert_eq!(st.total(), 590);
+        assert_eq!(c.total_ns(), 590);
+        assert_eq!(st.wire(), 135);
+        assert_eq!(st.queue(), 300);
+        assert_eq!(st.dominant(), Some("queue"));
+        assert_eq!(StageNs::default().dominant(), None);
+    }
+
+    #[test]
+    fn stage_accumulation_and_windowed_delta() {
+        let mut acc = StageNs::default();
+        acc.accumulate(&closed_span());
+        acc.accumulate(&closed_span());
+        assert_eq!(acc.total(), 2 * 590);
+        let mut later = acc;
+        later.accumulate(&closed_span());
+        let win = later.delta(&acc);
+        assert_eq!(win.ns, closed_span().stages().ns);
+        // saturating on reset
+        assert_eq!(acc.delta(&later).total(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_never_grows() {
+        let mut r = Ring::with_capacity(3);
+        assert!(r.is_empty());
+        for i in 0..5u64 {
+            let mut c = TraceCtx::mint(i, i);
+            c.stamp(STAGE_RECV, i + 10 * i);
+            r.push(c);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        let ids: Vec<u64> = r.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        // slowest(n): totals are 10*i − 0, so 4 then 3
+        let top = r.slowest(2);
+        assert_eq!(top.iter().map(|c| c.id).collect::<Vec<_>>(), vec![4, 3]);
+    }
+
+    #[test]
+    fn virtual_ns_is_deterministic_and_monotone() {
+        assert_eq!(virtual_ns(0.0), 0);
+        assert_eq!(virtual_ns(1.5), 1_500_000_000);
+        assert_eq!(virtual_ns(0.000_000_001), 1);
+        assert!(virtual_ns(2.0) > virtual_ns(1.999_999_999));
+    }
+
+    #[test]
+    fn clock_seam_stamps_are_monotone() {
+        let sim = SimClock::new();
+        let h = sim.handle();
+        let a = now_ns(&h);
+        sim.advance_secs(0.5);
+        let b = now_ns(&h);
+        assert!(b >= a + 499_000_000, "virtual advance must show up: {a} -> {b}");
+    }
+
+    #[test]
+    fn jsonl_and_exemplar_table_are_stable() {
+        let c = closed_span();
+        let line = span_json(&c);
+        assert!(line.starts_with("{\"trace_id\":65261,\"total_ns\":590,\"encode_ns\":20,"));
+        assert!(line.contains("\"queue_ns\":300"));
+        assert!(line.ends_with(",\"stamps_ns\":[10,30,35,60,100,400,420,520,530,600]}"));
+        let mut out = String::new();
+        write_jsonl(&[c, c], &mut out);
+        assert_eq!(out.lines().count(), 2);
+        let table = exemplar_table(&[c], 5);
+        assert!(table.contains("trace"));
+        assert!(table.contains("wire_up"));
+        assert!(table.contains("feed")); // hex id
+        assert!(exemplar_table(&[], 5).contains("no closed spans"));
+    }
+
+    #[test]
+    fn trailer_boundary_prefix_decodes_as_the_traceless_twin() {
+        // The one structural consequence of an optional trailer: cutting
+        // exactly TRACE_WIRE_BYTES off a traced frame yields its valid
+        // traceless twin. Benign — dropping a trailer only loses
+        // observability — and pinned here so it stays a *single* boundary:
+        // every other strict prefix must still fail to decode.
+        let msg = Msg::Request(Request {
+            client: 1,
+            id: 2,
+            payload: Payload::Features { c: 1, h: 2, w: 2, scale: 0.5, data: vec![9; 4] },
+        });
+        let mut body = body_of(&msg);
+        append_trailer(&mut body, &TraceCtx::mint(1, 1));
+        let cut = body.len() - TRACE_WIRE_BYTES;
+        for n in 1..body.len() {
+            let prefix = &body[..n];
+            // a trace-negotiated receiver always splits then decodes; that
+            // composed path must reject EVERY strict prefix (at the cut the
+            // split itself fails: the twin is too short to hold a trailer)
+            let traced = split_trailer(prefix).and_then(|(inner, _)| Msg::decode(inner));
+            assert!(traced.is_err(), "traced receiver must reject a {n}-byte prefix");
+            // a traceless receiver sees the twin at exactly the cut
+            if n == cut {
+                assert_eq!(Msg::decode(prefix).unwrap(), msg);
+            } else {
+                assert!(Msg::decode(prefix).is_err(), "prefix of {n} bytes must not decode");
+            }
+        }
+    }
+}

@@ -25,6 +25,7 @@ use miniconv::net::framing::{
     Request, Response, ResponseLearn, ResponseV2, CAP_EXPERIENCE, ERR_OVERLOADED, EXP_HAS_REWARD,
     RESP_FLAG_NEED_KEYFRAME,
 };
+use miniconv::trace::{append_trailer, trace_eligible, TraceCtx, STAGE_RECV};
 use miniconv::util::rng::Rng;
 
 /// One valid frame body per wire construct, built through the real
@@ -172,11 +173,35 @@ fn msg_decode_survives_truncation_mutation_and_noise() {
             msg_decode::fuzz_target(&entry[..cut]);
         }
     }
-    // seeded structured mutation + raw noise
+    // traced variants: every trace-eligible entry with a trailer
+    // appended (what a CAP_TRACE session puts on the wire), then the
+    // same off-by-one truncation sweep over the trailered bytes so the
+    // peel layer sees every torn-tail shape
+    let mut ctx = TraceCtx::mint(((7u64) << 32) | 1, 1_000);
+    ctx.stamp(STAGE_RECV, 2_000);
+    let traced: Vec<Vec<u8>> = corpus
+        .iter()
+        .filter(|e| trace_eligible(e[0]))
+        .map(|e| {
+            let mut t = e.clone();
+            append_trailer(&mut t, &ctx);
+            t
+        })
+        .collect();
+    assert!(traced.len() >= 6, "trace-eligible corpus arms went missing");
+    for entry in &traced {
+        for cut in 0..=entry.len() {
+            msg_decode::fuzz_target(&entry[..cut]);
+        }
+    }
+    // seeded structured mutation + raw noise; the mutation pool carries
+    // the trailered entries too, so splices and bit flips land inside
+    // trace trailers as often as inside canonical payloads
+    let pool: Vec<Vec<u8>> = corpus.iter().chain(&traced).cloned().collect();
     let mut rng = Rng::new(0xF0CC_5EED);
     let mut buf = Vec::new();
     for _ in 0..6000 {
-        mutate(&mut rng, &corpus, &mut buf);
+        mutate(&mut rng, &pool, &mut buf);
         msg_decode::fuzz_target(&buf);
     }
     for _ in 0..2000 {

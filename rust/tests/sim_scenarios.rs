@@ -22,6 +22,10 @@ use miniconv::sim::{
     run_scenario, AutoscaleSpec, FaultCmd, LearnSpec, LinkFaults, ScenarioConfig, ScenarioReport,
     ThermalSpec,
 };
+use miniconv::trace::{
+    STAGE_DEQUEUE, STAGE_ENCODE, STAGE_ENQUEUE, STAGE_EXECUTE, STAGE_GW_FORWARD, STAGE_MINT,
+    STAGE_PACK, STAGE_RECV, STAGE_REPLY, STAGE_SEND,
+};
 
 const SEEDS: [u64; 3] = [11, 23, 47];
 
@@ -1521,5 +1525,193 @@ fn diurnal_load_breathes_the_fleet_through_the_autoscaler() {
             r.autoscale.samples as f64 >= r.elapsed / 2.0 - 4.0,
             "seed {seed}: sampling cadence drifted"
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 23: per-decision tracing under wire chaos — every accepted
+// decision carries one closed span whose stamps walk the gateway path in
+// hop order on the virtual clock, the spans replay byte-for-byte at the
+// same seed, and switching tracing off leaves the log and the wire
+// untouched (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_chaos_runs_replay_one_closed_span_per_decision() {
+    const PATH: [usize; 10] = [
+        STAGE_MINT,
+        STAGE_ENCODE,
+        STAGE_SEND,
+        STAGE_GW_FORWARD,
+        STAGE_ENQUEUE,
+        STAGE_DEQUEUE,
+        STAGE_PACK,
+        STAGE_EXECUTE,
+        STAGE_REPLY,
+        STAGE_RECV,
+    ];
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            trace: true,
+            shards: 2,
+            raw_clients: 4,
+            split_clients: 2,
+            decisions: 6,
+            req_timeout: 0.04,
+            client_link: LinkFaults { jitter: 0.002, drop_p: 0.2, ..LinkFaults::ideal() },
+            ..ScenarioConfig::default()
+        };
+        let a = run_and_emit("trace_chaos", &cfg);
+        let b = run_scenario(&cfg).expect("rerun");
+        assert_eq!(a.log, b.log, "seed {seed}: same-seed traced logs diverged");
+        assert_eq!(a.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(a.completed_decisions(), 36, "seed {seed}");
+        assert!(a.log.contains(" trace "), "seed {seed}: no span closure in the log");
+        assert!(a.stage_totals.total() > 0, "seed {seed}");
+        for (c, (ca, cb)) in a.clients.iter().zip(&b.clients).enumerate() {
+            // one closed span per accepted decision, and the whole span
+            // set replays bit-for-bit — the trace IS part of the seed
+            // contract, not a best-effort side channel
+            assert_eq!(ca.traces.len(), ca.decisions, "seed {seed} client {c}");
+            assert_eq!(ca.traces, cb.traces, "seed {seed} client {c}: spans not replayable");
+            for tr in &ca.traces {
+                assert_eq!((tr.id >> 32) as usize, c, "seed {seed}: span id lost its client");
+                assert!(tr.stamps[STAGE_GW_FORWARD] > 0, "seed {seed}: gateway hop unset");
+                let mut prev = 0u64;
+                for stage in PATH {
+                    let ns = tr.stamps[stage];
+                    assert!(
+                        ns >= prev,
+                        "seed {seed} client {c} span {:#x}: stage {stage} went backwards",
+                        tr.id
+                    );
+                    prev = ns;
+                }
+                assert!(tr.total_ns() > 0, "seed {seed} client {c}: open span {:#x}", tr.id);
+            }
+        }
+        // trace off at the same seed: no spans, no trace lines — the
+        // observability layer must be invisible until negotiated
+        let u = run_scenario(&ScenarioConfig { trace: false, ..cfg.clone() }).expect("untraced");
+        assert!(!u.log.contains(" trace "), "seed {seed}: untraced run logged a span");
+        assert!(u.clients.iter().all(|c| c.traces.is_empty()), "seed {seed}");
+        assert_eq!(u.stage_totals.total(), 0, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 24: stage attribution under 1 Mb/s shaping — the spans don't
+// just measure the slowdown, they *name* it: ≥90% of the latency the
+// shaped link adds lands in the wire stage, and the aggregate attribution
+// calls the up-wire dominant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shaped_link_latency_is_attributed_to_the_wire_stage() {
+    for seed in SEEDS {
+        let mk = |link: LinkFaults| ScenarioConfig {
+            seed,
+            trace: true,
+            shards: 1,
+            raw_clients: 2,
+            decisions: 6,
+            obs_x: 24,
+            // size-fired singleton batches keep queue wait out of the
+            // picture, so the only term the link can move is its own
+            policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(100) },
+            req_timeout: 5.0,
+            client_link: link,
+            ..ScenarioConfig::default()
+        };
+        let ideal = run_and_emit("trace_wire_ideal", &mk(LinkFaults::ideal()));
+        let shaped_cfg = mk(LinkFaults::shaped(1e6, 0.002));
+        let shaped = run_and_emit("trace_wire_shaped", &shaped_cfg);
+        let rerun = run_scenario(&shaped_cfg).expect("rerun");
+        assert_eq!(shaped.log, rerun.log, "seed {seed}: same-seed shaped logs diverged");
+        for (name, r) in [("ideal", &ideal), ("shaped", &shaped)] {
+            assert_eq!(r.total_give_ups(), 0, "seed {seed} {name}");
+            assert_eq!(r.completed_decisions(), 12, "seed {seed} {name}");
+            let spans: usize = r.clients.iter().map(|c| c.traces.len()).sum();
+            assert_eq!(spans, 12, "seed {seed} {name}: lost spans");
+        }
+        // the added p99-driving latency decomposes through the spans: the
+        // wire stage absorbs ≥90% of everything the shaping added
+        let added_total =
+            shaped.stage_totals.total() as f64 - ideal.stage_totals.total() as f64;
+        let added_wire = shaped.stage_totals.wire() as f64 - ideal.stage_totals.wire() as f64;
+        assert!(added_total > 0.0, "seed {seed}: shaping added no traced latency");
+        assert!(
+            added_wire >= 0.9 * added_total,
+            "seed {seed}: wire explains only {added_wire:.0}ns of {added_total:.0}ns added"
+        );
+        assert_eq!(
+            shaped.stage_totals.dominant(),
+            Some("wire_up"),
+            "seed {seed}: shaped run not wire-dominated: {:?}",
+            shaped.stage_totals
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scenario 25: flash-crowd attribution — 12 closed-loop clients against
+// one deliberately slow shard: the spans pin the pain on queue wait (not
+// execution), and the autoscaler's sample lines cite the same dominant
+// stage its scale verdicts are based on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flash_crowd_latency_is_attributed_to_queue_wait() {
+    let n_clients = 12;
+    let decisions = 4;
+    for seed in SEEDS {
+        let cfg = ScenarioConfig {
+            seed,
+            trace: true,
+            shards: 1,
+            raw_clients: n_clients,
+            decisions,
+            obs_x: 8,
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(500) },
+            exec_fixed: 0.004,
+            exec_per_item: 0.002,
+            req_timeout: 1.0,
+            // pinned at one shard: the loop observes (and attributes) the
+            // crowd every 10 ms but can never scale its way out
+            autoscale: Some(AutoscaleSpec {
+                cfg: AutoscaleConfig {
+                    min_shards: 1,
+                    max_shards: 1,
+                    ..AutoscaleConfig::default()
+                },
+                interval: 0.01,
+            }),
+            ..ScenarioConfig::default()
+        };
+        let r = run_and_emit("trace_flash_crowd", &cfg);
+        let rerun = run_scenario(&cfg).expect("rerun");
+        assert_eq!(r.log, rerun.log, "seed {seed}: same-seed crowd logs diverged");
+        assert_eq!(r.total_give_ups(), 0, "seed {seed}");
+        assert_eq!(r.completed_decisions(), n_clients * decisions, "seed {seed}");
+        assert_eq!(
+            r.clients.iter().map(|c| c.retries).sum::<u64>(),
+            0,
+            "seed {seed}: the backlog pushed past the request timeout"
+        );
+        // the attribution: queue wait is the dominant stage, over half the
+        // end-to-end time, and clearly ahead of the execution it feeds
+        let t = &r.stage_totals;
+        assert_eq!(t.dominant(), Some("queue"), "seed {seed}: {t:?}");
+        assert!(t.queue() * 2 >= t.total(), "seed {seed}: queue under half: {t:?}");
+        assert!(t.queue() > t.ns[4], "seed {seed}: execution outweighed queueing: {t:?}");
+        // the scale verdict cites the same story the spans tell
+        assert!(r.log.contains(" autoscale_sample "), "seed {seed}");
+        assert!(r.log.contains(" dominant=queue"), "seed {seed}: no queue-cited window");
+        assert_eq!(r.autoscale.scale_ups + r.autoscale.scale_downs, 0, "seed {seed}");
+        // untraced control: the sampler still runs, but cites nothing
+        let u = run_scenario(&ScenarioConfig { trace: false, ..cfg.clone() }).expect("untraced");
+        assert!(u.log.contains(" autoscale_sample "), "seed {seed}");
+        assert!(!u.log.contains(" dominant="), "seed {seed}: untraced sample cited a stage");
     }
 }

@@ -1,0 +1,200 @@
+//! End-to-end per-decision tracing over real loopback TCP (DESIGN.md §12):
+//! traced clients against Sim-backend coordinators and fleets, no AOT
+//! artifacts needed.
+//!
+//! The load-bearing check is *reconciliation*: the spans the client gets
+//! back are stamped from the very same `Instant`s the server's histograms
+//! are built from, so the trace-derived queue-stage sum must agree with
+//! the `queue_wait` histogram's exact tracked sum — not approximately
+//! because both measure "the same kind of thing", but exactly (modulo
+//! nanosecond rounding) because a span is the histogram sample, exploded
+//! per decision. A disagreement means a hop stamped the wrong instant.
+
+use std::time::Duration;
+
+use miniconv::coordinator::{
+    run_client, run_fleet, Backend, BatchPolicy, ClientConfig, ClientReport, Route, ServerConfig,
+    SimSpec,
+};
+use miniconv::fleet::{launch_local, FleetConfig};
+use miniconv::trace::{
+    STAGE_DEQUEUE, STAGE_ENCODE, STAGE_ENQUEUE, STAGE_EXECUTE, STAGE_GW_FORWARD, STAGE_MINT,
+    STAGE_PACK, STAGE_RECV, STAGE_REPLY, STAGE_SEND,
+};
+
+const OBS_X: usize = 24;
+
+fn traced_server() -> ServerConfig {
+    ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        backend: Backend::Sim(SimSpec {
+            fixed: Duration::from_micros(300),
+            per_item: Duration::from_micros(100),
+            action_dim: 1,
+            encode: false,
+        }),
+        trace: true,
+        ..ServerConfig::default()
+    }
+}
+
+fn traced_client(decisions: usize) -> ClientConfig {
+    ClientConfig {
+        mode: Route::Full,
+        decisions,
+        obs_x: Some(OBS_X),
+        trace: true,
+        ..ClientConfig::default()
+    }
+}
+
+/// The stages every single-server decision passes through, in hop order
+/// (no gateway, so `STAGE_GW_FORWARD` stays unset).
+const SERVER_PATH: [usize; 9] = [
+    STAGE_MINT,
+    STAGE_ENCODE,
+    STAGE_SEND,
+    STAGE_ENQUEUE,
+    STAGE_DEQUEUE,
+    STAGE_PACK,
+    STAGE_EXECUTE,
+    STAGE_REPLY,
+    STAGE_RECV,
+];
+
+fn assert_closed_monotone(r: &ClientReport, client: usize, path: &[usize]) {
+    for (d, t) in r.traces.iter().enumerate() {
+        assert_eq!(
+            t.id,
+            ((client as u64) << 32) | d as u64,
+            "client {client} decision {d}: trace id mismatch"
+        );
+        let mut prev = 0u64;
+        for &stage in path {
+            let ns = t.stamps[stage];
+            assert!(ns > 0 || stage == STAGE_MINT, "client {client} decision {d}: stage {stage} unset");
+            assert!(
+                ns >= prev,
+                "client {client} decision {d}: stage {stage} went backwards ({ns} < {prev})"
+            );
+            prev = ns;
+        }
+        assert!(t.total_ns() > 0, "client {client} decision {d}: zero-length span");
+    }
+}
+
+#[test]
+fn traced_fleet_closes_spans_and_reconciles_with_histograms() {
+    let server = miniconv::coordinator::serve(traced_server()).expect("server");
+    let (n_clients, decisions) = (4, 25);
+    let reports = run_fleet(server.addr, n_clients, &traced_client(decisions)).expect("fleet run");
+
+    let mut queue_ns = 0.0f64;
+    let mut service_ns = 0.0f64;
+    for (c, r) in reports.iter().enumerate() {
+        assert_eq!(r.decisions, decisions, "client {c} lost decisions");
+        assert_eq!(r.errors, 0, "client {c} saw rejections");
+        assert_eq!(r.traces.len(), decisions, "client {c}: one span per decision");
+        assert_closed_monotone(r, c, &SERVER_PATH);
+        for t in &r.traces {
+            assert_eq!(t.stamps[STAGE_GW_FORWARD], 0, "no gateway on this path");
+            let s = t.stages();
+            queue_ns += s.queue() as f64;
+            service_ns += (t.stamps[STAGE_REPLY] - t.stamps[STAGE_ENQUEUE]) as f64;
+        }
+    }
+
+    // reconcile against the server's own histograms: the queue stage is
+    // stamped from the exact instants (`received`, batch dequeue) the
+    // `queue_wait` histogram records, so the sums agree to rounding
+    let m = server.metrics.snapshot();
+    let total = (n_clients * decisions) as u64;
+    assert_eq!(m.full.requests, total);
+    assert_eq!(m.full.queue_wait.count(), total);
+    let hist_queue = m.full.queue_wait.mean_ns() * total as f64;
+    assert!(
+        (queue_ns - hist_queue).abs() <= 0.05 * hist_queue.max(1e6),
+        "trace queue sum {queue_ns}ns vs histogram {hist_queue}ns"
+    );
+    // service (enqueue→reply per span) brackets the histogram's
+    // received→done window: the reply hop is stamped per item slightly
+    // after the batch-wide `done`, so the trace sum is the upper edge
+    let hist_service = m.full.service.mean_ns() * total as f64;
+    assert!(
+        service_ns >= 0.95 * hist_service && service_ns <= 1.5 * hist_service,
+        "trace service sum {service_ns}ns vs histogram {hist_service}ns"
+    );
+
+    // the server-side flight recorder retained every span, and the
+    // exemplar dump is the slowest-N by span length
+    let retained = server.metrics.traces();
+    assert_eq!(retained.len(), total as usize);
+    let top = server.metrics.trace_exemplars(5);
+    assert_eq!(top.len(), 5);
+    for w in top.windows(2) {
+        assert!(w[0].total_ns() >= w[1].total_ns(), "exemplars not slowest-first");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn untraced_clients_coexist_and_ungranted_trace_degrades_cleanly() {
+    // untraced client against a traced server: no trailers, empty report
+    let server = miniconv::coordinator::serve(traced_server()).expect("server");
+    let mut cfg = traced_client(10);
+    cfg.trace = false;
+    let r = run_client(server.addr, 0, &cfg).expect("untraced client");
+    assert_eq!(r.decisions, 10);
+    assert_eq!(r.errors, 0);
+    assert!(r.traces.is_empty(), "untraced session must not collect spans");
+    server.shutdown();
+
+    // traced client against an untraced server: the hello ack withholds
+    // CAP_TRACE, the client falls back to plain frames
+    let mut sc = traced_server();
+    sc.trace = false;
+    let server = miniconv::coordinator::serve(sc).expect("server");
+    let r = run_client(server.addr, 0, &traced_client(10)).expect("declined trace client");
+    assert_eq!(r.decisions, 10);
+    assert_eq!(r.errors, 0);
+    assert!(r.traces.is_empty(), "ungranted CAP_TRACE must leave the wire untraced");
+    server.shutdown();
+}
+
+#[test]
+fn gateway_forward_hop_lands_between_send_and_enqueue() {
+    let fleet = launch_local(FleetConfig {
+        shards: 2,
+        server: traced_server(),
+        ..FleetConfig::default()
+    })
+    .expect("fleet");
+    let (n_clients, decisions) = (6, 10);
+    let reports = run_fleet(fleet.addr(), n_clients, &traced_client(decisions)).expect("fleet run");
+
+    const GATEWAY_PATH: [usize; 10] = [
+        STAGE_MINT,
+        STAGE_ENCODE,
+        STAGE_SEND,
+        STAGE_GW_FORWARD,
+        STAGE_ENQUEUE,
+        STAGE_DEQUEUE,
+        STAGE_PACK,
+        STAGE_EXECUTE,
+        STAGE_REPLY,
+        STAGE_RECV,
+    ];
+    for (c, r) in reports.iter().enumerate() {
+        assert_eq!(r.decisions, decisions, "client {c} lost decisions");
+        assert_eq!(r.traces.len(), decisions, "client {c}: one span per decision");
+        assert_closed_monotone(r, c, &GATEWAY_PATH);
+        for t in &r.traces {
+            assert!(t.stamps[STAGE_GW_FORWARD] > 0, "gateway hop missing from span");
+            // the up-wire stage (send→enqueue) absorbs both TCP legs; the
+            // gateway stamp splits it and must sit strictly inside
+            assert!(t.stamps[STAGE_GW_FORWARD] >= t.stamps[STAGE_SEND]);
+            assert!(t.stamps[STAGE_GW_FORWARD] <= t.stamps[STAGE_ENQUEUE]);
+        }
+    }
+    fleet.shutdown();
+}

@@ -18,6 +18,10 @@ use miniconv::net::framing::{
     MSG_REQUEST_FEAT_V2, MSG_REQUEST_RAW, MSG_RESPONSE,
 };
 use miniconv::net::limits::{LimitsConfig, SessionGate};
+use miniconv::trace::{
+    append_trailer, split_trailer, stamp_body_tail, trace_eligible, TraceCtx, STAGE_GW_FORWARD,
+    STAGE_SEND, TRACE_TAG, TRACE_WIRE_BYTES,
+};
 
 // -- Msg::decode: framing-level hostility -----------------------------------
 
@@ -396,4 +400,121 @@ fn forged_mid_migration_reroute_cannot_hijack_the_fresh_gate() {
     assert_eq!(ack.epoch, Some(4));
     assert_eq!(ack.shard, Some(2));
     assert!(fresh.admit(MSG_REQUEST_FEAT_V2, 64).is_ok());
+}
+
+// -- trace trailers: hostile span context arriving by wire ------------------
+
+/// A canonical request body plus an appended trace trailer, built through
+/// the real encoder and trace layer — the honest traced frame every
+/// hostile variant below mutates.
+fn traced_body() -> (Vec<u8>, TraceCtx) {
+    let mut body = Msg::Request(Request {
+        client: 9,
+        id: 1,
+        payload: Payload::RawRgba { x: 4, data: vec![7; 64] },
+    })
+    .encode()[4..]
+        .to_vec();
+    let mut ctx = TraceCtx::mint(((9u64) << 32) | 1, 1_000);
+    ctx.stamp(STAGE_SEND, 2_000);
+    append_trailer(&mut body, &ctx);
+    (body, ctx)
+}
+
+#[test]
+fn trace_trailers_layer_strictly_outside_the_canonical_encoding() {
+    let (body, ctx) = traced_body();
+    // the trailer peels back to exactly the canonical body + the context
+    let (inner, got) = split_trailer(&body).expect("honest trailer refused");
+    assert_eq!(got, ctx);
+    assert!(Msg::decode(inner).is_ok());
+    // and the layering is strict both ways: a trailered frame is NOT a
+    // valid canonical message (an untraced session must refuse it via the
+    // trailing-bytes bound), so a trailer can never smuggle payload past
+    // a decoder that did not negotiate CAP_TRACE
+    assert!(Msg::decode(&body).is_err(), "trailered frame decoded as canonical");
+}
+
+#[test]
+fn truncated_forged_and_misplaced_trace_trailers_are_rejected() {
+    let (body, _) = traced_body();
+    let base = body.len() - TRACE_WIRE_BYTES;
+
+    // truncated: a torn trailer shifts the tag window onto payload bytes
+    assert!(split_trailer(&body[..body.len() - 1]).is_err(), "torn trailer decoded");
+    // forged tag byte
+    let mut forged = body.clone();
+    forged[base] = 0xEE;
+    assert!(split_trailer(&forged).is_err(), "forged tag decoded");
+    // a bare canonical body (shorter than any trailer) cannot carry one
+    let plain = &body[..base];
+    assert!(plain.len() < TRACE_WIRE_BYTES);
+    assert!(split_trailer(plain).is_err(), "traceless body yielded a trailer");
+    // ineligible types never carry trailers, however well-formed
+    let mut hello = Msg::Hello(Hello {
+        client: 9,
+        split: false,
+        codec: 0,
+        caps: 0,
+        shard: None,
+        epoch: None,
+    })
+    .encode()[4..]
+        .to_vec();
+    let n = hello.len();
+    hello.extend_from_slice(&body[base..]);
+    assert!(!trace_eligible(hello[0]));
+    assert!(split_trailer(&hello).is_err(), "control frame yielded a trailer");
+    assert_eq!(n + TRACE_WIRE_BYTES, hello.len());
+    // empty input
+    assert!(split_trailer(&[]).is_err());
+
+    // boundary pins: a frame of exactly TRACE_WIRE_BYTES has no room for
+    // a body and is refused; one byte more peels structurally (the inner
+    // byte then fails canonical decode downstream, proving the layers
+    // reject independently)
+    let exact = body[base - 1..].to_vec();
+    assert_eq!(exact.len(), TRACE_WIRE_BYTES + 1);
+    assert!(trace_eligible(body[base - 1]) || split_trailer(&exact).is_err());
+    let mut at_size = body[base..].to_vec();
+    at_size[0] = MSG_REQUEST_RAW; // eligible type, zero-byte canonical body
+    assert_eq!(at_size.len(), TRACE_WIRE_BYTES);
+    assert!(split_trailer(&at_size).is_err(), "trailer-sized frame decoded");
+
+    // TraceCtx::read_wire itself: wrong length and wrong tag
+    assert!(TraceCtx::read_wire(&body[base..body.len() - 1]).is_err());
+    assert!(TraceCtx::read_wire(&body[base + 1..]).is_err());
+    let mut tail = body[base..].to_vec();
+    tail[0] = TRACE_TAG.wrapping_add(1);
+    assert!(TraceCtx::read_wire(&tail).is_err());
+}
+
+#[test]
+fn in_place_stamping_never_touches_untraced_bytes() {
+    // the gateway's no-decode stamp hook must refuse anything that cannot
+    // be carrying a trailer, leaving the frame byte-for-byte intact
+    let plain = Msg::Request(Request {
+        client: 9,
+        id: 1,
+        payload: Payload::RawRgba { x: 4, data: vec![7; 64] },
+    })
+    .encode()[4..]
+        .to_vec();
+    let mut frame = plain.clone();
+    assert!(!stamp_body_tail(&mut frame, STAGE_GW_FORWARD, 99), "stamped a traceless frame");
+    assert_eq!(frame, plain, "refused stamp still mutated the frame");
+    // short frames and empty frames
+    let mut short = vec![MSG_REQUEST_RAW; TRACE_WIRE_BYTES];
+    let orig = short.clone();
+    assert!(!stamp_body_tail(&mut short, STAGE_GW_FORWARD, 99));
+    assert_eq!(short, orig);
+    assert!(!stamp_body_tail(&mut [], STAGE_GW_FORWARD, 99));
+    // and the honest case round-trips: stamp lands in the trailer only
+    let (mut body, mut ctx) = traced_body();
+    let inner_before = split_trailer(&body).unwrap().0.to_vec();
+    assert!(stamp_body_tail(&mut body, STAGE_GW_FORWARD, 42_000));
+    ctx.stamp(STAGE_GW_FORWARD, 42_000);
+    let (inner, got) = split_trailer(&body).unwrap();
+    assert_eq!(inner, &inner_before[..], "stamp leaked into the canonical body");
+    assert_eq!(got, ctx);
 }
